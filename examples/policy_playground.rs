@@ -1,0 +1,64 @@
+//! Policy playground: feed synthetic per-sample loss streams to the
+//! AdaSelection policy (no XLA engine needed) and watch the method weights
+//! (eq. 3) adapt as the loss landscape shifts.
+//!
+//! Three phases are simulated:
+//!   1. warmup  — losses shrink uniformly (easy data): stable ℓ^m
+//!   2. noise   — a cluster of persistent outliers appears: Big Loss's
+//!                hypothetical pick becomes volatile
+//!   3. plateau — everything converges
+//!
+//! Run: cargo run --release --example policy_playground
+
+use adaselection::selection::{AdaConfig, AdaSelection, Method};
+use adaselection::util::rng::Pcg64;
+
+fn main() {
+    let mut ada = AdaSelection::new(AdaConfig {
+        candidates: vec![Method::BigLoss, Method::SmallLoss, Method::Uniform],
+        beta: 0.5,
+        cl_on: true,
+        cl_power: -0.5,
+        rule: None,
+    });
+    let mut rng = Pcg64::new(7);
+    let b = 128;
+    let k = 26;
+
+    println!("{:>5} {:>9} {:>10} {:>10} {:>9}  phase", "iter", "w_big", "w_small", "w_uniform", "sel_loss");
+    for t in 0..150usize {
+        let phase = match t {
+            0..=49 => "warmup",
+            50..=99 => "noise",
+            _ => "plateau",
+        };
+        let base = match phase {
+            "warmup" => 2.0 * (-0.02 * t as f32).exp(),
+            "noise" => 0.8,
+            _ => 0.3,
+        };
+        let loss: Vec<f32> = (0..b)
+            .map(|i| {
+                let mut l = base * (0.5 + rng.next_f32());
+                if phase == "noise" && i % 10 == 0 {
+                    // persistent mislabeled cluster: large, erratic losses
+                    l += 4.0 + 3.0 * rng.next_f32();
+                }
+                l
+            })
+            .collect();
+        let gnorm: Vec<f32> = loss.iter().map(|&l| l * (0.8 + 0.4 * rng.next_f32())).collect();
+
+        let out = ada.step_host(&loss, &gnorm, k);
+        if t % 10 == 0 {
+            let sel_loss: f32 =
+                out.selected.iter().map(|&i| loss[i]).sum::<f32>() / k as f32;
+            let w = ada.weights();
+            println!(
+                "{t:>5} {:>9.4} {:>10.4} {:>10.4} {sel_loss:>9.3}  {phase}",
+                w[0], w[1], w[2]
+            );
+        }
+    }
+    println!("\nfinal weights: {:?}", ada.weights());
+}

@@ -1,0 +1,84 @@
+//! End-to-end driver (the DESIGN.md §7 validation run, recorded in
+//! EXPERIMENTS.md): stream the synthetic CIFAR10 workload through the full
+//! pipeline and train the mini-ResNet twice —
+//!
+//!   1. benchmark: no subsampling (train on every sample), and
+//!   2. AdaSelection at γ = 0.3,
+//!
+//! logging the loss curve per epoch and reporting the paper's headline
+//! metric: wall-clock training-time saving at comparable test accuracy.
+//!
+//! Run: make artifacts && cargo run --release --example train_e2e
+//! Env: E2E_EPOCHS / E2E_SCALE to resize (defaults: 6 epochs, 0.04 scale
+//! ⇒ 2000 train / 400 test images).
+
+use adaselection::config::RunConfig;
+use adaselection::runtime::Engine;
+use adaselection::train;
+use adaselection::util::logging;
+
+fn main() -> anyhow::Result<()> {
+    logging::init();
+    let epochs: usize = std::env::var("E2E_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(6);
+    let scale: f64 = std::env::var("E2E_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.04);
+
+    let base = {
+        let mut c = RunConfig::default();
+        c.dataset = "cifar10".into();
+        c.epochs = epochs;
+        c.lr = 0.05;
+        c.data_scale = scale;
+        c.workers = 2;
+        c
+    };
+    let mut engine = Engine::new(&base.artifacts_dir)?;
+
+    println!("=== benchmark (no subsampling) ===");
+    let mut bench_cfg = base.clone();
+    bench_cfg.selector = "benchmark".into();
+    let bench = train::run_with(&mut engine, bench_cfg)?;
+    print_curve(&bench);
+
+    println!("\n=== AdaSelection γ = 0.3 (big_loss + small_loss + uniform) ===");
+    let mut ada_cfg = base.clone();
+    ada_cfg.selector = "adaselection:big_loss+small_loss+uniform".into();
+    ada_cfg.gamma = 0.3;
+    let ada = train::run_with(&mut engine, ada_cfg)?;
+    print_curve(&ada);
+
+    let saving = 100.0 * (1.0 - ada.train_time_s() / bench.train_time_s());
+    println!("\n=== headline ===");
+    println!(
+        "benchmark: acc={:.4} time={:.2}s | adaselection: acc={:.4} time={:.2}s",
+        bench.final_test_acc(),
+        bench.train_time_s(),
+        ada.final_test_acc(),
+        ada.train_time_s()
+    );
+    println!(
+        "training-time saving: {saving:.1}%  (paper claims ≥20% at γ ≤ 0.5, Fig 3)"
+    );
+    println!(
+        "accuracy gap vs benchmark: {:+.2} points",
+        100.0 * (ada.final_test_acc() - bench.final_test_acc())
+    );
+    println!("\nada phases:   {}", ada.phases.summary());
+    println!("bench phases: {}", bench.phases.summary());
+    if let Some(w) = ada.weight_trace.last() {
+        println!("final method weights {:?} = {w:?}", ada.weight_names);
+    }
+    Ok(())
+}
+
+fn print_curve(r: &adaselection::metrics::RunResult) {
+    println!(
+        "{:<8} {:>12} {:>12} {:>10} {:>10}",
+        "epoch", "train_loss", "test_loss", "test_acc", "time_s"
+    );
+    for e in &r.epochs {
+        println!(
+            "{:<8} {:>12.4} {:>12.4} {:>10.4} {:>10.2}",
+            e.epoch, e.train_loss, e.test_loss, e.test_acc, e.train_time_s
+        );
+    }
+}

@@ -1,0 +1,254 @@
+"""AOT compiler: lower every artifact to HLO *text* + write the manifest.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (see Makefile).
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+The build is incremental: a sha256 over ``python/compile/**/*.py`` is stored
+in ``artifacts/.srchash`` and the whole step is skipped when unchanged, so
+python never runs on the request path and ``make artifacts`` is a no-op on a
+built tree.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import METHOD_ORDER, NUM_METHODS, adaselection_score
+from .kernels.matmul import vmem_report
+from .model import GAMMA_GRID, MOMENTUM, make_families
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(sds) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[sds.dtype]
+
+
+def _io_entry(name, sds):
+    return {"name": name, "shape": list(sds.shape), "dtype": _dt(sds)}
+
+
+def _src_hash() -> str:
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                p = os.path.join(dirpath, fn)
+                h.update(p.encode())
+                h.update(open(p, "rb").read())
+    return h.hexdigest()
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.artifacts = {}
+
+    def emit(self, name, fn, in_specs):
+        """Lower fn(*in_specs) and write ``{name}.hlo.txt`` + manifest entry."""
+        t0 = time.time()
+        sds = [s for _, s in in_specs]
+        lowered = jax.jit(fn).lower(*sds)
+        text = to_hlo_text(lowered)
+        out_sds = jax.eval_shape(fn, *sds)
+        if not isinstance(out_sds, tuple):
+            out_sds = (out_sds,)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_io_entry(n, s) for n, s in in_specs],
+            "outputs": [_io_entry(f"o{i}", s) for i, s in enumerate(out_sds)],
+        }
+        print(
+            f"  [{time.time() - t0:6.1f}s] {name:28s} "
+            f"{len(text) / 1e6:6.2f} MB  "
+            f"in={len(in_specs)} out={len(out_sds)}"
+        )
+
+
+def build(out_dir, families=None, force=False):
+    os.makedirs(out_dir, exist_ok=True)
+    hash_path = os.path.join(out_dir, ".srchash")
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    src = _src_hash()
+    if (
+        not force
+        and os.path.exists(hash_path)
+        and os.path.exists(manifest_path)
+        and open(hash_path).read().strip() == src
+    ):
+        print("artifacts up to date (source hash match); skipping")
+        return
+
+    fams = make_families()
+    if families:
+        fams = {k: v for k, v in fams.items() if k in families}
+    b = Builder(out_dir)
+    manifest = {
+        "version": 1,
+        "method_order": list(METHOD_ORDER),
+        "momentum": MOMENTUM,
+        "gamma_grid": list(GAMMA_GRID),
+        "families": {},
+        "score": {},
+        "artifacts": b.artifacts,
+    }
+
+    # --- shared scoring artifacts, one per batch size ----------------------
+    batches = sorted({f.batch for f in fams.values()})
+    for bs in batches:
+        name = f"score_b{bs}"
+        f32 = jnp.float32
+        b.emit(
+            name,
+            adaselection_score,
+            [
+                ("loss", jax.ShapeDtypeStruct((bs,), f32)),
+                ("gnorm", jax.ShapeDtypeStruct((bs,), f32)),
+                ("w", jax.ShapeDtypeStruct((NUM_METHODS,), f32)),
+                ("knobs", jax.ShapeDtypeStruct((3,), f32)),
+            ],
+        )
+        manifest["score"][str(bs)] = name
+
+    # --- per-family artifacts ----------------------------------------------
+    for fname, fam in fams.items():
+        print(f"family {fname} (task={fam.task}, B={fam.batch})")
+        p_specs = fam.spec.param_specs()
+        p_sds = fam.param_sds()
+        p_in = [(n, s) for (n, _), s in zip(p_specs, p_sds)]
+        m_in = [(f"mom_{n}", s) for (n, _), s in zip(p_specs, p_sds)]
+        bsz = fam.batch
+
+        entry = {
+            "task": fam.task,
+            "batch": bsz,
+            "train_sizes": fam.train_sizes(),
+            "params": [
+                {"name": n, "shape": list(shape)} for n, shape in p_specs
+            ],
+            "artifacts": {"train": {}},
+        }
+        if fam.task == "classification":
+            entry["input_shape"] = list(fam.spec.in_dim)
+            entry["num_classes"] = fam.spec.num_classes
+        elif fam.task == "regression":
+            entry["input_shape"] = [fam.spec.in_dim]
+        else:
+            entry["seq_len"] = fam.spec.seq_len
+            entry["vocab"] = fam.spec.vocab
+
+        name = f"init_{fname}"
+        b.emit(
+            name,
+            fam.init_fn(),
+            [("seed", jax.ShapeDtypeStruct((), jnp.int32))],
+        )
+        entry["artifacts"]["init"] = name
+
+        name = f"fwd_{fname}_b{bsz}"
+        b.emit(
+            name,
+            fam.fwd_fn(),
+            p_in + [("x", fam.x_sds(bsz)), ("y", fam.y_sds(bsz))],
+        )
+        entry["artifacts"]["fwd"] = name
+
+        name = f"fwdscore_{fname}_b{bsz}"
+        b.emit(
+            name,
+            fam.fwd_score_fn(),
+            p_in
+            + [
+                ("x", fam.x_sds(bsz)),
+                ("y", fam.y_sds(bsz)),
+                ("w", jax.ShapeDtypeStruct((NUM_METHODS,), jnp.float32)),
+                ("knobs", jax.ShapeDtypeStruct((3,), jnp.float32)),
+            ],
+        )
+        entry["artifacts"]["fwd_score"] = name
+
+        name = f"eval_{fname}_b{bsz}"
+        b.emit(
+            name,
+            fam.eval_fn(),
+            p_in
+            + [
+                ("x", fam.x_sds(bsz)),
+                ("y", fam.y_sds(bsz)),
+                ("mask", jax.ShapeDtypeStruct((bsz,), jnp.float32)),
+            ],
+        )
+        entry["artifacts"]["eval"] = name
+
+        for k in fam.train_sizes():
+            name = f"train_{fname}_n{k}"
+            b.emit(
+                name,
+                fam.train_fn(),
+                p_in
+                + m_in
+                + [
+                    ("x", fam.x_sds(k)),
+                    ("y", fam.y_sds(k)),
+                    ("lr", jax.ShapeDtypeStruct((), jnp.float32)),
+                ],
+            )
+            entry["artifacts"]["train"][str(k)] = name
+
+        manifest["families"][fname] = entry
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    with open(hash_path, "w") as f:
+        f.write(src)
+    print(f"wrote {manifest_path} ({len(b.artifacts)} artifacts)")
+
+
+def report():
+    """Static VMEM/MXU estimates for the kernel BlockSpecs (DESIGN.md §9)."""
+    shapes = [
+        ("mlp hidden (100x8 @ 8x64)", 100, 8, 64),
+        ("resnet head (128x64 @ 64x100)", 128, 64, 100),
+        ("lm out-proj (2048x64 @ 64x256)", 2048, 64, 256),
+    ]
+    for label, m, k, n in shapes:
+        print(label, vmem_report(m, k, n))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--family", action="append", help="limit to families")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+    if args.report:
+        report()
+        return
+    build(args.out_dir, families=args.family, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

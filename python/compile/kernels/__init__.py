@@ -1,0 +1,16 @@
+"""L1 Pallas kernels for the AdaSelection hot path (build-time only)."""
+
+from .matmul import matmul, vmem_report
+from .losses import persample_xent, persample_sqerr, persample_lm_xent
+from .score import adaselection_score, METHOD_ORDER, NUM_METHODS
+
+__all__ = [
+    "matmul",
+    "vmem_report",
+    "persample_xent",
+    "persample_sqerr",
+    "persample_lm_xent",
+    "adaselection_score",
+    "METHOD_ORDER",
+    "NUM_METHODS",
+]

@@ -1,0 +1,209 @@
+"""L1 Pallas per-sample loss kernels.
+
+These are the kernels AdaSelection adds to the training hot path: one cheap
+full-batch forward that must produce, *per sample*,
+
+  * the loss  ``l_i``  (eq. 2's ordering statistic for most methods), and
+  * the Katharopoulos–Fleuret last-layer gradient-norm upper bound
+    ``g_i ≈ ||softmax(z_i) − onehot(y_i)||_2 · ||h_i||_2``
+    (the Gradient Norm baseline, computed without a per-sample backward).
+
+All kernels are single-VMEM-block (batch ≤ 128, classes ≤ 256 ⇒ ≤ 2 MiB of
+f32 per operand) and run under ``interpret=True`` on CPU PJRT (see
+DESIGN.md §Hardware-Adaptation).
+
+Each public entry point is a ``jax.custom_vjp`` function so that the same
+Pallas forward participates in the train-step artifact's backward pass
+(the VJP of softmax-CE is recovered from the saved probabilities; the
+gnorm output is treated as non-differentiable — it only feeds the scorer).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# classification: per-sample softmax cross-entropy (+ fused gnorm proxy)
+# ---------------------------------------------------------------------------
+
+
+def _xent_kernel(logits_ref, labels_ref, fnorm_ref, loss_ref, gnorm_ref, p_ref):
+    z = logits_ref[...]
+    y = labels_ref[...]
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    ez = jnp.exp(z - zmax)
+    denom = jnp.sum(ez, axis=-1, keepdims=True)
+    logp = z - zmax - jnp.log(denom)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, z.shape, 1) == y[:, None]
+    ).astype(z.dtype)
+    p = ez / denom
+    loss_ref[...] = -jnp.sum(onehot * logp, axis=-1)
+    gnorm_ref[...] = (
+        jnp.sqrt(jnp.sum((p - onehot) ** 2, axis=-1) + _EPS) * fnorm_ref[...]
+    )
+    p_ref[...] = p
+
+
+def _xent_call(logits, labels, fnorm):
+    b, c = logits.shape
+    return pl.pallas_call(
+        _xent_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), logits.dtype),
+            jax.ShapeDtypeStruct((b,), logits.dtype),
+            jax.ShapeDtypeStruct((b, c), logits.dtype),
+        ),
+        interpret=True,
+    )(logits, labels, fnorm)
+
+
+@jax.custom_vjp
+def persample_xent(logits, labels, fnorm):
+    """Per-sample CE loss and grad-norm proxy.
+
+    Args:
+      logits: f32[B, C]
+      labels: i32[B]
+      fnorm:  f32[B] — ‖h‖₂ of the pre-head features (for the gnorm proxy).
+
+    Returns:
+      (loss f32[B], gnorm f32[B])
+    """
+    loss, gnorm, _ = _xent_call(logits, labels, fnorm)
+    return loss, gnorm
+
+
+def _persample_xent_fwd(logits, labels, fnorm):
+    loss, gnorm, p = _xent_call(logits, labels, fnorm)
+    return (loss, gnorm), (p, labels)
+
+
+def _persample_xent_bwd(res, cts):
+    p, labels = res
+    gl, _ = cts  # gnorm feeds the scorer only; treat as constant.
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, p.shape, 1) == labels[:, None]
+    ).astype(p.dtype)
+    dlogits = (p - onehot) * gl[:, None]
+    return dlogits, None, jnp.zeros((p.shape[0],), p.dtype)
+
+
+persample_xent.defvjp(_persample_xent_fwd, _persample_xent_bwd)
+
+
+# ---------------------------------------------------------------------------
+# regression: per-sample squared error (+ gnorm proxy |r| * ||h||)
+# ---------------------------------------------------------------------------
+
+
+def _sqerr_kernel(pred_ref, y_ref, fnorm_ref, loss_ref, gnorm_ref):
+    r = pred_ref[...] - y_ref[...]
+    loss_ref[...] = 0.5 * r * r
+    gnorm_ref[...] = jnp.abs(r) * fnorm_ref[...]
+
+
+def _sqerr_call(pred, y, fnorm):
+    b = pred.shape[0]
+    return pl.pallas_call(
+        _sqerr_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), pred.dtype),
+            jax.ShapeDtypeStruct((b,), pred.dtype),
+        ),
+        interpret=True,
+    )(pred, y, fnorm)
+
+
+@jax.custom_vjp
+def persample_sqerr(pred, y, fnorm):
+    """Per-sample 0.5·(pred−y)² and gnorm proxy |pred−y|·‖h‖."""
+    return _sqerr_call(pred, y, fnorm)
+
+
+def _persample_sqerr_fwd(pred, y, fnorm):
+    out = _sqerr_call(pred, y, fnorm)
+    return out, (pred, y)
+
+
+def _persample_sqerr_bwd(res, cts):
+    pred, y = res
+    gl, _ = cts
+    r = pred - y
+    return r * gl, -r * gl, jnp.zeros_like(pred)
+
+
+persample_sqerr.defvjp(_persample_sqerr_fwd, _persample_sqerr_bwd)
+
+
+# ---------------------------------------------------------------------------
+# language modeling: per-sequence mean token CE (+ gnorm proxy)
+# ---------------------------------------------------------------------------
+
+
+def _lm_kernel(logits_ref, labels_ref, fnorm_ref, loss_ref, gnorm_ref, p_ref):
+    z = logits_ref[...]  # (B, T, V)
+    y = labels_ref[...]  # (B, T)
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    ez = jnp.exp(z - zmax)
+    denom = jnp.sum(ez, axis=-1, keepdims=True)
+    logp = z - zmax - jnp.log(denom)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, z.shape, 2) == y[..., None]
+    ).astype(z.dtype)
+    tok_loss = -jnp.sum(onehot * logp, axis=-1)  # (B, T)
+    p = ez / denom
+    tok_g = jnp.sqrt(jnp.sum((p - onehot) ** 2, axis=-1) + _EPS)  # (B, T)
+    loss_ref[...] = jnp.mean(tok_loss, axis=-1)
+    gnorm_ref[...] = jnp.mean(tok_g * fnorm_ref[...], axis=-1)
+    p_ref[...] = p
+
+
+def _lm_call(logits, labels, fnorm):
+    b, t, v = logits.shape
+    return pl.pallas_call(
+        _lm_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), logits.dtype),
+            jax.ShapeDtypeStruct((b,), logits.dtype),
+            jax.ShapeDtypeStruct((b, t, v), logits.dtype),
+        ),
+        interpret=True,
+    )(logits, labels, fnorm)
+
+
+@jax.custom_vjp
+def persample_lm_xent(logits, labels, fnorm):
+    """Per-sequence mean CE and gnorm proxy.
+
+    Args:
+      logits: f32[B, T, V]
+      labels: i32[B, T]
+      fnorm:  f32[B, T]
+    Returns:
+      (loss f32[B], gnorm f32[B])
+    """
+    loss, gnorm, _ = _lm_call(logits, labels, fnorm)
+    return loss, gnorm
+
+
+def _persample_lm_fwd(logits, labels, fnorm):
+    loss, gnorm, p = _lm_call(logits, labels, fnorm)
+    return (loss, gnorm), (p, labels)
+
+
+def _persample_lm_bwd(res, cts):
+    p, labels = res
+    gl, _ = cts
+    t = p.shape[1]
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, p.shape, 2) == labels[..., None]
+    ).astype(p.dtype)
+    dlogits = (p - onehot) * (gl[:, None, None] / t)
+    return dlogits, None, jnp.zeros(p.shape[:2], p.dtype)
+
+
+persample_lm_xent.defvjp(_persample_lm_fwd, _persample_lm_bwd)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness references: pytest asserts kernel-vs-ref
+``allclose`` for values AND gradients (where the kernel is differentiable).
+They are also the documentation of the exact math each kernel implements.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def matmul(x, w):
+    return jnp.dot(x, w)
+
+
+def persample_xent(logits, labels, fnorm):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    loss = -jnp.sum(onehot * logp, axis=-1)
+    p = jnp.exp(logp)
+    gnorm = jnp.sqrt(jnp.sum((p - onehot) ** 2, axis=-1) + _EPS) * fnorm
+    return loss, gnorm
+
+
+def persample_sqerr(pred, y, fnorm):
+    r = pred - y
+    return 0.5 * r * r, jnp.abs(r) * fnorm
+
+
+def persample_lm_xent(logits, labels, fnorm):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    tok_loss = -jnp.sum(onehot * logp, axis=-1)
+    p = jnp.exp(logp)
+    tok_g = jnp.sqrt(jnp.sum((p - onehot) ** 2, axis=-1) + _EPS)
+    return jnp.mean(tok_loss, axis=-1), jnp.mean(tok_g * fnorm, axis=-1)
+
+
+def _standardize(v):
+    mu = jnp.mean(v)
+    sd = jnp.sqrt(jnp.mean((v - mu) ** 2) + 1e-12)
+    return (v - mu) / (sd + 1e-6)
+
+
+def _softmax(v):
+    v = v - jnp.max(v)
+    e = jnp.exp(v)
+    return e / jnp.sum(e)
+
+
+def method_alphas(loss, gnorm):
+    """α_{i}^m for the 7 methods, METHOD_ORDER rows (see score.py)."""
+    b = loss.shape[0]
+    lhat = jnp.clip(loss / (jnp.max(loss) + 1e-9), 0.0, 1.0 - 1e-3)
+    ada = 0.5 * jnp.log((1.0 + lhat) / (1.0 - lhat))
+    dev = jnp.abs(loss - jnp.mean(loss))
+    return jnp.stack(
+        [
+            jnp.full((b,), 1.0 / b, loss.dtype),
+            _softmax(_standardize(loss)),
+            _softmax(_standardize(-loss)),
+            _softmax(_standardize(gnorm)),
+            _softmax(_standardize(ada)),
+            _softmax(_standardize(dev)),
+            _softmax(_standardize(-dev)),
+        ]
+    )
+
+
+def cl_reward(loss, t, p):
+    """Curriculum reward of eq. 4, normalized to mean 1."""
+    b = loss.shape[0]
+    t = jnp.maximum(t, 1.0)
+    r = jnp.exp(-jnp.power(t, p) * loss / (jnp.sum(loss * loss) + 1e-9))
+    return r * (b / jnp.sum(r))
+
+
+def adaselection_score(loss, gnorm, w, knobs):
+    alpha = method_alphas(loss, gnorm)
+    base = jnp.sum(alpha * w[:, None], axis=0)
+    r = cl_reward(loss, knobs[0], knobs[1])
+    r = knobs[2] * r + (1.0 - knobs[2])
+    return r * base, alpha

@@ -1,0 +1,186 @@
+"""L2 graph builders: every artifact the rust coordinator executes.
+
+For each model *family* (a model spec + batch geometry) we emit:
+
+  init_{F}            (seed)                          -> (*params, *mom)
+  fwd_{F}_b{B}        (*params, x[B], y[B])           -> (loss[B], gnorm[B])
+  train_{F}_n{K}      (*params, *mom, x[K], y[K], lr) -> (*params', *mom', mean_loss)
+  eval_{F}_b{B}       (*params, x[B], y[B], mask[B])  -> (loss_sum, correct_sum)
+
+plus one shared scoring artifact per batch size:
+
+  score_b{B}          (loss[B], gnorm[B], w[M], knobs[3]) -> (s[B], alpha[M,B])
+
+The train-step subset sizes K are ceil(γ·B) for the paper's sampling-rate
+grid γ ∈ {0.1..0.5} plus K = B (the no-sampling benchmark). All functions
+take FLAT positional arguments so the lowered HLO has a stable positional
+parameter layout that `artifacts/manifest.json` describes to rust.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    persample_xent,
+    persample_sqerr,
+    persample_lm_xent,
+)
+from .models import MlpSpec, ResNetSpec, TransformerSpec
+
+MOMENTUM = 0.9
+GRAD_CLIP = 5.0  # global-norm clip in the train-step artifact
+GAMMA_GRID = (0.1, 0.2, 0.3, 0.4, 0.5)
+
+
+class Family:
+    """A model spec bound to a task type and batch geometry."""
+
+    def __init__(self, spec, task, batch):
+        self.spec = spec
+        self.task = task  # "regression" | "classification" | "lm"
+        self.batch = batch
+
+    @property
+    def name(self):
+        return self.spec.name
+
+    def train_sizes(self):
+        ks = sorted({int(math.ceil(g * self.batch)) for g in GAMMA_GRID})
+        ks.append(self.batch)
+        return ks
+
+    # ---- data shapes -----------------------------------------------------
+    def x_sds(self, n):
+        if self.task == "regression":
+            return jax.ShapeDtypeStruct((n, self.spec.in_dim), jnp.float32)
+        if self.task == "classification":
+            return jax.ShapeDtypeStruct((n,) + self.spec.in_dim, jnp.float32)
+        return jax.ShapeDtypeStruct((n, self.spec.seq_len), jnp.int32)
+
+    def y_sds(self, n):
+        if self.task == "regression":
+            return jax.ShapeDtypeStruct((n,), jnp.float32)
+        if self.task == "classification":
+            return jax.ShapeDtypeStruct((n,), jnp.int32)
+        return jax.ShapeDtypeStruct((n, self.spec.seq_len), jnp.int32)
+
+    def param_sds(self):
+        return [
+            jax.ShapeDtypeStruct(shape, jnp.float32)
+            for _, shape in self.spec.param_specs()
+        ]
+
+    # ---- per-sample loss through the L1 kernels ---------------------------
+    def persample_loss(self, params, x, y):
+        out, fnorm = self.spec.apply(params, x)
+        if self.task == "regression":
+            return persample_sqerr(out, y, fnorm)
+        if self.task == "classification":
+            return persample_xent(out, y, fnorm)
+        return persample_lm_xent(out, y, fnorm)
+
+    # ---- artifact functions (flat positional signatures) ------------------
+    def n_params(self):
+        return len(self.spec.param_specs())
+
+    def fwd_fn(self):
+        np_ = self.n_params()
+
+        def f(*args):
+            params, x, y = list(args[:np_]), args[np_], args[np_ + 1]
+            loss, gnorm = self.persample_loss(params, x, y)
+            return (loss, gnorm)
+
+        return f
+
+    def fwd_score_fn(self):
+        """Fused selection pass: forward + AdaSelection scorer in ONE HLO
+        module (perf: halves the host→device roundtrips per iteration vs
+        separate fwd and score calls; the scorer fuses into the same
+        program so XLA can overlap it with the loss epilogue)."""
+        from .kernels import adaselection_score
+
+        np_ = self.n_params()
+
+        def f(*args):
+            params = list(args[:np_])
+            x, y, w, knobs = args[np_], args[np_ + 1], args[np_ + 2], args[np_ + 3]
+            loss, gnorm = self.persample_loss(params, x, y)
+            s, alpha = adaselection_score(loss, gnorm, w, knobs)
+            return (loss, gnorm, s, alpha)
+
+        return f
+
+    def train_fn(self):
+        np_ = self.n_params()
+
+        def f(*args):
+            params = list(args[:np_])
+            mom = list(args[np_ : 2 * np_])
+            x, y, lr = args[2 * np_], args[2 * np_ + 1], args[2 * np_ + 2]
+
+            def batch_loss(ps):
+                loss, _ = self.persample_loss(ps, x, y)
+                return jnp.mean(loss)
+
+            loss, grads = jax.value_and_grad(batch_loss)(params)
+            # global-norm gradient clipping: subsampling policies that chase
+            # high-loss outliers (Big Loss on corrupted labels) otherwise
+            # diverge at practical momentum-SGD learning rates
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(g * g) for g in grads) + 1e-12
+            )
+            scale = jnp.minimum(1.0, GRAD_CLIP / gnorm)
+            grads = [g * scale for g in grads]
+            new_mom = [MOMENTUM * m + g for m, g in zip(mom, grads)]
+            new_params = [p - lr * m for p, m in zip(params, new_mom)]
+            return tuple(new_params) + tuple(new_mom) + (loss,)
+
+        return f
+
+    def eval_fn(self):
+        np_ = self.n_params()
+
+        def f(*args):
+            params = list(args[:np_])
+            x, y, mask = args[np_], args[np_ + 1], args[np_ + 2]
+            loss, _ = self.persample_loss(params, x, y)
+            loss_sum = jnp.sum(loss * mask)
+            if self.task == "classification":
+                out, _ = self.spec.apply(params, x)
+                correct = jnp.sum(
+                    (jnp.argmax(out, axis=-1) == y).astype(jnp.float32) * mask
+                )
+            elif self.task == "lm":
+                out, _ = self.spec.apply(params, x)
+                tok_acc = jnp.mean(
+                    (jnp.argmax(out, axis=-1) == y).astype(jnp.float32), axis=-1
+                )
+                correct = jnp.sum(tok_acc * mask)
+            else:
+                correct = jnp.array(0.0, jnp.float32)
+            return (loss_sum, correct)
+
+        return f
+
+    def init_fn(self):
+        def f(seed):
+            key = jax.random.PRNGKey(seed)
+            params = self.spec.init(key)
+            mom = [jnp.zeros_like(p) for p in params]
+            return tuple(params) + tuple(mom)
+
+        return f
+
+
+def make_families():
+    """The five model families of Table 2 (post-substitution, DESIGN.md §3)."""
+    return {
+        "mlp_simple": Family(MlpSpec("mlp_simple", 1, [32]), "regression", 100),
+        "mlp_bike": Family(MlpSpec("mlp_bike", 8, [64, 64]), "regression", 100),
+        "resnet_c10": Family(ResNetSpec("resnet_c10", 10), "classification", 128),
+        "resnet_c100": Family(ResNetSpec("resnet_c100", 100), "classification", 128),
+        "transformer": Family(TransformerSpec("transformer"), "lm", 64),
+    }

@@ -1,0 +1,7 @@
+"""L2 model definitions (build-time JAX; lowered to HLO by aot.py)."""
+
+from .mlp import MlpSpec
+from .resnet import ResNetSpec
+from .transformer import TransformerSpec
+
+__all__ = ["MlpSpec", "ResNetSpec", "TransformerSpec"]

@@ -1,0 +1,61 @@
+"""MLP regression models (the paper's simple-regression and bike tasks).
+
+Dense layers go through the L1 Pallas matmul kernel (kernels.matmul), so the
+lowered HLO of both the forward and the train-step artifacts is
+Pallas-backed end to end (the custom VJP keeps the backward in Pallas too).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul
+
+
+class MlpSpec:
+    """A plain MLP ``in_dim -> hidden... -> 1`` with ReLU activations.
+
+    apply() returns per-sample scalar predictions plus ``fnorm`` — the L2
+    norm of the last hidden layer, feeding the gradient-norm proxy.
+    """
+
+    kind = "mlp"
+
+    def __init__(self, name, in_dim, hidden, out_dim=1):
+        self.name = name
+        self.in_dim = in_dim
+        self.hidden = list(hidden)
+        self.out_dim = out_dim
+
+    def param_specs(self):
+        dims = [self.in_dim] + self.hidden + [self.out_dim]
+        specs = []
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            specs.append((f"w{i}", (a, b)))
+            specs.append((f"b{i}", (b,)))
+        return specs
+
+    def init(self, key):
+        params = []
+        for name, shape in self.param_specs():
+            key, sub = jax.random.split(key)
+            if name.startswith("w"):
+                fan_in = shape[0]
+                params.append(
+                    jax.random.normal(sub, shape, jnp.float32)
+                    * jnp.sqrt(2.0 / fan_in)
+                )
+            else:
+                params.append(jnp.zeros(shape, jnp.float32))
+        return params
+
+    def apply(self, params, x):
+        """x: f32[B, in_dim] -> (pred f32[B], fnorm f32[B])."""
+        h = x
+        n_layers = len(self.hidden) + 1
+        for i in range(n_layers - 1):
+            w, b = params[2 * i], params[2 * i + 1]
+            h = jax.nn.relu(matmul(h, w) + b)
+        fnorm = jnp.sqrt(jnp.sum(h * h, axis=-1) + 1e-9)
+        w, b = params[-2], params[-1]
+        pred = (matmul(h, w) + b)[:, 0]
+        return pred, fnorm

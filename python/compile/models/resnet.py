@@ -1,0 +1,116 @@
+"""Mini-ResNet for the synthetic CIFAR/SVHN substitutes.
+
+A pre-activation residual CNN scaled to CPU-PJRT budgets (DESIGN.md §3):
+stem conv -> 3 stages (widths 16/32/64, one residual block each, stride-2
+1x1-conv downsample between stages) -> global average pool -> dense head.
+
+Normalization is channel LayerNorm (per spatial position) rather than
+BatchNorm: it removes train/eval mode state from the artifacts while keeping
+residual training stable — the selection methods only consume the per-sample
+loss distribution, which this preserves.
+
+Convolutions use lax.conv_general_dilated (L2/XLA ops); the dense head goes
+through the Pallas matmul kernel so the classification artifacts contain the
+L1 kernels (head matmul + persample_xent) in their HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import matmul
+
+
+def _conv(x, w, stride=1):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _layernorm(x, scale, bias):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + 1e-5) * scale + bias
+
+
+class ResNetSpec:
+    """3-stage pre-activation mini-ResNet over ``size x size x 3`` inputs."""
+
+    kind = "resnet"
+
+    def __init__(self, name, num_classes, size=16, widths=(16, 32, 64)):
+        self.name = name
+        self.num_classes = num_classes
+        self.size = size
+        self.widths = tuple(widths)
+        self.in_dim = (size, size, 3)
+
+    def param_specs(self):
+        specs = [("stem_w", (3, 3, 3, self.widths[0]))]
+        c_in = self.widths[0]
+        for s, c in enumerate(self.widths):
+            if c != c_in:
+                specs.append((f"s{s}_down_w", (1, 1, c_in, c)))
+            specs.append((f"s{s}_ln1_g", (c,)))
+            specs.append((f"s{s}_ln1_b", (c,)))
+            specs.append((f"s{s}_conv1_w", (3, 3, c, c)))
+            specs.append((f"s{s}_ln2_g", (c,)))
+            specs.append((f"s{s}_ln2_b", (c,)))
+            specs.append((f"s{s}_conv2_w", (3, 3, c, c)))
+            c_in = c
+        specs.append(("head_w", (self.widths[-1], self.num_classes)))
+        specs.append(("head_b", (self.num_classes,)))
+        return specs
+
+    def init(self, key):
+        params = []
+        for name, shape in self.param_specs():
+            key, sub = jax.random.split(key)
+            if name.endswith("_g"):
+                params.append(jnp.ones(shape, jnp.float32))
+            elif name.endswith("_b") and len(shape) == 1:
+                params.append(jnp.zeros(shape, jnp.float32))
+            elif "conv2" in name:
+                # zero-init the block's closing conv: the network starts as
+                # (near-)identity residual stack, which keeps early training
+                # stable at SGD+momentum learning rates (standard trick).
+                params.append(jnp.zeros(shape, jnp.float32))
+            elif name == "head_w":
+                params.append(jax.random.normal(sub, shape, jnp.float32) * 0.01)
+            else:
+                fan_in = 1
+                for d in shape[:-1]:
+                    fan_in *= d
+                params.append(
+                    jax.random.normal(sub, shape, jnp.float32)
+                    * jnp.sqrt(2.0 / fan_in)
+                )
+        return params
+
+    def apply(self, params, x):
+        """x: f32[B, S, S, 3] -> (logits f32[B, C], fnorm f32[B])."""
+        named = dict(zip([n for n, _ in self.param_specs()], params))
+        h = _conv(x, named["stem_w"])
+        c_in = self.widths[0]
+        for s, c in enumerate(self.widths):
+            if c != c_in:
+                # stride-2 downsample into the wider stage
+                h = _conv(h, named[f"s{s}_down_w"], stride=2)
+                c_in = c
+            z = jax.nn.relu(
+                _layernorm(h, named[f"s{s}_ln1_g"], named[f"s{s}_ln1_b"])
+            )
+            z = _conv(z, named[f"s{s}_conv1_w"])
+            z = jax.nn.relu(
+                _layernorm(z, named[f"s{s}_ln2_g"], named[f"s{s}_ln2_b"])
+            )
+            z = _conv(z, named[f"s{s}_conv2_w"])
+            h = h + z
+        feat = jnp.mean(h, axis=(1, 2))  # global average pool -> (B, C_last)
+        fnorm = jnp.sqrt(jnp.sum(feat * feat, axis=-1) + 1e-9)
+        logits = matmul(feat, named["head_w"]) + named["head_b"]
+        return logits, fnorm

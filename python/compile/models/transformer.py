@@ -1,0 +1,113 @@
+"""Decoder-only Transformer LM for the WikiText-2 substitute (DESIGN.md §3).
+
+Small enough for CPU-PJRT (vocab 256, d_model 64, 2 layers, 2 heads,
+seq 32 ≈ 120k params) but structurally faithful: token+position embeddings,
+pre-LN causal self-attention, GELU MLP blocks, final LN, untied output
+projection. The output projection runs through the Pallas matmul kernel so
+the LM artifacts carry the L1 kernels in their HLO (together with
+persample_lm_xent).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+class TransformerSpec:
+    kind = "transformer"
+
+    def __init__(
+        self, name, vocab=256, seq_len=32, d_model=64, n_layers=2, n_heads=2, d_ff=128
+    ):
+        self.name = name
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.d_ff = d_ff
+        assert d_model % n_heads == 0
+
+    def param_specs(self):
+        d, f, v, t = self.d_model, self.d_ff, self.vocab, self.seq_len
+        specs = [("tok_emb", (v, d)), ("pos_emb", (t, d))]
+        for i in range(self.n_layers):
+            specs += [
+                (f"l{i}_ln1_g", (d,)),
+                (f"l{i}_ln1_b", (d,)),
+                (f"l{i}_wq", (d, d)),
+                (f"l{i}_wk", (d, d)),
+                (f"l{i}_wv", (d, d)),
+                (f"l{i}_wo", (d, d)),
+                (f"l{i}_ln2_g", (d,)),
+                (f"l{i}_ln2_b", (d,)),
+                (f"l{i}_mlp_w1", (d, f)),
+                (f"l{i}_mlp_b1", (f,)),
+                (f"l{i}_mlp_w2", (f, d)),
+                (f"l{i}_mlp_b2", (d,)),
+            ]
+        specs += [("lnf_g", (d,)), ("lnf_b", (d,)), ("out_w", (d, v)), ("out_b", (v,))]
+        return specs
+
+    def init(self, key):
+        params = []
+        for name, shape in self.param_specs():
+            key, sub = jax.random.split(key)
+            if name.endswith("_g"):
+                params.append(jnp.ones(shape, jnp.float32))
+            elif name.endswith("_b") and len(shape) == 1:
+                params.append(jnp.zeros(shape, jnp.float32))
+            elif "emb" in name:
+                params.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+            else:
+                fan_in = shape[0]
+                params.append(
+                    jax.random.normal(sub, shape, jnp.float32)
+                    * jnp.sqrt(1.0 / fan_in)
+                )
+        return params
+
+    def _attn(self, named, i, h):
+        b, t, d = h.shape
+        nh = self.n_heads
+        hd = d // nh
+
+        def proj(name):
+            w = named[f"l{i}_{name}"]
+            return (h.reshape(b * t, d) @ w).reshape(b, t, nh, hd).transpose(
+                0, 2, 1, 3
+            )
+
+        q, k, v = proj("wq"), proj("wk"), proj("wv")
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        att = jnp.where(mask, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        out = out.transpose(0, 2, 1, 3).reshape(b * t, d)
+        return (out @ named[f"l{i}_wo"]).reshape(b, t, d)
+
+    def apply(self, params, x):
+        """x: i32[B, T] tokens -> (logits f32[B, T, V], fnorm f32[B, T])."""
+        named = dict(zip([n for n, _ in self.param_specs()], params))
+        b, t = x.shape
+        h = named["tok_emb"][x] + named["pos_emb"][None, :t, :]
+        for i in range(self.n_layers):
+            z = _layernorm(h, named[f"l{i}_ln1_g"], named[f"l{i}_ln1_b"])
+            h = h + self._attn(named, i, z)
+            z = _layernorm(h, named[f"l{i}_ln2_g"], named[f"l{i}_ln2_b"])
+            z2 = z.reshape(b * t, -1)
+            z2 = jax.nn.gelu(z2 @ named[f"l{i}_mlp_w1"] + named[f"l{i}_mlp_b1"])
+            z2 = z2 @ named[f"l{i}_mlp_w2"] + named[f"l{i}_mlp_b2"]
+            h = h + z2.reshape(b, t, -1)
+        h = _layernorm(h, named["lnf_g"], named["lnf_b"])
+        fnorm = jnp.sqrt(jnp.sum(h * h, axis=-1) + 1e-9)
+        logits = matmul(h.reshape(b * t, -1), named["out_w"]) + named["out_b"]
+        return logits.reshape(b, t, self.vocab), fnorm

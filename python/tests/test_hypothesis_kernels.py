@@ -1,0 +1,102 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/value space.
+
+These complement the fixed-shape tests in test_kernels.py: hypothesis drives
+batch sizes, class counts, tile-boundary shapes and value scales, asserting
+kernel-vs-ref allclose everywhere (the L1 contract the rust layer builds on).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    matmul,
+    persample_xent,
+    persample_sqerr,
+    adaselection_score,
+    NUM_METHODS,
+)
+from compile.kernels import ref
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(key, shape, scale):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+def assert_close_normed(got, want, tol=1e-5):
+    """Error relative to the result's max magnitude — the right metric for
+    f32 matmuls where accumulation-order noise hits near-zero elements."""
+    scale = float(jnp.max(jnp.abs(want))) + 1e-30
+    err = float(jnp.max(jnp.abs(got - want))) / scale
+    assert err < tol, f"norm-relative error {err} >= {tol}"
+
+
+@settings(**_SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 150),
+    n=st.integers(1, 200),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_any_shape(m, k, n, scale, seed):
+    x = _arr(seed, (m, k), scale)
+    w = _arr(seed + 1, (k, n), scale)
+    assert_close_normed(matmul(x, w), ref.matmul(x, w))
+
+
+@settings(**_SETTINGS)
+@given(
+    b=st.integers(1, 160),
+    c=st.integers(2, 128),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_xent_any_shape(b, c, scale, seed):
+    logits = _arr(seed, (b, c), scale)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0, c)
+    fnorm = jnp.abs(_arr(seed + 2, (b,), 1.0)) + 0.01
+    l_k, g_k = persample_xent(logits, labels, fnorm)
+    l_r, g_r = ref.persample_xent(logits, labels, fnorm)
+    np.testing.assert_allclose(l_k, l_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g_k, g_r, rtol=1e-4, atol=1e-5)
+    assert bool(jnp.all(l_k >= -1e-6))
+
+
+@settings(**_SETTINGS)
+@given(b=st.integers(1, 500), seed=st.integers(0, 2**16))
+def test_sqerr_any_shape(b, seed):
+    pred = _arr(seed, (b,), 5.0)
+    y = _arr(seed + 1, (b,), 5.0)
+    fn = jnp.abs(_arr(seed + 2, (b,), 1.0))
+    l_k, g_k = persample_sqerr(pred, y, fn)
+    l_r, g_r = ref.persample_sqerr(pred, y, fn)
+    np.testing.assert_allclose(l_k, l_r, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(g_k, g_r, rtol=1e-6, atol=1e-6)
+
+
+@settings(**_SETTINGS)
+@given(
+    b=st.integers(2, 128),
+    t=st.floats(1.0, 1e5),
+    p=st.floats(-1.0, 0.0),
+    cl_on=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_score_invariants_any_batch(b, t, p, cl_on, seed):
+    loss = jnp.abs(_arr(seed, (b,), 2.0)) + 1e-4
+    gnorm = jnp.abs(_arr(seed + 1, (b,), 2.0)) + 1e-4
+    w = jnp.abs(_arr(seed + 2, (NUM_METHODS,), 1.0)) + 0.05
+    knobs = jnp.array([t, p, cl_on], jnp.float32)
+    s_k, a_k = adaselection_score(loss, gnorm, w, knobs)
+    s_r, a_r = ref.adaselection_score(loss, gnorm, w, knobs)
+    np.testing.assert_allclose(s_k, s_r, rtol=2e-4, atol=1e-6)
+    # invariants the coordinator relies on
+    assert bool(jnp.all(s_k >= -1e-7)), "scores must be non-negative"
+    assert bool(jnp.all(jnp.isfinite(s_k)))
+    np.testing.assert_allclose(
+        jnp.sum(a_k, axis=1), jnp.ones(NUM_METHODS), rtol=1e-4
+    )

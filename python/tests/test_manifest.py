@@ -1,0 +1,89 @@
+"""Manifest schema + artifact-tree integrity (what rust deserializes)."""
+
+import json
+import math
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def _load():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_top_level_schema():
+    m = _load()
+    for key in ("version", "method_order", "momentum", "families", "score", "artifacts"):
+        assert key in m, key
+    assert m["version"] == 1
+    assert m["momentum"] == 0.9
+    assert m["method_order"][0] == "uniform"
+    assert len(m["method_order"]) == 7
+
+
+def test_every_artifact_file_exists_and_parses_header():
+    m = _load()
+    for name, art in m["artifacts"].items():
+        path = os.path.join(ART, art["file"])
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name} missing HloModule header"
+
+
+def test_family_artifact_references_resolve():
+    m = _load()
+    arts = m["artifacts"]
+    for fname, fam in m["families"].items():
+        a = fam["artifacts"]
+        assert a["init"] in arts
+        assert a["fwd"] in arts
+        assert a["eval"] in arts
+        for k, nm in a["train"].items():
+            assert nm in arts, (fname, k)
+            assert int(k) in fam["train_sizes"]
+
+
+def test_train_sizes_are_gamma_grid():
+    m = _load()
+    for fname, fam in m["families"].items():
+        b = fam["batch"]
+        want = sorted({int(math.ceil(g * b)) for g in m["gamma_grid"]}) + [b]
+        assert fam["train_sizes"] == want, fname
+
+
+def test_io_shapes_consistent_with_params():
+    m = _load()
+    for fname, fam in m["families"].items():
+        n = len(fam["params"])
+        fwd = m["artifacts"][fam["artifacts"]["fwd"]]
+        # fwd inputs = params + x + y
+        assert len(fwd["inputs"]) == n + 2, fname
+        for p, inp in zip(fam["params"], fwd["inputs"]):
+            assert inp["shape"] == p["shape"], (fname, p["name"])
+        # fwd outputs: two B-vectors
+        b = fam["batch"]
+        assert [o["shape"] for o in fwd["outputs"]] == [[b], [b]]
+        # train: params + mom + x + y + lr -> params' + mom' + loss
+        k0 = fam["train_sizes"][0]
+        tr = m["artifacts"][fam["artifacts"]["train"][str(k0)]]
+        assert len(tr["inputs"]) == 2 * n + 3, fname
+        assert len(tr["outputs"]) == 2 * n + 1, fname
+        assert tr["outputs"][-1]["shape"] == []
+
+
+def test_score_artifacts_per_batch():
+    m = _load()
+    batches = {str(f["batch"]) for f in m["families"].values()}
+    assert set(m["score"].keys()) == batches
+    for bs, name in m["score"].items():
+        art = m["artifacts"][name]
+        assert art["inputs"][0]["shape"] == [int(bs)]
+        assert art["outputs"][1]["shape"] == [7, int(bs)]

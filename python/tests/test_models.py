@@ -1,0 +1,184 @@
+"""Model shape/init sanity + train-step behaviour for every family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import make_families
+
+FAMILIES = make_families()
+
+
+def _data(fam, n, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    if fam.task == "regression":
+        x = jax.random.normal(k1, (n, fam.spec.in_dim), jnp.float32)
+        y = 2.0 * x[:, 0] + 1.0
+    elif fam.task == "classification":
+        x = jax.random.normal(k1, (n,) + fam.spec.in_dim, jnp.float32)
+        y = jax.random.randint(k2, (n,), 0, fam.spec.num_classes)
+    else:
+        x = jax.random.randint(k1, (n, fam.spec.seq_len), 0, fam.spec.vocab)
+        y = jnp.roll(x, -1, axis=1)
+    return x, y
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_init_matches_param_specs(name):
+    fam = FAMILIES[name]
+    params = fam.spec.init(jax.random.PRNGKey(0))
+    specs = fam.spec.param_specs()
+    assert len(params) == len(specs)
+    for p, (pname, shape) in zip(params, specs):
+        assert p.shape == tuple(shape), pname
+        assert p.dtype == jnp.float32
+        assert bool(jnp.all(jnp.isfinite(p))), pname
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_fwd_shapes_and_finite(name):
+    fam = FAMILIES[name]
+    params = fam.spec.init(jax.random.PRNGKey(1))
+    x, y = _data(fam, fam.batch)
+    loss, gnorm = fam.fwd_fn()(*params, x, y)
+    assert loss.shape == (fam.batch,)
+    assert gnorm.shape == (fam.batch,)
+    assert bool(jnp.all(jnp.isfinite(loss)))
+    assert bool(jnp.all(loss >= 0.0))
+    assert bool(jnp.all(gnorm >= 0.0))
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_train_step_updates_params_and_momentum(name):
+    fam = FAMILIES[name]
+    params = fam.spec.init(jax.random.PRNGKey(2))
+    mom = [jnp.zeros_like(p) for p in params]
+    k = fam.train_sizes()[0]
+    x, y = _data(fam, k)
+    out = fam.train_fn()(*params, *mom, x, y, jnp.float32(0.01))
+    n = fam.n_params()
+    new_params, new_mom, loss = out[:n], out[n : 2 * n], out[-1]
+    assert float(loss) > 0.0
+    changed = any(
+        float(jnp.max(jnp.abs(a - b))) > 0 for a, b in zip(new_params, params)
+    )
+    assert changed, "train step must move parameters"
+    # momentum after first step == gradient, so some must be nonzero
+    assert any(float(jnp.max(jnp.abs(m))) > 0 for m in new_mom)
+
+
+@pytest.mark.parametrize("name", ["mlp_simple", "mlp_bike"])
+def test_repeated_steps_decrease_regression_loss(name):
+    fam = FAMILIES[name]
+    params = fam.spec.init(jax.random.PRNGKey(3))
+    mom = [jnp.zeros_like(p) for p in params]
+    x, y = _data(fam, fam.batch)
+    train = jax.jit(fam.train_fn())
+    losses = []
+    n = fam.n_params()
+    for _ in range(60):
+        out = train(*params, *mom, x, y, jnp.float32(0.05))
+        params, mom, loss = list(out[:n]), list(out[n : 2 * n]), out[-1]
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], losses[::10]
+
+
+def test_resnet_steps_decrease_loss():
+    fam = FAMILIES["resnet_c10"]
+    params = fam.spec.init(jax.random.PRNGKey(4))
+    mom = [jnp.zeros_like(p) for p in params]
+    x, y = _data(fam, 32)
+    # overfit a fixed 32-sample batch: loss must fall significantly
+    train = jax.jit(fam.train_fn())
+    n = fam.n_params()
+    first = None
+    for i in range(30):
+        out = train(*params, *mom, x, y, jnp.float32(0.05))
+        params, mom, loss = list(out[:n]), list(out[n : 2 * n]), out[-1]
+        if first is None:
+            first = float(loss)
+    assert float(loss) < 0.7 * first, (first, float(loss))
+
+
+def test_transformer_steps_decrease_loss():
+    fam = FAMILIES["transformer"]
+    params = fam.spec.init(jax.random.PRNGKey(5))
+    mom = [jnp.zeros_like(p) for p in params]
+    x, y = _data(fam, 16)
+    train = jax.jit(fam.train_fn())
+    n = fam.n_params()
+    first = None
+    for i in range(25):
+        out = train(*params, *mom, x, y, jnp.float32(0.1))
+        params, mom, loss = list(out[:n]), list(out[n : 2 * n]), out[-1]
+        if first is None:
+            first = float(loss)
+    assert float(loss) < 0.9 * first, (first, float(loss))
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_eval_fn_mask_and_ranges(name):
+    fam = FAMILIES[name]
+    params = fam.spec.init(jax.random.PRNGKey(6))
+    x, y = _data(fam, fam.batch)
+    mask = jnp.ones(fam.batch).at[fam.batch // 2 :].set(0.0)
+    loss_sum, correct = fam.eval_fn()(*params, x, y, mask)
+    assert float(loss_sum) >= 0.0
+    assert 0.0 <= float(correct) <= float(jnp.sum(mask))
+    # zero mask ⇒ zero sums
+    z_loss, z_corr = fam.eval_fn()(*params, x, y, jnp.zeros(fam.batch))
+    assert float(z_loss) == 0.0 and float(z_corr) == 0.0
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_init_fn_momentum_zero_and_deterministic(name):
+    fam = FAMILIES[name]
+    out1 = fam.init_fn()(jnp.int32(42))
+    out2 = fam.init_fn()(jnp.int32(42))
+    out3 = fam.init_fn()(jnp.int32(43))
+    n = fam.n_params()
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(a, b)
+    assert any(
+        float(jnp.max(jnp.abs(a - b))) > 0 for a, b in zip(out1[:n], out3[:n])
+    ), "different seeds must differ"
+    for m in out1[n:]:
+        assert float(jnp.max(jnp.abs(m))) == 0.0
+
+
+def test_fwd_loss_identifies_mislabeled_outliers():
+    """The property AdaSelection exploits: corrupted labels ⇒ larger loss."""
+    fam = FAMILIES["resnet_c10"]
+    params = fam.spec.init(jax.random.PRNGKey(7))
+    mom = [jnp.zeros_like(p) for p in params]
+    x, y = _data(fam, 64, seed=8)
+    train = jax.jit(fam.train_fn())
+    n = fam.n_params()
+    for _ in range(25):
+        out = train(*params, *mom, x, y, jnp.float32(0.05))
+        params, mom = list(out[:n]), list(out[n : 2 * n])
+    y_bad = y.at[:8].set((y[:8] + 1) % 10)
+    loss, _ = fam.fwd_fn()(*params, x, y_bad)
+    assert float(jnp.mean(loss[:8])) > float(jnp.mean(loss[8:]))
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_fwd_score_fused_matches_separate(name):
+    """The fused fwd+score artifact must equal fwd followed by the scorer."""
+    import jax.numpy as jnp
+    from compile.kernels import adaselection_score, NUM_METHODS
+
+    fam = FAMILIES[name]
+    params = fam.spec.init(jax.random.PRNGKey(8))
+    x, y = _data(fam, fam.batch)
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (NUM_METHODS,))) + 0.1
+    knobs = jnp.array([3.0, -0.5, 1.0], jnp.float32)
+
+    loss_f, gnorm_f, s_f, alpha_f = fam.fwd_score_fn()(*params, x, y, w, knobs)
+    loss_s, gnorm_s = fam.fwd_fn()(*params, x, y)
+    s_s, alpha_s = adaselection_score(loss_s, gnorm_s, w, knobs)
+    np.testing.assert_allclose(loss_f, loss_s, rtol=1e-6)
+    np.testing.assert_allclose(gnorm_f, gnorm_s, rtol=1e-6)
+    np.testing.assert_allclose(s_f, s_s, rtol=1e-6)
+    np.testing.assert_allclose(alpha_f, alpha_s, rtol=1e-6)

@@ -1,0 +1,121 @@
+"""AdaSelection fused scorer: kernel-vs-ref plus the selection invariants
+that the rust coordinator relies on (also property-tested there)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import adaselection_score, METHOD_ORDER, NUM_METHODS
+from compile.kernels import ref
+
+
+def _inputs(seed, b=128):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    loss = jnp.abs(jax.random.normal(k1, (b,), jnp.float32)) + 1e-3
+    gnorm = jnp.abs(jax.random.normal(k2, (b,), jnp.float32)) + 1e-3
+    return loss, gnorm
+
+
+@pytest.mark.parametrize("b", [4, 64, 100, 128])
+@pytest.mark.parametrize("cl_on", [0.0, 1.0])
+def test_score_matches_ref(b, cl_on):
+    loss, gnorm = _inputs(b, b)
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(9), (NUM_METHODS,))) + 0.1
+    knobs = jnp.array([17.0, -0.5, cl_on], jnp.float32)
+    s_k, a_k = adaselection_score(loss, gnorm, w, knobs)
+    s_r, a_r = ref.adaselection_score(loss, gnorm, w, knobs)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(a_k, a_r, rtol=1e-5, atol=1e-6)
+
+
+def test_method_order_is_frozen():
+    # the rust coordinator hard-codes this order via manifest.json
+    assert METHOD_ORDER == (
+        "uniform",
+        "big_loss",
+        "small_loss",
+        "grad_norm",
+        "adaboost",
+        "coreset1",
+        "coreset2",
+    )
+
+
+def test_alphas_are_simplex_rows():
+    loss, gnorm = _inputs(3)
+    _, alpha = adaselection_score(
+        loss, gnorm, jnp.ones(NUM_METHODS) / NUM_METHODS, jnp.array([1.0, -0.5, 0.0])
+    )
+    np.testing.assert_allclose(jnp.sum(alpha, axis=1), jnp.ones(NUM_METHODS), rtol=1e-5)
+    assert float(jnp.min(alpha)) >= 0.0
+
+
+def test_big_loss_alpha_orders_like_loss():
+    loss, gnorm = _inputs(4)
+    _, alpha = adaselection_score(
+        loss, gnorm, jnp.ones(NUM_METHODS), jnp.array([1.0, -0.5, 0.0])
+    )
+    big = alpha[1]
+    small = alpha[2]
+    order = jnp.argsort(loss)
+    assert jnp.all(jnp.diff(big[order]) >= -1e-9), "big_loss must be ↑ in loss"
+    assert jnp.all(jnp.diff(small[order]) <= 1e-9), "small_loss must be ↓ in loss"
+
+
+def test_single_method_weight_reduces_to_that_method():
+    loss, gnorm = _inputs(5)
+    w = jnp.zeros(NUM_METHODS).at[1].set(1.0)  # pure big_loss
+    knobs = jnp.array([1.0, -0.5, 0.0])
+    s, alpha = adaselection_score(loss, gnorm, w, knobs)
+    np.testing.assert_allclose(s, alpha[1], rtol=1e-6, atol=1e-8)
+
+
+def test_uniform_alpha_is_constant():
+    loss, gnorm = _inputs(6, b=64)
+    _, alpha = adaselection_score(
+        loss, gnorm, jnp.ones(NUM_METHODS), jnp.array([1.0, -0.5, 0.0])
+    )
+    np.testing.assert_allclose(alpha[0], jnp.full(64, 1.0 / 64), rtol=1e-6)
+
+
+def test_score_linear_in_w():
+    # s(w1 + w2) = s(w1) + s(w2) with CL off
+    loss, gnorm = _inputs(7)
+    knobs = jnp.array([1.0, -0.5, 0.0])
+    w1 = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (NUM_METHODS,)))
+    w2 = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (NUM_METHODS,)))
+    s1, _ = adaselection_score(loss, gnorm, w1, knobs)
+    s2, _ = adaselection_score(loss, gnorm, w2, knobs)
+    s12, _ = adaselection_score(loss, gnorm, w1 + w2, knobs)
+    np.testing.assert_allclose(s12, s1 + s2, rtol=1e-4, atol=1e-6)
+
+
+def test_cl_reward_mean_one_and_favors_small_loss():
+    loss, _ = _inputs(8)
+    r = ref.cl_reward(loss, jnp.array(1.0), jnp.array(-0.5))
+    np.testing.assert_allclose(jnp.mean(r), 1.0, rtol=1e-5)
+    i_small = int(jnp.argmin(loss))
+    i_big = int(jnp.argmax(loss))
+    assert float(r[i_small]) > float(r[i_big])
+
+
+def test_cl_reward_fades_with_iteration():
+    # with p < 0 the reward flattens toward 1 as t grows (DESIGN.md §5.3)
+    loss, _ = _inputs(9)
+    r_early = ref.cl_reward(loss, jnp.array(1.0), jnp.array(-0.5))
+    r_late = ref.cl_reward(loss, jnp.array(1e6), jnp.array(-0.5))
+    spread_early = float(jnp.max(r_early) - jnp.min(r_early))
+    spread_late = float(jnp.max(r_late) - jnp.min(r_late))
+    assert spread_late < spread_early
+
+
+def test_constant_losses_degenerate_to_uniform():
+    b = 32
+    loss = jnp.full((b,), 0.7, jnp.float32)
+    gnorm = jnp.full((b,), 0.3, jnp.float32)
+    s, alpha = adaselection_score(
+        loss, gnorm, jnp.ones(NUM_METHODS) / NUM_METHODS, jnp.array([1.0, -0.5, 1.0])
+    )
+    np.testing.assert_allclose(alpha, jnp.full_like(alpha, 1.0 / b), rtol=1e-4)
+    np.testing.assert_allclose(s, jnp.full((b,), 1.0 / b), rtol=1e-4)

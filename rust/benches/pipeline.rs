@@ -1,0 +1,88 @@
+//! Data-pipeline benchmarks: batch gather cost and streaming-loader
+//! throughput across worker counts (prefetch + backpressure + reorder).
+//! Target (DESIGN.md §9): the loader must sustain ≥ 2× the trainer's batch
+//! rate so the XLA path never starves.
+
+use adaselection::data;
+use adaselection::pipeline::{gather, Loader, LoaderConfig};
+use adaselection::util::bench::{bench, print_results, BenchResult};
+use adaselection::util::timer::Stopwatch;
+
+fn main() {
+    let split = data::build("cifar10", 3, 0.1).unwrap(); // 5000 imgs
+    let ds = split.train;
+    let idx: Vec<usize> = (0..128).collect();
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    results.push(bench("gather 128x16x16x3 batch", 80, || {
+        std::hint::black_box(gather(&ds, &idx, 128, 0, 0));
+    }));
+    let b = gather(&ds, &idx, 128, 0, 0);
+    let rows: Vec<usize> = (0..26).collect();
+    results.push(bench("gather_rows 26-of-128 sub-batch", 50, || {
+        std::hint::black_box(b.gather_rows(&rows));
+    }));
+    print_results("batch assembly", &results);
+
+    println!("\n## loader throughput (2 epochs x {} samples, B=128)", ds.len());
+    println!("{:<34} {:>12} {:>14}", "config", "batches", "batches/s");
+    for workers in [0usize, 1, 2, 4, 8] {
+        let cfg = LoaderConfig {
+            batch_size: 128,
+            epochs: 2,
+            seed: 1,
+            workers,
+            capacity: 8,
+            drop_last: true,
+        };
+        let mut loader = Loader::start(ds.clone(), &cfg);
+        let sw = Stopwatch::new();
+        let mut n = 0usize;
+        while let Some(batch) = loader.next_batch() {
+            std::hint::black_box(&batch);
+            n += 1;
+        }
+        let dt = sw.elapsed_secs();
+        println!(
+            "{:<34} {:>12} {:>14.1}",
+            format!("workers={workers} capacity=8"),
+            n,
+            n as f64 / dt
+        );
+    }
+
+    // consumer-limited regime: loader must keep the buffer full under a
+    // slow trainer (simulated 2ms/step)
+    println!("\n## prefetch under slow consumer (2 ms simulated train step)");
+    for workers in [0usize, 2] {
+        let cfg = LoaderConfig {
+            batch_size: 128,
+            epochs: 1,
+            seed: 1,
+            workers,
+            capacity: 8,
+            drop_last: true,
+        };
+        let mut loader = Loader::start(ds.clone(), &cfg);
+        let sw = Stopwatch::new();
+        let mut wait = 0.0f64;
+        loop {
+            let t = Stopwatch::new();
+            let r = loader.next_batch();
+            wait += t.elapsed_secs();
+            match r {
+                Some(b) => {
+                    std::hint::black_box(&b);
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                None => break,
+            }
+        }
+        println!(
+            "workers={workers}: total={:.3}s, time blocked on loader={:.3}s ({:.1}%)",
+            sw.elapsed_secs(),
+            wait,
+            100.0 * wait / sw.elapsed_secs()
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Selection-path micro-benchmarks: the per-iteration L3 hot path
+//! (α transforms, fused scoring, top-k, weight update) plus the XLA score
+//! kernel for comparison. Selection overhead must stay ≪ forward time
+//! (DESIGN.md §9 target: < 5%).
+
+use adaselection::runtime::Engine;
+use adaselection::selection::adaselection::score_host;
+use adaselection::selection::method::all_alphas;
+use adaselection::selection::{AdaConfig, AdaSelection, Method};
+use adaselection::util::bench::{bench, print_results, BenchResult};
+use adaselection::util::rng::Pcg64;
+use adaselection::util::topk::top_k_indices;
+
+fn inputs(b: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::new(seed);
+    (
+        (0..b).map(|_| 1e-3 + 3.0 * rng.next_f32()).collect(),
+        (0..b).map(|_| 1e-3 + 2.0 * rng.next_f32()).collect(),
+    )
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    for &b in &[128usize, 1024, 8192] {
+        let (loss, gnorm) = inputs(b, b as u64);
+        results.push(bench(&format!("all_alphas 7 methods, B={b}"), 60, || {
+            std::hint::black_box(all_alphas(&loss, &gnorm));
+        }));
+        let w = [1.0f32; 7];
+        results.push(bench(&format!("score_host fused, B={b}"), 60, || {
+            std::hint::black_box(score_host(&loss, &gnorm, &w, 10, -0.5, true));
+        }));
+        let k = b / 5;
+        results.push(bench(&format!("top_k k={k}, B={b}"), 60, || {
+            std::hint::black_box(top_k_indices(&loss, k));
+        }));
+    }
+
+    // full AdaSelection iteration (α + fuse + top-k + eq.3 update)
+    let (loss, gnorm) = inputs(128, 9);
+    let mut ada = AdaSelection::new(AdaConfig {
+        candidates: Method::ALL.to_vec(),
+        ..AdaConfig::default()
+    });
+    results.push(bench("AdaSelection::step_host B=128 (7 cand)", 80, || {
+        std::hint::black_box(ada.step_host(&loss, &gnorm, 26));
+    }));
+
+    print_results("selection micro-benchmarks (host path)", &results);
+
+    // XLA score-kernel path, if artifacts exist
+    let dir = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    if dir.join("manifest.json").exists() {
+        let mut engine = Engine::new(&dir).expect("engine");
+        let (loss, gnorm) = inputs(128, 11);
+        let w = [1.0f32; 7];
+        // compile outside the timed region
+        let _ = engine.score(&loss, &gnorm, &w, 1, -0.5, true).unwrap();
+        let r = bench("score kernel (XLA, pallas) B=128", 200, || {
+            std::hint::black_box(engine.score(&loss, &gnorm, &w, 1, -0.5, true).unwrap());
+        });
+        print_results("selection scoring on the L1 kernel", &[r]);
+    } else {
+        println!("(artifacts missing — skipping XLA score kernel bench)");
+    }
+}

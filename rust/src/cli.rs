@@ -1,0 +1,129 @@
+//! From-scratch CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `adaselection <command> [positionals...] [--flag [value]]...`
+//! Boolean flags may omit the value; `--key=value` is also accepted.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positionals: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw argv (without the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let mut out = Args {
+            command: it.next().unwrap_or_else(|| "help".to_string()),
+            ..Args::default()
+        };
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                anyhow::ensure!(!flag.is_empty(), "bare '--' not supported");
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value is next token unless it looks like a flag
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(flag.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(flag.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+/// The help text for the binary.
+pub const USAGE: &str = "adaselection — AdaSelection training coordinator
+
+USAGE:
+  adaselection <command> [options]
+
+COMMANDS:
+  train               run one training job
+                      --dataset D --selector S --gamma G --epochs N --lr X
+                      --beta B --cl on|off --cl-power P --seed N
+                      --data-scale F --workers N --accumulate on|off
+                      --kernel-scorer on|off --config FILE --out DIR
+  sweep               reproduce a paper experiment
+                      --exp fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|table3|table4|all
+                      --out DIR [--epochs N --data-scale F --seed N --quick]
+  list-experiments    print the experiment registry (paper figure/table map)
+  inspect-artifacts   print the artifact manifest summary
+  gen-data            generate + describe a dataset
+                      --dataset D [--data-scale F --seed N]
+  help                this text
+
+All training options can also come from --config FILE (JSON) with CLI flags
+taking precedence. Artifacts default to ./artifacts ($ADASELECTION_ARTIFACTS).
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_positionals() {
+        let a = parse("train --dataset cifar10 --gamma 0.2 pos1 --verbose");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flag("dataset"), Some("cifar10"));
+        assert_eq!(a.flag("gamma"), Some("0.2"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+        assert_eq!(a.flag("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("sweep --exp=fig3 --out=/tmp/x");
+        assert_eq!(a.flag("exp"), Some("fig3"));
+        assert_eq!(a.flag("out"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse("train --accumulate");
+        assert_eq!(a.flag("accumulate"), Some("true"));
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        // "--cl-power -0.5": '-0.5' does not start with '--', so it's a value
+        let a = parse("train --cl-power -0.5");
+        assert_eq!(a.flag("cl-power"), Some("-0.5"));
+    }
+}

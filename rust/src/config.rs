@@ -1,0 +1,260 @@
+//! Typed run configuration: JSON config files + CLI overrides + validation.
+//!
+//! One [`RunConfig`] fully determines a training run (dataset, model family
+//! via the dataset, selection policy, sampling rate, schedule, pipeline
+//! knobs, seeds) — the harness sweeps are lists of `RunConfig`s, and every
+//! report embeds the originating config for provenance.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+/// Configuration of a single training run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// dataset name: cifar10|cifar100|svhn|simple|bike|wikitext
+    pub dataset: String,
+    /// selector spec: benchmark | <method> | adaselection[:m1+m2...]
+    pub selector: String,
+    /// sampling rate γ ∈ (0, 1]
+    pub gamma: f64,
+    /// eq. 3 β ∈ [-1, 1]
+    pub beta: f32,
+    /// curriculum reward on/off + exponent (eq. 4)
+    pub cl_on: bool,
+    pub cl_power: f32,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// scales the paper's dataset sizes down to CPU budgets
+    pub data_scale: f64,
+    /// pipeline workers / prefetch capacity
+    pub workers: usize,
+    pub capacity: usize,
+    /// Alg-2 lines 8–11: accumulate selections until |C| = B (true) or
+    /// update immediately on each sub-batch (false, default)
+    pub accumulate: bool,
+    /// score α on the L1 Pallas kernel (true) or the host oracle (false)
+    pub kernel_scorer: bool,
+    /// weight-update rule: eq3[:beta] | exp3[:eta] | softmax[:tau]
+    pub rule: String,
+    /// stale-loss cache window in epochs (0 = always run the selection
+    /// forward pass; paper §5 future-work approximation)
+    pub stale_refresh: u32,
+    /// AdaSelection-signal early stopping (paper §5 future-work)
+    pub early_stop: bool,
+    pub patience: usize,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "cifar10".into(),
+            selector: "adaselection".into(),
+            gamma: 0.2,
+            beta: 0.5,
+            cl_on: true,
+            cl_power: -0.5,
+            epochs: 3,
+            lr: 0.01,
+            seed: 42,
+            data_scale: 0.02,
+            workers: 2,
+            capacity: 8,
+            accumulate: false,
+            // CPU default: host-oracle scoring. The L1 kernel path
+            // (kernel_scorer=true) is numerically equivalent (tested) but
+            // interpret-mode pallas inside XLA costs ~14ms/batch on CPU;
+            // on real TPU the fused kernel path is the fast one
+            // (EXPERIMENTS.md §Perf).
+            kernel_scorer: false,
+            rule: "eq3".into(),
+            stale_refresh: 0,
+            early_stop: false,
+            patience: 3,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Sanity-check ranges before a run starts.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.gamma > 0.0 && self.gamma <= 1.0,
+            "gamma {} outside (0, 1]",
+            self.gamma
+        );
+        anyhow::ensure!(
+            (-1.0..=1.0).contains(&self.beta),
+            "beta {} outside [-1, 1] (paper range)",
+            self.beta
+        );
+        anyhow::ensure!(self.epochs > 0, "epochs must be > 0");
+        anyhow::ensure!(self.lr > 0.0, "lr must be > 0");
+        anyhow::ensure!(
+            self.data_scale > 0.0 && self.data_scale <= 1.0,
+            "data_scale {} outside (0, 1]",
+            self.data_scale
+        );
+        crate::data::family_for(&self.dataset)?;
+        crate::selection::bandit::UpdateRule::parse(&self.rule)?;
+        crate::selection::build_selector(
+            &self.selector,
+            self.seed,
+            self.beta,
+            self.cl_on,
+            self.cl_power,
+        )?;
+        Ok(())
+    }
+
+    /// Apply `--key value` overrides (CLI surface).
+    pub fn apply_override(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "dataset" => self.dataset = value.into(),
+            "selector" => self.selector = value.into(),
+            "gamma" => self.gamma = value.parse()?,
+            "beta" => self.beta = value.parse()?,
+            "cl" => self.cl_on = parse_bool(value)?,
+            "cl-power" => self.cl_power = value.parse()?,
+            "epochs" => self.epochs = value.parse()?,
+            "lr" => self.lr = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "data-scale" => self.data_scale = value.parse()?,
+            "workers" => self.workers = value.parse()?,
+            "capacity" => self.capacity = value.parse()?,
+            "accumulate" => self.accumulate = parse_bool(value)?,
+            "kernel-scorer" => self.kernel_scorer = parse_bool(value)?,
+            "rule" => self.rule = value.into(),
+            "stale-refresh" => self.stale_refresh = value.parse()?,
+            "early-stop" => self.early_stop = parse_bool(value)?,
+            "patience" => self.patience = value.parse()?,
+            "artifacts" => self.artifacts_dir = PathBuf::from(value),
+            other => anyhow::bail!("unknown config key '--{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load a JSON config file, then validate.
+    pub fn from_json(j: &Json) -> anyhow::Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        for (k, v) in j.as_obj()? {
+            let val = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => {
+                    if n.fract() == 0.0 {
+                        format!("{}", *n as i64)
+                    } else {
+                        format!("{n}")
+                    }
+                }
+                Json::Bool(b) => b.to_string(),
+                other => anyhow::bail!("config key {k}: unsupported value {other:?}"),
+            };
+            cfg.apply_override(k, &val)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Serialize for provenance in reports.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("dataset".into(), Json::Str(self.dataset.clone()));
+        m.insert("selector".into(), Json::Str(self.selector.clone()));
+        m.insert("gamma".into(), Json::Num(self.gamma));
+        m.insert("beta".into(), Json::Num(self.beta as f64));
+        m.insert("cl".into(), Json::Bool(self.cl_on));
+        m.insert("cl-power".into(), Json::Num(self.cl_power as f64));
+        m.insert("epochs".into(), Json::Num(self.epochs as f64));
+        m.insert("lr".into(), Json::Num(self.lr as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("data-scale".into(), Json::Num(self.data_scale));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("capacity".into(), Json::Num(self.capacity as f64));
+        m.insert("accumulate".into(), Json::Bool(self.accumulate));
+        m.insert("kernel-scorer".into(), Json::Bool(self.kernel_scorer));
+        m.insert("rule".into(), Json::Str(self.rule.clone()));
+        m.insert("stale-refresh".into(), Json::Num(self.stale_refresh as f64));
+        m.insert("early-stop".into(), Json::Bool(self.early_stop));
+        m.insert("patience".into(), Json::Num(self.patience as f64));
+        Json::Obj(m)
+    }
+}
+
+fn parse_bool(s: &str) -> anyhow::Result<bool> {
+    match s {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        other => anyhow::bail!("expected bool, got '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn overrides_apply_and_validate() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("dataset", "bike").unwrap();
+        cfg.apply_override("gamma", "0.4").unwrap();
+        cfg.apply_override("selector", "big_loss").unwrap();
+        cfg.apply_override("cl", "off").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.dataset, "bike");
+        assert!((cfg.gamma - 0.4).abs() < 1e-12);
+        assert!(!cfg.cl_on);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_override("gamma", "abc").is_err());
+        assert!(cfg.apply_override("nope", "1").is_err());
+        cfg.gamma = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.gamma = 0.2;
+        cfg.beta = 2.0;
+        assert!(cfg.validate().is_err());
+        cfg.beta = 0.5;
+        cfg.dataset = "mnist".into();
+        assert!(cfg.validate().is_err());
+        cfg.dataset = "cifar10".into();
+        cfg.selector = "bogus".into();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut cfg = RunConfig::default();
+        cfg.dataset = "svhn".into();
+        cfg.gamma = 0.3;
+        cfg.accumulate = true;
+        let j = cfg.to_json();
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back.dataset, "svhn");
+        assert!((back.gamma - 0.3).abs() < 1e-12);
+        assert!(back.accumulate);
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_keys() {
+        let j = Json::parse(r#"{"datasett": "cifar10"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

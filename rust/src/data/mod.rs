@@ -1,0 +1,219 @@
+//! Dataset substrate: task types, in-memory stores, and the three synthetic
+//! generator families substituting for the paper's datasets (DESIGN.md §3).
+//!
+//! Everything is seeded and deterministic; generation happens in rust at
+//! startup (no files, no network), and the pipeline layer streams batches
+//! out of these stores.
+
+pub mod images;
+pub mod regression;
+pub mod splits;
+pub mod text;
+
+/// What kind of learning task a dataset carries.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Task {
+    /// `classes` labels, image features.
+    Classification { classes: usize },
+    /// scalar targets.
+    Regression,
+    /// next-token prediction over `vocab` tokens, `seq` window length.
+    Lm { vocab: usize, seq: usize },
+}
+
+impl Task {
+    /// Whether the figure/table metric is accuracy (vs loss).
+    pub fn metric_is_accuracy(&self) -> bool {
+        matches!(self, Task::Classification { .. })
+    }
+}
+
+/// Per-sample feature storage (contiguous, stride `feat_len`).
+#[derive(Clone, Debug)]
+pub enum XStore {
+    F32 { data: Vec<f32>, stride: usize },
+    I32 { data: Vec<i32>, stride: usize },
+}
+
+impl XStore {
+    pub fn len(&self) -> usize {
+        match self {
+            XStore::F32 { data, stride } => data.len() / stride,
+            XStore::I32 { data, stride } => data.len() / stride,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stride(&self) -> usize {
+        match self {
+            XStore::F32 { stride, .. } | XStore::I32 { stride, .. } => *stride,
+        }
+    }
+}
+
+/// Per-sample target storage.
+#[derive(Clone, Debug)]
+pub enum YStore {
+    /// regression targets
+    F32(Vec<f32>),
+    /// class ids
+    I32(Vec<i32>),
+    /// per-token targets, stride `seq`
+    Seq { data: Vec<i32>, stride: usize },
+}
+
+impl YStore {
+    pub fn len(&self) -> usize {
+        match self {
+            YStore::F32(v) => v.len(),
+            YStore::I32(v) => v.len(),
+            YStore::Seq { data, stride } => data.len() / stride,
+        }
+    }
+}
+
+/// An in-memory dataset (one split).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub task: Task,
+    /// per-sample feature shape, e.g. `[16, 16, 3]`, `[8]`, `[32]`
+    pub feat_shape: Vec<usize>,
+    pub x: XStore,
+    pub y: YStore,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Consistency check used by tests and at pipeline startup.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.x.len() == self.y.len(),
+            "x/y length mismatch: {} vs {}",
+            self.x.len(),
+            self.y.len()
+        );
+        let expect: usize = self.feat_shape.iter().product();
+        anyhow::ensure!(
+            self.x.stride() == expect,
+            "stride {} != feat_shape product {expect}",
+            self.x.stride()
+        );
+        match (&self.task, &self.y) {
+            (Task::Classification { classes }, YStore::I32(ys)) => {
+                for &y in ys {
+                    anyhow::ensure!(
+                        y >= 0 && (y as usize) < *classes,
+                        "label {y} out of range 0..{classes}"
+                    );
+                }
+            }
+            (Task::Regression, YStore::F32(ys)) => {
+                anyhow::ensure!(
+                    ys.iter().all(|v| v.is_finite()),
+                    "non-finite regression target"
+                );
+            }
+            (Task::Lm { vocab, seq }, YStore::Seq { data, stride }) => {
+                anyhow::ensure!(stride == seq, "lm target stride mismatch");
+                for &t in data {
+                    anyhow::ensure!(
+                        t >= 0 && (t as usize) < *vocab,
+                        "token {t} out of range 0..{vocab}"
+                    );
+                }
+            }
+            (t, _) => anyhow::bail!("task/target storage mismatch for {t:?}"),
+        }
+        Ok(())
+    }
+}
+
+/// A train/test pair produced by a generator.
+#[derive(Clone, Debug)]
+pub struct SplitDataset {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// The registry of dataset builders keyed by the paper's dataset names.
+pub fn build(name: &str, seed: u64, scale: f64) -> anyhow::Result<SplitDataset> {
+    match name {
+        "svhn" => Ok(images::synth_svhn(seed, scale)),
+        "cifar10" => Ok(images::synth_cifar10(seed, scale)),
+        "cifar100" => Ok(images::synth_cifar100(seed, scale)),
+        "simple" => Ok(regression::simple_regression(seed, scale)),
+        "bike" => Ok(regression::bike_synthetic(seed)),
+        "wikitext" => Ok(text::markov_corpus(seed, scale)),
+        other => anyhow::bail!(
+            "unknown dataset '{other}' (expected svhn|cifar10|cifar100|simple|bike|wikitext)"
+        ),
+    }
+}
+
+/// All dataset names, in the paper's Table-2 order.
+pub const ALL_DATASETS: [&str; 6] = ["cifar10", "cifar100", "svhn", "simple", "bike", "wikitext"];
+
+/// Which model family serves each dataset (manifest key).
+pub fn family_for(name: &str) -> anyhow::Result<&'static str> {
+    Ok(match name {
+        "svhn" | "cifar10" => "resnet_c10",
+        "cifar100" => "resnet_c100",
+        "simple" => "mlp_simple",
+        "bike" => "mlp_bike",
+        "wikitext" => "transformer",
+        other => anyhow::bail!("unknown dataset '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_all_datasets() {
+        for name in ALL_DATASETS {
+            let ds = build(name, 7, 0.05).unwrap();
+            ds.train.validate().unwrap();
+            ds.test.validate().unwrap();
+            assert!(ds.train.len() > 0, "{name}");
+            assert!(ds.test.len() > 0, "{name}");
+            family_for(name).unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        assert!(build("mnist", 0, 1.0).is_err());
+        assert!(family_for("mnist").is_err());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = build("cifar10", 3, 0.02).unwrap();
+        let b = build("cifar10", 3, 0.02).unwrap();
+        match (&a.train.x, &b.train.x) {
+            (XStore::F32 { data: da, .. }, XStore::F32 { data: db, .. }) => {
+                assert_eq!(da, db)
+            }
+            _ => panic!("expected f32 stores"),
+        }
+        let c = build("cifar10", 4, 0.02).unwrap();
+        match (&a.train.x, &c.train.x) {
+            (XStore::F32 { data: da, .. }, XStore::F32 { data: dc, .. }) => {
+                assert_ne!(da, dc)
+            }
+            _ => panic!("expected f32 stores"),
+        }
+    }
+}

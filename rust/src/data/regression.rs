@@ -1,0 +1,218 @@
+//! Regression dataset generators: the paper's `y = 2x + 1` simple task and
+//! the bike-sharing substitute (DESIGN.md §3).
+//!
+//! Both generators plant a small fraction of high-leverage outliers — the
+//! regime where Small Loss is robust and Big Loss chases corrupted targets
+//! (the paper's Fig 5/6 finding).
+
+use super::{Dataset, SplitDataset, Task, XStore, YStore};
+use crate::util::rng::Pcg64;
+
+/// Paper's simple regression: y = 2x + 1 + ε, 10 000 train + 5 000 test.
+pub fn simple_regression(seed: u64, scale: f64) -> SplitDataset {
+    let train_n = ((10_000.0 * scale.max(0.05)).round() as usize).max(200);
+    let test_n = ((5_000.0 * scale.max(0.05)).round() as usize).max(100);
+    let mut rng = Pcg64::new(seed ^ 0x5151_6262_7373_8484);
+
+    let gen = |n: usize, with_outliers: bool, rng: &mut Pcg64| {
+        let mut xs = vec![0.0f32; n];
+        let mut ys = vec![0.0f32; n];
+        for i in 0..n {
+            let x = rng.uniform(-3.0, 3.0);
+            let noise = if with_outliers && rng.next_f64() < 0.05 {
+                rng.normal_ms(0.0, 8.0) // corrupted target
+            } else {
+                rng.normal_ms(0.0, 0.5)
+            };
+            xs[i] = x as f32;
+            ys[i] = (2.0 * x + 1.0 + noise) as f32;
+        }
+        (xs, ys)
+    };
+
+    let (train_x, train_y) = gen(train_n, true, &mut rng);
+    let (test_x, test_y) = gen(test_n, false, &mut rng);
+
+    let make = |x: Vec<f32>, y: Vec<f32>, suffix: &str| Dataset {
+        name: format!("simple-{suffix}"),
+        task: Task::Regression,
+        feat_shape: vec![1],
+        x: XStore::F32 { data: x, stride: 1 },
+        y: YStore::F32(y),
+    };
+    SplitDataset {
+        train: make(train_x, train_y, "train"),
+        test: make(test_x, test_y, "test"),
+    }
+}
+
+/// Bike-sharing substitute: 730 daily rows with seasonal + weekly structure
+/// and count-like heteroscedastic noise plus storm-day outliers.
+///
+/// Features (8): [sin_doy, cos_doy, workingday, temp, humidity, windspeed,
+/// weathersit, holiday]; target: daily rental count scaled to ~[0, 10].
+pub fn bike_synthetic(seed: u64) -> SplitDataset {
+    const DAYS: usize = 730;
+    const FEAT: usize = 8;
+    let mut rng = Pcg64::new(seed ^ 0x9a9a_8b8b_7c7c_6d6d);
+
+    let mut xs = vec![0.0f32; DAYS * FEAT];
+    let mut ys = vec![0.0f32; DAYS];
+    for day in 0..DAYS {
+        let doy = (day % 365) as f64;
+        let phase = std::f64::consts::TAU * doy / 365.0;
+        let sin_doy = phase.sin();
+        let cos_doy = phase.cos();
+        let dow = day % 7;
+        let workingday = if dow < 5 { 1.0 } else { 0.0 };
+        let holiday = if rng.next_f64() < 0.03 { 1.0 } else { 0.0 };
+        // temperature follows the season with daily jitter
+        let temp = 0.5 - 0.35 * cos_doy + rng.normal_ms(0.0, 0.08);
+        let humidity = (0.6 + 0.15 * sin_doy + rng.normal_ms(0.0, 0.1)).clamp(0.0, 1.0);
+        let windspeed = (0.2 + rng.normal_ms(0.0, 0.08)).clamp(0.0, 1.0).abs();
+        // weather: 0 clear / 1 misty / 2 storm — storms are rare
+        let r = rng.next_f64();
+        let weathersit = if r < 0.65 {
+            0.0
+        } else if r < 0.92 {
+            1.0
+        } else {
+            2.0
+        };
+
+        // count model: season + weekday + weather effects (the structure a
+        // 2-layer MLP can learn), count-like noise growing with the mean
+        let base = 4.5 + 3.0 * temp - 1.2 * humidity - 0.8 * windspeed
+            + 0.6 * workingday
+            - 1.5 * weathersit
+            - 0.7 * holiday;
+        let mut y = base + rng.normal_ms(0.0, 0.15 * base.abs().max(0.5));
+        if weathersit > 1.5 && rng.next_f64() < 0.5 {
+            // storm-day collapse: high-leverage outlier
+            y *= rng.uniform(0.05, 0.3);
+        }
+        let x = &mut xs[day * FEAT..(day + 1) * FEAT];
+        x.copy_from_slice(&[
+            sin_doy as f32,
+            cos_doy as f32,
+            workingday as f32,
+            temp as f32,
+            humidity as f32,
+            windspeed as f32,
+            weathersit as f32,
+            holiday as f32,
+        ]);
+        ys[day] = y.max(0.0) as f32;
+    }
+
+    // random 80/20 split (paper reports "730 in total")
+    let perm = Pcg64::new(seed ^ 0x0f0f).permutation(DAYS);
+    let n_test = DAYS / 5;
+    let mut train_x = Vec::with_capacity((DAYS - n_test) * FEAT);
+    let mut train_y = Vec::with_capacity(DAYS - n_test);
+    let mut test_x = Vec::with_capacity(n_test * FEAT);
+    let mut test_y = Vec::with_capacity(n_test);
+    for (rank, &i) in perm.iter().enumerate() {
+        let row = &xs[i * FEAT..(i + 1) * FEAT];
+        if rank < n_test {
+            test_x.extend_from_slice(row);
+            test_y.push(ys[i]);
+        } else {
+            train_x.extend_from_slice(row);
+            train_y.push(ys[i]);
+        }
+    }
+
+    let make = |x: Vec<f32>, y: Vec<f32>, suffix: &str| Dataset {
+        name: format!("bike-{suffix}"),
+        task: Task::Regression,
+        feat_shape: vec![FEAT],
+        x: XStore::F32 {
+            data: x,
+            stride: FEAT,
+        },
+        y: YStore::F32(y),
+    };
+    SplitDataset {
+        train: make(train_x, train_y, "train"),
+        test: make(test_x, test_y, "test"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn simple_line_is_recoverable() {
+        let ds = simple_regression(1, 0.1);
+        ds.train.validate().unwrap();
+        // least-squares fit on the clean test split recovers slope≈2, b≈1
+        let (XStore::F32 { data: xs, .. }, YStore::F32(ys)) = (&ds.test.x, &ds.test.y)
+        else {
+            panic!()
+        };
+        let n = xs.len() as f64;
+        let mx: f64 = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let my: f64 = ys.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let mut sxy = 0.0;
+        let mut sxx = 0.0;
+        for (&x, &y) in xs.iter().zip(ys.iter()) {
+            sxy += (x as f64 - mx) * (y as f64 - my);
+            sxx += (x as f64 - mx) * (x as f64 - mx);
+        }
+        let slope = sxy / sxx;
+        let intercept = my - slope * mx;
+        assert!((slope - 2.0).abs() < 0.1, "slope={slope}");
+        assert!((intercept - 1.0).abs() < 0.1, "intercept={intercept}");
+    }
+
+    #[test]
+    fn simple_train_has_outliers_test_does_not() {
+        let ds = simple_regression(2, 0.1);
+        let resid = |d: &Dataset| -> Vec<f32> {
+            let (XStore::F32 { data: xs, .. }, YStore::F32(ys)) = (&d.x, &d.y) else {
+                panic!()
+            };
+            xs.iter()
+                .zip(ys.iter())
+                .map(|(&x, &y)| (y - (2.0 * x + 1.0)).abs())
+                .collect()
+        };
+        let train_max = resid(&ds.train).iter().cloned().fold(0.0f32, f32::max);
+        let test_max = resid(&ds.test).iter().cloned().fold(0.0f32, f32::max);
+        assert!(train_max > 5.0, "train outliers missing: {train_max}");
+        assert!(test_max < 5.0, "test should be clean: {test_max}");
+    }
+
+    #[test]
+    fn bike_is_730_rows_with_8_features() {
+        let ds = bike_synthetic(3);
+        ds.train.validate().unwrap();
+        ds.test.validate().unwrap();
+        assert_eq!(ds.train.len() + ds.test.len(), 730);
+        assert_eq!(ds.train.feat_shape, vec![8]);
+    }
+
+    #[test]
+    fn bike_targets_nonnegative_and_seasonal() {
+        let ds = bike_synthetic(4);
+        let YStore::F32(ys) = &ds.train.y else { panic!() };
+        assert!(ys.iter().all(|&y| y >= 0.0));
+        assert!(stats::std(ys) > 0.3, "needs variance to be learnable");
+    }
+
+    #[test]
+    fn bike_has_storm_outliers() {
+        let ds = bike_synthetic(5);
+        let YStore::F32(ys) = &ds.train.y else { panic!() };
+        let m = stats::mean(ys);
+        let frac_low = ys.iter().filter(|&&y| y < 0.3 * m).count() as f64
+            / ys.len() as f64;
+        assert!(
+            frac_low > 0.01 && frac_low < 0.2,
+            "storm outlier fraction {frac_low}"
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! Deterministic index bookkeeping: epoch shuffles and stratified helpers.
+
+use crate::util::rng::Pcg64;
+
+/// A reshuffled-every-epoch view over `0..n`.
+#[derive(Clone, Debug)]
+pub struct EpochShuffler {
+    n: usize,
+    rng: Pcg64,
+}
+
+impl EpochShuffler {
+    pub fn new(n: usize, seed: u64) -> Self {
+        EpochShuffler {
+            n,
+            rng: Pcg64::new(seed ^ 0xe90c_51a7),
+        }
+    }
+
+    /// A fresh permutation for the next epoch.
+    pub fn next_epoch(&mut self) -> Vec<usize> {
+        self.rng.permutation(self.n)
+    }
+}
+
+/// Split `0..n` into `shards` contiguous chunks balanced within ±1.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(shards > 0);
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_shuffles_are_permutations_and_differ() {
+        let mut sh = EpochShuffler::new(50, 1);
+        let e1 = sh.next_epoch();
+        let e2 = sh.next_epoch();
+        let mut s1 = e1.clone();
+        s1.sort_unstable();
+        assert_eq!(s1, (0..50).collect::<Vec<_>>());
+        assert_ne!(e1, e2);
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mut a = EpochShuffler::new(20, 9);
+        let mut b = EpochShuffler::new(20, 9);
+        assert_eq!(a.next_epoch(), b.next_epoch());
+        assert_eq!(a.next_epoch(), b.next_epoch());
+    }
+
+    #[test]
+    fn shards_cover_exactly() {
+        for n in [0usize, 1, 7, 100] {
+            for s in [1usize, 2, 3, 7] {
+                let ranges = shard_ranges(n, s);
+                assert_eq!(ranges.len(), s);
+                let total: usize = ranges.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                // contiguous and balanced
+                let mut prev_end = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, prev_end);
+                    prev_end = r.end;
+                }
+                let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let min = lens.iter().min().unwrap();
+                let max = lens.iter().max().unwrap();
+                assert!(max - min <= 1);
+            }
+        }
+    }
+}

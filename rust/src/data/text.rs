@@ -1,0 +1,187 @@
+//! Synthetic language-modeling corpus (WikiText-2 substitute, DESIGN.md §3).
+//!
+//! An order-2 Markov source over a 256-token vocabulary: for every context
+//! pair `(a, b)` a seeded hash derives a sparse next-token distribution
+//! (8 candidates with geometric weights, candidates biased toward frequent
+//! tokens by a Zipfian draw). This yields learnable low-entropy structure
+//! with a Zipf-like unigram law; a small fraction of *shuffled* windows act
+//! as high-loss outliers, mirroring noisy paragraphs in web text.
+
+use super::{Dataset, SplitDataset, Task, XStore, YStore};
+use crate::util::rng::{zipf_harmonic, Pcg64};
+
+const VOCAB: usize = 256;
+const SEQ: usize = 32;
+const CANDIDATES: usize = 8;
+
+fn mix(seed: u64, a: u64, b: u64) -> u64 {
+    // splitmix-style avalanche over (seed, context)
+    let mut z = seed ^ a.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ b.rotate_left(32);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The deterministic transition model (shared by train and test).
+struct Markov {
+    seed: u64,
+    harmonic: Vec<f64>,
+}
+
+impl Markov {
+    fn new(seed: u64) -> Self {
+        Markov {
+            seed,
+            harmonic: zipf_harmonic(VOCAB, 1.05),
+        }
+    }
+
+    /// Sample the next token given context `(a, b)`.
+    fn next(&self, a: i32, b: i32, rng: &mut Pcg64) -> i32 {
+        let h = mix(self.seed, a as u64, b as u64);
+        // geometric choice among CANDIDATES hash-derived successors
+        let mut pick = 0usize;
+        for i in 0..CANDIDATES - 1 {
+            if rng.next_f64() < 0.5 {
+                pick = i;
+                break;
+            }
+            pick = i + 1;
+        }
+        // each candidate is a Zipf-biased token derived from the context hash
+        let mut sub = Pcg64::new(h ^ (pick as u64).wrapping_mul(0xabcd_ef01));
+        sub.zipf(VOCAB, 1.05, &self.harmonic) as i32
+    }
+}
+
+/// Generate the corpus: `scale` scales the paper's 2M/245k token counts.
+pub fn markov_corpus(seed: u64, scale: f64) -> SplitDataset {
+    let train_tokens = ((2_088_628.0 * scale) as usize).max(SEQ * 40 + 1);
+    let test_tokens = ((245_569.0 * scale) as usize).max(SEQ * 10 + 1);
+    let model = Markov::new(seed ^ 0xfeed_beef);
+    let mut rng = Pcg64::new(seed ^ 0x1234_5678_9abc_def0);
+
+    let gen_tokens = |n: usize, rng: &mut Pcg64| {
+        let mut toks: Vec<i32> = Vec::with_capacity(n);
+        toks.push(rng.next_below(VOCAB as u64) as i32);
+        toks.push(rng.next_below(VOCAB as u64) as i32);
+        while toks.len() < n {
+            let a = toks[toks.len() - 2];
+            let b = toks[toks.len() - 1];
+            toks.push(model.next(a, b, rng));
+        }
+        toks
+    };
+
+    let train_toks = gen_tokens(train_tokens, &mut rng);
+    let test_toks = gen_tokens(test_tokens, &mut rng);
+
+    let windows = |toks: &[i32], with_outliers: bool, rng: &mut Pcg64| {
+        let n = (toks.len() - 1) / SEQ;
+        let mut xs = vec![0i32; n * SEQ];
+        let mut ys = vec![0i32; n * SEQ];
+        for i in 0..n {
+            let start = i * SEQ;
+            let x = &mut xs[i * SEQ..(i + 1) * SEQ];
+            let y = &mut ys[i * SEQ..(i + 1) * SEQ];
+            x.copy_from_slice(&toks[start..start + SEQ]);
+            y.copy_from_slice(&toks[start + 1..start + SEQ + 1]);
+            if with_outliers && rng.next_f64() < 0.03 {
+                // shuffled window: unpredictable, persistent high loss
+                rng.shuffle(x);
+                for j in 0..SEQ - 1 {
+                    y[j] = x[j + 1];
+                }
+                y[SEQ - 1] = rng.next_below(VOCAB as u64) as i32;
+            }
+        }
+        (xs, ys, n)
+    };
+
+    let (train_x, train_y, _) = windows(&train_toks, true, &mut rng);
+    let (test_x, test_y, _) = windows(&test_toks, false, &mut rng);
+
+    let make = |x: Vec<i32>, y: Vec<i32>, suffix: &str| Dataset {
+        name: format!("wikitext-{suffix}"),
+        task: Task::Lm {
+            vocab: VOCAB,
+            seq: SEQ,
+        },
+        feat_shape: vec![SEQ],
+        x: XStore::I32 {
+            data: x,
+            stride: SEQ,
+        },
+        y: YStore::Seq {
+            data: y,
+            stride: SEQ,
+        },
+    };
+    SplitDataset {
+        train: make(train_x, train_y, "train"),
+        test: make(test_x, test_y, "test"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_shapes_and_validity() {
+        let ds = markov_corpus(1, 0.01);
+        ds.train.validate().unwrap();
+        ds.test.validate().unwrap();
+        assert!(ds.train.len() >= 40);
+        assert_eq!(ds.train.feat_shape, vec![SEQ]);
+    }
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let ds = markov_corpus(2, 0.01);
+        let (XStore::I32 { data: xs, .. }, YStore::Seq { data: ys, .. }) =
+            (&ds.test.x, &ds.test.y)
+        else {
+            panic!()
+        };
+        // test split has no shuffled outliers, so y[j] == x[j+1] within a window
+        for i in 0..ds.test.len() {
+            for j in 0..SEQ - 1 {
+                assert_eq!(ys[i * SEQ + j], xs[i * SEQ + j + 1], "window {i} pos {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn markov_structure_is_predictable() {
+        // given a context pair, the modal next token should dominate: check
+        // the model is far from uniform (entropy structure to learn)
+        let model = Markov::new(99);
+        let mut rng = Pcg64::new(7);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..500 {
+            *counts.entry(model.next(10, 20, &mut rng)).or_insert(0) += 1;
+        }
+        let max = counts.values().max().copied().unwrap();
+        assert!(max > 150, "modal next-token count {max}/500 too uniform");
+        assert!(counts.len() <= CANDIDATES, "more candidates than expected");
+    }
+
+    #[test]
+    fn unigram_is_zipf_skewed() {
+        let ds = markov_corpus(3, 0.02);
+        let XStore::I32 { data: xs, .. } = &ds.train.x else { panic!() };
+        let mut counts = vec![0usize; VOCAB];
+        for &t in xs {
+            counts[t as usize] += 1;
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(
+            sorted[0] > 4 * sorted[VOCAB / 2].max(1),
+            "head {} vs median {} not skewed",
+            sorted[0],
+            sorted[VOCAB / 2]
+        );
+    }
+}

@@ -1,0 +1,553 @@
+//! The experiment registry: one runnable entry per paper figure/table.
+//!
+//! Every experiment is a sweep of [`crate::train::run`] jobs followed by a
+//! report emission matching what the paper plots. Sizes default to CPU-scale
+//! (override with `--epochs/--data-scale`; `--quick` shrinks further for
+//! smoke runs and benches).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::config::RunConfig;
+use crate::harness::report;
+use crate::metrics::RunResult;
+use crate::runtime::Engine;
+use crate::train;
+
+/// A registry entry.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub description: &'static str,
+}
+
+/// Every table and figure in the paper's evaluation section.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "fig1", paper_ref: "Figure 1", description: "SVHN test accuracy vs sampling rate (9 selectors)" },
+        Experiment { id: "fig2", paper_ref: "Figure 2", description: "CIFAR10 test accuracy vs sampling rate" },
+        Experiment { id: "fig3", paper_ref: "Figure 3", description: "CIFAR10 training time vs sampling rate" },
+        Experiment { id: "fig4", paper_ref: "Figure 4", description: "CIFAR100 test accuracy vs sampling rate" },
+        Experiment { id: "fig5", paper_ref: "Figure 5", description: "Simple-regression test loss vs sampling rate" },
+        Experiment { id: "fig6", paper_ref: "Figure 6", description: "Bike-regression test loss vs sampling rate" },
+        Experiment { id: "fig7", paper_ref: "Figure 7", description: "β ablation on SVHN/CIFAR10/CIFAR100 (γ=0.2)" },
+        Experiment { id: "fig8", paper_ref: "Figure 8", description: "AdaSelection weight evolution per dataset (γ=0.2)" },
+        Experiment { id: "fig9", paper_ref: "Figure 9", description: "Transformer (wikitext) test loss vs sampling rate" },
+        Experiment { id: "table3", paper_ref: "Table 3", description: "average ranking across γ, all datasets × methods" },
+        Experiment { id: "table4", paper_ref: "Table 4", description: "average metric across γ, all datasets × methods" },
+        Experiment { id: "ablate-cl", paper_ref: "§3.2 (extension)", description: "curriculum-reward on/off ablation" },
+        Experiment { id: "ablate-accumulate", paper_ref: "Alg 1/2 (extension)", description: "accumulate-until-full-batch vs immediate update" },
+        Experiment { id: "ablate-stale", paper_ref: "§5 (future work)", description: "stale-loss forward approximation: refresh window sweep" },
+        Experiment { id: "ablate-rule", paper_ref: "§3.2 (bandit view)", description: "weight-update rule: eq3 vs exp3 vs softmax" },
+        Experiment { id: "tables-from-aggregates", paper_ref: "Tables 3/4", description: "assemble tables 3+4 from aggregate_*.csv already in --out (no re-training)" },
+    ]
+}
+
+/// Sweep-level options from the CLI.
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    pub out_dir: PathBuf,
+    pub epochs: usize,
+    pub data_scale: f64,
+    pub lr: f32,
+    pub seed: u64,
+    pub quick: bool,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            out_dir: PathBuf::from("results"),
+            epochs: 8,
+            data_scale: 0.02,
+            lr: 0.05,
+            seed: 42,
+            quick: false,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+        }
+    }
+}
+
+impl SweepOptions {
+    fn effective(&self) -> (usize, f64) {
+        if self.quick {
+            (1, (self.data_scale * 0.3).max(0.002))
+        } else {
+            (self.epochs, self.data_scale)
+        }
+    }
+
+    fn base_config(&self, dataset: &str, selector: &str, gamma: f64) -> RunConfig {
+        let (epochs, data_scale) = self.effective();
+        let mut cfg = RunConfig::default();
+        cfg.dataset = dataset.into();
+        cfg.selector = selector.into();
+        cfg.gamma = gamma;
+        cfg.epochs = epochs;
+        cfg.data_scale = data_scale;
+        cfg.lr = self.lr;
+        cfg.seed = self.seed;
+        cfg.artifacts_dir = self.artifacts_dir.clone();
+        cfg
+    }
+}
+
+/// γ grid of the paper.
+pub const GAMMAS: [f64; 5] = [0.1, 0.2, 0.3, 0.4, 0.5];
+
+/// The baseline columns of Tables 3/4 (paper order, AdaSelection aside).
+pub fn standard_selectors(dataset: &str) -> Vec<&'static str> {
+    let mut v = vec![
+        "benchmark",
+        "uniform",
+        "big_loss",
+        "small_loss",
+        "adaboost",
+        "grad_norm",
+        "coreset1",
+        "coreset2",
+    ];
+    if dataset == "wikitext" {
+        // paper footnote 4: gradient norm is unavailable for the NLP task
+        v.retain(|s| *s != "grad_norm");
+    }
+    v
+}
+
+/// AdaSelection variants, mirroring the Table-3 caption ("best ranking over
+/// several choices … single choice, no CL setting, three candidates, two
+/// candidates"). (label, selector spec, cl_on).
+pub fn adaselection_variants() -> Vec<(&'static str, &'static str, bool)> {
+    vec![
+        ("ada3+cl", "adaselection:big_loss+small_loss+uniform", true),
+        ("ada3", "adaselection:big_loss+small_loss+uniform", false),
+        ("ada2", "adaselection:big_loss+small_loss", false),
+        ("ada4", "adaselection:big_loss+small_loss+uniform+coreset1", false),
+    ]
+}
+
+/// Run a full dataset sweep: all selectors × γ grid.
+pub fn dataset_sweep(
+    engine: &mut Engine,
+    dataset: &str,
+    opts: &SweepOptions,
+) -> anyhow::Result<Vec<RunResult>> {
+    let mut runs = Vec::new();
+    let gammas: &[f64] = if opts.quick { &[0.1, 0.3] } else { &GAMMAS };
+    for selector in standard_selectors(dataset) {
+        for &gamma in gammas {
+            let cfg = opts.base_config(dataset, selector, gamma);
+            log::info!("sweep job: {dataset} {selector} γ={gamma}");
+            let r = train::run_with(engine, cfg)?;
+            runs.push(r);
+            if selector == "benchmark" {
+                break; // benchmark is γ-independent; reuse the single run
+            }
+        }
+    }
+    // AdaSelection variants (Table-3 caption methodology)
+    let variants = adaselection_variants();
+    let variants: &[(&str, &str, bool)] =
+        if opts.quick { &variants[..1] } else { &variants[..] };
+    for (label, spec, cl_on) in variants {
+        for &gamma in gammas {
+            let mut cfg = opts.base_config(dataset, spec, gamma);
+            cfg.cl_on = *cl_on;
+            log::info!("sweep job: {dataset} {label} γ={gamma}");
+            let mut r = train::run_with(engine, cfg)?;
+            r.selector = label.to_string();
+            runs.push(r);
+        }
+    }
+    // replicate the benchmark row across the γ grid for ranking parity
+    if let Some(bench) = runs.iter().find(|r| r.selector == "benchmark").cloned() {
+        let mut extra = Vec::new();
+        for &gamma in gammas {
+            if (bench.gamma - gamma).abs() > 1e-9 {
+                let mut b = bench.clone();
+                b.gamma = gamma;
+                extra.push(b);
+            }
+        }
+        runs.extend(extra);
+    }
+    Ok(runs)
+}
+
+/// Accuracy/loss-vs-γ figure for one dataset (figs 1, 2, 4, 5, 6, 9).
+fn figure_metric_vs_gamma(
+    engine: &mut Engine,
+    id: &str,
+    dataset: &str,
+    opts: &SweepOptions,
+) -> anyhow::Result<()> {
+    let runs = dataset_sweep(engine, dataset, opts)?;
+    emit_figure(id, dataset, &runs, opts)
+}
+
+fn emit_figure(
+    id: &str,
+    dataset: &str,
+    runs: &[RunResult],
+    opts: &SweepOptions,
+) -> anyhow::Result<()> {
+    let accuracy = runs
+        .first()
+        .map(|r| r.headline_metric().1)
+        .unwrap_or(false);
+    let metric = report::figure_series(runs, |r| r.headline_metric().0);
+    metric.save(&opts.out_dir.join(format!("{id}_{dataset}_metric.csv")))?;
+    report::print_table(
+        &format!(
+            "{id}: {dataset} {} vs sampling rate",
+            if accuracy { "test accuracy" } else { "test loss" }
+        ),
+        &metric,
+    );
+    let time = report::figure_series(runs, |r| r.train_time_s());
+    time.save(&opts.out_dir.join(format!("{id}_{dataset}_time.csv")))?;
+    report::runs_table(runs).save(&opts.out_dir.join(format!("{id}_{dataset}_runs.csv")))?;
+    crate::metrics::persist::save_runs(
+        &opts.out_dir.join(format!("{id}_{dataset}_runs.json")),
+        runs,
+    )?;
+    report::emit_dataset_aggregate(&opts.out_dir, dataset, runs)?;
+    Ok(())
+}
+
+/// Fig 3: the training-time comparison (same sweep as fig2, time series).
+fn fig3(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+    let runs = dataset_sweep(engine, "cifar10", opts)?;
+    let time = report::figure_series(&runs, |r| r.train_time_s());
+    time.save(&opts.out_dir.join("fig3_cifar10_time.csv"))?;
+    report::print_table("fig3: CIFAR10 training time (s) vs sampling rate", &time);
+    // headline check: every subsampling method at γ≤0.5 must beat benchmark
+    if let Some(bench) = runs.iter().find(|r| r.selector == "benchmark") {
+        let bench_t = bench.train_time_s();
+        let mut t = crate::metrics::csv::CsvTable::new(vec!["selector", "gamma", "time_saving_%"]);
+        for r in runs.iter().filter(|r| r.selector != "benchmark") {
+            t.push(vec![
+                r.selector.clone(),
+                format!("{:.2}", r.gamma),
+                format!("{:.1}", 100.0 * (1.0 - r.train_time_s() / bench_t)),
+            ]);
+        }
+        t.save(&opts.out_dir.join("fig3_time_saving.csv"))?;
+        report::print_table("fig3: wall-clock saving vs benchmark", &t);
+    }
+    report::runs_table(&runs).save(&opts.out_dir.join("fig3_cifar10_runs.csv"))?;
+    Ok(())
+}
+
+/// Fig 7: β sensitivity of AdaSelection at γ = 0.2.
+fn fig7(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+    let betas = [-1.0f32, -0.5, 0.0, 0.5, 1.0];
+    let datasets: &[&str] = if opts.quick {
+        &["svhn"]
+    } else {
+        &["svhn", "cifar10", "cifar100"]
+    };
+    let mut table = crate::metrics::csv::CsvTable::new(vec!["dataset", "beta", "test_acc"]);
+    for ds in datasets {
+        for &beta in &betas {
+            let mut cfg =
+                opts.base_config(ds, "adaselection:big_loss+small_loss+uniform", 0.2);
+            cfg.beta = beta;
+            let r = train::run_with(engine, cfg)?;
+            table.push(vec![
+                ds.to_string(),
+                format!("{beta:.1}"),
+                format!("{:.4}", r.final_test_acc()),
+            ]);
+        }
+    }
+    table.save(&opts.out_dir.join("fig7_beta_ablation.csv"))?;
+    report::print_table("fig7: β ablation (γ=0.2)", &table);
+    Ok(())
+}
+
+/// Fig 8: weight evolution traces at γ = 0.2.
+fn fig8(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+    let datasets: &[&str] = if opts.quick {
+        &["simple"]
+    } else {
+        &["svhn", "cifar10", "cifar100", "simple", "bike"]
+    };
+    for ds in datasets {
+        let cfg = opts.base_config(ds, "adaselection:big_loss+small_loss+uniform", 0.2);
+        let r = train::run_with(engine, cfg)?;
+        let t = report::weight_trace_table(&r);
+        t.save(&opts.out_dir.join(format!("fig8_weights_{ds}.csv")))?;
+        if let Some(last) = r.weight_trace.last() {
+            println!(
+                "fig8 {ds}: final weights {:?} over {} iterations",
+                last.iter().map(|w| format!("{w:.3}")).collect::<Vec<_>>(),
+                r.weight_trace.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Tables 3 & 4 over every dataset.
+fn tables(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+    let datasets: &[&str] = if opts.quick {
+        &["simple", "bike"]
+    } else {
+        &["cifar10", "cifar100", "svhn", "simple", "bike", "wikitext"]
+    };
+    let mut rank_table =
+        crate::metrics::csv::CsvTable::new(vec!["dataset", "selector", "avg_rank"]);
+    let mut metric_table =
+        crate::metrics::csv::CsvTable::new(vec!["dataset", "selector", "avg_metric", "metric"]);
+    let mut cache: BTreeMap<String, Vec<RunResult>> = BTreeMap::new();
+    for ds in datasets {
+        let runs = dataset_sweep(engine, ds, opts)?;
+        let aggs = report::emit_dataset_aggregate(&opts.out_dir, ds, &runs)?;
+        for a in &aggs {
+            rank_table.push(vec![
+                ds.to_string(),
+                a.selector.clone(),
+                format!("{:.2}", a.avg_rank),
+            ]);
+            metric_table.push(vec![
+                ds.to_string(),
+                a.selector.clone(),
+                format!("{:.4}", a.avg_metric),
+                if a.higher_is_better { "accuracy" } else { "loss" }.to_string(),
+            ]);
+        }
+        cache.insert(ds.to_string(), runs);
+    }
+    rank_table.save(&opts.out_dir.join("table3_avg_rank.csv"))?;
+    metric_table.save(&opts.out_dir.join("table4_avg_metric.csv"))?;
+    report::print_table("table3: average ranking across γ", &rank_table);
+    report::print_table("table4: average metric across γ", &metric_table);
+    Ok(())
+}
+
+/// Extension ablation: CL reward on vs off (same pool, γ grid).
+fn ablate_cl(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+    let mut t = crate::metrics::csv::CsvTable::new(vec!["dataset", "cl", "gamma", "metric"]);
+    let gammas: &[f64] = if opts.quick { &[0.2] } else { &[0.1, 0.2, 0.3] };
+    for ds in ["cifar10", "simple"] {
+        for &gamma in gammas {
+            for cl in [true, false] {
+                let mut cfg =
+                    opts.base_config(ds, "adaselection:big_loss+small_loss+uniform", gamma);
+                cfg.cl_on = cl;
+                let r = train::run_with(engine, cfg)?;
+                t.push(vec![
+                    ds.to_string(),
+                    cl.to_string(),
+                    format!("{gamma:.1}"),
+                    format!("{:.4}", r.headline_metric().0),
+                ]);
+            }
+        }
+    }
+    t.save(&opts.out_dir.join("ablate_cl.csv"))?;
+    report::print_table("ablation: curriculum reward", &t);
+    Ok(())
+}
+
+/// Extension ablation: Alg-2 accumulate mode vs immediate updates.
+fn ablate_accumulate(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+    let mut t =
+        crate::metrics::csv::CsvTable::new(vec!["dataset", "mode", "gamma", "metric", "time_s"]);
+    let gammas: &[f64] = if opts.quick { &[0.2] } else { &[0.2, 0.4] };
+    for ds in ["cifar10", "simple"] {
+        for &gamma in gammas {
+            for acc in [false, true] {
+                let mut cfg = opts.base_config(ds, "big_loss", gamma);
+                cfg.accumulate = acc;
+                let r = train::run_with(engine, cfg)?;
+                t.push(vec![
+                    ds.to_string(),
+                    if acc { "accumulate" } else { "immediate" }.to_string(),
+                    format!("{gamma:.1}"),
+                    format!("{:.4}", r.headline_metric().0),
+                    format!("{:.2}", r.train_time_s()),
+                ]);
+            }
+        }
+    }
+    t.save(&opts.out_dir.join("ablate_accumulate.csv"))?;
+    report::print_table("ablation: accumulate vs immediate", &t);
+    Ok(())
+}
+
+/// Extension ablation (paper §5): stale-loss forward approximation.
+fn ablate_stale(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+    let mut t = crate::metrics::csv::CsvTable::new(vec![
+        "dataset", "refresh", "metric", "time_s", "fwd_batches",
+    ]);
+    let windows: &[u32] = if opts.quick { &[0, 2] } else { &[0, 1, 2, 4] };
+    for ds in ["cifar10", "simple"] {
+        for &refresh in windows {
+            let mut cfg = opts.base_config(ds, "adaselection:big_loss+small_loss+uniform", 0.2);
+            cfg.stale_refresh = refresh;
+            let r = train::run_with(engine, cfg)?;
+            t.push(vec![
+                ds.to_string(),
+                refresh.to_string(),
+                format!("{:.4}", r.headline_metric().0),
+                format!("{:.2}", r.train_time_s()),
+                r.phases.count("forward").to_string(),
+            ]);
+        }
+    }
+    t.save(&opts.out_dir.join("ablate_stale.csv"))?;
+    report::print_table("ablation: stale-loss forward approximation", &t);
+    Ok(())
+}
+
+/// Extension ablation (§3.2 bandit framing): weight-update rules.
+fn ablate_rule(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+    let mut t =
+        crate::metrics::csv::CsvTable::new(vec!["dataset", "rule", "gamma", "metric"]);
+    let gammas: &[f64] = if opts.quick { &[0.2] } else { &[0.1, 0.2, 0.3] };
+    for ds in ["svhn", "simple"] {
+        for &gamma in gammas {
+            for rule in ["eq3:0.5", "exp3:0.2", "softmax:0.25"] {
+                let mut cfg =
+                    opts.base_config(ds, "adaselection:big_loss+small_loss+uniform", gamma);
+                cfg.rule = rule.into();
+                let r = train::run_with(engine, cfg)?;
+                t.push(vec![
+                    ds.to_string(),
+                    rule.to_string(),
+                    format!("{gamma:.1}"),
+                    format!("{:.4}", r.headline_metric().0),
+                ]);
+            }
+        }
+    }
+    t.save(&opts.out_dir.join("ablate_rule.csv"))?;
+    report::print_table("ablation: bandit weight-update rules", &t);
+    Ok(())
+}
+
+/// Assemble Tables 3/4 from `aggregate_{dataset}.csv` files already in the
+/// output directory (produced by the per-figure sweeps) without re-running
+/// any training.
+fn tables_from_aggregates(opts: &SweepOptions) -> anyhow::Result<()> {
+    let mut rank_table =
+        crate::metrics::csv::CsvTable::new(vec!["dataset", "selector", "avg_rank"]);
+    let mut metric_table =
+        crate::metrics::csv::CsvTable::new(vec!["dataset", "selector", "avg_metric", "metric"]);
+    let mut found = 0;
+    for ds in crate::data::ALL_DATASETS {
+        let path = opts.out_dir.join(format!("aggregate_{ds}.csv"));
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            log::warn!("missing {path:?} — run the {ds} figure sweep first");
+            continue;
+        };
+        found += 1;
+        for line in text.lines().skip(1) {
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() != 5 {
+                continue;
+            }
+            rank_table.push(vec![cols[0].to_string(), cols[1].to_string(), cols[2].to_string()]);
+            metric_table.push(vec![
+                cols[0].to_string(),
+                cols[1].to_string(),
+                cols[3].to_string(),
+                cols[4].to_string(),
+            ]);
+        }
+    }
+    anyhow::ensure!(found > 0, "no aggregate_*.csv files in {:?}", opts.out_dir);
+    rank_table.save(&opts.out_dir.join("table3_avg_rank.csv"))?;
+    metric_table.save(&opts.out_dir.join("table4_avg_metric.csv"))?;
+    report::print_table("table3: average ranking across γ (from saved sweeps)", &rank_table);
+    report::print_table("table4: average metric across γ (from saved sweeps)", &metric_table);
+    Ok(())
+}
+
+/// Entry point used by the CLI `sweep` command.
+pub fn run_experiment(id: &str, opts: &SweepOptions) -> anyhow::Result<()> {
+    let mut engine = Engine::new(&opts.artifacts_dir)?;
+    run_experiment_with(&mut engine, id, opts)
+}
+
+/// Same, on a shared engine (compiled executables reused across sweeps).
+pub fn run_experiment_with(
+    engine: &mut Engine,
+    id: &str,
+    opts: &SweepOptions,
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    match id {
+        "fig1" => figure_metric_vs_gamma(engine, "fig1", "svhn", opts),
+        "fig2" => figure_metric_vs_gamma(engine, "fig2", "cifar10", opts),
+        "fig3" => fig3(engine, opts),
+        "fig4" => figure_metric_vs_gamma(engine, "fig4", "cifar100", opts),
+        "fig5" => figure_metric_vs_gamma(engine, "fig5", "simple", opts),
+        "fig6" => figure_metric_vs_gamma(engine, "fig6", "bike", opts),
+        "fig7" => fig7(engine, opts),
+        "fig8" => fig8(engine, opts),
+        "fig9" => figure_metric_vs_gamma(engine, "fig9", "wikitext", opts),
+        "table3" | "table4" => tables(engine, opts),
+        "ablate-cl" => ablate_cl(engine, opts),
+        "ablate-accumulate" => ablate_accumulate(engine, opts),
+        "ablate-stale" => ablate_stale(engine, opts),
+        "ablate-rule" => ablate_rule(engine, opts),
+        "tables-from-aggregates" => tables_from_aggregates(opts),
+        "all" => {
+            for e in registry() {
+                // table4 shares tables() with table3; tables-from-aggregates
+                // is redundant right after a fresh tables() run
+                if e.id == "table4" || e.id == "tables-from-aggregates" {
+                    continue;
+                }
+                run_experiment_with(engine, e.id, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (see `adaselection list-experiments`)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_table_and_figure() {
+        let ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
+        for want in [
+            "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
+            "table3", "table4",
+        ] {
+            assert!(ids.contains(&want), "{want} missing from registry");
+        }
+    }
+
+    #[test]
+    fn wikitext_drops_grad_norm() {
+        assert!(!standard_selectors("wikitext").contains(&"grad_norm"));
+        assert!(standard_selectors("cifar10").contains(&"grad_norm"));
+    }
+
+    #[test]
+    fn quick_mode_shrinks() {
+        let opts = SweepOptions {
+            quick: true,
+            ..SweepOptions::default()
+        };
+        let (epochs, scale) = opts.effective();
+        assert_eq!(epochs, 1);
+        assert!(scale < opts.data_scale);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let opts = SweepOptions::default();
+        assert!(run_experiment("fig99", &opts).is_err());
+    }
+}

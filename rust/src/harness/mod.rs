@@ -1,0 +1,8 @@
+//! Experiment harness: one entry per paper figure/table (DESIGN.md §6),
+//! a sweep driver that runs the underlying training jobs, and report
+//! writers that emit the same rows/series the paper plots.
+
+pub mod experiments;
+pub mod report;
+
+pub use experiments::{registry, run_experiment, run_experiment_with, SweepOptions};

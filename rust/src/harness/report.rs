@@ -1,0 +1,182 @@
+//! Report writers: per-run CSV dumps, figure series, table printers.
+
+use std::path::Path;
+
+use crate::metrics::csv::{fmt_f, CsvTable};
+use crate::metrics::ranking::{aggregate_dataset, MethodAggregate};
+use crate::metrics::RunResult;
+
+/// All raw runs, one row each (the provenance file every experiment emits).
+pub fn runs_table(runs: &[RunResult]) -> CsvTable {
+    let mut t = CsvTable::new(vec![
+        "dataset", "selector", "gamma", "beta", "seed", "epochs", "iterations",
+        "test_acc", "test_loss", "train_time_s",
+    ]);
+    for r in runs {
+        t.push(vec![
+            r.dataset.clone(),
+            r.selector.clone(),
+            format!("{:.2}", r.gamma),
+            format!("{:.2}", r.beta),
+            r.seed.to_string(),
+            r.epochs.len().to_string(),
+            r.iterations.to_string(),
+            fmt_f(r.final_test_acc() as f64),
+            fmt_f(r.final_test_loss() as f64),
+            format!("{:.3}", r.train_time_s()),
+        ]);
+    }
+    t
+}
+
+/// Figure-style series: metric vs γ, one column per selector.
+pub fn figure_series(runs: &[RunResult], value: impl Fn(&RunResult) -> f64) -> CsvTable {
+    let mut gammas: Vec<String> = Vec::new();
+    let mut selectors: Vec<String> = Vec::new();
+    for r in runs {
+        let g = format!("{:.2}", r.gamma);
+        if !gammas.contains(&g) {
+            gammas.push(g);
+        }
+        if !selectors.contains(&r.selector) {
+            selectors.push(r.selector.clone());
+        }
+    }
+    gammas.sort();
+    let mut header = vec!["gamma".to_string()];
+    header.extend(selectors.iter().cloned());
+    let mut t = CsvTable::new(header);
+    for g in &gammas {
+        let mut row = vec![g.clone()];
+        for s in &selectors {
+            let v = runs
+                .iter()
+                .find(|r| format!("{:.2}", r.gamma) == *g && &r.selector == s)
+                .map(&value);
+            row.push(v.map(fmt_f).unwrap_or_default());
+        }
+        t.push(row);
+    }
+    t
+}
+
+/// AdaSelection weight-evolution trace (Fig 8): iteration, w per candidate.
+pub fn weight_trace_table(run: &RunResult) -> CsvTable {
+    let mut header = vec!["iteration".to_string()];
+    header.extend(run.weight_names.iter().cloned());
+    let mut t = CsvTable::new(header);
+    for (i, w) in run.weight_trace.iter().enumerate() {
+        let mut row = vec![i.to_string()];
+        row.extend(w.iter().map(|&x| format!("{x:.5}")));
+        t.push(row);
+    }
+    t
+}
+
+/// Table-3/4 style table for one dataset.
+pub fn aggregate_table(dataset: &str, aggs: &[MethodAggregate]) -> CsvTable {
+    let mut t = CsvTable::new(vec!["dataset", "selector", "avg_rank", "avg_metric", "metric"]);
+    for a in aggs {
+        t.push(vec![
+            dataset.to_string(),
+            a.selector.clone(),
+            format!("{:.2}", a.avg_rank),
+            fmt_f(a.avg_metric),
+            if a.higher_is_better { "accuracy" } else { "loss" }.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Print a CSV table as an aligned text table to stdout.
+pub fn print_table(title: &str, t: &CsvTable) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = t.header.iter().map(|h| h.len()).collect();
+    for row in &t.rows {
+        for (i, c) in row.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let cols: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+            .collect();
+        println!("  {}", cols.join("  "));
+    };
+    line(&t.header);
+    for row in &t.rows {
+        line(row);
+    }
+}
+
+/// Save + print one dataset aggregate; returns the aggregates.
+pub fn emit_dataset_aggregate(
+    out_dir: &Path,
+    dataset: &str,
+    runs: &[RunResult],
+) -> anyhow::Result<Vec<MethodAggregate>> {
+    let mut aggs = aggregate_dataset(runs);
+    crate::metrics::ranking::collapse_ada_best(&mut aggs);
+    let t = aggregate_table(dataset, &aggs);
+    t.save(&out_dir.join(format!("aggregate_{dataset}.csv")))?;
+    print_table(&format!("{dataset}: avg rank / avg metric across γ"), &t);
+    Ok(aggs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EpochStats;
+    use crate::util::timer::PhaseTimer;
+
+    fn run(sel: &str, gamma: f64, acc: f32, time: f64) -> RunResult {
+        RunResult {
+            dataset: "d".into(),
+            selector: sel.into(),
+            gamma,
+            beta: 0.5,
+            seed: 1,
+            epochs: vec![EpochStats {
+                epoch: 0,
+                train_loss: 1.0,
+                test_loss: 0.3,
+                test_acc: acc,
+                train_time_s: time,
+            }],
+            weight_trace: vec![vec![1.0, 1.0]],
+            weight_names: vec!["big_loss".into(), "uniform".into()],
+            phases: PhaseTimer::default(),
+            iterations: 5,
+        }
+    }
+
+    #[test]
+    fn figure_series_pivots() {
+        let runs = vec![
+            run("a", 0.1, 0.5, 1.0),
+            run("b", 0.1, 0.6, 1.0),
+            run("a", 0.2, 0.7, 1.0),
+        ];
+        let t = figure_series(&runs, |r| r.final_test_acc() as f64);
+        assert_eq!(t.header, vec!["gamma", "a", "b"]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][1], "0.5000");
+        assert_eq!(t.rows[1][2], ""); // b missing at γ=0.2
+    }
+
+    #[test]
+    fn weight_trace_shapes() {
+        let t = weight_trace_table(&run("ada", 0.2, 0.5, 1.0));
+        assert_eq!(t.header, vec!["iteration", "big_loss", "uniform"]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn runs_table_has_row_per_run() {
+        let t = runs_table(&[run("a", 0.1, 0.5, 2.0), run("b", 0.2, 0.6, 3.0)]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[1][2], "0.20");
+    }
+}

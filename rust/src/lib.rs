@@ -1,0 +1,28 @@
+//! # AdaSelection
+//!
+//! A rust + JAX/Pallas reproduction of *"AdaSelection: Accelerating Deep
+//! Learning Training through Data Subsampling"* (2023).
+//!
+//! Architecture (three layers, python never on the request path):
+//!   * **L3 (this crate)** — streaming data pipeline, the AdaSelection
+//!     policy + seven baseline subsampling methods, trainer, metrics, and
+//!     the experiment harness reproducing every paper table/figure.
+//!   * **L2 (python/compile)** — JAX model graphs (MLP / mini-ResNet /
+//!     Transformer) lowered once to HLO text by `make artifacts`.
+//!   * **L1 (python/compile/kernels)** — Pallas kernels for per-sample
+//!     losses, grad-norm proxies and the fused AdaSelection scorer, baked
+//!     into the same HLO modules.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
+
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod harness;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod selection;
+pub mod testutil;
+pub mod train;
+pub mod util;

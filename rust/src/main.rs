@@ -1,0 +1,169 @@
+//! `adaselection` binary: the L3 leader entrypoint.
+//!
+//! See `adaselection help` (cli::USAGE) for the command surface.
+
+use std::path::PathBuf;
+
+use adaselection::cli::{Args, USAGE};
+use adaselection::config::RunConfig;
+use adaselection::harness::{registry, run_experiment, SweepOptions};
+use adaselection::runtime::{default_artifacts_dir, Manifest};
+use adaselection::util::logging;
+use adaselection::{data, harness, train};
+
+fn main() {
+    logging::init();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.command.as_str() {
+        "train" => cmd_train(args),
+        "sweep" => cmd_sweep(args),
+        "list-experiments" => {
+            println!("{:<20} {:<12} description", "id", "paper");
+            for e in registry() {
+                println!("{:<20} {:<12} {}", e.id, e.paper_ref, e.description);
+            }
+            Ok(())
+        }
+        "inspect-artifacts" => cmd_inspect(args),
+        "gen-data" => cmd_gen_data(args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    for (k, v) in &args.flags {
+        if k == "config" || k == "out" {
+            continue;
+        }
+        cfg.apply_override(k, v)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    println!("config: {}", cfg.to_json());
+    let result = train::run(cfg)?;
+    println!(
+        "\nresult: selector={} dataset={} γ={:.2}",
+        result.selector, result.dataset, result.gamma
+    );
+    for e in &result.epochs {
+        println!(
+            "  epoch {:>2}: train_loss={:.4} test_loss={:.4} test_acc={} time={:.2}s",
+            e.epoch,
+            e.train_loss,
+            e.test_loss,
+            if e.test_acc.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{:.4}", e.test_acc)
+            },
+            e.train_time_s
+        );
+    }
+    println!("  phases: {}", result.phases.summary());
+    if let Some(out) = args.flag("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        harness::report::runs_table(std::slice::from_ref(&result))
+            .save(&dir.join("run.csv"))?;
+        if !result.weight_trace.is_empty() {
+            harness::report::weight_trace_table(&result).save(&dir.join("weights.csv"))?;
+        }
+        println!("wrote {out}/run.csv");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let exp = args.flag_or("exp", "fig1");
+    let mut opts = SweepOptions {
+        out_dir: PathBuf::from(args.flag_or("out", "results")),
+        quick: args.has("quick"),
+        ..SweepOptions::default()
+    };
+    if let Some(e) = args.flag("epochs") {
+        opts.epochs = e.parse()?;
+    }
+    if let Some(s) = args.flag("data-scale") {
+        opts.data_scale = s.parse()?;
+    }
+    if let Some(s) = args.flag("lr") {
+        opts.lr = s.parse()?;
+    }
+    if let Some(s) = args.flag("seed") {
+        opts.seed = s.parse()?;
+    }
+    if let Some(a) = args.flag("artifacts") {
+        opts.artifacts_dir = PathBuf::from(a);
+    }
+    run_experiment(&exp, &opts)
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .flag("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let m = Manifest::load(&dir)?;
+    println!("artifacts dir: {dir:?}");
+    println!("method order: {:?}", m.method_order);
+    println!("momentum: {}  γ grid: {:?}", m.momentum, m.gamma_grid);
+    for (name, fam) in &m.families {
+        let n_params: usize = fam
+            .params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        println!(
+            "family {name:<14} task={:?} B={} params={} tensors={} K grid={:?}",
+            fam.task,
+            fam.batch,
+            n_params,
+            fam.params.len(),
+            fam.train_sizes
+        );
+    }
+    println!("{} artifacts total", m.artifacts.len());
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+    let name = args.flag_or("dataset", "cifar10");
+    let scale: f64 = args.flag_or("data-scale", "0.02").parse()?;
+    let seed: u64 = args.flag_or("seed", "42").parse()?;
+    let split = data::build(&name, seed, scale)?;
+    split.train.validate()?;
+    split.test.validate()?;
+    println!(
+        "dataset {name}: train={} test={} feat_shape={:?} task={:?}",
+        split.train.len(),
+        split.test.len(),
+        split.train.feat_shape,
+        split.train.task
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Tiny CSV writer (quoting-aware) used for all report tables and series.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// An in-memory CSV table.
+#[derive(Clone, Debug, Default)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        CsvTable {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.header.len(), "csv row arity");
+        self.rows.push(row);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for r in &self.rows {
+            write_row(&mut out, r);
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+}
+
+fn write_row(out: &mut String, row: &[String]) {
+    for (i, cell) in row.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            let escaped = cell.replace('"', "\"\"");
+            let _ = write!(out, "\"{escaped}\"");
+        } else {
+            out.push_str(cell);
+        }
+    }
+    out.push('\n');
+}
+
+/// Format a float for tables: fixed 4 decimals, NaN as empty cell.
+pub fn fmt_f(v: f64) -> String {
+    if v.is_nan() {
+        String::new()
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.push(vec!["1", "plain"]);
+        t.push(vec!["2", "has,comma"]);
+        t.push(vec!["3", "has\"quote"]);
+        let s = t.to_string();
+        assert_eq!(
+            s,
+            "a,b\n1,plain\n2,\"has,comma\"\n3,\"has\"\"quote\"\n"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.push(vec!["only-one"]);
+    }
+
+    #[test]
+    fn fmt_f_handles_nan() {
+        assert_eq!(fmt_f(1.23456), "1.2346");
+        assert_eq!(fmt_f(f64::NAN), "");
+    }
+
+    #[test]
+    fn save_creates_dirs() {
+        let dir = std::env::temp_dir().join("ada_csv_test/nested");
+        let path = dir.join("t.csv");
+        let _ = std::fs::remove_file(&path);
+        let mut t = CsvTable::new(vec!["x"]);
+        t.push(vec!["1"]);
+        t.save(&path).unwrap();
+        assert!(path.exists());
+    }
+}

@@ -1,0 +1,106 @@
+//! Run metrics: per-iteration records, epoch summaries, CSV emission, and
+//! the paper's Table-3 (average rank) / Table-4 (average metric) math.
+
+pub mod csv;
+pub mod persist;
+pub mod ranking;
+
+use crate::util::timer::PhaseTimer;
+
+/// Per-epoch evaluation snapshot.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub test_loss: f32,
+    /// classification / LM token accuracy; NaN for regression
+    pub test_acc: f32,
+    /// cumulative *training* wall-clock (excludes eval), seconds
+    pub train_time_s: f64,
+}
+
+/// Result of one full training run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub dataset: String,
+    pub selector: String,
+    pub gamma: f64,
+    pub beta: f32,
+    pub seed: u64,
+    pub epochs: Vec<EpochStats>,
+    /// per-iteration AdaSelection weights (empty for other selectors)
+    pub weight_trace: Vec<Vec<f32>>,
+    pub weight_names: Vec<String>,
+    pub phases: PhaseTimer,
+    pub iterations: usize,
+}
+
+impl RunResult {
+    pub fn final_test_loss(&self) -> f32 {
+        self.epochs.last().map(|e| e.test_loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn final_test_acc(&self) -> f32 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(f32::NAN)
+    }
+
+    /// total training time (excludes eval), seconds
+    pub fn train_time_s(&self) -> f64 {
+        self.epochs.last().map(|e| e.train_time_s).unwrap_or(0.0)
+    }
+
+    /// The figure metric: accuracy for classification/LM-acc tasks if
+    /// available, else test loss. `(value, higher_is_better)`.
+    pub fn headline_metric(&self) -> (f64, bool) {
+        let acc = self.final_test_acc();
+        if acc.is_nan() {
+            (self.final_test_loss() as f64, false)
+        } else {
+            (acc as f64, true)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(acc: f32, loss: f32) -> RunResult {
+        RunResult {
+            dataset: "d".into(),
+            selector: "s".into(),
+            gamma: 0.2,
+            beta: 0.5,
+            seed: 0,
+            epochs: vec![EpochStats {
+                epoch: 0,
+                train_loss: 1.0,
+                test_loss: loss,
+                test_acc: acc,
+                train_time_s: 2.0,
+            }],
+            weight_trace: vec![],
+            weight_names: vec![],
+            phases: PhaseTimer::default(),
+            iterations: 10,
+        }
+    }
+
+    #[test]
+    fn headline_prefers_accuracy() {
+        let (v, hib) = run(0.8, 0.5).headline_metric();
+        assert!((v - 0.8).abs() < 1e-6);
+        assert!(hib);
+        let (v, hib) = run(f32::NAN, 0.5).headline_metric();
+        assert!((v - 0.5).abs() < 1e-6);
+        assert!(!hib);
+    }
+
+    #[test]
+    fn empty_epochs_are_nan() {
+        let mut r = run(0.1, 0.1);
+        r.epochs.clear();
+        assert!(r.final_test_loss().is_nan());
+        assert_eq!(r.train_time_s(), 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Run persistence: full `RunResult` ↔ JSON for provenance and offline
+//! re-aggregation (`table3`/`table4` can be recomputed from saved runs
+//! without re-training).
+
+use std::path::Path;
+
+use crate::metrics::{EpochStats, RunResult};
+use crate::util::json::Json;
+use crate::util::timer::PhaseTimer;
+
+/// Serialize a run (weights trace included).
+pub fn run_to_json(r: &RunResult) -> Json {
+    let epochs = Json::Arr(
+        r.epochs
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("epoch", Json::from(e.epoch)),
+                    ("train_loss", Json::from(e.train_loss as f64)),
+                    ("test_loss", Json::from(e.test_loss as f64)),
+                    (
+                        "test_acc",
+                        if e.test_acc.is_nan() {
+                            Json::Null
+                        } else {
+                            Json::from(e.test_acc as f64)
+                        },
+                    ),
+                    ("train_time_s", Json::from(e.train_time_s)),
+                ])
+            })
+            .collect(),
+    );
+    let trace = Json::Arr(
+        r.weight_trace
+            .iter()
+            .map(|w| Json::arr_f64(&w.iter().map(|&x| x as f64).collect::<Vec<_>>()))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("dataset", Json::from(r.dataset.as_str())),
+        ("selector", Json::from(r.selector.as_str())),
+        ("gamma", Json::from(r.gamma)),
+        ("beta", Json::from(r.beta as f64)),
+        ("seed", Json::from(r.seed as f64)),
+        ("iterations", Json::from(r.iterations)),
+        ("epochs", epochs),
+        ("weight_names", Json::arr_str(&r.weight_names)),
+        ("weight_trace", trace),
+    ])
+}
+
+/// Parse a run back (phase timers are not persisted — they are process-local).
+pub fn run_from_json(j: &Json) -> anyhow::Result<RunResult> {
+    let epochs = j
+        .at(&["epochs"])?
+        .as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(EpochStats {
+                epoch: e.at(&["epoch"])?.as_usize()?,
+                train_loss: e.at(&["train_loss"])?.as_f64()? as f32,
+                test_loss: e.at(&["test_loss"])?.as_f64()? as f32,
+                test_acc: match e.at(&["test_acc"])? {
+                    Json::Null => f32::NAN,
+                    v => v.as_f64()? as f32,
+                },
+                train_time_s: e.at(&["train_time_s"])?.as_f64()?,
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let weight_trace = j
+        .at(&["weight_trace"])?
+        .as_arr()?
+        .iter()
+        .map(|w| {
+            Ok(w.as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_f64()? as f32))
+                .collect::<anyhow::Result<Vec<f32>>>()?)
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(RunResult {
+        dataset: j.at(&["dataset"])?.as_str()?.to_string(),
+        selector: j.at(&["selector"])?.as_str()?.to_string(),
+        gamma: j.at(&["gamma"])?.as_f64()?,
+        beta: j.at(&["beta"])?.as_f64()? as f32,
+        seed: j.at(&["seed"])?.as_f64()? as u64,
+        iterations: j.at(&["iterations"])?.as_usize()?,
+        epochs,
+        weight_names: j
+            .at(&["weight_names"])?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<anyhow::Result<Vec<_>>>()?,
+        weight_trace,
+        phases: PhaseTimer::default(),
+    })
+}
+
+/// Save a batch of runs as a JSON array.
+pub fn save_runs(path: &Path, runs: &[RunResult]) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let arr = Json::Arr(runs.iter().map(run_to_json).collect());
+    std::fs::write(path, arr.to_string())?;
+    Ok(())
+}
+
+/// Load runs saved by [`save_runs`].
+pub fn load_runs(path: &Path) -> anyhow::Result<Vec<RunResult>> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    j.as_arr()?.iter().map(run_from_json).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunResult {
+        RunResult {
+            dataset: "svhn".into(),
+            selector: "big_loss".into(),
+            gamma: 0.3,
+            beta: -0.5,
+            seed: 11,
+            iterations: 42,
+            epochs: vec![
+                EpochStats {
+                    epoch: 0,
+                    train_loss: 2.0,
+                    test_loss: 1.5,
+                    test_acc: 0.6,
+                    train_time_s: 3.25,
+                },
+                EpochStats {
+                    epoch: 1,
+                    train_loss: 1.0,
+                    test_loss: 1.2,
+                    test_acc: f32::NAN,
+                    train_time_s: 6.5,
+                },
+            ],
+            weight_names: vec!["big_loss".into(), "uniform".into()],
+            weight_trace: vec![vec![1.0, 1.0], vec![1.5, 0.5]],
+            phases: PhaseTimer::default(),
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let r = sample();
+        let back = run_from_json(&run_to_json(&r)).unwrap();
+        assert_eq!(back.dataset, r.dataset);
+        assert_eq!(back.selector, r.selector);
+        assert_eq!(back.iterations, 42);
+        assert_eq!(back.epochs.len(), 2);
+        assert!((back.epochs[0].test_acc - 0.6).abs() < 1e-6);
+        assert!(back.epochs[1].test_acc.is_nan());
+        assert_eq!(back.weight_trace, r.weight_trace);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let path = std::env::temp_dir().join("ada_persist_test/runs.json");
+        let runs = vec![sample(), sample()];
+        save_runs(&path, &runs).unwrap();
+        let back = load_runs(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].seed, 11);
+    }
+}

@@ -1,0 +1,185 @@
+//! Table-3 / Table-4 math: average rank and average metric across sampling
+//! rates, per dataset × method — exactly how the paper aggregates.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::RunResult;
+use crate::util::stats::ranks;
+
+/// One (dataset, selector) aggregate across the γ grid.
+#[derive(Clone, Debug)]
+pub struct MethodAggregate {
+    pub selector: String,
+    /// average rank across sampling rates (1 = best, Table 3)
+    pub avg_rank: f64,
+    /// average headline metric across sampling rates (Table 4)
+    pub avg_metric: f64,
+    /// whether the metric is accuracy (higher better) or loss
+    pub higher_is_better: bool,
+}
+
+/// Aggregate a set of runs (one dataset, methods × γ grid) into Table-3/4
+/// rows. Runs are grouped by γ; ranks are computed within each γ (methods
+/// compared at the same rate) and then averaged — matching the caption of
+/// Table 3 ("average … under sampling rates 0.1…0.5").
+pub fn aggregate_dataset(runs: &[RunResult]) -> Vec<MethodAggregate> {
+    let mut by_gamma: BTreeMap<String, Vec<&RunResult>> = BTreeMap::new();
+    for r in runs {
+        by_gamma.entry(format!("{:.4}", r.gamma)).or_default().push(r);
+    }
+    // stable selector order: first-seen order in the input
+    let mut selectors: Vec<String> = Vec::new();
+    for r in runs {
+        if !selectors.contains(&r.selector) {
+            selectors.push(r.selector.clone());
+        }
+    }
+    let higher = runs
+        .first()
+        .map(|r| r.headline_metric().1)
+        .unwrap_or(false);
+
+    let mut rank_sums: BTreeMap<String, (f64, usize)> = BTreeMap::new();
+    let mut metric_sums: BTreeMap<String, (f64, usize)> = BTreeMap::new();
+    for group in by_gamma.values() {
+        // metric per selector present in this γ group
+        let present: Vec<&&RunResult> = group.iter().collect();
+        let values: Vec<f64> = present.iter().map(|r| r.headline_metric().0).collect();
+        let rs = ranks(&values, !higher);
+        for (r, rank) in present.iter().zip(rs.iter()) {
+            let e = rank_sums.entry(r.selector.clone()).or_insert((0.0, 0));
+            e.0 += rank;
+            e.1 += 1;
+            let m = metric_sums.entry(r.selector.clone()).or_insert((0.0, 0));
+            m.0 += r.headline_metric().0;
+            m.1 += 1;
+        }
+    }
+
+    selectors
+        .iter()
+        .filter_map(|s| {
+            let (rs, rn) = rank_sums.get(s)?;
+            let (ms, mn) = metric_sums.get(s)?;
+            Some(MethodAggregate {
+                selector: s.clone(),
+                avg_rank: rs / (*rn).max(1) as f64,
+                avg_metric: ms / (*mn).max(1) as f64,
+                higher_is_better: higher,
+            })
+        })
+        .collect()
+}
+
+/// The Table-3 caption methodology: collapse all `ada*` variant rows into
+/// one "adaselection(best)" row carrying the best average rank / metric.
+pub fn collapse_ada_best(aggs: &mut Vec<MethodAggregate>) {
+    let is_variant = |s: &str| {
+        matches!(s, "ada2" | "ada3" | "ada3+cl" | "ada4")
+            || s.starts_with("adaselection[")
+    };
+    let ada: Vec<MethodAggregate> = aggs
+        .iter()
+        .filter(|a| is_variant(&a.selector))
+        .cloned()
+        .collect();
+    if ada.is_empty() {
+        return;
+    }
+    let best = ada
+        .iter()
+        .min_by(|a, b| a.avg_rank.partial_cmp(&b.avg_rank).unwrap())
+        .unwrap()
+        .clone();
+    aggs.push(MethodAggregate {
+        selector: format!("adaselection(best={})", best.selector),
+        ..best
+    });
+}
+
+/// Best non-benchmark selector by average rank (the paper bolds this).
+pub fn best_selector(aggs: &[MethodAggregate]) -> Option<&MethodAggregate> {
+    aggs.iter()
+        .filter(|a| a.selector != "benchmark")
+        .min_by(|a, b| a.avg_rank.partial_cmp(&b.avg_rank).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EpochStats;
+    use crate::util::timer::PhaseTimer;
+
+    fn run(selector: &str, gamma: f64, acc: f32) -> RunResult {
+        RunResult {
+            dataset: "d".into(),
+            selector: selector.into(),
+            gamma,
+            beta: 0.5,
+            seed: 0,
+            epochs: vec![EpochStats {
+                epoch: 0,
+                train_loss: 1.0,
+                test_loss: 1.0 - acc,
+                test_acc: acc,
+                train_time_s: 1.0,
+            }],
+            weight_trace: vec![],
+            weight_names: vec![],
+            phases: PhaseTimer::default(),
+            iterations: 1,
+        }
+    }
+
+    #[test]
+    fn ranks_average_across_gammas() {
+        // method A beats B at γ=0.1, loses at γ=0.2 ⇒ both avg rank 1.5
+        let runs = vec![
+            run("A", 0.1, 0.9),
+            run("B", 0.1, 0.8),
+            run("A", 0.2, 0.7),
+            run("B", 0.2, 0.8),
+        ];
+        let aggs = aggregate_dataset(&runs);
+        assert_eq!(aggs.len(), 2);
+        assert!((aggs[0].avg_rank - 1.5).abs() < 1e-9);
+        assert!((aggs[1].avg_rank - 1.5).abs() < 1e-9);
+        assert!((aggs[0].avg_metric - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn consistent_winner_gets_rank_one() {
+        let runs = vec![
+            run("A", 0.1, 0.9),
+            run("B", 0.1, 0.5),
+            run("A", 0.2, 0.9),
+            run("B", 0.2, 0.5),
+        ];
+        let aggs = aggregate_dataset(&runs);
+        let a = aggs.iter().find(|x| x.selector == "A").unwrap();
+        assert_eq!(a.avg_rank, 1.0);
+    }
+
+    #[test]
+    fn loss_metric_ranks_lower_better() {
+        let mut r1 = run("A", 0.1, f32::NAN);
+        r1.epochs[0].test_loss = 0.2;
+        let mut r2 = run("B", 0.1, f32::NAN);
+        r2.epochs[0].test_loss = 0.9;
+        let aggs = aggregate_dataset(&[r1, r2]);
+        let a = aggs.iter().find(|x| x.selector == "A").unwrap();
+        assert_eq!(a.avg_rank, 1.0);
+        assert!(!a.higher_is_better);
+    }
+
+    #[test]
+    fn best_selector_skips_benchmark() {
+        let runs = vec![
+            run("benchmark", 0.1, 0.99),
+            run("A", 0.1, 0.9),
+            run("B", 0.1, 0.5),
+        ];
+        let aggs = aggregate_dataset(&runs);
+        assert_eq!(best_selector(&aggs).unwrap().selector, "A");
+    }
+}

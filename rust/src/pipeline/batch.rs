@@ -1,0 +1,192 @@
+//! Batch assembly: gather dataset rows into the flat, artifact-shaped
+//! buffers the PJRT executables consume.
+
+use crate::data::{Dataset, Task, XStore, YStore};
+
+/// One assembled minibatch. Exactly one of `x_f32`/`x_i32` is populated
+/// (matching the dataset), likewise for targets. When a batch is padded to
+/// the artifact batch size, `real < indices.len()` and the tail repeats
+/// row 0 — the eval mask / selection logic must ignore it.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub epoch: usize,
+    pub index_in_epoch: usize,
+    pub indices: Vec<usize>,
+    pub real: usize,
+    pub x_f32: Option<Vec<f32>>,
+    pub x_i32: Option<Vec<i32>>,
+    pub y_f32: Option<Vec<f32>>,
+    pub y_i32: Option<Vec<i32>>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// 1.0 for real rows, 0.0 for padding (the eval artifact's mask input).
+    pub fn mask(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.len()];
+        for v in m.iter_mut().take(self.real) {
+            *v = 1.0;
+        }
+        m
+    }
+
+    /// Re-gather a sub-batch of this batch (selection step): `rows` are
+    /// positions within this batch, output is a dense `rows.len()` batch.
+    pub fn gather_rows(&self, rows: &[usize]) -> Batch {
+        let take_f32 = |src: &Option<Vec<f32>>| {
+            src.as_ref().map(|data| {
+                let stride = data.len() / self.len();
+                let mut out = Vec::with_capacity(rows.len() * stride);
+                for &r in rows {
+                    out.extend_from_slice(&data[r * stride..(r + 1) * stride]);
+                }
+                out
+            })
+        };
+        let take_i32 = |src: &Option<Vec<i32>>| {
+            src.as_ref().map(|data| {
+                let stride = data.len() / self.len();
+                let mut out = Vec::with_capacity(rows.len() * stride);
+                for &r in rows {
+                    out.extend_from_slice(&data[r * stride..(r + 1) * stride]);
+                }
+                out
+            })
+        };
+        Batch {
+            epoch: self.epoch,
+            index_in_epoch: self.index_in_epoch,
+            indices: rows.iter().map(|&r| self.indices[r]).collect(),
+            real: rows.len(),
+            x_f32: take_f32(&self.x_f32),
+            x_i32: take_i32(&self.x_i32),
+            y_f32: take_f32(&self.y_f32),
+            y_i32: take_i32(&self.y_i32),
+        }
+    }
+}
+
+/// Gather `indices` (padded to `batch_size` by repeating index 0) from the
+/// dataset into flat buffers.
+pub fn gather(ds: &Dataset, indices: &[usize], batch_size: usize, epoch: usize, index_in_epoch: usize) -> Batch {
+    assert!(indices.len() <= batch_size);
+    let real = indices.len();
+    let mut padded: Vec<usize> = indices.to_vec();
+    padded.resize(batch_size, *indices.first().unwrap_or(&0));
+
+    let (x_f32, x_i32) = match &ds.x {
+        XStore::F32 { data, stride } => {
+            let mut out = Vec::with_capacity(batch_size * stride);
+            for &i in &padded {
+                out.extend_from_slice(&data[i * stride..(i + 1) * stride]);
+            }
+            (Some(out), None)
+        }
+        XStore::I32 { data, stride } => {
+            let mut out = Vec::with_capacity(batch_size * stride);
+            for &i in &padded {
+                out.extend_from_slice(&data[i * stride..(i + 1) * stride]);
+            }
+            (None, Some(out))
+        }
+    };
+    let (y_f32, y_i32) = match &ds.y {
+        YStore::F32(v) => (Some(padded.iter().map(|&i| v[i]).collect()), None),
+        YStore::I32(v) => (None, Some(padded.iter().map(|&i| v[i]).collect())),
+        YStore::Seq { data, stride } => {
+            let mut out = Vec::with_capacity(batch_size * stride);
+            for &i in &padded {
+                out.extend_from_slice(&data[i * stride..(i + 1) * stride]);
+            }
+            (None, Some(out))
+        }
+    };
+    debug_assert!(matches!(
+        (&ds.task, &x_f32, &x_i32),
+        (Task::Classification { .. }, Some(_), None)
+            | (Task::Regression, Some(_), None)
+            | (Task::Lm { .. }, None, Some(_))
+    ));
+    Batch {
+        epoch,
+        index_in_epoch,
+        indices: padded,
+        real,
+        x_f32,
+        x_i32,
+        y_f32,
+        y_i32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, Task, XStore, YStore};
+
+    fn toy_ds() -> Dataset {
+        Dataset {
+            name: "toy".into(),
+            task: Task::Regression,
+            feat_shape: vec![2],
+            x: XStore::F32 {
+                data: (0..20).map(|i| i as f32).collect(),
+                stride: 2,
+            },
+            y: YStore::F32((0..10).map(|i| 100.0 + i as f32).collect()),
+        }
+    }
+
+    #[test]
+    fn gather_orders_and_pads() {
+        let ds = toy_ds();
+        let b = gather(&ds, &[3, 1], 4, 0, 0);
+        assert_eq!(b.real, 2);
+        assert_eq!(b.indices, vec![3, 1, 3, 3]);
+        assert_eq!(
+            b.x_f32.as_ref().unwrap(),
+            &vec![6.0, 7.0, 2.0, 3.0, 6.0, 7.0, 6.0, 7.0]
+        );
+        assert_eq!(b.y_f32.as_ref().unwrap(), &vec![103.0, 101.0, 103.0, 103.0]);
+        assert_eq!(b.mask(), vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_rows_subsets() {
+        let ds = toy_ds();
+        let b = gather(&ds, &[0, 1, 2, 3], 4, 0, 0);
+        let sub = b.gather_rows(&[2, 0]);
+        assert_eq!(sub.real, 2);
+        assert_eq!(sub.indices, vec![2, 0]);
+        assert_eq!(sub.x_f32.as_ref().unwrap(), &vec![4.0, 5.0, 0.0, 1.0]);
+        assert_eq!(sub.y_f32.as_ref().unwrap(), &vec![102.0, 100.0]);
+    }
+
+    #[test]
+    fn lm_batches_use_i32() {
+        let ds = Dataset {
+            name: "lm".into(),
+            task: Task::Lm { vocab: 8, seq: 3 },
+            feat_shape: vec![3],
+            x: XStore::I32 {
+                data: (0..12).map(|i| i % 8).collect(),
+                stride: 3,
+            },
+            y: YStore::Seq {
+                data: (1..13).map(|i| i % 8).collect(),
+                stride: 3,
+            },
+        };
+        let b = gather(&ds, &[1, 3], 2, 0, 0);
+        assert!(b.x_f32.is_none());
+        assert_eq!(b.x_i32.as_ref().unwrap(), &vec![3, 4, 5, 1, 2, 3]);
+        assert_eq!(b.y_i32.as_ref().unwrap(), &vec![4, 5, 6, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,370 @@
+//! Streaming batch loader: the L3 data-pipeline hot path.
+//!
+//! Worker threads gather batches ahead of the trainer into a bounded
+//! *reorder window*; the consumer always receives batches in the exact
+//! deterministic order defined by the seeded per-epoch shuffle, regardless
+//! of worker count or scheduling. This gives:
+//!
+//!   * **prefetch** — gathering overlaps the trainer's XLA executions;
+//!   * **backpressure** — at most `capacity` batches are in flight, so a
+//!     slow trainer never causes unbounded memory growth;
+//!   * **dynamic rebalancing** — workers claim the next batch id from a
+//!     shared counter (work stealing), so one slow worker cannot stall the
+//!     stream while order is restored by the reorder window;
+//!   * **reproducibility** — batch sequence depends only on (seed, epochs,
+//!     batch size), never on thread timing.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::data::Dataset;
+use crate::data::splits::EpochShuffler;
+
+use super::batch::{gather, Batch};
+
+/// Loader configuration.
+#[derive(Clone, Debug)]
+pub struct LoaderConfig {
+    pub batch_size: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    /// worker threads; 0 = synchronous in-consumer gathering
+    pub workers: usize,
+    /// max batches buffered ahead of the consumer (backpressure bound)
+    pub capacity: usize,
+    /// drop the trailing partial batch (paper-style) or pad it
+    pub drop_last: bool,
+}
+
+impl Default for LoaderConfig {
+    fn default() -> Self {
+        LoaderConfig {
+            batch_size: 128,
+            epochs: 1,
+            seed: 0,
+            workers: 2,
+            capacity: 8,
+            drop_last: true,
+        }
+    }
+}
+
+/// The precomputed batch schedule: for determinism the full index sequence
+/// is derived up front from the seed.
+struct Schedule {
+    /// flattened (epoch, indices) per batch
+    batches: Vec<(usize, usize, Vec<usize>)>,
+    batch_size: usize,
+}
+
+fn build_schedule(n: usize, cfg: &LoaderConfig) -> Schedule {
+    let mut shuffler = EpochShuffler::new(n, cfg.seed);
+    let mut batches = Vec::new();
+    for epoch in 0..cfg.epochs {
+        let perm = shuffler.next_epoch();
+        let mut index_in_epoch = 0;
+        let mut start = 0;
+        while start < n {
+            let end = (start + cfg.batch_size).min(n);
+            if end - start < cfg.batch_size && cfg.drop_last {
+                break;
+            }
+            batches.push((epoch, index_in_epoch, perm[start..end].to_vec()));
+            index_in_epoch += 1;
+            start = end;
+        }
+    }
+    Schedule {
+        batches,
+        batch_size: cfg.batch_size,
+    }
+}
+
+struct Shared {
+    ready: Mutex<HashMap<usize, Batch>>,
+    cv: Condvar,
+    next_claim: AtomicUsize,
+    next_consume: AtomicUsize,
+    capacity: usize,
+    total: usize,
+}
+
+/// A running loader; iterate with [`Loader::next_batch`].
+pub struct Loader {
+    schedule: Option<Arc<(Schedule, Dataset)>>,
+    shared: Option<Arc<Shared>>,
+    workers: Vec<JoinHandle<()>>,
+    cursor: usize,
+    total: usize,
+}
+
+impl Loader {
+    /// Start streaming `ds` under `cfg`.
+    pub fn start(ds: Dataset, cfg: &LoaderConfig) -> Loader {
+        let schedule = build_schedule(ds.len(), cfg);
+        let total = schedule.batches.len();
+        let pack = Arc::new((schedule, ds));
+
+        if cfg.workers == 0 {
+            return Loader {
+                schedule: Some(pack),
+                shared: None,
+                workers: Vec::new(),
+                cursor: 0,
+                total,
+            };
+        }
+
+        let shared = Arc::new(Shared {
+            ready: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            next_claim: AtomicUsize::new(0),
+            next_consume: AtomicUsize::new(0),
+            capacity: cfg.capacity.max(cfg.workers),
+            total,
+        });
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers {
+            let shared = shared.clone();
+            let pack = pack.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("loader-{w}"))
+                    .spawn(move || worker_loop(&pack, &shared))
+                    .expect("spawn loader worker"),
+            );
+        }
+        Loader {
+            schedule: Some(pack),
+            shared: Some(shared),
+            workers,
+            cursor: 0,
+            total,
+        }
+    }
+
+    /// Total number of batches this loader will yield.
+    pub fn total_batches(&self) -> usize {
+        self.total
+    }
+
+    /// Next batch in deterministic order; `None` when the stream ends.
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        if self.cursor >= self.total {
+            return None;
+        }
+        let id = self.cursor;
+        self.cursor += 1;
+
+        match &self.shared {
+            None => {
+                // synchronous path
+                let pack = self.schedule.as_ref().unwrap();
+                let (sched, ds) = (&pack.0, &pack.1);
+                let (epoch, iie, idx) = &sched.batches[id];
+                Some(gather(ds, idx, sched.batch_size, *epoch, *iie))
+            }
+            Some(shared) => {
+                let mut ready = shared.ready.lock().unwrap();
+                loop {
+                    if let Some(b) = ready.remove(&id) {
+                        shared.next_consume.store(id + 1, Ordering::SeqCst);
+                        shared.cv.notify_all();
+                        return Some(b);
+                    }
+                    ready = shared.cv.wait(ready).unwrap();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Loader {
+    fn drop(&mut self) {
+        // unblock any workers parked on backpressure, then join
+        if let Some(shared) = &self.shared {
+            shared.next_consume.store(usize::MAX, Ordering::SeqCst);
+            shared.cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(pack: &Arc<(Schedule, Dataset)>, shared: &Arc<Shared>) {
+    let (sched, ds) = (&pack.0, &pack.1);
+    loop {
+        let id = shared.next_claim.fetch_add(1, Ordering::SeqCst);
+        if id >= shared.total {
+            return;
+        }
+        // backpressure: wait until id is within the window of the consumer
+        {
+            let mut ready = shared.ready.lock().unwrap();
+            loop {
+                let consume = shared.next_consume.load(Ordering::SeqCst);
+                if consume == usize::MAX {
+                    return; // loader dropped
+                }
+                if id < consume + shared.capacity {
+                    break;
+                }
+                ready = shared.cv.wait(ready).unwrap();
+            }
+            drop(ready);
+        }
+        let (epoch, iie, idx) = &sched.batches[id];
+        let batch = gather(ds, idx, sched.batch_size, *epoch, *iie);
+        let mut ready = shared.ready.lock().unwrap();
+        ready.insert(id, batch);
+        shared.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Task, XStore, YStore};
+
+    fn toy_ds(n: usize) -> Dataset {
+        Dataset {
+            name: "toy".into(),
+            task: Task::Regression,
+            feat_shape: vec![1],
+            x: XStore::F32 {
+                data: (0..n).map(|i| i as f32).collect(),
+                stride: 1,
+            },
+            y: YStore::F32(vec![0.0; n]),
+        }
+    }
+
+    fn drain(mut l: Loader) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while let Some(b) = l.next_batch() {
+            out.push(b);
+        }
+        out
+    }
+
+    #[test]
+    fn covers_every_sample_once_per_epoch() {
+        for workers in [0, 1, 3] {
+            let cfg = LoaderConfig {
+                batch_size: 16,
+                epochs: 2,
+                seed: 5,
+                workers,
+                capacity: 4,
+                drop_last: false,
+            };
+            let batches = drain(Loader::start(toy_ds(50), &cfg));
+            for epoch in 0..2 {
+                let mut seen = vec![0usize; 50];
+                for b in batches.iter().filter(|b| b.epoch == epoch) {
+                    for &i in &b.indices[..b.real] {
+                        seen[i] += 1;
+                    }
+                }
+                assert!(seen.iter().all(|&c| c == 1), "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_order_regardless_of_workers() {
+        let mk = |workers| {
+            let cfg = LoaderConfig {
+                batch_size: 8,
+                epochs: 3,
+                seed: 9,
+                workers,
+                capacity: 3,
+                drop_last: true,
+            };
+            drain(Loader::start(toy_ds(37), &cfg))
+                .into_iter()
+                .map(|b| b.indices)
+                .collect::<Vec<_>>()
+        };
+        let a = mk(0);
+        let b = mk(1);
+        let c = mk(4);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn drop_last_drops_partial() {
+        let cfg = LoaderConfig {
+            batch_size: 16,
+            epochs: 1,
+            seed: 1,
+            workers: 0,
+            capacity: 2,
+            drop_last: true,
+        };
+        let l = Loader::start(toy_ds(50), &cfg);
+        assert_eq!(l.total_batches(), 3); // 50/16 = 3 full batches
+        let batches = drain(l);
+        assert!(batches.iter().all(|b| b.real == 16));
+    }
+
+    #[test]
+    fn pad_last_when_not_dropping() {
+        let cfg = LoaderConfig {
+            batch_size: 16,
+            epochs: 1,
+            seed: 1,
+            workers: 2,
+            capacity: 2,
+            drop_last: false,
+        };
+        let batches = drain(Loader::start(toy_ds(50), &cfg));
+        assert_eq!(batches.len(), 4);
+        let last = batches.last().unwrap();
+        assert_eq!(last.real, 2);
+        assert_eq!(last.len(), 16);
+        assert_eq!(last.mask().iter().sum::<f32>(), 2.0);
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let cfg = LoaderConfig {
+            batch_size: 4,
+            epochs: 10,
+            seed: 2,
+            workers: 3,
+            capacity: 2,
+            drop_last: true,
+        };
+        let mut l = Loader::start(toy_ds(100), &cfg);
+        let _ = l.next_batch();
+        drop(l); // workers blocked on backpressure must exit cleanly
+    }
+
+    #[test]
+    fn backpressure_bounds_buffer() {
+        // with capacity 2 and a slow consumer, the ready map never exceeds
+        // capacity (checked indirectly: loader still yields correct order)
+        let cfg = LoaderConfig {
+            batch_size: 4,
+            epochs: 1,
+            seed: 3,
+            workers: 4,
+            capacity: 2,
+            drop_last: true,
+        };
+        let mut l = Loader::start(toy_ds(64), &cfg);
+        let mut count = 0;
+        while let Some(b) = l.next_batch() {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            assert_eq!(b.index_in_epoch, count);
+            count += 1;
+        }
+        assert_eq!(count, 16);
+    }
+}

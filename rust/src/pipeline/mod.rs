@@ -1,0 +1,9 @@
+//! Streaming data pipeline (L3): deterministic shuffling, batch assembly,
+//! multi-worker prefetch with bounded backpressure and order-restoring
+//! dynamic rebalancing. See `loader.rs` for the concurrency design.
+
+pub mod batch;
+pub mod loader;
+
+pub use batch::{gather, Batch};
+pub use loader::{Loader, LoaderConfig};

@@ -1,0 +1,322 @@
+//! The PJRT execution engine: loads HLO-text artifacts, compiles them once
+//! (cached), and exposes typed entry points for the trainer hot path.
+//!
+//! Design notes:
+//!   * HLO **text** is the interchange format (xla_extension 0.5.1 rejects
+//!     jax≥0.5 serialized protos; the text parser reassigns ids).
+//!   * Parameters/momentum live as host `Literal`s inside [`ModelState`] and
+//!     are passed by reference each step (no per-step deep copies); data
+//!     batches are packed fresh per call (they change every step).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::pipeline::Batch;
+use crate::util::timer::PhaseTimer;
+
+use super::exec::{pack_arg, scalar_f32, to_f32, Arg};
+use super::manifest::{Dtype, FamilyInfo, Manifest};
+
+/// Model parameters + optimizer state, device-format host literals.
+pub struct ModelState {
+    pub family: String,
+    pub params: Vec<Literal>,
+    pub mom: Vec<Literal>,
+}
+
+impl ModelState {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+/// The runtime engine (single-threaded owner of the PJRT client).
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+    /// compile/load accounting, folded into run reports
+    pub timer: PhaseTimer,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client up: platform={} devices={} ({} artifacts)",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            timer: PhaseTimer::default(),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn load(&mut self, name: &str) -> anyhow::Result<&PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let info = self.manifest.artifact(name)?;
+            let t0 = std::time::Instant::now();
+            let proto = HloModuleProto::from_text_file(
+                info.file
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path {:?}", info.file))?,
+            )?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.timer.add("compile", t0.elapsed());
+            log::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute artifact `name` with typed args; returns the output tuple.
+    pub fn run(&mut self, name: &str, args: &[Arg]) -> anyhow::Result<Vec<Literal>> {
+        let info = self.manifest.artifact(name)?.clone();
+        anyhow::ensure!(
+            args.len() == info.inputs.len(),
+            "{name}: got {} args, artifact takes {}",
+            args.len(),
+            info.inputs.len()
+        );
+        // pack non-literal args; reference resident literals directly
+        let mut temps: Vec<(usize, Literal)> = Vec::new();
+        for (i, (a, s)) in args.iter().zip(info.inputs.iter()).enumerate() {
+            if !matches!(a, Arg::Lit(_)) {
+                temps.push((i, pack_arg(a, s).map_err(|e| anyhow::anyhow!("{name}: {e}"))?));
+            }
+        }
+        let mut ptrs: Vec<&Literal> = Vec::with_capacity(args.len());
+        let mut ti = 0;
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Lit(l) => ptrs.push(l),
+                _ => {
+                    debug_assert_eq!(temps[ti].0, i);
+                    ptrs.push(&temps[ti].1);
+                    ti += 1;
+                }
+            }
+        }
+        let exe = self.load(name)?;
+        let result = exe.execute::<&Literal>(&ptrs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    // ---- typed trainer entry points ---------------------------------------
+
+    /// Run the init artifact: fresh parameters + zero momentum.
+    pub fn init_state(&mut self, family: &str, seed: i32) -> anyhow::Result<ModelState> {
+        let fam = self.manifest.family(family)?.clone();
+        let outs = self.run(&fam.init, &[Arg::ScalarI32(seed)])?;
+        let n = fam.n_params();
+        anyhow::ensure!(outs.len() == 2 * n, "init returned {} outputs", outs.len());
+        let mut outs = outs;
+        let mom = outs.split_off(n);
+        Ok(ModelState {
+            family: family.to_string(),
+            params: outs,
+            mom,
+        })
+    }
+
+    fn push_xy<'a>(args: &mut Vec<Arg<'a>>, fam: &FamilyInfo, batch: &'a Batch) {
+        let _ = fam;
+        if let Some(x) = &batch.x_f32 {
+            args.push(Arg::F32(x));
+        } else {
+            args.push(Arg::I32(batch.x_i32.as_ref().expect("batch missing x")));
+        }
+        if let Some(y) = &batch.y_f32 {
+            args.push(Arg::F32(y));
+        } else {
+            args.push(Arg::I32(batch.y_i32.as_ref().expect("batch missing y")));
+        }
+    }
+
+    /// Selection forward pass: per-sample (loss, gnorm) over the full batch.
+    pub fn forward(
+        &mut self,
+        state: &ModelState,
+        batch: &Batch,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let fam = self.manifest.family(&state.family)?.clone();
+        anyhow::ensure!(
+            batch.len() == fam.batch,
+            "forward: batch {} != artifact batch {}",
+            batch.len(),
+            fam.batch
+        );
+        let mut args: Vec<Arg> = state.params.iter().map(Arg::Lit).collect();
+        Self::push_xy(&mut args, &fam, batch);
+        let outs = self.run(&fam.fwd.clone(), &args)?;
+        Ok((to_f32(&outs[0])?, to_f32(&outs[1])?))
+    }
+
+    /// Fused selection pass (perf path): forward + L1 scorer in ONE module.
+    /// Returns (loss, gnorm, scores, α[7][B]); `None` if the manifest has
+    /// no fused artifact for this family (older artifacts trees).
+    #[allow(clippy::type_complexity)]
+    pub fn forward_score(
+        &mut self,
+        state: &ModelState,
+        batch: &Batch,
+        w_full: &[f32; 7],
+        t: usize,
+        cl_power: f32,
+        cl_on: bool,
+    ) -> anyhow::Result<Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<Vec<f32>>)>> {
+        let fam = self.manifest.family(&state.family)?.clone();
+        let Some(name) = fam.fwd_score.clone() else {
+            return Ok(None);
+        };
+        anyhow::ensure!(
+            batch.len() == fam.batch,
+            "forward_score: batch {} != artifact batch {}",
+            batch.len(),
+            fam.batch
+        );
+        let knobs = [t as f32, cl_power, if cl_on { 1.0 } else { 0.0 }];
+        let mut args: Vec<Arg> = state.params.iter().map(Arg::Lit).collect();
+        Self::push_xy(&mut args, &fam, batch);
+        args.push(Arg::F32(&w_full[..]));
+        args.push(Arg::F32(&knobs));
+        let outs = self.run(&name, &args)?;
+        let b = batch.len();
+        let loss = to_f32(&outs[0])?;
+        let gnorm = to_f32(&outs[1])?;
+        let s = to_f32(&outs[2])?;
+        let flat = to_f32(&outs[3])?;
+        anyhow::ensure!(flat.len() == 7 * b, "fused alpha shape mismatch");
+        let alphas = flat.chunks(b).map(|c| c.to_vec()).collect();
+        Ok(Some((loss, gnorm, s, alphas)))
+    }
+
+    /// One SGD+momentum step on a sub-batch whose size matches a compiled
+    /// train artifact; updates `state` in place and returns the mean loss.
+    pub fn train_step(
+        &mut self,
+        state: &mut ModelState,
+        sub: &Batch,
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let fam = self.manifest.family(&state.family)?.clone();
+        let name = fam.train_artifact(sub.len())?.to_string();
+        let mut args: Vec<Arg> = state.params.iter().map(Arg::Lit).collect();
+        args.extend(state.mom.iter().map(Arg::Lit));
+        Self::push_xy(&mut args, &fam, sub);
+        args.push(Arg::ScalarF32(lr));
+        let mut outs = self.run(&name, &args)?;
+        let n = fam.n_params();
+        anyhow::ensure!(outs.len() == 2 * n + 1, "train returned {} outputs", outs.len());
+        let loss = scalar_f32(&outs[2 * n])?;
+        let mom = outs.drain(n..2 * n).collect::<Vec<_>>();
+        outs.truncate(n);
+        state.params = outs;
+        state.mom = mom;
+        Ok(loss)
+    }
+
+    /// Masked eval pass: (loss_sum, correct_sum) over one padded batch.
+    pub fn evaluate(
+        &mut self,
+        state: &ModelState,
+        batch: &Batch,
+    ) -> anyhow::Result<(f32, f32)> {
+        let fam = self.manifest.family(&state.family)?.clone();
+        let mask = batch.mask();
+        let mut args: Vec<Arg> = state.params.iter().map(Arg::Lit).collect();
+        Self::push_xy(&mut args, &fam, batch);
+        args.push(Arg::F32(&mask));
+        let outs = self.run(&fam.eval.clone(), &args)?;
+        Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
+    }
+
+    /// Fused AdaSelection scoring on the L1 kernel: returns (s, α[7][B]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn score(
+        &mut self,
+        loss: &[f32],
+        gnorm: &[f32],
+        w_full: &[f32; 7],
+        t: usize,
+        cl_power: f32,
+        cl_on: bool,
+    ) -> anyhow::Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let b = loss.len();
+        let name = self.manifest.score_artifact(b)?.name.clone();
+        let knobs = [t as f32, cl_power, if cl_on { 1.0 } else { 0.0 }];
+        let outs = self.run(
+            &name,
+            &[
+                Arg::F32(loss),
+                Arg::F32(gnorm),
+                Arg::F32(&w_full[..]),
+                Arg::F32(&knobs),
+            ],
+        )?;
+        let s = to_f32(&outs[0])?;
+        let flat = to_f32(&outs[1])?;
+        anyhow::ensure!(flat.len() == 7 * b, "alpha shape mismatch");
+        let alphas = flat.chunks(b).map(|c| c.to_vec()).collect();
+        Ok((s, alphas))
+    }
+
+    /// Pre-compile everything a run will need (keeps compile time out of
+    /// the timed training loop).
+    pub fn preload_family(&mut self, family: &str, sizes: &[usize]) -> anyhow::Result<()> {
+        let fam = self.manifest.family(family)?.clone();
+        self.load(&fam.init)?;
+        self.load(&fam.fwd)?;
+        self.load(&fam.eval)?;
+        for &k in sizes {
+            let name = fam.train_artifact(k)?.to_string();
+            self.load(&name)?;
+        }
+        if let Ok(info) = self.manifest.score_artifact(fam.batch) {
+            let name = info.name.clone();
+            self.load(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Number of f32 parameters in a family (reporting).
+    pub fn param_count(&self, family: &str) -> anyhow::Result<usize> {
+        Ok(self
+            .manifest
+            .family(family)?
+            .params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum())
+    }
+
+    /// Validate the frozen method order against the selection module.
+    pub fn check_method_order(&self) -> anyhow::Result<()> {
+        let want: Vec<&str> = crate::selection::Method::ALL
+            .iter()
+            .map(|m| m.name())
+            .collect();
+        let got: Vec<&str> = self.manifest.method_order.iter().map(|s| s.as_str()).collect();
+        anyhow::ensure!(
+            got == want,
+            "manifest method order {got:?} != rust order {want:?}"
+        );
+        Ok(())
+    }
+
+    /// Expose dtype of an artifact input (diagnostics).
+    pub fn input_dtype(&self, artifact: &str, idx: usize) -> anyhow::Result<Dtype> {
+        Ok(self.manifest.artifact(artifact)?.inputs[idx].dtype)
+    }
+}

@@ -1,0 +1,137 @@
+//! Literal/buffer helpers around the `xla` crate: typed argument packing
+//! validated against manifest IO specs, and tuple-output unpacking.
+
+use xla::{ElementType, Literal};
+
+use super::manifest::{ArtifactInfo, Dtype, IoSpec};
+
+/// A host-side argument for an artifact call.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+    /// Pre-built literal (e.g. a parameter kept resident across steps).
+    Lit(&'a Literal),
+}
+
+/// Build a typed literal for `spec` from raw f32 data.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
+    let expect: usize = shape.iter().product();
+    anyhow::ensure!(
+        data.len() == expect,
+        "f32 literal: {} elems for shape {shape:?} (want {expect})",
+        data.len()
+    );
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Build a typed literal for `spec` from raw i32 data.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<Literal> {
+    let expect: usize = shape.iter().product();
+    anyhow::ensure!(
+        data.len() == expect,
+        "i32 literal: {} elems for shape {shape:?} (want {expect})",
+        data.len()
+    );
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Pack one argument against its IO spec (shape/dtype validation).
+pub fn pack_arg(arg: &Arg, spec: &IoSpec) -> anyhow::Result<Literal> {
+    match (arg, spec.dtype) {
+        (Arg::F32(data), Dtype::F32) => lit_f32(data, &spec.shape),
+        (Arg::I32(data), Dtype::I32) => lit_i32(data, &spec.shape),
+        (Arg::ScalarF32(v), Dtype::F32) => {
+            anyhow::ensure!(spec.shape.is_empty(), "{}: not a scalar", spec.name);
+            Ok(Literal::scalar(*v))
+        }
+        (Arg::ScalarI32(v), Dtype::I32) => {
+            anyhow::ensure!(spec.shape.is_empty(), "{}: not a scalar", spec.name);
+            Ok(Literal::scalar(*v))
+        }
+        (Arg::Lit(l), _) => Ok((*l).clone()),
+        (_, want) => anyhow::bail!("{}: dtype mismatch (artifact wants {want:?})", spec.name),
+    }
+}
+
+/// Pack a full argument list against an artifact's input specs.
+pub fn pack_args(args: &[Arg], info: &ArtifactInfo) -> anyhow::Result<Vec<Literal>> {
+    anyhow::ensure!(
+        args.len() == info.inputs.len(),
+        "{}: got {} args, artifact takes {}",
+        info.name,
+        args.len(),
+        info.inputs.len()
+    );
+    args.iter()
+        .zip(info.inputs.iter())
+        .map(|(a, s)| pack_arg(a, s).map_err(|e| anyhow::anyhow!("{}: {e}", info.name)))
+        .collect()
+}
+
+/// Read a literal back as f32s.
+pub fn to_f32(lit: &Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 result.
+pub fn scalar_f32(lit: &Literal) -> anyhow::Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_f32_roundtrip() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), data.to_vec());
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn lit_i32_roundtrip() {
+        let data = [7i32, -8, 9];
+        let lit = lit_i32(&data, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data.to_vec());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn pack_arg_validates_dtype() {
+        let spec = IoSpec {
+            name: "x".into(),
+            shape: vec![2],
+            dtype: Dtype::F32,
+        };
+        assert!(pack_arg(&Arg::F32(&[1.0, 2.0]), &spec).is_ok());
+        assert!(pack_arg(&Arg::I32(&[1, 2]), &spec).is_err());
+        let scalar = IoSpec {
+            name: "lr".into(),
+            shape: vec![],
+            dtype: Dtype::F32,
+        };
+        assert!(pack_arg(&Arg::ScalarF32(0.1), &scalar).is_ok());
+        assert!(pack_arg(&Arg::ScalarF32(0.1), &spec).is_err());
+    }
+}

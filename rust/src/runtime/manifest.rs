@@ -1,0 +1,331 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! python build side (aot.py) and this runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Element dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// One positional input/output of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled HLO module on disk.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Task type of a model family (mirrors `data::Task` without payload).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Classification,
+    Regression,
+    Lm,
+}
+
+/// A model family: spec + artifact names.
+#[derive(Clone, Debug)]
+pub struct FamilyInfo {
+    pub name: String,
+    pub task: TaskKind,
+    pub batch: usize,
+    pub train_sizes: Vec<usize>,
+    /// ordered parameter list (name, shape)
+    pub params: Vec<(String, Vec<usize>)>,
+    pub init: String,
+    pub fwd: String,
+    /// fused forward+scorer artifact (optional; newer manifests)
+    pub fwd_score: Option<String>,
+    pub eval: String,
+    /// subset size K -> train artifact name
+    pub train: BTreeMap<usize, String>,
+}
+
+impl FamilyInfo {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// The train artifact for subset size k (exact match required — the
+    /// caller rounds k to a compiled size via [`FamilyInfo::round_size`]).
+    pub fn train_artifact(&self, k: usize) -> anyhow::Result<&str> {
+        self.train
+            .get(&k)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("no train artifact for k={k} in {}", self.name))
+    }
+
+    /// Smallest compiled subset size ≥ k (fallback: the largest).
+    pub fn round_size(&self, k: usize) -> usize {
+        self.train_sizes
+            .iter()
+            .copied()
+            .find(|&s| s >= k)
+            .unwrap_or_else(|| *self.train_sizes.last().unwrap())
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub method_order: Vec<String>,
+    pub momentum: f64,
+    pub gamma_grid: Vec<f64>,
+    pub families: BTreeMap<String, FamilyInfo>,
+    /// batch size -> score artifact name
+    pub score: BTreeMap<usize, String>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        anyhow::ensure!(
+            j.at(&["version"])?.as_usize()? == 1,
+            "unsupported manifest version"
+        );
+        let method_order: Vec<String> = j
+            .at(&["method_order"])?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(String::from))
+            .collect::<anyhow::Result<_>>()?;
+        let momentum = j.at(&["momentum"])?.as_f64()?;
+        let gamma_grid: Vec<f64> = j
+            .at(&["gamma_grid"])?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64())
+            .collect::<anyhow::Result<_>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.at(&["artifacts"])?.as_obj()? {
+            let parse_io = |key: &str| -> anyhow::Result<Vec<IoSpec>> {
+                a.at(&[key])?
+                    .as_arr()?
+                    .iter()
+                    .map(|io| {
+                        Ok(IoSpec {
+                            name: io.at(&["name"])?.as_str()?.to_string(),
+                            shape: io.at(&["shape"])?.as_usize_vec()?,
+                            dtype: Dtype::parse(io.at(&["dtype"])?.as_str()?)?,
+                        })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: dir.join(a.at(&["file"])?.as_str()?),
+                    inputs: parse_io("inputs")?,
+                    outputs: parse_io("outputs")?,
+                },
+            );
+        }
+
+        let mut families = BTreeMap::new();
+        for (name, fj) in j.at(&["families"])?.as_obj()? {
+            let task = match fj.at(&["task"])?.as_str()? {
+                "classification" => TaskKind::Classification,
+                "regression" => TaskKind::Regression,
+                "lm" => TaskKind::Lm,
+                other => anyhow::bail!("unknown task '{other}'"),
+            };
+            let params = fj
+                .at(&["params"])?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok((
+                        p.at(&["name"])?.as_str()?.to_string(),
+                        p.at(&["shape"])?.as_usize_vec()?,
+                    ))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let mut train = BTreeMap::new();
+            for (k, v) in fj.at(&["artifacts", "train"])?.as_obj()? {
+                train.insert(k.parse::<usize>()?, v.as_str()?.to_string());
+            }
+            let fam = FamilyInfo {
+                name: name.clone(),
+                task,
+                batch: fj.at(&["batch"])?.as_usize()?,
+                train_sizes: fj.at(&["train_sizes"])?.as_usize_vec()?,
+                params,
+                init: fj.at(&["artifacts", "init"])?.as_str()?.to_string(),
+                fwd: fj.at(&["artifacts", "fwd"])?.as_str()?.to_string(),
+                fwd_score: fj
+                    .at(&["artifacts"])?
+                    .get("fwd_score")
+                    .map(|v| v.as_str().map(String::from))
+                    .transpose()?,
+                eval: fj.at(&["artifacts", "eval"])?.as_str()?.to_string(),
+                train,
+            };
+            // referential integrity
+            for a in [&fam.init, &fam.fwd, &fam.eval] {
+                anyhow::ensure!(artifacts.contains_key(a), "{name}: missing artifact {a}");
+            }
+            if let Some(a) = &fam.fwd_score {
+                anyhow::ensure!(artifacts.contains_key(a), "{name}: missing artifact {a}");
+            }
+            for a in fam.train.values() {
+                anyhow::ensure!(artifacts.contains_key(a), "{name}: missing artifact {a}");
+            }
+            families.insert(name.clone(), fam);
+        }
+
+        let mut score = BTreeMap::new();
+        for (bs, v) in j.at(&["score"])?.as_obj()? {
+            let name = v.as_str()?.to_string();
+            anyhow::ensure!(artifacts.contains_key(&name), "missing score artifact {name}");
+            score.insert(bs.parse::<usize>()?, name);
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            method_order,
+            momentum,
+            gamma_grid,
+            families,
+            score,
+            artifacts,
+        })
+    }
+
+    pub fn family(&self, name: &str) -> anyhow::Result<&FamilyInfo> {
+        self.families
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model family '{name}'"))
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))
+    }
+
+    pub fn score_artifact(&self, batch: usize) -> anyhow::Result<&ArtifactInfo> {
+        let name = self
+            .score
+            .get(&batch)
+            .ok_or_else(|| anyhow::anyhow!("no score artifact for batch {batch}"))?;
+        self.artifact(name)
+    }
+}
+
+/// Default artifacts directory: `$ADASELECTION_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("ADASELECTION_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    fn load() -> Option<Manifest> {
+        let dir = manifest_dir();
+        dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = load() else { return };
+        assert_eq!(m.method_order.len(), 7);
+        assert_eq!(m.method_order[1], "big_loss");
+        assert!((m.momentum - 0.9).abs() < 1e-9);
+        assert!(m.families.contains_key("resnet_c10"));
+        let fam = m.family("resnet_c10").unwrap();
+        assert_eq!(fam.batch, 128);
+        assert_eq!(fam.task, TaskKind::Classification);
+        assert!(fam.n_params() > 10);
+        assert!(fam.train.contains_key(&128));
+    }
+
+    #[test]
+    fn round_size_picks_next_compiled() {
+        let Some(m) = load() else { return };
+        let fam = m.family("resnet_c10").unwrap();
+        // γ grid for B=128: 13,26,39,52,64,128
+        assert_eq!(fam.round_size(13), 13);
+        assert_eq!(fam.round_size(14), 26);
+        assert_eq!(fam.round_size(1), 13);
+        assert_eq!(fam.round_size(999), 128);
+    }
+
+    #[test]
+    fn io_specs_match_family_params() {
+        let Some(m) = load() else { return };
+        for fam in m.families.values() {
+            let fwd = m.artifact(&fam.fwd).unwrap();
+            assert_eq!(fwd.inputs.len(), fam.n_params() + 2, "{}", fam.name);
+            for ((_, shape), io) in fam.params.iter().zip(fwd.inputs.iter()) {
+                assert_eq!(&io.shape, shape);
+                assert_eq!(io.dtype, Dtype::F32);
+            }
+            assert_eq!(fwd.outputs.len(), 2);
+            assert_eq!(fwd.outputs[0].shape, vec![fam.batch]);
+        }
+    }
+
+    #[test]
+    fn missing_artifact_reference_fails() {
+        let dir = std::env::temp_dir().join("ada_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"method_order":["uniform"],"momentum":0.9,
+                "gamma_grid":[0.1],
+                "families":{"f":{"task":"regression","batch":4,"train_sizes":[2],
+                  "params":[],
+                  "artifacts":{"init":"nope","fwd":"nope","eval":"nope","train":{"2":"nope"}}}},
+                "score":{},"artifacts":{}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime (L3 ↔ artifacts bridge): manifest parsing, artifact
+//! compilation + caching, typed execution helpers.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+pub mod engine;
+pub mod exec;
+pub mod manifest;
+
+pub use engine::{Engine, ModelState};
+pub use exec::Arg;
+pub use manifest::{default_artifacts_dir, Dtype, FamilyInfo, Manifest, TaskKind};

@@ -1,0 +1,386 @@
+//! The AdaSelection policy (paper §3.2): adaptive method weights (eq. 3),
+//! curriculum reward (eq. 4), fused sample scores (eq. 5), top-k select.
+//!
+//! The per-sample α/score math lives in the L1 Pallas kernel at runtime;
+//! this module holds the *policy state* — the method weights `w_t^m`, the
+//! per-method loss history `ℓ_{t-1}^m`, and the iteration counter — plus a
+//! pure-rust scorer (`score_host`) that is the kernel's oracle and fallback.
+
+use crate::selection::bandit::UpdateRule;
+use crate::selection::method::{all_alphas, Method};
+use crate::util::stats;
+use crate::util::topk::top_k_indices;
+
+/// Configuration for the AdaSelection policy.
+#[derive(Clone, Debug)]
+pub struct AdaConfig {
+    /// candidate pool (subset of `Method::ALL`), e.g. [BigLoss, SmallLoss, Uniform]
+    pub candidates: Vec<Method>,
+    /// β ∈ [-1, 1] of eq. 3: >0 rewards loss volatility, <0 rewards stability
+    pub beta: f32,
+    /// enable the curriculum reward of eq. 4
+    pub cl_on: bool,
+    /// exponent p of eq. 4 (negative ⇒ reward fades with t; DESIGN.md §5.3)
+    pub cl_power: f32,
+    /// weight-update rule; None = the paper's eq. 3 with `beta`
+    /// (the bandit framing of §3.2 — see `selection::bandit`)
+    pub rule: Option<UpdateRule>,
+}
+
+impl Default for AdaConfig {
+    fn default() -> Self {
+        AdaConfig {
+            candidates: vec![Method::BigLoss, Method::SmallLoss, Method::Uniform],
+            beta: 0.5,
+            cl_on: true,
+            cl_power: -0.5,
+            rule: None,
+        }
+    }
+}
+
+impl AdaConfig {
+    /// The effective update rule (eq. 3 unless overridden).
+    pub fn effective_rule(&self) -> UpdateRule {
+        self.rule.unwrap_or(UpdateRule::Eq3 { beta: self.beta })
+    }
+}
+
+/// Mutable policy state across iterations.
+#[derive(Clone, Debug)]
+pub struct AdaSelection {
+    pub cfg: AdaConfig,
+    /// w_t^m, one per candidate; kept normalized to sum = |candidates|
+    w: Vec<f32>,
+    /// ℓ_{t-1}^m per candidate (None before the first iteration)
+    prev_loss: Option<Vec<f32>>,
+    /// iteration counter t (1-based at first score call)
+    t: usize,
+}
+
+/// Everything produced for one batch.
+#[derive(Clone, Debug)]
+pub struct ScoreOutput {
+    /// fused s_{i,t}
+    pub scores: Vec<f32>,
+    /// selected rows (top-k by score, deterministic tie-break)
+    pub selected: Vec<usize>,
+    /// snapshot of the *post-update* weights, for Fig-8 traces
+    pub weights: Vec<f32>,
+}
+
+impl AdaSelection {
+    pub fn new(cfg: AdaConfig) -> Self {
+        assert!(!cfg.candidates.is_empty(), "empty candidate pool");
+        let m = cfg.candidates.len();
+        AdaSelection {
+            cfg,
+            w: vec![1.0; m],
+            prev_loss: None,
+            t: 0,
+        }
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    pub fn iteration(&self) -> usize {
+        self.t
+    }
+
+    pub fn config(&self) -> &AdaConfig {
+        &self.cfg
+    }
+
+    /// Override the weight-update rule (bandit ablations).
+    pub fn set_rule(&mut self, rule: UpdateRule) {
+        self.cfg.rule = Some(rule);
+    }
+
+    /// The full 7-slot weight vector the score kernel consumes: candidate
+    /// weights at their `Method::index()` positions, zeros elsewhere.
+    pub fn full_weights(&self) -> [f32; 7] {
+        let mut w = [0.0f32; 7];
+        for (m, &wm) in self.cfg.candidates.iter().zip(self.w.iter()) {
+            w[m.index()] = wm;
+        }
+        w
+    }
+
+    /// The curriculum reward r_t (eq. 4), normalized to mean 1.
+    pub fn cl_reward(loss: &[f32], t: usize, power: f32) -> Vec<f32> {
+        let b = loss.len();
+        let tt = (t as f32).max(1.0);
+        let denom: f32 = loss.iter().map(|&l| l * l).sum::<f32>() + 1e-9;
+        let scale = tt.powf(power);
+        let mut r: Vec<f32> = loss.iter().map(|&l| (-scale * l / denom).exp()).collect();
+        let sum: f32 = r.iter().sum();
+        let norm = b as f32 / sum;
+        for v in r.iter_mut() {
+            *v *= norm;
+        }
+        r
+    }
+
+    /// One iteration on the host path: compute α on the CPU, fuse with the
+    /// current weights + CL reward, select top-k, then update the weights
+    /// (eq. 3). This is the oracle for the XLA score artifact; the runtime
+    /// path calls [`AdaSelection::select_with_alphas`] with kernel outputs.
+    pub fn step_host(&mut self, loss: &[f32], gnorm: &[f32], k: usize) -> ScoreOutput {
+        let full = all_alphas(loss, gnorm);
+        let alphas: Vec<Vec<f32>> = self
+            .cfg
+            .candidates
+            .iter()
+            .map(|m| full[m.index()].clone())
+            .collect();
+        self.select_with_alphas(loss, &alphas, k)
+    }
+
+    /// One iteration given per-candidate α rows (from the L1 kernel or from
+    /// `step_host`). Also performs the eq. 3 weight update.
+    pub fn select_with_alphas(
+        &mut self,
+        loss: &[f32],
+        alphas: &[Vec<f32>],
+        k: usize,
+    ) -> ScoreOutput {
+        assert_eq!(alphas.len(), self.cfg.candidates.len());
+        let b = loss.len();
+
+        // eq. 5: s_i = r_t(i) * Σ_m w_m α_im  (computed for t+1, matching
+        // the increment inside select_scored)
+        let mut scores = vec![0.0f32; b];
+        for (wm, am) in self.w.iter().zip(alphas.iter()) {
+            for (s, &a) in scores.iter_mut().zip(am.iter()) {
+                *s += wm * a;
+            }
+        }
+        if self.cfg.cl_on {
+            let r = Self::cl_reward(loss, self.t + 1, self.cfg.cl_power);
+            for (s, &ri) in scores.iter_mut().zip(r.iter()) {
+                *s *= ri;
+            }
+        }
+        self.select_scored(loss, alphas, scores, k)
+    }
+
+    /// One iteration with the fused scores already computed (the runtime
+    /// path: the L1 Pallas kernel produced both α and s). Performs top-k
+    /// selection and the eq. 3 weight update.
+    pub fn select_scored(
+        &mut self,
+        loss: &[f32],
+        alphas: &[Vec<f32>],
+        scores: Vec<f32>,
+        k: usize,
+    ) -> ScoreOutput {
+        assert_eq!(alphas.len(), self.cfg.candidates.len());
+        self.t += 1;
+        let selected = top_k_indices(&scores, k);
+
+        // weight update (eq. 3 by default, pluggable bandit rules otherwise)
+        // over ℓ_t^m = mean loss of method m's own hypothetical top-k.
+        let cur: Vec<f32> = alphas
+            .iter()
+            .map(|am| {
+                let pick = top_k_indices(am, k);
+                let sum: f32 = pick.iter().map(|&i| loss[i]).sum();
+                sum / pick.len().max(1) as f32
+            })
+            .collect();
+        self.cfg
+            .effective_rule()
+            .update(&mut self.w, &cur, self.prev_loss.as_deref());
+        self.prev_loss = Some(cur);
+
+        ScoreOutput {
+            scores,
+            selected,
+            weights: self.w.clone(),
+        }
+    }
+}
+
+/// Host-side fused score (no state/update): mirrors the kernel exactly.
+/// Used by property tests and the kernel-vs-host equivalence check.
+pub fn score_host(
+    loss: &[f32],
+    gnorm: &[f32],
+    w_full: &[f32; 7],
+    t: usize,
+    cl_power: f32,
+    cl_on: bool,
+) -> Vec<f32> {
+    let full = all_alphas(loss, gnorm);
+    let b = loss.len();
+    let mut scores = vec![0.0f32; b];
+    for (wm, am) in w_full.iter().zip(full.iter()) {
+        for (s, &a) in scores.iter_mut().zip(am.iter()) {
+            *s += wm * a;
+        }
+    }
+    if cl_on {
+        let r = AdaSelection::cl_reward(loss, t, cl_power);
+        for (s, &ri) in scores.iter_mut().zip(r.iter()) {
+            *s *= ri;
+        }
+    }
+    scores
+}
+
+/// ℓ_t^m helper exposed for metrics: mean loss over a hypothetical top-k.
+pub fn hypothetical_mean_loss(alpha: &[f32], loss: &[f32], k: usize) -> f32 {
+    let pick = top_k_indices(alpha, k);
+    if pick.is_empty() {
+        return stats::mean(loss);
+    }
+    pick.iter().map(|&i| loss[i]).sum::<f32>() / pick.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn batch(seed: u64, b: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let loss: Vec<f32> = (0..b).map(|_| rng.next_f32() * 3.0 + 0.01).collect();
+        let gnorm: Vec<f32> = (0..b).map(|_| rng.next_f32() * 2.0 + 0.01).collect();
+        (loss, gnorm)
+    }
+
+    #[test]
+    fn selects_k_unique_rows() {
+        let (l, g) = batch(1, 64);
+        let mut ada = AdaSelection::new(AdaConfig::default());
+        let out = ada.step_host(&l, &g, 13);
+        assert_eq!(out.selected.len(), 13);
+        let mut sorted = out.selected.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 13);
+    }
+
+    #[test]
+    fn weights_stay_positive_and_normalized() {
+        let mut ada = AdaSelection::new(AdaConfig {
+            beta: 1.0,
+            ..AdaConfig::default()
+        });
+        for s in 0..50 {
+            let (l, g) = batch(s, 64);
+            ada.step_host(&l, &g, 13);
+            let sum: f32 = ada.weights().iter().sum();
+            assert!((sum - ada.weights().len() as f32).abs() < 1e-3);
+            assert!(ada.weights().iter().all(|&w| w > 0.0));
+        }
+    }
+
+    #[test]
+    fn beta_zero_keeps_weights_uniform() {
+        let mut ada = AdaSelection::new(AdaConfig {
+            beta: 0.0,
+            ..AdaConfig::default()
+        });
+        for s in 0..10 {
+            let (l, g) = batch(s, 32);
+            ada.step_host(&l, &g, 8);
+        }
+        for &w in ada.weights() {
+            assert!((w - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_candidate_reduces_to_that_method() {
+        // with only BigLoss in the pool and CL off, selection = top-k loss
+        let (l, g) = batch(2, 32);
+        let mut ada = AdaSelection::new(AdaConfig {
+            candidates: vec![Method::BigLoss],
+            beta: 0.5,
+            cl_on: false,
+            cl_power: -0.5,
+            rule: None,
+        });
+        let out = ada.step_host(&l, &g, 5);
+        let want = crate::util::topk::top_k_indices(&l, 5);
+        assert_eq!(out.selected, want);
+    }
+
+    #[test]
+    fn cl_shifts_early_selection_toward_small_loss() {
+        let (l, g) = batch(3, 64);
+        let cfg_on = AdaConfig {
+            candidates: vec![Method::Uniform],
+            beta: 0.0,
+            cl_on: true,
+            cl_power: 0.9, // strongly CL-weighted early
+            rule: None,
+        };
+        let mut ada = AdaSelection::new(cfg_on);
+        let out = ada.step_host(&l, &g, 8);
+        let mean_sel: f32 =
+            out.selected.iter().map(|&i| l[i]).sum::<f32>() / 8.0;
+        let mean_all = stats::mean(&l);
+        assert!(
+            mean_sel < mean_all,
+            "CL must prefer small losses early: {mean_sel} vs {mean_all}"
+        );
+    }
+
+    #[test]
+    fn volatile_method_gains_weight_with_positive_beta() {
+        // candidate 0 sees stable losses, candidate 1 volatile ones: with
+        // β > 0 the volatile candidate's weight must grow.
+        let mut ada = AdaSelection::new(AdaConfig {
+            candidates: vec![Method::SmallLoss, Method::BigLoss],
+            beta: 1.0,
+            cl_on: false,
+            cl_power: -0.5,
+            rule: None,
+        });
+        let mut rng = Pcg64::new(9);
+        for t in 0..30 {
+            // small losses constant; big losses oscillate wildly
+            let osc = if t % 2 == 0 { 5.0 } else { 1.0 };
+            let loss: Vec<f32> = (0..32)
+                .map(|i| if i < 16 { 0.1 } else { osc + rng.next_f32() * 0.1 })
+                .collect();
+            let gnorm = vec![1.0; 32];
+            ada.step_host(&loss, &gnorm, 8);
+        }
+        let w = ada.weights();
+        assert!(
+            w[1] > w[0],
+            "big_loss (volatile ℓ^m) should out-weigh small_loss: {w:?}"
+        );
+    }
+
+    #[test]
+    fn score_host_matches_step_host_scores() {
+        let (l, g) = batch(5, 48);
+        let mut ada = AdaSelection::new(AdaConfig {
+            candidates: Method::ALL.to_vec(),
+            beta: 0.5,
+            cl_on: true,
+            cl_power: -0.5,
+            rule: None,
+        });
+        let out = ada.step_host(&l, &g, 10);
+        let w = [1.0f32; 7]; // first iteration: weights all 1
+        let s = score_host(&l, &g, &w, 1, -0.5, true);
+        for (a, b) in out.scores.iter().zip(s.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn empty_k_is_fine() {
+        let (l, g) = batch(6, 16);
+        let mut ada = AdaSelection::new(AdaConfig::default());
+        let out = ada.step_host(&l, &g, 0);
+        assert!(out.selected.is_empty());
+    }
+}

@@ -1,0 +1,175 @@
+//! Bandit-style weight-update rules (the paper §3.2 frames AdaSelection as
+//! an RL/bandit problem; eq. 3 is one instantiation). This module provides
+//! the update family as pluggable rules so the choice can be ablated:
+//!
+//!   * `Eq3`       — the paper's multiplicative volatility rule
+//!   * `Exp3`      — adversarial-bandit exponential weights over a
+//!                   loss-reduction reward
+//!   * `Softmax`   — Boltzmann weighting of the (negated) hypothetical
+//!                   selected-loss, temperature τ
+//!
+//! All rules keep weights positive and normalized to sum = M.
+
+/// Which update rule to run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UpdateRule {
+    /// eq. 3: w ∝ w · exp(β · |ℓ_t − ℓ_{t-1}| / ℓ_{t-1})
+    Eq3 { beta: f32 },
+    /// EXP3: w ∝ w · exp(η · reward), reward = normalized loss *reduction*
+    Exp3 { eta: f32 },
+    /// stateless Boltzmann over −ℓ_t^m / τ
+    Softmax { tau: f32 },
+}
+
+impl UpdateRule {
+    pub fn parse(spec: &str) -> anyhow::Result<UpdateRule> {
+        let (name, arg) = match spec.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (spec, None),
+        };
+        let num = |default: f32| -> anyhow::Result<f32> {
+            arg.map(|a| a.parse::<f32>().map_err(Into::into))
+                .unwrap_or(Ok(default))
+        };
+        match name {
+            "eq3" => Ok(UpdateRule::Eq3 { beta: num(0.5)? }),
+            "exp3" => Ok(UpdateRule::Exp3 { eta: num(0.2)? }),
+            "softmax" => Ok(UpdateRule::Softmax { tau: num(0.25)? }),
+            other => anyhow::bail!("unknown update rule '{other}'"),
+        }
+    }
+
+    /// Apply one update. `w` is modified in place (positive, sum = len).
+    /// `cur` is ℓ_t^m per candidate; `prev` is ℓ_{t-1}^m (None on t=1).
+    pub fn update(&self, w: &mut [f32], cur: &[f32], prev: Option<&[f32]>) {
+        match *self {
+            UpdateRule::Eq3 { beta } => {
+                if let Some(prev) = prev {
+                    // eq. 3 normalizes by ℓ_{t-1}^m; taken literally that
+                    // explodes for methods whose picks converge to ~0 loss
+                    // (Small Loss), collapsing the policy onto them. We
+                    // normalize by the candidate-mean previous loss instead
+                    // — same scale-freeness, bounded dynamics (DESIGN.md §5.2).
+                    let scale = prev.iter().sum::<f32>() / prev.len() as f32;
+                    let scale = scale.max(1e-9);
+                    for ((wi, &lt), &lp) in w.iter_mut().zip(cur).zip(prev) {
+                        let rel = (lt - lp).abs() / scale;
+                        *wi *= (beta * rel).clamp(-10.0, 10.0).exp();
+                    }
+                }
+            }
+            UpdateRule::Exp3 { eta } => {
+                if let Some(prev) = prev {
+                    // reward = relative loss reduction achieved by the
+                    // method's own pick (positive when loss fell)
+                    let scale: f32 = cur
+                        .iter()
+                        .zip(prev)
+                        .map(|(&c, &p)| (p - c).abs())
+                        .fold(1e-9f32, f32::max);
+                    for ((wi, &lt), &lp) in w.iter_mut().zip(cur).zip(prev) {
+                        let reward = (lp - lt) / scale; // ∈ [-1, 1]
+                        *wi *= (eta * reward).clamp(-10.0, 10.0).exp();
+                    }
+                }
+            }
+            UpdateRule::Softmax { tau } => {
+                // stateless: weights from current losses only
+                let min = cur.iter().cloned().fold(f32::MAX, f32::min);
+                for (wi, &lt) in w.iter_mut().zip(cur) {
+                    *wi = (-(lt - min) / tau.max(1e-6)).exp();
+                }
+            }
+        }
+        normalize(w);
+    }
+}
+
+/// Normalize to sum = len, guarding degenerate cases.
+pub fn normalize(w: &mut [f32]) {
+    let m = w.len() as f32;
+    let sum: f32 = w.iter().sum();
+    if sum > 0.0 && sum.is_finite() {
+        for x in w.iter_mut() {
+            *x *= m / sum;
+        }
+    } else {
+        for x in w.iter_mut() {
+            *x = 1.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_norm(w: &[f32]) {
+        let sum: f32 = w.iter().sum();
+        assert!((sum - w.len() as f32).abs() < 1e-4, "{w:?}");
+        assert!(w.iter().all(|&x| x > 0.0 && x.is_finite()), "{w:?}");
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(UpdateRule::parse("eq3:0.7").unwrap(), UpdateRule::Eq3 { beta: 0.7 });
+        assert_eq!(UpdateRule::parse("exp3").unwrap(), UpdateRule::Exp3 { eta: 0.2 });
+        assert_eq!(
+            UpdateRule::parse("softmax:0.1").unwrap(),
+            UpdateRule::Softmax { tau: 0.1 }
+        );
+        assert!(UpdateRule::parse("ucb").is_err());
+        assert!(UpdateRule::parse("eq3:abc").is_err());
+    }
+
+    #[test]
+    fn eq3_rewards_volatility() {
+        let mut w = vec![1.0f32, 1.0];
+        UpdateRule::Eq3 { beta: 1.0 }.update(
+            &mut w,
+            &[1.0, 5.0],
+            Some(&[1.0, 1.0]), // method 1's pick got much worse -> volatile
+        );
+        check_norm(&w);
+        assert!(w[1] > w[0]);
+    }
+
+    #[test]
+    fn exp3_rewards_loss_reduction() {
+        let mut w = vec![1.0f32, 1.0];
+        UpdateRule::Exp3 { eta: 1.0 }.update(
+            &mut w,
+            &[0.5, 2.0],
+            Some(&[1.0, 1.0]), // method 0 reduced its pick's loss
+        );
+        check_norm(&w);
+        assert!(w[0] > w[1]);
+    }
+
+    #[test]
+    fn softmax_favors_small_current_loss() {
+        let mut w = vec![1.0f32, 1.0, 1.0];
+        UpdateRule::Softmax { tau: 0.5 }.update(&mut w, &[0.1, 1.0, 2.0], None);
+        check_norm(&w);
+        assert!(w[0] > w[1] && w[1] > w[2]);
+    }
+
+    #[test]
+    fn first_iteration_is_noop_for_stateful_rules() {
+        for rule in [UpdateRule::Eq3 { beta: 1.0 }, UpdateRule::Exp3 { eta: 1.0 }] {
+            let mut w = vec![1.0f32, 1.0];
+            rule.update(&mut w, &[3.0, 0.1], None);
+            assert_eq!(w, vec![1.0, 1.0], "{rule:?}");
+        }
+    }
+
+    #[test]
+    fn normalize_handles_degenerate() {
+        let mut w = vec![0.0f32, 0.0];
+        normalize(&mut w);
+        assert_eq!(w, vec![1.0, 1.0]);
+        let mut w = vec![f32::INFINITY, 1.0];
+        normalize(&mut w);
+        assert_eq!(w, vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,226 @@
+//! The candidate subsampling methods (paper §3.1) and their α transforms.
+//!
+//! `Method::ALL` order is FROZEN and must match the L1 score kernel's
+//! `METHOD_ORDER` (checked against `artifacts/manifest.json` at runtime and
+//! in integration tests).
+
+use crate::util::stats;
+
+/// The seven candidate methods of §3.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Uniform,
+    BigLoss,
+    SmallLoss,
+    GradNorm,
+    AdaBoost,
+    Coreset1,
+    Coreset2,
+}
+
+impl Method {
+    pub const ALL: [Method; 7] = [
+        Method::Uniform,
+        Method::BigLoss,
+        Method::SmallLoss,
+        Method::GradNorm,
+        Method::AdaBoost,
+        Method::Coreset1,
+        Method::Coreset2,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Uniform => "uniform",
+            Method::BigLoss => "big_loss",
+            Method::SmallLoss => "small_loss",
+            Method::GradNorm => "grad_norm",
+            Method::AdaBoost => "adaboost",
+            Method::Coreset1 => "coreset1",
+            Method::Coreset2 => "coreset2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<Method> {
+        Method::ALL
+            .iter()
+            .copied()
+            .find(|m| m.name() == s)
+            .ok_or_else(|| anyhow::anyhow!("unknown method '{s}'"))
+    }
+
+    /// Row index in the kernel's alpha matrix.
+    pub fn index(self) -> usize {
+        Method::ALL.iter().position(|&m| m == self).unwrap()
+    }
+}
+
+/// AdaBoost half-log-odds statistic over max-normalized losses (eq. 1).
+pub fn adaboost_stat(loss: &[f32]) -> Vec<f32> {
+    let max = loss.iter().cloned().fold(f32::MIN, f32::max).max(0.0) + 1e-9;
+    loss.iter()
+        .map(|&l| {
+            let lh = (l / max).clamp(0.0, 1.0 - 1e-3);
+            0.5 * ((1.0 + lh) / (1.0 - lh)).ln()
+        })
+        .collect()
+}
+
+/// Coreset distance-to-batch-mean statistic.
+pub fn dev_stat(loss: &[f32]) -> Vec<f32> {
+    let m = stats::mean(loss);
+    loss.iter().map(|&l| (l - m).abs()).collect()
+}
+
+/// α_i^m: softmax over the standardized ordering statistic — the exact
+/// pure-rust mirror of the L1 score kernel (see kernels/score.py).
+pub fn alpha(method: Method, loss: &[f32], gnorm: &[f32]) -> Vec<f32> {
+    let b = loss.len();
+    let mut stat: Vec<f32> = match method {
+        Method::Uniform => return vec![1.0 / b as f32; b],
+        Method::BigLoss => loss.to_vec(),
+        Method::SmallLoss => loss.iter().map(|&l| -l).collect(),
+        Method::GradNorm => gnorm.to_vec(),
+        Method::AdaBoost => adaboost_stat(loss),
+        Method::Coreset1 => dev_stat(loss),
+        Method::Coreset2 => dev_stat(loss).iter().map(|&d| -d).collect(),
+    };
+    stats::standardize(&mut stat, 1e-6);
+    stats::softmax(&mut stat);
+    stat
+}
+
+/// All seven alphas, `Method::ALL` order (rows).
+pub fn all_alphas(loss: &[f32], gnorm: &[f32]) -> Vec<Vec<f32>> {
+    Method::ALL
+        .iter()
+        .map(|&m| alpha(m, loss, gnorm))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (Vec<f32>, Vec<f32>) {
+        (
+            vec![0.1, 2.0, 0.5, 1.0, 4.0, 0.2],
+            vec![1.0, 0.5, 2.0, 0.1, 0.3, 1.5],
+        )
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for m in Method::ALL {
+            assert_eq!(Method::from_name(m.name()).unwrap(), m);
+        }
+        assert!(Method::from_name("nope").is_err());
+    }
+
+    #[test]
+    fn alphas_are_simplex() {
+        let (l, g) = toy();
+        for m in Method::ALL {
+            let a = alpha(m, &l, &g);
+            assert_eq!(a.len(), l.len());
+            let sum: f32 = a.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "{m:?} sum={sum}");
+            assert!(a.iter().all(|&x| x >= 0.0), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn big_loss_ranks_by_loss() {
+        let (l, g) = toy();
+        let a = alpha(Method::BigLoss, &l, &g);
+        let max_i = l
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(
+            a.iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .unwrap()
+                .0,
+            max_i
+        );
+    }
+
+    #[test]
+    fn small_is_reverse_of_big() {
+        let (l, g) = toy();
+        let big = alpha(Method::BigLoss, &l, &g);
+        let small = alpha(Method::SmallLoss, &l, &g);
+        let ord_big: Vec<usize> = crate::util::topk::argsort_desc(&big);
+        let mut ord_small: Vec<usize> = crate::util::topk::argsort_desc(&small);
+        ord_small.reverse();
+        assert_eq!(ord_big, ord_small);
+    }
+
+    #[test]
+    fn gradnorm_uses_gnorm_not_loss() {
+        let (l, g) = toy();
+        let a = alpha(Method::GradNorm, &l, &g);
+        // sample 2 has the highest gnorm
+        let max_i = a
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_i, 2);
+    }
+
+    #[test]
+    fn adaboost_monotone_in_loss() {
+        let (l, _) = toy();
+        let s = adaboost_stat(&l);
+        let mut idx: Vec<usize> = (0..l.len()).collect();
+        idx.sort_by(|&a, &b| l[a].partial_cmp(&l[b]).unwrap());
+        for w in idx.windows(2) {
+            assert!(s[w[0]] <= s[w[1]] + 1e-7);
+        }
+    }
+
+    #[test]
+    fn coreset2_favors_near_mean() {
+        let (l, g) = toy();
+        let a = alpha(Method::Coreset2, &l, &g);
+        let m = stats::mean(&l);
+        let closest = l
+            .iter()
+            .enumerate()
+            .min_by(|x, y| {
+                (x.1 - m).abs().partial_cmp(&(y.1 - m).abs()).unwrap()
+            })
+            .unwrap()
+            .0;
+        let max_a = a
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_a, closest);
+    }
+
+    #[test]
+    fn frozen_order_matches_kernel() {
+        let names: Vec<&str> = Method::ALL.iter().map(|m| m.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "uniform",
+                "big_loss",
+                "small_loss",
+                "grad_norm",
+                "adaboost",
+                "coreset1",
+                "coreset2"
+            ]
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's contribution, as L3 policy code: candidate methods and their
+//! α transforms (`method`), the adaptive AdaSelection policy (`adaselection`,
+//! eqs. 3–5), and the `Selector` trait + baselines the trainer drives
+//! (`policy`).
+
+pub mod adaselection;
+pub mod bandit;
+pub mod method;
+pub mod policy;
+pub mod staleness;
+
+pub use adaselection::{AdaConfig, AdaSelection, ScoreOutput};
+pub use bandit::UpdateRule;
+pub use method::Method;
+pub use staleness::LossCache;
+pub use policy::{build_selector, AdaSelectionPolicy, BenchmarkAll, SelectionContext, Selector, SingleMethod};

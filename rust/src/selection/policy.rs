@@ -1,0 +1,438 @@
+//! The `Selector` abstraction the trainer drives: one implementation per
+//! baseline (§3.1 semantics) plus AdaSelection and the no-sampling
+//! benchmark. Policies receive per-sample losses and gnorm proxies from the
+//! forward artifact and return the rows to train on.
+
+use crate::selection::adaselection::{AdaConfig, AdaSelection};
+use crate::selection::method::{adaboost_stat, dev_stat, Method};
+use crate::util::rng::Pcg64;
+use crate::util::topk::{bottom_k_indices, top_k_indices};
+
+/// Inputs available to a policy at iteration t.
+pub struct SelectionContext<'a> {
+    /// per-sample losses over the REAL rows of the batch
+    pub loss: &'a [f32],
+    /// per-sample gradient-norm proxies
+    pub gnorm: &'a [f32],
+    /// subset size k = ceil(γ·B)
+    pub k: usize,
+}
+
+/// A subsampling policy.
+pub trait Selector: Send {
+    /// Stable identifier used in reports (e.g. "big_loss", "adaselection").
+    fn name(&self) -> String;
+
+    /// Rows (positions within the batch) to keep, deterministic given state.
+    fn select(&mut self, ctx: &SelectionContext) -> Vec<usize>;
+
+    /// AdaSelection's method weights, if any (Fig-8 traces).
+    fn weights(&self) -> Option<Vec<f32>> {
+        None
+    }
+
+    /// Whether this policy skips the selection forward pass entirely
+    /// (the no-sampling benchmark).
+    fn is_benchmark(&self) -> bool {
+        false
+    }
+}
+
+/// No subsampling: keep every row (the paper's "Benchmark" column).
+pub struct BenchmarkAll;
+
+impl Selector for BenchmarkAll {
+    fn name(&self) -> String {
+        "benchmark".into()
+    }
+
+    fn select(&mut self, ctx: &SelectionContext) -> Vec<usize> {
+        (0..ctx.loss.len()).collect()
+    }
+
+    fn is_benchmark(&self) -> bool {
+        true
+    }
+}
+
+/// One fixed baseline method, with the paper's §3.1 selection semantics:
+/// deterministic top/bottom-k for the ranking methods, 50/50 extremes for
+/// Coreset1, closest-to-mean for Coreset2, and sampling for Uniform /
+/// AdaBoost (importance sampling ∝ the eq.-1 weights).
+pub struct SingleMethod {
+    pub method: Method,
+    rng: Pcg64,
+}
+
+impl SingleMethod {
+    pub fn new(method: Method, seed: u64) -> Self {
+        SingleMethod {
+            method,
+            rng: Pcg64::new(seed ^ 0xd15e_a5e5),
+        }
+    }
+
+    /// Sample k distinct rows with probability ∝ weights (systematic
+    /// weighted reservoir via repeated draws; k ≪ B in practice).
+    fn weighted_k(&mut self, weights: &[f32], k: usize) -> Vec<usize> {
+        let mut w: Vec<f64> = weights.iter().map(|&x| (x.max(0.0)) as f64 + 1e-12).collect();
+        let k = k.min(w.len());
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i = self.rng.weighted_index(&w);
+            out.push(i);
+            w[i] = 0.0;
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+impl Selector for SingleMethod {
+    fn name(&self) -> String {
+        self.method.name().into()
+    }
+
+    fn select(&mut self, ctx: &SelectionContext) -> Vec<usize> {
+        let k = ctx.k.min(ctx.loss.len());
+        match self.method {
+            Method::Uniform => {
+                let mut idx = self.rng.permutation(ctx.loss.len());
+                idx.truncate(k);
+                idx.sort_unstable();
+                idx
+            }
+            Method::BigLoss => top_k_indices(ctx.loss, k),
+            Method::SmallLoss => bottom_k_indices(ctx.loss, k),
+            Method::GradNorm => top_k_indices(ctx.gnorm, k),
+            Method::AdaBoost => {
+                let w = adaboost_stat(ctx.loss);
+                self.weighted_k(&w, k)
+            }
+            Method::Coreset1 => {
+                // 50% biggest + 50% smallest (odd k: extra from the top)
+                let top = top_k_indices(ctx.loss, k - k / 2);
+                let mut bot = bottom_k_indices(ctx.loss, k / 2);
+                let mut out = top;
+                // avoid duplicates when k approaches B
+                bot.retain(|i| !out.contains(i));
+                out.append(&mut bot);
+                while out.len() < k {
+                    if let Some(i) = (0..ctx.loss.len()).find(|i| !out.contains(i)) {
+                        out.push(i);
+                    } else {
+                        break;
+                    }
+                }
+                out
+            }
+            Method::Coreset2 => bottom_k_indices(&dev_stat(ctx.loss), k),
+        }
+    }
+}
+
+/// The AdaSelection policy as a `Selector`.
+pub struct AdaSelectionPolicy {
+    state: AdaSelection,
+    label: String,
+}
+
+impl AdaSelectionPolicy {
+    pub fn new(cfg: AdaConfig) -> Self {
+        let label = format!(
+            "adaselection[{}]",
+            cfg.candidates
+                .iter()
+                .map(|m| m.name())
+                .collect::<Vec<_>>()
+                .join("+")
+        );
+        AdaSelectionPolicy {
+            state: AdaSelection::new(cfg),
+            label,
+        }
+    }
+
+    pub fn state(&self) -> &AdaSelection {
+        &self.state
+    }
+
+    pub fn state_mut(&mut self) -> &mut AdaSelection {
+        &mut self.state
+    }
+
+    /// Runtime path: feed kernel-computed α rows instead of recomputing.
+    pub fn select_with_alphas(
+        &mut self,
+        loss: &[f32],
+        alphas: &[Vec<f32>],
+        k: usize,
+    ) -> Vec<usize> {
+        self.state.select_with_alphas(loss, alphas, k).selected
+    }
+
+    /// Kernel path: the L1 scorer produced the full 7-row α matrix plus the
+    /// fused scores; slice out this policy's candidates and update.
+    pub fn select_kernel(
+        &mut self,
+        loss: &[f32],
+        full_alphas: &[Vec<f32>],
+        scores: Vec<f32>,
+        k: usize,
+    ) -> Vec<usize> {
+        let cand: Vec<Vec<f32>> = self
+            .state
+            .config()
+            .candidates
+            .iter()
+            .map(|m| full_alphas[m.index()].clone())
+            .collect();
+        self.state.select_scored(loss, &cand, scores, k).selected
+    }
+}
+
+impl Selector for AdaSelectionPolicy {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn select(&mut self, ctx: &SelectionContext) -> Vec<usize> {
+        self.state.step_host(ctx.loss, ctx.gnorm, ctx.k).selected
+    }
+
+    fn weights(&self) -> Option<Vec<f32>> {
+        Some(self.state.weights().to_vec())
+    }
+}
+
+/// Concrete policy dispatch for the trainer (avoids trait downcasts when
+/// the AdaSelection kernel-scoring path needs policy internals).
+pub enum Policy {
+    Benchmark(BenchmarkAll),
+    Single(SingleMethod),
+    Ada(AdaSelectionPolicy),
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Benchmark(p) => p.name(),
+            Policy::Single(p) => p.name(),
+            Policy::Ada(p) => p.name(),
+        }
+    }
+
+    pub fn is_benchmark(&self) -> bool {
+        matches!(self, Policy::Benchmark(_))
+    }
+
+    pub fn select(&mut self, ctx: &SelectionContext) -> Vec<usize> {
+        match self {
+            Policy::Benchmark(p) => p.select(ctx),
+            Policy::Single(p) => p.select(ctx),
+            Policy::Ada(p) => p.select(ctx),
+        }
+    }
+
+    pub fn weights(&self) -> Option<Vec<f32>> {
+        match self {
+            Policy::Ada(p) => p.weights(),
+            _ => None,
+        }
+    }
+
+    pub fn as_ada(&mut self) -> Option<&mut AdaSelectionPolicy> {
+        match self {
+            Policy::Ada(p) => Some(p),
+            _ => None,
+        }
+    }
+}
+
+/// Build a [`Policy`] from a spec string (same grammar as `build_selector`).
+pub fn build_policy(
+    spec: &str,
+    seed: u64,
+    beta: f32,
+    cl_on: bool,
+    cl_power: f32,
+) -> anyhow::Result<Policy> {
+    if spec == "benchmark" {
+        return Ok(Policy::Benchmark(BenchmarkAll));
+    }
+    if let Ok(m) = Method::from_name(spec) {
+        return Ok(Policy::Single(SingleMethod::new(m, seed)));
+    }
+    if spec == "adaselection" {
+        return Ok(Policy::Ada(AdaSelectionPolicy::new(AdaConfig {
+            beta,
+            cl_on,
+            cl_power,
+            ..AdaConfig::default()
+        })));
+    }
+    if let Some(pool) = spec.strip_prefix("adaselection:") {
+        let candidates = pool
+            .split('+')
+            .map(Method::from_name)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(!candidates.is_empty(), "empty adaselection pool");
+        return Ok(Policy::Ada(AdaSelectionPolicy::new(AdaConfig {
+            candidates,
+            beta,
+            cl_on,
+            cl_power,
+            rule: None,
+        })));
+    }
+    anyhow::bail!("unknown selector spec '{spec}'")
+}
+
+/// Build a selector from its report name (config / CLI surface).
+///
+/// Accepted: `benchmark`, any `Method` name, `adaselection` (default pool),
+/// or `adaselection:big_loss+small_loss+uniform` to pick the pool.
+pub fn build_selector(
+    spec: &str,
+    seed: u64,
+    beta: f32,
+    cl_on: bool,
+    cl_power: f32,
+) -> anyhow::Result<Box<dyn Selector>> {
+    if spec == "benchmark" {
+        return Ok(Box::new(BenchmarkAll));
+    }
+    if let Ok(m) = Method::from_name(spec) {
+        return Ok(Box::new(SingleMethod::new(m, seed)));
+    }
+    if spec == "adaselection" {
+        return Ok(Box::new(AdaSelectionPolicy::new(AdaConfig {
+            beta,
+            cl_on,
+            cl_power,
+            ..AdaConfig::default()
+        })));
+    }
+    if let Some(pool) = spec.strip_prefix("adaselection:") {
+        let candidates = pool
+            .split('+')
+            .map(Method::from_name)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(!candidates.is_empty(), "empty adaselection pool");
+        return Ok(Box::new(AdaSelectionPolicy::new(AdaConfig {
+            candidates,
+            beta,
+            cl_on,
+            cl_power,
+            rule: None,
+        })));
+    }
+    anyhow::bail!("unknown selector spec '{spec}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(loss: &'a [f32], gnorm: &'a [f32], k: usize) -> SelectionContext<'a> {
+        SelectionContext { loss, gnorm, k }
+    }
+
+    #[test]
+    fn benchmark_keeps_all() {
+        let l = [1.0f32, 2.0, 3.0];
+        let mut b = BenchmarkAll;
+        assert_eq!(b.select(&ctx(&l, &l, 1)), vec![0, 1, 2]);
+        assert!(b.is_benchmark());
+    }
+
+    #[test]
+    fn big_small_gradnorm_semantics() {
+        let loss = [0.5f32, 3.0, 1.0, 0.1];
+        let gn = [2.0f32, 0.1, 0.5, 3.0];
+        assert_eq!(
+            SingleMethod::new(Method::BigLoss, 0).select(&ctx(&loss, &gn, 2)),
+            vec![1, 2]
+        );
+        assert_eq!(
+            SingleMethod::new(Method::SmallLoss, 0).select(&ctx(&loss, &gn, 2)),
+            vec![3, 0]
+        );
+        assert_eq!(
+            SingleMethod::new(Method::GradNorm, 0).select(&ctx(&loss, &gn, 2)),
+            vec![3, 0]
+        );
+    }
+
+    #[test]
+    fn coreset1_takes_both_extremes() {
+        let loss = [0.1f32, 0.2, 5.0, 6.0, 3.0, 3.1];
+        let gn = [0.0f32; 6];
+        let sel = SingleMethod::new(Method::Coreset1, 0).select(&ctx(&loss, &gn, 4));
+        assert_eq!(sel.len(), 4);
+        assert!(sel.contains(&3) && sel.contains(&2), "{sel:?}"); // two biggest
+        assert!(sel.contains(&0) && sel.contains(&1), "{sel:?}"); // two smallest
+    }
+
+    #[test]
+    fn coreset1_no_duplicates_at_full_k() {
+        let loss = [1.0f32, 2.0, 3.0];
+        let gn = [0.0f32; 3];
+        let sel = SingleMethod::new(Method::Coreset1, 0).select(&ctx(&loss, &gn, 3));
+        let mut s = sel.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 3, "{sel:?}");
+    }
+
+    #[test]
+    fn coreset2_near_mean() {
+        let loss = [0.0f32, 10.0, 5.0, 5.2]; // mean ≈ 5.05
+        let gn = [0.0f32; 4];
+        let sel = SingleMethod::new(Method::Coreset2, 0).select(&ctx(&loss, &gn, 2));
+        assert_eq!(sel, vec![2, 3]);
+    }
+
+    #[test]
+    fn uniform_and_adaboost_sample_k_unique() {
+        let loss: Vec<f32> = (0..32).map(|i| 0.1 + i as f32 * 0.05).collect();
+        let gn = vec![1.0f32; 32];
+        for m in [Method::Uniform, Method::AdaBoost] {
+            let sel = SingleMethod::new(m, 7).select(&ctx(&loss, &gn, 10));
+            assert_eq!(sel.len(), 10, "{m:?}");
+            let mut s = sel.clone();
+            s.dedup();
+            assert_eq!(s.len(), 10, "{m:?} dupes: {sel:?}");
+        }
+    }
+
+    #[test]
+    fn adaboost_sampling_biased_to_big_losses() {
+        let mut big_hits = 0usize;
+        let loss: Vec<f32> = (0..64)
+            .map(|i| if i < 8 { 10.0 } else { 0.05 })
+            .collect();
+        let gn = vec![1.0f32; 64];
+        let mut sm = SingleMethod::new(Method::AdaBoost, 11);
+        for _ in 0..200 {
+            let sel = sm.select(&ctx(&loss, &gn, 8));
+            big_hits += sel.iter().filter(|&&i| i < 8).count();
+        }
+        // 8 of 64 rows carry nearly all weight: they must dominate picks
+        assert!(big_hits > 800, "big_hits={big_hits}/1600");
+    }
+
+    #[test]
+    fn build_selector_specs() {
+        assert!(build_selector("benchmark", 0, 0.5, true, -0.5).unwrap().is_benchmark());
+        assert_eq!(
+            build_selector("big_loss", 0, 0.5, true, -0.5).unwrap().name(),
+            "big_loss"
+        );
+        let ada = build_selector("adaselection:big_loss+uniform", 0, 0.5, true, -0.5).unwrap();
+        assert_eq!(ada.name(), "adaselection[big_loss+uniform]");
+        assert_eq!(ada.weights().unwrap().len(), 2);
+        assert!(build_selector("bogus", 0, 0.5, true, -0.5).is_err());
+        assert!(build_selector("adaselection:", 0, 0.5, true, -0.5).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Stale-loss forward approximation (the paper's §5 future-work item:
+//! "a forward pass approximation can be used instead to determine data-wise
+//! importance").
+//!
+//! The selection forward pass costs ≈ fwd(B) every iteration even though
+//! per-sample losses drift slowly. [`LossCache`] keeps the last observed
+//! (loss, gnorm) per *dataset index* and an age counter; when every sample
+//! in a batch has a cached value younger than `refresh_every` epochs, the
+//! trainer can skip the forward pass entirely and select on cached values,
+//! cutting method cost from `fwd(B) + train(K)` toward `train(K)`.
+//!
+//! The ablation bench (`ablate-stale`) quantifies the speed/quality trade.
+
+/// Per-sample cached statistics.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    loss: f32,
+    gnorm: f32,
+    /// epoch at which this entry was written (u32::MAX = never)
+    epoch: u32,
+}
+
+/// Cache of per-sample selection statistics keyed by dataset index.
+#[derive(Clone, Debug)]
+pub struct LossCache {
+    entries: Vec<Entry>,
+    /// reuse cached stats for batches whose entries are at most this many
+    /// epochs old; 0 disables reuse entirely
+    pub refresh_every: u32,
+    hits: u64,
+    misses: u64,
+}
+
+impl LossCache {
+    pub fn new(n_samples: usize, refresh_every: u32) -> Self {
+        LossCache {
+            entries: vec![
+                Entry {
+                    loss: 0.0,
+                    gnorm: 0.0,
+                    epoch: u32::MAX,
+                };
+                n_samples
+            ],
+            refresh_every,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Can this batch be selected from cache alone at `epoch`?
+    pub fn can_skip_forward(&mut self, indices: &[usize], epoch: usize) -> bool {
+        if self.refresh_every == 0 {
+            return false;
+        }
+        let ok = indices.iter().all(|&i| {
+            let e = self.entries[i].epoch;
+            e != u32::MAX && (epoch as u32).saturating_sub(e) <= self.refresh_every
+        });
+        if ok {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        ok
+    }
+
+    /// Read cached (loss, gnorm) rows for a batch.
+    pub fn lookup(&self, indices: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        (
+            indices.iter().map(|&i| self.entries[i].loss).collect(),
+            indices.iter().map(|&i| self.entries[i].gnorm).collect(),
+        )
+    }
+
+    /// Store fresh forward results for a batch.
+    pub fn update(&mut self, indices: &[usize], loss: &[f32], gnorm: &[f32], epoch: usize) {
+        for ((&i, &l), &g) in indices.iter().zip(loss.iter()).zip(gnorm.iter()) {
+            self.entries[i] = Entry {
+                loss: l,
+                gnorm: g,
+                epoch: epoch as u32,
+            };
+        }
+    }
+
+    /// (cache-served batches, forward-pass batches) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Fraction of batches served from cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_cache_never_skips() {
+        let mut c = LossCache::new(10, 2);
+        assert!(!c.can_skip_forward(&[0, 1, 2], 0));
+        assert_eq!(c.stats(), (0, 1));
+    }
+
+    #[test]
+    fn warm_cache_skips_within_window() {
+        let mut c = LossCache::new(10, 2);
+        c.update(&[0, 1, 2], &[1.0, 2.0, 3.0], &[0.1, 0.2, 0.3], 0);
+        assert!(c.can_skip_forward(&[0, 1, 2], 1)); // age 1 ≤ 2
+        assert!(c.can_skip_forward(&[2, 0], 2)); // age 2 ≤ 2
+        assert!(!c.can_skip_forward(&[0, 1], 3)); // age 3 > 2
+    }
+
+    #[test]
+    fn partial_coverage_blocks_skip() {
+        let mut c = LossCache::new(10, 5);
+        c.update(&[0, 1], &[1.0, 2.0], &[0.1, 0.2], 0);
+        assert!(!c.can_skip_forward(&[0, 1, 2], 1)); // 2 never seen
+    }
+
+    #[test]
+    fn lookup_returns_stored_rows() {
+        let mut c = LossCache::new(5, 1);
+        c.update(&[3, 1], &[9.0, 7.0], &[0.9, 0.7], 0);
+        let (l, g) = c.lookup(&[1, 3]);
+        assert_eq!(l, vec![7.0, 9.0]);
+        assert_eq!(g, vec![0.7, 0.9]);
+    }
+
+    #[test]
+    fn refresh_zero_disables() {
+        let mut c = LossCache::new(4, 0);
+        c.update(&[0, 1, 2, 3], &[1.0; 4], &[1.0; 4], 0);
+        assert!(!c.can_skip_forward(&[0, 1], 0));
+    }
+
+    #[test]
+    fn hit_rate_accounts() {
+        let mut c = LossCache::new(4, 10);
+        c.update(&[0, 1], &[1.0, 1.0], &[1.0, 1.0], 0);
+        let _ = c.can_skip_forward(&[0, 1], 1); // hit
+        let _ = c.can_skip_forward(&[2, 3], 1); // miss
+        assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+    }
+}

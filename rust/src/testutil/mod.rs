@@ -1,0 +1,9 @@
+//! Mini property-testing framework (no `proptest` offline).
+//!
+//! [`prop_check`] runs a property over N seeded random cases; on failure it
+//! reports the seed and case index so the exact case replays. Generators
+//! are just closures over [`Pcg64`], composed with plain functions.
+
+pub mod prop;
+
+pub use prop::{prop_check, Gen};

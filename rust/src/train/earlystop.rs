@@ -1,0 +1,129 @@
+//! Early-stopping indicator built on AdaSelection's internal signals — the
+//! paper's §5 future-work item ("using it as an indicator for stopping the
+//! learning process").
+//!
+//! Two signals must agree before stopping:
+//!   1. **weight stability** — the method weights w_t^m have stopped
+//!      moving (max per-iteration delta below `w_tol` across the window):
+//!      the policy has converged on a strategy, and
+//!   2. **loss plateau** — the per-epoch test loss improved by less than
+//!      `rel_tol` (relative) over the last `patience` epochs.
+
+/// Early-stop state machine (feed per-iteration weights + per-epoch losses).
+#[derive(Clone, Debug)]
+pub struct EarlyStop {
+    pub patience: usize,
+    pub rel_tol: f64,
+    pub w_tol: f32,
+    losses: Vec<f64>,
+    last_w: Option<Vec<f32>>,
+    max_w_delta_this_epoch: f32,
+    w_stable_epochs: usize,
+}
+
+impl EarlyStop {
+    pub fn new(patience: usize, rel_tol: f64, w_tol: f32) -> Self {
+        EarlyStop {
+            patience: patience.max(1),
+            rel_tol,
+            w_tol,
+            losses: Vec::new(),
+            last_w: None,
+            max_w_delta_this_epoch: 0.0,
+            w_stable_epochs: 0,
+        }
+    }
+
+    /// Observe the policy weights after one iteration.
+    pub fn observe_weights(&mut self, w: &[f32]) {
+        if let Some(prev) = &self.last_w {
+            let delta = prev
+                .iter()
+                .zip(w)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            self.max_w_delta_this_epoch = self.max_w_delta_this_epoch.max(delta);
+        }
+        self.last_w = Some(w.to_vec());
+    }
+
+    /// Observe the end-of-epoch test loss; returns `true` to stop.
+    pub fn observe_epoch(&mut self, test_loss: f64) -> bool {
+        // weight stability bookkeeping
+        if self.last_w.is_some() {
+            if self.max_w_delta_this_epoch <= self.w_tol {
+                self.w_stable_epochs += 1;
+            } else {
+                self.w_stable_epochs = 0;
+            }
+        } else {
+            // non-AdaSelection runs: weights trivially "stable"
+            self.w_stable_epochs += 1;
+        }
+        self.max_w_delta_this_epoch = 0.0;
+        self.losses.push(test_loss);
+
+        if self.losses.len() <= self.patience {
+            return false;
+        }
+        let now = *self.losses.last().unwrap();
+        let before = self.losses[self.losses.len() - 1 - self.patience];
+        let improved = (before - now) / before.abs().max(1e-12);
+        improved < self.rel_tol && self.w_stable_epochs >= self.patience
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn does_not_stop_while_improving() {
+        let mut es = EarlyStop::new(2, 0.01, 0.05);
+        for (i, &l) in [10.0, 8.0, 6.0, 4.5, 3.4].iter().enumerate() {
+            assert!(!es.observe_epoch(l), "stopped at epoch {i}");
+        }
+    }
+
+    #[test]
+    fn stops_on_plateau_with_stable_weights() {
+        let mut es = EarlyStop::new(2, 0.01, 0.05);
+        let mut stopped = false;
+        for &l in &[10.0, 5.0, 3.0, 3.0, 2.999, 2.999, 2.998] {
+            es.observe_weights(&[1.0, 1.0]);
+            es.observe_weights(&[1.0, 1.0]);
+            if es.observe_epoch(l) {
+                stopped = true;
+                break;
+            }
+        }
+        assert!(stopped);
+    }
+
+    #[test]
+    fn unstable_weights_defer_stop() {
+        let mut es = EarlyStop::new(2, 0.01, 0.01);
+        let mut alt = 0.0f32;
+        for &l in &[3.0, 3.0, 3.0, 3.0, 3.0] {
+            // weights keep oscillating beyond tolerance
+            es.observe_weights(&[1.0 + alt, 1.0 - alt]);
+            alt = if alt == 0.0 { 0.5 } else { 0.0 };
+            es.observe_weights(&[1.0 + alt, 1.0 - alt]);
+            assert!(!es.observe_epoch(l));
+        }
+    }
+
+    #[test]
+    fn plateau_without_weight_signal_still_stops() {
+        // single-method runs never call observe_weights
+        let mut es = EarlyStop::new(2, 0.01, 0.05);
+        let mut stopped = false;
+        for &l in &[5.0, 5.0, 5.0, 5.0] {
+            if es.observe_epoch(l) {
+                stopped = true;
+                break;
+            }
+        }
+        assert!(stopped);
+    }
+}

@@ -1,0 +1,8 @@
+//! The training coordinator: wires pipeline → forward artifact → selection
+//! policy → train-step artifact, with per-phase time accounting (the basis
+//! of the paper's Fig-3 training-time comparison) and per-epoch evaluation.
+
+pub mod earlystop;
+pub mod trainer;
+
+pub use trainer::{run, run_with, Trainer};

@@ -1,0 +1,106 @@
+//! Micro-benchmark harness (no `criterion` offline): warmup + timed runs,
+//! robust stats, aligned table output. Used by `cargo bench` targets.
+
+use std::time::Instant;
+
+/// One measured result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> f64 {
+        1e9 / self.median_ns.max(1e-9)
+    }
+}
+
+/// Time `f` (which should perform ONE operation) adaptively: targets
+/// ~`budget_ms` of total measurement after warmup.
+pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let target = (budget_ms as f64 / 1e3 / once).clamp(3.0, 10_000.0) as usize;
+    for _ in 0..(target / 10).max(1) {
+        f();
+    }
+    // measure
+    let mut samples = Vec::with_capacity(target);
+    for _ in 0..target {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_ns = samples[samples.len() / 2];
+    let p95_ns = samples[(samples.len() as f64 * 0.95) as usize - 1];
+    let mean_ns = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_ns,
+        p95_ns,
+        mean_ns,
+    }
+}
+
+/// Pretty-print a group of results.
+pub fn print_results(title: &str, results: &[BenchResult]) {
+    println!("\n## {title}");
+    println!(
+        "{:<46} {:>8} {:>14} {:>14} {:>12}",
+        "benchmark", "iters", "median", "p95", "ops/s"
+    );
+    for r in results {
+        println!(
+            "{:<46} {:>8} {:>14} {:>14} {:>12.1}",
+            r.name,
+            r.iters,
+            fmt_ns(r.median_ns),
+            fmt_ns(r.p95_ns),
+            r.throughput_per_s()
+        );
+    }
+}
+
+/// Human time formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 5, || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.median_ns > 0.0);
+        assert!(r.p95_ns >= r.median_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("µs"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,10 @@
+//! Cross-cutting substrates built from scratch for the offline environment:
+//! PRNG, JSON, statistics, top-k selection, timing, logging.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod topk;

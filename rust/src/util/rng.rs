@@ -1,0 +1,260 @@
+//! Deterministic PRNG substrate (no `rand` crate available offline).
+//!
+//! [`Pcg64`] is the PCG-XSL-RR 128/64 generator: one 128-bit LCG step plus
+//! an xor-shift/rotate output permutation. Seeding goes through SplitMix64
+//! so small/sequential seeds still produce well-mixed streams. Everything
+//! downstream (data generators, shuffles, selection tie-breaking) derives
+//! from this one generator so runs are reproducible end to end.
+
+/// PCG-XSL-RR 128/64 pseudo-random generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (SplitMix64-expanded).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s0 = splitmix64(&mut sm) as u128;
+        let s1 = splitmix64(&mut sm) as u128;
+        let i0 = splitmix64(&mut sm) as u128;
+        let i1 = splitmix64(&mut sm) as u128;
+        let mut rng = Pcg64 {
+            state: (s0 << 64) | s1,
+            inc: ((i0 << 64) | i1) | 1,
+        };
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent stream for a named sub-component.
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift (unbiased rejection).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)` (53-bit mantissa).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (polar-free, uses both trig halves).
+    pub fn normal(&mut self) -> f64 {
+        // guard against log(0)
+        let u1 = (1.0 - self.next_f64()).max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        for i in (1..n).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "weighted_index: zero total");
+        let mut r = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Zipf-distributed value in `[0, n)` with exponent `s` (for the
+    /// synthetic text corpus vocabulary).
+    pub fn zipf(&mut self, n: usize, _s: f64, harmonic: &[f64]) -> usize {
+        // harmonic[i] = sum_{k<=i+1} k^-s, precomputed by the caller
+        let total = harmonic[n - 1];
+        let r = self.next_f64() * total;
+        match harmonic[..n].binary_search_by(|h| h.partial_cmp(&r).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(n - 1),
+        }
+    }
+}
+
+/// Precompute the generalized harmonic numbers used by [`Pcg64::zipf`].
+pub fn zipf_harmonic(n: usize, s: f64) -> Vec<f64> {
+    let mut h = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for k in 1..=n {
+        acc += (k as f64).powf(-s);
+        h.push(acc);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut rng = Pcg64::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = rng.next_below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval_mean() {
+        let mut rng = Pcg64::new(4);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(6);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut rng = Pcg64::new(7);
+        let w = [0.0, 0.0, 1.0];
+        for _ in 0..100 {
+            assert_eq!(rng.weighted_index(&w), 2);
+        }
+        let w2 = [1.0, 3.0];
+        let picks: usize = (0..10_000).map(|_| rng.weighted_index(&w2)).sum();
+        let frac = picks as f64 / 10_000.0;
+        assert!((frac - 0.75).abs() < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let mut rng = Pcg64::new(8);
+        let h = zipf_harmonic(100, 1.1);
+        let mut counts = [0usize; 100];
+        for _ in 0..20_000 {
+            let v = rng.zipf(100, 1.1, &h);
+            assert!(v < 100);
+            counts[v] += 1;
+        }
+        assert!(counts[0] > counts[10] && counts[10] > counts[80]);
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut base = Pcg64::new(9);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn permutation_deterministic_per_seed() {
+        let p1 = Pcg64::new(10).permutation(50);
+        let p2 = Pcg64::new(10).permutation(50);
+        assert_eq!(p1, p2);
+    }
+}

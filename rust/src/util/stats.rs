@@ -1,0 +1,224 @@
+//! Small statistics substrate: moments, quantiles, ranking.
+//!
+//! Used by the selection policies (standardize/softmax over batch losses),
+//! the metrics layer (run summaries), and the bench harness (robust timing
+//! statistics). All functions are allocation-light and operate on `f32`
+//! batch vectors or `f64` aggregates.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() as f32 / xs.len() as f32
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    let var = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    var.sqrt() as f32
+}
+
+/// Standardize in place: (x - mean) / (std + eps). Mirrors the L1 kernel.
+pub fn standardize(xs: &mut [f32], eps: f32) {
+    let m = mean(xs);
+    let s = std_biased_eps(xs, m);
+    for x in xs.iter_mut() {
+        *x = (*x - m) / (s + eps);
+    }
+}
+
+fn std_biased_eps(xs: &[f32], m: f32) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let var = xs
+        .iter()
+        .map(|&x| ((x - m) as f64).powi(2))
+        .sum::<f64>()
+        / xs.len() as f64;
+    ((var + 1e-12).sqrt()) as f32
+}
+
+/// Numerically-stable softmax in place (sums to 1).
+pub fn softmax(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f64;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x as f64;
+    }
+    for x in xs.iter_mut() {
+        *x = (*x as f64 / sum) as f32;
+    }
+}
+
+/// q-quantile (0..=1) by linear interpolation on a sorted copy.
+pub fn quantile(xs: &[f32], q: f64) -> f32 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = (pos - lo as f64) as f32;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// Median shortcut.
+pub fn median(xs: &[f32]) -> f32 {
+    quantile(xs, 0.5)
+}
+
+/// Welford online mean/variance accumulator (metrics layer).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Competition ranking (1 = best). `lower_is_better` picks the direction.
+/// Ties get the same (average) rank — matching how the paper's Table 3
+/// averages method rankings across sampling rates.
+pub fn ranks(values: &[f64], lower_is_better: bool) -> Vec<f64> {
+    let n = values.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        let (x, y) = (values[a], values[b]);
+        if lower_is_better {
+            x.partial_cmp(&y).unwrap()
+        } else {
+            y.partial_cmp(&x).unwrap()
+        }
+    });
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && values[idx[j + 1]] == values[idx[i]] {
+            j += 1;
+        }
+        // average rank for the tie group [i, j]
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-6);
+        assert!((std(&xs) - 1.1180339).abs() < 1e-4);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut xs = [1.0f32, 2.0, 3.0];
+        softmax(&mut xs);
+        let sum: f32 = xs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(xs[0] < xs[1] && xs[1] < xs[2]);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut xs = [1000.0f32, 1001.0];
+        softmax(&mut xs);
+        assert!(xs.iter().all(|x| x.is_finite()));
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_std() {
+        let mut xs = [1.0f32, 5.0, 9.0, 13.0];
+        standardize(&mut xs, 1e-6);
+        assert!(mean(&xs).abs() < 1e-5);
+        assert!((std(&xs) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn standardize_constant_vector_is_zero() {
+        let mut xs = [3.0f32; 8];
+        standardize(&mut xs, 1e-6);
+        assert!(xs.iter().all(|&x| x.abs() < 1e-3));
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0f32, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((median(&xs) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-9);
+        assert!((w.var() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(w.count(), 8);
+    }
+
+    #[test]
+    fn ranks_higher_better() {
+        // accuracies: 0.9 best -> rank 1
+        let r = ranks(&[0.5, 0.9, 0.7], false);
+        assert_eq!(r, vec![3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn ranks_lower_better_with_ties() {
+        let r = ranks(&[1.0, 2.0, 1.0, 3.0], true);
+        assert_eq!(r, vec![1.5, 3.0, 1.5, 4.0]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Timing substrate: monotonic stopwatches and per-phase accounting.
+//!
+//! The trainer attributes every iteration's wall-clock to phases
+//! (data / forward / score / select / update / eval) so the Fig-3 style
+//! time accounting and the §Perf profiles come from one mechanism.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A simple restartable stopwatch.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates durations per named phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimer {
+    totals: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimer {
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.totals.entry(phase).or_default() += d;
+        *self.counts.entry(phase).or_default() += 1;
+    }
+
+    /// Time a closure and attribute it to `phase`.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.totals.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn total_secs(&self, phase: &str) -> f64 {
+        self.total(phase).as_secs_f64()
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn grand_total_secs(&self) -> f64 {
+        self.totals.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.totals.iter().map(|(&k, &v)| (k, v))
+    }
+
+    /// One-line human summary, phases sorted by share.
+    pub fn summary(&self) -> String {
+        let total = self.grand_total_secs().max(1e-12);
+        let mut entries: Vec<_> = self.phases().collect();
+        entries.sort_by(|a, b| b.1.cmp(&a.1));
+        entries
+            .iter()
+            .map(|(k, d)| {
+                format!("{k}={:.3}s ({:.0}%)", d.as_secs_f64(), 100.0 * d.as_secs_f64() / total)
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_default() += *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn phase_accounting() {
+        let mut pt = PhaseTimer::default();
+        pt.add("fwd", Duration::from_millis(30));
+        pt.add("fwd", Duration::from_millis(10));
+        pt.add("update", Duration::from_millis(60));
+        assert_eq!(pt.count("fwd"), 2);
+        assert_eq!(pt.total("fwd"), Duration::from_millis(40));
+        assert!((pt.grand_total_secs() - 0.1).abs() < 1e-9);
+        let s = pt.summary();
+        assert!(s.contains("update") && s.contains("fwd"), "{s}");
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut pt = PhaseTimer::default();
+        let v = pt.time("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(pt.count("x"), 1);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = PhaseTimer::default();
+        let mut b = PhaseTimer::default();
+        a.add("p", Duration::from_millis(5));
+        b.add("p", Duration::from_millis(7));
+        a.merge(&b);
+        assert_eq!(a.total("p"), Duration::from_millis(12));
+        assert_eq!(a.count("p"), 2);
+    }
+}

@@ -1,0 +1,108 @@
+//! Top-k selection (the eq. 6 thresholding step, L3 hot path).
+//!
+//! `top_k_indices` is the per-iteration call: given the fused scores
+//! `s_{i,t}` from the L1 kernel, return the indices of the k largest.
+//! Implemented as an O(n) quickselect partition followed by an O(k log k)
+//! sort of the winners (deterministic output order: descending score,
+//! index ascending as tie-break — ties must be stable for reproducibility).
+
+/// Indices of the `k` largest values, descending by value then ascending
+/// by index. `k > len` is clamped.
+pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let n = values.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    if k < n {
+        // quickselect: partition so the k largest occupy idx[..k]
+        idx.select_nth_unstable_by(k - 1, |&a, &b| cmp_desc(values, a, b));
+    }
+    idx.truncate(k);
+    idx.sort_unstable_by(|&a, &b| cmp_desc(values, a, b));
+    idx
+}
+
+/// Indices of the `k` smallest values (ascending value, index tie-break).
+pub fn bottom_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let n = values.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| cmp_asc(values, a, b));
+    }
+    idx.truncate(k);
+    idx.sort_unstable_by(|&a, &b| cmp_asc(values, a, b));
+    idx
+}
+
+/// Full argsort, descending.
+pub fn argsort_desc(values: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_unstable_by(|&a, &b| cmp_desc(values, a, b));
+    idx
+}
+
+fn cmp_desc(values: &[f32], a: usize, b: usize) -> std::cmp::Ordering {
+    values[b]
+        .partial_cmp(&values[a])
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then(a.cmp(&b))
+}
+
+fn cmp_asc(values: &[f32], a: usize, b: usize) -> std::cmp::Ordering {
+    values[a]
+        .partial_cmp(&values[b])
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then(a.cmp(&b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn picks_largest() {
+        let v = [0.1f32, 0.9, 0.5, 0.7];
+        assert_eq!(top_k_indices(&v, 2), vec![1, 3]);
+        assert_eq!(bottom_k_indices(&v, 2), vec![0, 2]);
+    }
+
+    #[test]
+    fn k_zero_and_k_over_len() {
+        let v = [1.0f32, 2.0];
+        assert!(top_k_indices(&v, 0).is_empty());
+        assert_eq!(top_k_indices(&v, 10), vec![1, 0]);
+    }
+
+    #[test]
+    fn ties_break_by_index() {
+        let v = [5.0f32, 5.0, 5.0, 1.0];
+        assert_eq!(top_k_indices(&v, 2), vec![0, 1]);
+        assert_eq!(bottom_k_indices(&v, 3), vec![3, 0, 1]);
+    }
+
+    #[test]
+    fn matches_full_sort_on_random_inputs() {
+        let mut rng = Pcg64::new(11);
+        for trial in 0..50 {
+            let n = 1 + (rng.next_below(300) as usize);
+            let k = rng.next_below(n as u64 + 1) as usize;
+            let v: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let got = top_k_indices(&v, k);
+            let want: Vec<usize> = argsort_desc(&v)[..k].to_vec();
+            assert_eq!(got, want, "trial={trial} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn argsort_desc_is_sorted() {
+        let v = [3.0f32, 1.0, 2.0];
+        assert_eq!(argsort_desc(&v), vec![0, 2, 1]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Integration: CLI parsing + config layering + JSON provenance round-trips.
+
+use adaselection::cli::Args;
+use adaselection::config::RunConfig;
+use adaselection::util::json::Json;
+
+fn parse(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(String::from)).unwrap()
+}
+
+#[test]
+fn full_train_command_line() {
+    let a = parse(
+        "train --dataset svhn --selector adaselection:big_loss+uniform --gamma 0.3 \
+         --beta -0.5 --cl off --epochs 7 --lr 0.02 --seed 9 --data-scale 0.05 \
+         --workers 4 --accumulate --kernel-scorer off",
+    );
+    let mut cfg = RunConfig::default();
+    for (k, v) in &a.flags {
+        cfg.apply_override(k, v).unwrap();
+    }
+    cfg.validate().unwrap();
+    assert_eq!(cfg.dataset, "svhn");
+    assert_eq!(cfg.selector, "adaselection:big_loss+uniform");
+    assert!((cfg.gamma - 0.3).abs() < 1e-12);
+    assert!((cfg.beta + 0.5).abs() < 1e-6);
+    assert!(!cfg.cl_on);
+    assert_eq!(cfg.epochs, 7);
+    assert_eq!(cfg.seed, 9);
+    assert_eq!(cfg.workers, 4);
+    assert!(cfg.accumulate);
+    assert!(!cfg.kernel_scorer);
+}
+
+#[test]
+fn config_file_plus_cli_override_precedence() {
+    let dir = std::env::temp_dir().join("ada_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cfg.json");
+    std::fs::write(
+        &path,
+        r#"{"dataset": "bike", "gamma": 0.4, "epochs": 9}"#,
+    )
+    .unwrap();
+    let mut cfg = RunConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.dataset, "bike");
+    assert_eq!(cfg.epochs, 9);
+    // CLI override wins
+    cfg.apply_override("gamma", "0.1").unwrap();
+    assert!((cfg.gamma - 0.1).abs() < 1e-12);
+}
+
+#[test]
+fn provenance_json_reparses_to_same_config() {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "wikitext".into();
+    cfg.selector = "small_loss".into();
+    cfg.gamma = 0.45;
+    cfg.beta = -1.0;
+    cfg.cl_power = -0.25;
+    cfg.accumulate = true;
+    let text = cfg.to_json().to_string();
+    let back = RunConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.dataset, cfg.dataset);
+    assert_eq!(back.selector, cfg.selector);
+    assert!((back.gamma - cfg.gamma).abs() < 1e-9);
+    assert!((back.beta - cfg.beta).abs() < 1e-6);
+    assert!((back.cl_power - cfg.cl_power).abs() < 1e-6);
+    assert_eq!(back.accumulate, cfg.accumulate);
+}
+
+#[test]
+fn all_selector_specs_in_standard_set_validate() {
+    for ds in adaselection::data::ALL_DATASETS {
+        for sel in adaselection::harness::experiments::standard_selectors(ds) {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = ds.into();
+            cfg.selector = sel.into();
+            cfg.validate().unwrap_or_else(|e| panic!("{ds}/{sel}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn binary_runs_help_and_list_experiments() {
+    // smoke the actual binary (no artifacts needed for these commands)
+    let bin = env!("CARGO_BIN_EXE_adaselection");
+    let out = std::process::Command::new(bin).arg("help").output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+
+    let out = std::process::Command::new(bin)
+        .arg("list-experiments")
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for id in ["fig1", "fig9", "table3", "table4"] {
+        assert!(text.contains(id), "{id} missing:\n{text}");
+    }
+
+    let out = std::process::Command::new(bin)
+        .args(["gen-data", "--dataset", "bike"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("bike"));
+
+    // unknown command exits non-zero
+    let out = std::process::Command::new(bin).arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,149 @@
+//! Property tests over the streaming pipeline: exactly-once delivery,
+//! determinism under any worker count, padding/mask correctness.
+
+use adaselection::data::{Dataset, Task, XStore, YStore};
+use adaselection::pipeline::{gather, Loader, LoaderConfig};
+use adaselection::testutil::prop::prop_check;
+
+fn toy_ds(n: usize) -> Dataset {
+    Dataset {
+        name: "toy".into(),
+        task: Task::Regression,
+        feat_shape: vec![2],
+        x: XStore::F32 {
+            data: (0..2 * n).map(|i| i as f32).collect(),
+            stride: 2,
+        },
+        y: YStore::F32((0..n).map(|i| i as f32).collect()),
+    }
+}
+
+#[test]
+fn prop_exactly_once_per_epoch_any_config() {
+    prop_check(
+        "exactly-once delivery",
+        0xB1,
+        40,
+        |rng| {
+            let n = 10 + rng.next_below(300) as usize;
+            let batch = 1 + rng.next_below(40) as usize;
+            let workers = rng.next_below(5) as usize;
+            let capacity = 1 + rng.next_below(6) as usize;
+            let epochs = 1 + rng.next_below(3) as usize;
+            let drop_last = rng.next_f64() < 0.5;
+            (n, batch, workers, capacity, epochs, drop_last, rng.next_u64())
+        },
+        |&(n, batch, workers, capacity, epochs, drop_last, seed)| {
+            let cfg = LoaderConfig {
+                batch_size: batch,
+                epochs,
+                seed,
+                workers,
+                capacity,
+                drop_last,
+            };
+            let mut loader = Loader::start(toy_ds(n), &cfg);
+            let mut per_epoch = vec![vec![0usize; n]; epochs];
+            while let Some(b) = loader.next_batch() {
+                if b.len() != batch {
+                    return Err(format!("batch len {} != {batch}", b.len()));
+                }
+                for &i in &b.indices[..b.real] {
+                    per_epoch[b.epoch][i] += 1;
+                }
+                // padding repeats a valid index and the mask zeroes it
+                let mask = b.mask();
+                let real_count = mask.iter().filter(|&&m| m == 1.0).count();
+                if real_count != b.real {
+                    return Err("mask/real mismatch".into());
+                }
+            }
+            for (e, counts) in per_epoch.iter().enumerate() {
+                let full_batches = n / batch;
+                let covered = if drop_last { full_batches * batch } else { n };
+                let total: usize = counts.iter().sum();
+                if total != covered {
+                    return Err(format!("epoch {e}: delivered {total}, want {covered}"));
+                }
+                if counts.iter().any(|&c| c > 1) {
+                    return Err(format!("epoch {e}: sample delivered twice"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_worker_count_does_not_change_stream() {
+    prop_check(
+        "worker invariance",
+        0xB2,
+        20,
+        |rng| {
+            let n = 20 + rng.next_below(200) as usize;
+            let batch = 1 + rng.next_below(20) as usize;
+            (n, batch, rng.next_u64())
+        },
+        |&(n, batch, seed)| {
+            let stream = |workers: usize| {
+                let cfg = LoaderConfig {
+                    batch_size: batch,
+                    epochs: 2,
+                    seed,
+                    workers,
+                    capacity: 3,
+                    drop_last: false,
+                };
+                let mut loader = Loader::start(toy_ds(n), &cfg);
+                let mut out = Vec::new();
+                while let Some(b) = loader.next_batch() {
+                    out.push(b.indices);
+                }
+                out
+            };
+            let s0 = stream(0);
+            for w in [1usize, 3] {
+                if stream(w) != s0 {
+                    return Err(format!("stream differs at workers={w}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gather_rows_composes_with_gather() {
+    prop_check(
+        "gather_rows composition",
+        0xB3,
+        60,
+        |rng| {
+            let n = 10 + rng.next_below(100) as usize;
+            let bsz = 2 + rng.next_below(16) as usize;
+            let indices: Vec<usize> =
+                (0..bsz).map(|_| rng.next_below(n as u64) as usize).collect();
+            let rows: Vec<usize> =
+                (0..1 + rng.next_below(bsz as u64 - 1) as usize)
+                    .map(|_| rng.next_below(bsz as u64) as usize)
+                    .collect();
+            (n, bsz, indices, rows)
+        },
+        |(n, bsz, indices, rows)| {
+            let ds = toy_ds(*n);
+            let b = gather(&ds, indices, *bsz, 0, 0);
+            let sub = b.gather_rows(rows);
+            // sub.x row r must equal the dataset row indices[rows[r]]
+            let XStore::F32 { data, stride } = &ds.x else { unreachable!() };
+            let sx = sub.x_f32.as_ref().unwrap();
+            for (r, &row) in rows.iter().enumerate() {
+                let src = indices[row];
+                if sx[r * stride..(r + 1) * stride] != data[src * stride..(src + 1) * stride] {
+                    return Err(format!("row {r} mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,178 @@
+//! Integration: the full python-AOT → rust-PJRT bridge, against the real
+//! artifacts tree (skipped gracefully when `make artifacts` hasn't run).
+//!
+//! This is the cross-layer correctness signal: the L1 Pallas score kernel
+//! (inside the HLO) must agree with the pure-rust scorer, and the L2 train
+//! step must actually learn.
+
+use std::path::PathBuf;
+
+use adaselection::data;
+use adaselection::pipeline::{gather, Loader, LoaderConfig};
+use adaselection::runtime::{Arg, Engine};
+use adaselection::selection::adaselection::score_host;
+use adaselection::util::rng::Pcg64;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn score_kernel_matches_rust_oracle() {
+    let Some(dir) = artifacts() else { return };
+    let mut eng = Engine::new(&dir).unwrap();
+    eng.check_method_order().unwrap();
+
+    let mut rng = Pcg64::new(42);
+    for &b in &[64usize, 100, 128] {
+        if eng.manifest.score.get(&b).is_none() {
+            continue;
+        }
+        let loss: Vec<f32> = (0..b).map(|_| rng.next_f32() * 3.0 + 1e-3).collect();
+        let gnorm: Vec<f32> = (0..b).map(|_| rng.next_f32() * 2.0 + 1e-3).collect();
+        let w = [0.3f32, 1.2, 0.8, 1.0, 0.5, 0.9, 1.3];
+        for (t, cl_on) in [(1usize, true), (500, true), (7, false)] {
+            let (s_kernel, alphas) = eng.score(&loss, &gnorm, &w, t, -0.5, cl_on).unwrap();
+            let s_rust = score_host(&loss, &gnorm, &w, t, -0.5, cl_on);
+            for (i, (a, b)) in s_kernel.iter().zip(s_rust.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5 * (1.0 + b.abs()),
+                    "b={b} t={t} i={i}: kernel {a} vs rust {b}"
+                );
+            }
+            // alpha rows are simplex vectors
+            for row in &alphas {
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-4, "alpha row sum {sum}");
+            }
+        }
+    }
+}
+
+#[test]
+fn init_forward_train_eval_cycle_mlp() {
+    let Some(dir) = artifacts() else { return };
+    let mut eng = Engine::new(&dir).unwrap();
+    let fam = eng.manifest.family("mlp_simple").unwrap().clone();
+
+    let ds = data::build("simple", 3, 0.05).unwrap();
+    let mut state = eng.init_state("mlp_simple", 7).unwrap();
+    assert_eq!(state.n_params(), fam.n_params());
+
+    // deterministic init
+    let state2 = eng.init_state("mlp_simple", 7).unwrap();
+    let p0a = state.params[0].to_vec::<f32>().unwrap();
+    let p0b = state2.params[0].to_vec::<f32>().unwrap();
+    assert_eq!(p0a, p0b);
+
+    let cfg = LoaderConfig {
+        batch_size: fam.batch,
+        epochs: 3,
+        seed: 5,
+        workers: 0,
+        capacity: 2,
+        drop_last: true,
+    };
+    let mut loader = Loader::start(ds.train.clone(), &cfg);
+    let mut first_loss = None;
+    let mut last_loss = 0.0f32;
+    while let Some(batch) = loader.next_batch() {
+        let (loss, gnorm) = eng.forward(&state, &batch).unwrap();
+        assert_eq!(loss.len(), fam.batch);
+        assert!(loss.iter().all(|l| l.is_finite() && *l >= 0.0));
+        assert!(gnorm.iter().all(|g| g.is_finite() && *g >= 0.0));
+        let l = eng.train_step(&mut state, &batch, 0.05).unwrap();
+        first_loss.get_or_insert(l);
+        last_loss = l;
+    }
+    assert!(
+        last_loss < 0.7 * first_loss.unwrap(),
+        "train loss did not fall: {first_loss:?} -> {last_loss}"
+    );
+
+    // eval on a padded test batch with mask
+    let idx: Vec<usize> = (0..60).collect();
+    let test_batch = gather(&ds.test, &idx, fam.batch, 0, 0);
+    let (loss_sum, correct) = eng.evaluate(&state, &test_batch).unwrap();
+    assert!(loss_sum.is_finite() && loss_sum >= 0.0);
+    assert_eq!(correct, 0.0); // regression: correct is always 0
+}
+
+#[test]
+fn train_step_requires_compiled_size() {
+    let Some(dir) = artifacts() else { return };
+    let mut eng = Engine::new(&dir).unwrap();
+    let ds = data::build("simple", 1, 0.05).unwrap();
+    let mut state = eng.init_state("mlp_simple", 1).unwrap();
+    // 17 is not in the compiled K grid {10,20,30,40,50,100}
+    let idx: Vec<usize> = (0..17).collect();
+    let sub = gather(&ds.train, &idx, 17, 0, 0);
+    assert!(eng.train_step(&mut state, &sub, 0.01).is_err());
+    // rounding helper points to the next compiled size
+    let fam = eng.manifest.family("mlp_simple").unwrap();
+    assert_eq!(fam.round_size(17), 20);
+}
+
+#[test]
+fn wrong_arity_and_shape_are_rejected() {
+    let Some(dir) = artifacts() else { return };
+    let mut eng = Engine::new(&dir).unwrap();
+    let name = eng.manifest.family("mlp_simple").unwrap().fwd.clone();
+    assert!(eng.run(&name, &[]).is_err());
+    let bad = vec![0.0f32; 3];
+    let args: Vec<Arg> = (0..6).map(|_| Arg::F32(&bad)).collect();
+    assert!(eng.run(&name, &args).is_err());
+}
+
+#[test]
+fn lm_family_roundtrip() {
+    let Some(dir) = artifacts() else { return };
+    let mut eng = Engine::new(&dir).unwrap();
+    let fam = eng.manifest.family("transformer").unwrap().clone();
+    let ds = data::build("wikitext", 2, 0.005).unwrap();
+    let state = eng.init_state("transformer", 3).unwrap();
+
+    let idx: Vec<usize> = (0..fam.batch).collect();
+    let batch = gather(&ds.train, &idx, fam.batch, 0, 0);
+    let (loss, _gnorm) = eng.forward(&state, &batch).unwrap();
+    // untrained LM loss ≈ ln(vocab) = ln 256 ≈ 5.55
+    let mean: f32 = loss.iter().sum::<f32>() / loss.len() as f32;
+    assert!((mean - 5.55).abs() < 1.0, "untrained LM loss {mean}");
+}
+
+#[test]
+fn fused_fwd_score_matches_separate_calls() {
+    let Some(dir) = artifacts() else { return };
+    let mut eng = Engine::new(&dir).unwrap();
+    let fam = eng.manifest.family("mlp_simple").unwrap().clone();
+    if fam.fwd_score.is_none() {
+        return; // artifacts tree predates the fused module
+    }
+    let ds = data::build("simple", 9, 0.05).unwrap();
+    let state = eng.init_state("mlp_simple", 5).unwrap();
+    let idx: Vec<usize> = (0..fam.batch).collect();
+    let batch = gather(&ds.train, &idx, fam.batch, 0, 0);
+    let w = [0.9f32, 1.1, 1.0, 0.0, 0.4, 0.8, 0.3];
+
+    let (l1, g1, s1, a1) = eng
+        .forward_score(&state, &batch, &w, 7, -0.5, true)
+        .unwrap()
+        .expect("fused artifact present");
+    let (l2, g2) = eng.forward(&state, &batch).unwrap();
+    let (s2, a2) = eng.score(&l2, &g2, &w, 7, -0.5, true).unwrap();
+    for (a, b) in l1.iter().zip(l2.iter()) {
+        assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()));
+    }
+    for (a, b) in g1.iter().zip(g2.iter()) {
+        assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()));
+    }
+    for (a, b) in s1.iter().zip(s2.iter()) {
+        assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()));
+    }
+    for (ra, rb) in a1.iter().zip(a2.iter()) {
+        for (a, b) in ra.iter().zip(rb.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

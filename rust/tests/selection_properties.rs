@@ -1,0 +1,209 @@
+//! Property tests on the selection invariants (via the from-scratch
+//! `testutil::prop` framework — no proptest offline).
+
+use adaselection::selection::adaselection::score_host;
+use adaselection::selection::method::{all_alphas, alpha};
+use adaselection::selection::{AdaConfig, AdaSelection, Method, SelectionContext, Selector, SingleMethod};
+use adaselection::testutil::prop::{loss_gnorm, prop_check};
+use adaselection::util::rng::Pcg64;
+use adaselection::util::topk::top_k_indices;
+
+#[test]
+fn prop_alphas_are_simplex_vectors() {
+    prop_check(
+        "alpha simplex",
+        0xA1,
+        200,
+        |rng| loss_gnorm(rng, 200),
+        |(loss, gnorm)| {
+            for (m, a) in Method::ALL.iter().zip(all_alphas(loss, gnorm)) {
+                let sum: f32 = a.iter().sum();
+                if (sum - 1.0).abs() > 1e-4 {
+                    return Err(format!("{m:?} sums to {sum}"));
+                }
+                if a.iter().any(|&x| !(0.0..=1.0).contains(&x)) {
+                    return Err(format!("{m:?} out of [0,1]"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_score_linear_in_w_without_cl() {
+    prop_check(
+        "score linearity",
+        0xA2,
+        100,
+        |rng| {
+            let (l, g) = loss_gnorm(rng, 150);
+            let w1: Vec<f32> = (0..7).map(|_| rng.next_f32()).collect();
+            let w2: Vec<f32> = (0..7).map(|_| rng.next_f32()).collect();
+            (l, g, w1, w2)
+        },
+        |(l, g, w1, w2)| {
+            let mut a1 = [0f32; 7];
+            let mut a2 = [0f32; 7];
+            let mut a12 = [0f32; 7];
+            for i in 0..7 {
+                a1[i] = w1[i];
+                a2[i] = w2[i];
+                a12[i] = w1[i] + w2[i];
+            }
+            let s1 = score_host(l, g, &a1, 5, -0.5, false);
+            let s2 = score_host(l, g, &a2, 5, -0.5, false);
+            let s12 = score_host(l, g, &a12, 5, -0.5, false);
+            for i in 0..l.len() {
+                let want = s1[i] + s2[i];
+                if (s12[i] - want).abs() > 1e-4 * (1.0 + want.abs()) {
+                    return Err(format!("i={i}: {} vs {want}", s12[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topk_matches_sorted_prefix_and_permutation_invariance() {
+    prop_check(
+        "topk correctness",
+        0xA3,
+        200,
+        |rng| {
+            let v: Vec<f32> = (0..1 + rng.next_below(300) as usize)
+                .map(|_| rng.next_f32())
+                .collect();
+            let k = rng.next_below(v.len() as u64 + 1) as usize;
+            let perm = Pcg64::new(rng.next_u64()).permutation(v.len());
+            (v, k, perm)
+        },
+        |(v, k, perm)| {
+            let got = top_k_indices(v, *k);
+            // matches full-sort prefix
+            let mut idx: Vec<usize> = (0..v.len()).collect();
+            idx.sort_by(|&a, &b| {
+                v[b].partial_cmp(&v[a]).unwrap().then(a.cmp(&b))
+            });
+            if got != idx[..*k] {
+                return Err("top-k != sorted prefix".to_string());
+            }
+            // permutation invariance of the selected VALUE set
+            let pv: Vec<f32> = perm.iter().map(|&i| v[i]).collect();
+            let got_p = top_k_indices(&pv, *k);
+            let mut vals: Vec<f32> = got.iter().map(|&i| v[i]).collect();
+            let mut vals_p: Vec<f32> = got_p.iter().map(|&i| pv[i]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals_p.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if vals != vals_p {
+                return Err("selected value set not permutation invariant".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_weights_positive_normalized_under_any_stream() {
+    prop_check(
+        "weight invariants",
+        0xA4,
+        60,
+        |rng| {
+            let steps: Vec<(Vec<f32>, Vec<f32>)> =
+                (0..20).map(|_| loss_gnorm(rng, 64)).collect();
+            let beta = -1.0 + 2.0 * rng.next_f32();
+            (steps, beta)
+        },
+        |(steps, beta)| {
+            let mut ada = AdaSelection::new(AdaConfig {
+                candidates: Method::ALL.to_vec(),
+                beta: *beta,
+                cl_on: true,
+                cl_power: -0.5,
+                rule: None,
+            });
+            for (l, g) in steps {
+                let k = (l.len() / 4).max(1);
+                let out = ada.step_host(l, g, k);
+                if out.selected.len() != k.min(l.len()) {
+                    return Err("wrong selection size".into());
+                }
+                let w = ada.weights();
+                if w.iter().any(|&x| !(x > 0.0) || !x.is_finite()) {
+                    return Err(format!("bad weights {w:?}"));
+                }
+                let sum: f32 = w.iter().sum();
+                if (sum - w.len() as f32).abs() > 1e-2 {
+                    return Err(format!("weights not normalized: sum {sum}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_single_method_selects_k_unique_in_range() {
+    prop_check(
+        "single-method selection",
+        0xA5,
+        150,
+        |rng| {
+            let (l, g) = loss_gnorm(rng, 128);
+            let k = 1 + rng.next_below(l.len() as u64) as usize;
+            let m = Method::ALL[rng.next_below(7) as usize];
+            let seed = rng.next_u64();
+            (l, g, k, m, seed)
+        },
+        |(l, g, k, m, seed)| {
+            let sel = SingleMethod::new(*m, *seed).select(&SelectionContext {
+                loss: l,
+                gnorm: g,
+                k: *k,
+            });
+            if sel.len() != *k {
+                return Err(format!("{m:?}: got {} want {k}", sel.len()));
+            }
+            let mut s = sel.clone();
+            s.sort_unstable();
+            s.dedup();
+            if s.len() != *k {
+                return Err(format!("{m:?}: duplicate rows"));
+            }
+            if s.iter().any(|&i| i >= l.len()) {
+                return Err(format!("{m:?}: row out of range"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_alpha_order_consistency() {
+    // big_loss α must order exactly like the losses; small_loss inversely
+    prop_check(
+        "alpha ordering",
+        0xA6,
+        100,
+        |rng| loss_gnorm(rng, 100),
+        |(loss, gnorm)| {
+            let big = alpha(Method::BigLoss, loss, gnorm);
+            let small = alpha(Method::SmallLoss, loss, gnorm);
+            for i in 0..loss.len() {
+                for j in (i + 1)..loss.len() {
+                    if loss[i] > loss[j] + 1e-6 {
+                        if big[i] < big[j] - 1e-7 {
+                            return Err(format!("big α misordered at ({i},{j})"));
+                        }
+                        if small[i] > small[j] + 1e-7 {
+                            return Err(format!("small α misordered at ({i},{j})"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
