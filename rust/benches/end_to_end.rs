@@ -1,27 +1,23 @@
 //! End-to-end benchmarks: one section per paper table/figure, miniature
 //! sweeps that regenerate the same rows/series shape (full-size runs via
-//! `adaselection sweep --exp ...`). Also reports per-step artifact costs —
+//! `adaselection sweep --exp ...`). Also reports per-step backend costs —
 //! the inputs to the paper's fwd(B) + train(⌈γB⌉) vs train(B) cost model.
 //!
-//! Run: cargo bench (after `make artifacts`).
-
-use std::path::PathBuf;
+//! Runs on the native backend (no artifacts needed); build with
+//! `--features xla` and provide artifacts to cover the PJRT path instead.
+//! `cargo bench -- --test` runs a one-figure smoke (CI).
 
 use adaselection::data;
 use adaselection::harness::{run_experiment_with, SweepOptions};
 use adaselection::pipeline::gather;
-use adaselection::runtime::Engine;
+use adaselection::runtime::{Backend, NativeBackend};
 use adaselection::util::bench::{bench, print_results, BenchResult};
 
 fn main() {
-    let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
-    if !dir.join("manifest.json").exists() {
-        println!("artifacts missing — run `make artifacts` first");
-        return;
-    }
-    let mut engine = Engine::new(&dir).expect("engine");
+    let smoke = std::env::args().any(|a| a == "--test");
+    let mut backend = NativeBackend::new();
 
-    artifact_step_costs(&mut engine);
+    backend_step_costs(&mut backend, smoke);
 
     // Miniature reproduction of every table/figure (quick mode): the bench
     // asserts the harness can regenerate each one and prints the rows.
@@ -30,53 +26,55 @@ fn main() {
         quick: true,
         ..SweepOptions::default()
     };
-    for exp in [
-        "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table3",
-    ] {
-        println!("\n########## {exp} (quick miniature) ##########");
+    let experiments: &[&str] = if smoke {
+        &["fig5"]
+    } else {
+        &["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table3"]
+    };
+    for exp in experiments {
+        println!("\n########## {exp} (quick miniature, native backend) ##########");
         let t0 = std::time::Instant::now();
-        run_experiment_with(&mut engine, exp, &opts).expect(exp);
+        run_experiment_with(&mut backend, exp, &opts).expect(exp);
         println!("[{exp} regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
     }
 }
 
-/// The cost model behind Fig 3: per-artifact step times.
-fn artifact_step_costs(engine: &mut Engine) {
+/// The cost model behind Fig 3: per-step times on the classification
+/// surrogate family (B=128) across the train-size grid.
+fn backend_step_costs(backend: &mut NativeBackend, smoke: bool) {
+    let ms = |full: u64| if smoke { 1 } else { full };
     let mut results: Vec<BenchResult> = Vec::new();
     let split = data::build("cifar10", 5, 0.01).unwrap();
-    let fam = engine.manifest.family("resnet_c10").unwrap().clone();
-    let mut state = engine.init_state("resnet_c10", 1).unwrap();
-    let idx: Vec<usize> = (0..fam.batch).collect();
-    let full = gather(&split.train, &idx, fam.batch, 0, 0);
-
-    // warm the executables
-    let _ = engine.forward(&state, &full).unwrap();
+    let meta = backend.family_meta("resnet_c10").unwrap();
+    let mut state = backend.init_state("resnet_c10", 1).unwrap();
+    let idx: Vec<usize> = (0..meta.batch.min(split.train.len())).collect();
+    let full = gather(&split.train, &idx, meta.batch, 0, 0);
 
     results.push({
-        let mut st = engine.init_state("resnet_c10", 1).unwrap();
-        let eng = &mut *engine;
+        let st = backend.init_state("resnet_c10", 1).unwrap();
         let b = full.clone();
-        bench("resnet fwd(B=128) loss+gnorm", 800, move || {
-            std::hint::black_box(eng.forward(&st, &b).unwrap());
-            let _ = &mut st;
+        let be = &mut *backend;
+        bench("fwd(B=128) loss+gnorm (native)", ms(400), move || {
+            std::hint::black_box(be.forward_scores(&st, &b).unwrap());
         })
     });
-    for k in fam.train_sizes.clone() {
-        let rows: Vec<usize> = (0..k.min(fam.batch)).collect();
+    // the paper's K grid for B=128 plus the full batch
+    for k in [13usize, 26, 39, 52, 64, 128] {
+        let rows: Vec<usize> = (0..k).collect();
         let sub = full.gather_rows(&rows);
-        let _ = engine.train_step(&mut state, &sub, 0.01).unwrap();
-        let eng = &mut *engine;
-        let mut st = eng.init_state("resnet_c10", 1).unwrap();
+        let _ = backend.train_step(&mut state, &sub, 0.01).unwrap();
+        let mut st = backend.init_state("resnet_c10", 1).unwrap();
+        let be = &mut *backend;
         results.push(bench(
-            &format!("resnet train_step(K={k})"),
-            800,
+            &format!("train_step(K={k}) (native)"),
+            ms(400),
             move || {
-                std::hint::black_box(eng.train_step(&mut st, &sub, 0.01).unwrap());
+                std::hint::black_box(be.train_step(&mut st, &sub, 0.01).unwrap());
             },
         ));
     }
     print_results(
-        "fig3 cost model: per-step artifact times (method = fwd(128)+train(K); benchmark = train(128))",
+        "fig3 cost model: per-step times (method = fwd(128)+train(K); benchmark = train(128))",
         &results,
     );
 }

@@ -1,7 +1,9 @@
 //! Data-pipeline benchmarks: batch gather cost and streaming-loader
 //! throughput across worker counts (prefetch + backpressure + reorder).
 //! Target (DESIGN.md §9): the loader must sustain ≥ 2× the trainer's batch
-//! rate so the XLA path never starves.
+//! rate so the compute backend never starves.
+//!
+//! `cargo bench -- --test` runs one-iteration smoke mode (CI).
 
 use adaselection::data;
 use adaselection::pipeline::{gather, Loader, LoaderConfig};
@@ -9,17 +11,20 @@ use adaselection::util::bench::{bench, print_results, BenchResult};
 use adaselection::util::timer::Stopwatch;
 
 fn main() {
-    let split = data::build("cifar10", 3, 0.1).unwrap(); // 5000 imgs
+    let smoke = std::env::args().any(|a| a == "--test");
+    let ms = |full: u64| if smoke { 1 } else { full };
+    let scale = if smoke { 0.02 } else { 0.1 };
+    let split = data::build("cifar10", 3, scale).unwrap(); // 5000 imgs at 0.1
     let ds = split.train;
     let idx: Vec<usize> = (0..128).collect();
 
     let mut results: Vec<BenchResult> = Vec::new();
-    results.push(bench("gather 128x16x16x3 batch", 80, || {
+    results.push(bench("gather 128x16x16x3 batch", ms(80), || {
         std::hint::black_box(gather(&ds, &idx, 128, 0, 0));
     }));
     let b = gather(&ds, &idx, 128, 0, 0);
     let rows: Vec<usize> = (0..26).collect();
-    results.push(bench("gather_rows 26-of-128 sub-batch", 50, || {
+    results.push(bench("gather_rows 26-of-128 sub-batch", ms(50), || {
         std::hint::black_box(b.gather_rows(&rows));
     }));
     print_results("batch assembly", &results);
@@ -52,37 +57,41 @@ fn main() {
     }
 
     // consumer-limited regime: loader must keep the buffer full under a
-    // slow trainer (simulated 2ms/step)
-    println!("\n## prefetch under slow consumer (2 ms simulated train step)");
-    for workers in [0usize, 2] {
-        let cfg = LoaderConfig {
-            batch_size: 128,
-            epochs: 1,
-            seed: 1,
-            workers,
-            capacity: 8,
-            drop_last: true,
-        };
-        let mut loader = Loader::start(ds.clone(), &cfg);
-        let sw = Stopwatch::new();
-        let mut wait = 0.0f64;
-        loop {
-            let t = Stopwatch::new();
-            let r = loader.next_batch();
-            wait += t.elapsed_secs();
-            match r {
-                Some(b) => {
-                    std::hint::black_box(&b);
-                    std::thread::sleep(std::time::Duration::from_millis(2));
+    // slow trainer (simulated 2ms/step; skipped in smoke mode)
+    if !smoke {
+        println!("\n## prefetch under slow consumer (2 ms simulated train step)");
+        for workers in [0usize, 2] {
+            let cfg = LoaderConfig {
+                batch_size: 128,
+                epochs: 1,
+                seed: 1,
+                workers,
+                capacity: 8,
+                drop_last: true,
+            };
+            let mut loader = Loader::start(ds.clone(), &cfg);
+            let sw = Stopwatch::new();
+            let mut wait = 0.0f64;
+            loop {
+                let t = Stopwatch::new();
+                let r = loader.next_batch();
+                wait += t.elapsed_secs();
+                match r {
+                    Some(b) => {
+                        std::hint::black_box(&b);
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    None => break,
                 }
-                None => break,
             }
+            println!(
+                "workers={workers}: total={:.3}s, time blocked on loader={:.3}s ({:.1}%), \
+                 buffered high-watermark={}",
+                sw.elapsed_secs(),
+                wait,
+                100.0 * wait / sw.elapsed_secs(),
+                loader.buffered_high_watermark()
+            );
         }
-        println!(
-            "workers={workers}: total={:.3}s, time blocked on loader={:.3}s ({:.1}%)",
-            sw.elapsed_secs(),
-            wait,
-            100.0 * wait / sw.elapsed_secs()
-        );
     }
 }

@@ -1,9 +1,11 @@
 //! Selection-path micro-benchmarks: the per-iteration L3 hot path
-//! (α transforms, fused scoring, top-k, weight update) plus the XLA score
-//! kernel for comparison. Selection overhead must stay ≪ forward time
+//! (α transforms, fused scoring, top-k, weight update) plus the backend
+//! scorers for comparison. Selection overhead must stay ≪ forward time
 //! (DESIGN.md §9 target: < 5%).
+//!
+//! `cargo bench -- --test` runs one-iteration smoke mode (CI).
 
-use adaselection::runtime::Engine;
+use adaselection::runtime::{Backend, NativeBackend};
 use adaselection::selection::adaselection::score_host;
 use adaselection::selection::method::all_alphas;
 use adaselection::selection::{AdaConfig, AdaSelection, Method};
@@ -20,19 +22,21 @@ fn inputs(b: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let ms = |full: u64| if smoke { 1 } else { full };
     let mut results: Vec<BenchResult> = Vec::new();
 
     for &b in &[128usize, 1024, 8192] {
         let (loss, gnorm) = inputs(b, b as u64);
-        results.push(bench(&format!("all_alphas 7 methods, B={b}"), 60, || {
+        results.push(bench(&format!("all_alphas 7 methods, B={b}"), ms(60), || {
             std::hint::black_box(all_alphas(&loss, &gnorm));
         }));
         let w = [1.0f32; 7];
-        results.push(bench(&format!("score_host fused, B={b}"), 60, || {
+        results.push(bench(&format!("score_host fused, B={b}"), ms(60), || {
             std::hint::black_box(score_host(&loss, &gnorm, &w, 10, -0.5, true));
         }));
         let k = b / 5;
-        results.push(bench(&format!("top_k k={k}, B={b}"), 60, || {
+        results.push(bench(&format!("top_k k={k}, B={b}"), ms(60), || {
             std::hint::black_box(top_k_indices(&loss, k));
         }));
     }
@@ -43,25 +47,38 @@ fn main() {
         candidates: Method::ALL.to_vec(),
         ..AdaConfig::default()
     });
-    results.push(bench("AdaSelection::step_host B=128 (7 cand)", 80, || {
+    results.push(bench("AdaSelection::step_host B=128 (7 cand)", ms(80), || {
         std::hint::black_box(ada.step_host(&loss, &gnorm, 26));
+    }));
+
+    // the native backend scorer (same math the trainer calls with
+    // --kernel-scorer on the default backend)
+    let mut native = NativeBackend::new();
+    let (loss, gnorm) = inputs(128, 11);
+    let w = [1.0f32; 7];
+    results.push(bench("score native backend B=128", ms(60), || {
+        std::hint::black_box(native.score(&loss, &gnorm, &w, 1, -0.5, true).unwrap());
     }));
 
     print_results("selection micro-benchmarks (host path)", &results);
 
-    // XLA score-kernel path, if artifacts exist
-    let dir = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
-    if dir.join("manifest.json").exists() {
-        let mut engine = Engine::new(&dir).expect("engine");
-        let (loss, gnorm) = inputs(128, 11);
-        let w = [1.0f32; 7];
-        // compile outside the timed region
-        let _ = engine.score(&loss, &gnorm, &w, 1, -0.5, true).unwrap();
-        let r = bench("score kernel (XLA, pallas) B=128", 200, || {
-            std::hint::black_box(engine.score(&loss, &gnorm, &w, 1, -0.5, true).unwrap());
-        });
-        print_results("selection scoring on the L1 kernel", &[r]);
-    } else {
-        println!("(artifacts missing — skipping XLA score kernel bench)");
+    // XLA score-kernel path, if built with the feature + artifacts exist
+    #[cfg(feature = "xla")]
+    {
+        use adaselection::runtime::Engine;
+        let dir = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if dir.join("manifest.json").exists() {
+            let mut engine = Engine::new(&dir).expect("engine");
+            let (loss, gnorm) = inputs(128, 11);
+            let w = [1.0f32; 7];
+            // compile outside the timed region
+            let _ = engine.score(&loss, &gnorm, &w, 1, -0.5, true).unwrap();
+            let r = bench("score kernel (XLA, pallas) B=128", ms(200), || {
+                std::hint::black_box(engine.score(&loss, &gnorm, &w, 1, -0.5, true).unwrap());
+            });
+            print_results("selection scoring on the L1 kernel", &[r]);
+        } else {
+            println!("(artifacts missing — skipping XLA score kernel bench)");
+        }
     }
 }

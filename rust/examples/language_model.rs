@@ -2,10 +2,10 @@
 //! AdaSelection vs uniform vs big-loss subsampling for next-token training.
 //! Note grad_norm is excluded, matching the paper's footnote 4.
 //!
-//! Run: make artifacts && cargo run --release --example language_model
+//! Run: cargo run --release --example language_model
 
 use adaselection::config::RunConfig;
-use adaselection::runtime::Engine;
+use adaselection::runtime::NativeBackend;
 use adaselection::train;
 use adaselection::util::logging;
 
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         c.data_scale = 0.01; // ~20k train tokens → ~650 windows
         c
     };
-    let mut engine = Engine::new(&base.artifacts_dir)?;
+    let mut backend = NativeBackend::new();
 
     println!("{:<45} {:>10} {:>10} {:>10}", "selector", "test_loss", "tok_acc", "time_s");
     for sel in [
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     ] {
         let mut cfg = base.clone();
         cfg.selector = sel.into();
-        let r = train::run_with(&mut engine, cfg)?;
+        let r = train::run_with(&mut backend, cfg)?;
         println!(
             "{:<45} {:>10.4} {:>10.4} {:>10.2}",
             r.selector,

@@ -25,7 +25,10 @@ fn main() {
     let b = 128;
     let k = 26;
 
-    println!("{:>5} {:>9} {:>10} {:>10} {:>9}  phase", "iter", "w_big", "w_small", "w_uniform", "sel_loss");
+    println!(
+        "{:>5} {:>9} {:>10} {:>10} {:>9}  phase",
+        "iter", "w_big", "w_small", "w_uniform", "sel_loss"
+    );
     for t in 0..150usize {
         let phase = match t {
             0..=49 => "warmup",

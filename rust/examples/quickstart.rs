@@ -1,7 +1,7 @@
 //! Quickstart: train a small MLP on the paper's y = 2x + 1 regression task
 //! with AdaSelection at a 20% sampling rate, in ~10 lines of API.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart   (pure Rust, no artifacts)
 
 use adaselection::config::RunConfig;
 use adaselection::train;

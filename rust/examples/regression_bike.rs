@@ -3,10 +3,10 @@
 //! outliers — the regime where Big Loss chases corrupted targets and the
 //! coreset approximations shine.
 //!
-//! Run: make artifacts && cargo run --release --example regression_bike
+//! Run: cargo run --release --example regression_bike
 
 use adaselection::config::RunConfig;
-use adaselection::runtime::Engine;
+use adaselection::runtime::NativeBackend;
 use adaselection::train;
 use adaselection::util::logging;
 
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         c.lr = 0.02;
         c
     };
-    let mut engine = Engine::new(&base.artifacts_dir)?;
+    let mut backend = NativeBackend::new();
 
     println!(
         "{:<45} {:>10} {:>10}",
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     for sel in selectors {
         let mut cfg = base.clone();
         cfg.selector = sel.into();
-        let r = train::run_with(&mut engine, cfg)?;
+        let r = train::run_with(&mut backend, cfg)?;
         println!(
             "{:<45} {:>10.4} {:>10.2}",
             r.selector,

@@ -8,12 +8,12 @@
 //! logging the loss curve per epoch and reporting the paper's headline
 //! metric: wall-clock training-time saving at comparable test accuracy.
 //!
-//! Run: make artifacts && cargo run --release --example train_e2e
+//! Run: cargo run --release --example train_e2e
 //! Env: E2E_EPOCHS / E2E_SCALE to resize (defaults: 6 epochs, 0.04 scale
 //! ⇒ 2000 train / 400 test images).
 
 use adaselection::config::RunConfig;
-use adaselection::runtime::Engine;
+use adaselection::runtime::NativeBackend;
 use adaselection::train;
 use adaselection::util::logging;
 
@@ -31,19 +31,19 @@ fn main() -> anyhow::Result<()> {
         c.workers = 2;
         c
     };
-    let mut engine = Engine::new(&base.artifacts_dir)?;
+    let mut backend = NativeBackend::new();
 
     println!("=== benchmark (no subsampling) ===");
     let mut bench_cfg = base.clone();
     bench_cfg.selector = "benchmark".into();
-    let bench = train::run_with(&mut engine, bench_cfg)?;
+    let bench = train::run_with(&mut backend, bench_cfg)?;
     print_curve(&bench);
 
     println!("\n=== AdaSelection γ = 0.3 (big_loss + small_loss + uniform) ===");
     let mut ada_cfg = base.clone();
     ada_cfg.selector = "adaselection:big_loss+small_loss+uniform".into();
     ada_cfg.gamma = 0.3;
-    let ada = train::run_with(&mut engine, ada_cfg)?;
+    let ada = train::run_with(&mut backend, ada_cfg)?;
     print_curve(&ada);
 
     let saving = 100.0 * (1.0 - ada.train_time_s() / bench.train_time_s());

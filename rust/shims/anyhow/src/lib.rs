@@ -1,0 +1,205 @@
+//! Offline stand-in for the `anyhow` crate (this container has no cargo
+//! registry). Implements exactly the API surface the workspace uses:
+//! [`Error`], [`Result`], [`anyhow!`], [`bail!`], [`ensure!`], a blanket
+//! `From<E: std::error::Error>` conversion, and `Context` on results.
+//! The crate is a drop-in path dependency — replace it with crates.io
+//! `anyhow = "1"` when building against a registry.
+
+use std::fmt;
+
+/// A dynamically typed error with an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap a new message around this error (context chaining).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(Boxed(self.to_string(), self.source))),
+        }
+    }
+
+    /// Iterate the cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = String> + '_ {
+        let mut items = vec![self.msg.clone()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> =
+            self.source.as_ref().map(|b| &**b as _);
+        while let Some(e) = cur {
+            items.push(e.to_string());
+            cur = e.source();
+        }
+        items.into_iter()
+    }
+}
+
+/// Internal chain link so `context` preserves the original error text.
+#[derive(Debug)]
+struct Boxed(
+    String,
+    Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+);
+
+impl fmt::Display for Boxed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Boxed {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.1.as_deref().map(|e| e as _)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur: Option<&(dyn std::error::Error + 'static)> =
+                self.source.as_ref().map(|b| &**b as _);
+            while let Some(e) = cur {
+                write!(f, ": {e}")?;
+                cur = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur: Option<&(dyn std::error::Error + 'static)> =
+            self.source.as_ref().map(|b| &**b as _);
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+// NB: `Error` deliberately does NOT implement `std::error::Error`, exactly
+// like real anyhow — that is what makes the blanket From below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error {
+            msg: e.to_string(),
+            source: e.source().map(|s| {
+                Box::new(Boxed(s.to_string(), None))
+                    as Box<dyn std::error::Error + Send + Sync>
+            }),
+        }
+    }
+}
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let e = fails(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+
+        let io: Result<()> = Err(std::io::Error::other("boom").into());
+        assert!(io.unwrap_err().to_string().contains("boom"));
+
+        let ctx = fails(false).context("outer").unwrap_err();
+        assert_eq!(format!("{ctx:#}"), "outer: flag was false");
+    }
+
+    #[test]
+    fn bail_short_circuits() {
+        fn f() -> Result<()> {
+            bail!("no {}", "good");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "no good");
+    }
+}

@@ -1,0 +1,254 @@
+//! Offline stand-in for the `log` facade crate (this container has no cargo
+//! registry). Implements the subset the workspace uses: the five level
+//! macros, [`Log`], [`Record`]/[`Metadata`], [`set_logger`]/[`set_max_level`]
+//! and [`max_level`]. Drop-in path dependency — replace with crates.io
+//! `log = "0.4"` when building against a registry.
+
+use std::fmt;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+
+/// Logging verbosity levels, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// A level filter: `Off` plus every [`Level`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    fn as_usize(self) -> usize {
+        self as usize
+    }
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        self.as_usize() == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        self.as_usize().partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata about a log invocation (level + target module path).
+#[derive(Clone, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log invocation: metadata plus the formatted message arguments.
+#[derive(Clone, Debug)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A log sink, registered once via [`set_logger`].
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        false
+    }
+
+    fn log(&self, _: &Record) {}
+
+    fn flush(&self) {}
+}
+
+static NOP: NopLogger = NopLogger;
+static LOGGER: AtomicPtr<&'static dyn Log> = AtomicPtr::new(std::ptr::null_mut());
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    let cell: Box<&'static dyn Log> = Box::new(logger);
+    let ptr = Box::into_raw(cell);
+    match LOGGER.compare_exchange(
+        std::ptr::null_mut(),
+        ptr,
+        Ordering::SeqCst,
+        Ordering::SeqCst,
+    ) {
+        Ok(_) => Ok(()),
+        Err(_) => {
+            // lost the race: reclaim the box we just leaked
+            drop(unsafe { Box::from_raw(ptr) });
+            Err(SetLoggerError(()))
+        }
+    }
+}
+
+fn logger() -> &'static dyn Log {
+    let ptr = LOGGER.load(Ordering::SeqCst);
+    if ptr.is_null() {
+        &NOP
+    } else {
+        unsafe { *ptr }
+    }
+}
+
+/// Set the maximum level that will be dispatched.
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level as usize, Ordering::SeqCst);
+}
+
+/// The currently configured maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::SeqCst) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Dispatch one record to the installed logger (macro plumbing).
+pub fn __dispatch(level: Level, target: &str, args: fmt::Arguments) {
+    if level.as_usize() > MAX_LEVEL.load(Ordering::SeqCst) {
+        return;
+    }
+    let record = Record {
+        metadata: Metadata { level, target },
+        args,
+    };
+    let l = logger();
+    if l.enabled(&record.metadata) {
+        l.log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__dispatch($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= max_level()
+        }
+
+        fn log(&self, record: &Record) {
+            let _ = record.args();
+            HITS.fetch_add(1, Ordering::SeqCst);
+        }
+
+        fn flush(&self) {}
+    }
+
+    static COUNTER: Counter = Counter;
+
+    #[test]
+    fn filtering_and_dispatch() {
+        let _ = set_logger(&COUNTER);
+        set_max_level(LevelFilter::Info);
+        info!("hello {}", 1);
+        debug!("filtered out");
+        assert!(HITS.load(Ordering::SeqCst) >= 1);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        // second install fails
+        assert!(set_logger(&COUNTER).is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! Offline stub of the `xla` PJRT bindings (this container ships neither the
+//! crate nor `libxla_extension`). The goal is to keep the `--features xla`
+//! code path *compiling* everywhere:
+//!
+//!   * [`Literal`] is a real host-side typed buffer (create/read/tuple all
+//!     work — the `runtime::exec` packing tests exercise it), so code that
+//!     only marshals data behaves identically to the real crate;
+//!   * [`PjRtClient::compile`] / [`PjRtLoadedExecutable::execute`] return
+//!     [`Error::StubRuntime`] — executing HLO needs the real PJRT runtime.
+//!
+//! Deployments with the real `xla` crate replace the `[patch]`-style path
+//! dependency in `rust/Cargo.toml`; no source changes are needed.
+
+use std::fmt;
+
+/// Errors surfaced by the stub (mirrors the real crate's single error enum).
+#[derive(Debug)]
+pub enum Error {
+    /// The operation needs the real PJRT runtime.
+    StubRuntime(&'static str),
+    /// Host-side usage error (shape/dtype mismatch, missing file, ...).
+    Usage(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::StubRuntime(op) => write!(
+                f,
+                "xla stub: '{op}' requires the real PJRT runtime (build with the \
+                 real `xla` crate; see rust/shims/xla)"
+            ),
+            Error::Usage(msg) => write!(f, "xla stub: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the workspace uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Host native types mappable to an [`ElementType`].
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn to_bytes(self) -> [u8; 4];
+    fn from_bytes(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+
+    fn to_bytes(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+
+    fn from_bytes(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+
+    fn to_bytes(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+
+    fn from_bytes(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A host-side typed array (or tuple of arrays) — fully functional.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Array {
+        ty: ElementType,
+        shape: Vec<usize>,
+        data: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build an array literal from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = shape.iter().product();
+        if data.len() != elems * ty.byte_size() {
+            return Err(Error::Usage(format!(
+                "{} bytes for shape {shape:?} ({ty:?})",
+                data.len()
+            )));
+        }
+        Ok(Literal::Array {
+            ty,
+            shape: shape.to_vec(),
+            data: data.to_vec(),
+        })
+    }
+
+    /// A rank-0 literal holding one element.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal::Array {
+            ty: T::ELEMENT_TYPE,
+            shape: Vec::new(),
+            data: v.to_bytes().to_vec(),
+        }
+    }
+
+    /// Number of elements (tuples: sum over members).
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::Array { ty, data, .. } => data.len() / ty.byte_size(),
+            Literal::Tuple(members) => members.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Read the array back as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { ty, data, .. } => {
+                if *ty != T::ELEMENT_TYPE {
+                    return Err(Error::Usage(format!(
+                        "to_vec dtype mismatch: literal is {ty:?}"
+                    )));
+                }
+                Ok(data
+                    .chunks_exact(4)
+                    .map(|c| T::from_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            }
+            Literal::Tuple(_) => Err(Error::Usage("to_vec on a tuple literal".into())),
+        }
+    }
+
+    /// First element of the array (scalar reads).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::Usage("get_first_element on empty literal".into()))
+    }
+
+    /// Decompose a tuple literal into its members.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(members) => Ok(members),
+            Literal::Array { .. } => Err(Error::Usage("to_tuple on an array literal".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (the stub stores the text verbatim).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact from disk (real parsing happens at
+    /// compile time, which the stub cannot do).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Usage(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+pub struct XlaComputation {
+    _module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _module: proto.clone(),
+        }
+    }
+}
+
+/// The PJRT client. `cpu()` succeeds so hosts can introspect manifests;
+/// compilation is where the stub stops.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient(()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::StubRuntime("compile"))
+    }
+}
+
+/// A device buffer handle (never actually produced by the stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::StubRuntime("to_literal_sync"))
+    }
+}
+
+/// A compiled executable (never actually produced by the stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::StubRuntime("execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_tuple() {
+        let l = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0, 0, 128, 63, 0, 0, 0, 64], // [1.0, 2.0]
+        )
+        .unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(l.element_count(), 2);
+        assert!(l.to_vec::<i32>().is_err());
+
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+
+        let t = Literal::Tuple(vec![l.clone(), s]);
+        assert_eq!(t.element_count(), 3);
+        let members = t.to_tuple().unwrap();
+        assert_eq!(members.len(), 2);
+        assert!(l.to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_ops_error_clearly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 1);
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("PJRT"));
+    }
+}

@@ -66,18 +66,24 @@ USAGE:
 
 COMMANDS:
   train               run one training job
-                      --dataset D --selector S --gamma G --epochs N --lr X
+                      --backend native|xla --dataset D --selector S
+                      --gamma G --epochs N --lr X
                       --beta B --cl on|off --cl-power P --seed N
                       --data-scale F --workers N --accumulate on|off
                       --kernel-scorer on|off --config FILE --out DIR
   sweep               reproduce a paper experiment
                       --exp fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|table3|table4|all
-                      --out DIR [--epochs N --data-scale F --seed N --quick]
+                      --out DIR [--backend native|xla --epochs N
+                      --data-scale F --seed N --quick]
   list-experiments    print the experiment registry (paper figure/table map)
-  inspect-artifacts   print the artifact manifest summary
+  inspect-artifacts   print the artifact manifest summary (xla backend)
   gen-data            generate + describe a dataset
                       --dataset D [--data-scale F --seed N]
   help                this text
+
+The default backend is `native` (pure Rust, no artifacts needed). The xla
+backend executes the HLO artifacts from `make artifacts` and requires
+building with `--features xla`.
 
 All training options can also come from --config FILE (JSON) with CLI flags
 taking precedence. Artifacts default to ./artifacts ($ADASELECTION_ARTIFACTS).

@@ -13,6 +13,9 @@ use crate::util::json::Json;
 /// Configuration of a single training run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// compute backend: native (pure Rust, default) | xla (PJRT artifacts,
+    /// needs `--features xla`)
+    pub backend: String,
     /// dataset name: cifar10|cifar100|svhn|simple|bike|wikitext
     pub dataset: String,
     /// selector spec: benchmark | <method> | adaselection[:m1+m2...]
@@ -51,6 +54,7 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
+            backend: "native".into(),
             dataset: "cifar10".into(),
             selector: "adaselection".into(),
             gamma: 0.2,
@@ -83,6 +87,11 @@ impl RunConfig {
     /// Sanity-check ranges before a run starts.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
+            self.backend == "native" || self.backend == "xla",
+            "unknown backend '{}' (expected native|xla)",
+            self.backend
+        );
+        anyhow::ensure!(
             self.gamma > 0.0 && self.gamma <= 1.0,
             "gamma {} outside (0, 1]",
             self.gamma
@@ -114,6 +123,7 @@ impl RunConfig {
     /// Apply `--key value` overrides (CLI surface).
     pub fn apply_override(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
         match key {
+            "backend" => self.backend = value.into(),
             "dataset" => self.dataset = value.into(),
             "selector" => self.selector = value.into(),
             "gamma" => self.gamma = value.parse()?,
@@ -169,6 +179,7 @@ impl RunConfig {
     /// Serialize for provenance in reports.
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
+        m.insert("backend".into(), Json::Str(self.backend.clone()));
         m.insert("dataset".into(), Json::Str(self.dataset.clone()));
         m.insert("selector".into(), Json::Str(self.selector.clone()));
         m.insert("gamma".into(), Json::Num(self.gamma));
@@ -250,6 +261,18 @@ mod tests {
         assert_eq!(back.dataset, "svhn");
         assert!((back.gamma - 0.3).abs() < 1e-12);
         assert!(back.accumulate);
+    }
+
+    #[test]
+    fn backend_selection_validates() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.backend, "native");
+        cfg.apply_override("backend", "xla").unwrap();
+        cfg.validate().unwrap();
+        cfg.backend = "cuda".into();
+        assert!(cfg.validate().is_err());
+        let j = cfg.to_json();
+        assert!(j.to_string().contains("backend"));
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::path::PathBuf;
 use crate::config::RunConfig;
 use crate::harness::report;
 use crate::metrics::RunResult;
-use crate::runtime::Engine;
+use crate::runtime::{Backend, NativeBackend};
 use crate::train;
 
 /// A registry entry.
@@ -22,6 +22,7 @@ pub struct Experiment {
 }
 
 /// Every table and figure in the paper's evaluation section.
+#[rustfmt::skip]
 pub fn registry() -> Vec<Experiment> {
     vec![
         Experiment { id: "fig1", paper_ref: "Figure 1", description: "SVHN test accuracy vs sampling rate (9 selectors)" },
@@ -46,6 +47,8 @@ pub fn registry() -> Vec<Experiment> {
 /// Sweep-level options from the CLI.
 #[derive(Clone, Debug)]
 pub struct SweepOptions {
+    /// compute backend for every job: native | xla
+    pub backend: String,
     pub out_dir: PathBuf,
     pub epochs: usize,
     pub data_scale: f64,
@@ -58,6 +61,7 @@ pub struct SweepOptions {
 impl Default for SweepOptions {
     fn default() -> Self {
         SweepOptions {
+            backend: "native".to_string(),
             out_dir: PathBuf::from("results"),
             epochs: 8,
             data_scale: 0.02,
@@ -81,6 +85,7 @@ impl SweepOptions {
     fn base_config(&self, dataset: &str, selector: &str, gamma: f64) -> RunConfig {
         let (epochs, data_scale) = self.effective();
         let mut cfg = RunConfig::default();
+        cfg.backend = self.backend.clone();
         cfg.dataset = dataset.into();
         cfg.selector = selector.into();
         cfg.gamma = gamma;
@@ -128,8 +133,8 @@ pub fn adaselection_variants() -> Vec<(&'static str, &'static str, bool)> {
 }
 
 /// Run a full dataset sweep: all selectors × γ grid.
-pub fn dataset_sweep(
-    engine: &mut Engine,
+pub fn dataset_sweep<B: Backend>(
+    engine: &mut B,
     dataset: &str,
     opts: &SweepOptions,
 ) -> anyhow::Result<Vec<RunResult>> {
@@ -176,8 +181,8 @@ pub fn dataset_sweep(
 }
 
 /// Accuracy/loss-vs-γ figure for one dataset (figs 1, 2, 4, 5, 6, 9).
-fn figure_metric_vs_gamma(
-    engine: &mut Engine,
+fn figure_metric_vs_gamma<B: Backend>(
+    engine: &mut B,
     id: &str,
     dataset: &str,
     opts: &SweepOptions,
@@ -217,7 +222,7 @@ fn emit_figure(
 }
 
 /// Fig 3: the training-time comparison (same sweep as fig2, time series).
-fn fig3(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+fn fig3<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
     let runs = dataset_sweep(engine, "cifar10", opts)?;
     let time = report::figure_series(&runs, |r| r.train_time_s());
     time.save(&opts.out_dir.join("fig3_cifar10_time.csv"))?;
@@ -241,7 +246,7 @@ fn fig3(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
 }
 
 /// Fig 7: β sensitivity of AdaSelection at γ = 0.2.
-fn fig7(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+fn fig7<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
     let betas = [-1.0f32, -0.5, 0.0, 0.5, 1.0];
     let datasets: &[&str] = if opts.quick {
         &["svhn"]
@@ -268,7 +273,7 @@ fn fig7(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
 }
 
 /// Fig 8: weight evolution traces at γ = 0.2.
-fn fig8(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+fn fig8<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
     let datasets: &[&str] = if opts.quick {
         &["simple"]
     } else {
@@ -291,7 +296,7 @@ fn fig8(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
 }
 
 /// Tables 3 & 4 over every dataset.
-fn tables(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+fn tables<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
     let datasets: &[&str] = if opts.quick {
         &["simple", "bike"]
     } else {
@@ -328,7 +333,7 @@ fn tables(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
 }
 
 /// Extension ablation: CL reward on vs off (same pool, γ grid).
-fn ablate_cl(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+fn ablate_cl<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
     let mut t = crate::metrics::csv::CsvTable::new(vec!["dataset", "cl", "gamma", "metric"]);
     let gammas: &[f64] = if opts.quick { &[0.2] } else { &[0.1, 0.2, 0.3] };
     for ds in ["cifar10", "simple"] {
@@ -353,7 +358,7 @@ fn ablate_cl(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
 }
 
 /// Extension ablation: Alg-2 accumulate mode vs immediate updates.
-fn ablate_accumulate(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+fn ablate_accumulate<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
     let mut t =
         crate::metrics::csv::CsvTable::new(vec!["dataset", "mode", "gamma", "metric", "time_s"]);
     let gammas: &[f64] = if opts.quick { &[0.2] } else { &[0.2, 0.4] };
@@ -379,7 +384,7 @@ fn ablate_accumulate(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result
 }
 
 /// Extension ablation (paper §5): stale-loss forward approximation.
-fn ablate_stale(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+fn ablate_stale<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
     let mut t = crate::metrics::csv::CsvTable::new(vec![
         "dataset", "refresh", "metric", "time_s", "fwd_batches",
     ]);
@@ -404,7 +409,7 @@ fn ablate_stale(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> 
 }
 
 /// Extension ablation (§3.2 bandit framing): weight-update rules.
-fn ablate_rule(engine: &mut Engine, opts: &SweepOptions) -> anyhow::Result<()> {
+fn ablate_rule<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
     let mut t =
         crate::metrics::csv::CsvTable::new(vec!["dataset", "rule", "gamma", "metric"]);
     let gammas: &[f64] = if opts.quick { &[0.2] } else { &[0.1, 0.2, 0.3] };
@@ -467,15 +472,34 @@ fn tables_from_aggregates(opts: &SweepOptions) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Entry point used by the CLI `sweep` command.
+/// Entry point used by the CLI `sweep` command: builds the backend named
+/// by `opts.backend` and runs the experiment on it.
 pub fn run_experiment(id: &str, opts: &SweepOptions) -> anyhow::Result<()> {
-    let mut engine = Engine::new(&opts.artifacts_dir)?;
+    match opts.backend.as_str() {
+        "native" => {
+            let mut backend = NativeBackend::new();
+            run_experiment_with(&mut backend, id, opts)
+        }
+        "xla" => run_experiment_xla(id, opts),
+        other => anyhow::bail!("unknown backend '{other}' (expected native|xla)"),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn run_experiment_xla(id: &str, opts: &SweepOptions) -> anyhow::Result<()> {
+    let mut engine = crate::runtime::Engine::new(&opts.artifacts_dir)?;
     run_experiment_with(&mut engine, id, opts)
 }
 
-/// Same, on a shared engine (compiled executables reused across sweeps).
-pub fn run_experiment_with(
-    engine: &mut Engine,
+#[cfg(not(feature = "xla"))]
+fn run_experiment_xla(_id: &str, _opts: &SweepOptions) -> anyhow::Result<()> {
+    anyhow::bail!("backend 'xla' requires building with `--features xla`")
+}
+
+/// Same, on a shared backend (compiled executables reused across sweeps
+/// on XLA).
+pub fn run_experiment_with<B: Backend>(
+    engine: &mut B,
     id: &str,
     opts: &SweepOptions,
 ) -> anyhow::Result<()> {

@@ -13,6 +13,25 @@
 //!     losses, grad-norm proxies and the fused AdaSelection scorer, baked
 //!     into the same HLO modules.
 //!
+//! ## Backends: L1-native vs L1-Pallas
+//!
+//! The trainer drives everything through [`runtime::Backend`], which has
+//! two implementations of the same L1 kernel math:
+//!
+//!   * **L1-native** ([`runtime::NativeBackend`], the default) — pure-Rust
+//!     ports of the reference kernels in `python/compile/kernels/ref.py`
+//!     (per-sample losses, grad-norm proxies, the fused AdaSelection
+//!     scorer) plus SGD+momentum train steps. No Python, no XLA shared
+//!     library, no artifacts directory; any subset size trains, so ⌈γB⌉ is
+//!     exact. This is the backend CI builds and tests on bare runners, and
+//!     the CPU-only deployment path.
+//!   * **L1-Pallas** ([`runtime::Engine`], behind `--features xla`) — the
+//!     PJRT engine executing the Pallas-backed HLO artifacts produced by
+//!     `make artifacts`; the perf path on real accelerators.
+//!
+//! Both scorers are the same math ([`selection::adaselection::score_full`]
+//! is the shared oracle), so selection trajectories agree across backends.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
 
 pub mod cli;

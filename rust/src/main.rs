@@ -101,6 +101,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let exp = args.flag_or("exp", "fig1");
     let mut opts = SweepOptions {
+        backend: args.flag_or("backend", "native"),
         out_dir: PathBuf::from(args.flag_or("out", "results")),
         quick: args.has("quick"),
         ..SweepOptions::default()

@@ -75,7 +75,13 @@ impl Batch {
 
 /// Gather `indices` (padded to `batch_size` by repeating index 0) from the
 /// dataset into flat buffers.
-pub fn gather(ds: &Dataset, indices: &[usize], batch_size: usize, epoch: usize, index_in_epoch: usize) -> Batch {
+pub fn gather(
+    ds: &Dataset,
+    indices: &[usize],
+    batch_size: usize,
+    epoch: usize,
+    index_in_epoch: usize,
+) -> Batch {
     assert!(indices.len() <= batch_size);
     let real = indices.len();
     let mut padded: Vec<usize> = indices.to_vec();

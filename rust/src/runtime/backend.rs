@@ -1,0 +1,202 @@
+//! The [`Backend`] abstraction: everything the trainer needs from a compute
+//! runtime, with two implementations —
+//!
+//!   * [`crate::runtime::NativeBackend`] — pure-Rust ports of the L1
+//!     reference kernels (`python/compile/kernels/ref.py`); zero native
+//!     dependencies, runs anywhere, any subset size;
+//!   * [`crate::runtime::Engine`] (behind `--features xla`) — the PJRT/XLA
+//!     engine executing the Pallas-backed HLO artifacts.
+//!
+//! The trainer, harness and benches are generic over `B: Backend`, so every
+//! selection policy, figure sweep and perf experiment runs identically on
+//! both; CI exercises the native path on bare runners.
+
+use crate::pipeline::Batch;
+
+/// Task type of a model family (mirrors `data::Task` without payload).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Classification,
+    Regression,
+    Lm,
+}
+
+/// A plain host tensor: row-major f32 data plus its shape.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Batch geometry + task of one model family, backend-agnostic.
+#[derive(Clone, Debug)]
+pub struct FamilyMeta {
+    pub name: String,
+    pub task: TaskKind,
+    /// full (selection) batch size B
+    pub batch: usize,
+    /// train-step subset sizes the backend supports; `None` = any size
+    /// (the native backend has no compiled-shape constraint)
+    pub sizes: Option<Vec<usize>>,
+}
+
+/// Smallest size in `sizes` that is ≥ k (fallback: the largest; `k` itself
+/// when `sizes` is empty). The single owner of the size-rounding rule —
+/// both the manifest view and [`FamilyMeta`] delegate here.
+pub fn round_up_size(sizes: &[usize], k: usize) -> usize {
+    sizes
+        .iter()
+        .copied()
+        .find(|&s| s >= k)
+        .or_else(|| sizes.last().copied())
+        .unwrap_or(k)
+}
+
+impl FamilyMeta {
+    /// Smallest supported train size ≥ k (exact k when unconstrained).
+    pub fn round_size(&self, k: usize) -> usize {
+        match &self.sizes {
+            None => k,
+            Some(sizes) => round_up_size(sizes, k),
+        }
+    }
+}
+
+/// Output of a fused forward + AdaSelection-score pass.
+#[derive(Clone, Debug)]
+pub struct FusedForward {
+    pub loss: Vec<f32>,
+    pub gnorm: Vec<f32>,
+    pub scores: Vec<f32>,
+    /// full 7-row α matrix, `Method::ALL` order
+    pub alphas: Vec<Vec<f32>>,
+}
+
+/// A compute runtime the trainer can drive end to end.
+///
+/// `State` holds model parameters + optimizer state in whatever format is
+/// fastest for the backend (host literals for PJRT, plain tensors natively),
+/// so neither path pays conversion costs on the hot loop.
+pub trait Backend {
+    /// Model parameters + optimizer state, backend-native format.
+    type State;
+
+    /// Short identifier used in logs/reports ("native", "xla").
+    fn name(&self) -> &'static str;
+
+    /// Batch geometry + task for a model family.
+    fn family_meta(&self, family: &str) -> anyhow::Result<FamilyMeta>;
+
+    /// Fresh parameters + zero momentum, deterministic in `seed`.
+    fn init_state(&mut self, family: &str, seed: i32) -> anyhow::Result<Self::State>;
+
+    /// Selection forward pass: per-sample (loss, gnorm proxy) over a full
+    /// batch (padded rows included; callers slice by `batch.real`).
+    fn forward_scores(
+        &mut self,
+        state: &Self::State,
+        batch: &Batch,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Fused forward + L1 scorer in one call, when the backend supports it
+    /// (`Ok(None)` = not available, caller falls back to
+    /// [`Backend::forward_scores`] + [`Backend::score`]).
+    fn forward_score_fused(
+        &mut self,
+        state: &Self::State,
+        batch: &Batch,
+        w_full: &[f32; 7],
+        t: usize,
+        cl_power: f32,
+        cl_on: bool,
+    ) -> anyhow::Result<Option<FusedForward>>;
+
+    /// One SGD+momentum step on a sub-batch; updates `state` in place and
+    /// returns the mean loss over the sub-batch.
+    fn train_step(
+        &mut self,
+        state: &mut Self::State,
+        sub: &Batch,
+        lr: f32,
+    ) -> anyhow::Result<f32>;
+
+    /// Masked eval pass: (loss_sum, correct_sum) over one padded batch.
+    fn eval(&mut self, state: &Self::State, batch: &Batch) -> anyhow::Result<(f32, f32)>;
+
+    /// Standalone AdaSelection scorer on already-computed (loss, gnorm):
+    /// returns (fused scores, full 7-row α matrix).
+    fn score(
+        &mut self,
+        loss: &[f32],
+        gnorm: &[f32],
+        w_full: &[f32; 7],
+        t: usize,
+        cl_power: f32,
+        cl_on: bool,
+    ) -> anyhow::Result<(Vec<f32>, Vec<Vec<f32>>)>;
+
+    /// Warm anything expensive (artifact compilation) before the timed
+    /// training loop. No-op for backends without a compile step.
+    fn preload_family(&mut self, _family: &str, _sizes: &[usize]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Number of f32 parameters in a family (reporting).
+    fn param_count(&self, family: &str) -> anyhow::Result<usize>;
+
+    /// Backend self-checks run once per training job (e.g. the engine's
+    /// frozen method-order validation against the artifact manifest).
+    fn validate(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_size_unconstrained_is_identity() {
+        let meta = FamilyMeta {
+            name: "f".into(),
+            task: TaskKind::Regression,
+            batch: 100,
+            sizes: None,
+        };
+        assert_eq!(meta.round_size(17), 17);
+        assert_eq!(meta.round_size(1), 1);
+    }
+
+    #[test]
+    fn round_size_constrained_rounds_up() {
+        let meta = FamilyMeta {
+            name: "f".into(),
+            task: TaskKind::Classification,
+            batch: 128,
+            sizes: Some(vec![13, 26, 39, 52, 64, 128]),
+        };
+        assert_eq!(meta.round_size(13), 13);
+        assert_eq!(meta.round_size(14), 26);
+        assert_eq!(meta.round_size(999), 128);
+    }
+
+    #[test]
+    fn tensor_zeros_shape_product() {
+        let t = Tensor::zeros(&[3, 4]);
+        assert_eq!(t.elems(), 12);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -16,6 +16,7 @@ use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputat
 use crate::pipeline::Batch;
 use crate::util::timer::PhaseTimer;
 
+use super::backend::{Backend, FamilyMeta, FusedForward};
 use super::exec::{pack_arg, scalar_f32, to_f32, Arg};
 use super::manifest::{Dtype, FamilyInfo, Manifest};
 
@@ -318,5 +319,94 @@ impl Engine {
     /// Expose dtype of an artifact input (diagnostics).
     pub fn input_dtype(&self, artifact: &str, idx: usize) -> anyhow::Result<Dtype> {
         Ok(self.manifest.artifact(artifact)?.inputs[idx].dtype)
+    }
+}
+
+/// The PJRT engine as a [`Backend`]: thin delegation onto the typed entry
+/// points above. `State` stays in device-literal format so the hot loop
+/// passes parameters by reference with no per-step conversion.
+impl Backend for Engine {
+    type State = ModelState;
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn family_meta(&self, family: &str) -> anyhow::Result<FamilyMeta> {
+        let fam = self.manifest.family(family)?;
+        Ok(FamilyMeta {
+            name: fam.name.clone(),
+            task: fam.task,
+            batch: fam.batch,
+            sizes: Some(fam.train_sizes.clone()),
+        })
+    }
+
+    fn init_state(&mut self, family: &str, seed: i32) -> anyhow::Result<ModelState> {
+        Engine::init_state(self, family, seed)
+    }
+
+    fn forward_scores(
+        &mut self,
+        state: &ModelState,
+        batch: &Batch,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        self.forward(state, batch)
+    }
+
+    fn forward_score_fused(
+        &mut self,
+        state: &ModelState,
+        batch: &Batch,
+        w_full: &[f32; 7],
+        t: usize,
+        cl_power: f32,
+        cl_on: bool,
+    ) -> anyhow::Result<Option<FusedForward>> {
+        Ok(self
+            .forward_score(state, batch, w_full, t, cl_power, cl_on)?
+            .map(|(loss, gnorm, scores, alphas)| FusedForward {
+                loss,
+                gnorm,
+                scores,
+                alphas,
+            }))
+    }
+
+    fn train_step(
+        &mut self,
+        state: &mut ModelState,
+        sub: &Batch,
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        Engine::train_step(self, state, sub, lr)
+    }
+
+    fn eval(&mut self, state: &ModelState, batch: &Batch) -> anyhow::Result<(f32, f32)> {
+        self.evaluate(state, batch)
+    }
+
+    fn score(
+        &mut self,
+        loss: &[f32],
+        gnorm: &[f32],
+        w_full: &[f32; 7],
+        t: usize,
+        cl_power: f32,
+        cl_on: bool,
+    ) -> anyhow::Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        Engine::score(self, loss, gnorm, w_full, t, cl_power, cl_on)
+    }
+
+    fn preload_family(&mut self, family: &str, sizes: &[usize]) -> anyhow::Result<()> {
+        Engine::preload_family(self, family, sizes)
+    }
+
+    fn param_count(&self, family: &str) -> anyhow::Result<usize> {
+        Engine::param_count(self, family)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        self.check_method_order()
     }
 }

@@ -6,6 +6,8 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 
+pub use super::backend::TaskKind;
+
 /// Element dtype of an artifact input/output.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
@@ -46,14 +48,6 @@ pub struct ArtifactInfo {
     pub outputs: Vec<IoSpec>,
 }
 
-/// Task type of a model family (mirrors `data::Task` without payload).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum TaskKind {
-    Classification,
-    Regression,
-    Lm,
-}
-
 /// A model family: spec + artifact names.
 #[derive(Clone, Debug)]
 pub struct FamilyInfo {
@@ -88,11 +82,7 @@ impl FamilyInfo {
 
     /// Smallest compiled subset size ≥ k (fallback: the largest).
     pub fn round_size(&self, k: usize) -> usize {
-        self.train_sizes
-            .iter()
-            .copied()
-            .find(|&s| s >= k)
-            .unwrap_or_else(|| *self.train_sizes.last().unwrap())
+        super::backend::round_up_size(&self.train_sizes, k)
     }
 }
 

@@ -1,13 +1,25 @@
-//! PJRT runtime (L3 ↔ artifacts bridge): manifest parsing, artifact
-//! compilation + caching, typed execution helpers.
+//! The compute runtime layer: the [`Backend`] trait the trainer drives,
+//! its two implementations, and the artifact manifest schema.
 //!
-//! Pattern adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!   * [`native::NativeBackend`] (default) — pure-Rust L1 kernels + train
+//!     steps; zero native deps, no artifacts, any subset size.
+//!   * [`engine::Engine`] (`--features xla`) — PJRT bridge: manifest
+//!     parsing, HLO artifact compilation + caching, typed execution.
+//!     Pattern adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//!     `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod exec;
 pub mod manifest;
+pub mod native;
 
+pub use backend::{Backend, FamilyMeta, FusedForward, TaskKind, Tensor};
+#[cfg(feature = "xla")]
 pub use engine::{Engine, ModelState};
+#[cfg(feature = "xla")]
 pub use exec::Arg;
-pub use manifest::{default_artifacts_dir, Dtype, FamilyInfo, Manifest, TaskKind};
+pub use manifest::{default_artifacts_dir, Dtype, FamilyInfo, Manifest};
+pub use native::{NativeBackend, NativeState};

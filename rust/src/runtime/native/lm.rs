@@ -1,0 +1,262 @@
+//! Pure-Rust LM family: a learned bigram model (token embedding → dense →
+//! vocab logits, position-wise) standing in for the Pallas transformer on
+//! the native backend. The per-sample loss/gnorm math is the
+//! `persample_lm_xent` reference kernel from ref.py: token-level softmax
+//! cross-entropy and `‖p − onehot‖₂ · ‖h‖₂`, both averaged over the window.
+//!
+//! On the order-2 Markov corpus a bigram learner captures most of the
+//! structure, which is all the selection layer needs: a loss landscape that
+//! moves under training. The full transformer stays on the XLA backend.
+
+use crate::runtime::backend::Tensor;
+use crate::util::rng::Pcg64;
+
+use super::mlp::{clip_momentum_step, log_softmax_rows, matmul, matmul_a_bt, matmul_at_b};
+
+const EPS: f32 = 1e-9;
+
+/// Bigram LM: params = [embed `[vocab, d]`, w `[d, vocab]`, b `[vocab]`].
+#[derive(Clone, Debug)]
+pub struct BigramLm {
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+}
+
+impl BigramLm {
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![
+            vec![self.vocab, self.d_model],
+            vec![self.d_model, self.vocab],
+            vec![self.vocab],
+        ]
+    }
+
+    pub fn init(&self, rng: &mut Pcg64) -> Vec<Tensor> {
+        let emb_std = (1.0 / self.d_model as f64).sqrt();
+        let w_std = (2.0 / self.d_model as f64).sqrt();
+        vec![
+            Tensor {
+                shape: vec![self.vocab, self.d_model],
+                data: (0..self.vocab * self.d_model)
+                    .map(|_| rng.normal_ms(0.0, emb_std) as f32)
+                    .collect(),
+            },
+            Tensor {
+                shape: vec![self.d_model, self.vocab],
+                data: (0..self.d_model * self.vocab)
+                    .map(|_| rng.normal_ms(0.0, w_std) as f32)
+                    .collect(),
+            },
+            Tensor::zeros(&[self.vocab]),
+        ]
+    }
+
+    /// Gather token embeddings: `[b·t, d]` plus per-token ‖h‖₂.
+    fn embed(&self, params: &[Tensor], x: &[i32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+        let d = self.d_model;
+        let emb = &params[0].data;
+        let mut h = Vec::with_capacity(rows * d);
+        let mut fnorm = Vec::with_capacity(rows);
+        for &tok in x.iter().take(rows) {
+            let t = tok as usize;
+            let row = &emb[t * d..(t + 1) * d];
+            h.extend_from_slice(row);
+            fnorm.push((row.iter().map(|&v| v * v).sum::<f32>() + EPS).sqrt());
+        }
+        (h, fnorm)
+    }
+
+    /// Token log-probabilities `[rows, vocab]` for flattened tokens.
+    fn token_logp(&self, params: &[Tensor], h: &[f32], rows: usize) -> Vec<f32> {
+        let (d, v) = (self.d_model, self.vocab);
+        let mut logits = matmul(h, &params[1].data, rows, d, v);
+        for row in logits.chunks_mut(v) {
+            for (lv, &bv) in row.iter_mut().zip(params[2].data.iter()) {
+                *lv += bv;
+            }
+        }
+        log_softmax_rows(&mut logits, rows, v);
+        logits
+    }
+
+    /// Per-sample (loss, gnorm): `persample_lm_xent` over `[b, seq]` tokens.
+    pub fn forward_scores(
+        &self,
+        params: &[Tensor],
+        x: &[i32],
+        y: &[i32],
+        b: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (t, v) = (self.seq, self.vocab);
+        let rows = b * t;
+        let (h, fnorm) = self.embed(params, x, rows);
+        let logp = self.token_logp(params, &h, rows);
+        let mut loss = vec![0.0f32; b];
+        let mut gnorm = vec![0.0f32; b];
+        for i in 0..b {
+            let mut lsum = 0.0f32;
+            let mut gsum = 0.0f32;
+            for ti in 0..t {
+                let r = i * t + ti;
+                let row = &logp[r * v..(r + 1) * v];
+                let yi = y[r] as usize;
+                lsum += -row[yi];
+                let mut sq = 0.0f32;
+                for (c, &lp) in row.iter().enumerate() {
+                    let p = lp.exp();
+                    let d = if c == yi { p - 1.0 } else { p };
+                    sq += d * d;
+                }
+                gsum += (sq + EPS).sqrt() * fnorm[r];
+            }
+            loss[i] = lsum / t as f32;
+            gnorm[i] = gsum / t as f32;
+        }
+        (loss, gnorm)
+    }
+
+    /// Masked eval: (Σ sample-loss·mask, Σ token-accuracy·mask).
+    pub fn eval(
+        &self,
+        params: &[Tensor],
+        x: &[i32],
+        y: &[i32],
+        mask: &[f32],
+        b: usize,
+    ) -> (f32, f32) {
+        let (t, v) = (self.seq, self.vocab);
+        let rows = b * t;
+        let (h, _) = self.embed(params, x, rows);
+        let logp = self.token_logp(params, &h, rows);
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        for i in 0..b {
+            let mut lsum = 0.0f32;
+            let mut hits = 0.0f32;
+            for ti in 0..t {
+                let r = i * t + ti;
+                let row = &logp[r * v..(r + 1) * v];
+                let yi = y[r] as usize;
+                lsum += -row[yi];
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(idx, _)| idx)
+                    .unwrap_or(0);
+                if argmax == yi {
+                    hits += 1.0;
+                }
+            }
+            loss_sum += (lsum / t as f32) * mask[i];
+            correct += (hits / t as f32) * mask[i];
+        }
+        (loss_sum, correct)
+    }
+
+    /// One SGD+momentum step on `k` sequences; returns pre-update mean loss.
+    pub fn train_step(
+        &self,
+        params: &mut [Tensor],
+        mom: &mut [Tensor],
+        x: &[i32],
+        y: &[i32],
+        k: usize,
+        lr: f32,
+    ) -> f32 {
+        let (t, v, d) = (self.seq, self.vocab, self.d_model);
+        let rows = k * t;
+        let (h, _) = self.embed(params, x, rows);
+        let logp = self.token_logp(params, &h, rows);
+
+        // mean loss over every token + dlogits = (p - onehot) / (k·t)
+        let scale = 1.0 / rows as f32;
+        let mut sum = 0.0f32;
+        let mut dlogits = vec![0.0f32; rows * v];
+        for r in 0..rows {
+            let row = &logp[r * v..(r + 1) * v];
+            let yi = y[r] as usize;
+            sum += -row[yi];
+            let drow = &mut dlogits[r * v..(r + 1) * v];
+            for (c, (&lp, dv)) in row.iter().zip(drow.iter_mut()).enumerate() {
+                let p = lp.exp();
+                *dv = (if c == yi { p - 1.0 } else { p }) * scale;
+            }
+        }
+        let mean_loss = sum * scale;
+
+        // grads: dw = hᵀ·dlogits, db = Σ rows, dembed scatter-add
+        let dw = matmul_at_b(&h, &dlogits, rows, d, v);
+        let mut db = vec![0.0f32; v];
+        for row in dlogits.chunks(v) {
+            for (b_, &g) in db.iter_mut().zip(row.iter()) {
+                *b_ += g;
+            }
+        }
+        let dh = matmul_a_bt(&dlogits, &params[1].data, rows, d, v);
+        let mut demb = vec![0.0f32; self.vocab * d];
+        for (r, &tok) in x.iter().take(rows).enumerate() {
+            let ti = tok as usize;
+            let src = &dh[r * d..(r + 1) * d];
+            let dst = &mut demb[ti * d..(ti + 1) * d];
+            for (dv, &sv) in dst.iter_mut().zip(src.iter()) {
+                *dv += sv;
+            }
+        }
+
+        clip_momentum_step(params, mom, &[demb, dw, db], lr);
+        mean_loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> BigramLm {
+        BigramLm {
+            vocab: 8,
+            seq: 4,
+            d_model: 6,
+        }
+    }
+
+    #[test]
+    fn untrained_loss_near_uniform() {
+        let m = toy();
+        let mut rng = Pcg64::new(1);
+        let params = m.init(&mut rng);
+        let x: Vec<i32> = (0..8).map(|i| i % 8).collect(); // 2 sequences
+        let y: Vec<i32> = (1..9).map(|i| i % 8).collect();
+        let (loss, gnorm) = m.forward_scores(&params, &x, &y, 2);
+        assert_eq!(loss.len(), 2);
+        let uniform = (8.0f32).ln();
+        for l in &loss {
+            assert!((l - uniform).abs() < 1.0, "loss {l} vs ln(V) {uniform}");
+        }
+        assert!(gnorm.iter().all(|g| g.is_finite() && *g > 0.0));
+    }
+
+    #[test]
+    fn bigram_structure_is_learned() {
+        // deterministic successor: y = x + 1 mod V — a pure bigram rule
+        let m = toy();
+        let mut rng = Pcg64::new(2);
+        let mut params = m.init(&mut rng);
+        let mut mom: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let k = 4;
+        let x: Vec<i32> = (0..k * 4).map(|i| (i % 8) as i32).collect();
+        let y: Vec<i32> = x.iter().map(|&t| (t + 1) % 8).collect();
+        let first = m.train_step(&mut params, &mut mom, &x, &y, k, 0.5);
+        let mut last = first;
+        for _ in 0..300 {
+            last = m.train_step(&mut params, &mut mom, &x, &y, k, 0.5);
+        }
+        assert!(last < 0.3 * first, "lm loss {first} -> {last}");
+        let mask = vec![1.0f32; k];
+        let (_, tok_acc) = m.eval(&params, &x, &y, &mask, k);
+        assert!(tok_acc / k as f32 > 0.9, "token acc {}", tok_acc / k as f32);
+    }
+}

@@ -1,0 +1,527 @@
+//! Pure-Rust MLP family: the L1 reference kernels of
+//! `python/compile/kernels/ref.py` (per-sample squared-error / softmax
+//! cross-entropy losses with their grad-norm proxies) plus the L2 train
+//! step of `python/compile/model.py` (mean-loss backprop, global-norm
+//! gradient clipping, SGD+momentum) — no JAX, no XLA, no artifacts.
+//!
+//! Serves the paper's regression tasks exactly (`mlp_simple`, `mlp_bike`)
+//! and the image-classification datasets through an MLP surrogate head on
+//! the flattened synthetic images (the selection layer under test is
+//! model-agnostic; the mini-ResNet itself stays on the XLA backend).
+
+use crate::runtime::backend::Tensor;
+use crate::util::rng::Pcg64;
+
+use super::{GRAD_CLIP, MOMENTUM};
+
+const EPS: f32 = 1e-9;
+
+/// `a[m,k] · b[k,n]` into a fresh `[m,n]` buffer.
+pub(super) fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `aᵀ[k,m] · g[m,n]` into `[k,n]` (weight gradients).
+pub(super) fn matmul_at_b(a: &[f32], g: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(g.len(), m * n);
+    let mut out = vec![0.0f32; k * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let grow = &g[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[p * n..(p + 1) * n];
+            for (o, &gv) in orow.iter_mut().zip(grow.iter()) {
+                *o += av * gv;
+            }
+        }
+    }
+    out
+}
+
+/// `g[m,n] · bᵀ[n,k]` into `[m,k]` (input gradients; `b` is `[k,n]`).
+pub(super) fn matmul_a_bt(g: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        let grow = &g[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (p, ov) in orow.iter_mut().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            let mut acc = 0.0f32;
+            for (&gv, &bv) in grow.iter().zip(brow.iter()) {
+                acc += gv * bv;
+            }
+            *ov = acc;
+        }
+    }
+    out
+}
+
+/// In-place row-wise log-softmax over `[m, n]`; returns nothing, `logits`
+/// becomes log-probabilities.
+pub(super) fn log_softmax_rows(logits: &mut [f32], m: usize, n: usize) {
+    for i in 0..m {
+        let row = &mut logits[i * n..(i + 1) * n];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v -= max;
+            sum += v.exp();
+        }
+        let lse = sum.ln();
+        for v in row.iter_mut() {
+            *v -= lse;
+        }
+    }
+}
+
+/// Global-norm gradient clipping (model.py GRAD_CLIP) + momentum update.
+/// `grads` layout matches `params`/`mom`.
+pub(super) fn clip_momentum_step(
+    params: &mut [Tensor],
+    mom: &mut [Tensor],
+    grads: &[Vec<f32>],
+    lr: f32,
+) {
+    let sq: f32 = grads
+        .iter()
+        .flat_map(|g| g.iter())
+        .map(|&g| g * g)
+        .sum::<f32>()
+        + 1e-12;
+    let gnorm = sq.sqrt();
+    let scale = (GRAD_CLIP / gnorm).min(1.0);
+    for ((p, m), g) in params.iter_mut().zip(mom.iter_mut()).zip(grads.iter()) {
+        for ((pv, mv), &gv) in p.data.iter_mut().zip(m.data.iter_mut()).zip(g.iter()) {
+            *mv = MOMENTUM * *mv + gv * scale;
+            *pv -= lr * *mv;
+        }
+    }
+}
+
+/// An MLP `in_dim -> hidden... -> out_dim` with ReLU activations, mirroring
+/// `python/compile/models/mlp.py` (out_dim 1 = regression head, out_dim C =
+/// classification logits).
+#[derive(Clone, Debug)]
+pub struct MlpModel {
+    pub in_dim: usize,
+    pub hidden: Vec<usize>,
+    pub out_dim: usize,
+}
+
+impl MlpModel {
+    fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.in_dim];
+        d.extend_from_slice(&self.hidden);
+        d.push(self.out_dim);
+        d
+    }
+
+    /// Ordered parameter shapes: (w0, b0, w1, b1, ...).
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let dims = self.dims();
+        let mut shapes = Vec::new();
+        for win in dims.windows(2) {
+            shapes.push(vec![win[0], win[1]]);
+            shapes.push(vec![win[1]]);
+        }
+        shapes
+    }
+
+    /// Kaiming-normal weights, zero biases (deterministic in `rng`).
+    pub fn init(&self, rng: &mut Pcg64) -> Vec<Tensor> {
+        self.param_shapes()
+            .into_iter()
+            .map(|shape| {
+                if shape.len() == 2 {
+                    let std = (2.0 / shape[0] as f64).sqrt();
+                    Tensor {
+                        data: (0..shape[0] * shape[1])
+                            .map(|_| rng.normal_ms(0.0, std) as f32)
+                            .collect(),
+                        shape,
+                    }
+                } else {
+                    Tensor::zeros(&shape)
+                }
+            })
+            .collect()
+    }
+
+    /// Hidden stack: returns (last hidden activations `[b, h_last]`,
+    /// per-sample fnorm = ‖last hidden‖₂). `b` rows of `x`.
+    fn hidden_forward(&self, params: &[Tensor], x: &[f32], b: usize) -> (Vec<f32>, Vec<f32>) {
+        let dims = self.dims();
+        let mut h = x.to_vec();
+        let mut width = self.in_dim;
+        for (l, win) in dims.windows(2).take(dims.len() - 2).enumerate() {
+            let (w, bias) = (&params[2 * l], &params[2 * l + 1]);
+            let mut z = matmul(&h, &w.data, b, win[0], win[1]);
+            for row in z.chunks_mut(win[1]) {
+                for (v, &bv) in row.iter_mut().zip(bias.data.iter()) {
+                    *v = (*v + bv).max(0.0);
+                }
+            }
+            h = z;
+            width = win[1];
+        }
+        let fnorm: Vec<f32> = h
+            .chunks(width)
+            .map(|row| (row.iter().map(|&v| v * v).sum::<f32>() + EPS).sqrt())
+            .collect();
+        (h, fnorm)
+    }
+
+    /// Head outputs `[b, out_dim]` (logits or 1-wide predictions).
+    fn head(&self, params: &[Tensor], h: &[f32], b: usize) -> Vec<f32> {
+        let dims = self.dims();
+        let k = dims[dims.len() - 2];
+        let w = &params[params.len() - 2];
+        let bias = &params[params.len() - 1];
+        let mut out = matmul(h, &w.data, b, k, self.out_dim);
+        for row in out.chunks_mut(self.out_dim) {
+            for (v, &bv) in row.iter_mut().zip(bias.data.iter()) {
+                *v += bv;
+            }
+        }
+        out
+    }
+
+    /// Per-sample (loss, gnorm proxy) — `persample_sqerr` / `persample_xent`
+    /// from ref.py depending on the head width.
+    pub fn forward_scores(
+        &self,
+        params: &[Tensor],
+        x: &[f32],
+        y_f32: Option<&[f32]>,
+        y_i32: Option<&[i32]>,
+        b: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (h, fnorm) = self.hidden_forward(params, x, b);
+        let out = self.head(params, &h, b);
+        if self.out_dim == 1 {
+            let y = y_f32.expect("regression batch missing f32 targets");
+            let mut loss = vec![0.0f32; b];
+            let mut gnorm = vec![0.0f32; b];
+            for i in 0..b {
+                let r = out[i] - y[i];
+                loss[i] = 0.5 * r * r;
+                gnorm[i] = r.abs() * fnorm[i];
+            }
+            (loss, gnorm)
+        } else {
+            let y = y_i32.expect("classification batch missing i32 labels");
+            let c = self.out_dim;
+            let mut logp = out;
+            log_softmax_rows(&mut logp, b, c);
+            let mut loss = vec![0.0f32; b];
+            let mut gnorm = vec![0.0f32; b];
+            for i in 0..b {
+                let row = &logp[i * c..(i + 1) * c];
+                let yi = y[i] as usize;
+                loss[i] = -row[yi];
+                let mut sq = 0.0f32;
+                for (cidx, &lp) in row.iter().enumerate() {
+                    let p = lp.exp();
+                    let t = if cidx == yi { p - 1.0 } else { p };
+                    sq += t * t;
+                }
+                gnorm[i] = (sq + EPS).sqrt() * fnorm[i];
+            }
+            (loss, gnorm)
+        }
+    }
+
+    /// Masked eval: (Σ loss·mask, Σ correct·mask) — correct is 0 for the
+    /// regression head, matching the eval artifact. One forward pass: the
+    /// argmax of the log-softmax rows equals the argmax of the logits.
+    pub fn eval(
+        &self,
+        params: &[Tensor],
+        x: &[f32],
+        y_f32: Option<&[f32]>,
+        y_i32: Option<&[i32]>,
+        mask: &[f32],
+        b: usize,
+    ) -> (f32, f32) {
+        if self.out_dim == 1 {
+            let (loss, _) = self.forward_scores(params, x, y_f32, y_i32, b);
+            let loss_sum = loss.iter().zip(mask.iter()).map(|(&l, &m)| l * m).sum();
+            return (loss_sum, 0.0);
+        }
+        let y = y_i32.expect("classification batch missing i32 labels");
+        let c = self.out_dim;
+        let (h, _) = self.hidden_forward(params, x, b);
+        let mut logp = self.head(params, &h, b);
+        log_softmax_rows(&mut logp, b, c);
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        for i in 0..b {
+            let row = &logp[i * c..(i + 1) * c];
+            loss_sum += -row[y[i] as usize] * mask[i];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(idx, _)| idx)
+                .unwrap_or(0);
+            if argmax == y[i] as usize {
+                correct += mask[i];
+            }
+        }
+        (loss_sum, correct)
+    }
+
+    /// One SGD+momentum step on `k` rows; returns the pre-update mean loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        params: &mut [Tensor],
+        mom: &mut [Tensor],
+        x: &[f32],
+        y_f32: Option<&[f32]>,
+        y_i32: Option<&[i32]>,
+        k: usize,
+        lr: f32,
+    ) -> f32 {
+        let dims = self.dims();
+        let n_layers = dims.len() - 1;
+
+        // forward, caching every layer input
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+        acts.push(x.to_vec());
+        for l in 0..n_layers - 1 {
+            let (a, b_) = (dims[l], dims[l + 1]);
+            let (w, bias) = (&params[2 * l], &params[2 * l + 1]);
+            let mut z = matmul(acts.last().unwrap(), &w.data, k, a, b_);
+            for row in z.chunks_mut(b_) {
+                for (v, &bv) in row.iter_mut().zip(bias.data.iter()) {
+                    *v = (*v + bv).max(0.0);
+                }
+            }
+            acts.push(z);
+        }
+        let out = self.head(params, acts.last().unwrap(), k);
+
+        // mean loss + output gradient (d mean-loss / d out)
+        let c = self.out_dim;
+        let mut dout = vec![0.0f32; k * c];
+        let mean_loss;
+        if c == 1 {
+            let y = y_f32.expect("regression batch missing f32 targets");
+            let mut sum = 0.0f32;
+            for i in 0..k {
+                let r = out[i] - y[i];
+                sum += 0.5 * r * r;
+                dout[i] = r / k as f32;
+            }
+            mean_loss = sum / k as f32;
+        } else {
+            let y = y_i32.expect("classification batch missing i32 labels");
+            let mut logp = out;
+            log_softmax_rows(&mut logp, k, c);
+            let mut sum = 0.0f32;
+            for i in 0..k {
+                let yi = y[i] as usize;
+                let row = &logp[i * c..(i + 1) * c];
+                sum += -row[yi];
+                for (cidx, &lp) in row.iter().enumerate() {
+                    let p = lp.exp();
+                    dout[i * c + cidx] =
+                        (if cidx == yi { p - 1.0 } else { p }) / k as f32;
+                }
+            }
+            mean_loss = sum / k as f32;
+        }
+
+        // backprop through the dense stack
+        let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.elems()]).collect();
+        let mut g = dout; // [k, dims[l+1]] for layer l, walking backwards
+        for l in (0..n_layers).rev() {
+            let (a, b_) = (dims[l], dims[l + 1]);
+            let inp = &acts[l];
+            grads[2 * l] = matmul_at_b(inp, &g, k, a, b_);
+            let db = &mut grads[2 * l + 1];
+            for row in g.chunks(b_) {
+                for (d, &gv) in db.iter_mut().zip(row.iter()) {
+                    *d += gv;
+                }
+            }
+            if l > 0 {
+                let w = &params[2 * l];
+                let mut da = matmul_a_bt(&g, &w.data, k, a, b_);
+                // ReLU mask from the cached post-activation input
+                for (d, &av) in da.iter_mut().zip(inp.iter()) {
+                    if av <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                g = da;
+            }
+        }
+
+        clip_momentum_step(params, mom, &grads, lr);
+        mean_loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> MlpModel {
+        MlpModel {
+            in_dim: 2,
+            hidden: vec![8],
+            out_dim: 1,
+        }
+    }
+
+    #[test]
+    fn shapes_match_python_layout() {
+        let shapes = model().param_shapes();
+        assert_eq!(
+            shapes,
+            vec![vec![2, 8], vec![8], vec![8, 1], vec![1]]
+        );
+    }
+
+    #[test]
+    fn matmul_small_known_values() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let out = matmul(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0]);
+        let atb = matmul_at_b(&[1.0, 2.0, 3.0, 4.0], &[1.0, 0.0, 0.0, 1.0], 2, 2, 2);
+        assert_eq!(atb, vec![1.0, 3.0, 2.0, 4.0]); // aᵀ
+        let abt = matmul_a_bt(&[1.0, 0.0, 0.0, 1.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(abt, vec![5.0, 6.0, 7.0, 8.0]); // picks rows of b
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let m = model();
+        let mut rng = Pcg64::new(3);
+        let params0 = m.init(&mut rng);
+        let x = vec![0.3f32, -0.7, 1.2, 0.4, -0.5, 0.9];
+        let y = vec![1.0f32, -2.0, 0.5];
+
+        // analytic step with clip disabled by tiny lr trick: recover grads by
+        // comparing param deltas after one zero-momentum step
+        let mut params = params0.clone();
+        let mut mom: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let lr = 1e-3f32;
+        let _ = m.train_step(&mut params, &mut mom, &x, Some(&y), None, 3, lr);
+
+        // finite-difference check on one early weight
+        let mean_loss = |ps: &[Tensor]| -> f32 {
+            let (loss, _) = m.forward_scores(ps, &x, Some(&y), None, 3);
+            loss.iter().sum::<f32>() / 3.0
+        };
+        let eps = 1e-3f32;
+        let mut pp = params0.clone();
+        pp[0].data[0] += eps;
+        let mut pm = params0.clone();
+        pm[0].data[0] -= eps;
+        let fd = (mean_loss(&pp) - mean_loss(&pm)) / (2.0 * eps);
+        // delta = -lr * grad (momentum starts at zero, clip scale ≈ 1 here)
+        let analytic = (params0[0].data[0] - params[0].data[0]) / lr;
+        assert!(
+            (fd - analytic).abs() < 2e-2 * (1.0 + fd.abs()),
+            "finite-diff {fd} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn regression_training_reduces_loss() {
+        let m = model();
+        let mut rng = Pcg64::new(11);
+        let mut params = m.init(&mut rng);
+        let mut mom: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        // y = x0 - x1 on a fixed grid
+        let n = 32;
+        let x: Vec<f32> = (0..n)
+            .flat_map(|i| {
+                let a = (i as f32 / n as f32) * 2.0 - 1.0;
+                [a, -a * 0.5]
+            })
+            .collect();
+        let y: Vec<f32> = x.chunks(2).map(|p| p[0] - p[1]).collect();
+        let first = m.train_step(&mut params, &mut mom, &x, Some(&y), None, n, 0.05);
+        let mut last = first;
+        for _ in 0..200 {
+            last = m.train_step(&mut params, &mut mom, &x, Some(&y), None, n, 0.05);
+        }
+        assert!(last < 0.2 * first, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn classification_forward_and_train_sane() {
+        let m = MlpModel {
+            in_dim: 3,
+            hidden: vec![16],
+            out_dim: 4,
+        };
+        let mut rng = Pcg64::new(5);
+        let mut params = m.init(&mut rng);
+        let mut mom: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        // 4 clusters on coordinate axes
+        let n = 64;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut r2 = Pcg64::new(9);
+        for i in 0..n {
+            let cls = i % 4;
+            let mut row = [0.0f32; 3];
+            for v in row.iter_mut() {
+                *v = r2.normal_ms(0.0, 0.1) as f32;
+            }
+            if cls < 3 {
+                row[cls] += 2.0;
+            } else {
+                row[0] -= 2.0;
+            }
+            x.extend_from_slice(&row);
+            y.push(cls as i32);
+        }
+        let (loss, gnorm) = m.forward_scores(&params, &x, None, Some(&y), n);
+        assert!(loss.iter().all(|l| l.is_finite() && *l >= 0.0));
+        assert!(gnorm.iter().all(|g| g.is_finite() && *g >= 0.0));
+        // untrained xent ≈ ln(4)
+        let mean: f32 = loss.iter().sum::<f32>() / n as f32;
+        assert!((mean - 4.0f32.ln()).abs() < 1.0, "untrained loss {mean}");
+
+        let first = m.train_step(&mut params, &mut mom, &x, None, Some(&y), n, 0.1);
+        let mut last = first;
+        for _ in 0..150 {
+            last = m.train_step(&mut params, &mut mom, &x, None, Some(&y), n, 0.1);
+        }
+        assert!(last < 0.5 * first, "xent {first} -> {last}");
+        let mask = vec![1.0f32; n];
+        let (_, correct) = m.eval(&params, &x, None, Some(&y), &mask, n);
+        assert!(correct / n as f32 > 0.8, "train acc {}", correct / n as f32);
+    }
+}

@@ -1,0 +1,384 @@
+//! The pure-Rust backend: L1 reference kernels + L2 train/eval steps with
+//! zero native dependencies — no Python, no XLA shared library, no
+//! artifacts directory. Any train-step subset size runs (no compiled-shape
+//! grid), which makes ⌈γB⌉ exact instead of rounded.
+//!
+//! Family table (mirrors `python/compile/model.py::make_families`):
+//!
+//! | family        | model                         | task           | B   |
+//! |---------------|-------------------------------|----------------|-----|
+//! | `mlp_simple`  | MLP 1→32→1                    | regression     | 100 |
+//! | `mlp_bike`    | MLP 8→64→64→1                 | regression     | 100 |
+//! | `resnet_c10`  | MLP 768→128→10 (surrogate)    | classification | 128 |
+//! | `resnet_c100` | MLP 768→128→100 (surrogate)   | classification | 128 |
+//! | `transformer` | bigram LM V=256 d=32 (surrogate) | lm          | 64  |
+//!
+//! The two surrogates keep every dataset runnable on bare CPU; the real
+//! mini-ResNet / transformer graphs remain on the XLA backend
+//! (`--features xla`). The selection layer under test is model-agnostic.
+
+pub mod lm;
+pub mod mlp;
+
+use std::collections::BTreeMap;
+
+use crate::pipeline::Batch;
+use crate::selection::adaselection::score_full;
+use crate::util::rng::Pcg64;
+
+use super::backend::{Backend, FamilyMeta, FusedForward, TaskKind, Tensor};
+
+use self::lm::BigramLm;
+use self::mlp::MlpModel;
+
+/// SGD momentum coefficient (model.py MOMENTUM).
+pub const MOMENTUM: f32 = 0.9;
+/// Global-norm gradient clip (model.py GRAD_CLIP).
+pub const GRAD_CLIP: f32 = 5.0;
+
+/// One registered model family.
+#[derive(Clone, Debug)]
+enum NativeModel {
+    Mlp(MlpModel),
+    Lm(BigramLm),
+}
+
+#[derive(Clone, Debug)]
+struct NativeFamily {
+    task: TaskKind,
+    batch: usize,
+    model: NativeModel,
+}
+
+/// Model parameters + momentum, plain host tensors.
+#[derive(Clone, Debug)]
+pub struct NativeState {
+    pub family: String,
+    pub params: Vec<Tensor>,
+    pub mom: Vec<Tensor>,
+}
+
+impl NativeState {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+/// The pure-Rust compute backend.
+pub struct NativeBackend {
+    families: BTreeMap<String, NativeFamily>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        let mlp = |in_dim: usize, hidden: &[usize], out_dim: usize| {
+            NativeModel::Mlp(MlpModel {
+                in_dim,
+                hidden: hidden.to_vec(),
+                out_dim,
+            })
+        };
+        let mut families = BTreeMap::new();
+        families.insert(
+            "mlp_simple".to_string(),
+            NativeFamily { task: TaskKind::Regression, batch: 100, model: mlp(1, &[32], 1) },
+        );
+        families.insert(
+            "mlp_bike".to_string(),
+            NativeFamily { task: TaskKind::Regression, batch: 100, model: mlp(8, &[64, 64], 1) },
+        );
+        families.insert(
+            "resnet_c10".to_string(),
+            NativeFamily {
+                task: TaskKind::Classification,
+                batch: 128,
+                model: mlp(16 * 16 * 3, &[128], 10),
+            },
+        );
+        families.insert(
+            "resnet_c100".to_string(),
+            NativeFamily {
+                task: TaskKind::Classification,
+                batch: 128,
+                model: mlp(16 * 16 * 3, &[128], 100),
+            },
+        );
+        families.insert(
+            "transformer".to_string(),
+            NativeFamily {
+                task: TaskKind::Lm,
+                batch: 64,
+                model: NativeModel::Lm(BigramLm { vocab: 256, seq: 32, d_model: 32 }),
+            },
+        );
+        NativeBackend { families }
+    }
+
+    fn family(&self, name: &str) -> anyhow::Result<&NativeFamily> {
+        self.families
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model family '{name}' (native backend)"))
+    }
+
+    fn param_shapes(fam: &NativeFamily) -> Vec<Vec<usize>> {
+        match &fam.model {
+            NativeModel::Mlp(m) => m.param_shapes(),
+            NativeModel::Lm(m) => m.param_shapes(),
+        }
+    }
+}
+
+/// Pull the f32 features out of a batch (MLP families).
+fn x_f32(batch: &Batch) -> anyhow::Result<&[f32]> {
+    batch
+        .x_f32
+        .as_deref()
+        .ok_or_else(|| anyhow::anyhow!("batch has no f32 features for an MLP family"))
+}
+
+fn y_pair(batch: &Batch) -> (Option<&[f32]>, Option<&[i32]>) {
+    (batch.y_f32.as_deref(), batch.y_i32.as_deref())
+}
+
+/// Pull the i32 token windows out of a batch (LM family).
+fn xy_i32(batch: &Batch) -> anyhow::Result<(&[i32], &[i32])> {
+    match (batch.x_i32.as_deref(), batch.y_i32.as_deref()) {
+        (Some(x), Some(y)) => Ok((x, y)),
+        _ => Err(anyhow::anyhow!("batch has no i32 token windows for the LM family")),
+    }
+}
+
+impl Backend for NativeBackend {
+    type State = NativeState;
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn family_meta(&self, family: &str) -> anyhow::Result<FamilyMeta> {
+        let fam = self.family(family)?;
+        Ok(FamilyMeta {
+            name: family.to_string(),
+            task: fam.task,
+            batch: fam.batch,
+            sizes: None, // any subset size trains natively
+        })
+    }
+
+    fn init_state(&mut self, family: &str, seed: i32) -> anyhow::Result<NativeState> {
+        let fam = self.family(family)?;
+        // fold the family name into the stream so families differ per seed
+        let tag = family
+            .bytes()
+            .fold(0u64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64));
+        let mut rng = Pcg64::new((seed as u64) ^ tag);
+        let params = match &fam.model {
+            NativeModel::Mlp(m) => m.init(&mut rng),
+            NativeModel::Lm(m) => m.init(&mut rng),
+        };
+        let mom = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        Ok(NativeState {
+            family: family.to_string(),
+            params,
+            mom,
+        })
+    }
+
+    fn forward_scores(
+        &mut self,
+        state: &NativeState,
+        batch: &Batch,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let fam = self.family(&state.family)?;
+        let b = batch.len();
+        Ok(match &fam.model {
+            NativeModel::Mlp(m) => {
+                let (yf, yi) = y_pair(batch);
+                m.forward_scores(&state.params, x_f32(batch)?, yf, yi, b)
+            }
+            NativeModel::Lm(m) => {
+                let (x, y) = xy_i32(batch)?;
+                m.forward_scores(&state.params, x, y, b)
+            }
+        })
+    }
+
+    fn forward_score_fused(
+        &mut self,
+        state: &NativeState,
+        batch: &Batch,
+        w_full: &[f32; 7],
+        t: usize,
+        cl_power: f32,
+        cl_on: bool,
+    ) -> anyhow::Result<Option<FusedForward>> {
+        let (loss, gnorm) = self.forward_scores(state, batch)?;
+        let (scores, alphas) = score_full(&loss, &gnorm, w_full, t, cl_power, cl_on);
+        Ok(Some(FusedForward {
+            loss,
+            gnorm,
+            scores,
+            alphas,
+        }))
+    }
+
+    fn train_step(
+        &mut self,
+        state: &mut NativeState,
+        sub: &Batch,
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let fam = self.family(&state.family)?;
+        let k = sub.len();
+        anyhow::ensure!(k > 0, "train_step on an empty sub-batch");
+        Ok(match &fam.model {
+            NativeModel::Mlp(m) => {
+                let (yf, yi) = y_pair(sub);
+                m.train_step(
+                    &mut state.params,
+                    &mut state.mom,
+                    x_f32(sub)?,
+                    yf,
+                    yi,
+                    k,
+                    lr,
+                )
+            }
+            NativeModel::Lm(m) => {
+                let (x, y) = xy_i32(sub)?;
+                m.train_step(&mut state.params, &mut state.mom, x, y, k, lr)
+            }
+        })
+    }
+
+    fn eval(&mut self, state: &NativeState, batch: &Batch) -> anyhow::Result<(f32, f32)> {
+        let fam = self.family(&state.family)?;
+        let b = batch.len();
+        let mask = batch.mask();
+        Ok(match &fam.model {
+            NativeModel::Mlp(m) => {
+                let (yf, yi) = y_pair(batch);
+                m.eval(&state.params, x_f32(batch)?, yf, yi, &mask, b)
+            }
+            NativeModel::Lm(m) => {
+                let (x, y) = xy_i32(batch)?;
+                m.eval(&state.params, x, y, &mask, b)
+            }
+        })
+    }
+
+    fn score(
+        &mut self,
+        loss: &[f32],
+        gnorm: &[f32],
+        w_full: &[f32; 7],
+        t: usize,
+        cl_power: f32,
+        cl_on: bool,
+    ) -> anyhow::Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        Ok(score_full(loss, gnorm, w_full, t, cl_power, cl_on))
+    }
+
+    fn param_count(&self, family: &str) -> anyhow::Result<usize> {
+        let fam = self.family(family)?;
+        Ok(Self::param_shapes(fam)
+            .iter()
+            .map(|s| s.iter().product::<usize>())
+            .sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::pipeline::gather;
+
+    #[test]
+    fn all_native_families_resolve() {
+        let nb = NativeBackend::new();
+        for (fam, ds) in [
+            ("mlp_simple", "simple"),
+            ("mlp_bike", "bike"),
+            ("resnet_c10", "cifar10"),
+            ("resnet_c100", "cifar100"),
+            ("transformer", "wikitext"),
+        ] {
+            let meta = nb.family_meta(fam).unwrap();
+            assert_eq!(meta.sizes, None, "{fam}");
+            assert!(nb.param_count(fam).unwrap() > 0, "{fam}");
+            assert_eq!(data::family_for(ds).unwrap(), fam);
+        }
+        assert!(nb.family_meta("nope").is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_distinct_per_family() {
+        let mut nb = NativeBackend::new();
+        let a = nb.init_state("mlp_simple", 7).unwrap();
+        let b = nb.init_state("mlp_simple", 7).unwrap();
+        assert_eq!(a.params[0].data, b.params[0].data);
+        let c = nb.init_state("mlp_simple", 8).unwrap();
+        assert_ne!(a.params[0].data, c.params[0].data);
+        assert!(a.mom.iter().all(|t| t.data.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn forward_train_eval_cycle_every_dataset() {
+        let mut nb = NativeBackend::new();
+        for ds_name in ["simple", "bike", "cifar10", "wikitext"] {
+            let fam_name = data::family_for(ds_name).unwrap();
+            let meta = nb.family_meta(fam_name).unwrap();
+            let split = data::build(ds_name, 3, 0.01).unwrap();
+            let mut state = nb.init_state(fam_name, 5).unwrap();
+            let idx: Vec<usize> = (0..meta.batch.min(split.train.len())).collect();
+            let batch = gather(&split.train, &idx, meta.batch, 0, 0);
+
+            let (loss, gnorm) = nb.forward_scores(&state, &batch).unwrap();
+            assert_eq!(loss.len(), meta.batch, "{ds_name}");
+            assert!(loss.iter().all(|l| l.is_finite() && *l >= 0.0), "{ds_name}");
+            assert!(gnorm.iter().all(|g| g.is_finite() && *g >= 0.0), "{ds_name}");
+
+            // any subset size trains (no compiled grid natively)
+            let rows: Vec<usize> = (0..17.min(batch.len())).collect();
+            let sub = batch.gather_rows(&rows);
+            let l0 = nb.train_step(&mut state, &sub, 0.01).unwrap();
+            assert!(l0.is_finite(), "{ds_name}");
+
+            let (loss_sum, correct) = nb.eval(&state, &batch).unwrap();
+            assert!(loss_sum.is_finite() && loss_sum >= 0.0, "{ds_name}");
+            assert!(correct >= 0.0, "{ds_name}");
+        }
+    }
+
+    #[test]
+    fn fused_matches_separate_score() {
+        let mut nb = NativeBackend::new();
+        let split = data::build("simple", 1, 0.01).unwrap();
+        let state = nb.init_state("mlp_simple", 1).unwrap();
+        let idx: Vec<usize> = (0..100).collect();
+        let batch = gather(&split.train, &idx, 100, 0, 0);
+        let w = [0.3f32, 1.2, 0.8, 1.0, 0.5, 0.9, 1.3];
+        let fused = nb
+            .forward_score_fused(&state, &batch, &w, 7, -0.5, true)
+            .unwrap()
+            .unwrap();
+        let (loss, gnorm) = nb.forward_scores(&state, &batch).unwrap();
+        let (scores, alphas) = nb.score(&loss, &gnorm, &w, 7, -0.5, true).unwrap();
+        assert_eq!(fused.loss, loss);
+        assert_eq!(fused.gnorm, gnorm);
+        assert_eq!(fused.scores, scores);
+        assert_eq!(fused.alphas, alphas);
+        // α rows are simplex vectors
+        for row in &fused.alphas {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "alpha row sum {sum}");
+        }
+    }
+}

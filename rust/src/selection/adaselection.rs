@@ -203,16 +203,17 @@ impl AdaSelection {
     }
 }
 
-/// Host-side fused score (no state/update): mirrors the kernel exactly.
-/// Used by property tests and the kernel-vs-host equivalence check.
-pub fn score_host(
+/// Host-side fused score + full 7-row α matrix (no state/update): mirrors
+/// the L1 score kernel exactly. This is the oracle the XLA kernel is tested
+/// against AND the scorer the native backend runs in production.
+pub fn score_full(
     loss: &[f32],
     gnorm: &[f32],
     w_full: &[f32; 7],
     t: usize,
     cl_power: f32,
     cl_on: bool,
-) -> Vec<f32> {
+) -> (Vec<f32>, Vec<Vec<f32>>) {
     let full = all_alphas(loss, gnorm);
     let b = loss.len();
     let mut scores = vec![0.0f32; b];
@@ -227,7 +228,19 @@ pub fn score_host(
             *s *= ri;
         }
     }
-    scores
+    (scores, full)
+}
+
+/// Host-side fused score alone (no state/update): see [`score_full`].
+pub fn score_host(
+    loss: &[f32],
+    gnorm: &[f32],
+    w_full: &[f32; 7],
+    t: usize,
+    cl_power: f32,
+    cl_on: bool,
+) -> Vec<f32> {
+    score_full(loss, gnorm, w_full, t, cl_power, cl_on).0
 }
 
 /// ℓ_t^m helper exposed for metrics: mean loss over a hypothetical top-k.

@@ -13,4 +13,6 @@ pub use adaselection::{AdaConfig, AdaSelection, ScoreOutput};
 pub use bandit::UpdateRule;
 pub use method::Method;
 pub use staleness::LossCache;
-pub use policy::{build_selector, AdaSelectionPolicy, BenchmarkAll, SelectionContext, Selector, SingleMethod};
+pub use policy::{
+    build_selector, AdaSelectionPolicy, BenchmarkAll, SelectionContext, Selector, SingleMethod,
+};

@@ -171,8 +171,10 @@ impl AdaSelectionPolicy {
         self.state.select_with_alphas(loss, alphas, k).selected
     }
 
-    /// Kernel path: the L1 scorer produced the full 7-row α matrix plus the
-    /// fused scores; slice out this policy's candidates and update.
+    /// Backend-scorer path (`kernel_scorer`): the L1 scorer — the Pallas
+    /// kernel on the XLA backend, `score_full` on the native backend —
+    /// produced the full 7-row α matrix plus the fused scores; slice out
+    /// this policy's candidates and update.
     pub fn select_kernel(
         &mut self,
         loss: &[f32],

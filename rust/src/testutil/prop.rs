@@ -20,7 +20,8 @@ pub fn prop_check<T: std::fmt::Debug>(
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
             panic!(
-                "property '{name}' failed at case {case} (seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  \
+                 {msg}\n  input: {input:?}"
             );
         }
     }

@@ -1,12 +1,15 @@
-//! One training run end to end (Algorithm 2 of the paper).
+//! One training run end to end (Algorithm 2 of the paper), generic over the
+//! compute [`Backend`].
 //!
 //! Per iteration:
 //!   1. the pipeline delivers a full batch `B_t` (prefetched, backpressured);
-//!   2. a cheap forward artifact produces per-sample (loss, gnorm);
-//!   3. the policy picks the top ⌈γB⌉ rows — AdaSelection scores on the L1
-//!      Pallas kernel (`kernel_scorer`) or the host oracle;
-//!   4. the train-step artifact (compiled for exactly that subset size)
-//!      runs SGD+momentum on the selected rows.
+//!   2. a cheap forward pass produces per-sample (loss, gnorm);
+//!   3. the policy picks the top ⌈γB⌉ rows — AdaSelection scores on the
+//!      backend scorer (`kernel_scorer`: the L1 Pallas kernel on XLA, the
+//!      same math inline on the native backend) or the host oracle;
+//!   4. a train step sized to that subset runs SGD+momentum on the selected
+//!      rows (the XLA backend rounds to a compiled size; native trains the
+//!      exact ⌈γB⌉).
 //!
 //! The benchmark policy skips 2–3 and trains on the full batch, which is
 //! how the paper's "training time" comparison is produced: method time =
@@ -16,7 +19,7 @@ use crate::config::RunConfig;
 use crate::data::{self, Dataset};
 use crate::metrics::{EpochStats, RunResult};
 use crate::pipeline::{gather, Batch, Loader, LoaderConfig};
-use crate::runtime::{Engine, ModelState};
+use crate::runtime::{Backend, FamilyMeta, NativeBackend};
 use crate::selection::bandit::UpdateRule;
 use crate::selection::policy::{build_policy, Policy};
 use crate::selection::{LossCache, SelectionContext};
@@ -25,44 +28,46 @@ use super::earlystop::EarlyStop;
 use crate::util::stats::Welford;
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
-/// A trainer borrowing a (compilation-cached) engine for one run.
-pub struct Trainer<'e> {
-    pub engine: &'e mut Engine,
+/// A trainer borrowing a backend for one run.
+pub struct Trainer<'b, B: Backend> {
+    pub backend: &'b mut B,
     pub cfg: RunConfig,
     train_ds: Dataset,
     test_ds: Dataset,
     family: String,
+    meta: FamilyMeta,
 }
 
-impl<'e> Trainer<'e> {
-    pub fn new(engine: &'e mut Engine, cfg: RunConfig) -> anyhow::Result<Trainer<'e>> {
+impl<'b, B: Backend> Trainer<'b, B> {
+    pub fn new(backend: &'b mut B, cfg: RunConfig) -> anyhow::Result<Trainer<'b, B>> {
         cfg.validate()?;
-        engine.check_method_order()?;
+        backend.validate()?;
         let family = data::family_for(&cfg.dataset)?.to_string();
+        let meta = backend.family_meta(&family)?;
         let split = data::build(&cfg.dataset, cfg.seed, cfg.data_scale)?;
         split.train.validate()?;
         split.test.validate()?;
         Ok(Trainer {
-            engine,
+            backend,
             cfg,
             train_ds: split.train,
             test_ds: split.test,
             family,
+            meta,
         })
     }
 
-    /// The compiled subset size for this run's γ.
-    pub fn subset_size(&self) -> anyhow::Result<usize> {
-        let fam = self.engine.manifest.family(&self.family)?;
-        let target = (self.cfg.gamma * fam.batch as f64).ceil() as usize;
-        Ok(fam.round_size(target.max(1)))
+    /// The train-step subset size for this run's γ: exactly ⌈γB⌉ on
+    /// backends without a compiled-size grid, else the next compiled size.
+    pub fn subset_size(&self) -> usize {
+        let target = (self.cfg.gamma * self.meta.batch as f64).ceil() as usize;
+        self.meta.round_size(target.max(1))
     }
 
     /// Run the configured training job.
     pub fn run(&mut self) -> anyhow::Result<RunResult> {
-        let fam = self.engine.manifest.family(&self.family)?.clone();
-        let b = fam.batch;
-        let k = self.subset_size()?;
+        let b = self.meta.batch;
+        let k = self.subset_size();
         let mut policy = build_policy(
             &self.cfg.selector,
             self.cfg.seed,
@@ -84,11 +89,11 @@ impl<'e> Trainer<'e> {
             .cfg
             .early_stop
             .then(|| EarlyStop::new(self.cfg.patience, 0.01, 0.02));
-        // keep compilation out of the timed loop
+        // keep compilation out of the timed loop (no-op natively)
         let sizes: Vec<usize> = if policy.is_benchmark() { vec![b] } else { vec![k, b] };
-        self.engine.preload_family(&self.family, &sizes)?;
+        self.backend.preload_family(&self.family, &sizes)?;
 
-        let mut state = self.engine.init_state(&self.family, self.cfg.seed as i32)?;
+        let mut state = self.backend.init_state(&self.family, self.cfg.seed as i32)?;
         let mut phases = PhaseTimer::default();
         let mut epochs: Vec<EpochStats> = Vec::new();
         let mut weight_trace: Vec<Vec<f32>> = Vec::new();
@@ -98,7 +103,8 @@ impl<'e> Trainer<'e> {
         let mut acc_buf: Option<Batch> = None;
 
         log::info!(
-            "run start: dataset={} selector={} γ={} k={}/{} epochs={} train={} test={}",
+            "run start: backend={} dataset={} selector={} γ={} k={}/{} epochs={} train={} test={}",
+            self.backend.name(),
             self.cfg.dataset,
             policy.name(),
             self.cfg.gamma,
@@ -135,17 +141,18 @@ impl<'e> Trainer<'e> {
                 iterations += 1;
 
                 if policy.is_benchmark() {
-                    let loss =
-                        phases.time("update", || self.engine.train_step(&mut state, &batch, self.cfg.lr))?;
+                    let loss = phases.time("update", || {
+                        self.backend.train_step(&mut state, &batch, self.cfg.lr)
+                    })?;
                     train_loss.push(loss as f64);
                     continue;
                 }
 
                 let real = &batch.indices[..batch.real];
                 // Selection path, fastest applicable first:
-                //   1. stale-loss cache hit — no XLA call at all;
-                //   2. fused fwd+score artifact (AdaSelection on the L1
-                //      kernel) — one XLA call;
+                //   1. stale-loss cache hit — no forward pass at all;
+                //   2. fused fwd+score pass (AdaSelection on the backend
+                //      scorer) — one backend call;
                 //   3. separate forward then score/host policy.
                 let selected = if cache.can_skip_forward(real, epoch) {
                     let (loss, gnorm) =
@@ -165,7 +172,7 @@ impl<'e> Trainer<'e> {
                                     (c.cl_on, c.cl_power)
                                 };
                                 phases.time("forward", || {
-                                    self.engine.forward_score(
+                                    self.backend.forward_score_fused(
                                         &state, &batch, &w_full, t_next, cl_power, cl_on,
                                     )
                                 })?
@@ -176,17 +183,18 @@ impl<'e> Trainer<'e> {
                         None
                     };
                     match fused {
-                        Some((loss, gnorm, scores, alphas)) => {
-                            cache.update(real, &loss[..batch.real], &gnorm[..batch.real], epoch);
+                        Some(f) => {
+                            let real_n = batch.real;
+                            cache.update(real, &f.loss[..real_n], &f.gnorm[..real_n], epoch);
                             let t0 = std::time::Instant::now();
                             let ada = policy.as_ada().expect("fused path is ada-only");
-                            let sel = ada.select_kernel(&loss, &alphas, scores, k);
+                            let sel = ada.select_kernel(&f.loss, &f.alphas, f.scores, k);
                             phases.add("select", t0.elapsed());
                             sel
                         }
                         None => {
-                            let (loss, gnorm) =
-                                phases.time("forward", || self.engine.forward(&state, &batch))?;
+                            let (loss, gnorm) = phases
+                                .time("forward", || self.backend.forward_scores(&state, &batch))?;
                             cache.update(real, &loss[..batch.real], &gnorm[..batch.real], epoch);
                             let t0 = std::time::Instant::now();
                             let sel = self.select(&mut policy, &loss, &gnorm, k)?;
@@ -212,8 +220,9 @@ impl<'e> Trainer<'e> {
                     if pool.len() >= b {
                         let rows: Vec<usize> = (0..b).collect();
                         let full = pool.gather_rows(&rows);
-                        let loss = phases
-                            .time("update", || self.engine.train_step(&mut state, &full, self.cfg.lr))?;
+                        let loss = phases.time("update", || {
+                            self.backend.train_step(&mut state, &full, self.cfg.lr)
+                        })?;
                         train_loss.push(loss as f64);
                         let rest: Vec<usize> = (b..pool.len()).collect();
                         acc_buf = (!rest.is_empty()).then(|| pool.gather_rows(&rest));
@@ -222,7 +231,7 @@ impl<'e> Trainer<'e> {
                     }
                 } else {
                     let loss = phases
-                        .time("update", || self.engine.train_step(&mut state, &sub, self.cfg.lr))?;
+                        .time("update", || self.backend.train_step(&mut state, &sub, self.cfg.lr))?;
                     train_loss.push(loss as f64);
                 }
             }
@@ -231,7 +240,8 @@ impl<'e> Trainer<'e> {
             let (test_loss, test_acc) =
                 phases.time("eval", || self.evaluate(&state))?;
             log::info!(
-                "epoch {epoch}: train_loss={:.4} test_loss={test_loss:.4} test_acc={test_acc:.4} ({:.1}s train)",
+                "epoch {epoch}: train_loss={:.4} test_loss={test_loss:.4} \
+                 test_acc={test_acc:.4} ({:.1}s train)",
                 train_loss.mean(),
                 train_clock
             );
@@ -289,7 +299,8 @@ impl<'e> Trainer<'e> {
     ) -> anyhow::Result<Vec<usize>> {
         if self.cfg.kernel_scorer {
             if let Some(ada) = policy.as_ada() {
-                // L1 Pallas scorer: fused α + s on the XLA side
+                // backend scorer (the L1 Pallas kernel on XLA, same math
+                // natively): fused α + s computed off-policy
                 let w_full = ada.state().full_weights();
                 let t_next = ada.state().iteration() + 1;
                 let (cl_on, cl_power) = {
@@ -297,7 +308,7 @@ impl<'e> Trainer<'e> {
                     (c.cl_on, c.cl_power)
                 };
                 let (scores, alphas) =
-                    self.engine
+                    self.backend
                         .score(loss, gnorm, &w_full, t_next, cl_power, cl_on)?;
                 return Ok(ada.select_kernel(loss, &alphas, scores, k));
             }
@@ -306,9 +317,8 @@ impl<'e> Trainer<'e> {
     }
 
     /// Full test-set evaluation: (mean loss, accuracy | NaN).
-    pub fn evaluate(&mut self, state: &ModelState) -> anyhow::Result<(f32, f32)> {
-        let fam = self.engine.manifest.family(&self.family)?.clone();
-        let b = fam.batch;
+    pub fn evaluate(&mut self, state: &B::State) -> anyhow::Result<(f32, f32)> {
+        let b = self.meta.batch;
         let n = self.test_ds.len();
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
@@ -318,14 +328,14 @@ impl<'e> Trainer<'e> {
             let end = (start + b).min(n);
             let idx: Vec<usize> = (start..end).collect();
             let batch = gather(&self.test_ds, &idx, b, 0, 0);
-            let (ls, cs) = self.engine.evaluate(state, &batch)?;
+            let (ls, cs) = self.backend.eval(state, &batch)?;
             loss_sum += ls as f64;
             correct += cs as f64;
             count += end - start;
             start = end;
         }
         let mean_loss = (loss_sum / count.max(1) as f64) as f32;
-        let acc = match fam.task {
+        let acc = match self.meta.task {
             crate::runtime::TaskKind::Regression => f32::NAN,
             _ => (correct / count.max(1) as f64) as f32,
         };
@@ -360,15 +370,33 @@ fn concat_batches(a: &Batch, bb: &Batch) -> Batch {
     }
 }
 
-/// Convenience: run one job with a fresh engine.
+/// Convenience: run one job on a fresh backend picked by `cfg.backend`.
 pub fn run(cfg: RunConfig) -> anyhow::Result<RunResult> {
-    let mut engine = Engine::new(&cfg.artifacts_dir)?;
+    match cfg.backend.as_str() {
+        "native" => {
+            let mut backend = NativeBackend::new();
+            Trainer::new(&mut backend, cfg)?.run()
+        }
+        "xla" => run_xla(cfg),
+        other => anyhow::bail!("unknown backend '{other}' (expected native|xla)"),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn run_xla(cfg: RunConfig) -> anyhow::Result<RunResult> {
+    let mut engine = crate::runtime::Engine::new(&cfg.artifacts_dir)?;
     Trainer::new(&mut engine, cfg)?.run()
 }
 
-/// Run one job on a shared engine (sweeps reuse compiled executables).
-pub fn run_with(engine: &mut Engine, cfg: RunConfig) -> anyhow::Result<RunResult> {
-    Trainer::new(engine, cfg)?.run()
+#[cfg(not(feature = "xla"))]
+fn run_xla(_cfg: RunConfig) -> anyhow::Result<RunResult> {
+    anyhow::bail!("backend 'xla' requires building with `--features xla`")
+}
+
+/// Run one job on a shared backend (sweeps reuse compiled executables on
+/// XLA; natively this just avoids re-allocating the family table).
+pub fn run_with<B: Backend>(backend: &mut B, cfg: RunConfig) -> anyhow::Result<RunResult> {
+    Trainer::new(backend, cfg)?.run()
 }
 
 #[cfg(test)]
@@ -403,10 +431,16 @@ mod tests {
     fn trainer_rejects_invalid_config() {
         let mut cfg = RunConfig::default();
         cfg.gamma = 0.0;
-        let mut engine_err = Engine::new(&cfg.artifacts_dir);
-        if let Ok(ref mut e) = engine_err {
-            assert!(Trainer::new(e, cfg).is_err());
-        }
+        let mut backend = NativeBackend::new();
+        assert!(Trainer::new(&mut backend, cfg).is_err());
+    }
+
+    #[test]
+    fn unknown_backend_errors() {
+        let mut cfg = RunConfig::default();
+        cfg.backend = "tpu9000".into();
+        assert!(cfg.validate().is_err());
+        assert!(run(cfg).is_err());
     }
 
     // validate storage-kind assertions on helper
@@ -422,7 +456,7 @@ mod tests {
 
     #[test]
     fn datasets_for_all_tasks_assemble() {
-        // smoke: feature storage kinds line up with tasks (engine-free)
+        // smoke: feature storage kinds line up with tasks (backend-free)
         for name in crate::data::ALL_DATASETS {
             let split = crate::data::build(name, 1, 0.01).unwrap();
             let idx: Vec<usize> = (0..4.min(split.train.len())).collect();

@@ -110,3 +110,51 @@ fn binary_runs_help_and_list_experiments() {
     let out = std::process::Command::new(bin).arg("bogus").output().unwrap();
     assert!(!out.status.success());
 }
+
+#[test]
+fn binary_trains_on_native_backend_without_artifacts() {
+    // the zero-dependency quickstart path: no python, no XLA, no artifacts
+    let bin = env!("CARGO_BIN_EXE_adaselection");
+    let out = std::process::Command::new(bin)
+        .args([
+            "train",
+            "--backend",
+            "native",
+            "--dataset",
+            "simple",
+            "--selector",
+            "adaselection:big_loss+small_loss+uniform",
+            "--epochs",
+            "1",
+            "--data-scale",
+            "0.05",
+            "--workers",
+            "0",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("test_loss"), "{stdout}");
+
+    // unknown backend is rejected up front
+    let out = std::process::Command::new(bin)
+        .args(["train", "--backend", "cuda"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn backend_flag_round_trips_through_config() {
+    let a = parse("train --backend xla --dataset simple");
+    let mut cfg = RunConfig::default();
+    for (k, v) in &a.flags {
+        cfg.apply_override(k, v).unwrap();
+    }
+    cfg.validate().unwrap();
+    assert_eq!(cfg.backend, "xla");
+    let back = RunConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+    assert_eq!(back.backend, "xla");
+}

@@ -1,21 +1,17 @@
 //! Integration: the experiment harness regenerates figure/table files with
-//! the right schema (quick mode; skipped without artifacts).
+//! the right schema. Runs on the native backend (quick mode) — no
+//! artifacts, no XLA — so the full sweep → CSV → aggregate path is
+//! exercised in CI on bare runners.
 
 use std::path::PathBuf;
 
-use adaselection::harness::{registry, run_experiment_with, SweepOptions};
-use adaselection::runtime::Engine;
-
-fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
-    dir.join("manifest.json").exists().then_some(dir)
-}
+use adaselection::harness::{registry, run_experiment, run_experiment_with, SweepOptions};
+use adaselection::runtime::NativeBackend;
 
 fn opts(tag: &str) -> SweepOptions {
     SweepOptions {
         out_dir: std::env::temp_dir().join(format!("ada_harness_test_{tag}")),
         quick: true,
-        artifacts_dir: artifacts().unwrap(),
         ..SweepOptions::default()
     }
 }
@@ -29,10 +25,9 @@ fn read_csv(path: &PathBuf) -> Vec<Vec<String>> {
 
 #[test]
 fn fig5_emits_metric_and_time_series() {
-    let Some(dir) = artifacts() else { return };
-    let mut engine = Engine::new(&dir).unwrap();
+    let mut backend = NativeBackend::new();
     let o = opts("fig5");
-    run_experiment_with(&mut engine, "fig5", &o).unwrap();
+    run_experiment_with(&mut backend, "fig5", &o).unwrap();
 
     let metric = read_csv(&o.out_dir.join("fig5_simple_metric.csv"));
     assert_eq!(metric[0][0], "gamma");
@@ -53,10 +48,9 @@ fn fig5_emits_metric_and_time_series() {
 
 #[test]
 fn fig8_emits_weight_traces_with_candidate_columns() {
-    let Some(dir) = artifacts() else { return };
-    let mut engine = Engine::new(&dir).unwrap();
+    let mut backend = NativeBackend::new();
     let o = opts("fig8");
-    run_experiment_with(&mut engine, "fig8", &o).unwrap();
+    run_experiment_with(&mut backend, "fig8", &o).unwrap();
     let w = read_csv(&o.out_dir.join("fig8_weights_simple.csv"));
     assert_eq!(w[0], vec!["iteration", "big_loss", "small_loss", "uniform"]);
     assert!(w.len() > 1, "no weight rows");
@@ -70,10 +64,9 @@ fn fig8_emits_weight_traces_with_candidate_columns() {
 
 #[test]
 fn fig7_emits_beta_grid() {
-    let Some(dir) = artifacts() else { return };
-    let mut engine = Engine::new(&dir).unwrap();
+    let mut backend = NativeBackend::new();
     let o = opts("fig7");
-    run_experiment_with(&mut engine, "fig7", &o).unwrap();
+    run_experiment_with(&mut backend, "fig7", &o).unwrap();
     let t = read_csv(&o.out_dir.join("fig7_beta_ablation.csv"));
     assert_eq!(t[0], vec!["dataset", "beta", "test_acc"]);
     let betas: Vec<&str> = t[1..].iter().map(|r| r[1].as_str()).collect();
@@ -83,11 +76,31 @@ fn fig7_emits_beta_grid() {
 }
 
 #[test]
+fn fig6_bike_regression_sweep_aggregates() {
+    let mut backend = NativeBackend::new();
+    let o = opts("fig6");
+    run_experiment_with(&mut backend, "fig6", &o).unwrap();
+    let agg = read_csv(&o.out_dir.join("aggregate_bike.csv"));
+    assert_eq!(agg[0], vec!["dataset", "selector", "avg_rank", "avg_metric", "metric"]);
+    // regression aggregates report loss, lower-is-better
+    assert!(agg[1..].iter().all(|r| r[4] == "loss"));
+}
+
+#[test]
 fn registry_ids_all_resolve() {
-    let Some(dir) = artifacts() else { return };
-    let _ = dir;
     // only validate dispatch: unknown id errors, known ids exist in match
     let o = SweepOptions::default();
-    assert!(adaselection::harness::run_experiment("nope", &o).is_err());
+    assert!(run_experiment("nope", &o).is_err());
     assert_eq!(registry().len(), 16);
+}
+
+#[test]
+fn run_experiment_builds_named_backend() {
+    // dispatch through the string-named backend constructor end to end
+    let o = opts("dispatch");
+    run_experiment("fig5", &o).unwrap();
+    assert!(o.out_dir.join("fig5_simple_metric.csv").exists());
+    let mut bad = opts("dispatch_bad");
+    bad.backend = "tpu9000".into();
+    assert!(run_experiment("fig5", &bad).is_err());
 }

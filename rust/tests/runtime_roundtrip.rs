@@ -1,9 +1,12 @@
 //! Integration: the full python-AOT → rust-PJRT bridge, against the real
 //! artifacts tree (skipped gracefully when `make artifacts` hasn't run).
+//! Compiled only with `--features xla`; the native backend's equivalent
+//! coverage lives in `trainer_e2e.rs` and `runtime::native` unit tests.
 //!
 //! This is the cross-layer correctness signal: the L1 Pallas score kernel
 //! (inside the HLO) must agree with the pure-rust scorer, and the L2 train
 //! step must actually learn.
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 

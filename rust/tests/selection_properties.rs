@@ -3,7 +3,9 @@
 
 use adaselection::selection::adaselection::score_host;
 use adaselection::selection::method::{all_alphas, alpha};
-use adaselection::selection::{AdaConfig, AdaSelection, Method, SelectionContext, Selector, SingleMethod};
+use adaselection::selection::{
+    AdaConfig, AdaSelection, Method, SelectionContext, Selector, SingleMethod,
+};
 use adaselection::testutil::prop::{loss_gnorm, prop_check};
 use adaselection::util::rng::Pcg64;
 use adaselection::util::topk::top_k_indices;
