@@ -11,7 +11,7 @@ use adaselection::data;
 use adaselection::harness::{run_experiment_with, SweepOptions};
 use adaselection::pipeline::gather;
 use adaselection::runtime::{Backend, NativeBackend};
-use adaselection::util::bench::{bench, print_results, BenchResult};
+use adaselection::util::bench::{bench, print_results, write_json, BenchResult};
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
@@ -77,4 +77,5 @@ fn backend_step_costs(backend: &mut NativeBackend, smoke: bool) {
         "fig3 cost model: per-step times (method = fwd(128)+train(K); benchmark = train(128))",
         &results,
     );
+    write_json("end_to_end", &results).expect("write BENCH_end_to_end.json");
 }

@@ -7,7 +7,7 @@
 
 use adaselection::data;
 use adaselection::pipeline::{gather, Loader, LoaderConfig};
-use adaselection::util::bench::{bench, print_results, BenchResult};
+use adaselection::util::bench::{bench, print_results, write_json, BenchResult};
 use adaselection::util::timer::Stopwatch;
 
 fn main() {
@@ -54,7 +54,16 @@ fn main() {
             n,
             n as f64 / dt
         );
+        let per_batch_ns = dt * 1e9 / n.max(1) as f64;
+        results.push(BenchResult {
+            name: format!("loader throughput workers={workers} (per batch)"),
+            iters: n,
+            median_ns: per_batch_ns,
+            p95_ns: per_batch_ns,
+            mean_ns: per_batch_ns,
+        });
     }
+    write_json("pipeline", &results).expect("write BENCH_pipeline.json");
 
     // consumer-limited regime: loader must keep the buffer full under a
     // slow trainer (simulated 2ms/step; skipped in smoke mode)

@@ -9,7 +9,7 @@ use adaselection::runtime::{Backend, NativeBackend};
 use adaselection::selection::adaselection::score_host;
 use adaselection::selection::method::all_alphas;
 use adaselection::selection::{AdaConfig, AdaSelection, Method};
-use adaselection::util::bench::{bench, print_results, BenchResult};
+use adaselection::util::bench::{bench, print_results, write_json, BenchResult};
 use adaselection::util::rng::Pcg64;
 use adaselection::util::topk::top_k_indices;
 
@@ -61,6 +61,7 @@ fn main() {
     }));
 
     print_results("selection micro-benchmarks (host path)", &results);
+    write_json("selection", &results).expect("write BENCH_selection.json");
 
     // XLA score-kernel path, if built with the feature + artifacts exist
     #[cfg(feature = "xla")]

@@ -1,0 +1,87 @@
+//! Streaming-subsystem benchmarks: source generation cost, instance-store
+//! update throughput, and end-to-end stream-trainer throughput
+//! (samples/sec) at γ ∈ {0.25, 0.5, 1.0} on the drift-class stream.
+//!
+//! Emits `BENCH_stream.json` (see `util::bench::write_json`) so the perf
+//! trajectory is tracked across PRs.
+//!
+//! `cargo bench -- --test` runs one-iteration smoke mode (CI).
+
+use adaselection::config::StreamConfig;
+use adaselection::runtime::NativeBackend;
+use adaselection::stream::{build_source, InstanceStore, StreamKnobs, StreamTrainer};
+use adaselection::util::bench::{bench, print_results, write_json, BenchResult};
+use adaselection::util::timer::Stopwatch;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let ms = |full: u64| if smoke { 1 } else { full };
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // source generation: one full chunk per tick
+    let knobs = StreamKnobs { seed: 7, drift_period: 256, burst_period: 0, burst_min: 0.25 };
+    for name in ["drift-class", "drift-reg", "drift-lm"] {
+        let source = build_source(name, knobs.clone()).unwrap();
+        let mut tick = 0u64;
+        results.push(bench(&format!("gen_chunk {name} B=128"), ms(60), || {
+            std::hint::black_box(source.gen_chunk(tick, 128));
+            tick += 1;
+        }));
+    }
+
+    // instance-store update path (the per-arrival bookkeeping cost)
+    let store = InstanceStore::new(65_536, 16);
+    let mut id = 0u64;
+    results.push(bench("store.update (cap 64k, 16 shards)", ms(40), || {
+        store.update(id, 1.0, 0.5, (id >> 7) as u32);
+        id += 1;
+    }));
+    let lookup_store = InstanceStore::new(65_536, 16);
+    for i in 0..4096u64 {
+        lookup_store.update(i, 1.0, 0.5, 0);
+    }
+    let mut q = 0u64;
+    results.push(bench("store.get hit (4k live)", ms(40), || {
+        std::hint::black_box(lookup_store.get(q % 4096));
+        q += 1;
+    }));
+
+    print_results("stream micro-benchmarks", &results);
+
+    // end-to-end trainer throughput: samples/sec at the paper's γ sweep.
+    // One short run is a single "op"; per-sample time = run time / arrivals.
+    println!(
+        "\n## stream trainer throughput (drift-class, native backend, B=128)"
+    );
+    println!("{:<40} {:>10} {:>14}", "config", "samples", "samples/s");
+    let ticks = if smoke { 20 } else { 200 };
+    for &gamma in &[0.25f64, 0.5, 1.0] {
+        let mut cfg = StreamConfig::default();
+        cfg.dataset = "drift-class".into();
+        cfg.selector = "adaselection".into();
+        cfg.gamma = gamma;
+        cfg.max_ticks = ticks;
+        cfg.eval_every = 0; // pure select+train throughput
+        cfg.burst_period = 0;
+        cfg.window = 50;
+        let mut backend = NativeBackend::new();
+        let sw = Stopwatch::new();
+        let r = StreamTrainer::new(&mut backend, cfg).unwrap().run().unwrap();
+        let dt = sw.elapsed_secs();
+        println!(
+            "{:<40} {:>10} {:>14.1}",
+            format!("γ={gamma:.2} ticks={ticks}"),
+            r.samples_seen,
+            r.samples_per_sec
+        );
+        results.push(BenchResult {
+            name: format!("stream e2e drift-class γ={gamma:.2} (per arrival)"),
+            iters: r.samples_seen as usize,
+            median_ns: dt * 1e9 / r.samples_seen.max(1) as f64,
+            p95_ns: dt * 1e9 / r.samples_seen.max(1) as f64,
+            mean_ns: dt * 1e9 / r.samples_seen.max(1) as f64,
+        });
+    }
+
+    write_json("stream", &results).expect("write BENCH_stream.json");
+}

@@ -71,8 +71,16 @@ COMMANDS:
                       --beta B --cl on|off --cl-power P --seed N
                       --data-scale F --workers N --accumulate on|off
                       --kernel-scorer on|off --config FILE --out DIR
+  stream              continuous training on an unbounded sample stream
+                      --dataset drift-class|drift-reg|drift-lm
+                      --selector S --gamma G --max-ticks N --lr X
+                      --drift-period N --burst-period N --burst-min F
+                      --store-capacity N --store-shards N
+                      --window N --eval-every N --workers N
+                      --checkpoint FILE [--checkpoint-every N] [--resume]
+                      --config FILE --out DIR
   sweep               reproduce a paper experiment
-                      --exp fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|table3|table4|all
+                      --exp fig1|...|fig9|table3|table4|stream-cmp|all
                       --out DIR [--backend native|xla --epochs N
                       --data-scale F --seed N --quick]
   list-experiments    print the experiment registry (paper figure/table map)

@@ -202,6 +202,246 @@ impl RunConfig {
     }
 }
 
+/// Configuration of a streaming continuous-training run (the `stream`
+/// subcommand): unbounded epochless source, bounded instance store,
+/// checkpoint/resume. See `stream::trainer`.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// compute backend: native (default) | xla
+    pub backend: String,
+    /// stream name: drift-class|drift-reg|drift-lm
+    pub dataset: String,
+    /// selector spec (same grammar as [`RunConfig::selector`])
+    pub selector: String,
+    /// sampling rate γ ∈ (0, 1]
+    pub gamma: f64,
+    pub beta: f32,
+    pub cl_on: bool,
+    pub cl_power: f32,
+    pub lr: f32,
+    pub seed: u64,
+    /// stop after this many ticks (micro-batches); the stream itself is
+    /// unbounded
+    pub max_ticks: usize,
+    /// pipeline workers / prefetch capacity (loader unbounded mode)
+    pub workers: usize,
+    pub capacity: usize,
+    /// instance-store hard capacity (records) and shard count
+    pub store_capacity: usize,
+    pub store_shards: usize,
+    /// ticks per concept-drift cycle (0 = stationary)
+    pub drift_period: u64,
+    /// arrival-burst modulation period in ticks (0 = constant full chunks)
+    pub burst_period: u64,
+    /// fraction of B arriving at the deepest lull, in (0, 1]
+    pub burst_min: f64,
+    /// rolling-window size (ticks) for prequential loss/accuracy
+    pub window: usize,
+    /// prequential-eval cadence in ticks (0 = no eval passes)
+    pub eval_every: usize,
+    /// weight-update rule: eq3[:beta] | exp3[:eta] | softmax[:tau]
+    pub rule: String,
+    /// checkpoint file (written every `checkpoint_every` ticks + at the
+    /// end; also the file `resume` reads)
+    pub checkpoint: Option<PathBuf>,
+    pub checkpoint_every: usize,
+    /// continue from `checkpoint` instead of starting fresh
+    pub resume: bool,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            backend: "native".into(),
+            dataset: "drift-class".into(),
+            selector: "adaselection".into(),
+            gamma: 0.5,
+            beta: 0.5,
+            cl_on: true,
+            cl_power: -0.5,
+            lr: 0.05,
+            seed: 42,
+            max_ticks: 500,
+            workers: 2,
+            capacity: 8,
+            store_capacity: 65_536,
+            store_shards: 16,
+            drift_period: 256,
+            burst_period: 64,
+            burst_min: 0.25,
+            window: 50,
+            eval_every: 1,
+            rule: "eq3".into(),
+            checkpoint: None,
+            checkpoint_every: 0,
+            resume: false,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+        }
+    }
+}
+
+impl StreamConfig {
+    /// Sanity-check ranges before a run starts.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.backend == "native" || self.backend == "xla",
+            "unknown backend '{}' (expected native|xla)",
+            self.backend
+        );
+        anyhow::ensure!(
+            self.gamma > 0.0 && self.gamma <= 1.0,
+            "gamma {} outside (0, 1]",
+            self.gamma
+        );
+        anyhow::ensure!(
+            (-1.0..=1.0).contains(&self.beta),
+            "beta {} outside [-1, 1] (paper range)",
+            self.beta
+        );
+        anyhow::ensure!(self.lr > 0.0, "lr must be > 0");
+        anyhow::ensure!(self.max_ticks > 0, "max-ticks must be > 0");
+        anyhow::ensure!(self.store_capacity > 0, "store-capacity must be > 0");
+        anyhow::ensure!(self.store_shards > 0, "store-shards must be > 0");
+        anyhow::ensure!(
+            self.burst_min > 0.0 && self.burst_min <= 1.0,
+            "burst-min {} outside (0, 1]",
+            self.burst_min
+        );
+        anyhow::ensure!(self.window > 0, "window must be > 0");
+        anyhow::ensure!(
+            !self.resume || self.checkpoint.is_some(),
+            "--resume requires --checkpoint FILE"
+        );
+        crate::stream::source::family_for(&self.dataset)?;
+        crate::selection::bandit::UpdateRule::parse(&self.rule)?;
+        crate::selection::build_selector(
+            &self.selector,
+            self.seed,
+            self.beta,
+            self.cl_on,
+            self.cl_power,
+        )?;
+        Ok(())
+    }
+
+    /// Apply `--key value` overrides (CLI surface).
+    pub fn apply_override(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "backend" => self.backend = value.into(),
+            "dataset" => self.dataset = value.into(),
+            "selector" => self.selector = value.into(),
+            "gamma" => self.gamma = value.parse()?,
+            "beta" => self.beta = value.parse()?,
+            "cl" => self.cl_on = parse_bool(value)?,
+            "cl-power" => self.cl_power = value.parse()?,
+            "lr" => self.lr = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "max-ticks" => self.max_ticks = value.parse()?,
+            "workers" => self.workers = value.parse()?,
+            "capacity" => self.capacity = value.parse()?,
+            "store-capacity" => self.store_capacity = value.parse()?,
+            "store-shards" => self.store_shards = value.parse()?,
+            "drift-period" => self.drift_period = value.parse()?,
+            "burst-period" => self.burst_period = value.parse()?,
+            "burst-min" => self.burst_min = value.parse()?,
+            "window" => self.window = value.parse()?,
+            "eval-every" => self.eval_every = value.parse()?,
+            "rule" => self.rule = value.into(),
+            "checkpoint" => self.checkpoint = Some(PathBuf::from(value)),
+            "checkpoint-every" => self.checkpoint_every = value.parse()?,
+            "resume" => self.resume = parse_bool(value)?,
+            "artifacts" => self.artifacts_dir = PathBuf::from(value),
+            other => anyhow::bail!("unknown stream config key '--{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load a JSON config file, then validate.
+    pub fn from_json(j: &Json) -> anyhow::Result<StreamConfig> {
+        let mut cfg = StreamConfig::default();
+        for (k, v) in j.as_obj()? {
+            let val = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => {
+                    if n.fract() == 0.0 {
+                        format!("{}", *n as i64)
+                    } else {
+                        format!("{n}")
+                    }
+                }
+                Json::Bool(b) => b.to_string(),
+                other => anyhow::bail!("stream config key {k}: unsupported value {other:?}"),
+            };
+            cfg.apply_override(k, &val)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<StreamConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// The subset of the config that determines the *identity* of a run's
+    /// traffic and selection sequence — what must match between the run
+    /// that wrote a checkpoint and the run resuming it. Deliberately
+    /// excludes budget/operational knobs (`max_ticks`, `lr`, workers,
+    /// capacities, eval cadence) that an operator legitimately changes
+    /// when extending a run.
+    pub fn identity_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("dataset".into(), Json::Str(self.dataset.clone()));
+        m.insert("selector".into(), Json::Str(self.selector.clone()));
+        m.insert("gamma".into(), Json::Num(self.gamma));
+        m.insert("beta".into(), Json::Num(self.beta as f64));
+        m.insert("cl".into(), Json::Bool(self.cl_on));
+        m.insert("cl-power".into(), Json::Num(self.cl_power as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("drift-period".into(), Json::Num(self.drift_period as f64));
+        m.insert("burst-period".into(), Json::Num(self.burst_period as f64));
+        m.insert("burst-min".into(), Json::Num(self.burst_min));
+        m.insert("rule".into(), Json::Str(self.rule.clone()));
+        Json::Obj(m)
+    }
+
+    /// Serialize for provenance in reports.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("backend".into(), Json::Str(self.backend.clone()));
+        m.insert("dataset".into(), Json::Str(self.dataset.clone()));
+        m.insert("selector".into(), Json::Str(self.selector.clone()));
+        m.insert("gamma".into(), Json::Num(self.gamma));
+        m.insert("beta".into(), Json::Num(self.beta as f64));
+        m.insert("cl".into(), Json::Bool(self.cl_on));
+        m.insert("cl-power".into(), Json::Num(self.cl_power as f64));
+        m.insert("lr".into(), Json::Num(self.lr as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("max-ticks".into(), Json::Num(self.max_ticks as f64));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("capacity".into(), Json::Num(self.capacity as f64));
+        m.insert("store-capacity".into(), Json::Num(self.store_capacity as f64));
+        m.insert("store-shards".into(), Json::Num(self.store_shards as f64));
+        m.insert("drift-period".into(), Json::Num(self.drift_period as f64));
+        m.insert("burst-period".into(), Json::Num(self.burst_period as f64));
+        m.insert("burst-min".into(), Json::Num(self.burst_min));
+        m.insert("window".into(), Json::Num(self.window as f64));
+        m.insert("eval-every".into(), Json::Num(self.eval_every as f64));
+        m.insert("rule".into(), Json::Str(self.rule.clone()));
+        if let Some(p) = &self.checkpoint {
+            m.insert("checkpoint".into(), Json::Str(p.display().to_string()));
+        }
+        m.insert(
+            "checkpoint-every".into(),
+            Json::Num(self.checkpoint_every as f64),
+        );
+        m.insert("resume".into(), Json::Bool(self.resume));
+        Json::Obj(m)
+    }
+}
+
 fn parse_bool(s: &str) -> anyhow::Result<bool> {
     match s {
         "true" | "1" | "yes" | "on" => Ok(true),
@@ -279,5 +519,55 @@ mod tests {
     fn from_json_rejects_unknown_keys() {
         let j = Json::parse(r#"{"datasett": "cifar10"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn stream_default_validates() {
+        StreamConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn stream_overrides_apply_and_validate() {
+        let mut cfg = StreamConfig::default();
+        cfg.apply_override("dataset", "drift-lm").unwrap();
+        cfg.apply_override("gamma", "0.25").unwrap();
+        cfg.apply_override("max-ticks", "200").unwrap();
+        cfg.apply_override("store-capacity", "4096").unwrap();
+        cfg.apply_override("burst-period", "0").unwrap();
+        cfg.apply_override("checkpoint", "/tmp/ck.json").unwrap();
+        cfg.apply_override("resume", "on").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.dataset, "drift-lm");
+        assert_eq!(cfg.max_ticks, 200);
+        assert!(cfg.resume);
+    }
+
+    #[test]
+    fn stream_bad_values_rejected() {
+        let mut cfg = StreamConfig::default();
+        assert!(cfg.apply_override("nope", "1").is_err());
+        cfg.dataset = "cifar10".into(); // batch dataset, not a stream
+        assert!(cfg.validate().is_err());
+        cfg.dataset = "drift-class".into();
+        cfg.gamma = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.gamma = 0.5;
+        cfg.max_ticks = 0;
+        assert!(cfg.validate().is_err());
+        cfg.max_ticks = 10;
+        cfg.resume = true; // resume without a checkpoint path
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn stream_json_round_trip() {
+        let mut cfg = StreamConfig::default();
+        cfg.dataset = "drift-reg".into();
+        cfg.gamma = 0.3;
+        cfg.burst_min = 0.5;
+        let back = StreamConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.dataset, "drift-reg");
+        assert!((back.gamma - 0.3).abs() < 1e-12);
+        assert!((back.burst_min - 0.5).abs() < 1e-12);
     }
 }

@@ -41,6 +41,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "ablate-stale", paper_ref: "§5 (future work)", description: "stale-loss forward approximation: refresh window sweep" },
         Experiment { id: "ablate-rule", paper_ref: "§3.2 (bandit view)", description: "weight-update rule: eq3 vs exp3 vs softmax" },
         Experiment { id: "tables-from-aggregates", paper_ref: "Tables 3/4", description: "assemble tables 3+4 from aggregate_*.csv already in --out (no re-training)" },
+        Experiment { id: "stream-cmp", paper_ref: "§1/§5 (streaming)", description: "continuous-training stream: AdaSelection vs uniform vs benchmark rolling loss at equal tick budget (γ=0.5, drift-class)" },
     ]
 }
 
@@ -434,6 +435,68 @@ fn ablate_rule<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
     Ok(())
 }
 
+/// Streaming extension: AdaSelection vs uniform vs full-batch benchmark on
+/// the drift-classification stream at an equal train-tick budget. Emits the
+/// per-tick rolling-loss trace and a summary row per selector.
+fn stream_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
+    use crate::config::StreamConfig;
+    use crate::stream::StreamTrainer;
+
+    if engine.family_meta("stream_class").is_err() {
+        log::warn!("backend lacks the stream_class family; skipping stream-cmp");
+        return Ok(());
+    }
+    let ticks = if opts.quick { 120 } else { 600 };
+    let mut trace = crate::metrics::csv::CsvTable::new(vec![
+        "selector", "tick", "rolling_loss", "rolling_acc",
+    ]);
+    let mut summary = crate::metrics::csv::CsvTable::new(vec![
+        "selector",
+        "final_rolling_loss",
+        "final_rolling_acc",
+        "samples_per_sec",
+        "samples_trained",
+        "store_live",
+        "store_evictions",
+    ]);
+    for selector in ["adaselection", "uniform", "benchmark"] {
+        let mut cfg = StreamConfig::default();
+        cfg.dataset = "drift-class".into();
+        cfg.selector = selector.into();
+        cfg.gamma = 0.5;
+        cfg.lr = opts.lr;
+        cfg.seed = opts.seed;
+        cfg.max_ticks = ticks;
+        cfg.window = 40;
+        log::info!("stream-cmp job: {selector} over {ticks} ticks");
+        let r = StreamTrainer::new(&mut *engine, cfg)?.run()?;
+        for p in &r.rolling {
+            trace.push(vec![
+                selector.to_string(),
+                p.tick.to_string(),
+                format!("{:.6}", p.loss),
+                format!("{:.6}", p.acc),
+            ]);
+        }
+        summary.push(vec![
+            selector.to_string(),
+            format!("{:.6}", r.final_rolling_loss),
+            format!("{:.6}", r.final_rolling_acc),
+            format!("{:.1}", r.samples_per_sec),
+            r.samples_trained.to_string(),
+            r.store_len.to_string(),
+            r.store_counters.evictions.to_string(),
+        ]);
+    }
+    trace.save(&opts.out_dir.join("stream_cmp_trace.csv"))?;
+    summary.save(&opts.out_dir.join("stream_cmp_summary.csv"))?;
+    report::print_table(
+        "stream-cmp: rolling prequential loss at equal tick budget (drift-class, γ=0.5)",
+        &summary,
+    );
+    Ok(())
+}
+
 /// Assemble Tables 3/4 from `aggregate_{dataset}.csv` files already in the
 /// output directory (produced by the per-figure sweeps) without re-running
 /// any training.
@@ -520,6 +583,7 @@ pub fn run_experiment_with<B: Backend>(
         "ablate-stale" => ablate_stale(engine, opts),
         "ablate-rule" => ablate_rule(engine, opts),
         "tables-from-aggregates" => tables_from_aggregates(opts),
+        "stream-cmp" => stream_cmp(engine, opts),
         "all" => {
             for e in registry() {
                 // table4 shares tables() with table3; tables-from-aggregates

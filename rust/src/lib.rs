@@ -5,8 +5,11 @@
 //!
 //! Architecture (three layers, python never on the request path):
 //!   * **L3 (this crate)** — streaming data pipeline, the AdaSelection
-//!     policy + seven baseline subsampling methods, trainer, metrics, and
-//!     the experiment harness reproducing every paper table/figure.
+//!     policy + seven baseline subsampling methods, the batch trainer, the
+//!     continuous-training [`stream`] subsystem (unbounded epochless
+//!     sources + sharded bounded instance store + checkpoint/resume),
+//!     metrics, and the experiment harness reproducing every paper
+//!     table/figure.
 //!   * **L2 (python/compile)** — JAX model graphs (MLP / mini-ResNet /
 //!     Transformer) lowered once to HLO text by `make artifacts`.
 //!   * **L1 (python/compile/kernels)** — Pallas kernels for per-sample
@@ -42,6 +45,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod runtime;
 pub mod selection;
+pub mod stream;
 pub mod testutil;
 pub mod train;
 pub mod util;

@@ -5,11 +5,12 @@
 use std::path::PathBuf;
 
 use adaselection::cli::{Args, USAGE};
-use adaselection::config::RunConfig;
+use adaselection::config::{RunConfig, StreamConfig};
 use adaselection::harness::{registry, run_experiment, SweepOptions};
+use adaselection::metrics::csv::CsvTable;
 use adaselection::runtime::{default_artifacts_dir, Manifest};
 use adaselection::util::logging;
-use adaselection::{data, harness, train};
+use adaselection::{data, harness, stream, train};
 
 fn main() {
     logging::init();
@@ -29,6 +30,7 @@ fn main() {
 fn dispatch(args: &Args) -> anyhow::Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(args),
+        "stream" => cmd_stream(args),
         "sweep" => cmd_sweep(args),
         "list-experiments" => {
             println!("{:<20} {:<12} description", "id", "paper");
@@ -94,6 +96,66 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             harness::report::weight_trace_table(&result).save(&dir.join("weights.csv"))?;
         }
         println!("wrote {out}/run.csv");
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => StreamConfig::from_file(std::path::Path::new(path))?,
+        None => StreamConfig::default(),
+    };
+    for (k, v) in &args.flags {
+        if k == "config" || k == "out" {
+            continue;
+        }
+        cfg.apply_override(k, v)?;
+    }
+    cfg.validate()?;
+    println!("config: {}", cfg.to_json());
+    let r = stream::run(cfg)?;
+    println!(
+        "\nstream result: selector={} dataset={} γ={:.2} ticks={}",
+        r.selector, r.dataset, r.gamma, r.ticks
+    );
+    println!(
+        "  seen={} trained={} ({:.0} samples/s)",
+        r.samples_seen, r.samples_trained, r.samples_per_sec
+    );
+    println!(
+        "  rolling: loss={:.4} acc={}",
+        r.final_rolling_loss,
+        if r.final_rolling_acc.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:.4}", r.final_rolling_acc)
+        }
+    );
+    let c = r.store_counters;
+    println!(
+        "  store: {}/{} live, hits={} misses={} evictions={}",
+        r.store_len, r.store_capacity, c.hits, c.misses, c.evictions
+    );
+    if let Some(w) = &r.weights {
+        println!(
+            "  method weights: {:?}",
+            w.iter().map(|x| format!("{x:.3}")).collect::<Vec<_>>()
+        );
+    }
+    println!("  phases: {}", r.phases.summary());
+    if let Some(out) = args.flag("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        let mut t = CsvTable::new(vec!["tick", "rolling_loss", "rolling_acc"]);
+        for p in &r.rolling {
+            t.push(vec![
+                p.tick.to_string(),
+                format!("{:.6}", p.loss),
+                if p.acc.is_nan() { String::new() } else { format!("{:.6}", p.acc) },
+            ]);
+        }
+        t.save(&dir.join("stream_rolling.csv"))?;
+        println!("wrote {out}/stream_rolling.csv");
     }
     Ok(())
 }

@@ -1,9 +1,11 @@
-//! Run metrics: per-iteration records, epoch summaries, CSV emission, and
-//! the paper's Table-3 (average rank) / Table-4 (average metric) math.
+//! Run metrics: per-iteration records, epoch summaries, rolling-window
+//! prequential metrics for streams, CSV emission, and the paper's Table-3
+//! (average rank) / Table-4 (average metric) math.
 
 pub mod csv;
 pub mod persist;
 pub mod ranking;
+pub mod rolling;
 
 use crate::util::timer::PhaseTimer;
 

@@ -1,0 +1,111 @@
+//! Rolling-window metrics for the streaming trainer.
+//!
+//! A stream has no held-out test set; quality is tracked *prequentially*
+//! (test-then-train): every arriving chunk is evaluated under the current
+//! model before any of it is trained on, and the per-tick means feed a
+//! fixed-size rolling window. The window mean is the streaming analogue of
+//! the batch trainer's per-epoch test loss/accuracy.
+
+use std::collections::VecDeque;
+
+/// Fixed-capacity rolling mean.
+#[derive(Clone, Debug)]
+pub struct RollingWindow {
+    cap: usize,
+    buf: VecDeque<f64>,
+    sum: f64,
+}
+
+impl RollingWindow {
+    pub fn new(cap: usize) -> RollingWindow {
+        RollingWindow {
+            cap: cap.max(1),
+            buf: VecDeque::new(),
+            sum: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.buf.push_back(v);
+        self.sum += v;
+        if self.buf.len() > self.cap {
+            if let Some(x) = self.buf.pop_front() {
+                self.sum -= x;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Window has seen at least `cap` observations.
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.cap
+    }
+
+    /// Mean over the window (NaN while empty).
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            f64::NAN
+        } else {
+            self.sum / self.buf.len() as f64
+        }
+    }
+}
+
+/// One periodic snapshot of the rolling metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct RollingPoint {
+    pub tick: u64,
+    /// rolling mean prequential loss
+    pub loss: f32,
+    /// rolling mean prequential accuracy (NaN for regression)
+    pub acc: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_window_is_nan() {
+        let w = RollingWindow::new(4);
+        assert!(w.mean().is_nan());
+        assert!(w.is_empty());
+        assert!(!w.is_full());
+    }
+
+    #[test]
+    fn partial_window_averages_what_it_has() {
+        let mut w = RollingWindow::new(4);
+        w.push(1.0);
+        w.push(3.0);
+        assert_eq!(w.len(), 2);
+        assert!((w.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_window_slides() {
+        let mut w = RollingWindow::new(3);
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            w.push(v);
+        }
+        assert!(w.is_full());
+        assert_eq!(w.len(), 3);
+        assert!((w.mean() - 4.0).abs() < 1e-9); // mean of [3, 4, 5]
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut w = RollingWindow::new(0);
+        w.push(7.0);
+        w.push(9.0);
+        assert_eq!(w.len(), 1);
+        assert!((w.mean() - 9.0).abs() < 1e-12);
+    }
+}

@@ -6,4 +6,4 @@ pub mod batch;
 pub mod loader;
 
 pub use batch::{gather, Batch};
-pub use loader::{Loader, LoaderConfig};
+pub use loader::{BatchProducer, Loader, LoaderConfig};

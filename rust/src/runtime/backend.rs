@@ -157,6 +157,18 @@ pub trait Backend {
     /// Number of f32 parameters in a family (reporting).
     fn param_count(&self, family: &str) -> anyhow::Result<usize>;
 
+    /// Serialize model + optimizer state to plain host tensors for
+    /// checkpointing (stream trainer resume). Backends without host-visible
+    /// state may leave the default unsupported error.
+    fn export_state(&self, _state: &Self::State) -> anyhow::Result<Vec<Tensor>> {
+        anyhow::bail!("backend '{}' does not support state export", self.name())
+    }
+
+    /// Rebuild a `State` from tensors produced by [`Backend::export_state`].
+    fn import_state(&mut self, _family: &str, _tensors: &[Tensor]) -> anyhow::Result<Self::State> {
+        anyhow::bail!("backend '{}' does not support state import", self.name())
+    }
+
     /// Backend self-checks run once per training job (e.g. the engine's
     /// frozen method-order validation against the artifact manifest).
     fn validate(&self) -> anyhow::Result<()> {

@@ -117,6 +117,16 @@ impl NativeBackend {
                 model: NativeModel::Lm(BigramLm { vocab: 256, seq: 32, d_model: 32 }),
             },
         );
+        // streaming family: compact classifier for the drift-class source
+        // (continuous-training workloads; no XLA-side counterpart needed)
+        families.insert(
+            "stream_class".to_string(),
+            NativeFamily {
+                task: TaskKind::Classification,
+                batch: 128,
+                model: mlp(32, &[64], 10),
+            },
+        );
         NativeBackend { families }
     }
 
@@ -292,6 +302,37 @@ impl Backend for NativeBackend {
             .map(|s| s.iter().product::<usize>())
             .sum())
     }
+
+    /// Checkpoint export: parameters followed by momentum buffers.
+    fn export_state(&self, state: &NativeState) -> anyhow::Result<Vec<Tensor>> {
+        let mut out = state.params.clone();
+        out.extend(state.mom.iter().cloned());
+        Ok(out)
+    }
+
+    fn import_state(&mut self, family: &str, tensors: &[Tensor]) -> anyhow::Result<NativeState> {
+        let fam = self.family(family)?;
+        let shapes = Self::param_shapes(fam);
+        anyhow::ensure!(
+            tensors.len() == 2 * shapes.len(),
+            "checkpoint for '{family}' has {} tensors, expected {} (params + momentum)",
+            tensors.len(),
+            2 * shapes.len()
+        );
+        for (i, t) in tensors.iter().enumerate() {
+            let want = &shapes[i % shapes.len()];
+            anyhow::ensure!(
+                &t.shape == want && t.data.len() == want.iter().product::<usize>(),
+                "checkpoint tensor {i} shape {:?} != family shape {want:?}",
+                t.shape
+            );
+        }
+        Ok(NativeState {
+            family: family.to_string(),
+            params: tensors[..shapes.len()].to_vec(),
+            mom: tensors[shapes.len()..].to_vec(),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -355,6 +396,46 @@ mod tests {
             assert!(loss_sum.is_finite() && loss_sum >= 0.0, "{ds_name}");
             assert!(correct >= 0.0, "{ds_name}");
         }
+    }
+
+    #[test]
+    fn stream_family_registered() {
+        let mut nb = NativeBackend::new();
+        let meta = nb.family_meta("stream_class").unwrap();
+        assert_eq!(meta.task, TaskKind::Classification);
+        assert_eq!(meta.batch, 128);
+        assert_eq!(meta.sizes, None);
+        // 32->64->10 MLP: (32*64 + 64) + (64*10 + 10)
+        assert_eq!(nb.param_count("stream_class").unwrap(), 2112 + 650);
+        let state = nb.init_state("stream_class", 3).unwrap();
+        assert!(state.n_params() > 0);
+    }
+
+    #[test]
+    fn export_import_round_trips_state() {
+        let mut nb = NativeBackend::new();
+        let split = data::build("simple", 2, 0.01).unwrap();
+        let mut state = nb.init_state("mlp_simple", 4).unwrap();
+        // take a step so momentum is non-zero
+        let idx: Vec<usize> = (0..32).collect();
+        let batch = gather(&split.train, &idx, 100, 0, 0);
+        nb.train_step(&mut state, &batch, 0.01).unwrap();
+
+        let tensors = nb.export_state(&state).unwrap();
+        let restored = nb.import_state("mlp_simple", &tensors).unwrap();
+        for (a, b) in state.params.iter().zip(restored.params.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        for (a, b) in state.mom.iter().zip(restored.mom.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        // forward results agree exactly
+        let (la, _) = nb.forward_scores(&state, &batch).unwrap();
+        let (lb, _) = nb.forward_scores(&restored, &batch).unwrap();
+        assert_eq!(la, lb);
+        // wrong family / truncated tensor lists are rejected
+        assert!(nb.import_state("transformer", &tensors).is_err());
+        assert!(nb.import_state("mlp_simple", &tensors[..1]).is_err());
     }
 
     #[test]

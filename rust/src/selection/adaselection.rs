@@ -58,6 +58,15 @@ pub struct AdaSelection {
     t: usize,
 }
 
+/// Checkpoint view of the mutable policy state (see
+/// [`AdaSelection::snapshot`] / [`AdaSelection::restore`]).
+#[derive(Clone, Debug)]
+pub struct AdaSnapshot {
+    pub w: Vec<f32>,
+    pub prev_loss: Option<Vec<f32>>,
+    pub t: usize,
+}
+
 /// Everything produced for one batch.
 #[derive(Clone, Debug)]
 pub struct ScoreOutput {
@@ -96,6 +105,36 @@ impl AdaSelection {
     /// Override the weight-update rule (bandit ablations).
     pub fn set_rule(&mut self, rule: UpdateRule) {
         self.cfg.rule = Some(rule);
+    }
+
+    /// Copy out the mutable policy state (checkpoint support).
+    pub fn snapshot(&self) -> AdaSnapshot {
+        AdaSnapshot {
+            w: self.w.clone(),
+            prev_loss: self.prev_loss.clone(),
+            t: self.t,
+        }
+    }
+
+    /// Restore state captured by [`AdaSelection::snapshot`]; the candidate
+    /// pool must match the snapshot's arity.
+    pub fn restore(&mut self, snap: AdaSnapshot) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            snap.w.len() == self.cfg.candidates.len(),
+            "snapshot has {} weights, policy has {} candidates",
+            snap.w.len(),
+            self.cfg.candidates.len()
+        );
+        if let Some(prev) = &snap.prev_loss {
+            anyhow::ensure!(
+                prev.len() == self.cfg.candidates.len(),
+                "snapshot prev_loss arity mismatch"
+            );
+        }
+        self.w = snap.w;
+        self.prev_loss = snap.prev_loss;
+        self.t = snap.t;
+        Ok(())
     }
 
     /// The full 7-slot weight vector the score kernel consumes: candidate
@@ -387,6 +426,33 @@ mod tests {
         for (a, b) in out.scores.iter().zip(s.iter()) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_identically() {
+        let mut a = AdaSelection::new(AdaConfig::default());
+        for s in 0..20 {
+            let (l, g) = batch(s, 48);
+            a.step_host(&l, &g, 10);
+        }
+        let snap = a.snapshot();
+        let mut b = AdaSelection::new(AdaConfig::default());
+        b.restore(snap).unwrap();
+        assert_eq!(a.weights(), b.weights());
+        assert_eq!(a.iteration(), b.iteration());
+        for s in 20..40 {
+            let (l, g) = batch(s, 48);
+            let oa = a.step_host(&l, &g, 10);
+            let ob = b.step_host(&l, &g, 10);
+            assert_eq!(oa.selected, ob.selected, "diverged at step {s}");
+            assert_eq!(oa.weights, ob.weights);
+        }
+        // arity mismatch rejected
+        let mut c = AdaSelection::new(AdaConfig {
+            candidates: vec![Method::BigLoss],
+            ..AdaConfig::default()
+        });
+        assert!(c.restore(a.snapshot()).is_err());
     }
 
     #[test]

@@ -72,6 +72,16 @@ impl SingleMethod {
         }
     }
 
+    /// Raw sampler state (checkpoint support for the stochastic methods).
+    pub fn rng_words(&self) -> [u64; 4] {
+        self.rng.state_words()
+    }
+
+    /// Restore sampler state captured by [`SingleMethod::rng_words`].
+    pub fn set_rng_words(&mut self, w: [u64; 4]) {
+        self.rng = Pcg64::from_state_words(w);
+    }
+
     /// Sample k distinct rows with probability ∝ weights (systematic
     /// weighted reservoir via repeated draws; k ≪ B in practice).
     fn weighted_k(&mut self, weights: &[f32], k: usize) -> Vec<usize> {

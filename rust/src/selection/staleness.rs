@@ -9,21 +9,21 @@
 //! trainer can skip the forward pass entirely and select on cached values,
 //! cutting method cost from `fwd(B) + train(K)` toward `train(K)`.
 //!
+//! Since the streaming subsystem landed, `LossCache` is a thin compat shim
+//! over the sharded [`InstanceStore`] (one bounded statistics store shared
+//! by the batch trainer and the stream trainer) keyed by dataset index;
+//! the old per-`Vec` entry table is gone. Epochs play the role of the
+//! store's tick, and the batch-level hit/miss accounting (cache-served vs
+//! forward-pass batches) lives here, on top of the store's per-instance
+//! counters.
+//!
 //! The ablation bench (`ablate-stale`) quantifies the speed/quality trade.
 
-/// Per-sample cached statistics.
-#[derive(Clone, Copy, Debug)]
-struct Entry {
-    loss: f32,
-    gnorm: f32,
-    /// epoch at which this entry was written (u32::MAX = never)
-    epoch: u32,
-}
+use crate::stream::store::InstanceStore;
 
 /// Cache of per-sample selection statistics keyed by dataset index.
-#[derive(Clone, Debug)]
 pub struct LossCache {
-    entries: Vec<Entry>,
+    store: InstanceStore,
     /// reuse cached stats for batches whose entries are at most this many
     /// epochs old; 0 disables reuse entirely
     pub refresh_every: u32,
@@ -33,15 +33,18 @@ pub struct LossCache {
 
 impl LossCache {
     pub fn new(n_samples: usize, refresh_every: u32) -> Self {
+        // capacity 4× the dataset: epoch-indexed access never hits the
+        // generational eviction bound, so lookups after a fresh
+        // can_skip_forward always find their record. With the feature
+        // disabled (refresh_every == 0) nothing is ever stored, so the
+        // allocation collapses to the shard floor.
+        let capacity = if refresh_every == 0 {
+            1
+        } else {
+            (4 * n_samples.max(1)).max(64)
+        };
         LossCache {
-            entries: vec![
-                Entry {
-                    loss: 0.0,
-                    gnorm: 0.0,
-                    epoch: u32::MAX,
-                };
-                n_samples
-            ],
+            store: InstanceStore::new(capacity, 8),
             refresh_every,
             hits: 0,
             misses: 0,
@@ -53,9 +56,9 @@ impl LossCache {
         if self.refresh_every == 0 {
             return false;
         }
-        let ok = indices.iter().all(|&i| {
-            let e = self.entries[i].epoch;
-            e != u32::MAX && (epoch as u32).saturating_sub(e) <= self.refresh_every
+        let ok = indices.iter().all(|&i| match self.store.peek(i as u64) {
+            Some(r) => (epoch as u32).saturating_sub(r.last_tick) <= self.refresh_every,
+            None => false,
         });
         if ok {
             self.hits += 1;
@@ -65,22 +68,36 @@ impl LossCache {
         ok
     }
 
-    /// Read cached (loss, gnorm) rows for a batch.
+    /// Read cached (loss, gnorm) rows for a batch (zeros for never-seen
+    /// indices — callers gate on [`LossCache::can_skip_forward`]).
     pub fn lookup(&self, indices: &[usize]) -> (Vec<f32>, Vec<f32>) {
-        (
-            indices.iter().map(|&i| self.entries[i].loss).collect(),
-            indices.iter().map(|&i| self.entries[i].gnorm).collect(),
-        )
+        let mut loss = Vec::with_capacity(indices.len());
+        let mut gnorm = Vec::with_capacity(indices.len());
+        for &i in indices {
+            match self.store.peek(i as u64) {
+                Some(r) => {
+                    loss.push(r.loss);
+                    gnorm.push(r.gnorm);
+                }
+                None => {
+                    loss.push(0.0);
+                    gnorm.push(0.0);
+                }
+            }
+        }
+        (loss, gnorm)
     }
 
-    /// Store fresh forward results for a batch.
+    /// Store fresh forward results for a batch. A no-op when the feature
+    /// is disabled (`refresh_every == 0`): nothing would ever read the
+    /// records, so the batch trainer's hot path skips the per-sample
+    /// shard-lock/hash/upsert entirely.
     pub fn update(&mut self, indices: &[usize], loss: &[f32], gnorm: &[f32], epoch: usize) {
+        if self.refresh_every == 0 {
+            return;
+        }
         for ((&i, &l), &g) in indices.iter().zip(loss.iter()).zip(gnorm.iter()) {
-            self.entries[i] = Entry {
-                loss: l,
-                gnorm: g,
-                epoch: epoch as u32,
-            };
+            self.store.update(i as u64, l, g, epoch as u32);
         }
     }
 
@@ -97,6 +114,11 @@ impl LossCache {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+
+    /// The backing instance store (per-instance counters, footprint).
+    pub fn store(&self) -> &InstanceStore {
+        &self.store
     }
 }
 
@@ -150,5 +172,24 @@ mod tests {
         let _ = c.can_skip_forward(&[0, 1], 1); // hit
         let _ = c.can_skip_forward(&[2, 3], 1); // miss
         assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shares_the_instance_store_substrate() {
+        // full-dataset epochs never evict: the shim's capacity headroom
+        // keeps every index live across refreshes
+        let n = 500;
+        let mut c = LossCache::new(n, 2);
+        let indices: Vec<usize> = (0..n).collect();
+        let loss = vec![1.0f32; n];
+        let gnorm = vec![0.5f32; n];
+        for epoch in 0..4 {
+            c.update(&indices, &loss, &gnorm, epoch);
+        }
+        assert_eq!(c.store().len(), n);
+        assert_eq!(c.store().counters().evictions, 0);
+        let r = c.store().peek(7).unwrap();
+        assert_eq!(r.visits, 4);
+        assert_eq!(r.last_tick, 3);
     }
 }

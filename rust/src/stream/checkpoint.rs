@@ -1,0 +1,324 @@
+//! Checkpoint/resume for the stream trainer.
+//!
+//! A [`StreamCheckpoint`] captures everything a killed continuous-training
+//! run needs to continue *deterministically*: the next tick, the model +
+//! optimizer tensors (via `Backend::export_state`), the selection policy's
+//! mutable state (method weights, previous per-method losses, iteration
+//! counter, and the sampler stream for stochastic baselines), the bounded
+//! instance store, and the running selection digest. Stream *sources* are
+//! pure functions of the tick, so they need no state here — resuming at
+//! tick `t` regenerates identical traffic.
+//!
+//! Serialization is the crate's own JSON substrate. `u64` values (ids,
+//! rng words, digests) are hex strings because JSON numbers are f64 and
+//! would truncate them; f32 payloads are exact as f64.
+
+use std::path::Path;
+
+use crate::runtime::Tensor;
+use crate::selection::policy::Policy;
+use crate::stream::store::InstanceRecord;
+use crate::util::json::Json;
+
+/// On-disk format version (bump on layout changes).
+const VERSION: f64 = 1.0;
+
+/// Everything needed to continue a stream run.
+pub struct StreamCheckpoint {
+    /// next tick to process (ticks `< tick` are complete)
+    pub tick: u64,
+    /// model family the tensors belong to
+    pub family: String,
+    /// `StreamConfig::identity_json` of the run that wrote the checkpoint;
+    /// resume rejects a mismatch (different seed/stream/selector would
+    /// silently continue over different traffic)
+    pub identity: Json,
+    /// `Backend::export_state` output
+    pub tensors: Vec<Tensor>,
+    /// selection-policy state, as produced by [`policy_to_json`]
+    pub policy: Json,
+    /// live instance-store records
+    pub store: Vec<(u64, InstanceRecord)>,
+    /// running selection-sequence digest up to `tick`
+    pub digest: u64,
+    pub samples_seen: u64,
+    pub samples_trained: u64,
+}
+
+fn u64_json(x: u64) -> Json {
+    Json::Str(format!("{x:016x}"))
+}
+
+fn u64_from(j: &Json) -> anyhow::Result<u64> {
+    u64::from_str_radix(j.as_str()?, 16)
+        .map_err(|e| anyhow::anyhow!("bad u64 hex in checkpoint: {e}"))
+}
+
+/// Serialize the mutable state of a [`Policy`].
+pub fn policy_to_json(p: &Policy) -> Json {
+    match p {
+        Policy::Benchmark(_) => Json::obj(vec![("kind", Json::Str("benchmark".into()))]),
+        Policy::Single(s) => Json::obj(vec![
+            ("kind", Json::Str("single".into())),
+            (
+                "rng",
+                Json::Arr(s.rng_words().iter().map(|&w| u64_json(w)).collect()),
+            ),
+        ]),
+        Policy::Ada(a) => {
+            let snap = a.state().snapshot();
+            Json::obj(vec![
+                ("kind", Json::Str("ada".into())),
+                ("w", Json::arr_f64(&snap.w.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+                (
+                    "prev_loss",
+                    match &snap.prev_loss {
+                        None => Json::Null,
+                        Some(v) => {
+                            Json::arr_f64(&v.iter().map(|&x| x as f64).collect::<Vec<_>>())
+                        }
+                    },
+                ),
+                ("t", Json::from(snap.t)),
+            ])
+        }
+    }
+}
+
+/// Restore [`policy_to_json`] state into a freshly-built policy of the
+/// same spec (kind mismatch is an error).
+pub fn restore_policy(p: &mut Policy, j: &Json) -> anyhow::Result<()> {
+    let kind = j.at(&["kind"])?.as_str()?;
+    match (p, kind) {
+        (Policy::Benchmark(_), "benchmark") => Ok(()),
+        (Policy::Single(s), "single") => {
+            let words = j.at(&["rng"])?.as_arr()?;
+            anyhow::ensure!(words.len() == 4, "rng state must be 4 words");
+            let mut w = [0u64; 4];
+            for (slot, v) in w.iter_mut().zip(words.iter()) {
+                *slot = u64_from(v)?;
+            }
+            s.set_rng_words(w);
+            Ok(())
+        }
+        (Policy::Ada(a), "ada") => {
+            let w = j
+                .at(&["w"])?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_f64()? as f32))
+                .collect::<anyhow::Result<Vec<f32>>>()?;
+            let prev_loss = match j.at(&["prev_loss"])? {
+                Json::Null => None,
+                arr => Some(
+                    arr.as_arr()?
+                        .iter()
+                        .map(|v| Ok(v.as_f64()? as f32))
+                        .collect::<anyhow::Result<Vec<f32>>>()?,
+                ),
+            };
+            let t = j.at(&["t"])?.as_usize()?;
+            a.state_mut().restore(crate::selection::AdaSnapshot { w, prev_loss, t })
+        }
+        (_, other) => anyhow::bail!(
+            "checkpoint policy kind '{other}' does not match the configured selector"
+        ),
+    }
+}
+
+fn tensor_to_json(t: &Tensor) -> Json {
+    Json::obj(vec![
+        (
+            "shape",
+            Json::Arr(t.shape.iter().map(|&s| Json::from(s)).collect()),
+        ),
+        (
+            "data",
+            Json::arr_f64(&t.data.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+        ),
+    ])
+}
+
+fn tensor_from_json(j: &Json) -> anyhow::Result<Tensor> {
+    let shape = j.at(&["shape"])?.as_usize_vec()?;
+    let data = j
+        .at(&["data"])?
+        .as_arr()?
+        .iter()
+        .map(|v| Ok(v.as_f64()? as f32))
+        .collect::<anyhow::Result<Vec<f32>>>()?;
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "tensor data/shape mismatch in checkpoint"
+    );
+    Ok(Tensor { shape, data })
+}
+
+fn record_to_json(id: u64, r: &InstanceRecord) -> Json {
+    Json::Arr(vec![
+        u64_json(id),
+        Json::from(r.loss as f64),
+        Json::from(r.gnorm as f64),
+        Json::from(r.last_tick as usize),
+        Json::from(r.visits as usize),
+    ])
+}
+
+fn record_from_json(j: &Json) -> anyhow::Result<(u64, InstanceRecord)> {
+    let a = j.as_arr()?;
+    anyhow::ensure!(a.len() == 5, "store record must have 5 fields");
+    Ok((
+        u64_from(&a[0])?,
+        InstanceRecord {
+            loss: a[1].as_f64()? as f32,
+            gnorm: a[2].as_f64()? as f32,
+            last_tick: a[3].as_usize()? as u32,
+            visits: a[4].as_usize()? as u32,
+        },
+    ))
+}
+
+/// Write a checkpoint atomically (temp file + rename) so a crash mid-save
+/// never corrupts the previous checkpoint.
+pub fn save(path: &Path, ck: &StreamCheckpoint) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let j = Json::obj(vec![
+        ("version", Json::Num(VERSION)),
+        ("tick", u64_json(ck.tick)),
+        ("family", Json::Str(ck.family.clone())),
+        ("identity", ck.identity.clone()),
+        ("tensors", Json::Arr(ck.tensors.iter().map(tensor_to_json).collect())),
+        ("policy", ck.policy.clone()),
+        (
+            "store",
+            Json::Arr(ck.store.iter().map(|(id, r)| record_to_json(*id, r)).collect()),
+        ),
+        ("digest", u64_json(ck.digest)),
+        ("samples_seen", u64_json(ck.samples_seen)),
+        ("samples_trained", u64_json(ck.samples_trained)),
+    ]);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, j.to_string())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a checkpoint written by [`save`].
+pub fn load(path: &Path) -> anyhow::Result<StreamCheckpoint> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    let version = j.at(&["version"])?.as_f64()?;
+    anyhow::ensure!(
+        version == VERSION,
+        "checkpoint version {version} unsupported (expected {VERSION})"
+    );
+    Ok(StreamCheckpoint {
+        tick: u64_from(j.at(&["tick"])?)?,
+        family: j.at(&["family"])?.as_str()?.to_string(),
+        identity: j.at(&["identity"])?.clone(),
+        tensors: j
+            .at(&["tensors"])?
+            .as_arr()?
+            .iter()
+            .map(tensor_from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?,
+        policy: j.at(&["policy"])?.clone(),
+        store: j
+            .at(&["store"])?
+            .as_arr()?
+            .iter()
+            .map(record_from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?,
+        digest: u64_from(j.at(&["digest"])?)?,
+        samples_seen: u64_from(j.at(&["samples_seen"])?)?,
+        samples_trained: u64_from(j.at(&["samples_trained"])?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::policy::build_policy;
+    use crate::selection::SelectionContext;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ada_ck_{name}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn checkpoint_file_round_trips() {
+        let mut policy = build_policy("adaselection", 1, 0.5, true, -0.5).unwrap();
+        // advance the policy so there is real state to carry
+        let loss: Vec<f32> = (0..16).map(|i| 0.1 + i as f32 * 0.2).collect();
+        let gnorm = vec![1.0f32; 16];
+        for _ in 0..3 {
+            policy.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 4 });
+        }
+        let ck = StreamCheckpoint {
+            tick: 0xdead_beef_0000_0042,
+            family: "stream_class".into(),
+            identity: crate::config::StreamConfig::default().identity_json(),
+            tensors: vec![Tensor { shape: vec![2, 3], data: vec![0.5, -1.25, 3.0, 0.0, 7.5, -0.125] }],
+            policy: policy_to_json(&policy),
+            store: vec![
+                (u64::MAX, InstanceRecord { loss: 1.5, gnorm: 0.25, last_tick: 9, visits: 3 }),
+                (0, InstanceRecord { loss: 0.0, gnorm: 0.0, last_tick: 0, visits: 1 }),
+            ],
+            digest: u64::MAX - 7,
+            samples_seen: 1 << 60,
+            samples_trained: 12345,
+        };
+        let path = tmp("round_trip");
+        save(&path, &ck).unwrap();
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(back.tick, ck.tick);
+        assert_eq!(back.family, ck.family);
+        assert_eq!(back.identity, ck.identity);
+        assert_eq!(back.tensors.len(), 1);
+        assert_eq!(back.tensors[0].shape, vec![2, 3]);
+        assert_eq!(back.tensors[0].data, ck.tensors[0].data);
+        assert_eq!(back.store, ck.store);
+        assert_eq!(back.digest, ck.digest);
+        assert_eq!(back.samples_seen, ck.samples_seen);
+        assert_eq!(back.samples_trained, ck.samples_trained);
+
+        // policy state restores into an identically-specced policy
+        let mut fresh = build_policy("adaselection", 1, 0.5, true, -0.5).unwrap();
+        restore_policy(&mut fresh, &back.policy).unwrap();
+        assert_eq!(fresh.weights(), policy.weights());
+        let a = policy.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 4 });
+        let b = fresh.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 4 });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_method_rng_resumes() {
+        let loss: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let gnorm = vec![1.0f32; 32];
+        let mut p = build_policy("uniform", 9, 0.5, true, -0.5).unwrap();
+        for _ in 0..5 {
+            p.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 8 });
+        }
+        let saved = policy_to_json(&p);
+        let expect = p.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 8 });
+
+        let mut q = build_policy("uniform", 9, 0.5, true, -0.5).unwrap();
+        restore_policy(&mut q, &saved).unwrap();
+        let got = q.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 8 });
+        assert_eq!(expect, got);
+    }
+
+    #[test]
+    fn kind_mismatch_is_rejected() {
+        let p = build_policy("uniform", 0, 0.5, true, -0.5).unwrap();
+        let saved = policy_to_json(&p);
+        let mut ada = build_policy("adaselection", 0, 0.5, true, -0.5).unwrap();
+        assert!(restore_policy(&mut ada, &saved).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! Streaming continuous-training subsystem (the paper's motivating
+//! production scenario: "continuous training with vast amounts of data",
+//! handled by "recording a constant amount of information per instance").
+//!
+//!   * [`source`] — the [`source::StreamSource`] trait + seeded synthetic
+//!     production-traffic generators for all three task types, with
+//!     configurable concept drift and arrival-rate bursts;
+//!   * [`store`] — the sharded, hard-capacity-bounded
+//!     [`store::InstanceStore`] of fixed per-instance records (also the
+//!     substrate of the batch trainer's stale-loss cache);
+//!   * [`trainer`] — the [`trainer::StreamTrainer`] driving the pipeline
+//!     loader's unbounded mode through any `Backend`, selecting ⌈γB⌉ per
+//!     micro-batch with AdaSelection weights updated online;
+//!   * [`checkpoint`] — deterministic kill/resume of (model state, policy
+//!     state, store).
+//!
+//! CLI surface: `adaselection stream --dataset drift-class --gamma 0.5`.
+
+pub mod checkpoint;
+pub mod source;
+pub mod store;
+pub mod trainer;
+
+pub use source::{build_source, StreamChunk, StreamKnobs, StreamSource, ALL_STREAMS};
+pub use store::{InstanceRecord, InstanceStore, StoreCounters, BYTES_PER_INSTANCE};
+pub use trainer::{run, StreamResult, StreamTrainer};

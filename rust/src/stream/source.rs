@@ -1,0 +1,464 @@
+//! Unbounded synthetic production-traffic sources (the paper's motivating
+//! "continuous training with vast amounts of data" scenario).
+//!
+//! A [`StreamSource`] is an epochless generator: tick `t` yields a chunk of
+//! freshly-arrived samples with globally unique `u64` ids. Generation is a
+//! *pure function of `(seed, tick, row)`* — no mutable cursor — which is
+//! what lets the loader's workers materialize chunks concurrently and out
+//! of order (the reorder window restores sequence order) and what makes
+//! checkpoint/resume trivial: resuming at tick `t` regenerates byte-
+//! identical traffic with no source state to persist.
+//!
+//! All three task types ship a generator:
+//!
+//! | name          | task                  | family         | drift mechanism |
+//! |---------------|-----------------------|----------------|-----------------|
+//! | `drift-class` | classification (10)   | `stream_class` | class prototypes rotate `base → alt`; a static easy subpopulation stays learnable |
+//! | `drift-reg`   | regression            | `mlp_bike`     | target weight vector rotates `base → alt` |
+//! | `drift-lm`    | next-token LM         | `transformer`  | token transitions interpolate between two Markov seeds |
+//!
+//! Arrival-rate bursts: chunk sizes follow a sinusoid between
+//! `burst_min · B` and `B` with period `burst_period` ticks, modelling
+//! diurnal traffic. Padding/masking downstream handles partial chunks.
+
+use std::sync::Arc;
+
+use crate::data::{Dataset, Task, XStore, YStore};
+use crate::util::rng::Pcg64;
+
+/// One tick's arrivals.
+pub struct StreamChunk {
+    /// globally unique sample ids (`tick · B + row`)
+    pub ids: Vec<u64>,
+    /// dense chunk data, one row per id
+    pub data: Dataset,
+}
+
+/// An unbounded, epochless sample stream.
+pub trait StreamSource: Send + Sync {
+    /// Stream name as registered in [`build_source`].
+    fn name(&self) -> &'static str;
+
+    /// Model family this stream trains (native backend family table).
+    fn family(&self) -> &'static str;
+
+    fn task(&self) -> Task;
+
+    /// Materialize tick `t`'s arrivals: between `⌈burst_min·max_rows⌉` and
+    /// `max_rows` samples. Must be pure in `(self, tick)` — loader workers
+    /// call this concurrently and out of order.
+    fn gen_chunk(&self, tick: u64, max_rows: usize) -> StreamChunk;
+}
+
+/// Drift/burst knobs shared by every generator.
+#[derive(Clone, Debug)]
+pub struct StreamKnobs {
+    pub seed: u64,
+    /// ticks per full concept-drift cycle; 0 = stationary
+    pub drift_period: u64,
+    /// arrival-rate modulation period in ticks; 0 = constant full chunks
+    pub burst_period: u64,
+    /// fraction of `max_rows` arriving at the deepest lull, in (0, 1]
+    pub burst_min: f64,
+}
+
+impl StreamKnobs {
+    /// Sinusoidal arrival count in `[burst_min·max_rows, max_rows]`.
+    fn arrivals(&self, tick: u64, max_rows: usize) -> usize {
+        if self.burst_period == 0 {
+            return max_rows.max(1);
+        }
+        let phase = (tick % self.burst_period) as f64 / self.burst_period as f64;
+        let level = self.burst_min
+            + (1.0 - self.burst_min) * 0.5 * (1.0 + (std::f64::consts::TAU * phase).sin());
+        ((max_rows as f64 * level).round() as usize).clamp(1, max_rows)
+    }
+
+    /// Drift phase angle θ ∈ [0, TAU) at `tick`.
+    fn theta(&self, tick: u64) -> f64 {
+        if self.drift_period == 0 {
+            0.0
+        } else {
+            std::f64::consts::TAU * (tick % self.drift_period) as f64
+                / self.drift_period as f64
+        }
+    }
+
+    /// The per-sample generator stream: depends only on (seed, id, salt).
+    fn rng_for(&self, id: u64, salt: u64) -> Pcg64 {
+        Pcg64::new(
+            self.seed
+                ^ id.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ salt.rotate_left(17),
+        )
+    }
+}
+
+/// Globally unique id of `(tick, row)` under chunk width `max_rows`.
+fn global_id(tick: u64, row: usize, max_rows: usize) -> u64 {
+    tick.wrapping_mul(max_rows as u64).wrapping_add(row as u64)
+}
+
+// ---------------------------------------------------------------------------
+// drift-class
+// ---------------------------------------------------------------------------
+
+const CLASS_COUNT: usize = 10;
+const CLASS_FEAT: usize = 32;
+
+/// Classification traffic with a drifting and a static subpopulation.
+///
+/// Half the arrivals are *easy*: tight noise around a static per-class
+/// prototype — learned once, they stay learned. The other half are *hard*:
+/// drawn around a prototype that rotates `base → alt` with the drift phase,
+/// so they are a persistent source of fresh error. Loss-aware selection
+/// concentrates its ⌈γB⌉ budget on the drifting half and tracks the
+/// rotation faster than uniform subsampling (the stream-cmp experiment and
+/// `tests/stream_e2e.rs` measure exactly this).
+pub struct DriftClassSource {
+    knobs: StreamKnobs,
+    /// static per-class prototypes, `CLASS_COUNT × CLASS_FEAT`
+    base: Vec<f32>,
+    /// drift-target prototypes, same shape
+    alt: Vec<f32>,
+}
+
+impl DriftClassSource {
+    pub fn new(knobs: StreamKnobs) -> DriftClassSource {
+        let mut rng = Pcg64::new(knobs.seed ^ 0xc1a5_51f1_ed00_0001);
+        let n = CLASS_COUNT * CLASS_FEAT;
+        let base: Vec<f32> = (0..n).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+        let alt: Vec<f32> = (0..n).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+        DriftClassSource { knobs, base, alt }
+    }
+}
+
+impl StreamSource for DriftClassSource {
+    fn name(&self) -> &'static str {
+        "drift-class"
+    }
+
+    fn family(&self) -> &'static str {
+        "stream_class"
+    }
+
+    fn task(&self) -> Task {
+        Task::Classification { classes: CLASS_COUNT }
+    }
+
+    fn gen_chunk(&self, tick: u64, max_rows: usize) -> StreamChunk {
+        let n = self.knobs.arrivals(tick, max_rows);
+        let theta = self.knobs.theta(tick);
+        let (cos_t, sin_t) = (theta.cos() as f32, theta.sin() as f32);
+        let mut x = Vec::with_capacity(n * CLASS_FEAT);
+        let mut y = Vec::with_capacity(n);
+        let mut ids = Vec::with_capacity(n);
+        for row in 0..n {
+            let id = global_id(tick, row, max_rows);
+            let mut rng = self.knobs.rng_for(id, 0x11);
+            let cls = rng.next_below(CLASS_COUNT as u64) as usize;
+            let easy = rng.next_f64() < 0.5;
+            let off = cls * CLASS_FEAT;
+            if easy {
+                for j in 0..CLASS_FEAT {
+                    x.push(self.base[off + j] + 0.15 * rng.normal() as f32);
+                }
+            } else {
+                for j in 0..CLASS_FEAT {
+                    let proto = cos_t * self.base[off + j] + sin_t * self.alt[off + j];
+                    x.push(proto + 0.45 * rng.normal() as f32);
+                }
+            }
+            y.push(cls as i32);
+            ids.push(id);
+        }
+        StreamChunk {
+            ids,
+            data: Dataset {
+                name: "drift-class".into(),
+                task: Task::Classification { classes: CLASS_COUNT },
+                feat_shape: vec![CLASS_FEAT],
+                x: XStore::F32 { data: x, stride: CLASS_FEAT },
+                y: YStore::I32(y),
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// drift-reg
+// ---------------------------------------------------------------------------
+
+const REG_FEAT: usize = 8;
+
+/// Regression traffic: `y = w(t)·x + ε` with the weight vector rotating
+/// `base → alt` over the drift period.
+pub struct DriftRegSource {
+    knobs: StreamKnobs,
+    base_w: Vec<f32>,
+    alt_w: Vec<f32>,
+}
+
+impl DriftRegSource {
+    pub fn new(knobs: StreamKnobs) -> DriftRegSource {
+        let mut rng = Pcg64::new(knobs.seed ^ 0xc1a5_51f1_ed00_0002);
+        let base_w: Vec<f32> = (0..REG_FEAT).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+        let alt_w: Vec<f32> = (0..REG_FEAT).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+        DriftRegSource { knobs, base_w, alt_w }
+    }
+}
+
+impl StreamSource for DriftRegSource {
+    fn name(&self) -> &'static str {
+        "drift-reg"
+    }
+
+    fn family(&self) -> &'static str {
+        "mlp_bike"
+    }
+
+    fn task(&self) -> Task {
+        Task::Regression
+    }
+
+    fn gen_chunk(&self, tick: u64, max_rows: usize) -> StreamChunk {
+        let n = self.knobs.arrivals(tick, max_rows);
+        let theta = self.knobs.theta(tick);
+        let (cos_t, sin_t) = (theta.cos() as f32, theta.sin() as f32);
+        let mut x = Vec::with_capacity(n * REG_FEAT);
+        let mut y = Vec::with_capacity(n);
+        let mut ids = Vec::with_capacity(n);
+        for row in 0..n {
+            let id = global_id(tick, row, max_rows);
+            let mut rng = self.knobs.rng_for(id, 0x22);
+            let mut target = 0.0f32;
+            for j in 0..REG_FEAT {
+                let xv = rng.normal() as f32;
+                let wj = cos_t * self.base_w[j] + sin_t * self.alt_w[j];
+                target += wj * xv;
+                x.push(xv);
+            }
+            y.push(target + 0.1 * rng.normal() as f32);
+            ids.push(id);
+        }
+        StreamChunk {
+            ids,
+            data: Dataset {
+                name: "drift-reg".into(),
+                task: Task::Regression,
+                feat_shape: vec![REG_FEAT],
+                x: XStore::F32 { data: x, stride: REG_FEAT },
+                y: YStore::F32(y),
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// drift-lm
+// ---------------------------------------------------------------------------
+
+const LM_VOCAB: usize = 256;
+const LM_SEQ: usize = 32;
+
+/// Next-token traffic: order-2 hash-chain transitions that interpolate
+/// between two Markov seeds as the drift phase advances (topic shift).
+pub struct DriftLmSource {
+    knobs: StreamKnobs,
+}
+
+impl DriftLmSource {
+    pub fn new(knobs: StreamKnobs) -> DriftLmSource {
+        DriftLmSource { knobs }
+    }
+
+    fn next_tok(model_seed: u64, a: i32, b: i32, rng: &mut Pcg64) -> i32 {
+        // splitmix-style avalanche over (seed, context pair)
+        let z = crate::util::rng::avalanche(
+            model_seed
+                ^ (a as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ (b as u64).rotate_left(32),
+        );
+        // geometric pick among 4 hash-derived successors keeps per-context
+        // entropy low (learnable) but nonzero
+        let mut pick = 0usize;
+        for i in 0..3 {
+            if rng.next_f64() < 0.5 {
+                pick = i;
+                break;
+            }
+            pick = i + 1;
+        }
+        ((z >> (pick * 8)) % LM_VOCAB as u64) as i32
+    }
+}
+
+impl StreamSource for DriftLmSource {
+    fn name(&self) -> &'static str {
+        "drift-lm"
+    }
+
+    fn family(&self) -> &'static str {
+        "transformer"
+    }
+
+    fn task(&self) -> Task {
+        Task::Lm { vocab: LM_VOCAB, seq: LM_SEQ }
+    }
+
+    fn gen_chunk(&self, tick: u64, max_rows: usize) -> StreamChunk {
+        let n = self.knobs.arrivals(tick, max_rows);
+        let theta = self.knobs.theta(tick);
+        // fraction of transitions drawn from the second topic model
+        let mix = 0.5 * (1.0 - theta.cos());
+        let seed_a = self.knobs.seed ^ 0xaaaa_1111_2222_3333;
+        let seed_b = self.knobs.seed ^ 0xbbbb_4444_5555_6666;
+        let mut x = vec![0i32; n * LM_SEQ];
+        let mut y = vec![0i32; n * LM_SEQ];
+        let mut ids = Vec::with_capacity(n);
+        for row in 0..n {
+            let id = global_id(tick, row, max_rows);
+            let mut rng = self.knobs.rng_for(id, 0x33);
+            let mut toks = [0i32; LM_SEQ + 1];
+            toks[0] = rng.next_below(LM_VOCAB as u64) as i32;
+            toks[1] = rng.next_below(LM_VOCAB as u64) as i32;
+            for t in 2..LM_SEQ + 1 {
+                let seed = if rng.next_f64() < mix { seed_b } else { seed_a };
+                toks[t] = Self::next_tok(seed, toks[t - 2], toks[t - 1], &mut rng);
+            }
+            x[row * LM_SEQ..(row + 1) * LM_SEQ].copy_from_slice(&toks[..LM_SEQ]);
+            y[row * LM_SEQ..(row + 1) * LM_SEQ].copy_from_slice(&toks[1..]);
+            ids.push(id);
+        }
+        StreamChunk {
+            ids,
+            data: Dataset {
+                name: "drift-lm".into(),
+                task: Task::Lm { vocab: LM_VOCAB, seq: LM_SEQ },
+                feat_shape: vec![LM_SEQ],
+                x: XStore::I32 { data: x, stride: LM_SEQ },
+                y: YStore::Seq { data: y, stride: LM_SEQ },
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+/// All stream names, one per task type.
+pub const ALL_STREAMS: [&str; 3] = ["drift-class", "drift-reg", "drift-lm"];
+
+/// Which model family serves each stream (mirrors `data::family_for`).
+pub fn family_for(name: &str) -> anyhow::Result<&'static str> {
+    Ok(match name {
+        "drift-class" => "stream_class",
+        "drift-reg" => "mlp_bike",
+        "drift-lm" => "transformer",
+        other => anyhow::bail!(
+            "unknown stream '{other}' (expected drift-class|drift-reg|drift-lm)"
+        ),
+    })
+}
+
+/// Build a registered stream source.
+pub fn build_source(name: &str, knobs: StreamKnobs) -> anyhow::Result<Arc<dyn StreamSource>> {
+    Ok(match name {
+        "drift-class" => Arc::new(DriftClassSource::new(knobs)),
+        "drift-reg" => Arc::new(DriftRegSource::new(knobs)),
+        "drift-lm" => Arc::new(DriftLmSource::new(knobs)),
+        other => anyhow::bail!(
+            "unknown stream '{other}' (expected drift-class|drift-reg|drift-lm)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knobs(seed: u64) -> StreamKnobs {
+        StreamKnobs { seed, drift_period: 64, burst_period: 16, burst_min: 0.25 }
+    }
+
+    #[test]
+    fn registry_builds_all_streams() {
+        for name in ALL_STREAMS {
+            let s = build_source(name, knobs(3)).unwrap();
+            assert_eq!(s.name(), name);
+            assert_eq!(s.family(), family_for(name).unwrap());
+            let chunk = s.gen_chunk(5, 32);
+            assert!(!chunk.ids.is_empty());
+            assert_eq!(chunk.ids.len(), chunk.data.len());
+            chunk.data.validate().unwrap();
+        }
+        assert!(build_source("nope", knobs(0)).is_err());
+        assert!(family_for("nope").is_err());
+    }
+
+    #[test]
+    fn generation_is_pure_in_tick() {
+        for name in ALL_STREAMS {
+            let s = build_source(name, knobs(7)).unwrap();
+            let a = s.gen_chunk(11, 24);
+            let b = s.gen_chunk(11, 24);
+            assert_eq!(a.ids, b.ids, "{name}");
+            match (&a.data.x, &b.data.x) {
+                (XStore::F32 { data: da, .. }, XStore::F32 { data: db, .. }) => {
+                    assert_eq!(da, db, "{name}")
+                }
+                (XStore::I32 { data: da, .. }, XStore::I32 { data: db, .. }) => {
+                    assert_eq!(da, db, "{name}")
+                }
+                _ => panic!("storage mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn ids_are_globally_unique_across_ticks() {
+        let s = build_source("drift-class", knobs(1)).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for tick in 0..50u64 {
+            for id in s.gen_chunk(tick, 16).ids {
+                assert!(seen.insert(id), "duplicate id {id} at tick {tick}");
+            }
+        }
+    }
+
+    #[test]
+    fn bursts_modulate_arrivals_within_bounds() {
+        let k = StreamKnobs { seed: 0, drift_period: 0, burst_period: 8, burst_min: 0.25 };
+        let s = DriftClassSource::new(k);
+        let sizes: Vec<usize> = (0..8).map(|t| s.gen_chunk(t, 100).ids.len()).collect();
+        assert!(sizes.iter().all(|&n| (25..=100).contains(&n)), "{sizes:?}");
+        assert!(sizes.iter().any(|&n| n < 100), "no lull in {sizes:?}");
+        assert!(sizes.iter().any(|&n| n == 100), "no burst peak in {sizes:?}");
+    }
+
+    #[test]
+    fn no_burst_period_means_constant_full_chunks() {
+        let k = StreamKnobs { seed: 0, drift_period: 32, burst_period: 0, burst_min: 0.5 };
+        let s = DriftRegSource::new(k);
+        for t in 0..10u64 {
+            assert_eq!(s.gen_chunk(t, 40).ids.len(), 40);
+        }
+    }
+
+    #[test]
+    fn drift_moves_the_concept() {
+        // the hard-subpopulation prototypes at opposite drift phases must
+        // differ while the same tick reproduces itself (checked above)
+        let k = StreamKnobs { seed: 5, drift_period: 100, burst_period: 0, burst_min: 1.0 };
+        let s = DriftClassSource::new(k);
+        let early = s.gen_chunk(0, 64);
+        let late = s.gen_chunk(50, 64); // θ = π: prototypes at -base
+        let (XStore::F32 { data: xe, .. }, XStore::F32 { data: xl, .. }) =
+            (&early.data.x, &late.data.x)
+        else {
+            panic!("expected f32 stores");
+        };
+        assert_ne!(xe, xl);
+    }
+}

@@ -1,0 +1,297 @@
+//! Sharded, bounded-memory per-instance statistics store.
+//!
+//! The paper's continuous-training scenario works because AdaSelection only
+//! needs "a constant amount of information per instance". This store is
+//! that constant record, made concrete: a fixed [`InstanceRecord`]
+//! (loss, gnorm proxy, last-seen tick, visit count) keyed by a `u64`
+//! sample id, held in N mutex-sharded segments so the stream trainer and
+//! diagnostics can touch it concurrently without a global lock.
+//!
+//! Memory is *hard*-bounded by generational eviction: each shard keeps two
+//! generations of at most `capacity / (2·shards)` records. Inserting into a
+//! full current generation rotates — the previous old generation is dropped
+//! wholesale (its size is added to the evict counter), the current one
+//! becomes old, and a fresh current generation starts. Lookups check both
+//! generations and promote hits, so recently-touched instances survive
+//! rotations while stale ones age out in O(1) amortized time. Total live
+//! records never exceed `capacity` (rounded up to `2·shards`).
+//!
+//! This generalizes and absorbs the old `selection::staleness::LossCache`
+//! per-`Vec` cache — the batch trainer now rides on the same store through
+//! a thin compat shim (see `selection::staleness`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Fixed per-instance statistics record ("constant information per
+/// instance").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InstanceRecord {
+    /// last observed per-sample loss
+    pub loss: f32,
+    /// last observed gradient-norm proxy
+    pub gnorm: f32,
+    /// tick (stream) / epoch (batch trainer) of the last observation
+    pub last_tick: u32,
+    /// how many times this instance has been observed
+    pub visits: u32,
+}
+
+/// Bytes of payload per stored instance (key + record), the store's
+/// bounded-memory unit.
+pub const BYTES_PER_INSTANCE: usize =
+    std::mem::size_of::<u64>() + std::mem::size_of::<InstanceRecord>();
+
+/// Monotonic store counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    cur: HashMap<u64, InstanceRecord>,
+    old: HashMap<u64, InstanceRecord>,
+}
+
+/// The sharded bounded store. All methods take `&self` (interior
+/// mutability via per-shard mutexes + atomic counters), so the store can be
+/// shared across threads without an outer lock.
+pub struct InstanceStore {
+    shards: Vec<Mutex<Shard>>,
+    /// per-shard, per-generation record budget
+    gen_capacity: usize,
+    /// configured total capacity (hard bound on live records)
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// SplitMix-style avalanche so sequential ids spread across shards.
+fn mix(id: u64) -> u64 {
+    crate::util::rng::avalanche(id.wrapping_add(0x9e37_79b9_7f4a_7c15))
+}
+
+impl InstanceStore {
+    /// A store holding at most `capacity` records across `n_shards`
+    /// segments. `capacity` is rounded up to `2·n_shards` so every shard
+    /// fits at least one record per generation.
+    pub fn new(capacity: usize, n_shards: usize) -> InstanceStore {
+        let n = n_shards.max(1);
+        let capacity = capacity.max(2 * n);
+        let gen_capacity = (capacity / (2 * n)).max(1);
+        InstanceStore {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            gen_capacity,
+            capacity: gen_capacity * 2 * n,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, id: u64) -> &Mutex<Shard> {
+        &self.shards[(mix(id) as usize) % self.shards.len()]
+    }
+
+    /// Insert into the current generation, rotating generations when full.
+    fn insert_cur(&self, s: &mut Shard, id: u64, rec: InstanceRecord) {
+        if !s.cur.contains_key(&id) && s.cur.len() >= self.gen_capacity {
+            let dropped = std::mem::replace(&mut s.old, std::mem::take(&mut s.cur));
+            self.evictions.fetch_add(dropped.len() as u64, Ordering::Relaxed);
+        }
+        s.cur.insert(id, rec);
+    }
+
+    /// Read without touching counters or generations (diagnostics and the
+    /// staleness shim's freshness probe).
+    pub fn peek(&self, id: u64) -> Option<InstanceRecord> {
+        let s = self.shard(id).lock().unwrap();
+        s.cur.get(&id).or_else(|| s.old.get(&id)).copied()
+    }
+
+    /// Counted lookup: hits promote old-generation records into the
+    /// current generation so hot instances survive rotations.
+    pub fn get(&self, id: u64) -> Option<InstanceRecord> {
+        let mut s = self.shard(id).lock().unwrap();
+        if let Some(r) = s.cur.get(&id).copied() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(r);
+        }
+        if let Some(r) = s.old.remove(&id) {
+            self.insert_cur(&mut s, id, r);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(r);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Upsert fresh statistics for one instance; `visits` carries over from
+    /// any live record of the same id.
+    pub fn update(&self, id: u64, loss: f32, gnorm: f32, tick: u32) {
+        let mut s = self.shard(id).lock().unwrap();
+        let prev = s.cur.get(&id).copied().or_else(|| s.old.remove(&id));
+        let rec = InstanceRecord {
+            loss,
+            gnorm,
+            last_tick: tick,
+            visits: prev.map(|p| p.visits).unwrap_or(0).saturating_add(1),
+        };
+        self.insert_cur(&mut s, id, rec);
+    }
+
+    /// Live records across all shards and both generations.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                let s = s.lock().unwrap();
+                s.cur.len() + s.old.len()
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The hard bound [`InstanceStore::len`] never exceeds.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current payload footprint in bytes (`len · BYTES_PER_INSTANCE`).
+    pub fn approx_bytes(&self) -> usize {
+        self.len() * BYTES_PER_INSTANCE
+    }
+
+    pub fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// All live records, sorted by id (deterministic checkpoint payload).
+    pub fn snapshot(&self) -> Vec<(u64, InstanceRecord)> {
+        let mut out: Vec<(u64, InstanceRecord)> = Vec::with_capacity(self.len());
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            out.extend(s.old.iter().map(|(&id, &r)| (id, r)));
+            out.extend(s.cur.iter().map(|(&id, &r)| (id, r)));
+        }
+        out.sort_unstable_by_key(|&(id, _)| id);
+        out
+    }
+
+    /// Re-insert checkpointed records (visit counts preserved verbatim).
+    pub fn load(&self, entries: &[(u64, InstanceRecord)]) {
+        for &(id, rec) in entries {
+            let mut s = self.shard(id).lock().unwrap();
+            s.old.remove(&id);
+            self.insert_cur(&mut s, id, rec);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_records() {
+        let store = InstanceStore::new(128, 4);
+        store.update(7, 1.5, 0.3, 2);
+        store.update(7, 2.5, 0.4, 3);
+        let r = store.get(7).unwrap();
+        assert_eq!(r.loss, 2.5);
+        assert_eq!(r.gnorm, 0.4);
+        assert_eq!(r.last_tick, 3);
+        assert_eq!(r.visits, 2);
+        assert_eq!(store.len(), 1);
+        assert!(store.get(8).is_none());
+        let c = store.counters();
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn capacity_is_a_hard_bound() {
+        let store = InstanceStore::new(64, 4);
+        assert_eq!(store.capacity(), 64);
+        for id in 0..10_000u64 {
+            store.update(id, 0.1, 0.1, (id / 100) as u32);
+            assert!(store.len() <= store.capacity(), "len {} at id {id}", store.len());
+        }
+        let c = store.counters();
+        assert!(c.evictions > 0);
+        // everything inserted is either live or counted evicted
+        assert_eq!(c.evictions + store.len() as u64, 10_000);
+        assert!(store.approx_bytes() <= store.capacity() * BYTES_PER_INSTANCE);
+    }
+
+    #[test]
+    fn hot_entries_survive_rotations() {
+        // single shard, tiny generations: a constantly re-read id must stay
+        // live while cold ids churn through
+        let store = InstanceStore::new(8, 1);
+        store.update(42, 9.0, 9.0, 0);
+        for id in 1000..1100u64 {
+            store.update(id, 0.0, 0.0, 1);
+            assert!(store.get(42).is_some(), "hot id evicted at {id}");
+        }
+    }
+
+    #[test]
+    fn snapshot_load_round_trip() {
+        let a = InstanceStore::new(256, 4);
+        for id in 0..50u64 {
+            a.update(id, id as f32, 0.5, 3);
+        }
+        let snap = a.snapshot();
+        assert_eq!(snap.len(), 50);
+        let b = InstanceStore::new(256, 8); // different shard count is fine
+        b.load(&snap);
+        assert_eq!(b.len(), 50);
+        for id in 0..50u64 {
+            assert_eq!(b.peek(id), a.peek(id), "id {id}");
+        }
+        assert_eq!(b.snapshot(), snap);
+    }
+
+    #[test]
+    fn tiny_capacity_rounds_up_to_shard_floor() {
+        let store = InstanceStore::new(1, 4);
+        assert_eq!(store.capacity(), 8); // 2 gens x 4 shards x 1 record
+        for id in 0..100u64 {
+            store.update(id, 0.0, 0.0, 0);
+        }
+        assert!(store.len() <= 8);
+    }
+
+    #[test]
+    fn concurrent_updates_stay_bounded() {
+        use std::sync::Arc;
+        let store = Arc::new(InstanceStore::new(512, 8));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let store = store.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..5_000u64 {
+                    store.update(t * 1_000_000 + i, 1.0, 1.0, i as u32);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(store.len() <= store.capacity());
+        let c = store.counters();
+        assert_eq!(c.evictions + store.len() as u64, 20_000);
+    }
+}

@@ -1,0 +1,464 @@
+//! The streaming continuous-training loop: AdaSelection over an unbounded,
+//! epochless sample stream.
+//!
+//! Per tick:
+//!   1. the pipeline delivers the tick's chunk, padded to the family batch
+//!      size (prefetched and backpressured through the loader's unbounded
+//!      mode — stream chunks instead of epoch shuffles, same reorder
+//!      window);
+//!   2. *prequential* evaluation: the chunk is scored under the current
+//!      model before training touches it (rolling-window loss/accuracy);
+//!   3. a forward pass produces per-sample (loss, gnorm); the policy picks
+//!      the top ⌈γ·arrivals⌉ rows with AdaSelection method weights updated
+//!      online;
+//!   4. every observation lands in the bounded [`InstanceStore`] (constant
+//!      information per instance);
+//!   5. a train step runs on the selected rows only.
+//!
+//! Checkpoints (`Backend::export_state` + policy + store + digest) make a
+//! killed run resume with the *exact same* post-resume selection sequence —
+//! sources are pure in the tick, so no generator state is persisted.
+
+use std::sync::Arc;
+
+use crate::config::StreamConfig;
+use crate::metrics::rolling::{RollingPoint, RollingWindow};
+use crate::pipeline::{gather, Batch, BatchProducer, Loader};
+use crate::runtime::{Backend, FamilyMeta, NativeBackend, TaskKind};
+use crate::selection::bandit::UpdateRule;
+use crate::selection::policy::{build_policy, SelectionContext};
+use crate::stream::checkpoint::{self, StreamCheckpoint};
+use crate::stream::source::{build_source, StreamKnobs, StreamSource};
+use crate::stream::store::{InstanceStore, StoreCounters};
+use crate::util::timer::{PhaseTimer, Stopwatch};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_fold(mut h: u64, x: u64) -> u64 {
+    h ^= x;
+    h.wrapping_mul(FNV_PRIME)
+}
+
+/// Feeds the loader's unbounded mode: batch `id` is stream tick
+/// `first_tick + id`, gathered to the family batch size with the chunk's
+/// global sample ids in `Batch::indices` (padding repeats the first id,
+/// mirroring `gather`'s row padding; `Batch::real` marks the arrivals).
+struct ChunkProducer {
+    source: Arc<dyn StreamSource>,
+    batch: usize,
+    first_tick: u64,
+    max_ticks: usize,
+}
+
+impl BatchProducer for ChunkProducer {
+    fn total(&self) -> usize {
+        self.max_ticks
+    }
+
+    fn produce(&self, id: usize) -> Batch {
+        let tick = self.first_tick + id as u64;
+        let chunk = self.source.gen_chunk(tick, self.batch);
+        let n = chunk.data.len();
+        let local: Vec<usize> = (0..n).collect();
+        let mut b = gather(&chunk.data, &local, self.batch, 0, id);
+        let first = chunk.ids.first().copied().unwrap_or(0);
+        let mut ids: Vec<usize> = chunk.ids.iter().map(|&g| g as usize).collect();
+        ids.resize(self.batch, first as usize);
+        b.indices = ids;
+        b
+    }
+}
+
+/// Result of one stream run (or run segment, when resumed).
+pub struct StreamResult {
+    pub dataset: String,
+    pub selector: String,
+    pub gamma: f64,
+    pub seed: u64,
+    /// ticks processed across the whole run (including pre-resume ticks)
+    pub ticks: u64,
+    /// samples that arrived (cumulative, checkpoint-carried)
+    pub samples_seen: u64,
+    /// samples actually trained on (cumulative, checkpoint-carried)
+    pub samples_trained: u64,
+    /// rolling prequential loss at the end of the run (NaN if eval off)
+    pub final_rolling_loss: f32,
+    /// rolling prequential accuracy (NaN for regression / eval off)
+    pub final_rolling_acc: f32,
+    /// periodic rolling-window snapshots (one per eval tick)
+    pub rolling: Vec<RollingPoint>,
+    /// per-tick digest of the selected global ids (this segment only)
+    pub tick_digests: Vec<u64>,
+    /// running digest over the whole selection sequence (checkpoint-carried)
+    pub digest: u64,
+    pub store_len: usize,
+    pub store_capacity: usize,
+    pub store_counters: StoreCounters,
+    /// final AdaSelection method weights, if applicable
+    pub weights: Option<Vec<f32>>,
+    pub phases: PhaseTimer,
+    /// arrivals-per-second over this segment's wall clock
+    pub samples_per_sec: f64,
+}
+
+/// A stream trainer borrowing a backend for one run.
+pub struct StreamTrainer<'b, B: Backend> {
+    pub backend: &'b mut B,
+    pub cfg: StreamConfig,
+    source: Arc<dyn StreamSource>,
+    meta: FamilyMeta,
+}
+
+impl<'b, B: Backend> StreamTrainer<'b, B> {
+    pub fn new(backend: &'b mut B, cfg: StreamConfig) -> anyhow::Result<StreamTrainer<'b, B>> {
+        cfg.validate()?;
+        backend.validate()?;
+        let source = build_source(
+            &cfg.dataset,
+            StreamKnobs {
+                seed: cfg.seed,
+                drift_period: cfg.drift_period,
+                burst_period: cfg.burst_period,
+                burst_min: cfg.burst_min,
+            },
+        )?;
+        let meta = backend.family_meta(source.family())?;
+        Ok(StreamTrainer { backend, cfg, source, meta })
+    }
+
+    /// Run until `max_ticks` (possibly resuming from a checkpoint).
+    pub fn run(&mut self) -> anyhow::Result<StreamResult> {
+        let b = self.meta.batch;
+        let mut policy = build_policy(
+            &self.cfg.selector,
+            self.cfg.seed,
+            self.cfg.beta,
+            self.cfg.cl_on,
+            self.cfg.cl_power,
+        )?;
+        if self.cfg.rule != "eq3" {
+            let rule = UpdateRule::parse(&self.cfg.rule)?;
+            if let Some(ada) = policy.as_ada() {
+                ada.state_mut().set_rule(rule);
+            }
+        }
+        let store = InstanceStore::new(self.cfg.store_capacity, self.cfg.store_shards);
+        let mut first_tick: u64 = 0;
+        let mut digest = FNV_OFFSET;
+        let mut samples_seen = 0u64;
+        let mut samples_trained = 0u64;
+
+        let mut state = if self.cfg.resume {
+            let path = self
+                .cfg
+                .checkpoint
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("--resume requires --checkpoint FILE"))?;
+            let ck = checkpoint::load(path)?;
+            anyhow::ensure!(
+                ck.family == self.meta.name,
+                "checkpoint family '{}' does not match stream family '{}'",
+                ck.family,
+                self.meta.name
+            );
+            let identity = self.cfg.identity_json();
+            anyhow::ensure!(
+                ck.identity == identity,
+                "checkpoint was written by a different run \
+                 (saved {} vs configured {}) — seed/stream/selector/drift \
+                 knobs must match for a deterministic continuation",
+                ck.identity,
+                identity
+            );
+            checkpoint::restore_policy(&mut policy, &ck.policy)?;
+            store.load(&ck.store);
+            first_tick = ck.tick;
+            digest = ck.digest;
+            samples_seen = ck.samples_seen;
+            samples_trained = ck.samples_trained;
+            log::info!("resumed from {path:?} at tick {first_tick}");
+            self.backend.import_state(&self.meta.name, &ck.tensors)?
+        } else {
+            self.backend.init_state(&self.meta.name, self.cfg.seed as i32)?
+        };
+        anyhow::ensure!(
+            (first_tick as usize) < self.cfg.max_ticks,
+            "checkpoint tick {first_tick} already at max_ticks {}",
+            self.cfg.max_ticks
+        );
+
+        // keep any backend compile step out of the timed loop
+        let k_full = ((self.cfg.gamma * b as f64).ceil() as usize).clamp(1, b);
+        let sizes: Vec<usize> =
+            if policy.is_benchmark() { vec![b] } else { vec![k_full, b] };
+        self.backend.preload_family(&self.meta.name, &sizes)?;
+
+        let producer: Arc<dyn BatchProducer> = Arc::new(ChunkProducer {
+            source: self.source.clone(),
+            batch: b,
+            first_tick,
+            max_ticks: self.cfg.max_ticks - first_tick as usize,
+        });
+        let mut loader = Loader::from_producer(producer, self.cfg.workers, self.cfg.capacity);
+
+        log::info!(
+            "stream start: backend={} stream={} selector={} γ={} B={} ticks={}..{} store={} workers={}",
+            self.backend.name(),
+            self.cfg.dataset,
+            policy.name(),
+            self.cfg.gamma,
+            b,
+            first_tick,
+            self.cfg.max_ticks,
+            store.capacity(),
+            self.cfg.workers
+        );
+
+        let mut roll_loss = RollingWindow::new(self.cfg.window);
+        let mut roll_acc = RollingWindow::new(self.cfg.window);
+        let mut rolling: Vec<RollingPoint> = Vec::new();
+        let mut tick_digests: Vec<u64> = Vec::new();
+        let mut phases = PhaseTimer::default();
+        let clock = Stopwatch::new();
+        let mut seen_this_segment = 0u64;
+        let mut tick = first_tick;
+
+        loop {
+            let batch = {
+                let t0 = std::time::Instant::now();
+                let batch = loader.next_batch();
+                phases.add("data", t0.elapsed());
+                match batch {
+                    Some(batch) => batch,
+                    None => break,
+                }
+            };
+            let real = batch.real;
+            samples_seen += real as u64;
+            seen_this_segment += real as u64;
+
+            // prequential test-then-train: score the arrivals before any
+            // of them is trained on (absolute cadence so resume keeps the
+            // same eval ticks)
+            if self.cfg.eval_every > 0 && tick % self.cfg.eval_every as u64 == 0 {
+                let (loss_sum, correct) =
+                    phases.time("eval", || self.backend.eval(&state, &batch))?;
+                roll_loss.push(loss_sum as f64 / real as f64);
+                if self.meta.task != TaskKind::Regression {
+                    roll_acc.push(correct as f64 / real as f64);
+                }
+                rolling.push(RollingPoint {
+                    tick,
+                    loss: roll_loss.mean() as f32,
+                    acc: roll_acc.mean() as f32,
+                });
+            }
+
+            let k = ((self.cfg.gamma * real as f64).ceil() as usize).clamp(1, real);
+            let selected: Vec<usize> = if policy.is_benchmark() {
+                (0..real).collect()
+            } else {
+                // forward + score: fused on the backend scorer for
+                // AdaSelection, separate passes otherwise. α/scores are
+                // computed over the padded batch (compiled-shape friendly)
+                // and sliced to the real arrivals before selection.
+                let fused = match policy.as_ada() {
+                    Some(ada) => {
+                        let w_full = ada.state().full_weights();
+                        let t_next = ada.state().iteration() + 1;
+                        let (cl_on, cl_power) = {
+                            let c = ada.state().config();
+                            (c.cl_on, c.cl_power)
+                        };
+                        phases.time("forward", || {
+                            self.backend.forward_score_fused(
+                                &state, &batch, &w_full, t_next, cl_power, cl_on,
+                            )
+                        })?
+                    }
+                    None => None,
+                };
+                let (sel, loss_real, gnorm_real) = match fused {
+                    Some(f) => {
+                        let loss_real = f.loss[..real].to_vec();
+                        let gnorm_real = f.gnorm[..real].to_vec();
+                        let scores = f.scores[..real].to_vec();
+                        let alphas: Vec<Vec<f32>> =
+                            f.alphas.iter().map(|row| row[..real].to_vec()).collect();
+                        let t0 = std::time::Instant::now();
+                        let ada = policy.as_ada().expect("fused path is ada-only");
+                        let sel = ada.select_kernel(&loss_real, &alphas, scores, k);
+                        phases.add("select", t0.elapsed());
+                        (sel, loss_real, gnorm_real)
+                    }
+                    None => {
+                        let (loss, gnorm) = phases
+                            .time("forward", || self.backend.forward_scores(&state, &batch))?;
+                        let loss_real = loss[..real].to_vec();
+                        let gnorm_real = gnorm[..real].to_vec();
+                        let t0 = std::time::Instant::now();
+                        let sel = policy.select(&SelectionContext {
+                            loss: &loss_real,
+                            gnorm: &gnorm_real,
+                            k,
+                        });
+                        phases.add("select", t0.elapsed());
+                        (sel, loss_real, gnorm_real)
+                    }
+                };
+                // constant information per instance: record every arrival
+                let t0 = std::time::Instant::now();
+                let tick32 = tick.min(u32::MAX as u64) as u32;
+                for ((&id, &l), &g) in batch.indices[..real]
+                    .iter()
+                    .zip(loss_real.iter())
+                    .zip(gnorm_real.iter())
+                {
+                    store.update(id as u64, l, g, tick32);
+                }
+                phases.add("store", t0.elapsed());
+                sel
+            };
+
+            let sub = batch.gather_rows(&selected);
+            phases.time("update", || {
+                self.backend.train_step(&mut state, &sub, self.cfg.lr)
+            })?;
+            samples_trained += selected.len() as u64;
+
+            let mut h = FNV_OFFSET;
+            for &row in &selected {
+                h = fnv_fold(h, batch.indices[row] as u64);
+            }
+            tick_digests.push(h);
+            digest = fnv_fold(digest, h);
+
+            tick += 1;
+            if let Some(path) = &self.cfg.checkpoint {
+                let every = self.cfg.checkpoint_every as u64;
+                let at_end = tick as usize == self.cfg.max_ticks;
+                if at_end || (every > 0 && (tick - first_tick) % every == 0) {
+                    let ck = StreamCheckpoint {
+                        tick,
+                        family: self.meta.name.clone(),
+                        identity: self.cfg.identity_json(),
+                        tensors: self.backend.export_state(&state)?,
+                        policy: checkpoint::policy_to_json(&policy),
+                        store: store.snapshot(),
+                        digest,
+                        samples_seen,
+                        samples_trained,
+                    };
+                    phases.time("checkpoint", || checkpoint::save(path, &ck))?;
+                }
+            }
+            if self.cfg.window > 0 && tick % self.cfg.window as u64 == 0 {
+                log::info!(
+                    "tick {tick}: rolling_loss={:.4} rolling_acc={:.4} store={}/{} seen={}",
+                    roll_loss.mean(),
+                    roll_acc.mean(),
+                    store.len(),
+                    store.capacity(),
+                    samples_seen
+                );
+            }
+        }
+
+        let elapsed = clock.elapsed_secs();
+        Ok(StreamResult {
+            dataset: self.cfg.dataset.clone(),
+            selector: policy.name(),
+            gamma: self.cfg.gamma,
+            seed: self.cfg.seed,
+            ticks: tick,
+            samples_seen,
+            samples_trained,
+            final_rolling_loss: roll_loss.mean() as f32,
+            final_rolling_acc: roll_acc.mean() as f32,
+            rolling,
+            tick_digests,
+            digest,
+            store_len: store.len(),
+            store_capacity: store.capacity(),
+            store_counters: store.counters(),
+            weights: policy.weights(),
+            phases,
+            samples_per_sec: seen_this_segment as f64 / elapsed.max(1e-9),
+        })
+    }
+}
+
+/// Convenience: run one stream job on a fresh backend picked by
+/// `cfg.backend`.
+pub fn run(cfg: StreamConfig) -> anyhow::Result<StreamResult> {
+    match cfg.backend.as_str() {
+        "native" => {
+            let mut backend = NativeBackend::new();
+            StreamTrainer::new(&mut backend, cfg)?.run()
+        }
+        "xla" => run_xla(cfg),
+        other => anyhow::bail!("unknown backend '{other}' (expected native|xla)"),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn run_xla(cfg: StreamConfig) -> anyhow::Result<StreamResult> {
+    let mut engine = crate::runtime::Engine::new(&cfg.artifacts_dir)?;
+    StreamTrainer::new(&mut engine, cfg)?.run()
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_xla(_cfg: StreamConfig) -> anyhow::Result<StreamResult> {
+    anyhow::bail!("backend 'xla' requires building with `--features xla`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_producer_pads_and_carries_global_ids() {
+        let source = build_source(
+            "drift-class",
+            StreamKnobs { seed: 3, drift_period: 64, burst_period: 8, burst_min: 0.25 },
+        )
+        .unwrap();
+        let p = ChunkProducer { source, batch: 16, first_tick: 5, max_ticks: 100 };
+        assert_eq!(p.total(), 100);
+        let b = p.produce(0); // tick 5
+        assert_eq!(b.len(), 16);
+        assert!(b.real >= 1 && b.real <= 16);
+        // global ids of tick 5 under chunk width 16 start at 80
+        assert_eq!(b.indices[0], 80);
+        for (row, &id) in b.indices[..b.real].iter().enumerate() {
+            assert_eq!(id, 80 + row);
+        }
+        // padding repeats the first id
+        for &id in &b.indices[b.real..] {
+            assert_eq!(id, 80);
+        }
+    }
+
+    #[test]
+    fn producer_is_pure_per_id() {
+        let source = build_source(
+            "drift-reg",
+            StreamKnobs { seed: 9, drift_period: 32, burst_period: 4, burst_min: 0.5 },
+        )
+        .unwrap();
+        let p = ChunkProducer { source, batch: 10, first_tick: 0, max_ticks: 50 };
+        let a = p.produce(7);
+        let b = p.produce(7);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.x_f32, b.x_f32);
+        assert_eq!(a.y_f32, b.y_f32);
+    }
+
+    #[test]
+    fn fnv_fold_distinguishes_sequences() {
+        let a = [1u64, 2, 3].iter().fold(FNV_OFFSET, |h, &x| fnv_fold(h, x));
+        let b = [3u64, 2, 1].iter().fold(FNV_OFFSET, |h, &x| fnv_fold(h, x));
+        assert_ne!(a, b);
+    }
+}

@@ -126,4 +126,80 @@ mod tests {
         }
         assert!(stopped);
     }
+
+    #[test]
+    fn patience_zero_clamps_to_one() {
+        // patience = 0 must behave as patience = 1, not stop instantly on
+        // the very first epoch (the `losses.len() <= patience` guard needs
+        // at least one epoch of history)
+        let mut es = EarlyStop::new(0, 0.01, 0.05);
+        assert_eq!(es.patience, 1);
+        assert!(!es.observe_epoch(5.0), "stopped with no history");
+        // flat second epoch: plateau over patience=1 window, weights
+        // trivially stable
+        assert!(es.observe_epoch(5.0));
+    }
+
+    #[test]
+    fn weight_stability_window_requires_patience_consecutive_epochs() {
+        // losses plateau immediately, but weights only settle later: the
+        // stop must wait for `patience` *consecutive* stable epochs
+        let mut es = EarlyStop::new(2, 0.01, 0.1);
+        let mut stop_epoch = None;
+        for epoch in 0..8 {
+            // epochs 0-2 oscillate beyond w_tol, 3+ are frozen
+            let w = if epoch < 3 && epoch % 2 == 0 { 2.0 } else { 1.0 };
+            es.observe_weights(&[w, 1.0]);
+            es.observe_weights(&[1.0, 1.0]);
+            if es.observe_epoch(3.0) {
+                stop_epoch = Some(epoch);
+                break;
+            }
+        }
+        // stable from epoch 3 on; two consecutive stable epochs = 3, 4
+        assert_eq!(stop_epoch, Some(4));
+    }
+
+    #[test]
+    fn weight_stability_counter_resets_on_movement() {
+        let mut es = EarlyStop::new(2, 0.01, 0.1);
+        // one stable epoch...
+        es.observe_weights(&[1.0, 1.0]);
+        es.observe_weights(&[1.0, 1.0]);
+        assert!(!es.observe_epoch(3.0));
+        // ...then a jump: the stable-epoch streak must restart
+        es.observe_weights(&[1.0, 1.0]);
+        es.observe_weights(&[1.5, 0.5]);
+        assert!(!es.observe_epoch(3.0));
+        assert_eq!(es.w_stable_epochs, 0);
+        // two fresh stable epochs rebuild the streak and trigger the stop
+        es.observe_weights(&[1.5, 0.5]);
+        assert!(!es.observe_epoch(3.0));
+        es.observe_weights(&[1.5, 0.5]);
+        assert!(es.observe_epoch(3.0));
+    }
+
+    #[test]
+    fn relative_tolerance_scales_with_loss_magnitude() {
+        // a 0.5-absolute improvement is large at loss 1.0 but negligible at
+        // loss 1000: rel_tol must treat them differently
+        let mut small = EarlyStop::new(1, 0.01, 0.05);
+        assert!(!small.observe_epoch(1.0));
+        // 0.5/1.0 = 50% improvement >> 1% tolerance: keep training
+        assert!(!small.observe_epoch(0.5));
+
+        let mut big = EarlyStop::new(1, 0.01, 0.05);
+        assert!(!big.observe_epoch(1000.0));
+        // 0.5/1000 = 0.05% improvement < 1% tolerance: plateau, stop
+        assert!(big.observe_epoch(999.5));
+    }
+
+    #[test]
+    fn relative_tolerance_handles_worsening_loss() {
+        // loss going *up* is improvement < 0 < rel_tol: must also stop
+        // (with stable weights) rather than wait forever
+        let mut es = EarlyStop::new(1, 0.01, 0.05);
+        assert!(!es.observe_epoch(2.0));
+        assert!(es.observe_epoch(2.5));
+    }
 }

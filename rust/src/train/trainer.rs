@@ -83,7 +83,9 @@ impl<'b, B: Backend> Trainer<'b, B> {
                 ada.state_mut().set_rule(rule);
             }
         }
-        // §5 future-work: stale-loss forward approximation + early stopping
+        // §5 future-work: stale-loss forward approximation + early stopping.
+        // The cache is a shim over the same sharded InstanceStore the
+        // stream trainer uses (one statistics store for both trainers).
         let mut cache = LossCache::new(self.train_ds.len(), self.cfg.stale_refresh);
         let mut early = self
             .cfg
@@ -262,8 +264,11 @@ impl<'b, B: Backend> Trainer<'b, B> {
         if self.cfg.stale_refresh > 0 {
             let (hits, misses) = cache.stats();
             log::info!(
-                "stale-loss cache: {hits} cache-served / {misses} forward batches ({:.0}% hit)",
-                100.0 * cache.hit_rate()
+                "stale-loss cache: {hits} cache-served / {misses} forward batches ({:.0}% hit), \
+                 store {} records / {} B",
+                100.0 * cache.hit_rate(),
+                cache.store().len(),
+                cache.store().approx_bytes()
             );
         }
 

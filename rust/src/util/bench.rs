@@ -69,6 +69,34 @@ pub fn print_results(title: &str, results: &[BenchResult]) {
     }
 }
 
+/// Write a machine-readable summary next to the human table so the perf
+/// trajectory is trackable across PRs (`BENCH_<name>.json` in the working
+/// directory, or `$BENCH_JSON_DIR` when set).
+pub fn write_json(bench_name: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    let arr = Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::from(r.name.as_str())),
+                    ("iters", Json::from(r.iters)),
+                    ("median_ns", Json::from(r.median_ns)),
+                    ("p95_ns", Json::from(r.p95_ns)),
+                    ("mean_ns", Json::from(r.mean_ns)),
+                    ("ops_per_s", Json::from(r.throughput_per_s())),
+                ])
+            })
+            .collect(),
+    );
+    let j = Json::obj(vec![("bench", Json::from(bench_name)), ("results", arr)]);
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{bench_name}.json"));
+    std::fs::write(&path, j.to_string())?;
+    println!("[wrote {}]", path.display());
+    Ok(())
+}
+
 /// Human time formatting.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -94,6 +122,26 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.median_ns > 0.0);
         assert!(r.p95_ns >= r.median_ns);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_summary() {
+        let dir = std::env::temp_dir().join(format!("ada_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("BENCH_JSON_DIR", &dir);
+        let r = bench("one op", 1, || {
+            std::hint::black_box((0..10).sum::<usize>());
+        });
+        let res = write_json("testsuite", &[r]);
+        std::env::remove_var("BENCH_JSON_DIR");
+        res.unwrap();
+        let text = std::fs::read_to_string(dir.join("BENCH_testsuite.json")).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.at(&["bench"]).unwrap().as_str().unwrap(), "testsuite");
+        let results = j.at(&["results"]).unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].at(&["name"]).unwrap().as_str().unwrap(), "one op");
+        assert!(results[0].at(&["median_ns"]).unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -15,12 +15,18 @@ pub struct Pcg64 {
 
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
 
-fn splitmix64(x: &mut u64) -> u64 {
-    *x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
-    let mut z = *x;
+/// The SplitMix64 finalizer: stateless avalanche of a 64-bit value. The
+/// single owner of the mixing constants — seeding, shard hashing
+/// (`stream::store`) and hash-chain stream generators all route here.
+pub fn avalanche(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
     z ^ (z >> 31)
+}
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    avalanche(*x)
 }
 
 impl Pcg64 {
@@ -42,6 +48,25 @@ impl Pcg64 {
     /// Derive an independent stream for a named sub-component.
     pub fn fork(&mut self, tag: u64) -> Pcg64 {
         Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    /// Raw generator state as four words (checkpoint/resume support).
+    pub fn state_words(&self) -> [u64; 4] {
+        [
+            (self.state >> 64) as u64,
+            self.state as u64,
+            (self.inc >> 64) as u64,
+            self.inc as u64,
+        ]
+    }
+
+    /// Rebuild a generator from [`Pcg64::state_words`] output, continuing
+    /// the stream exactly where it left off.
+    pub fn from_state_words(w: [u64; 4]) -> Pcg64 {
+        Pcg64 {
+            state: ((w[0] as u128) << 64) | w[1] as u128,
+            inc: ((w[2] as u128) << 64) | w[3] as u128,
+        }
     }
 
     pub fn next_u64(&mut self) -> u64 {
@@ -171,6 +196,18 @@ mod tests {
             (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
             (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn state_words_resume_the_stream() {
+        let mut a = Pcg64::new(99);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Pcg64::from_state_words(a.state_words());
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -147,6 +147,44 @@ fn binary_trains_on_native_backend_without_artifacts() {
 }
 
 #[test]
+fn binary_streams_on_native_backend() {
+    // the continuous-training subcommand end to end through the CLI
+    let bin = env!("CARGO_BIN_EXE_adaselection");
+    let out_dir = std::env::temp_dir().join(format!("ada_cli_stream_{}", std::process::id()));
+    let out = std::process::Command::new(bin)
+        .args([
+            "stream",
+            "--backend",
+            "native",
+            "--dataset",
+            "drift-class",
+            "--gamma",
+            "0.5",
+            "--max-ticks",
+            "25",
+            "--window",
+            "10",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("rolling"), "{stdout}");
+    assert!(stdout.contains("store"), "{stdout}");
+    assert!(out_dir.join("stream_rolling.csv").exists());
+
+    // unknown stream is rejected up front
+    let out = std::process::Command::new(bin)
+        .args(["stream", "--dataset", "cifar10"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
 fn backend_flag_round_trips_through_config() {
     let a = parse("train --backend xla --dataset simple");
     let mut cfg = RunConfig::default();

@@ -91,7 +91,7 @@ fn registry_ids_all_resolve() {
     // only validate dispatch: unknown id errors, known ids exist in match
     let o = SweepOptions::default();
     assert!(run_experiment("nope", &o).is_err());
-    assert_eq!(registry().len(), 16);
+    assert_eq!(registry().len(), 17);
 }
 
 #[test]
