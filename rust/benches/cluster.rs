@@ -1,0 +1,73 @@
+//! Cluster-subsystem benchmarks: hash-ring micro-costs and end-to-end
+//! aggregate throughput (samples/sec) vs node count at an equal total tick
+//! budget — the scale-out curve the ROADMAP's north star asks for.
+//!
+//! Emits `BENCH_cluster.json` (see `util::bench::write_json`) so the perf
+//! trajectory is tracked across PRs.
+//!
+//! `cargo bench -- --test` runs one-iteration smoke mode (CI).
+
+use adaselection::cluster::{self, HashRing};
+use adaselection::config::ClusterConfig;
+use adaselection::util::bench::{bench, print_results, write_json, BenchResult};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let ms = |full: u64| if smoke { 1 } else { full };
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // ring micro-costs: owner lookup and full membership rebuild
+    let ring = HashRing::with_nodes(7, 128, 0..8);
+    let mut key = 0u64;
+    results.push(bench("ring.owner (8 nodes x 128 vnodes)", ms(30), || {
+        std::hint::black_box(ring.owner(key));
+        key = key.wrapping_add(1);
+    }));
+    let mut n = 0usize;
+    results.push(bench("ring.build (4 nodes x 128 vnodes)", ms(30), || {
+        std::hint::black_box(HashRing::with_nodes(n as u64, 128, 0..4));
+        n += 1;
+    }));
+
+    print_results("cluster micro-benchmarks", &results);
+
+    // end-to-end: aggregate samples/sec at 1/2/4 nodes, equal tick budget
+    println!("\n## cluster throughput (drift-class, native, B=128, equal tick budget)");
+    println!(
+        "{:<26} {:>10} {:>14} {:>10}",
+        "config", "samples", "samples/s", "speedup"
+    );
+    let ticks = if smoke { 20 } else { 200 };
+    let mut base_sps: Option<f64> = None;
+    for &nodes in &[1usize, 2, 4] {
+        let mut cfg = ClusterConfig::default();
+        cfg.nodes = nodes;
+        cfg.gossip_every = 8;
+        cfg.merge_every = 8;
+        cfg.stream.dataset = "drift-class".into();
+        cfg.stream.gamma = 0.5;
+        cfg.stream.max_ticks = ticks;
+        cfg.stream.eval_every = 0; // pure select+train throughput
+        cfg.stream.burst_period = 0;
+        cfg.stream.window = 50;
+        cfg.stream.workers = 1;
+        let r = cluster::run(&cfg).expect("cluster bench run");
+        let base = *base_sps.get_or_insert(r.samples_per_sec);
+        println!(
+            "{:<26} {:>10} {:>14.1} {:>9.2}x",
+            format!("nodes={nodes} ticks={ticks}"),
+            r.samples_seen,
+            r.samples_per_sec,
+            r.samples_per_sec / base.max(1e-9)
+        );
+        results.push(BenchResult {
+            name: format!("cluster e2e drift-class nodes={nodes} (per arrival)"),
+            iters: r.samples_seen as usize,
+            median_ns: 1e9 / r.samples_per_sec.max(1e-9),
+            p95_ns: 1e9 / r.samples_per_sec.max(1e-9),
+            mean_ns: 1e9 / r.samples_per_sec.max(1e-9),
+        });
+    }
+
+    write_json("cluster", &results).expect("write BENCH_cluster.json");
+}

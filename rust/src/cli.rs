@@ -72,13 +72,18 @@ COMMANDS:
                       --data-scale F --workers N --accumulate on|off
                       --kernel-scorer on|off --config FILE --out DIR
   stream              continuous training on an unbounded sample stream
-                      --dataset drift-class|drift-reg|drift-lm
+                      --dataset drift-class|drift-reg|drift-lm|file:PATH
                       --selector S --gamma G --max-ticks N --lr X
                       --drift-period N --burst-period N --burst-min F
                       --store-capacity N --store-shards N
                       --window N --eval-every N --workers N
+                      --drift-detect on|off --replay on|off
                       --checkpoint FILE [--checkpoint-every N] [--resume]
                       --config FILE --out DIR
+  cluster             multi-node sharded streaming training (in-process)
+                      --nodes N --vnodes N --gossip-every N --merge-every N
+                      [--kill-at T --kill-node I] [--join-at T]
+                      plus all stream options; native backend only
   sweep               reproduce a paper experiment
                       --exp fig1|...|fig9|table3|table4|stream-cmp|all
                       --out DIR [--backend native|xla --epochs N

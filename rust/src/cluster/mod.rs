@@ -1,0 +1,31 @@
+//! Multi-node sharded streaming training (ROADMAP open item #1: the
+//! mutex-sharded `InstanceStore` was the single-node seed of exactly this
+//! design).
+//!
+//!   * [`ring`] — seeded consistent-hash [`ring::HashRing`] with virtual
+//!     nodes (instance-id → owner), plus the deterministic
+//!     [`ring::RingSchedule`] that compiles a churn schedule into
+//!     ownership epochs;
+//!   * [`transport`] — the [`transport::Transport`] trait with the
+//!     deterministic in-process [`transport::Loopback`] implementation
+//!     (loopback TCP is a planned follow-on behind the same trait);
+//!   * [`node`] — [`node::ClusterNode`]: one worker's backend + model
+//!     state + `TickEngine` + pipeline loader over its ring partition;
+//!   * [`trainer`] — the coordinator: scoped-thread segments between sync
+//!     barriers, store gossip (freshest-tick-wins merge), weighted
+//!     model/policy averaging, and kill/join churn with bounded key
+//!     remapping.
+//!
+//! CLI surface: `adaselection cluster --nodes 4 --max-ticks 400
+//! [--gossip-every N] [--merge-every N] [--kill-at T --kill-node I]
+//! [--join-at T]`.
+
+pub mod node;
+pub mod ring;
+pub mod trainer;
+pub mod transport;
+
+pub use node::{ClusterNode, NodePreq, PartitionProducer};
+pub use ring::{HashRing, NodeId, RingSchedule};
+pub use trainer::{run, ClusterResult, NodeSummary};
+pub use transport::{Loopback, Message, Transport};

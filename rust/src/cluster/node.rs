@@ -1,0 +1,325 @@
+//! One cluster worker: a stream-trainer partition over the ids the ring
+//! assigns to it.
+//!
+//! Each node owns a full training stack — backend, model state, a
+//! [`TickEngine`] (policy + instance store + drift/replay control) and a
+//! pipeline [`Loader`] fed by a [`PartitionProducer`]. Between sync
+//! barriers nodes run completely independently (the coordinator steps
+//! them on parallel threads); at barriers the coordinator moves store
+//! gossip and merge material between them over the [`Transport`].
+
+use std::sync::Arc;
+
+use crate::cluster::ring::{NodeId, RingSchedule};
+use crate::cluster::transport::Message;
+use crate::pipeline::{gather, Batch, BatchProducer, Loader};
+use crate::runtime::Backend;
+use crate::selection::AdaSnapshot;
+use crate::stream::source::StreamSource;
+use crate::stream::tick::{fnv_fold, TickEngine, FNV_OFFSET};
+use crate::util::timer::PhaseTimer;
+
+/// Feeds a node's loader: batch `id` is stream tick `first_tick + id`,
+/// filtered to the rows the ring assigns to this node at that tick.
+/// Ownership is pure in the tick (the [`RingSchedule`] is fixed up
+/// front), so loader workers stay deterministic. Unlike the single-node
+/// producer the output is *dense* — no padding to the family batch size —
+/// because the native backend trains any size and a quarter-shard padded
+/// to full B would burn the parallel speedup on padding rows.
+pub struct PartitionProducer {
+    pub source: Arc<dyn StreamSource>,
+    pub rings: Arc<RingSchedule>,
+    pub node: NodeId,
+    /// chunk width (the family batch size B)
+    pub chunk_rows: usize,
+    pub first_tick: u64,
+    pub max_ticks: usize,
+}
+
+impl BatchProducer for PartitionProducer {
+    fn total(&self) -> usize {
+        self.max_ticks
+    }
+
+    fn produce(&self, id: usize) -> Batch {
+        let tick = self.first_tick + id as u64;
+        let chunk = self.source.gen_chunk(tick, self.chunk_rows);
+        if chunk.data.is_empty() {
+            return Batch::empty_padded(&chunk.data, 1, id);
+        }
+        let ring = self.rings.at(tick);
+        let owned: Vec<usize> = (0..chunk.ids.len())
+            .filter(|&r| ring.owner(chunk.ids[r]) == self.node)
+            .collect();
+        // gather needs >= 1 slot; an unowned tick yields real = 0 with one
+        // placeholder row the engine ignores
+        let size = owned.len().max(1);
+        let mut b = gather(&chunk.data, &owned, size, 0, id);
+        let mut ids: Vec<usize> = owned.iter().map(|&r| chunk.ids[r] as usize).collect();
+        let pad = ids
+            .first()
+            .copied()
+            .unwrap_or_else(|| chunk.ids.first().copied().unwrap_or(0) as usize);
+        ids.resize(size, pad);
+        b.indices = ids;
+        b
+    }
+}
+
+/// One per-tick prequential record a node hands the coordinator (the
+/// cluster-wide rolling window sums these across the tick's shards).
+#[derive(Clone, Copy, Debug)]
+pub struct NodePreq {
+    pub tick: u64,
+    pub loss_sum: f32,
+    pub correct: f32,
+    pub arrivals: u32,
+}
+
+/// A cluster worker node.
+pub struct ClusterNode<B: Backend> {
+    pub id: NodeId,
+    pub backend: B,
+    pub state: B::State,
+    pub engine: TickEngine,
+    family: String,
+    source: Arc<dyn StreamSource>,
+    loader: Option<Loader>,
+    /// next tick this node will process
+    pub next_tick: u64,
+    eval_every: usize,
+    /// per-tick digests (kept for determinism checks) + their running fold
+    pub tick_digests: Vec<u64>,
+    pub digest: u64,
+    /// prequential records since the last coordinator drain
+    preq: Vec<NodePreq>,
+    pub phases: PhaseTimer,
+    /// error captured inside a worker thread, surfaced at the barrier
+    pub failed: Option<String>,
+    pub alive: bool,
+    /// samples_trained at the last merge (merge weights = volume since)
+    trained_at_last_merge: u64,
+}
+
+impl<B: Backend> ClusterNode<B> {
+    /// Build a node whose loader starts at `first_tick` and ends at the
+    /// run's `max_ticks`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: NodeId,
+        backend: B,
+        state: B::State,
+        engine: TickEngine,
+        family: String,
+        source: Arc<dyn StreamSource>,
+        rings: Arc<RingSchedule>,
+        chunk_rows: usize,
+        first_tick: u64,
+        max_ticks: usize,
+        eval_every: usize,
+        workers: usize,
+        capacity: usize,
+    ) -> ClusterNode<B> {
+        let producer: Arc<dyn BatchProducer> = Arc::new(PartitionProducer {
+            source: source.clone(),
+            rings,
+            node: id,
+            chunk_rows,
+            first_tick,
+            max_ticks: max_ticks.saturating_sub(first_tick as usize),
+        });
+        ClusterNode {
+            id,
+            backend,
+            state,
+            engine,
+            family,
+            source,
+            loader: Some(Loader::from_producer(producer, workers, capacity)),
+            next_tick: first_tick,
+            eval_every,
+            tick_digests: Vec::new(),
+            digest: FNV_OFFSET,
+            preq: Vec::new(),
+            phases: PhaseTimer::default(),
+            failed: None,
+            alive: true,
+            trained_at_last_merge: 0,
+        }
+    }
+
+    /// Process ticks `[next_tick, end_tick)`. Errors are captured in
+    /// `failed` (worker threads cannot propagate them directly).
+    pub fn run_until(&mut self, end_tick: u64) {
+        while self.next_tick < end_tick && self.failed.is_none() {
+            let batch = {
+                let t0 = std::time::Instant::now();
+                let b = self.loader.as_mut().and_then(|l| l.next_batch());
+                self.phases.add("data", t0.elapsed());
+                match b {
+                    Some(b) => b,
+                    None => {
+                        self.failed =
+                            Some(format!("node {}: loader ended early", self.id));
+                        return;
+                    }
+                }
+            };
+            let tick = self.next_tick;
+            let do_eval = self.eval_every > 0 && tick % self.eval_every as u64 == 0;
+            match self.engine.process(
+                &mut self.backend,
+                &mut self.state,
+                self.source.as_ref(),
+                &batch,
+                tick,
+                do_eval,
+                &mut self.phases,
+            ) {
+                Ok(out) => {
+                    if let Some((loss_sum, correct)) = out.eval {
+                        self.preq.push(NodePreq {
+                            tick,
+                            loss_sum,
+                            correct,
+                            arrivals: out.arrivals as u32,
+                        });
+                    }
+                    self.tick_digests.push(out.digest);
+                    self.digest = fnv_fold(self.digest, out.digest);
+                }
+                Err(e) => {
+                    self.failed = Some(format!("node {}: {e:#}", self.id));
+                    return;
+                }
+            }
+            self.next_tick += 1;
+        }
+    }
+
+    /// Hand the coordinator the prequential records gathered since the
+    /// last barrier.
+    pub fn take_preq(&mut self) -> Vec<NodePreq> {
+        std::mem::take(&mut self.preq)
+    }
+
+    /// This node's store-gossip message.
+    pub fn gossip_message(&self) -> Message {
+        Message::StoreGossip {
+            from: self.id,
+            entries: std::sync::Arc::new(self.engine.store.snapshot()),
+        }
+    }
+
+    /// This node's merge material: exported tensors + policy snapshot,
+    /// weighted by training volume since the last merge (+1 so an idle
+    /// node still contributes instead of zeroing the average).
+    pub fn state_message(&self) -> anyhow::Result<Message> {
+        Ok(Message::State {
+            from: self.id,
+            weight: (self.engine.samples_trained - self.trained_at_last_merge) as f64 + 1.0,
+            tensors: self.backend.export_state(&self.state)?,
+            policy: self.ada_snapshot(),
+        })
+    }
+
+    pub fn ada_snapshot(&self) -> Option<AdaSnapshot> {
+        self.engine
+            .policy
+            .as_ada_ref()
+            .map(|a| a.state().snapshot())
+    }
+
+    /// Apply freshest-tick-wins gossip from a peer.
+    pub fn merge_store(&self, entries: &[(u64, crate::stream::InstanceRecord)]) {
+        self.engine.store.merge(entries);
+    }
+
+    /// Replace model + policy state with the cluster-merged versions.
+    pub fn apply_merged(
+        &mut self,
+        tensors: &[crate::runtime::Tensor],
+        policy: Option<&AdaSnapshot>,
+    ) -> anyhow::Result<()> {
+        self.state = self.backend.import_state(&self.family, tensors)?;
+        if let (Some(snap), Some(ada)) = (policy, self.engine.policy.as_ada()) {
+            ada.state_mut().restore(snap.clone())?;
+        }
+        self.trained_at_last_merge = self.engine.samples_trained;
+        Ok(())
+    }
+
+    /// Remove the node from duty: stop its loader (joins worker threads)
+    /// and mark it dead. Counters and digests stay readable for reports.
+    pub fn kill(&mut self) {
+        self.alive = false;
+        self.loader = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ring::HashRing;
+    use crate::stream::source::{build_source, StreamKnobs};
+
+    fn schedule(nodes: usize) -> Arc<RingSchedule> {
+        Arc::new(RingSchedule::new(HashRing::with_nodes(5, 64, 0..nodes)))
+    }
+
+    #[test]
+    fn partitions_are_disjoint_and_cover() {
+        let source = build_source(
+            "drift-class",
+            StreamKnobs { seed: 2, drift_period: 32, burst_period: 8, burst_min: 0.25 },
+        )
+        .unwrap();
+        let rings = schedule(3);
+        let producers: Vec<PartitionProducer> = (0..3)
+            .map(|node| PartitionProducer {
+                source: source.clone(),
+                rings: rings.clone(),
+                node,
+                chunk_rows: 32,
+                first_tick: 0,
+                max_ticks: 20,
+            })
+            .collect();
+        for tick in 0..20usize {
+            let chunk = source.gen_chunk(tick as u64, 32);
+            let mut seen: Vec<usize> = Vec::new();
+            for p in &producers {
+                let b = p.produce(tick);
+                assert!(!b.is_empty());
+                // real rows carry distinct owned ids
+                seen.extend(b.indices[..b.real].iter().copied());
+            }
+            seen.sort_unstable();
+            let mut want: Vec<usize> = chunk.ids.iter().map(|&g| g as usize).collect();
+            want.sort_unstable();
+            assert_eq!(seen, want, "tick {tick}: shards must partition the chunk");
+        }
+    }
+
+    #[test]
+    fn producer_is_pure_per_id() {
+        let source = build_source(
+            "drift-reg",
+            StreamKnobs { seed: 4, drift_period: 16, burst_period: 4, burst_min: 0.5 },
+        )
+        .unwrap();
+        let p = PartitionProducer {
+            source,
+            rings: schedule(2),
+            node: 1,
+            chunk_rows: 16,
+            first_tick: 3,
+            max_ticks: 50,
+        };
+        let a = p.produce(5);
+        let b = p.produce(5);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.real, b.real);
+        assert_eq!(a.x_f32, b.x_f32);
+    }
+}

@@ -1,0 +1,228 @@
+//! Seeded consistent-hash ring with virtual nodes: the cluster's shard map.
+//!
+//! Every worker node owns `vnodes` pseudo-random points on a `u64` ring;
+//! an instance id belongs to the node owning the first point at or after
+//! the id's hash (wrapping). Virtual nodes smooth the load (max/mean shard
+//! load stays near 1 at 128 vnodes — property-tested), and consistent
+//! hashing makes churn cheap: adding or removing one node only remaps the
+//! keys whose successor point changed, ~K/N of them, never reshuffling
+//! keys between surviving nodes (`tests/cluster_properties.rs`).
+//!
+//! The ring is a pure function of `(seed, vnodes, membership)`, so every
+//! node — and the deterministic churn schedule in [`RingSchedule`] —
+//! derives identical ownership without coordination.
+
+use crate::util::rng::avalanche;
+
+/// Worker-node identifier (dense indices assigned by the coordinator).
+pub type NodeId = usize;
+
+/// A consistent-hash ring over the current membership.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    seed: u64,
+    vnodes: usize,
+    /// sorted (point, owner) pairs — the ring
+    points: Vec<(u64, NodeId)>,
+    /// sorted membership
+    nodes: Vec<NodeId>,
+}
+
+impl HashRing {
+    /// An empty ring; add nodes with [`HashRing::add_node`].
+    pub fn new(seed: u64, vnodes: usize) -> HashRing {
+        HashRing {
+            seed,
+            vnodes: vnodes.max(1),
+            points: Vec::new(),
+            nodes: Vec::new(),
+        }
+    }
+
+    /// A ring pre-populated with `nodes`.
+    pub fn with_nodes(
+        seed: u64,
+        vnodes: usize,
+        nodes: impl IntoIterator<Item = NodeId>,
+    ) -> HashRing {
+        let mut r = HashRing::new(seed, vnodes);
+        for n in nodes {
+            r.add_node(n);
+        }
+        r
+    }
+
+    /// The ring point of `(node, vnode)` — pure in the seed.
+    fn point(&self, node: NodeId, v: usize) -> u64 {
+        avalanche(
+            self.seed
+                ^ (node as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ (v as u64).wrapping_mul(0xc2b2_ae3d_27d4_eb4f),
+        )
+    }
+
+    pub fn add_node(&mut self, node: NodeId) {
+        if self.contains(node) {
+            return;
+        }
+        self.nodes.push(node);
+        self.nodes.sort_unstable();
+        for v in 0..self.vnodes {
+            let p = self.point(node, v);
+            self.points.push((p, node));
+        }
+        // sort by point; owner id breaks the (astronomically rare) point tie
+        self.points.sort_unstable();
+    }
+
+    pub fn remove_node(&mut self, node: NodeId) {
+        self.nodes.retain(|&n| n != node);
+        self.points.retain(|&(_, n)| n != node);
+    }
+
+    pub fn contains(&self, node: NodeId) -> bool {
+        self.nodes.binary_search(&node).is_ok()
+    }
+
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// The node owning instance id `key`. Panics on an empty ring.
+    pub fn owner(&self, key: u64) -> NodeId {
+        assert!(!self.points.is_empty(), "owner() on an empty ring");
+        let h = avalanche(key ^ self.seed.rotate_left(32));
+        // first point at or after h, wrapping to the start
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        let i = if i == self.points.len() { 0 } else { i };
+        self.points[i].1
+    }
+
+    /// Fraction of `sample` sequential keys whose owner differs between
+    /// two rings (the churn-remap measurement).
+    pub fn remap_fraction(a: &HashRing, b: &HashRing, sample: u64) -> f64 {
+        let sample = sample.max(1);
+        let moved = (0..sample).filter(|&k| a.owner(k) != b.owner(k)).count();
+        moved as f64 / sample as f64
+    }
+}
+
+/// The deterministic ownership timeline: a sorted list of `(start_tick,
+/// ring)` epochs derived from the churn schedule up front, so partition
+/// producers on every loader worker resolve ownership purely from the
+/// tick.
+#[derive(Clone, Debug)]
+pub struct RingSchedule {
+    epochs: Vec<(u64, HashRing)>,
+}
+
+impl RingSchedule {
+    /// Schedule starting with `initial` at tick 0.
+    pub fn new(initial: HashRing) -> RingSchedule {
+        RingSchedule { epochs: vec![(0, initial)] }
+    }
+
+    /// Register the ring in force from `tick` on (ticks must be pushed in
+    /// increasing order; equal ticks overwrite).
+    pub fn push(&mut self, tick: u64, ring: HashRing) {
+        if let Some(last) = self.epochs.last_mut() {
+            assert!(tick >= last.0, "RingSchedule epochs must be pushed in order");
+            if last.0 == tick {
+                last.1 = ring;
+                return;
+            }
+        }
+        self.epochs.push((tick, ring));
+    }
+
+    /// The ring in force at `tick`.
+    pub fn at(&self, tick: u64) -> &HashRing {
+        let i = self.epochs.partition_point(|&(start, _)| start <= tick);
+        &self.epochs[i - 1].1
+    }
+
+    /// All epochs, in order (diagnostics / remap accounting).
+    pub fn epochs(&self) -> &[(u64, HashRing)] {
+        &self.epochs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ownership_is_total_and_deterministic() {
+        let a = HashRing::with_nodes(7, 64, 0..4);
+        let b = HashRing::with_nodes(7, 64, 0..4);
+        for key in 0..1000u64 {
+            let o = a.owner(key);
+            assert!(o < 4);
+            assert_eq!(o, b.owner(key));
+        }
+        assert_eq!(a.nodes(), &[0, 1, 2, 3]);
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn different_seeds_shard_differently() {
+        let a = HashRing::with_nodes(1, 64, 0..4);
+        let b = HashRing::with_nodes(2, 64, 0..4);
+        let moved = HashRing::remap_fraction(&a, &b, 2048);
+        assert!(moved > 0.5, "seed change barely moved keys: {moved}");
+    }
+
+    #[test]
+    fn add_remove_round_trips() {
+        let mut r = HashRing::with_nodes(3, 32, 0..3);
+        let before: Vec<NodeId> = (0..500).map(|k| r.owner(k)).collect();
+        r.add_node(7);
+        assert!(r.contains(7));
+        r.add_node(7); // idempotent
+        assert_eq!(r.len(), 4);
+        r.remove_node(7);
+        assert!(!r.contains(7));
+        let after: Vec<NodeId> = (0..500).map(|k| r.owner(k)).collect();
+        assert_eq!(before, after, "remove must undo add exactly");
+    }
+
+    #[test]
+    fn single_node_owns_everything() {
+        let r = HashRing::with_nodes(9, 128, [5]);
+        for k in 0..100u64 {
+            assert_eq!(r.owner(k), 5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty ring")]
+    fn empty_ring_panics_on_owner() {
+        HashRing::new(0, 8).owner(1);
+    }
+
+    #[test]
+    fn schedule_resolves_epochs() {
+        let r0 = HashRing::with_nodes(1, 16, 0..2);
+        let mut r1 = r0.clone();
+        r1.add_node(2);
+        let mut r2 = r1.clone();
+        r2.remove_node(0);
+        let mut s = RingSchedule::new(r0);
+        s.push(10, r1);
+        s.push(20, r2);
+        assert_eq!(s.at(0).len(), 2);
+        assert_eq!(s.at(9).len(), 2);
+        assert_eq!(s.at(10).len(), 3);
+        assert_eq!(s.at(19).len(), 3);
+        assert!(!s.at(25).contains(0));
+        assert_eq!(s.epochs().len(), 3);
+    }
+}

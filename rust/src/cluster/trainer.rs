@@ -1,0 +1,626 @@
+//! The cluster coordinator: N in-process worker nodes sharding one stream.
+//!
+//! Topology and life cycle:
+//!
+//!   * a seeded consistent-hash [`HashRing`] (vnodes per node) assigns
+//!     every instance id to exactly one owner; the deterministic churn
+//!     schedule (optional kill + join) is compiled into a [`RingSchedule`]
+//!     up front, so each node's [`PartitionProducer`] resolves ownership
+//!     purely from the tick;
+//!   * between *sync barriers* (gossip/merge cadences, churn events, run
+//!     end) nodes train their shards concurrently on scoped threads —
+//!     they share nothing but the barrier protocol, so the run is
+//!     deterministic regardless of scheduling;
+//!   * at a gossip barrier every node broadcasts its [`InstanceStore`]
+//!     snapshot over the [`Transport`] and merges peers' snapshots
+//!     freshest-tick-wins — every node converges on cluster-wide
+//!     loss/gnorm statistics;
+//!   * at a merge barrier every node broadcasts `Backend::export_state`
+//!     tensors plus its AdaSelection snapshot, each weighted by training
+//!     volume since the last merge, and replaces its own state with the
+//!     weighted average (`runtime::average_states`,
+//!     `selection::merge_snapshots`) — federated-averaging style;
+//!   * a killed node stops mid-run (its un-gossiped store tail is lost,
+//!     exactly like a real crash); a joining node boots from the merged
+//!     cluster state and is seeded by an immediate gossip round, and the
+//!     ring remaps only the bounded key fraction consistent hashing
+//!     guarantees (`ClusterResult::remaps` measures it).
+//!
+//! Prequential quality is cluster-wide: per tick, the coordinator sums
+//! each shard's (loss, correct, arrivals) and feeds the combined mean to
+//! one rolling window — directly comparable to a single-node
+//! `StreamTrainer` run over the same traffic.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::cluster::node::ClusterNode;
+use crate::cluster::ring::{HashRing, NodeId, RingSchedule};
+use crate::cluster::transport::{Loopback, Message, Transport};
+use crate::config::ClusterConfig;
+use crate::metrics::rolling::{RollingPoint, RollingWindow};
+use crate::runtime::{average_states, Backend, NativeBackend, TaskKind, Tensor};
+use crate::selection::adaselection::merge_snapshots;
+use crate::selection::bandit::UpdateRule;
+use crate::selection::policy::build_policy;
+use crate::selection::AdaSnapshot;
+use crate::stream::source::{build_source, StreamKnobs};
+use crate::stream::store::InstanceStore;
+use crate::stream::tick::{fnv_fold, DriftGamma, TickEngine, FNV_OFFSET};
+use crate::util::timer::{PhaseTimer, Stopwatch};
+
+/// Keys sampled when measuring churn remap fractions.
+const REMAP_SAMPLE: u64 = 4096;
+
+/// Per-node accounting in the run report.
+#[derive(Clone, Debug)]
+pub struct NodeSummary {
+    pub id: NodeId,
+    pub ticks_processed: u64,
+    pub samples_seen: u64,
+    pub samples_trained: u64,
+    pub samples_replayed: u64,
+    pub store_len: usize,
+    pub alive_at_end: bool,
+}
+
+/// Result of one cluster run.
+pub struct ClusterResult {
+    pub nodes_started: usize,
+    pub ticks: u64,
+    /// arrivals across all shards (every chunk row is owned exactly once)
+    pub samples_seen: u64,
+    pub samples_trained: u64,
+    pub samples_replayed: u64,
+    pub drift_detections: u64,
+    pub final_rolling_loss: f32,
+    pub final_rolling_acc: f32,
+    /// cluster-wide rolling prequential trace (one point per eval tick)
+    pub rolling: Vec<RollingPoint>,
+    /// node digests folded in id order — two identical runs match exactly
+    pub digest: u64,
+    /// aggregate arrivals per wall-clock second
+    pub samples_per_sec: f64,
+    pub gossip_rounds: u64,
+    pub merges: u64,
+    /// live store records summed over surviving nodes
+    pub store_live_total: usize,
+    /// per churn event: (tick, fraction of sampled keys that changed owner)
+    pub remaps: Vec<(u64, f64)>,
+    pub node_summaries: Vec<NodeSummary>,
+    /// phase totals summed across nodes
+    pub phases: PhaseTimer,
+}
+
+/// Barrier ticks: gossip/merge cadences, churn events, and the run end.
+fn sync_points(cfg: &ClusterConfig) -> Vec<u64> {
+    let max = cfg.stream.max_ticks as u64;
+    let mut pts: Vec<u64> = Vec::new();
+    for every in [cfg.gossip_every as u64, cfg.merge_every as u64] {
+        if every > 0 {
+            let mut t = every;
+            while t < max {
+                pts.push(t);
+                t += every;
+            }
+        }
+    }
+    if cfg.kill_at > 0 {
+        pts.push(cfg.kill_at as u64);
+    }
+    if cfg.join_at > 0 {
+        pts.push(cfg.join_at as u64);
+    }
+    pts.push(max);
+    pts.sort_unstable();
+    pts.dedup();
+    pts.retain(|&t| t > 0);
+    pts
+}
+
+/// Compile the churn schedule into ring epochs, measuring the remapped key
+/// fraction at every membership change.
+fn build_ring_schedule(cfg: &ClusterConfig) -> (Arc<RingSchedule>, Vec<(u64, f64)>) {
+    let mut ring = HashRing::with_nodes(cfg.stream.seed, cfg.vnodes, 0..cfg.nodes);
+    let mut sched = RingSchedule::new(ring.clone());
+    // group events by tick so a same-tick kill+join becomes one epoch
+    let mut events: BTreeMap<u64, Vec<MembershipEvent>> = BTreeMap::new();
+    if cfg.kill_at > 0 {
+        events
+            .entry(cfg.kill_at as u64)
+            .or_default()
+            .push(MembershipEvent::Kill(cfg.kill_node));
+    }
+    if cfg.join_at > 0 {
+        events
+            .entry(cfg.join_at as u64)
+            .or_default()
+            .push(MembershipEvent::Join(cfg.nodes));
+    }
+    let mut remaps = Vec::new();
+    for (tick, evs) in events {
+        let before = ring.clone();
+        for ev in evs {
+            match ev {
+                MembershipEvent::Kill(n) => ring.remove_node(n),
+                MembershipEvent::Join(n) => ring.add_node(n),
+            }
+        }
+        remaps.push((tick, HashRing::remap_fraction(&before, &ring, REMAP_SAMPLE)));
+        sched.push(tick, ring.clone());
+    }
+    (Arc::new(sched), remaps)
+}
+
+#[derive(Clone, Copy, Debug)]
+enum MembershipEvent {
+    Kill(NodeId),
+    Join(NodeId),
+}
+
+/// Build one node's tick engine from the stream config.
+fn make_engine(
+    cfg: &ClusterConfig,
+    node: NodeId,
+    chunk_rows: usize,
+    replay_budget: usize,
+) -> anyhow::Result<TickEngine> {
+    let s = &cfg.stream;
+    // fold the node id into the policy seed so stochastic baselines
+    // (uniform/adaboost) draw independent streams per shard
+    let mut policy = build_policy(
+        &s.selector,
+        s.seed.wrapping_add(node as u64),
+        s.beta,
+        s.cl_on,
+        s.cl_power,
+    )?;
+    if s.rule != "eq3" {
+        let rule = UpdateRule::parse(&s.rule)?;
+        if let Some(ada) = policy.as_ada() {
+            ada.state_mut().set_rule(rule);
+        }
+    }
+    let store = InstanceStore::new(s.store_capacity, s.store_shards);
+    let mut engine = TickEngine::new(policy, store, s.gamma, s.lr, chunk_rows);
+    if s.drift_detect && !engine.policy.is_benchmark() {
+        engine.drift = Some(DriftGamma::default());
+    }
+    if s.replay {
+        engine.replay_budget = Some(replay_budget);
+    }
+    Ok(engine)
+}
+
+/// Run every alive node up to `end` on its own thread, then surface any
+/// captured worker error.
+fn run_segment(nodes: &mut [ClusterNode<NativeBackend>], end: u64) -> anyhow::Result<()> {
+    std::thread::scope(|scope| {
+        for node in nodes.iter_mut().filter(|n| n.alive) {
+            scope.spawn(move || node.run_until(end));
+        }
+    });
+    for n in nodes.iter() {
+        if let Some(e) = &n.failed {
+            anyhow::bail!("cluster worker failed: {e}");
+        }
+    }
+    Ok(())
+}
+
+/// One gossip round: every alive node broadcasts its store snapshot (in
+/// node-id order) and merges what it received, freshest-tick-wins.
+fn gossip_stores(
+    nodes: &mut [ClusterNode<NativeBackend>],
+    transport: &Loopback,
+) -> anyhow::Result<()> {
+    let ids: Vec<NodeId> = nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
+    if ids.len() < 2 {
+        return Ok(());
+    }
+    for n in nodes.iter().filter(|n| n.alive) {
+        let msg = n.gossip_message();
+        for &to in &ids {
+            if to != n.id {
+                transport.send(to, msg.clone())?;
+            }
+        }
+    }
+    for n in nodes.iter_mut().filter(|n| n.alive) {
+        for m in transport.drain(n.id) {
+            if let Message::StoreGossip { entries, .. } = m {
+                n.merge_store(entries.as_slice());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Merge material accumulated from `Message::State`s — the single owner
+/// of the weighted-average semantics shared by barrier merges and join
+/// bootstrapping.
+#[derive(Default)]
+struct MergeMaterial {
+    states: Vec<Vec<Tensor>>,
+    snaps: Vec<AdaSnapshot>,
+    weights: Vec<f64>,
+    missing_snaps: bool,
+}
+
+impl MergeMaterial {
+    fn push(&mut self, m: Message) {
+        if let Message::State { weight, tensors, policy, .. } = m {
+            self.weights.push(weight);
+            self.states.push(tensors);
+            match policy {
+                Some(s) => self.snaps.push(s),
+                None => self.missing_snaps = true,
+            }
+        }
+    }
+
+    /// Weighted-average model tensors + merged policy snapshot (None when
+    /// any contributor has no snapshot — stateless policies stay local).
+    fn merged(&self) -> anyhow::Result<(Vec<Tensor>, Option<AdaSnapshot>)> {
+        anyhow::ensure!(!self.states.is_empty(), "merge with no contributing nodes");
+        let avg = average_states(&self.states, &self.weights)?;
+        let snap = if !self.missing_snaps && !self.snaps.is_empty() {
+            Some(merge_snapshots(&self.snaps, &self.weights)?)
+        } else {
+            None
+        };
+        Ok((avg, snap))
+    }
+}
+
+/// One merge round: every alive node broadcasts (state tensors, policy
+/// snapshot, volume weight); each replaces its state with the weighted
+/// average over the identical, id-ordered message set — so all nodes
+/// leave the barrier bit-identical. Every node averaging for itself is
+/// deliberate (decentralized semantics a socket transport keeps); at
+/// in-process scale the redundant arithmetic is noise.
+fn merge_models(
+    nodes: &mut [ClusterNode<NativeBackend>],
+    transport: &Loopback,
+) -> anyhow::Result<()> {
+    let ids: Vec<NodeId> = nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
+    if ids.len() < 2 {
+        return Ok(());
+    }
+    // export once per node, broadcast to peers, keep the original for self
+    let mut own: BTreeMap<NodeId, Message> = BTreeMap::new();
+    for n in nodes.iter().filter(|n| n.alive) {
+        own.insert(n.id, n.state_message()?);
+    }
+    for (&from, msg) in &own {
+        for &to in &ids {
+            if to != from {
+                transport.send(to, msg.clone())?;
+            }
+        }
+    }
+    for n in nodes.iter_mut().filter(|n| n.alive) {
+        let mut msgs = transport.drain(n.id);
+        msgs.push(own.remove(&n.id).expect("alive node exported its state"));
+        msgs.sort_by_key(|m| m.from_node());
+        let mut mat = MergeMaterial::default();
+        for m in msgs {
+            mat.push(m);
+        }
+        let (avg, snap) = mat.merged()?;
+        n.apply_merged(&avg, snap.as_ref())?;
+    }
+    Ok(())
+}
+
+/// The merged cluster state a joining node boots from.
+fn merged_boot_state(
+    nodes: &[ClusterNode<NativeBackend>],
+) -> anyhow::Result<(Vec<Tensor>, Option<AdaSnapshot>)> {
+    let mut mat = MergeMaterial::default();
+    for n in nodes.iter().filter(|n| n.alive) {
+        mat.push(n.state_message()?);
+    }
+    mat.merged()
+        .map_err(|e| anyhow::anyhow!("join bootstrap: {e}"))
+}
+
+/// Fold the barrier's drained prequential records into the cluster-wide
+/// rolling windows (ticks are complete once every alive node passed them).
+fn fold_preq(
+    nodes: &mut [ClusterNode<NativeBackend>],
+    classification: bool,
+    roll_loss: &mut RollingWindow,
+    roll_acc: &mut RollingWindow,
+    rolling: &mut Vec<RollingPoint>,
+) {
+    let mut per_tick: BTreeMap<u64, (f64, f64, u64)> = BTreeMap::new();
+    for n in nodes.iter_mut() {
+        for p in n.take_preq() {
+            let e = per_tick.entry(p.tick).or_insert((0.0, 0.0, 0));
+            e.0 += p.loss_sum as f64;
+            e.1 += p.correct as f64;
+            e.2 += p.arrivals as u64;
+        }
+    }
+    for (tick, (loss_sum, correct, arrivals)) in per_tick {
+        if arrivals == 0 {
+            continue;
+        }
+        roll_loss.push(loss_sum / arrivals as f64);
+        if classification {
+            roll_acc.push(correct / arrivals as f64);
+        }
+        rolling.push(RollingPoint {
+            tick,
+            loss: roll_loss.mean() as f32,
+            acc: roll_acc.mean() as f32,
+        });
+    }
+}
+
+/// Run a full cluster job on the native backend.
+pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
+    cfg.validate()?;
+    let s = &cfg.stream;
+    anyhow::ensure!(
+        s.backend == "native",
+        "cluster runs are native-only (got backend '{}')",
+        s.backend
+    );
+    let source = build_source(
+        &s.dataset,
+        StreamKnobs {
+            seed: s.seed,
+            drift_period: s.drift_period,
+            burst_period: s.burst_period,
+            burst_min: s.burst_min,
+        },
+    )?;
+    let probe = NativeBackend::new();
+    let meta = probe.family_meta(source.family())?;
+    let b = meta.batch;
+    let max_ticks = s.max_ticks as u64;
+    let classification = meta.task != TaskKind::Regression;
+
+    let (rings, remaps) = build_ring_schedule(cfg);
+    let transport = Loopback::new();
+    // per-node replay budget: the node's fair share of ⌈γB⌉
+    let replay_budget =
+        (((s.gamma * b as f64) / cfg.nodes as f64).ceil() as usize).clamp(1, b);
+
+    let mut nodes: Vec<ClusterNode<NativeBackend>> = Vec::new();
+    for id in 0..cfg.nodes {
+        let mut backend = NativeBackend::new();
+        // every node boots the same seed → identical initial weights
+        let state = backend.init_state(&meta.name, s.seed as i32)?;
+        let engine = make_engine(cfg, id, b, replay_budget)?;
+        transport.register(id);
+        nodes.push(ClusterNode::new(
+            id,
+            backend,
+            state,
+            engine,
+            meta.name.clone(),
+            source.clone(),
+            rings.clone(),
+            b,
+            0,
+            s.max_ticks,
+            s.eval_every,
+            s.workers,
+            s.capacity,
+        ));
+    }
+
+    log::info!(
+        "cluster start: nodes={} vnodes={} stream={} γ={} B={} ticks={} gossip={} merge={} kill@{} join@{}",
+        cfg.nodes,
+        cfg.vnodes,
+        s.dataset,
+        s.gamma,
+        b,
+        s.max_ticks,
+        cfg.gossip_every,
+        cfg.merge_every,
+        cfg.kill_at,
+        cfg.join_at
+    );
+
+    let mut roll_loss = RollingWindow::new(s.window);
+    let mut roll_acc = RollingWindow::new(s.window);
+    let mut rolling: Vec<RollingPoint> = Vec::new();
+    let mut gossip_rounds = 0u64;
+    let mut merges = 0u64;
+    let clock = Stopwatch::new();
+
+    for &sync in &sync_points(cfg) {
+        run_segment(&mut nodes, sync)?;
+        fold_preq(&mut nodes, classification, &mut roll_loss, &mut roll_acc, &mut rolling);
+
+        // churn first: a killed node must not gossip, a joined node must
+        if cfg.kill_at > 0 && cfg.kill_at as u64 == sync {
+            let victim = cfg.kill_node;
+            transport.unregister(victim);
+            if let Some(n) = nodes.iter_mut().find(|n| n.id == victim) {
+                n.kill();
+            }
+            log::info!("cluster: killed node {victim} at tick {sync}");
+        }
+        let mut did_gossip = false;
+        if cfg.join_at > 0 && cfg.join_at as u64 == sync {
+            let id = cfg.nodes; // fresh id after the initial 0..nodes
+            let (tensors, snap) = merged_boot_state(&nodes)?;
+            let mut backend = NativeBackend::new();
+            let state = backend.import_state(&meta.name, &tensors)?;
+            let mut engine = make_engine(cfg, id, b, replay_budget)?;
+            if let (Some(snap), Some(ada)) = (snap, engine.policy.as_ada()) {
+                ada.state_mut().restore(snap)?;
+            }
+            transport.register(id);
+            nodes.push(ClusterNode::new(
+                id,
+                backend,
+                state,
+                engine,
+                meta.name.clone(),
+                source.clone(),
+                rings.clone(),
+                b,
+                sync,
+                s.max_ticks,
+                s.eval_every,
+                s.workers,
+                s.capacity,
+            ));
+            // seed the newcomer's store right away
+            gossip_stores(&mut nodes, &transport)?;
+            gossip_rounds += 1;
+            did_gossip = true;
+            log::info!("cluster: node {id} joined at tick {sync}");
+        }
+
+        if sync < max_ticks {
+            if !did_gossip
+                && cfg.gossip_every > 0
+                && sync % cfg.gossip_every as u64 == 0
+            {
+                gossip_stores(&mut nodes, &transport)?;
+                gossip_rounds += 1;
+            }
+            if cfg.merge_every > 0 && sync % cfg.merge_every as u64 == 0 {
+                merge_models(&mut nodes, &transport)?;
+                merges += 1;
+            }
+        }
+    }
+
+    let elapsed = clock.elapsed_secs();
+    let mut digest = FNV_OFFSET;
+    let mut phases = PhaseTimer::default();
+    let mut summaries = Vec::new();
+    let mut samples_seen = 0u64;
+    let mut samples_trained = 0u64;
+    let mut samples_replayed = 0u64;
+    let mut drift_detections = 0u64;
+    let mut store_live_total = 0usize;
+    for n in &nodes {
+        digest = fnv_fold(digest, n.digest);
+        phases.merge(&n.phases);
+        samples_seen += n.engine.samples_seen;
+        samples_trained += n.engine.samples_trained;
+        samples_replayed += n.engine.samples_replayed;
+        drift_detections += n.engine.drift_detections();
+        if n.alive {
+            store_live_total += n.engine.store.len();
+        }
+        summaries.push(NodeSummary {
+            id: n.id,
+            ticks_processed: n.tick_digests.len() as u64,
+            samples_seen: n.engine.samples_seen,
+            samples_trained: n.engine.samples_trained,
+            samples_replayed: n.engine.samples_replayed,
+            store_len: n.engine.store.len(),
+            alive_at_end: n.alive,
+        });
+    }
+
+    Ok(ClusterResult {
+        nodes_started: cfg.nodes,
+        ticks: max_ticks,
+        samples_seen,
+        samples_trained,
+        samples_replayed,
+        drift_detections,
+        final_rolling_loss: roll_loss.mean() as f32,
+        final_rolling_acc: if classification {
+            roll_acc.mean() as f32
+        } else {
+            f32::NAN
+        },
+        rolling,
+        digest,
+        samples_per_sec: samples_seen as f64 / elapsed.max(1e-9),
+        gossip_rounds,
+        merges,
+        store_live_total,
+        remaps,
+        node_summaries: summaries,
+        phases,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(nodes: usize, ticks: usize) -> ClusterConfig {
+        let mut cfg = ClusterConfig::default();
+        cfg.nodes = nodes;
+        cfg.stream.max_ticks = ticks;
+        cfg.stream.window = 10;
+        cfg.stream.workers = 0; // synchronous loaders keep unit tests lean
+        cfg.gossip_every = 8;
+        cfg.merge_every = 8;
+        cfg
+    }
+
+    #[test]
+    fn sync_points_cover_cadences_and_events() {
+        let mut cfg = quick_cfg(4, 40);
+        cfg.kill_at = 10;
+        cfg.kill_node = 1;
+        cfg.join_at = 20;
+        let pts = sync_points(&cfg);
+        assert_eq!(pts, vec![8, 10, 16, 20, 24, 32, 40]);
+        // no cadences at all: only the end barrier
+        cfg.gossip_every = 0;
+        cfg.merge_every = 0;
+        cfg.kill_at = 0;
+        cfg.join_at = 0;
+        assert_eq!(sync_points(&cfg), vec![40]);
+    }
+
+    #[test]
+    fn ring_schedule_tracks_churn() {
+        let mut cfg = quick_cfg(4, 100);
+        cfg.kill_at = 30;
+        cfg.kill_node = 2;
+        cfg.join_at = 60;
+        let (sched, remaps) = build_ring_schedule(&cfg);
+        assert_eq!(sched.at(0).len(), 4);
+        assert_eq!(sched.at(30).len(), 3);
+        assert!(!sched.at(30).contains(2));
+        assert_eq!(sched.at(60).len(), 4);
+        assert!(sched.at(60).contains(4));
+        assert_eq!(remaps.len(), 2);
+        for &(_, f) in &remaps {
+            // one node of four: roughly a quarter of keys move, never most
+            assert!(f > 0.05 && f < 0.6, "remap fraction {f}");
+        }
+    }
+
+    #[test]
+    fn two_node_smoke_runs_and_accounts() {
+        let cfg = quick_cfg(2, 24);
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.ticks, 24);
+        assert_eq!(r.node_summaries.len(), 2);
+        assert!(r.final_rolling_loss.is_finite());
+        // every arrival is owned exactly once: totals match a replayed
+        // generator pass
+        let source = build_source(
+            "drift-class",
+            StreamKnobs {
+                seed: cfg.stream.seed,
+                drift_period: cfg.stream.drift_period,
+                burst_period: cfg.stream.burst_period,
+                burst_min: cfg.stream.burst_min,
+            },
+        )
+        .unwrap();
+        let expect: u64 = (0..24u64).map(|t| source.gen_chunk(t, 128).ids.len() as u64).sum();
+        assert_eq!(r.samples_seen, expect);
+        assert!(r.merges >= 1 && r.gossip_rounds >= 1);
+    }
+}

@@ -1,0 +1,147 @@
+//! Node-to-node messaging: the [`Transport`] trait and its deterministic
+//! in-process implementation.
+//!
+//! The cluster's sync protocol only needs two message kinds — instance-
+//! store gossip and model/policy merge material — delivered reliably
+//! between sync barriers. [`Loopback`] is the reference transport: a
+//! per-node mailbox behind one mutex, draining in insertion order, so a
+//! coordinator that sends in node-id order makes the whole exchange
+//! deterministic. A socket transport can implement the same trait later
+//! (ROADMAP follow-on) without touching the node or coordinator logic.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::ring::NodeId;
+use crate::runtime::Tensor;
+use crate::selection::AdaSnapshot;
+use crate::stream::InstanceRecord;
+
+/// What nodes exchange at sync points.
+#[derive(Clone, Debug)]
+pub enum Message {
+    /// Instance-store gossip: a snapshot to merge freshest-tick-wins.
+    /// The entries ride behind an `Arc` so broadcasting one snapshot to
+    /// N-1 peers shares a single allocation (stores are the largest
+    /// payload on the wire).
+    StoreGossip {
+        from: NodeId,
+        entries: Arc<Vec<(u64, InstanceRecord)>>,
+    },
+    /// Model/policy merge material: exported state tensors plus the
+    /// AdaSelection snapshot (None for stateless policies), weighted by
+    /// the sender's training volume since the last merge.
+    State {
+        from: NodeId,
+        weight: f64,
+        tensors: Vec<Tensor>,
+        policy: Option<AdaSnapshot>,
+    },
+}
+
+impl Message {
+    pub fn from_node(&self) -> NodeId {
+        match self {
+            Message::StoreGossip { from, .. } | Message::State { from, .. } => *from,
+        }
+    }
+}
+
+/// Reliable, ordered delivery between cluster sync barriers.
+pub trait Transport: Send + Sync {
+    /// Open a mailbox for `node` (idempotent).
+    fn register(&self, node: NodeId);
+
+    /// Close a node's mailbox, dropping anything queued (node kill).
+    fn unregister(&self, node: NodeId);
+
+    /// Queue `msg` for `node`. Errors when the destination is unknown.
+    fn send(&self, to: NodeId, msg: Message) -> anyhow::Result<()>;
+
+    /// Drain `node`'s mailbox in arrival order (empty when unknown).
+    fn drain(&self, node: NodeId) -> Vec<Message>;
+}
+
+/// The deterministic in-process transport (mailboxes behind one mutex).
+#[derive(Default)]
+pub struct Loopback {
+    boxes: Mutex<BTreeMap<NodeId, Vec<Message>>>,
+}
+
+impl Loopback {
+    pub fn new() -> Loopback {
+        Loopback::default()
+    }
+}
+
+impl Transport for Loopback {
+    fn register(&self, node: NodeId) {
+        self.boxes.lock().unwrap().entry(node).or_default();
+    }
+
+    fn unregister(&self, node: NodeId) {
+        self.boxes.lock().unwrap().remove(&node);
+    }
+
+    fn send(&self, to: NodeId, msg: Message) -> anyhow::Result<()> {
+        let mut boxes = self.boxes.lock().unwrap();
+        match boxes.get_mut(&to) {
+            Some(q) => {
+                q.push(msg);
+                Ok(())
+            }
+            None => anyhow::bail!("transport: unknown destination node {to}"),
+        }
+    }
+
+    fn drain(&self, node: NodeId) -> Vec<Message> {
+        let mut boxes = self.boxes.lock().unwrap();
+        match boxes.get_mut(&node) {
+            Some(q) => std::mem::take(q),
+            None => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gossip(from: NodeId) -> Message {
+        Message::StoreGossip { from, entries: Arc::new(Vec::new()) }
+    }
+
+    #[test]
+    fn delivers_in_order() {
+        let t = Loopback::new();
+        t.register(1);
+        t.send(1, gossip(3)).unwrap();
+        t.send(1, gossip(2)).unwrap();
+        let got = t.drain(1);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].from_node(), 3);
+        assert_eq!(got[1].from_node(), 2);
+        assert!(t.drain(1).is_empty(), "drain must empty the box");
+    }
+
+    #[test]
+    fn unknown_destination_errors() {
+        let t = Loopback::new();
+        assert!(t.send(9, gossip(0)).is_err());
+        assert!(t.drain(9).is_empty());
+        t.register(9);
+        t.send(9, gossip(0)).unwrap();
+        t.unregister(9);
+        assert!(t.send(9, gossip(0)).is_err());
+        assert!(t.drain(9).is_empty(), "unregister drops queued mail");
+    }
+
+    #[test]
+    fn register_is_idempotent() {
+        let t = Loopback::new();
+        t.register(4);
+        t.send(4, gossip(1)).unwrap();
+        t.register(4); // must not clear the queue
+        assert_eq!(t.drain(4).len(), 1);
+    }
+}

@@ -241,6 +241,12 @@ pub struct StreamConfig {
     pub eval_every: usize,
     /// weight-update rule: eq3[:beta] | exp3[:eta] | softmax[:tau]
     pub rule: String,
+    /// Page–Hinkley drift detection on the per-tick mean loss, boosting γ
+    /// and the method-weight learning rate while drift is fresh
+    pub drift_detect: bool,
+    /// top up lull ticks with high-loss instance-store rows so the
+    /// training budget ⌈γB⌉ stays filled during arrival dips
+    pub replay: bool,
     /// checkpoint file (written every `checkpoint_every` ticks + at the
     /// end; also the file `resume` reads)
     pub checkpoint: Option<PathBuf>,
@@ -273,6 +279,8 @@ impl Default for StreamConfig {
             window: 50,
             eval_every: 1,
             rule: "eq3".into(),
+            drift_detect: false,
+            replay: false,
             checkpoint: None,
             checkpoint_every: 0,
             resume: false,
@@ -348,6 +356,8 @@ impl StreamConfig {
             "window" => self.window = value.parse()?,
             "eval-every" => self.eval_every = value.parse()?,
             "rule" => self.rule = value.into(),
+            "drift-detect" => self.drift_detect = parse_bool(value)?,
+            "replay" => self.replay = parse_bool(value)?,
             "checkpoint" => self.checkpoint = Some(PathBuf::from(value)),
             "checkpoint-every" => self.checkpoint_every = value.parse()?,
             "resume" => self.resume = parse_bool(value)?,
@@ -404,6 +414,10 @@ impl StreamConfig {
         m.insert("burst-period".into(), Json::Num(self.burst_period as f64));
         m.insert("burst-min".into(), Json::Num(self.burst_min));
         m.insert("rule".into(), Json::Str(self.rule.clone()));
+        // both alter the selection/training sequence, so they are part of
+        // the run identity a resume must match
+        m.insert("drift-detect".into(), Json::Bool(self.drift_detect));
+        m.insert("replay".into(), Json::Bool(self.replay));
         Json::Obj(m)
     }
 
@@ -430,6 +444,8 @@ impl StreamConfig {
         m.insert("window".into(), Json::Num(self.window as f64));
         m.insert("eval-every".into(), Json::Num(self.eval_every as f64));
         m.insert("rule".into(), Json::Str(self.rule.clone()));
+        m.insert("drift-detect".into(), Json::Bool(self.drift_detect));
+        m.insert("replay".into(), Json::Bool(self.replay));
         if let Some(p) = &self.checkpoint {
             m.insert("checkpoint".into(), Json::Str(p.display().to_string()));
         }
@@ -438,6 +454,153 @@ impl StreamConfig {
             Json::Num(self.checkpoint_every as f64),
         );
         m.insert("resume".into(), Json::Bool(self.resume));
+        Json::Obj(m)
+    }
+}
+
+/// Configuration of a multi-node cluster run (the `cluster` subcommand):
+/// N in-process worker nodes sharding one stream through a consistent-hash
+/// ring, with periodic store gossip and model/policy merge, plus an
+/// optional deterministic kill/join churn schedule. All stream-level knobs
+/// ride in `stream`; unknown `--key` overrides fall through to it.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub stream: StreamConfig,
+    /// worker nodes at start
+    pub nodes: usize,
+    /// virtual nodes per worker on the hash ring
+    pub vnodes: usize,
+    /// ticks between store-gossip rounds (0 = never)
+    pub gossip_every: usize,
+    /// ticks between model/policy merges (0 = never)
+    pub merge_every: usize,
+    /// tick at which `kill_node` is removed (0 = no kill)
+    pub kill_at: usize,
+    pub kill_node: usize,
+    /// tick at which a fresh node joins the ring (0 = no join)
+    pub join_at: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            stream: StreamConfig::default(),
+            nodes: 4,
+            vnodes: 128,
+            gossip_every: 16,
+            merge_every: 16,
+            kill_at: 0,
+            kill_node: 0,
+            join_at: 0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.stream.validate()?;
+        anyhow::ensure!(self.nodes >= 1, "cluster needs at least 1 node");
+        anyhow::ensure!(
+            (1..=1024).contains(&self.vnodes),
+            "vnodes {} outside 1..=1024",
+            self.vnodes
+        );
+        anyhow::ensure!(
+            self.kill_at < self.stream.max_ticks,
+            "kill-at {} beyond max-ticks {}",
+            self.kill_at,
+            self.stream.max_ticks
+        );
+        anyhow::ensure!(
+            self.join_at < self.stream.max_ticks,
+            "join-at {} beyond max-ticks {}",
+            self.join_at,
+            self.stream.max_ticks
+        );
+        if self.kill_at > 0 {
+            anyhow::ensure!(
+                self.kill_node < self.nodes,
+                "kill-node {} out of range 0..{}",
+                self.kill_node,
+                self.nodes
+            );
+            anyhow::ensure!(
+                self.nodes > 1 || self.join_at > 0,
+                "killing the only node would leave the ring empty"
+            );
+            if self.nodes == 1 {
+                // the coordinator processes a kill before a join at the
+                // same barrier, so the join must happen strictly earlier
+                anyhow::ensure!(
+                    self.join_at < self.kill_at,
+                    "single-node cluster: the join must happen before the kill"
+                );
+            }
+        }
+        anyhow::ensure!(
+            self.stream.checkpoint.is_none() && !self.stream.resume,
+            "cluster runs do not support checkpoints yet"
+        );
+        Ok(())
+    }
+
+    /// Apply `--key value` overrides; non-cluster keys fall through to the
+    /// embedded [`StreamConfig`].
+    pub fn apply_override(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "nodes" => self.nodes = value.parse()?,
+            "vnodes" => self.vnodes = value.parse()?,
+            "gossip-every" => self.gossip_every = value.parse()?,
+            "merge-every" => self.merge_every = value.parse()?,
+            "kill-at" => self.kill_at = value.parse()?,
+            "kill-node" => self.kill_node = value.parse()?,
+            "join-at" => self.join_at = value.parse()?,
+            other => return self.stream.apply_override(other, value),
+        }
+        Ok(())
+    }
+
+    /// Load a JSON config file, then validate.
+    pub fn from_json(j: &Json) -> anyhow::Result<ClusterConfig> {
+        let mut cfg = ClusterConfig::default();
+        for (k, v) in j.as_obj()? {
+            let val = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => {
+                    if n.fract() == 0.0 {
+                        format!("{}", *n as i64)
+                    } else {
+                        format!("{n}")
+                    }
+                }
+                Json::Bool(b) => b.to_string(),
+                other => anyhow::bail!("cluster config key {k}: unsupported value {other:?}"),
+            };
+            cfg.apply_override(k, &val)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<ClusterConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Serialize for provenance in reports.
+    pub fn to_json(&self) -> Json {
+        let mut m = match self.stream.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("StreamConfig::to_json returns an object"),
+        };
+        m.insert("nodes".into(), Json::Num(self.nodes as f64));
+        m.insert("vnodes".into(), Json::Num(self.vnodes as f64));
+        m.insert("gossip-every".into(), Json::Num(self.gossip_every as f64));
+        m.insert("merge-every".into(), Json::Num(self.merge_every as f64));
+        m.insert("kill-at".into(), Json::Num(self.kill_at as f64));
+        m.insert("kill-node".into(), Json::Num(self.kill_node as f64));
+        m.insert("join-at".into(), Json::Num(self.join_at as f64));
         Json::Obj(m)
     }
 }
@@ -565,9 +728,82 @@ mod tests {
         cfg.dataset = "drift-reg".into();
         cfg.gamma = 0.3;
         cfg.burst_min = 0.5;
+        cfg.drift_detect = true;
+        cfg.replay = true;
         let back = StreamConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.dataset, "drift-reg");
         assert!((back.gamma - 0.3).abs() < 1e-12);
         assert!((back.burst_min - 0.5).abs() < 1e-12);
+        assert!(back.drift_detect && back.replay);
+    }
+
+    #[test]
+    fn drift_and_replay_are_part_of_run_identity() {
+        let base = StreamConfig::default();
+        let mut d = base.clone();
+        d.drift_detect = true;
+        let mut r = base.clone();
+        r.replay = true;
+        assert_ne!(base.identity_json(), d.identity_json());
+        assert_ne!(base.identity_json(), r.identity_json());
+    }
+
+    #[test]
+    fn cluster_default_validates() {
+        ClusterConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cluster_overrides_split_between_layers() {
+        let mut cfg = ClusterConfig::default();
+        cfg.apply_override("nodes", "2").unwrap();
+        cfg.apply_override("gossip-every", "8").unwrap();
+        cfg.apply_override("kill-at", "40").unwrap();
+        cfg.apply_override("kill-node", "1").unwrap();
+        cfg.apply_override("join-at", "60").unwrap();
+        // stream-level keys fall through
+        cfg.apply_override("gamma", "0.25").unwrap();
+        cfg.apply_override("max-ticks", "100").unwrap();
+        cfg.apply_override("replay", "on").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.nodes, 2);
+        assert_eq!(cfg.gossip_every, 8);
+        assert!((cfg.stream.gamma - 0.25).abs() < 1e-12);
+        assert!(cfg.stream.replay);
+        assert!(cfg.apply_override("bogus-key", "1").is_err());
+    }
+
+    #[test]
+    fn cluster_bad_values_rejected() {
+        let mut cfg = ClusterConfig::default();
+        cfg.nodes = 0;
+        assert!(cfg.validate().is_err());
+        cfg.nodes = 4;
+        cfg.vnodes = 0;
+        assert!(cfg.validate().is_err());
+        cfg.vnodes = 128;
+        cfg.kill_at = cfg.stream.max_ticks; // beyond the run
+        assert!(cfg.validate().is_err());
+        cfg.kill_at = 10;
+        cfg.kill_node = 4; // out of range
+        assert!(cfg.validate().is_err());
+        cfg.kill_node = 0;
+        cfg.nodes = 1; // killing the only node
+        assert!(cfg.validate().is_err());
+        cfg.nodes = 4;
+        cfg.stream.checkpoint = Some(PathBuf::from("/tmp/ck.json"));
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn cluster_json_round_trip() {
+        let mut cfg = ClusterConfig::default();
+        cfg.nodes = 2;
+        cfg.merge_every = 4;
+        cfg.stream.gamma = 0.4;
+        let back = ClusterConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.nodes, 2);
+        assert_eq!(back.merge_every, 4);
+        assert!((back.stream.gamma - 0.4).abs() < 1e-12);
     }
 }

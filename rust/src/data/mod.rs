@@ -137,6 +137,59 @@ impl Dataset {
         }
         Ok(())
     }
+
+    /// Dense copy of the given rows (same name/task/shape). Row indices
+    /// must be in range.
+    pub fn select_rows(&self, rows: &[usize]) -> Dataset {
+        fn take<T: Copy>(data: &[T], stride: usize, rows: &[usize]) -> Vec<T> {
+            let mut out = Vec::with_capacity(rows.len() * stride);
+            for &r in rows {
+                out.extend_from_slice(&data[r * stride..(r + 1) * stride]);
+            }
+            out
+        }
+        let x = match &self.x {
+            XStore::F32 { data, stride } => XStore::F32 {
+                data: take(data, *stride, rows),
+                stride: *stride,
+            },
+            XStore::I32 { data, stride } => XStore::I32 {
+                data: take(data, *stride, rows),
+                stride: *stride,
+            },
+        };
+        let y = match &self.y {
+            YStore::F32(v) => YStore::F32(rows.iter().map(|&r| v[r]).collect()),
+            YStore::I32(v) => YStore::I32(rows.iter().map(|&r| v[r]).collect()),
+            YStore::Seq { data, stride } => YStore::Seq {
+                data: take(data, *stride, rows),
+                stride: *stride,
+            },
+        };
+        Dataset {
+            name: self.name.clone(),
+            task: self.task.clone(),
+            feat_shape: self.feat_shape.clone(),
+            x,
+            y,
+        }
+    }
+
+    /// Append another dataset's rows (must share storage layout and
+    /// stride; both sides come from the same source in practice).
+    pub fn append(&mut self, other: &Dataset) {
+        match (&mut self.x, &other.x) {
+            (XStore::F32 { data: a, .. }, XStore::F32 { data: b, .. }) => a.extend_from_slice(b),
+            (XStore::I32 { data: a, .. }, XStore::I32 { data: b, .. }) => a.extend_from_slice(b),
+            _ => panic!("Dataset::append: feature storage mismatch"),
+        }
+        match (&mut self.y, &other.y) {
+            (YStore::F32(a), YStore::F32(b)) => a.extend_from_slice(b),
+            (YStore::I32(a), YStore::I32(b)) => a.extend_from_slice(b),
+            (YStore::Seq { data: a, .. }, YStore::Seq { data: b, .. }) => a.extend_from_slice(b),
+            _ => panic!("Dataset::append: target storage mismatch"),
+        }
+    }
 }
 
 /// A train/test pair produced by a generator.
@@ -190,6 +243,27 @@ mod tests {
             assert!(ds.test.len() > 0, "{name}");
             family_for(name).unwrap();
         }
+    }
+
+    #[test]
+    fn select_rows_and_append_round_trip() {
+        let ds = build("simple", 3, 0.01).unwrap().train;
+        let a = ds.select_rows(&[0, 2, 4]);
+        let b = ds.select_rows(&[1, 3]);
+        assert_eq!(a.len(), 3);
+        a.validate().unwrap();
+        let mut joined = a.clone();
+        joined.append(&b);
+        assert_eq!(joined.len(), 5);
+        joined.validate().unwrap();
+        // row 3 of the join is row 1 of the original
+        let (XStore::F32 { data: dj, stride }, XStore::F32 { data: d0, .. }) =
+            (&joined.x, &ds.x)
+        else {
+            panic!("expected f32 stores");
+        };
+        assert_eq!(&dj[3 * stride..4 * stride], &d0[*stride..2 * stride]);
+        assert!(ds.select_rows(&[]).is_empty());
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "ablate-rule", paper_ref: "§3.2 (bandit view)", description: "weight-update rule: eq3 vs exp3 vs softmax" },
         Experiment { id: "tables-from-aggregates", paper_ref: "Tables 3/4", description: "assemble tables 3+4 from aggregate_*.csv already in --out (no re-training)" },
         Experiment { id: "stream-cmp", paper_ref: "§1/§5 (streaming)", description: "continuous-training stream: AdaSelection vs uniform vs benchmark rolling loss at equal tick budget (γ=0.5, drift-class)" },
+        Experiment { id: "cluster-cmp", paper_ref: "§1 (scale-out)", description: "multi-node sharded streaming: 1 vs 2 vs 4 nodes at equal total tick budget — rolling loss parity + aggregate samples/sec (native only)" },
     ]
 }
 
@@ -497,6 +498,80 @@ fn stream_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result
     Ok(())
 }
 
+/// Scale-out extension: the same drifting stream at an equal total tick
+/// budget through 1-, 2- and 4-node clusters. Emits rolling-loss parity
+/// vs the single node and the aggregate-throughput scaling curve.
+fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
+    use crate::config::ClusterConfig;
+
+    if engine.name() != "native" {
+        log::warn!("cluster-cmp runs on the native backend only; skipping");
+        return Ok(());
+    }
+    let ticks = if opts.quick { 80 } else { 400 };
+    let mut summary = crate::metrics::csv::CsvTable::new(vec![
+        "nodes",
+        "final_rolling_loss",
+        "loss_vs_1node_%",
+        "samples_per_sec",
+        "speedup_vs_1node",
+        "samples_seen",
+        "samples_trained",
+        "merges",
+        "gossip_rounds",
+    ]);
+    let mut trace = crate::metrics::csv::CsvTable::new(vec![
+        "nodes", "tick", "rolling_loss", "rolling_acc",
+    ]);
+    let node_counts: &[usize] = if opts.quick { &[1, 2] } else { &[1, 2, 4] };
+    let mut base: Option<(f32, f64)> = None; // (loss, samples/s) at 1 node
+    for &nodes in node_counts {
+        let mut cfg = ClusterConfig::default();
+        cfg.nodes = nodes;
+        cfg.gossip_every = 8;
+        cfg.merge_every = 8;
+        cfg.stream.dataset = "drift-class".into();
+        cfg.stream.gamma = 0.5;
+        cfg.stream.lr = opts.lr;
+        cfg.stream.seed = opts.seed;
+        cfg.stream.max_ticks = ticks;
+        cfg.stream.window = 40;
+        cfg.stream.workers = 1;
+        log::info!("cluster-cmp job: {nodes} node(s) over {ticks} ticks");
+        let r = crate::cluster::run(&cfg)?;
+        if base.is_none() {
+            base = Some((r.final_rolling_loss, r.samples_per_sec));
+        }
+        let (base_loss, base_sps) = base.expect("set on first iteration");
+        for p in &r.rolling {
+            trace.push(vec![
+                nodes.to_string(),
+                p.tick.to_string(),
+                format!("{:.6}", p.loss),
+                format!("{:.6}", p.acc),
+            ]);
+        }
+        summary.push(vec![
+            nodes.to_string(),
+            format!("{:.6}", r.final_rolling_loss),
+            format!("{:+.1}", 100.0 * (r.final_rolling_loss - base_loss) / base_loss),
+            format!("{:.1}", r.samples_per_sec),
+            format!("{:.2}", r.samples_per_sec / base_sps.max(1e-9)),
+            r.samples_seen.to_string(),
+            r.samples_trained.to_string(),
+            r.merges.to_string(),
+            r.gossip_rounds.to_string(),
+        ]);
+    }
+    summary.save(&opts.out_dir.join("cluster_cmp_summary.csv"))?;
+    trace.save(&opts.out_dir.join("cluster_cmp_trace.csv"))?;
+    report::print_table(
+        "cluster-cmp: node-count scaling at equal total tick budget (drift-class, γ=0.5)",
+        &summary,
+    );
+    Ok(())
+}
+
 /// Assemble Tables 3/4 from `aggregate_{dataset}.csv` files already in the
 /// output directory (produced by the per-figure sweeps) without re-running
 /// any training.
@@ -584,6 +659,7 @@ pub fn run_experiment_with<B: Backend>(
         "ablate-rule" => ablate_rule(engine, opts),
         "tables-from-aggregates" => tables_from_aggregates(opts),
         "stream-cmp" => stream_cmp(engine, opts),
+        "cluster-cmp" => cluster_cmp(engine, opts),
         "all" => {
             for e in registry() {
                 // table4 shares tables() with table3; tables-from-aggregates

@@ -7,9 +7,11 @@
 //!   * **L3 (this crate)** — streaming data pipeline, the AdaSelection
 //!     policy + seven baseline subsampling methods, the batch trainer, the
 //!     continuous-training [`stream`] subsystem (unbounded epochless
-//!     sources + sharded bounded instance store + checkpoint/resume),
-//!     metrics, and the experiment harness reproducing every paper
-//!     table/figure.
+//!     sources + sharded bounded instance store + drift-adaptive γ +
+//!     replay + checkpoint/resume), the multi-node [`cluster`] subsystem
+//!     (consistent-hash sharding, store gossip, model/policy merge,
+//!     kill/join churn), metrics, and the experiment harness reproducing
+//!     every paper table/figure.
 //!   * **L2 (python/compile)** — JAX model graphs (MLP / mini-ResNet /
 //!     Transformer) lowered once to HLO text by `make artifacts`.
 //!   * **L1 (python/compile/kernels)** — Pallas kernels for per-sample
@@ -38,6 +40,7 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
 
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod data;
 pub mod harness;

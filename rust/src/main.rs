@@ -5,12 +5,12 @@
 use std::path::PathBuf;
 
 use adaselection::cli::{Args, USAGE};
-use adaselection::config::{RunConfig, StreamConfig};
+use adaselection::config::{ClusterConfig, RunConfig, StreamConfig};
 use adaselection::harness::{registry, run_experiment, SweepOptions};
 use adaselection::metrics::csv::CsvTable;
 use adaselection::runtime::{default_artifacts_dir, Manifest};
 use adaselection::util::logging;
-use adaselection::{data, harness, stream, train};
+use adaselection::{cluster, data, harness, stream, train};
 
 fn main() {
     logging::init();
@@ -31,6 +31,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(args),
         "stream" => cmd_stream(args),
+        "cluster" => cmd_cluster(args),
         "sweep" => cmd_sweep(args),
         "list-experiments" => {
             println!("{:<20} {:<12} description", "id", "paper");
@@ -136,6 +137,12 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
         "  store: {}/{} live, hits={} misses={} evictions={}",
         r.store_len, r.store_capacity, c.hits, c.misses, c.evictions
     );
+    if r.samples_replayed > 0 || r.drift_detections > 0 {
+        println!(
+            "  replayed={} drift_detections={}",
+            r.samples_replayed, r.drift_detections
+        );
+    }
     if let Some(w) = &r.weights {
         println!(
             "  method weights: {:?}",
@@ -156,6 +163,87 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
         }
         t.save(&dir.join("stream_rolling.csv"))?;
         println!("wrote {out}/stream_rolling.csv");
+    }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => ClusterConfig::from_file(std::path::Path::new(path))?,
+        None => ClusterConfig::default(),
+    };
+    for (k, v) in &args.flags {
+        if k == "config" || k == "out" {
+            continue;
+        }
+        cfg.apply_override(k, v)?;
+    }
+    cfg.validate()?;
+    println!("config: {}", cfg.to_json());
+    let r = cluster::run(&cfg)?;
+    println!(
+        "\ncluster result: nodes={} ticks={} gossip_rounds={} merges={}",
+        r.nodes_started, r.ticks, r.gossip_rounds, r.merges
+    );
+    println!(
+        "  seen={} trained={} replayed={} ({:.0} samples/s aggregate)",
+        r.samples_seen, r.samples_trained, r.samples_replayed, r.samples_per_sec
+    );
+    println!(
+        "  rolling: loss={:.4} acc={}",
+        r.final_rolling_loss,
+        if r.final_rolling_acc.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:.4}", r.final_rolling_acc)
+        }
+    );
+    if r.drift_detections > 0 {
+        println!("  drift detections: {}", r.drift_detections);
+    }
+    for (tick, frac) in &r.remaps {
+        println!("  churn @tick {tick}: {:.1}% of keys remapped", 100.0 * frac);
+    }
+    for n in &r.node_summaries {
+        println!(
+            "  node {}: ticks={} seen={} trained={} store={} {}",
+            n.id,
+            n.ticks_processed,
+            n.samples_seen,
+            n.samples_trained,
+            n.store_len,
+            if n.alive_at_end { "alive" } else { "killed" }
+        );
+    }
+    println!("  phases: {}", r.phases.summary());
+    if let Some(out) = args.flag("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        let mut t = CsvTable::new(vec!["tick", "rolling_loss", "rolling_acc"]);
+        for p in &r.rolling {
+            t.push(vec![
+                p.tick.to_string(),
+                format!("{:.6}", p.loss),
+                if p.acc.is_nan() { String::new() } else { format!("{:.6}", p.acc) },
+            ]);
+        }
+        t.save(&dir.join("cluster_rolling.csv"))?;
+        let mut nt = CsvTable::new(vec![
+            "node", "ticks", "seen", "trained", "replayed", "store_live", "alive",
+        ]);
+        for n in &r.node_summaries {
+            nt.push(vec![
+                n.id.to_string(),
+                n.ticks_processed.to_string(),
+                n.samples_seen.to_string(),
+                n.samples_trained.to_string(),
+                n.samples_replayed.to_string(),
+                n.store_len.to_string(),
+                n.alive_at_end.to_string(),
+            ]);
+        }
+        nt.save(&dir.join("cluster_nodes.csv"))?;
+        println!("wrote {out}/cluster_rolling.csv and {out}/cluster_nodes.csv");
     }
     Ok(())
 }

@@ -1,0 +1,174 @@
+//! Concept-drift detection on streaming metrics.
+//!
+//! [`PageHinkley`] is the classic sequential change-point test on a signal's
+//! mean: it accumulates the deviation of each observation from the running
+//! mean (minus a tolerance `delta`) and fires when the cumulative sum rises
+//! more than `lambda` above its historical minimum. Fed with the per-tick
+//! prequential loss it detects *loss increases* — concept drift — with a
+//! delay of roughly `lambda / step_size` ticks for a step change.
+//!
+//! The stream trainer uses it to drive γ and the method-weight learning
+//! rate (see `stream::tick::DriftGamma`) instead of keeping them fixed.
+
+/// Page–Hinkley test for an upward shift in the mean of a stream.
+#[derive(Clone, Debug)]
+pub struct PageHinkley {
+    /// magnitude tolerance: deviations below `delta` never accumulate
+    delta: f64,
+    /// detection threshold on `cum - min(cum)`
+    lambda: f64,
+    n: u64,
+    mean: f64,
+    cum: f64,
+    min_cum: f64,
+    /// total detections fired since construction
+    detections: u64,
+}
+
+impl PageHinkley {
+    /// `delta` = per-observation tolerance, `lambda` = detection threshold.
+    pub fn new(delta: f64, lambda: f64) -> PageHinkley {
+        PageHinkley {
+            delta,
+            lambda: lambda.max(1e-12),
+            n: 0,
+            mean: 0.0,
+            cum: 0.0,
+            min_cum: 0.0,
+            detections: 0,
+        }
+    }
+
+    /// Feed one observation; `true` when a change is detected. Detection
+    /// resets the accumulated statistics so the test re-arms on the new
+    /// regime.
+    pub fn observe(&mut self, x: f64) -> bool {
+        if !x.is_finite() {
+            return false;
+        }
+        self.n += 1;
+        self.mean += (x - self.mean) / self.n as f64;
+        self.cum += x - self.mean - self.delta;
+        self.min_cum = self.min_cum.min(self.cum);
+        if self.cum - self.min_cum > self.lambda {
+            self.detections += 1;
+            self.reset();
+            return true;
+        }
+        false
+    }
+
+    /// Forget all accumulated statistics (detections counter survives).
+    pub fn reset(&mut self) {
+        self.n = 0;
+        self.mean = 0.0;
+        self.cum = 0.0;
+        self.min_cum = 0.0;
+    }
+
+    pub fn detections(&self) -> u64 {
+        self.detections
+    }
+
+    /// Raw state as (n, mean, cum, min_cum) — checkpoint support.
+    pub fn state(&self) -> (u64, f64, f64, f64) {
+        (self.n, self.mean, self.cum, self.min_cum)
+    }
+
+    /// Restore state captured by [`PageHinkley::state`].
+    pub fn restore(&mut self, n: u64, mean: f64, cum: f64, min_cum: f64, detections: u64) {
+        self.n = n;
+        self.mean = mean;
+        self.cum = cum;
+        self.min_cum = min_cum;
+        self.detections = detections;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Stationary noise for `quiet` steps, then a step change of `jump`;
+    /// returns the index of the first detection (if any).
+    fn first_detection(ph: &mut PageHinkley, quiet: usize, total: usize, jump: f64) -> Option<usize> {
+        let mut rng = Pcg64::new(11);
+        for i in 0..total {
+            let base = if i < quiet { 1.0 } else { 1.0 + jump };
+            let x = base + 0.05 * (rng.next_f64() - 0.5);
+            if ph.observe(x) {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn detects_step_change_with_bounded_delay() {
+        let mut ph = PageHinkley::new(0.05, 2.0);
+        let at = first_detection(&mut ph, 200, 300, 1.0).expect("no detection");
+        assert!(at >= 200, "false positive at {at}");
+        // step of ~1.0 against λ=2.0 accumulates in a handful of ticks
+        assert!(at <= 215, "detection too slow: {at}");
+        assert_eq!(ph.detections(), 1);
+    }
+
+    #[test]
+    fn stationary_stream_stays_quiet() {
+        let mut ph = PageHinkley::new(0.05, 2.0);
+        assert_eq!(first_detection(&mut ph, 500, 500, 0.0), None);
+        assert_eq!(ph.detections(), 0);
+    }
+
+    #[test]
+    fn re_arms_after_detection() {
+        let mut ph = PageHinkley::new(0.05, 1.0);
+        let mut hits = 0;
+        for block in 0..3 {
+            for i in 0..100 {
+                let level = 1.0 + block as f64; // staircase upward
+                let _ = i;
+                if ph.observe(level) {
+                    hits += 1;
+                }
+            }
+        }
+        assert!(hits >= 2, "only {hits} detections on a staircase");
+        assert_eq!(ph.detections(), hits);
+    }
+
+    #[test]
+    fn downward_shift_is_ignored() {
+        let mut ph = PageHinkley::new(0.05, 2.0);
+        for i in 0..400 {
+            let x = if i < 200 { 2.0 } else { 0.5 };
+            assert!(!ph.observe(x), "fired on a loss drop at {i}");
+        }
+    }
+
+    #[test]
+    fn state_round_trips() {
+        let mut a = PageHinkley::new(0.02, 3.0);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..50 {
+            a.observe(1.0 + rng.next_f64());
+        }
+        let (n, mean, cum, min_cum) = a.state();
+        let mut b = PageHinkley::new(0.02, 3.0);
+        b.restore(n, mean, cum, min_cum, a.detections());
+        for _ in 0..50 {
+            let x = 1.0 + rng.next_f64();
+            assert_eq!(a.observe(x), b.observe(x));
+        }
+    }
+
+    #[test]
+    fn non_finite_observations_are_skipped() {
+        let mut ph = PageHinkley::new(0.01, 0.5);
+        assert!(!ph.observe(f64::NAN));
+        assert!(!ph.observe(f64::INFINITY));
+        let (n, ..) = ph.state();
+        assert_eq!(n, 0);
+    }
+}

@@ -3,6 +3,7 @@
 //! (average rank) / Table-4 (average metric) math.
 
 pub mod csv;
+pub mod drift;
 pub mod persist;
 pub mod ranking;
 pub mod rolling;

@@ -71,6 +71,65 @@ impl Batch {
             y_i32: take_i32(&self.y_i32),
         }
     }
+
+    /// An all-padding batch (`real == 0`) shaped like `ds`'s storage —
+    /// what a stream producer yields for a tick with no owned arrivals
+    /// (file-source gap, or a ring shard that owns none of the chunk).
+    /// Consumers skip eval/forward/train on `real == 0`, so the zero
+    /// payload is never read as data.
+    pub fn empty_padded(ds: &Dataset, batch_size: usize, index_in_epoch: usize) -> Batch {
+        let (x_f32, x_i32) = match &ds.x {
+            XStore::F32 { stride, .. } => (Some(vec![0.0; batch_size * stride]), None),
+            XStore::I32 { stride, .. } => (None, Some(vec![0; batch_size * stride])),
+        };
+        let (y_f32, y_i32) = match &ds.y {
+            YStore::F32(_) => (Some(vec![0.0; batch_size]), None),
+            YStore::I32(_) => (None, Some(vec![0; batch_size])),
+            YStore::Seq { stride, .. } => (None, Some(vec![0; batch_size * stride])),
+        };
+        Batch {
+            epoch: 0,
+            index_in_epoch,
+            indices: vec![0; batch_size],
+            real: 0,
+            x_f32,
+            x_i32,
+            y_f32,
+            y_i32,
+        }
+    }
+
+    /// Concatenate two *dense* batches (no padding on either side, same
+    /// storage layout) — the replay scheduler joins the selected arrivals
+    /// with replayed store rows before one train step.
+    pub fn concat(&self, other: &Batch) -> Batch {
+        debug_assert_eq!(self.real, self.len(), "concat on a padded batch");
+        debug_assert_eq!(other.real, other.len(), "concat on a padded batch");
+        fn join<T: Copy>(a: &Option<Vec<T>>, b: &Option<Vec<T>>) -> Option<Vec<T>> {
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    let mut out = Vec::with_capacity(a.len() + b.len());
+                    out.extend_from_slice(a);
+                    out.extend_from_slice(b);
+                    Some(out)
+                }
+                (None, None) => None,
+                _ => panic!("Batch::concat: storage layout mismatch"),
+            }
+        }
+        let mut indices = self.indices.clone();
+        indices.extend_from_slice(&other.indices);
+        Batch {
+            epoch: self.epoch,
+            index_in_epoch: self.index_in_epoch,
+            real: indices.len(),
+            indices,
+            x_f32: join(&self.x_f32, &other.x_f32),
+            x_i32: join(&self.x_i32, &other.x_i32),
+            y_f32: join(&self.y_f32, &other.y_f32),
+            y_i32: join(&self.y_i32, &other.y_i32),
+        }
+    }
 }
 
 /// Gather `indices` (padded to `batch_size` by repeating index 0) from the
@@ -173,6 +232,35 @@ mod tests {
         assert_eq!(sub.indices, vec![2, 0]);
         assert_eq!(sub.x_f32.as_ref().unwrap(), &vec![4.0, 5.0, 0.0, 1.0]);
         assert_eq!(sub.y_f32.as_ref().unwrap(), &vec![102.0, 100.0]);
+    }
+
+    #[test]
+    fn empty_padded_matches_storage_shape() {
+        let ds = toy_ds();
+        let b = Batch::empty_padded(&ds, 4, 9);
+        assert_eq!(b.real, 0);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.index_in_epoch, 9);
+        assert_eq!(b.x_f32.as_ref().unwrap().len(), 8); // 4 rows x stride 2
+        assert_eq!(b.y_f32.as_ref().unwrap().len(), 4);
+        assert!(b.x_i32.is_none());
+        assert_eq!(b.mask(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn concat_joins_dense_batches() {
+        let ds = toy_ds();
+        let a = gather(&ds, &[0, 1], 2, 0, 0);
+        let b = gather(&ds, &[4], 1, 0, 0);
+        let j = a.concat(&b);
+        assert_eq!(j.real, 3);
+        assert_eq!(j.indices, vec![0, 1, 4]);
+        assert_eq!(
+            j.x_f32.as_ref().unwrap(),
+            &vec![0.0, 1.0, 2.0, 3.0, 8.0, 9.0]
+        );
+        assert_eq!(j.y_f32.as_ref().unwrap(), &vec![100.0, 101.0, 104.0]);
+        assert!(j.x_i32.is_none());
     }
 
     #[test]

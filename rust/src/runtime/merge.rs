@@ -1,0 +1,108 @@
+//! Host-tensor state averaging — the cluster's periodic model merge.
+//!
+//! Nodes train disjoint stream shards between sync points, then exchange
+//! `Backend::export_state` tensors and replace their state with the
+//! weighted mean (federated-averaging style). Averaging momentum buffers
+//! together with parameters is deliberate: both live in the exported
+//! tensor list, and averaged momentum keeps post-merge updates smooth.
+
+use crate::runtime::Tensor;
+
+/// Weighted elementwise mean of several exported state-tensor lists.
+/// Every list must have the same arity and shapes; weights must be
+/// non-negative with a positive, finite total. The summation order is
+/// fixed by the input order, so the result is bit-deterministic.
+pub fn average_states(states: &[Vec<Tensor>], weights: &[f64]) -> anyhow::Result<Vec<Tensor>> {
+    anyhow::ensure!(!states.is_empty(), "average_states: no states");
+    anyhow::ensure!(
+        states.len() == weights.len(),
+        "average_states: {} states vs {} weights",
+        states.len(),
+        weights.len()
+    );
+    let total: f64 = weights.iter().sum();
+    anyhow::ensure!(
+        total > 0.0 && total.is_finite() && weights.iter().all(|&w| w >= 0.0),
+        "average_states: degenerate weights {weights:?}"
+    );
+    let arity = states[0].len();
+    for (i, s) in states.iter().enumerate() {
+        anyhow::ensure!(
+            s.len() == arity,
+            "average_states: state {i} has {} tensors, expected {arity}",
+            s.len()
+        );
+        for (k, t) in s.iter().enumerate() {
+            anyhow::ensure!(
+                t.shape == states[0][k].shape,
+                "average_states: tensor {k} shape {:?} != {:?} (state {i})",
+                t.shape,
+                states[0][k].shape
+            );
+        }
+    }
+
+    let mut out: Vec<Tensor> = states[0]
+        .iter()
+        .map(|t| Tensor::zeros(&t.shape))
+        .collect();
+    for (s, &w) in states.iter().zip(weights.iter()) {
+        let frac = (w / total) as f32;
+        for (acc, t) in out.iter_mut().zip(s.iter()) {
+            for (a, &v) in acc.data.iter_mut().zip(t.data.iter()) {
+                *a += frac * v;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], fill: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![fill; shape.iter().product()],
+        }
+    }
+
+    #[test]
+    fn equal_weights_are_the_mean() {
+        let a = vec![t(&[2, 2], 1.0), t(&[3], 4.0)];
+        let b = vec![t(&[2, 2], 3.0), t(&[3], 0.0)];
+        let m = average_states(&[a, b], &[1.0, 1.0]).unwrap();
+        assert!(m[0].data.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        assert!(m[1].data.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        assert_eq!(m[0].shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn weights_bias_the_average() {
+        let a = vec![t(&[4], 0.0)];
+        let b = vec![t(&[4], 1.0)];
+        let m = average_states(&[a, b], &[1.0, 3.0]).unwrap();
+        assert!(m[0].data.iter().all(|&v| (v - 0.75).abs() < 1e-6), "{:?}", m[0].data);
+    }
+
+    #[test]
+    fn single_state_is_identity() {
+        let a = vec![t(&[2], 7.5)];
+        let m = average_states(std::slice::from_ref(&a), &[2.0]).unwrap();
+        assert_eq!(m[0].data, a[0].data);
+    }
+
+    #[test]
+    fn mismatches_are_rejected() {
+        let a = vec![t(&[2], 1.0)];
+        let b = vec![t(&[3], 1.0)];
+        assert!(average_states(&[a.clone(), b], &[1.0, 1.0]).is_err());
+        let c = vec![t(&[2], 1.0), t(&[2], 1.0)];
+        assert!(average_states(&[a.clone(), c], &[1.0, 1.0]).is_err());
+        assert!(average_states(&[a.clone()], &[0.0]).is_err());
+        assert!(average_states(&[a.clone(), a.clone()], &[1.0]).is_err());
+        assert!(average_states(&[a], &[-1.0]).is_err());
+        assert!(average_states(&[], &[]).is_err());
+    }
+}

@@ -14,9 +14,11 @@ pub mod engine;
 #[cfg(feature = "xla")]
 pub mod exec;
 pub mod manifest;
+pub mod merge;
 pub mod native;
 
 pub use backend::{Backend, FamilyMeta, FusedForward, TaskKind, Tensor};
+pub use merge::average_states;
 #[cfg(feature = "xla")]
 pub use engine::{Engine, ModelState};
 #[cfg(feature = "xla")]

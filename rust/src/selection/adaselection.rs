@@ -56,6 +56,10 @@ pub struct AdaSelection {
     prev_loss: Option<Vec<f32>>,
     /// iteration counter t (1-based at first score call)
     t: usize,
+    /// transient learning-rate multiplier on the weight-update rule (set
+    /// by the stream drift controller; 1.0 = the configured rule verbatim;
+    /// deliberately NOT part of snapshots — it is re-derived each tick)
+    lr_scale: f32,
 }
 
 /// Checkpoint view of the mutable policy state (see
@@ -87,6 +91,7 @@ impl AdaSelection {
             w: vec![1.0; m],
             prev_loss: None,
             t: 0,
+            lr_scale: 1.0,
         }
     }
 
@@ -105,6 +110,11 @@ impl AdaSelection {
     /// Override the weight-update rule (bandit ablations).
     pub fn set_rule(&mut self, rule: UpdateRule) {
         self.cfg.rule = Some(rule);
+    }
+
+    /// Transient learning-rate multiplier on the update rule (drift boost).
+    pub fn set_lr_scale(&mut self, s: f32) {
+        self.lr_scale = if s.is_finite() && s > 0.0 { s } else { 1.0 };
     }
 
     /// Copy out the mutable policy state (checkpoint support).
@@ -231,6 +241,7 @@ impl AdaSelection {
             .collect();
         self.cfg
             .effective_rule()
+            .scaled(self.lr_scale)
             .update(&mut self.w, &cur, self.prev_loss.as_deref());
         self.prev_loss = Some(cur);
 
@@ -240,6 +251,58 @@ impl AdaSelection {
             weights: self.w.clone(),
         }
     }
+}
+
+/// Weighted merge of policy snapshots — the cluster's periodic
+/// policy-merge step. Method weights are the weighted mean (renormalized
+/// to sum = M), `prev_loss` is the weighted mean when every snapshot has
+/// one (else `None`, so the next update is a no-op for the stateful
+/// rules), and the iteration counter is the maximum.
+pub fn merge_snapshots(snaps: &[AdaSnapshot], weights: &[f64]) -> anyhow::Result<AdaSnapshot> {
+    anyhow::ensure!(!snaps.is_empty(), "merge_snapshots: no snapshots");
+    anyhow::ensure!(
+        snaps.len() == weights.len(),
+        "merge_snapshots: {} snapshots vs {} weights",
+        snaps.len(),
+        weights.len()
+    );
+    let m = snaps[0].w.len();
+    for s in snaps {
+        anyhow::ensure!(s.w.len() == m, "merge_snapshots: candidate arity mismatch");
+    }
+    let total: f64 = weights.iter().sum();
+    anyhow::ensure!(
+        total > 0.0 && total.is_finite(),
+        "merge_snapshots: degenerate weight total {total}"
+    );
+
+    let mut w = vec![0.0f32; m];
+    for (s, &ws) in snaps.iter().zip(weights.iter()) {
+        for (acc, &v) in w.iter_mut().zip(s.w.iter()) {
+            *acc += ((ws / total) * v as f64) as f32;
+        }
+    }
+    crate::selection::bandit::normalize(&mut w);
+
+    let prev_loss = if snaps.iter().all(|s| s.prev_loss.is_some()) {
+        let mut p = vec![0.0f32; m];
+        for (s, &ws) in snaps.iter().zip(weights.iter()) {
+            let sp = s.prev_loss.as_ref().expect("checked above");
+            anyhow::ensure!(sp.len() == m, "merge_snapshots: prev_loss arity mismatch");
+            for (acc, &v) in p.iter_mut().zip(sp.iter()) {
+                *acc += ((ws / total) * v as f64) as f32;
+            }
+        }
+        Some(p)
+    } else {
+        None
+    };
+
+    Ok(AdaSnapshot {
+        w,
+        prev_loss,
+        t: snaps.iter().map(|s| s.t).max().unwrap_or(0),
+    })
 }
 
 /// Host-side fused score + full 7-row α matrix (no state/update): mirrors
@@ -453,6 +516,65 @@ mod tests {
             ..AdaConfig::default()
         });
         assert!(c.restore(a.snapshot()).is_err());
+    }
+
+    #[test]
+    fn lr_scale_speeds_weight_movement() {
+        // identical loss sequences; the boosted policy's weights must move
+        // farther from uniform than the base policy's
+        let spread = |scale: f32| {
+            let mut ada = AdaSelection::new(AdaConfig {
+                beta: 0.5,
+                ..AdaConfig::default()
+            });
+            ada.set_lr_scale(scale);
+            let mut rng = Pcg64::new(21);
+            for t in 0..20 {
+                let osc = if t % 2 == 0 { 4.0 } else { 1.0 };
+                let loss: Vec<f32> = (0..32)
+                    .map(|i| if i < 16 { 0.1 } else { osc + rng.next_f32() * 0.1 })
+                    .collect();
+                ada.step_host(&loss, &vec![1.0; 32], 8);
+            }
+            ada.weights()
+                .iter()
+                .map(|&w| (w - 1.0).abs())
+                .fold(0.0f32, f32::max)
+        };
+        assert!(spread(4.0) > spread(1.0), "boost did not speed adaptation");
+        // degenerate scales fall back to 1.0
+        let mut ada = AdaSelection::new(AdaConfig::default());
+        ada.set_lr_scale(0.0);
+        assert_eq!(ada.lr_scale, 1.0);
+        ada.set_lr_scale(f32::NAN);
+        assert_eq!(ada.lr_scale, 1.0);
+    }
+
+    #[test]
+    fn merge_snapshots_weighted_mean() {
+        let a = AdaSnapshot { w: vec![2.0, 1.0, 0.0], prev_loss: Some(vec![1.0, 2.0, 3.0]), t: 5 };
+        let b = AdaSnapshot { w: vec![0.0, 1.0, 2.0], prev_loss: Some(vec![3.0, 2.0, 1.0]), t: 9 };
+        let m = merge_snapshots(&[a.clone(), b.clone()], &[1.0, 1.0]).unwrap();
+        assert_eq!(m.t, 9);
+        let w = &m.w;
+        assert!((w[0] - 1.0).abs() < 1e-5 && (w[1] - 1.0).abs() < 1e-5 && (w[2] - 1.0).abs() < 1e-5, "{w:?}");
+        assert_eq!(m.prev_loss, Some(vec![2.0, 2.0, 2.0]));
+
+        // asymmetric weights pull toward the heavier node
+        let m = merge_snapshots(&[a.clone(), b.clone()], &[3.0, 1.0]).unwrap();
+        assert!(m.w[0] > m.w[2], "{:?}", m.w);
+
+        // any missing prev_loss clears it
+        let c = AdaSnapshot { w: vec![1.0, 1.0, 1.0], prev_loss: None, t: 0 };
+        let m = merge_snapshots(&[a.clone(), c], &[1.0, 1.0]).unwrap();
+        assert_eq!(m.prev_loss, None);
+
+        // arity / weight errors
+        let bad = AdaSnapshot { w: vec![1.0], prev_loss: None, t: 0 };
+        assert!(merge_snapshots(&[a.clone(), bad], &[1.0, 1.0]).is_err());
+        assert!(merge_snapshots(&[a.clone()], &[0.0]).is_err());
+        assert!(merge_snapshots(&[], &[]).is_err());
+        assert!(merge_snapshots(&[a], &[1.0, 1.0]).is_err());
     }
 
     #[test]

@@ -39,6 +39,20 @@ impl UpdateRule {
         }
     }
 
+    /// Scale the rule's learning parameter by `s` (the drift detector's
+    /// method-weight learning-rate boost): β and η multiply, the softmax
+    /// temperature divides (smaller τ = sharper = faster adaptation).
+    pub fn scaled(self, s: f32) -> UpdateRule {
+        if (s - 1.0).abs() < f32::EPSILON {
+            return self;
+        }
+        match self {
+            UpdateRule::Eq3 { beta } => UpdateRule::Eq3 { beta: beta * s },
+            UpdateRule::Exp3 { eta } => UpdateRule::Exp3 { eta: eta * s },
+            UpdateRule::Softmax { tau } => UpdateRule::Softmax { tau: tau / s.max(1e-6) },
+        }
+    }
+
     /// Apply one update. `w` is modified in place (positive, sum = len).
     /// `cur` is ℓ_t^m per candidate; `prev` is ℓ_{t-1}^m (None on t=1).
     pub fn update(&self, w: &mut [f32], cur: &[f32], prev: Option<&[f32]>) {
@@ -161,6 +175,23 @@ mod tests {
             rule.update(&mut w, &[3.0, 0.1], None);
             assert_eq!(w, vec![1.0, 1.0], "{rule:?}");
         }
+    }
+
+    #[test]
+    fn scaled_adjusts_learning_parameters() {
+        assert_eq!(
+            UpdateRule::Eq3 { beta: 0.5 }.scaled(2.0),
+            UpdateRule::Eq3 { beta: 1.0 }
+        );
+        let UpdateRule::Exp3 { eta } = UpdateRule::Exp3 { eta: 0.2 }.scaled(3.0) else {
+            panic!("variant changed");
+        };
+        assert!((eta - 0.6).abs() < 1e-6);
+        let UpdateRule::Softmax { tau } = UpdateRule::Softmax { tau: 0.5 }.scaled(2.0) else {
+            panic!("variant changed");
+        };
+        assert!((tau - 0.25).abs() < 1e-6);
+        assert_eq!(UpdateRule::Eq3 { beta: 0.5 }.scaled(1.0), UpdateRule::Eq3 { beta: 0.5 });
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod method;
 pub mod policy;
 pub mod staleness;
 
-pub use adaselection::{AdaConfig, AdaSelection, AdaSnapshot, ScoreOutput};
+pub use adaselection::{merge_snapshots, AdaConfig, AdaSelection, AdaSnapshot, ScoreOutput};
 pub use bandit::UpdateRule;
 pub use method::Method;
 pub use staleness::LossCache;

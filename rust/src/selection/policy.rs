@@ -259,6 +259,13 @@ impl Policy {
             _ => None,
         }
     }
+
+    pub fn as_ada_ref(&self) -> Option<&AdaSelectionPolicy> {
+        match self {
+            Policy::Ada(p) => Some(p),
+            _ => None,
+        }
+    }
 }
 
 /// Build a [`Policy`] from a spec string (same grammar as `build_selector`).

@@ -12,6 +12,13 @@
 //! Serialization is the crate's own JSON substrate. `u64` values (ids,
 //! rng words, digests) are hex strings because JSON numbers are f64 and
 //! would truncate them; f32 payloads are exact as f64.
+//!
+//! Caveat: the store snapshot preserves *records*, not the generational
+//! (cur/old) placement inside each shard — a reloaded store evicts in a
+//! different order once it rotates. Selection itself never reads the
+//! store, so plain resumes stay exactly deterministic; with `--replay`
+//! (which picks from the store), exact post-resume determinism
+//! additionally requires the run not to have outgrown its store capacity.
 
 use std::path::Path;
 
@@ -21,7 +28,8 @@ use crate::stream::store::InstanceRecord;
 use crate::util::json::Json;
 
 /// On-disk format version (bump on layout changes).
-const VERSION: f64 = 1.0;
+/// v2: added the drift-detector state and the replay counter.
+const VERSION: f64 = 2.0;
 
 /// Everything needed to continue a stream run.
 pub struct StreamCheckpoint {
@@ -39,10 +47,14 @@ pub struct StreamCheckpoint {
     pub policy: Json,
     /// live instance-store records
     pub store: Vec<(u64, InstanceRecord)>,
+    /// drift-controller state (`DriftGamma::to_json`; `Json::Null` when
+    /// drift detection is off)
+    pub drift: Json,
     /// running selection-sequence digest up to `tick`
     pub digest: u64,
     pub samples_seen: u64,
     pub samples_trained: u64,
+    pub samples_replayed: u64,
 }
 
 fn u64_json(x: u64) -> Json {
@@ -197,9 +209,11 @@ pub fn save(path: &Path, ck: &StreamCheckpoint) -> anyhow::Result<()> {
             "store",
             Json::Arr(ck.store.iter().map(|(id, r)| record_to_json(*id, r)).collect()),
         ),
+        ("drift", ck.drift.clone()),
         ("digest", u64_json(ck.digest)),
         ("samples_seen", u64_json(ck.samples_seen)),
         ("samples_trained", u64_json(ck.samples_trained)),
+        ("samples_replayed", u64_json(ck.samples_replayed)),
     ]);
     let tmp = path.with_extension("tmp");
     std::fs::write(&tmp, j.to_string())?;
@@ -233,9 +247,11 @@ pub fn load(path: &Path) -> anyhow::Result<StreamCheckpoint> {
             .iter()
             .map(record_from_json)
             .collect::<anyhow::Result<Vec<_>>>()?,
+        drift: j.at(&["drift"])?.clone(),
         digest: u64_from(j.at(&["digest"])?)?,
         samples_seen: u64_from(j.at(&["samples_seen"])?)?,
         samples_trained: u64_from(j.at(&["samples_trained"])?)?,
+        samples_replayed: u64_from(j.at(&["samples_replayed"])?)?,
     })
 }
 
@@ -268,9 +284,11 @@ mod tests {
                 (u64::MAX, InstanceRecord { loss: 1.5, gnorm: 0.25, last_tick: 9, visits: 3 }),
                 (0, InstanceRecord { loss: 0.0, gnorm: 0.0, last_tick: 0, visits: 1 }),
             ],
+            drift: crate::stream::tick::DriftGamma::default().to_json(),
             digest: u64::MAX - 7,
             samples_seen: 1 << 60,
             samples_trained: 12345,
+            samples_replayed: 678,
         };
         let path = tmp("round_trip");
         save(&path, &ck).unwrap();
@@ -284,9 +302,11 @@ mod tests {
         assert_eq!(back.tensors[0].shape, vec![2, 3]);
         assert_eq!(back.tensors[0].data, ck.tensors[0].data);
         assert_eq!(back.store, ck.store);
+        assert_eq!(back.drift, ck.drift);
         assert_eq!(back.digest, ck.digest);
         assert_eq!(back.samples_seen, ck.samples_seen);
         assert_eq!(back.samples_trained, ck.samples_trained);
+        assert_eq!(back.samples_replayed, ck.samples_replayed);
 
         // policy state restores into an identically-specced policy
         let mut fresh = build_policy("adaselection", 1, 0.5, true, -0.5).unwrap();

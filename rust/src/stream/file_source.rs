@@ -1,0 +1,625 @@
+//! [`FileTailSource`]: a [`StreamSource`] over a line-delimited log file —
+//! the first real-feed source behind the same trait the synthetic
+//! generators implement (ROADMAP: "stream sources backed by real feeds").
+//!
+//! ## Format
+//!
+//! One header line, then one line per sample:
+//!
+//! ```text
+//! #stream-log v1 family=stream_class task=class classes=10 feat=32
+//! <tick> <id> <x1,...,xD> <y>
+//! ```
+//!
+//! `task=class` carries `classes=N feat=D` with one i32 label;
+//! `task=reg` carries `feat=D` with one f32 target; `task=lm` carries
+//! `vocab=V seq=S` with S comma-joined tokens on both x and y.
+//!
+//! ## Watermarking
+//!
+//! Producers append roughly in tick order but real feeds deliver *late*
+//! records. Lines are scanned in file order with a watermark = the highest
+//! event tick seen so far; a line whose event tick is more than
+//! `lateness` ticks behind the watermark is reassigned to the watermark
+//! tick (it trains as a fresh arrival — dropping it would waste the
+//! sample) and counted in [`FileTailSource::late_count`]. Buckets are
+//! then capped at the log's natural chunk width (the widest on-time
+//! tick), with overflow spilling into the following ticks so reassigned
+//! records never exceed what a `gen_chunk(tick, B)` caller will consume.
+//! All of this happens once at load, so `gen_chunk` stays pure in the
+//! tick and the loader's out-of-order workers stay deterministic.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+use crate::data::{Dataset, Task, XStore, YStore};
+use crate::stream::source::{StreamChunk, StreamSource};
+
+/// Default allowed lateness (ticks) for the `file:PATH` spec.
+pub const DEFAULT_LATENESS: u64 = 2;
+
+/// Known model families a log header may name (the native backend table).
+fn static_family(name: &str) -> anyhow::Result<&'static str> {
+    Ok(match name {
+        "stream_class" => "stream_class",
+        "mlp_simple" => "mlp_simple",
+        "mlp_bike" => "mlp_bike",
+        "resnet_c10" => "resnet_c10",
+        "resnet_c100" => "resnet_c100",
+        "transformer" => "transformer",
+        other => anyhow::bail!("stream-log header names unknown family '{other}'"),
+    })
+}
+
+/// Parsed `key=value` header fields.
+struct Header {
+    family: &'static str,
+    task: Task,
+    feat: usize,
+}
+
+fn parse_header(line: &str) -> anyhow::Result<Header> {
+    anyhow::ensure!(
+        line.starts_with("#stream-log v1"),
+        "not a stream log (expected '#stream-log v1' header, got {line:?})"
+    );
+    let mut kv: HashMap<&str, &str> = HashMap::new();
+    for tok in line.split_whitespace().skip(2) {
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad header token '{tok}'"))?;
+        kv.insert(k, v);
+    }
+    let get = |k: &str| -> anyhow::Result<&str> {
+        kv.get(k)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("stream-log header missing '{k}'"))
+    };
+    let family = static_family(get("family")?)?;
+    let (task, feat) = match get("task")? {
+        "class" => {
+            let classes: usize = get("classes")?.parse()?;
+            let feat: usize = get("feat")?.parse()?;
+            (Task::Classification { classes }, feat)
+        }
+        "reg" => {
+            let feat: usize = get("feat")?.parse()?;
+            (Task::Regression, feat)
+        }
+        "lm" => {
+            let vocab: usize = get("vocab")?.parse()?;
+            let seq: usize = get("seq")?.parse()?;
+            (Task::Lm { vocab, seq }, seq)
+        }
+        other => anyhow::bail!("stream-log header has unknown task '{other}'"),
+    };
+    Ok(Header { family, task, feat })
+}
+
+/// One parsed record before bucket freezing:
+/// `(id, x_f32, x_i32, y_f32, y_i32, y_seq)` — exactly one x and one y
+/// side is populated, per the header's task.
+type RawRec = (u64, Vec<f32>, Vec<i32>, f32, i32, Vec<i32>);
+
+/// A tick bucket: sample ids plus their dense rows.
+struct Bucket {
+    ids: Vec<u64>,
+    data: Dataset,
+}
+
+/// File-backed stream source with late-arrival watermarking.
+pub struct FileTailSource {
+    family: &'static str,
+    task: Task,
+    /// per-effective-tick buckets (load-time watermark assignment)
+    buckets: BTreeMap<u64, Bucket>,
+    /// id → (effective tick, row) for O(1) replay fetch
+    index: HashMap<u64, (u64, usize)>,
+    /// zero-row dataset template for empty ticks
+    template: Dataset,
+    late: u64,
+}
+
+impl FileTailSource {
+    /// Load a stream log, reassigning records later than `lateness` ticks
+    /// behind the watermark.
+    pub fn open(path: &Path, lateness: u64) -> anyhow::Result<FileTailSource> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read stream log {path:?}: {e}"))?;
+        let mut lines = text.lines();
+        let header = parse_header(
+            lines
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("empty stream log {path:?}"))?,
+        )?;
+
+        let template = empty_dataset(&header);
+        let mut raw: BTreeMap<u64, Vec<RawRec>> = BTreeMap::new();
+        // per-event-tick counts of on-time lines: their maximum is the
+        // log's natural chunk width, the spill cap below
+        let mut on_time_counts: HashMap<u64, usize> = HashMap::new();
+        let mut seen_ids: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        let mut watermark = 0u64;
+        let mut late = 0u64;
+        for (lineno, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(
+                toks.len() == 4,
+                "line {}: expected '<tick> <id> <x_csv> <y>' (4 fields), got {}",
+                lineno + 2,
+                toks.len()
+            );
+            let event_tick: u64 = toks[0].parse()?;
+            let id: u64 = toks[1].parse()?;
+            anyhow::ensure!(
+                seen_ids.insert(id),
+                "line {}: duplicate sample id {id}",
+                lineno + 2
+            );
+            let x_str = toks[2];
+            let y_str = toks[3];
+
+            let effective = if event_tick + lateness < watermark {
+                late += 1;
+                watermark
+            } else {
+                *on_time_counts.entry(event_tick).or_insert(0) += 1;
+                event_tick
+            };
+            watermark = watermark.max(event_tick);
+
+            let mut xf: Vec<f32> = Vec::new();
+            let mut xi: Vec<i32> = Vec::new();
+            let mut yf = 0.0f32;
+            let mut yi = 0i32;
+            let mut yseq: Vec<i32> = Vec::new();
+            match &header.task {
+                Task::Classification { classes } => {
+                    xf = parse_csv_f32(x_str, header.feat, lineno)?;
+                    yi = y_str.parse()?;
+                    anyhow::ensure!(
+                        yi >= 0 && (yi as usize) < *classes,
+                        "line {}: label {yi} out of range",
+                        lineno + 2
+                    );
+                }
+                Task::Regression => {
+                    xf = parse_csv_f32(x_str, header.feat, lineno)?;
+                    yf = y_str.parse()?;
+                    anyhow::ensure!(
+                        yf.is_finite(),
+                        "line {}: non-finite regression target",
+                        lineno + 2
+                    );
+                }
+                Task::Lm { seq, .. } => {
+                    xi = parse_csv_i32(x_str, *seq, lineno)?;
+                    yseq = parse_csv_i32(y_str, *seq, lineno)?;
+                }
+            }
+            raw.entry(effective).or_default().push((id, xf, xi, yf, yi, yseq));
+        }
+
+        // Spill pass: watermark reassignment can pile late records onto an
+        // already-full tick; rather than letting `gen_chunk` silently drop
+        // the overflow, cap every bucket at the log's natural chunk width
+        // (the widest on-time tick) and flow the excess into the following
+        // ticks — late arrivals train a little later, never vanish.
+        let cap = on_time_counts.values().copied().max().unwrap_or(1).max(1);
+        let mut capped: BTreeMap<u64, Vec<RawRec>> = BTreeMap::new();
+        let mut carry: Vec<RawRec> = Vec::new();
+        let mut cursor = 0u64;
+        for (tick, rows) in raw {
+            while !carry.is_empty() && cursor < tick {
+                let take = carry.len().min(cap);
+                capped.insert(cursor, carry.drain(..take).collect());
+                cursor += 1;
+            }
+            let mut bucket: Vec<RawRec> = std::mem::take(&mut carry);
+            bucket.extend(rows);
+            if bucket.len() > cap {
+                carry.extend(bucket.drain(cap..));
+            }
+            capped.insert(tick, bucket);
+            cursor = tick + 1;
+        }
+        while !carry.is_empty() {
+            let take = carry.len().min(cap);
+            capped.insert(cursor, carry.drain(..take).collect());
+            cursor += 1;
+        }
+
+        // freeze buckets into dense datasets
+        let mut buckets: BTreeMap<u64, Bucket> = BTreeMap::new();
+        let mut index: HashMap<u64, (u64, usize)> = HashMap::new();
+        for (tick, rows) in capped {
+            let mut ids = Vec::with_capacity(rows.len());
+            let mut data = template.clone();
+            for (row_i, (id, xf, xi, yf, yi, yseq)) in rows.into_iter().enumerate() {
+                ids.push(id);
+                index.insert(id, (tick, row_i));
+                match &mut data.x {
+                    XStore::F32 { data, .. } => data.extend_from_slice(&xf),
+                    XStore::I32 { data, .. } => data.extend_from_slice(&xi),
+                }
+                match &mut data.y {
+                    YStore::F32(v) => v.push(yf),
+                    YStore::I32(v) => v.push(yi),
+                    YStore::Seq { data, .. } => data.extend_from_slice(&yseq),
+                }
+            }
+            data.validate()?;
+            buckets.insert(tick, Bucket { ids, data });
+        }
+
+        Ok(FileTailSource {
+            family: header.family,
+            task: header.task,
+            buckets,
+            index,
+            template,
+            late,
+        })
+    }
+
+    /// Records reassigned to the watermark tick because they arrived more
+    /// than `lateness` ticks late.
+    pub fn late_count(&self) -> u64 {
+        self.late
+    }
+
+    /// Highest effective tick with at least one record.
+    pub fn max_tick(&self) -> u64 {
+        self.buckets.keys().next_back().copied().unwrap_or(0)
+    }
+
+    /// Total records loaded.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+}
+
+fn empty_dataset(h: &Header) -> Dataset {
+    let (x, y, feat_shape) = match &h.task {
+        Task::Classification { .. } => (
+            XStore::F32 { data: Vec::new(), stride: h.feat },
+            YStore::I32(Vec::new()),
+            vec![h.feat],
+        ),
+        Task::Regression => (
+            XStore::F32 { data: Vec::new(), stride: h.feat },
+            YStore::F32(Vec::new()),
+            vec![h.feat],
+        ),
+        Task::Lm { seq, .. } => (
+            XStore::I32 { data: Vec::new(), stride: *seq },
+            YStore::Seq { data: Vec::new(), stride: *seq },
+            vec![*seq],
+        ),
+    };
+    Dataset {
+        name: "stream-log".into(),
+        task: h.task.clone(),
+        feat_shape,
+        x,
+        y,
+    }
+}
+
+fn parse_csv_f32(s: &str, want: usize, lineno: usize) -> anyhow::Result<Vec<f32>> {
+    let v: Vec<f32> = s
+        .split(',')
+        .map(|t| t.parse::<f32>().map_err(Into::into))
+        .collect::<anyhow::Result<Vec<f32>>>()?;
+    anyhow::ensure!(
+        v.len() == want,
+        "line {}: expected {want} features, got {}",
+        lineno + 2,
+        v.len()
+    );
+    anyhow::ensure!(
+        v.iter().all(|x| x.is_finite()),
+        "line {}: non-finite feature value",
+        lineno + 2
+    );
+    Ok(v)
+}
+
+fn parse_csv_i32(s: &str, want: usize, lineno: usize) -> anyhow::Result<Vec<i32>> {
+    let v: Vec<i32> = s
+        .split(',')
+        .map(|t| t.parse::<i32>().map_err(Into::into))
+        .collect::<anyhow::Result<Vec<i32>>>()?;
+    anyhow::ensure!(
+        v.len() == want,
+        "line {}: expected {want} tokens, got {}",
+        lineno + 2,
+        v.len()
+    );
+    Ok(v)
+}
+
+impl StreamSource for FileTailSource {
+    fn name(&self) -> &'static str {
+        "file"
+    }
+
+    fn family(&self) -> &'static str {
+        self.family
+    }
+
+    fn task(&self) -> Task {
+        self.task.clone()
+    }
+
+    /// Buckets are pre-capped at the log's natural chunk width, so no rows
+    /// are lost when callers use the family batch size; asking for fewer
+    /// (`max_rows` below the cap) narrows the chunk explicitly.
+    fn gen_chunk(&self, tick: u64, max_rows: usize) -> StreamChunk {
+        match self.buckets.get(&tick) {
+            Some(b) => {
+                let n = b.ids.len().min(max_rows);
+                if n == b.ids.len() {
+                    StreamChunk { ids: b.ids.clone(), data: b.data.clone() }
+                } else {
+                    let rows: Vec<usize> = (0..n).collect();
+                    StreamChunk {
+                        ids: b.ids[..n].to_vec(),
+                        data: b.data.select_rows(&rows),
+                    }
+                }
+            }
+            None => StreamChunk {
+                ids: Vec::new(),
+                data: self.template.clone(),
+            },
+        }
+    }
+
+    /// Direct id lookup instead of tick regeneration (file ids need not
+    /// encode their tick).
+    fn fetch(&self, ids: &[u64], _max_rows: usize) -> StreamChunk {
+        let mut found: Vec<(u64, usize, u64)> = Vec::new(); // (tick, row, id)
+        for &id in ids {
+            if let Some(&(tick, row)) = self.index.get(&id) {
+                found.push((tick, row, id));
+            }
+        }
+        found.sort_unstable();
+        found.dedup();
+        let mut out_ids = Vec::with_capacity(found.len());
+        let mut data = self.template.clone();
+        for (tick, row, id) in found {
+            let b = &self.buckets[&tick];
+            data.append(&b.data.select_rows(&[row]));
+            out_ids.push(id);
+        }
+        StreamChunk { ids: out_ids, data }
+    }
+}
+
+/// Write `ticks` chunks of `source` (width `max_rows`) as a stream log —
+/// the producer side of the format, used by tests and by operators
+/// capturing synthetic traffic for replay through the file path.
+pub fn write_stream_log(
+    path: &Path,
+    source: &dyn StreamSource,
+    ticks: u64,
+    max_rows: usize,
+) -> anyhow::Result<()> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    match source.task() {
+        Task::Classification { classes } => {
+            let feat = source.gen_chunk(0, 1).data.x.stride();
+            writeln!(
+                out,
+                "#stream-log v1 family={} task=class classes={classes} feat={feat}",
+                source.family()
+            )?;
+        }
+        Task::Regression => {
+            let feat = source.gen_chunk(0, 1).data.x.stride();
+            writeln!(
+                out,
+                "#stream-log v1 family={} task=reg feat={feat}",
+                source.family()
+            )?;
+        }
+        Task::Lm { vocab, seq } => {
+            writeln!(
+                out,
+                "#stream-log v1 family={} task=lm vocab={vocab} seq={seq}",
+                source.family()
+            )?;
+        }
+    }
+    for tick in 0..ticks {
+        let chunk = source.gen_chunk(tick, max_rows);
+        for (row, &id) in chunk.ids.iter().enumerate() {
+            write!(out, "{tick} {id} ")?;
+            match &chunk.data.x {
+                XStore::F32 { data, stride } => {
+                    push_csv_f32(&mut out, &data[row * stride..(row + 1) * stride])?
+                }
+                XStore::I32 { data, stride } => {
+                    push_csv_i32(&mut out, &data[row * stride..(row + 1) * stride])?
+                }
+            }
+            out.push(' ');
+            match &chunk.data.y {
+                YStore::F32(v) => write!(out, "{}", v[row])?,
+                YStore::I32(v) => write!(out, "{}", v[row])?,
+                YStore::Seq { data, stride } => {
+                    push_csv_i32(&mut out, &data[row * stride..(row + 1) * stride])?
+                }
+            }
+            out.push('\n');
+        }
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+fn push_csv_f32(out: &mut String, xs: &[f32]) -> std::fmt::Result {
+    use std::fmt::Write as _;
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write!(out, "{x}")?;
+    }
+    Ok(())
+}
+
+fn push_csv_i32(out: &mut String, xs: &[i32]) -> std::fmt::Result {
+    use std::fmt::Write as _;
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write!(out, "{x}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::source::{build_source, StreamKnobs, ALL_STREAMS};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ada_streamlog_{name}_{}.log", std::process::id()))
+    }
+
+    fn knobs(seed: u64) -> StreamKnobs {
+        StreamKnobs { seed, drift_period: 32, burst_period: 8, burst_min: 0.25 }
+    }
+
+    #[test]
+    fn round_trips_every_generator() {
+        for name in ALL_STREAMS {
+            let gen = build_source(name, knobs(17)).unwrap();
+            let path = tmp(&format!("rt_{name}"));
+            write_stream_log(&path, gen.as_ref(), 12, 16).unwrap();
+            let file = FileTailSource::open(&path, 0).unwrap();
+            assert_eq!(file.family(), gen.family(), "{name}");
+            assert_eq!(file.task(), gen.task(), "{name}");
+            assert_eq!(file.late_count(), 0, "{name}: in-order log marked late");
+            for tick in 0..12u64 {
+                let want = gen.gen_chunk(tick, 16);
+                let got = file.gen_chunk(tick, 16);
+                assert_eq!(got.ids, want.ids, "{name} tick {tick}");
+                match (&got.data.x, &want.data.x) {
+                    (XStore::F32 { data: a, .. }, XStore::F32 { data: b, .. }) => {
+                        assert_eq!(a, b, "{name} tick {tick}")
+                    }
+                    (XStore::I32 { data: a, .. }, XStore::I32 { data: b, .. }) => {
+                        assert_eq!(a, b, "{name} tick {tick}")
+                    }
+                    _ => panic!("storage mismatch"),
+                }
+                got.data.validate().unwrap();
+            }
+            // past the log's end: empty chunks, right shape
+            let empty = file.gen_chunk(99, 16);
+            assert!(empty.ids.is_empty());
+            assert!(empty.data.is_empty());
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn fetch_looks_up_by_id() {
+        let gen = build_source("drift-class", knobs(3)).unwrap();
+        let path = tmp("fetch");
+        write_stream_log(&path, gen.as_ref(), 6, 8).unwrap();
+        let file = FileTailSource::open(&path, 0).unwrap();
+        let c2 = file.gen_chunk(2, 8);
+        let c4 = file.gen_chunk(4, 8);
+        let got = file.fetch(&[c4.ids[0], c2.ids[1], 999_999], 8);
+        assert_eq!(got.ids, vec![c2.ids[1], c4.ids[0]]);
+        assert_eq!(got.data.len(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn watermark_reassigns_late_lines() {
+        let path = tmp("late");
+        let log = "\
+#stream-log v1 family=mlp_bike task=reg feat=2
+0 0 1.0,2.0 3.0
+1 1 1.5,2.5 3.5
+5 2 0.5,0.5 1.0
+1 3 9.0,9.0 9.0
+4 4 4.0,4.0 4.0
+";
+        std::fs::write(&path, log).unwrap();
+        // lateness 2: line with tick 1 after watermark 5 is late (1+2 < 5)
+        // and moves to the watermark; the on-time chunk width here is 1,
+        // so the overflow spills to tick 6 instead of being dropped
+        let file = FileTailSource::open(&path, 2).unwrap();
+        assert_eq!(file.late_count(), 1);
+        assert_eq!(file.len(), 5);
+        assert_eq!(file.gen_chunk(5, 8).ids, vec![2]);
+        assert_eq!(file.gen_chunk(6, 8).ids, vec![3], "late id 3 must spill, not drop");
+        assert_eq!(file.gen_chunk(1, 8).ids, vec![1]);
+        assert_eq!(file.gen_chunk(4, 8).ids, vec![4]);
+        assert_eq!(file.max_tick(), 6);
+
+        // lateness 0 (strict): the tick-4 line is late too; both late
+        // records chain into the ticks after the watermark
+        let strict = FileTailSource::open(&path, 0).unwrap();
+        assert_eq!(strict.late_count(), 2);
+        assert_eq!(strict.gen_chunk(5, 8).ids, vec![2]);
+        assert_eq!(strict.gen_chunk(6, 8).ids, vec![3]);
+        assert_eq!(strict.gen_chunk(7, 8).ids, vec![4]);
+        assert_eq!(strict.len(), 5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn max_rows_truncates_buckets() {
+        let gen = build_source("drift-reg", knobs(9)).unwrap();
+        let path = tmp("trunc");
+        write_stream_log(&path, gen.as_ref(), 3, 10).unwrap();
+        let file = FileTailSource::open(&path, 0).unwrap();
+        let full = file.gen_chunk(0, 10);
+        let cut = file.gen_chunk(0, 3);
+        assert_eq!(cut.ids, full.ids[..3].to_vec());
+        assert_eq!(cut.data.len(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn malformed_logs_are_rejected() {
+        let path = tmp("bad");
+        for bad in [
+            "not a header\n",
+            "#stream-log v1 task=class classes=10 feat=2\n", // no family
+            "#stream-log v1 family=unknown task=reg feat=2\n",
+            "#stream-log v1 family=mlp_bike task=reg feat=2\n0 7 1.0 2.0\n", // wrong feature arity
+            "#stream-log v1 family=mlp_bike task=reg feat=2\n0 7 NaN,1.0 2.0\n", // non-finite feature
+            "#stream-log v1 family=mlp_bike task=reg feat=2\n0 7 1.0,1.0 inf\n", // non-finite target
+        ] {
+            std::fs::write(&path, bad).unwrap();
+            assert!(FileTailSource::open(&path, 0).is_err(), "accepted: {bad:?}");
+        }
+        // duplicate id
+        std::fs::write(
+            &path,
+            "#stream-log v1 family=mlp_bike task=reg feat=2\n0 7 1.0,2.0 3.0\n1 7 1.0,2.0 3.0\n",
+        )
+        .unwrap();
+        assert!(FileTailSource::open(&path, 0).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

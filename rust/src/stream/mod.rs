@@ -5,22 +5,33 @@
 //!   * [`source`] — the [`source::StreamSource`] trait + seeded synthetic
 //!     production-traffic generators for all three task types, with
 //!     configurable concept drift and arrival-rate bursts;
+//!   * [`file_source`] — the same trait over a line-delimited log file
+//!     with late-arrival watermarking (`--dataset file:PATH`);
 //!   * [`store`] — the sharded, hard-capacity-bounded
 //!     [`store::InstanceStore`] of fixed per-instance records (also the
-//!     substrate of the batch trainer's stale-loss cache);
+//!     substrate of the batch trainer's stale-loss cache), with the
+//!     freshest-tick-wins merge the cluster gossips through;
+//!   * [`tick`] — the per-tick training kernel ([`tick::TickEngine`])
+//!     shared by the single-process trainer and the cluster nodes:
+//!     prequential eval, fused scoring, Page–Hinkley drift control of γ
+//!     and the method-weight rate, store bookkeeping, replay top-up;
 //!   * [`trainer`] — the [`trainer::StreamTrainer`] driving the pipeline
-//!     loader's unbounded mode through any `Backend`, selecting ⌈γB⌉ per
-//!     micro-batch with AdaSelection weights updated online;
+//!     loader's unbounded mode through any `Backend`;
 //!   * [`checkpoint`] — deterministic kill/resume of (model state, policy
-//!     state, store).
+//!     state, store, drift state).
 //!
-//! CLI surface: `adaselection stream --dataset drift-class --gamma 0.5`.
+//! CLI surface: `adaselection stream --dataset drift-class --gamma 0.5
+//! [--drift-detect] [--replay]`.
 
 pub mod checkpoint;
+pub mod file_source;
 pub mod source;
 pub mod store;
+pub mod tick;
 pub mod trainer;
 
+pub use file_source::{write_stream_log, FileTailSource};
 pub use source::{build_source, StreamChunk, StreamKnobs, StreamSource, ALL_STREAMS};
 pub use store::{InstanceRecord, InstanceStore, StoreCounters, BYTES_PER_INSTANCE};
+pub use tick::{DriftGamma, TickEngine, TickOutcome};
 pub use trainer::{run, StreamResult, StreamTrainer};

@@ -48,6 +48,44 @@ pub trait StreamSource: Send + Sync {
     /// `max_rows` samples. Must be pure in `(self, tick)` — loader workers
     /// call this concurrently and out of order.
     fn gen_chunk(&self, tick: u64, max_rows: usize) -> StreamChunk;
+
+    /// Re-materialize specific instances by global id (the replay
+    /// scheduler's path). The default regenerates through
+    /// [`StreamSource::gen_chunk`] — valid because generation is pure in
+    /// `(seed, tick)` and ids encode `(tick, row)` under chunk width
+    /// `max_rows`. Ids the source never produced are silently skipped, so
+    /// the returned chunk may be smaller than `ids` (or empty). Output
+    /// rows are ordered by (tick, row). Cost note: each distinct tick
+    /// regenerates its whole chunk to extract a few rows — fine at replay
+    /// deficits (≤ B ids per lull tick); sources with cheap random access
+    /// (e.g. the file tail) override this with a direct id lookup.
+    fn fetch(&self, ids: &[u64], max_rows: usize) -> StreamChunk {
+        let width = max_rows.max(1) as u64;
+        let mut groups: std::collections::BTreeMap<u64, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for &id in ids {
+            groups.entry(id / width).or_default().push((id % width) as usize);
+        }
+        let mut out: Option<Dataset> = None;
+        let mut out_ids: Vec<u64> = Vec::new();
+        for (tick, mut rows) in groups {
+            rows.sort_unstable();
+            rows.dedup();
+            let chunk = self.gen_chunk(tick, max_rows);
+            rows.retain(|&r| r < chunk.data.len());
+            if rows.is_empty() {
+                continue;
+            }
+            out_ids.extend(rows.iter().map(|&r| chunk.ids[r]));
+            let part = chunk.data.select_rows(&rows);
+            match &mut out {
+                None => out = Some(part),
+                Some(acc) => acc.append(&part),
+            }
+        }
+        let data = out.unwrap_or_else(|| self.gen_chunk(0, 1).data.select_rows(&[]));
+        StreamChunk { ids: out_ids, data }
+    }
 }
 
 /// Drift/burst knobs shared by every generator.
@@ -351,25 +389,41 @@ impl StreamSource for DriftLmSource {
 pub const ALL_STREAMS: [&str; 3] = ["drift-class", "drift-reg", "drift-lm"];
 
 /// Which model family serves each stream (mirrors `data::family_for`).
+/// `file:PATH` resolves by reading the log's header.
 pub fn family_for(name: &str) -> anyhow::Result<&'static str> {
+    if let Some(path) = name.strip_prefix("file:") {
+        let src = crate::stream::file_source::FileTailSource::open(
+            std::path::Path::new(path),
+            crate::stream::file_source::DEFAULT_LATENESS,
+        )?;
+        return Ok(src.family());
+    }
     Ok(match name {
         "drift-class" => "stream_class",
         "drift-reg" => "mlp_bike",
         "drift-lm" => "transformer",
         other => anyhow::bail!(
-            "unknown stream '{other}' (expected drift-class|drift-reg|drift-lm)"
+            "unknown stream '{other}' (expected drift-class|drift-reg|drift-lm|file:PATH)"
         ),
     })
 }
 
-/// Build a registered stream source.
+/// Build a registered stream source. `file:PATH` opens a line-delimited
+/// stream log (see `stream::file_source`) with the default lateness window;
+/// the seeded drift knobs do not apply to file feeds.
 pub fn build_source(name: &str, knobs: StreamKnobs) -> anyhow::Result<Arc<dyn StreamSource>> {
+    if let Some(path) = name.strip_prefix("file:") {
+        return Ok(Arc::new(crate::stream::file_source::FileTailSource::open(
+            std::path::Path::new(path),
+            crate::stream::file_source::DEFAULT_LATENESS,
+        )?));
+    }
     Ok(match name {
         "drift-class" => Arc::new(DriftClassSource::new(knobs)),
         "drift-reg" => Arc::new(DriftRegSource::new(knobs)),
         "drift-lm" => Arc::new(DriftLmSource::new(knobs)),
         other => anyhow::bail!(
-            "unknown stream '{other}' (expected drift-class|drift-reg|drift-lm)"
+            "unknown stream '{other}' (expected drift-class|drift-reg|drift-lm|file:PATH)"
         ),
     })
 }
@@ -444,6 +498,43 @@ mod tests {
         for t in 0..10u64 {
             assert_eq!(s.gen_chunk(t, 40).ids.len(), 40);
         }
+    }
+
+    #[test]
+    fn fetch_regenerates_exact_rows() {
+        for name in ALL_STREAMS {
+            let s = build_source(name, knobs(13)).unwrap();
+            let chunk = s.gen_chunk(9, 20);
+            // ask for a scattered subset (plus one id that never existed)
+            let want: Vec<u64> = vec![chunk.ids[2], chunk.ids[0], 9 * 20 + 19_999];
+            let got = s.fetch(&want, 20);
+            assert_eq!(got.ids, vec![chunk.ids[0], chunk.ids[2]], "{name}");
+            assert_eq!(got.data.len(), 2, "{name}");
+            got.data.validate().unwrap();
+            let expect = chunk.data.select_rows(&[0, 2]);
+            match (&got.data.x, &expect.x) {
+                (XStore::F32 { data: a, .. }, XStore::F32 { data: b, .. }) => {
+                    assert_eq!(a, b, "{name}")
+                }
+                (XStore::I32 { data: a, .. }, XStore::I32 { data: b, .. }) => {
+                    assert_eq!(a, b, "{name}")
+                }
+                _ => panic!("storage mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn fetch_spans_ticks_and_handles_empty() {
+        let s = build_source("drift-class", knobs(5)).unwrap();
+        let a = s.gen_chunk(3, 16);
+        let b = s.gen_chunk(7, 16);
+        let got = s.fetch(&[b.ids[1], a.ids[0]], 16);
+        // output is (tick, row)-ordered regardless of request order
+        assert_eq!(got.ids, vec![a.ids[0], b.ids[1]]);
+        let empty = s.fetch(&[], 16);
+        assert!(empty.ids.is_empty());
+        assert!(empty.data.is_empty());
     }
 
     #[test]

@@ -178,14 +178,20 @@ impl InstanceStore {
         }
     }
 
-    /// All live records, sorted by id (deterministic checkpoint payload).
-    pub fn snapshot(&self) -> Vec<(u64, InstanceRecord)> {
+    /// All live records in shard-internal (nondeterministic) order.
+    fn live_records(&self) -> Vec<(u64, InstanceRecord)> {
         let mut out: Vec<(u64, InstanceRecord)> = Vec::with_capacity(self.len());
         for s in &self.shards {
             let s = s.lock().unwrap();
             out.extend(s.old.iter().map(|(&id, &r)| (id, r)));
             out.extend(s.cur.iter().map(|(&id, &r)| (id, r)));
         }
+        out
+    }
+
+    /// All live records, sorted by id (deterministic checkpoint payload).
+    pub fn snapshot(&self) -> Vec<(u64, InstanceRecord)> {
+        let mut out = self.live_records();
         out.sort_unstable_by_key(|&(id, _)| id);
         out
     }
@@ -197,6 +203,54 @@ impl InstanceStore {
             s.old.remove(&id);
             self.insert_cur(&mut s, id, rec);
         }
+    }
+
+    /// Merge a peer store's snapshot (cluster gossip): freshest-tick-wins
+    /// per id, resident record kept on ties. The incoming record lands in
+    /// the current generation, so capacity stays hard-bounded through the
+    /// usual generational eviction.
+    pub fn merge(&self, entries: &[(u64, InstanceRecord)]) {
+        for &(id, rec) in entries {
+            let mut s = self.shard(id).lock().unwrap();
+            let resident = s.cur.get(&id).copied().or_else(|| s.old.get(&id).copied());
+            if let Some(r) = resident {
+                if r.last_tick >= rec.last_tick {
+                    continue;
+                }
+            }
+            s.old.remove(&id);
+            self.insert_cur(&mut s, id, rec);
+        }
+    }
+
+    /// The `n` live records with the largest losses (ties broken by id),
+    /// skipping ids in `exclude` — the replay scheduler's pick list.
+    /// Partitioning before sorting keeps the hot lull-tick path at
+    /// O(live + n log n) instead of fully sorting the store; the (loss,
+    /// id) total order makes the result deterministic regardless of
+    /// shard-iteration order.
+    pub fn top_by_loss(
+        &self,
+        n: usize,
+        exclude: &std::collections::HashSet<u64>,
+    ) -> Vec<(u64, InstanceRecord)> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let cmp = |a: &(u64, InstanceRecord), b: &(u64, InstanceRecord)| {
+            b.1.loss
+                .partial_cmp(&a.1.loss)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        };
+        let mut all = self.live_records();
+        all.retain(|(id, _)| !exclude.contains(id));
+        if all.len() > n {
+            all.select_nth_unstable_by(n - 1, cmp);
+            all.truncate(n);
+        }
+        all.sort_unstable_by(cmp);
+        all
     }
 }
 
@@ -272,6 +326,52 @@ mod tests {
             store.update(id, 0.0, 0.0, 0);
         }
         assert!(store.len() <= 8);
+    }
+
+    #[test]
+    fn merge_is_freshest_tick_wins() {
+        let a = InstanceStore::new(256, 4);
+        a.update(1, 1.0, 0.1, 5); // resident, fresher
+        a.update(2, 2.0, 0.2, 3); // resident, staler
+        a.update(3, 3.0, 0.3, 4); // resident, tie
+        let incoming = vec![
+            (1, InstanceRecord { loss: 9.0, gnorm: 9.0, last_tick: 2, visits: 7 }),
+            (2, InstanceRecord { loss: 8.0, gnorm: 8.0, last_tick: 6, visits: 7 }),
+            (3, InstanceRecord { loss: 7.0, gnorm: 7.0, last_tick: 4, visits: 7 }),
+            (4, InstanceRecord { loss: 6.0, gnorm: 6.0, last_tick: 1, visits: 7 }),
+        ];
+        a.merge(&incoming);
+        assert_eq!(a.peek(1).unwrap().loss, 1.0, "stale gossip overwrote");
+        assert_eq!(a.peek(2).unwrap().loss, 8.0, "fresher gossip ignored");
+        assert_eq!(a.peek(3).unwrap().loss, 3.0, "tie must keep resident");
+        assert_eq!(a.peek(4).unwrap().loss, 6.0, "new id not inserted");
+    }
+
+    #[test]
+    fn merge_respects_capacity() {
+        let a = InstanceStore::new(16, 2);
+        let big: Vec<(u64, InstanceRecord)> = (0..1000u64)
+            .map(|id| (id, InstanceRecord { loss: 1.0, gnorm: 1.0, last_tick: 9, visits: 1 }))
+            .collect();
+        a.merge(&big);
+        assert!(a.len() <= a.capacity(), "{}/{}", a.len(), a.capacity());
+    }
+
+    #[test]
+    fn top_by_loss_orders_and_excludes() {
+        let s = InstanceStore::new(256, 4);
+        for id in 0..10u64 {
+            s.update(id, id as f32, 0.0, 1);
+        }
+        let none = std::collections::HashSet::new();
+        let top = s.top_by_loss(3, &none);
+        assert_eq!(top.iter().map(|&(id, _)| id).collect::<Vec<_>>(), vec![9, 8, 7]);
+        let mut skip = std::collections::HashSet::new();
+        skip.insert(9u64);
+        skip.insert(7u64);
+        let top = s.top_by_loss(3, &skip);
+        assert_eq!(top.iter().map(|&(id, _)| id).collect::<Vec<_>>(), vec![8, 6, 5]);
+        assert!(s.top_by_loss(100, &none).len() == 10);
     }
 
     #[test]

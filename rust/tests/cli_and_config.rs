@@ -185,6 +185,53 @@ fn binary_streams_on_native_backend() {
 }
 
 #[test]
+fn binary_clusters_on_native_backend() {
+    // the multi-node subcommand end to end through the CLI, churn included
+    let bin = env!("CARGO_BIN_EXE_adaselection");
+    let out_dir = std::env::temp_dir().join(format!("ada_cli_cluster_{}", std::process::id()));
+    let out = std::process::Command::new(bin)
+        .args([
+            "cluster",
+            "--nodes",
+            "2",
+            "--max-ticks",
+            "30",
+            "--gossip-every",
+            "8",
+            "--merge-every",
+            "8",
+            "--kill-at",
+            "12",
+            "--kill-node",
+            "1",
+            "--join-at",
+            "18",
+            "--window",
+            "10",
+            "--workers",
+            "0",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("cluster result"), "{stdout}");
+    assert!(stdout.contains("remapped"), "{stdout}");
+    assert!(out_dir.join("cluster_rolling.csv").exists());
+    assert!(out_dir.join("cluster_nodes.csv").exists());
+
+    // cluster + checkpoint is rejected up front
+    let out = std::process::Command::new(bin)
+        .args(["cluster", "--checkpoint", "/tmp/ck.json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
 fn backend_flag_round_trips_through_config() {
     let a = parse("train --backend xla --dataset simple");
     let mut cfg = RunConfig::default();

@@ -1,0 +1,155 @@
+//! Property tests for the consistent-hash ring: load balance at 128
+//! virtual nodes, and the minimal-remap guarantee under single-node
+//! join/leave — the bound that makes cluster churn cheap.
+
+use std::collections::HashMap;
+
+use adaselection::cluster::{HashRing, NodeId};
+use adaselection::testutil::prop::prop_check;
+use adaselection::util::rng::Pcg64;
+
+const VNODES: usize = 128;
+const KEYS: u64 = 4096;
+
+/// A random ring: seed plus 2..=8 member nodes (non-contiguous ids).
+fn gen_ring(rng: &mut Pcg64) -> (u64, Vec<NodeId>) {
+    let seed = rng.next_u64();
+    let n = 2 + rng.next_below(7) as usize;
+    // scatter the ids so nothing depends on dense 0..n numbering
+    let ids: Vec<NodeId> = (0..n).map(|i| i * 3 + rng.next_below(3) as usize * 100).collect();
+    (seed, ids)
+}
+
+fn loads(ring: &HashRing, keys: u64) -> HashMap<NodeId, u64> {
+    let mut m = HashMap::new();
+    for k in 0..keys {
+        *m.entry(ring.owner(k)).or_insert(0) += 1;
+    }
+    m
+}
+
+#[test]
+fn balance_max_over_mean_is_bounded_at_128_vnodes() {
+    prop_check(
+        "ring-balance",
+        0xba1a_4ce5,
+        30,
+        gen_ring,
+        |(seed, ids)| {
+            let ring = HashRing::with_nodes(*seed, VNODES, ids.iter().copied());
+            let loads = loads(&ring, KEYS);
+            let mean = KEYS as f64 / ids.len() as f64;
+            for &id in ids {
+                let l = *loads.get(&id).unwrap_or(&0) as f64;
+                if l > 1.6 * mean {
+                    return Err(format!(
+                        "node {id} overloaded: {l} vs mean {mean:.1} ({} nodes)",
+                        ids.len()
+                    ));
+                }
+                if l < 0.45 * mean {
+                    return Err(format!(
+                        "node {id} starved: {l} vs mean {mean:.1} ({} nodes)",
+                        ids.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn join_moves_only_keys_to_the_newcomer_and_few_of_them() {
+    prop_check(
+        "ring-join-minimal-remap",
+        0x10b1_77aa,
+        30,
+        gen_ring,
+        |(seed, ids)| {
+            let before = HashRing::with_nodes(*seed, VNODES, ids.iter().copied());
+            let newcomer: NodeId = 7777;
+            let mut after = before.clone();
+            after.add_node(newcomer);
+            let n = ids.len() as f64;
+            let mut moved = 0u64;
+            for k in 0..KEYS {
+                let (a, b) = (before.owner(k), after.owner(k));
+                if a != b {
+                    moved += 1;
+                    if b != newcomer {
+                        return Err(format!(
+                            "key {k} shuffled between survivors: {a} -> {b}"
+                        ));
+                    }
+                }
+            }
+            // ≈ K/(N+1) expected; 1.5x + constant slack covers vnode noise
+            let bound = (KEYS as f64 / (n + 1.0)) * 1.5 + 64.0;
+            if (moved as f64) > bound {
+                return Err(format!(
+                    "join remapped {moved} of {KEYS} keys (bound {bound:.0}, {} nodes)",
+                    ids.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn leave_moves_only_the_departed_nodes_keys_and_few_of_them() {
+    prop_check(
+        "ring-leave-minimal-remap",
+        0x1eaf_0042,
+        30,
+        gen_ring,
+        |(seed, ids)| {
+            let before = HashRing::with_nodes(*seed, VNODES, ids.iter().copied());
+            let victim = ids[0];
+            let mut after = before.clone();
+            after.remove_node(victim);
+            let n = ids.len() as f64;
+            let mut moved = 0u64;
+            for k in 0..KEYS {
+                let (a, b) = (before.owner(k), after.owner(k));
+                if a != b {
+                    moved += 1;
+                    if a != victim {
+                        return Err(format!(
+                            "key {k} shuffled between survivors: {a} -> {b}"
+                        ));
+                    }
+                    if b == victim {
+                        return Err(format!("key {k} still owned by removed node"));
+                    }
+                }
+            }
+            let bound = (KEYS as f64 / n) * 1.5 + 64.0;
+            if (moved as f64) > bound {
+                return Err(format!(
+                    "leave remapped {moved} of {KEYS} keys (bound {bound:.0}, {} nodes)",
+                    ids.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn remap_fraction_matches_direct_count() {
+    let a = HashRing::with_nodes(3, VNODES, 0..4);
+    let mut b = a.clone();
+    b.add_node(4);
+    let frac = HashRing::remap_fraction(&a, &b, KEYS);
+    let mut moved = 0u64;
+    for k in 0..KEYS {
+        if a.owner(k) != b.owner(k) {
+            moved += 1;
+        }
+    }
+    assert!((frac - moved as f64 / KEYS as f64).abs() < 1e-12);
+    // a fifth of the keys, give or take vnode noise
+    assert!(frac > 0.08 && frac < 0.35, "remap fraction {frac}");
+}

@@ -87,11 +87,26 @@ fn fig6_bike_regression_sweep_aggregates() {
 }
 
 #[test]
+fn cluster_cmp_emits_scaling_summary() {
+    let mut backend = NativeBackend::new();
+    let o = opts("cluster_cmp");
+    run_experiment_with(&mut backend, "cluster-cmp", &o).unwrap();
+    let t = read_csv(&o.out_dir.join("cluster_cmp_summary.csv"));
+    assert_eq!(t[0][0], "nodes");
+    assert_eq!(t.len(), 3, "quick mode runs 1 and 2 nodes");
+    assert_eq!(t[1][0], "1");
+    assert_eq!(t[2][0], "2");
+    // loss delta vs the single node is reported as a signed percentage
+    assert!(t[2][2].starts_with('+') || t[2][2].starts_with('-'));
+    assert!(o.out_dir.join("cluster_cmp_trace.csv").exists());
+}
+
+#[test]
 fn registry_ids_all_resolve() {
     // only validate dispatch: unknown id errors, known ids exist in match
     let o = SweepOptions::default();
     assert!(run_experiment("nope", &o).is_err());
-    assert_eq!(registry().len(), 17);
+    assert_eq!(registry().len(), 18);
 }
 
 #[test]
