@@ -69,5 +69,43 @@ fn main() {
         });
     }
 
+    // gossip bandwidth: full snapshots vs delta gossip at 4 nodes over the
+    // same traffic (wire bytes via cluster::wire::frame_len, identical for
+    // loopback and tcp runs)
+    println!("\n## gossip bandwidth (drift-class, 4 nodes, {ticks} ticks)");
+    println!(
+        "{:<10} {:>14} {:>14} {:>14}",
+        "gossip", "gossip bytes", "merge bytes", "gossip B/tick"
+    );
+    for mode in ["full", "delta"] {
+        let mut cfg = ClusterConfig::default();
+        cfg.nodes = 4;
+        cfg.gossip = mode.into();
+        cfg.gossip_every = 8;
+        cfg.merge_every = 8;
+        cfg.stream.dataset = "drift-class".into();
+        cfg.stream.gamma = 0.5;
+        cfg.stream.max_ticks = ticks;
+        cfg.stream.eval_every = 0;
+        cfg.stream.burst_period = 0;
+        cfg.stream.window = 50;
+        cfg.stream.workers = 1;
+        let r = cluster::run(&cfg).expect("cluster bandwidth run");
+        let per_tick = r.gossip_bytes as f64 / ticks as f64;
+        println!(
+            "{:<10} {:>14} {:>14} {:>14.0}",
+            mode, r.gossip_bytes, r.merge_bytes, per_tick
+        );
+        // *_ns fields carry bytes/tick here — the name says so; the point
+        // is tracking the bandwidth trajectory across PRs in BENCH json
+        results.push(BenchResult {
+            name: format!("cluster gossip bytes per tick (4 nodes, {mode})"),
+            iters: ticks,
+            median_ns: per_tick,
+            p95_ns: per_tick,
+            mean_ns: per_tick,
+        });
+    }
+
     write_json("cluster", &results).expect("write BENCH_cluster.json");
 }

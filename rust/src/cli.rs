@@ -80,8 +80,9 @@ COMMANDS:
                       --drift-detect on|off --replay on|off
                       --checkpoint FILE [--checkpoint-every N] [--resume]
                       --config FILE --out DIR
-  cluster             multi-node sharded streaming training (in-process)
+  cluster             multi-node sharded streaming training
                       --nodes N --vnodes N --gossip-every N --merge-every N
+                      --transport loopback|tcp --gossip full|delta
                       [--kill-at T --kill-node I] [--join-at T]
                       plus all stream options; native backend only
   sweep               reproduce a paper experiment

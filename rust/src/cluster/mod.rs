@@ -7,8 +7,12 @@
 //!     [`ring::RingSchedule`] that compiles a churn schedule into
 //!     ownership epochs;
 //!   * [`transport`] — the [`transport::Transport`] trait with the
-//!     deterministic in-process [`transport::Loopback`] implementation
-//!     (loopback TCP is a planned follow-on behind the same trait);
+//!     deterministic in-process [`transport::Loopback`] implementation;
+//!   * [`tcp`] — the same trait over 127.0.0.1 sockets ([`tcp::Tcp`]),
+//!     acked frame writes keeping drain order identical to loopback;
+//!   * [`wire`] — the versioned, checksummed, length-prefixed frame
+//!     format both gossip and merge messages travel in (bitwise-exact
+//!     float round-trips, so TCP runs stay deterministic);
 //!   * [`node`] — [`node::ClusterNode`]: one worker's backend + model
 //!     state + `TickEngine` + pipeline loader over its ring partition;
 //!   * [`trainer`] — the coordinator: scoped-thread segments between sync
@@ -17,15 +21,19 @@
 //!     remapping.
 //!
 //! CLI surface: `adaselection cluster --nodes 4 --max-ticks 400
+//! [--transport loopback|tcp] [--gossip full|delta]
 //! [--gossip-every N] [--merge-every N] [--kill-at T --kill-node I]
 //! [--join-at T]`.
 
 pub mod node;
 pub mod ring;
+pub mod tcp;
 pub mod trainer;
 pub mod transport;
+pub mod wire;
 
 pub use node::{ClusterNode, NodePreq, PartitionProducer};
 pub use ring::{HashRing, NodeId, RingSchedule};
+pub use tcp::Tcp;
 pub use trainer::{run, ClusterResult, NodeSummary};
 pub use transport::{Loopback, Message, Transport};

@@ -203,12 +203,19 @@ impl<B: Backend> ClusterNode<B> {
         std::mem::take(&mut self.preq)
     }
 
-    /// This node's store-gossip message.
-    pub fn gossip_message(&self) -> Message {
-        Message::StoreGossip {
-            from: self.id,
-            entries: std::sync::Arc::new(self.engine.store.snapshot()),
-        }
+    /// This node's store-gossip message: the full live snapshot, or (delta
+    /// gossip) only the entries touched since the last sync. A full
+    /// snapshot also clears the dirty marks — everything live was just
+    /// shared, so re-sending it as a delta would only echo.
+    pub fn gossip_message(&self, full: bool) -> Message {
+        let entries = if full {
+            let snap = self.engine.store.snapshot();
+            self.engine.store.clear_dirty();
+            snap
+        } else {
+            self.engine.store.take_dirty()
+        };
+        Message::StoreGossip { from: self.id, entries: Arc::new(entries) }
     }
 
     /// This node's merge material: exported tensors + policy snapshot,

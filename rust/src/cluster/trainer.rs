@@ -36,7 +36,9 @@ use std::sync::Arc;
 
 use crate::cluster::node::ClusterNode;
 use crate::cluster::ring::{HashRing, NodeId, RingSchedule};
+use crate::cluster::tcp::Tcp;
 use crate::cluster::transport::{Loopback, Message, Transport};
+use crate::cluster::wire;
 use crate::config::ClusterConfig;
 use crate::metrics::rolling::{RollingPoint, RollingWindow};
 use crate::runtime::{average_states, Backend, NativeBackend, TaskKind, Tensor};
@@ -51,6 +53,11 @@ use crate::util::timer::{PhaseTimer, Stopwatch};
 
 /// Keys sampled when measuring churn remap fractions.
 const REMAP_SAMPLE: u64 = 4096;
+
+/// In delta-gossip mode, every K-th gossip round (and every join round)
+/// still ships full snapshots so peers that evicted entries — or joined
+/// late — reconverge on the cluster-wide statistics.
+const FULL_GOSSIP_EVERY: u64 = 8;
 
 /// Per-node accounting in the run report.
 #[derive(Clone, Debug)]
@@ -83,6 +90,12 @@ pub struct ClusterResult {
     pub samples_per_sec: f64,
     pub gossip_rounds: u64,
     pub merges: u64,
+    /// wire bytes of every store-gossip frame sent (computed with
+    /// [`wire::frame_len`] for *all* transports, so a loopback run reports
+    /// exactly the bandwidth a socket run ships)
+    pub gossip_bytes: u64,
+    /// wire bytes of every model/policy merge frame sent
+    pub merge_bytes: u64,
     /// live store records summed over surviving nodes
     pub store_live_total: usize,
     /// per churn event: (tick, fraction of sampled keys that changed owner)
@@ -182,6 +195,9 @@ fn make_engine(
         }
     }
     let store = InstanceStore::new(s.store_capacity, s.store_shards);
+    if cfg.gossip == "delta" {
+        store.enable_dirty_tracking();
+    }
     let mut engine = TickEngine::new(policy, store, s.gamma, s.lr, chunk_rows);
     if s.drift_detect && !engine.policy.is_benchmark() {
         engine.drift = Some(DriftGamma::default());
@@ -208,23 +224,33 @@ fn run_segment(nodes: &mut [ClusterNode<NativeBackend>], end: u64) -> anyhow::Re
     Ok(())
 }
 
-/// One gossip round: every alive node broadcasts its store snapshot (in
-/// node-id order) and merges what it received, freshest-tick-wins.
+/// One gossip round: every alive node broadcasts its store entries (full
+/// snapshot or dirty delta, in node-id order) and merges what it
+/// received, freshest-tick-wins. Returns the wire bytes sent.
 fn gossip_stores(
     nodes: &mut [ClusterNode<NativeBackend>],
-    transport: &Loopback,
-) -> anyhow::Result<()> {
+    transport: &dyn Transport,
+    full: bool,
+) -> anyhow::Result<u64> {
     let ids: Vec<NodeId> = nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
     if ids.len() < 2 {
-        return Ok(());
+        return Ok(0);
     }
+    let mut bytes = 0u64;
     for n in nodes.iter().filter(|n| n.alive) {
-        let msg = n.gossip_message();
-        for &to in &ids {
-            if to != n.id {
-                transport.send(to, msg.clone())?;
+        let msg = n.gossip_message(full);
+        // a quiet shard's delta is empty: merging it is a no-op, so skip
+        // the frames (and, over TCP, the per-peer ack round-trips)
+        if !full {
+            if let Message::StoreGossip { entries, .. } = &msg {
+                if entries.is_empty() {
+                    continue;
+                }
             }
         }
+        let peers: Vec<NodeId> = ids.iter().copied().filter(|&to| to != n.id).collect();
+        transport.broadcast(&peers, &msg)?;
+        bytes += wire::frame_len(&msg) as u64 * peers.len() as u64;
     }
     for n in nodes.iter_mut().filter(|n| n.alive) {
         for m in transport.drain(n.id) {
@@ -233,7 +259,7 @@ fn gossip_stores(
             }
         }
     }
-    Ok(())
+    Ok(bytes)
 }
 
 /// Merge material accumulated from `Message::State`s — the single owner
@@ -278,26 +304,26 @@ impl MergeMaterial {
 /// average over the identical, id-ordered message set — so all nodes
 /// leave the barrier bit-identical. Every node averaging for itself is
 /// deliberate (decentralized semantics a socket transport keeps); at
-/// in-process scale the redundant arithmetic is noise.
+/// in-process scale the redundant arithmetic is noise. Returns the wire
+/// bytes sent.
 fn merge_models(
     nodes: &mut [ClusterNode<NativeBackend>],
-    transport: &Loopback,
-) -> anyhow::Result<()> {
+    transport: &dyn Transport,
+) -> anyhow::Result<u64> {
     let ids: Vec<NodeId> = nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
     if ids.len() < 2 {
-        return Ok(());
+        return Ok(0);
     }
     // export once per node, broadcast to peers, keep the original for self
     let mut own: BTreeMap<NodeId, Message> = BTreeMap::new();
     for n in nodes.iter().filter(|n| n.alive) {
         own.insert(n.id, n.state_message()?);
     }
+    let mut bytes = 0u64;
     for (&from, msg) in &own {
-        for &to in &ids {
-            if to != from {
-                transport.send(to, msg.clone())?;
-            }
-        }
+        let peers: Vec<NodeId> = ids.iter().copied().filter(|&to| to != from).collect();
+        transport.broadcast(&peers, msg)?;
+        bytes += wire::frame_len(msg) as u64 * peers.len() as u64;
     }
     for n in nodes.iter_mut().filter(|n| n.alive) {
         let mut msgs = transport.drain(n.id);
@@ -310,7 +336,7 @@ fn merge_models(
         let (avg, snap) = mat.merged()?;
         n.apply_merged(&avg, snap.as_ref())?;
     }
-    Ok(())
+    Ok(bytes)
 }
 
 /// The merged cluster state a joining node boots from.
@@ -384,7 +410,11 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
     let classification = meta.task != TaskKind::Regression;
 
     let (rings, remaps) = build_ring_schedule(cfg);
-    let transport = Loopback::new();
+    let transport: Box<dyn Transport> = match cfg.transport.as_str() {
+        "tcp" => Box::new(Tcp::new()),
+        _ => Box::new(Loopback::new()),
+    };
+    let delta_gossip = cfg.gossip == "delta";
     // per-node replay budget: the node's fair share of ⌈γB⌉
     let replay_budget =
         (((s.gamma * b as f64) / cfg.nodes as f64).ceil() as usize).clamp(1, b);
@@ -414,7 +444,7 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
     }
 
     log::info!(
-        "cluster start: nodes={} vnodes={} stream={} γ={} B={} ticks={} gossip={} merge={} kill@{} join@{}",
+        "cluster start: nodes={} vnodes={} stream={} γ={} B={} ticks={} gossip={}({}) merge={} transport={} kill@{} join@{}",
         cfg.nodes,
         cfg.vnodes,
         s.dataset,
@@ -422,7 +452,9 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
         b,
         s.max_ticks,
         cfg.gossip_every,
+        cfg.gossip,
         cfg.merge_every,
+        cfg.transport,
         cfg.kill_at,
         cfg.join_at
     );
@@ -432,6 +464,8 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
     let mut rolling: Vec<RollingPoint> = Vec::new();
     let mut gossip_rounds = 0u64;
     let mut merges = 0u64;
+    let mut gossip_bytes = 0u64;
+    let mut merge_bytes = 0u64;
     let clock = Stopwatch::new();
 
     for &sync in &sync_points(cfg) {
@@ -473,8 +507,9 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
                 s.workers,
                 s.capacity,
             ));
-            // seed the newcomer's store right away
-            gossip_stores(&mut nodes, &transport)?;
+            // seed the newcomer's store right away — always with full
+            // snapshots, whatever the steady-state gossip mode
+            gossip_bytes += gossip_stores(&mut nodes, transport.as_ref(), true)?;
             gossip_rounds += 1;
             did_gossip = true;
             log::info!("cluster: node {id} joined at tick {sync}");
@@ -485,11 +520,12 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
                 && cfg.gossip_every > 0
                 && sync % cfg.gossip_every as u64 == 0
             {
-                gossip_stores(&mut nodes, &transport)?;
+                let full = !delta_gossip || gossip_rounds % FULL_GOSSIP_EVERY == 0;
+                gossip_bytes += gossip_stores(&mut nodes, transport.as_ref(), full)?;
                 gossip_rounds += 1;
             }
             if cfg.merge_every > 0 && sync % cfg.merge_every as u64 == 0 {
-                merge_models(&mut nodes, &transport)?;
+                merge_bytes += merge_models(&mut nodes, transport.as_ref())?;
                 merges += 1;
             }
         }
@@ -543,6 +579,8 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
         samples_per_sec: samples_seen as f64 / elapsed.max(1e-9),
         gossip_rounds,
         merges,
+        gossip_bytes,
+        merge_bytes,
         store_live_total,
         remaps,
         node_summaries: summaries,
@@ -622,5 +660,27 @@ mod tests {
         let expect: u64 = (0..24u64).map(|t| source.gen_chunk(t, 128).ids.len() as u64).sum();
         assert_eq!(r.samples_seen, expect);
         assert!(r.merges >= 1 && r.gossip_rounds >= 1);
+        assert!(r.gossip_bytes > 0 && r.merge_bytes > 0, "wire accounting missing");
+    }
+
+    #[test]
+    fn tcp_delta_smoke_matches_loopback_full() {
+        let base = run(&quick_cfg(2, 24)).unwrap();
+        let mut cfg = quick_cfg(2, 24);
+        cfg.transport = "tcp".into();
+        cfg.gossip = "delta".into();
+        let r = run(&cfg).unwrap();
+        // a corrupted wire path would skew the merged weights and with
+        // them the selection sequence — digest equality covers it
+        assert_eq!(r.digest, base.digest, "tcp/delta run diverged");
+        assert_eq!(r.samples_trained, base.samples_trained);
+        assert!(r.gossip_bytes > 0);
+        assert!(
+            r.gossip_bytes < base.gossip_bytes,
+            "delta gossip must ship fewer bytes: {} vs {}",
+            r.gossip_bytes,
+            base.gossip_bytes
+        );
+        assert_eq!(r.merge_bytes, base.merge_bytes, "merges are mode-independent");
     }
 }

@@ -6,8 +6,10 @@
 //! between sync barriers. [`Loopback`] is the reference transport: a
 //! per-node mailbox behind one mutex, draining in insertion order, so a
 //! coordinator that sends in node-id order makes the whole exchange
-//! deterministic. A socket transport can implement the same trait later
-//! (ROADMAP follow-on) without touching the node or coordinator logic.
+//! deterministic. [`Tcp`](crate::cluster::tcp::Tcp) implements the same
+//! trait over 127.0.0.1 sockets (acked frame writes keep arrival order
+//! identical), so the node and coordinator code is transport-agnostic.
+//! `tests/transport_conformance.rs` pins the shared contract for both.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -48,17 +50,46 @@ impl Message {
 }
 
 /// Reliable, ordered delivery between cluster sync barriers.
+///
+/// Contract (deliberately asymmetric, pinned for every implementation by
+/// `tests/transport_conformance.rs`):
+///
+///   * `send` to a node that is not registered is an **error** — the
+///     coordinator always knows its peers, so an unknown destination is a
+///     bug worth surfacing;
+///   * `drain` of a node that is not registered returns **empty** — after
+///     a kill the coordinator may still sweep the victim's id in a
+///     barrier loop without special-casing dead nodes;
+///   * `send` returns only once the message is in the destination
+///     mailbox, so sequential sends drain in send order (per-sender FIFO
+///     under concurrency) and `register`/`unregister` are linearized with
+///     respect to completed sends.
 pub trait Transport: Send + Sync {
-    /// Open a mailbox for `node` (idempotent).
+    /// Open a mailbox for `node`. Idempotent: re-registering an open node
+    /// must keep its queued mail.
     fn register(&self, node: NodeId);
 
     /// Close a node's mailbox, dropping anything queued (node kill).
+    /// Subsequent `send`s to it error; subsequent `drain`s return empty.
     fn unregister(&self, node: NodeId);
 
-    /// Queue `msg` for `node`. Errors when the destination is unknown.
+    /// Queue `msg` for `node`. Errors when the destination is unknown
+    /// (never registered, or unregistered).
     fn send(&self, to: NodeId, msg: Message) -> anyhow::Result<()>;
 
-    /// Drain `node`'s mailbox in arrival order (empty when unknown).
+    /// Deliver one message to every node in `to`, in order. Semantically
+    /// identical to looping [`Transport::send`] (the default does exactly
+    /// that); implementations that serialize may encode the frame once
+    /// for the whole fan-out.
+    fn broadcast(&self, to: &[NodeId], msg: &Message) -> anyhow::Result<()> {
+        for &node in to {
+            self.send(node, msg.clone())?;
+        }
+        Ok(())
+    }
+
+    /// Drain `node`'s mailbox in arrival order, emptying it. An unknown
+    /// node yields an empty vec (see the trait-level contract).
     fn drain(&self, node: NodeId) -> Vec<Message>;
 }
 

@@ -1,0 +1,704 @@
+//! Length-prefixed binary wire format for cluster [`Message`]s.
+//!
+//! Every frame is:
+//!
+//! ```text
+//! magic    u16  = 0xAD51          (little-endian, like every field)
+//! version  u8   = 1
+//! len      u32  — payload bytes that follow
+//! payload  [u8; len]
+//! checksum u32  — FNV-1a-32 over the payload
+//! ```
+//!
+//! The payload starts with a one-byte message tag. Floats are carried as
+//! raw IEEE-754 little-endian bytes, so a `Message` round-trips *bitwise*
+//! — the TCP transport is exactly as deterministic as the in-process
+//! loopback. Decoding is total: truncated frames, bad magic/version,
+//! checksum mismatches, absurd length prefixes and malformed payloads all
+//! return errors, never panic, so a misbehaving peer cannot take a node
+//! down.
+//!
+//! [`frame_len`] computes a message's on-wire size without encoding it;
+//! the coordinator uses it to report gossip/merge bandwidth for *every*
+//! transport (a loopback run reports the bytes a socket run would ship).
+
+use std::io::Read;
+use std::sync::Arc;
+
+use crate::cluster::ring::NodeId;
+use crate::cluster::transport::Message;
+use crate::runtime::Tensor;
+use crate::selection::AdaSnapshot;
+use crate::stream::InstanceRecord;
+
+/// Frame magic ("AdaSelection wire").
+pub const MAGIC: u16 = 0xAD51;
+/// Current wire-format version; bumped on any layout change.
+pub const VERSION: u8 = 1;
+/// Bytes before the payload: magic (2) + version (1) + length (4).
+pub const HEADER_LEN: usize = 7;
+/// Bytes after the payload: the FNV-1a-32 checksum.
+pub const TRAILER_LEN: usize = 4;
+/// Largest accepted payload (64 MiB) — rejects absurd length prefixes
+/// before any allocation happens.
+pub const MAX_PAYLOAD: usize = 64 << 20;
+
+const TAG_GOSSIP: u8 = 0;
+const TAG_STATE: u8 = 1;
+/// Encoded bytes per store-gossip entry: id + loss + gnorm + tick + visits.
+const ENTRY_LEN: usize = 24;
+/// Decode-side sanity bounds (far above anything the cluster produces).
+const MAX_RANK: usize = 8;
+const MAX_TENSORS: usize = 4096;
+
+/// FNV-1a over the payload — cheap, endian-free, catches the bit flips and
+/// short writes a length-prefixed stream protocol cares about.
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Exact payload size of `msg` (no allocation).
+pub fn payload_len(msg: &Message) -> usize {
+    match msg {
+        Message::StoreGossip { entries, .. } => 1 + 8 + 4 + entries.len() * ENTRY_LEN,
+        Message::State { tensors, policy, .. } => {
+            let mut n = 1 + 8 + 8 + 4;
+            for t in tensors {
+                n += 4 + 4 * t.shape.len() + 4 + 4 * t.data.len();
+            }
+            n += 1; // policy flag
+            if let Some(p) = policy {
+                n += 4 + 4 * p.w.len() + 1 + 8;
+                if let Some(v) = &p.prev_loss {
+                    n += 4 + 4 * v.len();
+                }
+            }
+            n
+        }
+    }
+}
+
+/// Exact on-wire size of `msg`'s frame (header + payload + checksum).
+pub fn frame_len(msg: &Message) -> usize {
+    HEADER_LEN + payload_len(msg) + TRAILER_LEN
+}
+
+/// Most store entries one gossip frame can carry without its payload
+/// exceeding [`MAX_PAYLOAD`]. Config validation caps `store-capacity`
+/// with this for TCP clusters, so a full-snapshot gossip always fits one
+/// frame (~2.79M entries — far above any practical store).
+pub fn max_gossip_entries() -> usize {
+    (MAX_PAYLOAD - (1 + 8 + 4)) / ENTRY_LEN
+}
+
+/// Encode-side guard mirroring every decode-side bound, so a message the
+/// peer would reject fails at the *sender* with a clear error instead of
+/// poisoning the connection. Transports call this before [`encode`].
+pub fn check_encodable(msg: &Message) -> anyhow::Result<()> {
+    if let Message::State { tensors, .. } = msg {
+        anyhow::ensure!(
+            tensors.len() <= MAX_TENSORS,
+            "wire: message carries {} tensors (max {MAX_TENSORS})",
+            tensors.len()
+        );
+        for t in tensors {
+            anyhow::ensure!(
+                t.shape.len() <= MAX_RANK,
+                "wire: tensor rank {} exceeds {MAX_RANK}",
+                t.shape.len()
+            );
+            let product = t
+                .shape
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .ok_or_else(|| anyhow::anyhow!("wire: tensor shape {:?} overflows", t.shape))?;
+            anyhow::ensure!(
+                product == t.data.len(),
+                "wire: tensor shape {:?} does not match data length {}",
+                t.shape,
+                t.data.len()
+            );
+        }
+    }
+    let len = payload_len(msg);
+    anyhow::ensure!(len <= MAX_PAYLOAD, "wire: message payload {len} exceeds {MAX_PAYLOAD} bytes");
+    Ok(())
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn encode_payload(msg: &Message) -> Vec<u8> {
+    let mut b = Vec::with_capacity(payload_len(msg));
+    match msg {
+        Message::StoreGossip { from, entries } => {
+            b.push(TAG_GOSSIP);
+            put_u64(&mut b, *from as u64);
+            put_u32(&mut b, entries.len() as u32);
+            for &(id, r) in entries.iter() {
+                put_u64(&mut b, id);
+                put_f32(&mut b, r.loss);
+                put_f32(&mut b, r.gnorm);
+                put_u32(&mut b, r.last_tick);
+                put_u32(&mut b, r.visits);
+            }
+        }
+        Message::State { from, weight, tensors, policy } => {
+            b.push(TAG_STATE);
+            put_u64(&mut b, *from as u64);
+            put_f64(&mut b, *weight);
+            put_u32(&mut b, tensors.len() as u32);
+            for t in tensors {
+                put_u32(&mut b, t.shape.len() as u32);
+                for &d in &t.shape {
+                    put_u32(&mut b, d as u32);
+                }
+                put_u32(&mut b, t.data.len() as u32);
+                for &x in &t.data {
+                    put_f32(&mut b, x);
+                }
+            }
+            match policy {
+                None => b.push(0),
+                Some(p) => {
+                    b.push(1);
+                    put_u32(&mut b, p.w.len() as u32);
+                    for &x in &p.w {
+                        put_f32(&mut b, x);
+                    }
+                    match &p.prev_loss {
+                        None => b.push(0),
+                        Some(v) => {
+                            b.push(1);
+                            put_u32(&mut b, v.len() as u32);
+                            for &x in v {
+                                put_f32(&mut b, x);
+                            }
+                        }
+                    }
+                    put_u64(&mut b, p.t as u64);
+                }
+            }
+        }
+    }
+    b
+}
+
+/// Encode one message as a complete frame.
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    debug_assert_eq!(payload.len(), payload_len(msg), "frame_len model drifted");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&fnv1a32(&payload).to_le_bytes());
+    out
+}
+
+/// Validate a header slice (≥ [`HEADER_LEN`] bytes); returns the payload
+/// length.
+fn parse_header(h: &[u8]) -> anyhow::Result<usize> {
+    let magic = u16::from_le_bytes([h[0], h[1]]);
+    anyhow::ensure!(magic == MAGIC, "wire: bad magic {magic:#06x} (want {MAGIC:#06x})");
+    anyhow::ensure!(
+        h[2] == VERSION,
+        "wire: version mismatch: peer speaks v{}, this node v{VERSION}",
+        h[2]
+    );
+    let len = u32::from_le_bytes([h[3], h[4], h[5], h[6]]) as usize;
+    anyhow::ensure!(len <= MAX_PAYLOAD, "wire: payload length {len} exceeds {MAX_PAYLOAD}");
+    Ok(len)
+}
+
+/// Bounds-checked payload reader.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.remaining() >= n,
+            "wire: payload truncated at byte {} (need {n} more)",
+            self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> anyhow::Result<Vec<f32>> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("wire: float vector length {n} overflows"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "wire: {} trailing payload bytes",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+fn decode_payload(payload: &[u8]) -> anyhow::Result<Message> {
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let msg = match c.u8()? {
+        TAG_GOSSIP => {
+            let from = c.u64()? as NodeId;
+            let n = c.u32()? as usize;
+            anyhow::ensure!(
+                n.saturating_mul(ENTRY_LEN) <= c.remaining(),
+                "wire: gossip entry count {n} exceeds the payload"
+            );
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let id = c.u64()?;
+                let loss = c.f32()?;
+                let gnorm = c.f32()?;
+                let last_tick = c.u32()?;
+                let visits = c.u32()?;
+                entries.push((id, InstanceRecord { loss, gnorm, last_tick, visits }));
+            }
+            Message::StoreGossip { from, entries: Arc::new(entries) }
+        }
+        TAG_STATE => {
+            let from = c.u64()? as NodeId;
+            let weight = c.f64()?;
+            let n_tensors = c.u32()? as usize;
+            anyhow::ensure!(n_tensors <= MAX_TENSORS, "wire: tensor count {n_tensors} exceeds {MAX_TENSORS}");
+            let mut tensors = Vec::with_capacity(n_tensors);
+            for _ in 0..n_tensors {
+                let rank = c.u32()? as usize;
+                anyhow::ensure!(rank <= MAX_RANK, "wire: tensor rank {rank} exceeds {MAX_RANK}");
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(c.u32()? as usize);
+                }
+                let data_len = c.u32()? as usize;
+                let product = shape
+                    .iter()
+                    .try_fold(1usize, |a, &d| a.checked_mul(d))
+                    .ok_or_else(|| anyhow::anyhow!("wire: tensor shape {shape:?} overflows"))?;
+                anyhow::ensure!(
+                    data_len == product,
+                    "wire: tensor data length {data_len} != shape product {product}"
+                );
+                let data = c.f32_vec(data_len)?;
+                tensors.push(Tensor { shape, data });
+            }
+            let policy = match c.u8()? {
+                0 => None,
+                1 => {
+                    let wn = c.u32()? as usize;
+                    let w = c.f32_vec(wn)?;
+                    let prev_loss = match c.u8()? {
+                        0 => None,
+                        1 => {
+                            let pn = c.u32()? as usize;
+                            Some(c.f32_vec(pn)?)
+                        }
+                        other => anyhow::bail!("wire: bad prev-loss flag {other}"),
+                    };
+                    let t = c.u64()? as usize;
+                    Some(AdaSnapshot { w, prev_loss, t })
+                }
+                other => anyhow::bail!("wire: bad policy flag {other}"),
+            };
+            Message::State { from, weight, tensors, policy }
+        }
+        other => anyhow::bail!("wire: unknown message tag {other}"),
+    };
+    c.done()?;
+    Ok(msg)
+}
+
+/// Decode exactly one complete frame from `buf` (length must match the
+/// frame exactly — shorter is truncation, longer is trailing garbage).
+pub fn decode(buf: &[u8]) -> anyhow::Result<Message> {
+    anyhow::ensure!(
+        buf.len() >= HEADER_LEN + TRAILER_LEN,
+        "wire: frame truncated ({} bytes, header+checksum need {})",
+        buf.len(),
+        HEADER_LEN + TRAILER_LEN
+    );
+    let payload_len = parse_header(&buf[..HEADER_LEN])?;
+    let total = HEADER_LEN + payload_len + TRAILER_LEN;
+    anyhow::ensure!(
+        buf.len() == total,
+        "wire: frame length mismatch (got {}, framed {total})",
+        buf.len()
+    );
+    let payload = &buf[HEADER_LEN..HEADER_LEN + payload_len];
+    let want = u32::from_le_bytes(buf[total - TRAILER_LEN..].try_into().unwrap());
+    anyhow::ensure!(want == fnv1a32(payload), "wire: checksum mismatch");
+    decode_payload(payload)
+}
+
+/// Read one frame from a byte stream. `Ok(None)` on a clean EOF *between*
+/// frames (the peer closed the connection); EOF mid-frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Option<Message>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                anyhow::bail!("wire: EOF inside a frame header ({got}/{HEADER_LEN} bytes)");
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let payload_len = parse_header(&header)?;
+    let mut rest = vec![0u8; payload_len + TRAILER_LEN];
+    r.read_exact(&mut rest)
+        .map_err(|e| anyhow::anyhow!("wire: EOF inside a frame body: {e}"))?;
+    let payload = &rest[..payload_len];
+    let want = u32::from_le_bytes(rest[payload_len..].try_into().unwrap());
+    anyhow::ensure!(want == fnv1a32(payload), "wire: checksum mismatch");
+    decode_payload(payload).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::prop_check;
+    use crate::util::rng::Pcg64;
+
+    fn rand_gossip(rng: &mut Pcg64) -> Message {
+        let n = rng.next_below(50) as usize; // sometimes empty
+        let entries: Vec<(u64, InstanceRecord)> = (0..n)
+            .map(|_| {
+                (
+                    rng.next_u64(),
+                    InstanceRecord {
+                        loss: rng.next_f32() * 10.0,
+                        gnorm: rng.next_f32() * 3.0,
+                        last_tick: rng.next_below(1 << 20) as u32,
+                        visits: rng.next_below(1000) as u32,
+                    },
+                )
+            })
+            .collect();
+        Message::StoreGossip {
+            from: rng.next_below(64) as NodeId,
+            entries: Arc::new(entries),
+        }
+    }
+
+    fn rand_state(rng: &mut Pcg64) -> Message {
+        let n_tensors = rng.next_below(4) as usize;
+        let tensors: Vec<Tensor> = (0..n_tensors)
+            .map(|_| {
+                // includes genuinely empty tensors (a zero dim)
+                let rows = rng.next_below(5) as usize;
+                let cols = 1 + rng.next_below(7) as usize;
+                let data = (0..rows * cols).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+                Tensor { shape: vec![rows, cols], data }
+            })
+            .collect();
+        let policy = if rng.next_below(2) == 0 {
+            None
+        } else {
+            let m = 1 + rng.next_below(7) as usize;
+            let prev = if rng.next_below(2) == 0 {
+                None
+            } else {
+                Some((0..m).map(|_| rng.next_f32() * 4.0).collect())
+            };
+            Some(AdaSnapshot {
+                w: (0..m).map(|_| rng.next_f32()).collect(),
+                prev_loss: prev,
+                t: rng.next_below(10_000) as usize,
+            })
+        };
+        Message::State {
+            from: rng.next_below(64) as NodeId,
+            weight: rng.next_f64() * 100.0 + 1.0,
+            tensors,
+            policy,
+        }
+    }
+
+    fn rand_message(rng: &mut Pcg64) -> Message {
+        if rng.next_below(2) == 0 {
+            rand_gossip(rng)
+        } else {
+            rand_state(rng)
+        }
+    }
+
+    /// Bitwise message equality (f32/f64 compared via to_bits).
+    fn same(a: &Message, b: &Message) -> Result<(), String> {
+        match (a, b) {
+            (
+                Message::StoreGossip { from: f0, entries: e0 },
+                Message::StoreGossip { from: f1, entries: e1 },
+            ) => {
+                if f0 != f1 {
+                    return Err(format!("from {f0} != {f1}"));
+                }
+                if e0.len() != e1.len() {
+                    return Err(format!("entry count {} != {}", e0.len(), e1.len()));
+                }
+                for (x, y) in e0.iter().zip(e1.iter()) {
+                    if x.0 != y.0
+                        || x.1.loss.to_bits() != y.1.loss.to_bits()
+                        || x.1.gnorm.to_bits() != y.1.gnorm.to_bits()
+                        || x.1.last_tick != y.1.last_tick
+                        || x.1.visits != y.1.visits
+                    {
+                        return Err(format!("entry {x:?} != {y:?}"));
+                    }
+                }
+                Ok(())
+            }
+            (
+                Message::State { from: f0, weight: w0, tensors: t0, policy: p0 },
+                Message::State { from: f1, weight: w1, tensors: t1, policy: p1 },
+            ) => {
+                if f0 != f1 || w0.to_bits() != w1.to_bits() {
+                    return Err("from/weight mismatch".into());
+                }
+                if t0.len() != t1.len() {
+                    return Err("tensor count mismatch".into());
+                }
+                for (x, y) in t0.iter().zip(t1.iter()) {
+                    if x.shape != y.shape {
+                        return Err(format!("shape {:?} != {:?}", x.shape, y.shape));
+                    }
+                    let xb: Vec<u32> = x.data.iter().map(|v| v.to_bits()).collect();
+                    let yb: Vec<u32> = y.data.iter().map(|v| v.to_bits()).collect();
+                    if xb != yb {
+                        return Err("tensor data not bitwise equal".into());
+                    }
+                }
+                match (p0, p1) {
+                    (None, None) => Ok(()),
+                    (Some(x), Some(y)) => {
+                        if x.w != y.w || x.prev_loss != y.prev_loss || x.t != y.t {
+                            return Err("policy snapshot mismatch".into());
+                        }
+                        Ok(())
+                    }
+                    _ => Err("policy presence mismatch".into()),
+                }
+            }
+            _ => Err("variant mismatch".into()),
+        }
+    }
+
+    #[test]
+    fn round_trips_every_variant_bitwise() {
+        prop_check(
+            "wire round-trip",
+            0xC0FF_EE00,
+            200,
+            rand_message,
+            |msg| {
+                let frame = encode(msg);
+                if frame.len() != frame_len(msg) {
+                    return Err(format!(
+                        "frame_len model {} != encoded {}",
+                        frame_len(msg),
+                        frame.len()
+                    ));
+                }
+                let back = decode(&frame).map_err(|e| format!("decode failed: {e}"))?;
+                same(msg, &back)
+            },
+        );
+    }
+
+    #[test]
+    fn round_trips_edge_messages() {
+        // empty gossip, empty tensor list, None policy, zero-dim tensor
+        let edges = vec![
+            Message::StoreGossip { from: 0, entries: Arc::new(Vec::new()) },
+            Message::State { from: 3, weight: 1.0, tensors: Vec::new(), policy: None },
+            Message::State {
+                from: 7,
+                weight: 2.5,
+                tensors: vec![Tensor { shape: vec![0, 4], data: Vec::new() }],
+                policy: Some(AdaSnapshot { w: vec![0.5; 7], prev_loss: None, t: 0 }),
+            },
+        ];
+        for msg in &edges {
+            let frame = encode(msg);
+            assert_eq!(frame.len(), frame_len(msg));
+            same(msg, &decode(&frame).unwrap()).unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_truncation_corruption_and_bad_versions() {
+        let msg = Message::StoreGossip {
+            from: 2,
+            entries: Arc::new(vec![(
+                9,
+                InstanceRecord { loss: 1.5, gnorm: 0.5, last_tick: 3, visits: 2 },
+            )]),
+        };
+        let frame = encode(&msg);
+        assert!(decode(&frame).is_ok());
+
+        // every strict prefix is an error, never a panic
+        for cut in 0..frame.len() {
+            assert!(decode(&frame[..cut]).is_err(), "truncation at {cut} accepted");
+        }
+        // trailing garbage
+        let mut long = frame.clone();
+        long.push(0);
+        assert!(decode(&long).is_err(), "trailing byte accepted");
+        // bad magic
+        let mut bad = frame.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode(&bad).is_err(), "bad magic accepted");
+        // version skew must be an explicit error
+        let mut bad = frame.clone();
+        bad[2] = VERSION + 1;
+        let err = decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("version"), "unhelpful version error: {err}");
+        // checksum trailer flip
+        let mut bad = frame.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        assert!(decode(&bad).is_err(), "bad checksum accepted");
+        // payload flip is caught by the checksum
+        let mut bad = frame;
+        bad[HEADER_LEN] ^= 0x01;
+        assert!(decode(&bad).is_err(), "payload corruption accepted");
+    }
+
+    #[test]
+    fn random_bytes_never_panic() {
+        prop_check(
+            "wire fuzz",
+            0xDEAD_0001,
+            300,
+            |rng| {
+                let n = rng.next_below(200) as usize;
+                (0..n).map(|_| rng.next_below(256) as u8).collect::<Vec<u8>>()
+            },
+            |bytes| {
+                let _ = decode(bytes); // must return, Ok or Err
+                let _ = read_frame(&mut &bytes[..]);
+                Ok(())
+            },
+        );
+        // valid header + checksum around a garbage payload: parse errors
+        let payload = vec![0xFFu8; 16]; // unknown tag 0xFF
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC.to_le_bytes());
+        frame.push(VERSION);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        frame.extend_from_slice(&fnv1a32(&payload).to_le_bytes());
+        let err = decode(&frame).unwrap_err().to_string();
+        assert!(err.contains("tag"), "garbage payload: {err}");
+        // absurd length prefix is rejected before allocation
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&MAGIC.to_le_bytes());
+        huge.push(VERSION);
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut &huge[..]).is_err());
+    }
+
+    #[test]
+    fn encode_guard_mirrors_decode_bounds() {
+        // everything the cluster actually produces passes
+        prop_check(
+            "encodable messages pass the guard",
+            0xFACE_0002,
+            100,
+            rand_message,
+            |msg| check_encodable(msg).map_err(|e| e.to_string()),
+        );
+        // a tensor the decoder would reject fails at the sender instead
+        let bad_rank = Message::State {
+            from: 0,
+            weight: 1.0,
+            tensors: vec![Tensor { shape: vec![1; MAX_RANK + 1], data: vec![0.0] }],
+            policy: None,
+        };
+        let err = check_encodable(&bad_rank).unwrap_err().to_string();
+        assert!(err.contains("rank"), "unhelpful guard error: {err}");
+        assert!(decode(&encode(&bad_rank)).is_err(), "decoder accepted what the guard rejects");
+        // shape/data mismatch is caught before it hits the wire
+        let bad_len = Message::State {
+            from: 0,
+            weight: 1.0,
+            tensors: vec![Tensor { shape: vec![2, 2], data: vec![0.0; 3] }],
+            policy: None,
+        };
+        assert!(check_encodable(&bad_len).is_err());
+    }
+
+    #[test]
+    fn read_frame_streams_back_to_back_frames() {
+        let a = Message::StoreGossip { from: 1, entries: Arc::new(Vec::new()) };
+        let b = Message::State { from: 2, weight: 3.0, tensors: Vec::new(), policy: None };
+        let mut bytes = encode(&a);
+        bytes.extend_from_slice(&encode(&b));
+        let mut r = &bytes[..];
+        same(&a, &read_frame(&mut r).unwrap().unwrap()).unwrap();
+        same(&b, &read_frame(&mut r).unwrap().unwrap()).unwrap();
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF must be None");
+    }
+}

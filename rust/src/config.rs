@@ -470,6 +470,13 @@ pub struct ClusterConfig {
     pub nodes: usize,
     /// virtual nodes per worker on the hash ring
     pub vnodes: usize,
+    /// node-to-node transport: loopback (in-process mailboxes) | tcp
+    /// (127.0.0.1 sockets speaking the `cluster::wire` frame format)
+    pub transport: String,
+    /// store-gossip payload: full (whole snapshots every round) | delta
+    /// (only entries touched since the last sync, with a periodic
+    /// full-snapshot fallback and full snapshots on join)
+    pub gossip: String,
     /// ticks between store-gossip rounds (0 = never)
     pub gossip_every: usize,
     /// ticks between model/policy merges (0 = never)
@@ -487,6 +494,8 @@ impl Default for ClusterConfig {
             stream: StreamConfig::default(),
             nodes: 4,
             vnodes: 128,
+            transport: "loopback".into(),
+            gossip: "full".into(),
             gossip_every: 16,
             merge_every: 16,
             kill_at: 0,
@@ -505,6 +514,28 @@ impl ClusterConfig {
             "vnodes {} outside 1..=1024",
             self.vnodes
         );
+        anyhow::ensure!(
+            self.transport == "loopback" || self.transport == "tcp",
+            "unknown transport '{}' (expected loopback|tcp)",
+            self.transport
+        );
+        anyhow::ensure!(
+            self.gossip == "full" || self.gossip == "delta",
+            "unknown gossip mode '{}' (expected full|delta)",
+            self.gossip
+        );
+        if self.transport == "tcp" {
+            // the store's hard bound after rounding is ≤ max(capacity,
+            // 2·shards); a full-snapshot gossip of that many entries must
+            // fit in one wire frame, or the run would die at the first
+            // full gossip barrier instead of failing here up front
+            let worst = self.stream.store_capacity.max(2 * self.stream.store_shards);
+            let cap = crate::cluster::wire::max_gossip_entries();
+            anyhow::ensure!(
+                worst <= cap,
+                "store-capacity {worst} exceeds the {cap} entries a tcp gossip frame can carry"
+            );
+        }
         anyhow::ensure!(
             self.kill_at < self.stream.max_ticks,
             "kill-at {} beyond max-ticks {}",
@@ -550,6 +581,8 @@ impl ClusterConfig {
         match key {
             "nodes" => self.nodes = value.parse()?,
             "vnodes" => self.vnodes = value.parse()?,
+            "transport" => self.transport = value.into(),
+            "gossip" => self.gossip = value.into(),
             "gossip-every" => self.gossip_every = value.parse()?,
             "merge-every" => self.merge_every = value.parse()?,
             "kill-at" => self.kill_at = value.parse()?,
@@ -596,6 +629,8 @@ impl ClusterConfig {
         };
         m.insert("nodes".into(), Json::Num(self.nodes as f64));
         m.insert("vnodes".into(), Json::Num(self.vnodes as f64));
+        m.insert("transport".into(), Json::Str(self.transport.clone()));
+        m.insert("gossip".into(), Json::Str(self.gossip.clone()));
         m.insert("gossip-every".into(), Json::Num(self.gossip_every as f64));
         m.insert("merge-every".into(), Json::Num(self.merge_every as f64));
         m.insert("kill-at".into(), Json::Num(self.kill_at as f64));
@@ -758,6 +793,8 @@ mod tests {
         let mut cfg = ClusterConfig::default();
         cfg.apply_override("nodes", "2").unwrap();
         cfg.apply_override("gossip-every", "8").unwrap();
+        cfg.apply_override("transport", "tcp").unwrap();
+        cfg.apply_override("gossip", "delta").unwrap();
         cfg.apply_override("kill-at", "40").unwrap();
         cfg.apply_override("kill-node", "1").unwrap();
         cfg.apply_override("join-at", "60").unwrap();
@@ -768,6 +805,8 @@ mod tests {
         cfg.validate().unwrap();
         assert_eq!(cfg.nodes, 2);
         assert_eq!(cfg.gossip_every, 8);
+        assert_eq!(cfg.transport, "tcp");
+        assert_eq!(cfg.gossip, "delta");
         assert!((cfg.stream.gamma - 0.25).abs() < 1e-12);
         assert!(cfg.stream.replay);
         assert!(cfg.apply_override("bogus-key", "1").is_err());
@@ -782,6 +821,15 @@ mod tests {
         cfg.vnodes = 0;
         assert!(cfg.validate().is_err());
         cfg.vnodes = 128;
+        cfg.transport = "udp".into();
+        assert!(cfg.validate().is_err(), "unknown transport accepted");
+        cfg.transport = "tcp".into();
+        cfg.gossip = "snapshot".into();
+        assert!(cfg.validate().is_err(), "unknown gossip mode accepted");
+        cfg.gossip = "delta".into();
+        cfg.validate().unwrap();
+        cfg.transport = "loopback".into();
+        cfg.gossip = "full".into();
         cfg.kill_at = cfg.stream.max_ticks; // beyond the run
         assert!(cfg.validate().is_err());
         cfg.kill_at = 10;
@@ -796,14 +844,31 @@ mod tests {
     }
 
     #[test]
+    fn tcp_transport_caps_store_capacity() {
+        let mut cfg = ClusterConfig::default();
+        cfg.transport = "tcp".into();
+        cfg.stream.store_capacity = 3_000_000; // gossip frame > MAX_PAYLOAD
+        assert!(cfg.validate().is_err(), "oversized tcp gossip frame accepted");
+        cfg.transport = "loopback".into(); // loopback never frames
+        cfg.validate().unwrap();
+        cfg.transport = "tcp".into();
+        cfg.stream.store_capacity = 65_536;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn cluster_json_round_trip() {
         let mut cfg = ClusterConfig::default();
         cfg.nodes = 2;
         cfg.merge_every = 4;
+        cfg.transport = "tcp".into();
+        cfg.gossip = "delta".into();
         cfg.stream.gamma = 0.4;
         let back = ClusterConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.nodes, 2);
         assert_eq!(back.merge_every, 4);
+        assert_eq!(back.transport, "tcp");
+        assert_eq!(back.gossip, "delta");
         assert!((back.stream.gamma - 0.4).abs() < 1e-12);
     }
 }

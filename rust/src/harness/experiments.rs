@@ -499,8 +499,9 @@ fn stream_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result
 }
 
 /// Scale-out extension: the same drifting stream at an equal total tick
-/// budget through 1-, 2- and 4-node clusters. Emits rolling-loss parity
-/// vs the single node and the aggregate-throughput scaling curve.
+/// budget through 1-, 2- and 4-node clusters, plus a 4-node delta-gossip
+/// job. Emits rolling-loss parity vs the single node, the aggregate-
+/// throughput scaling curve, and gossip/merge bandwidth per job.
 fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
     use crate::config::ClusterConfig;
 
@@ -519,15 +520,23 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
         "samples_trained",
         "merges",
         "gossip_rounds",
+        "gossip",
+        "gossip_bytes",
+        "merge_bytes",
     ]);
     let mut trace = crate::metrics::csv::CsvTable::new(vec![
-        "nodes", "tick", "rolling_loss", "rolling_acc",
+        "nodes", "gossip", "tick", "rolling_loss", "rolling_acc",
     ]);
-    let node_counts: &[usize] = if opts.quick { &[1, 2] } else { &[1, 2, 4] };
+    let jobs: &[(usize, &str)] = if opts.quick {
+        &[(1, "full"), (2, "full")]
+    } else {
+        &[(1, "full"), (2, "full"), (4, "full"), (4, "delta")]
+    };
     let mut base: Option<(f32, f64)> = None; // (loss, samples/s) at 1 node
-    for &nodes in node_counts {
+    for &(nodes, gossip) in jobs {
         let mut cfg = ClusterConfig::default();
         cfg.nodes = nodes;
+        cfg.gossip = gossip.into();
         cfg.gossip_every = 8;
         cfg.merge_every = 8;
         cfg.stream.dataset = "drift-class".into();
@@ -537,7 +546,7 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
         cfg.stream.max_ticks = ticks;
         cfg.stream.window = 40;
         cfg.stream.workers = 1;
-        log::info!("cluster-cmp job: {nodes} node(s) over {ticks} ticks");
+        log::info!("cluster-cmp job: {nodes} node(s), {gossip} gossip, {ticks} ticks");
         let r = crate::cluster::run(&cfg)?;
         if base.is_none() {
             base = Some((r.final_rolling_loss, r.samples_per_sec));
@@ -546,6 +555,7 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
         for p in &r.rolling {
             trace.push(vec![
                 nodes.to_string(),
+                gossip.to_string(),
                 p.tick.to_string(),
                 format!("{:.6}", p.loss),
                 format!("{:.6}", p.acc),
@@ -561,6 +571,9 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
             r.samples_trained.to_string(),
             r.merges.to_string(),
             r.gossip_rounds.to_string(),
+            gossip.to_string(),
+            r.gossip_bytes.to_string(),
+            r.merge_bytes.to_string(),
         ]);
     }
     summary.save(&opts.out_dir.join("cluster_cmp_summary.csv"))?;

@@ -9,9 +9,10 @@
 //!     continuous-training [`stream`] subsystem (unbounded epochless
 //!     sources + sharded bounded instance store + drift-adaptive γ +
 //!     replay + checkpoint/resume), the multi-node [`cluster`] subsystem
-//!     (consistent-hash sharding, store gossip, model/policy merge,
-//!     kill/join churn), metrics, and the experiment harness reproducing
-//!     every paper table/figure.
+//!     (consistent-hash sharding, loopback + TCP socket transports over a
+//!     checksummed wire format, full/delta store gossip, model/policy
+//!     merge, kill/join churn), metrics, and the experiment harness
+//!     reproducing every paper table/figure.
 //!   * **L2 (python/compile)** — JAX model graphs (MLP / mini-ResNet /
 //!     Transformer) lowered once to HLO text by `make artifacts`.
 //!   * **L1 (python/compile/kernels)** — Pallas kernels for per-sample

@@ -186,6 +186,13 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         r.nodes_started, r.ticks, r.gossip_rounds, r.merges
     );
     println!(
+        "  wire ({} transport, {} gossip): gossip={} KiB merge={} KiB",
+        cfg.transport,
+        cfg.gossip,
+        r.gossip_bytes / 1024,
+        r.merge_bytes / 1024
+    );
+    println!(
         "  seen={} trained={} replayed={} ({:.0} samples/s aggregate)",
         r.samples_seen, r.samples_trained, r.samples_replayed, r.samples_per_sec
     );

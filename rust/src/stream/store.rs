@@ -19,9 +19,14 @@
 //! This generalizes and absorbs the old `selection::staleness::LossCache`
 //! per-`Vec` cache — the batch trainer now rides on the same store through
 //! a thin compat shim (see `selection::staleness`).
+//!
+//! For the cluster, the store is also the gossip substrate: `merge` folds
+//! a peer's entries in freshest-tick-wins, and opt-in dirty tracking
+//! (`enable_dirty_tracking` / `take_dirty`) hands delta gossip exactly the
+//! entries touched locally since the last sync instead of full snapshots.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Fixed per-instance statistics record ("constant information per
@@ -55,6 +60,10 @@ pub struct StoreCounters {
 struct Shard {
     cur: HashMap<u64, InstanceRecord>,
     old: HashMap<u64, InstanceRecord>,
+    /// ids touched by `update` since the last [`InstanceStore::take_dirty`]
+    /// / [`InstanceStore::clear_dirty`] — the delta-gossip send set. Only
+    /// populated when dirty tracking is enabled.
+    dirty: HashSet<u64>,
 }
 
 /// The sharded bounded store. All methods take `&self` (interior
@@ -69,6 +78,9 @@ pub struct InstanceStore {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    /// opt-in (cluster delta gossip): off by default so stores that never
+    /// sync don't accumulate an unbounded dirty set
+    track_dirty: AtomicBool,
 }
 
 /// SplitMix-style avalanche so sequential ids spread across shards.
@@ -91,6 +103,7 @@ impl InstanceStore {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            track_dirty: AtomicBool::new(false),
         }
     }
 
@@ -143,6 +156,45 @@ impl InstanceStore {
             visits: prev.map(|p| p.visits).unwrap_or(0).saturating_add(1),
         };
         self.insert_cur(&mut s, id, rec);
+        if self.track_dirty.load(Ordering::Relaxed) {
+            s.dirty.insert(id);
+        }
+    }
+
+    /// Start tracking the ids [`InstanceStore::update`] touches, so
+    /// [`InstanceStore::take_dirty`] can hand delta gossip only the
+    /// entries changed since the last sync. Gossip merged from peers
+    /// ([`InstanceStore::merge`]) is deliberately *not* marked — in a
+    /// full-mesh broadcast every peer heard the origin directly, so
+    /// re-forwarding would only echo.
+    pub fn enable_dirty_tracking(&self) {
+        self.track_dirty.store(true, Ordering::Relaxed);
+    }
+
+    /// Live records locally touched since the last take/clear, sorted by
+    /// id (deterministic), clearing the dirty marks. Ids evicted since
+    /// they were touched are skipped — a peer could not use them anyway.
+    pub fn take_dirty(&self) -> Vec<(u64, InstanceRecord)> {
+        let mut out: Vec<(u64, InstanceRecord)> = Vec::new();
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            let dirty = std::mem::take(&mut s.dirty);
+            for id in dirty {
+                if let Some(r) = s.cur.get(&id).copied().or_else(|| s.old.get(&id).copied()) {
+                    out.push((id, r));
+                }
+            }
+        }
+        out.sort_unstable_by_key(|&(id, _)| id);
+        out
+    }
+
+    /// Drop all pending dirty marks without reading them (called after a
+    /// full snapshot went out — everything live has just been shared).
+    pub fn clear_dirty(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap().dirty.clear();
+        }
     }
 
     /// Live records across all shards and both generations.
@@ -372,6 +424,42 @@ mod tests {
         let top = s.top_by_loss(3, &skip);
         assert_eq!(top.iter().map(|&(id, _)| id).collect::<Vec<_>>(), vec![8, 6, 5]);
         assert!(s.top_by_loss(100, &none).len() == 10);
+    }
+
+    #[test]
+    fn dirty_tracking_feeds_delta_gossip() {
+        let s = InstanceStore::new(256, 4);
+        s.update(1, 1.0, 0.1, 1);
+        assert!(s.take_dirty().is_empty(), "tracking must be opt-in");
+        s.enable_dirty_tracking();
+        s.update(2, 2.0, 0.2, 2);
+        s.update(3, 3.0, 0.3, 2);
+        s.update(2, 2.5, 0.2, 3); // re-touch: still one entry, latest record
+        let d = s.take_dirty();
+        assert_eq!(d.iter().map(|&(id, _)| id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(d[0].1.loss, 2.5);
+        assert!(s.take_dirty().is_empty(), "take must clear the marks");
+        // peer gossip must not re-dirty the receiver (no broadcast echo)
+        s.merge(&[(9, InstanceRecord { loss: 1.0, gnorm: 1.0, last_tick: 9, visits: 1 })]);
+        assert!(s.take_dirty().is_empty());
+        // clear_dirty drops pending marks (a full snapshot just went out)
+        s.update(4, 1.0, 0.1, 4);
+        s.clear_dirty();
+        assert!(s.take_dirty().is_empty());
+    }
+
+    #[test]
+    fn dirty_ids_evicted_before_sync_are_skipped() {
+        let s = InstanceStore::new(8, 1); // tiny store: constant rotation
+        s.enable_dirty_tracking();
+        for id in 0..100u64 {
+            s.update(id, 1.0, 1.0, 1);
+        }
+        let d = s.take_dirty();
+        assert!(d.len() <= s.capacity(), "evicted ids resurfaced: {}", d.len());
+        for &(id, _) in &d {
+            assert!(s.peek(id).is_some(), "dirty id {id} is not live");
+        }
     }
 
     #[test]

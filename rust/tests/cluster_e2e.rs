@@ -151,6 +151,56 @@ fn kill_and_join_rebalance_without_halting_training() {
 }
 
 #[test]
+fn tcp_delta_gossip_is_bit_identical_to_loopback_full() {
+    // the same seed through (a) the in-process loopback with full-snapshot
+    // gossip and (b) real 127.0.0.1 sockets with delta gossip, including a
+    // kill and a join. Replay is on so store contents actually steer
+    // training (the store capacity holds every arrival, so delta and full
+    // gossip must converge on identical stores — and therefore identical
+    // replay picks and training digests).
+    let ticks = 140;
+    let mk = |transport: &str, gossip: &str| {
+        let mut cfg = base_cfg(4, ticks);
+        cfg.transport = transport.into();
+        cfg.gossip = gossip.into();
+        cfg.stream.replay = true;
+        cfg.kill_at = 50;
+        cfg.kill_node = 1;
+        cfg.join_at = 90;
+        cfg
+    };
+    let full = cluster::run(&mk("loopback", "full")).unwrap();
+    let delta = cluster::run(&mk("tcp", "delta")).unwrap();
+
+    assert_eq!(full.digest, delta.digest, "training sequences diverged across modes");
+    assert_eq!(full.samples_seen, delta.samples_seen);
+    assert_eq!(full.samples_trained, delta.samples_trained);
+    assert_eq!(full.samples_replayed, delta.samples_replayed);
+    assert_eq!(full.remaps, delta.remaps, "churn remap accounting diverged");
+    assert_eq!(
+        full.final_rolling_loss.to_bits(),
+        delta.final_rolling_loss.to_bits(),
+        "rolling loss not bit-identical"
+    );
+    assert_eq!(full.rolling.len(), delta.rolling.len());
+    for (a, b) in full.rolling.iter().zip(delta.rolling.iter()) {
+        assert_eq!(a.tick, b.tick);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+
+    // the point of delta gossip: strictly fewer bytes on the wire at the
+    // same training result; merge traffic is mode-independent
+    assert!(full.gossip_bytes > 0 && delta.gossip_bytes > 0);
+    assert!(
+        delta.gossip_bytes < full.gossip_bytes,
+        "delta gossip must ship fewer bytes: {} vs {}",
+        delta.gossip_bytes,
+        full.gossip_bytes
+    );
+    assert_eq!(full.merge_bytes, delta.merge_bytes);
+}
+
+#[test]
 fn replay_tops_up_thin_cluster_shards() {
     // 8 nodes over a burst-heavy stream: single shards regularly fall
     // below the per-node budget, so the replay scheduler must fire

@@ -98,6 +98,9 @@ fn cluster_cmp_emits_scaling_summary() {
     assert_eq!(t[2][0], "2");
     // loss delta vs the single node is reported as a signed percentage
     assert!(t[2][2].starts_with('+') || t[2][2].starts_with('-'));
+    // bandwidth is reported alongside throughput
+    let gb = t[0].iter().position(|c| c == "gossip_bytes").expect("gossip_bytes column");
+    assert!(t[2][gb].parse::<u64>().unwrap() > 0, "2-node job gossiped no bytes");
     assert!(o.out_dir.join("cluster_cmp_trace.csv").exists());
 }
 

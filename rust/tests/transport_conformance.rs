@@ -1,0 +1,180 @@
+//! Transport conformance: one reusable contract suite exercised against
+//! both the in-process `Loopback` and the TCP socket transport, so every
+//! `cluster::Transport` implementation keeps identical semantics —
+//! ordering, idempotent registration, unregister-drops-mail, the
+//! documented send/drain asymmetry on unknown nodes, and per-sender FIFO
+//! under interleaved concurrent senders.
+
+use std::sync::Arc;
+
+use adaselection::cluster::{Loopback, Message, Tcp, Transport};
+use adaselection::runtime::Tensor;
+use adaselection::selection::AdaSnapshot;
+use adaselection::stream::InstanceRecord;
+
+/// A gossip message carrying a sender id and a sequence number (in the
+/// single entry's id) so tests can check ordering.
+fn gossip(from: usize, seq: u64) -> Message {
+    Message::StoreGossip {
+        from,
+        entries: Arc::new(vec![(
+            seq,
+            InstanceRecord { loss: seq as f32, gnorm: 0.5, last_tick: seq as u32, visits: 1 },
+        )]),
+    }
+}
+
+fn seq_of(m: &Message) -> u64 {
+    match m {
+        Message::StoreGossip { entries, .. } => entries[0].0,
+        _ => panic!("expected a gossip message"),
+    }
+}
+
+/// A state message with distinctive float payloads (merge material must
+/// survive the transport bitwise).
+fn state(from: usize) -> Message {
+    Message::State {
+        from,
+        weight: 17.25,
+        tensors: vec![
+            Tensor { shape: vec![2, 3], data: vec![0.1, -0.2, 0.3, 1.5e-7, -3.25, 42.0] },
+            Tensor { shape: vec![0, 4], data: Vec::new() }, // genuinely empty
+        ],
+        policy: Some(AdaSnapshot {
+            w: vec![0.125, 0.25, 0.5, 0.0625, 0.03125, 0.015625, 0.0078125],
+            prev_loss: Some(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]),
+            t: 99,
+        }),
+    }
+}
+
+/// The shared `Transport` contract. Every implementation must pass this
+/// suite unchanged.
+fn conformance<T: Transport>(t: &T) {
+    // ordering: sequential sends drain in send order, and drain empties
+    t.register(1);
+    t.register(2);
+    for s in 0..5 {
+        t.send(1, gossip(9, s)).unwrap();
+    }
+    let got = t.drain(1);
+    assert_eq!(
+        got.iter().map(seq_of).collect::<Vec<_>>(),
+        vec![0, 1, 2, 3, 4],
+        "messages must drain in send order"
+    );
+    assert!(t.drain(1).is_empty(), "drain must empty the mailbox");
+
+    // registration is idempotent: re-registering keeps queued mail
+    t.send(2, gossip(9, 7)).unwrap();
+    t.register(2);
+    let got = t.drain(2);
+    assert_eq!(got.len(), 1, "re-register dropped queued mail");
+    assert_eq!(seq_of(&got[0]), 7);
+
+    // documented asymmetry: send to an unknown node errors, drain of an
+    // unknown node returns empty
+    assert!(t.send(99, gossip(0, 0)).is_err(), "send to unknown node must error");
+    assert!(t.drain(99).is_empty(), "drain of unknown node must be empty");
+
+    // unregister closes the destination and drops anything queued
+    t.register(3);
+    t.send(3, gossip(1, 1)).unwrap();
+    t.unregister(3);
+    assert!(t.send(3, gossip(1, 2)).is_err(), "send to unregistered node must error");
+    assert!(t.drain(3).is_empty(), "unregister must drop queued mail");
+
+    // a re-registered node starts fresh and works again
+    t.register(3);
+    t.send(3, gossip(1, 3)).unwrap();
+    let got = t.drain(3);
+    assert_eq!(got.len(), 1);
+    assert_eq!(seq_of(&got[0]), 3);
+    t.unregister(3);
+
+    // merge material survives the transport bitwise
+    t.register(4);
+    let sent = state(6);
+    t.send(4, sent.clone()).unwrap();
+    let got = t.drain(4);
+    assert_eq!(got.len(), 1);
+    match (&sent, &got[0]) {
+        (
+            Message::State { from: f0, weight: w0, tensors: t0, policy: p0 },
+            Message::State { from: f1, weight: w1, tensors: t1, policy: p1 },
+        ) => {
+            assert_eq!(f0, f1);
+            assert_eq!(w0.to_bits(), w1.to_bits(), "weight must round-trip bitwise");
+            assert_eq!(t0.len(), t1.len());
+            for (a, b) in t0.iter().zip(t1.iter()) {
+                assert_eq!(a.shape, b.shape);
+                let ab: Vec<u32> = a.data.iter().map(|x| x.to_bits()).collect();
+                let bb: Vec<u32> = b.data.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(ab, bb, "tensor data must round-trip bitwise");
+            }
+            let (p0, p1) = (p0.as_ref().unwrap(), p1.as_ref().unwrap());
+            assert_eq!(p0.w, p1.w);
+            assert_eq!(p0.prev_loss, p1.prev_loss);
+            assert_eq!(p0.t, p1.t);
+        }
+        _ => panic!("state message did not survive the transport"),
+    }
+    t.unregister(4);
+
+    // broadcast: every listed peer gets the message exactly once, in
+    // send order; an unknown peer errors after earlier peers delivered
+    t.register(6);
+    t.register(7);
+    t.broadcast(&[6, 7], &gossip(2, 11)).unwrap();
+    t.broadcast(&[6, 7], &gossip(2, 12)).unwrap();
+    for node in [6usize, 7] {
+        let got = t.drain(node);
+        assert_eq!(
+            got.iter().map(seq_of).collect::<Vec<_>>(),
+            vec![11, 12],
+            "broadcast to node {node}"
+        );
+    }
+    assert!(t.broadcast(&[6, 99], &gossip(2, 13)).is_err(), "unknown peer must error");
+    assert_eq!(t.drain(6).len(), 1, "peers before the failing one still get the frame");
+    t.unregister(6);
+    t.unregister(7);
+
+    // interleaved multi-sender drain: everything arrives exactly once and
+    // each sender's subsequence stays FIFO (global interleaving is free)
+    t.register(5);
+    std::thread::scope(|scope| {
+        for sender in 0..3usize {
+            scope.spawn(move || {
+                for s in 0..20u64 {
+                    t.send(5, gossip(sender, s)).unwrap();
+                }
+            });
+        }
+    });
+    let got = t.drain(5);
+    assert_eq!(got.len(), 60, "messages lost or duplicated under concurrency");
+    for sender in 0..3usize {
+        let seqs: Vec<u64> =
+            got.iter().filter(|m| m.from_node() == sender).map(seq_of).collect();
+        assert_eq!(
+            seqs,
+            (0..20).collect::<Vec<u64>>(),
+            "sender {sender}'s messages reordered"
+        );
+    }
+    t.unregister(5);
+    t.unregister(1);
+    t.unregister(2);
+}
+
+#[test]
+fn loopback_conforms() {
+    conformance(&Loopback::new());
+}
+
+#[test]
+fn tcp_conforms() {
+    conformance(&Tcp::new());
+}
