@@ -107,5 +107,47 @@ fn main() {
         });
     }
 
+    // worker runtimes: in-process threads vs real OS processes at the same
+    // budget (spawn + control-plane overhead is the price of isolation;
+    // workers are spawned from the adaselection binary, not this bench)
+    println!("\n## worker runtimes (drift-class, 4 nodes, {ticks} ticks)");
+    println!("{:<12} {:>10} {:>14} {:>10}", "workers", "samples", "samples/s", "vs threads");
+    let worker_exe = std::path::Path::new(env!("CARGO_BIN_EXE_adaselection"));
+    let mut thread_sps: Option<f64> = None;
+    for mode in ["threads", "processes"] {
+        let mut cfg = ClusterConfig::default();
+        cfg.nodes = 4;
+        cfg.worker_mode = mode.into();
+        cfg.gossip_every = 8;
+        cfg.merge_every = 8;
+        cfg.stream.dataset = "drift-class".into();
+        cfg.stream.gamma = 0.5;
+        cfg.stream.max_ticks = ticks;
+        cfg.stream.eval_every = 0;
+        cfg.stream.burst_period = 0;
+        cfg.stream.window = 50;
+        cfg.stream.workers = 1;
+        let r = if mode == "processes" {
+            cluster::proc::run_with_exe(&cfg, worker_exe).expect("process cluster bench run")
+        } else {
+            cluster::run(&cfg).expect("thread cluster bench run")
+        };
+        let base = *thread_sps.get_or_insert(r.samples_per_sec);
+        println!(
+            "{:<12} {:>10} {:>14.1} {:>9.2}x",
+            mode,
+            r.samples_seen,
+            r.samples_per_sec,
+            r.samples_per_sec / base.max(1e-9)
+        );
+        results.push(BenchResult {
+            name: format!("cluster e2e drift-class 4 nodes, {mode} workers (per arrival)"),
+            iters: r.samples_seen as usize,
+            median_ns: 1e9 / r.samples_per_sec.max(1e-9),
+            p95_ns: 1e9 / r.samples_per_sec.max(1e-9),
+            mean_ns: 1e9 / r.samples_per_sec.max(1e-9),
+        });
+    }
+
     write_json("cluster", &results).expect("write BENCH_cluster.json");
 }

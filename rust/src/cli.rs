@@ -72,19 +72,25 @@ COMMANDS:
                       --data-scale F --workers N --accumulate on|off
                       --kernel-scorer on|off --config FILE --out DIR
   stream              continuous training on an unbounded sample stream
-                      --dataset drift-class|drift-reg|drift-lm|file:PATH
+                      --dataset drift-class|drift-reg|drift-lm|file:PATH|tcp:ADDR
                       --selector S --gamma G --max-ticks N --lr X
                       --drift-period N --burst-period N --burst-min F
                       --store-capacity N --store-shards N
                       --window N --eval-every N --workers N
-                      --drift-detect on|off --replay on|off
+                      --drift-detect off|page-hinkley|adwin --replay on|off
                       --checkpoint FILE [--checkpoint-every N] [--resume]
                       --config FILE --out DIR
   cluster             multi-node sharded streaming training
                       --nodes N --vnodes N --gossip-every N --merge-every N
+                      --workers threads|processes (or N for pipeline workers)
                       --transport loopback|tcp --gossip full|delta
+                      [--full-gossip-every K]
                       [--kill-at T --kill-node I] [--join-at T]
+                      [--chaos-kill-at T --chaos-kill-node I] (processes)
                       plus all stream options; native backend only
+  worker              one spawned cluster worker process (internal; started
+                      by `cluster --workers processes`)
+                      --coordinator HOST:PORT --node-id N
   sweep               reproduce a paper experiment
                       --exp fig1|...|fig9|table3|table4|stream-cmp|all
                       --out DIR [--backend native|xla --epochs N

@@ -20,12 +20,20 @@
 //!     model/policy averaging, and kill/join churn with bounded key
 //!     remapping.
 //!
+//!   * [`proc`] — the multi-process runtime: a `worker` subcommand body
+//!     plus a process coordinator speaking a control-plane barrier
+//!     protocol (`Hello`/`Assign`/`BarrierGo`/`BarrierReady`/
+//!     `MergePayload`/`Shutdown`/`Heartbeat`) over the same wire frames;
+//!     selected with `--workers processes`, bit-identical to the thread
+//!     runtime.
+//!
 //! CLI surface: `adaselection cluster --nodes 4 --max-ticks 400
-//! [--transport loopback|tcp] [--gossip full|delta]
-//! [--gossip-every N] [--merge-every N] [--kill-at T --kill-node I]
-//! [--join-at T]`.
+//! [--workers threads|processes] [--transport loopback|tcp]
+//! [--gossip full|delta] [--gossip-every N] [--full-gossip-every K]
+//! [--merge-every N] [--kill-at T --kill-node I] [--join-at T]`.
 
 pub mod node;
+pub mod proc;
 pub mod ring;
 pub mod tcp;
 pub mod trainer;
@@ -36,4 +44,4 @@ pub use node::{ClusterNode, NodePreq, PartitionProducer};
 pub use ring::{HashRing, NodeId, RingSchedule};
 pub use tcp::Tcp;
 pub use trainer::{run, ClusterResult, NodeSummary};
-pub use transport::{Loopback, Message, Transport};
+pub use transport::{ChurnOrder, Loopback, Message, Transport};

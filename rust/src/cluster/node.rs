@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use crate::cluster::ring::{NodeId, RingSchedule};
+use crate::cluster::ring::{HashRing, NodeId, RingSchedule};
 use crate::cluster::transport::Message;
 use crate::pipeline::{gather, Batch, BatchProducer, Loader};
 use crate::runtime::Backend;
@@ -84,6 +84,14 @@ pub struct ClusterNode<B: Backend> {
     pub engine: TickEngine,
     family: String,
     source: Arc<dyn StreamSource>,
+    /// the ownership timeline the loader partitions by (swappable at
+    /// runtime when the process coordinator converts a crash into churn)
+    rings: Arc<RingSchedule>,
+    /// loader rebuild parameters (see [`ClusterNode::adopt_schedule`])
+    chunk_rows: usize,
+    max_ticks: usize,
+    workers: usize,
+    capacity: usize,
     loader: Option<Loader>,
     /// next tick this node will process
     pub next_tick: u64,
@@ -122,7 +130,7 @@ impl<B: Backend> ClusterNode<B> {
     ) -> ClusterNode<B> {
         let producer: Arc<dyn BatchProducer> = Arc::new(PartitionProducer {
             source: source.clone(),
-            rings,
+            rings: rings.clone(),
             node: id,
             chunk_rows,
             first_tick,
@@ -135,6 +143,11 @@ impl<B: Backend> ClusterNode<B> {
             engine,
             family,
             source,
+            rings,
+            chunk_rows,
+            max_ticks,
+            workers,
+            capacity,
             loader: Some(Loader::from_producer(producer, workers, capacity)),
             next_tick: first_tick,
             eval_every,
@@ -262,6 +275,82 @@ impl<B: Backend> ClusterNode<B> {
         self.alive = false;
         self.loader = None;
     }
+
+    /// The current ownership timeline (shared with the partition
+    /// producer; the process worker keeps it to diff against on churn).
+    pub fn rings(&self) -> Arc<RingSchedule> {
+        self.rings.clone()
+    }
+
+    /// Replace the ownership timeline and rebuild the loader from the
+    /// current tick — the crash-conversion path: batches the old loader
+    /// prefetched past `next_tick` were partitioned under the stale ring
+    /// and must be regenerated, so the old loader is dropped (joining its
+    /// threads) and a fresh one starts at `next_tick`.
+    pub fn adopt_schedule(&mut self, rings: Arc<RingSchedule>) {
+        self.rings = rings;
+        self.loader = None; // join the stale workers before respawning
+        let producer: Arc<dyn BatchProducer> = Arc::new(PartitionProducer {
+            source: self.source.clone(),
+            rings: self.rings.clone(),
+            node: self.id,
+            chunk_rows: self.chunk_rows,
+            first_tick: self.next_tick,
+            max_ticks: self.max_ticks.saturating_sub(self.next_tick as usize),
+        });
+        self.loader = Some(Loader::from_producer(producer, self.workers, self.capacity));
+    }
+
+    /// Re-process `dead`'s share of ticks `[from, to)`: the rows that
+    /// node owned under `old` and that the current schedule now assigns
+    /// to this node. The crashed worker's work since its last barrier
+    /// died with it, so the survivors redo it — that is what keeps
+    /// arrival coverage exact across a crash. Runs without prequential
+    /// eval (those ticks' rolling points were already folded) and
+    /// without replay top-up (the rows are themselves back-work).
+    /// Returns the number of arrivals re-processed.
+    pub fn backfill(
+        &mut self,
+        dead: NodeId,
+        old: &RingSchedule,
+        from: u64,
+        to: u64,
+    ) -> anyhow::Result<u64> {
+        let saved_replay = self.engine.replay_budget.take();
+        let mut redone = 0u64;
+        for tick in from..to {
+            let chunk = self.source.gen_chunk(tick, self.chunk_rows);
+            if chunk.data.is_empty() {
+                continue;
+            }
+            let ring_old: &HashRing = old.at(tick);
+            let ring_new: &HashRing = self.rings.at(tick);
+            let owned: Vec<usize> = (0..chunk.ids.len())
+                .filter(|&r| {
+                    ring_old.owner(chunk.ids[r]) == dead
+                        && ring_new.owner(chunk.ids[r]) == self.id
+                })
+                .collect();
+            if owned.is_empty() {
+                continue;
+            }
+            let mut b = gather(&chunk.data, &owned, owned.len(), 0, tick as usize);
+            b.indices = owned.iter().map(|&r| chunk.ids[r] as usize).collect();
+            let out = self.engine.process(
+                &mut self.backend,
+                &mut self.state,
+                self.source.as_ref(),
+                &b,
+                tick,
+                false,
+                &mut self.phases,
+            )?;
+            self.digest = fnv_fold(self.digest, out.digest);
+            redone += out.arrivals as u64;
+        }
+        self.engine.replay_budget = saved_replay;
+        Ok(redone)
+    }
 }
 
 #[cfg(test)]
@@ -328,5 +417,59 @@ mod tests {
         assert_eq!(a.indices, b.indices);
         assert_eq!(a.real, b.real);
         assert_eq!(a.x_f32, b.x_f32);
+    }
+
+    #[test]
+    fn backfill_covers_exactly_the_inherited_rows() {
+        use crate::runtime::{Backend, NativeBackend};
+        use crate::selection::policy::build_policy;
+        use crate::stream::store::InstanceStore;
+
+        let source = build_source(
+            "drift-class",
+            StreamKnobs { seed: 6, drift_period: 32, burst_period: 8, burst_min: 0.5 },
+        )
+        .unwrap();
+        let mut backend = NativeBackend::new();
+        let state = backend.init_state("stream_class", 6).unwrap();
+        let policy = build_policy("uniform", 6, 0.5, true, -0.5).unwrap();
+        let engine = TickEngine::new(policy, InstanceStore::new(1024, 4), 0.5, 0.05, 32);
+
+        // node 2 dies: the survivor (node 0) must redo exactly the rows it
+        // inherited from 2 over the backfill range
+        let old = RingSchedule::new(HashRing::with_nodes(5, 64, 0..3));
+        let mut shrunk = HashRing::with_nodes(5, 64, 0..3);
+        shrunk.remove_node(2);
+        let new_sched = Arc::new(RingSchedule::new(shrunk));
+        let mut node = ClusterNode::new(
+            0,
+            backend,
+            state,
+            engine,
+            "stream_class".into(),
+            source.clone(),
+            new_sched.clone(),
+            32,
+            0,
+            20,
+            1,
+            0,
+            4,
+        );
+        let redone = node.backfill(2, &old, 4, 8).unwrap();
+        let mut expect = 0u64;
+        for tick in 4..8u64 {
+            let chunk = source.gen_chunk(tick, 32);
+            expect += chunk
+                .ids
+                .iter()
+                .filter(|&&id| {
+                    old.at(tick).owner(id) == 2 && new_sched.at(tick).owner(id) == 0
+                })
+                .count() as u64;
+        }
+        assert!(expect > 0, "no rows moved 2 -> 0 over the range");
+        assert_eq!(redone, expect);
+        assert_eq!(node.engine.samples_seen, expect);
     }
 }

@@ -1,0 +1,977 @@
+//! The process coordinator: spawn N worker processes of the current
+//! executable and drive the thread coordinator's exact barrier schedule
+//! over the `cluster::wire` control plane.
+//!
+//! Topology is hub-and-spoke: every worker holds one TCP connection to
+//! the coordinator; store gossip is relayed through the hub in node-id
+//! order (so workers merge peers' entries in the same order the
+//! in-process transports deliver them), and merges are computed once at
+//! the hub with the shared [`MergeMaterial`] weighted-average code and
+//! shipped back as `MergePayload` — the same id-sorted input set every
+//! thread node averages for itself, hence the same bits.
+//!
+//! Failure handling: each worker's reader thread turns a closed
+//! connection into a death notice, and heartbeats bound how long a hung
+//! process can stall a barrier. A dead worker is converted into the
+//! kill-churn path — a ring epoch at the last barrier it completed, a
+//! measured bounded remap, and `ChurnOrder`s telling the survivors to
+//! re-process the dead shard's share of the lost segment — so training
+//! continues with exact arrival coverage. `--chaos-kill-at T` makes the
+//! coordinator SIGKILL one child mid-segment on purpose, which is how the
+//! crash-recovery e2e exercises this path deterministically enough to
+//! assert on.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cluster::node::NodePreq;
+use crate::cluster::ring::{HashRing, NodeId};
+use crate::cluster::trainer::{
+    build_ring_schedule_with, fold_preq_records, sync_points, ClusterResult, MergeMaterial,
+    NodeSummary, REMAP_SAMPLE,
+};
+use crate::cluster::transport::{
+    ChurnOrder, Message, GOSSIP_DELTA, GOSSIP_FULL, GOSSIP_NONE,
+};
+use crate::cluster::wire;
+use crate::config::ClusterConfig;
+use crate::metrics::rolling::{RollingPoint, RollingWindow};
+use crate::runtime::{Backend, NativeBackend, TaskKind};
+use crate::stream::source::{build_source, StreamKnobs};
+use crate::stream::tick::{fnv_fold, FNV_OFFSET};
+use crate::util::timer::{PhaseTimer, Stopwatch};
+
+/// How long a worker may stay silent (no frames, no heartbeats) before
+/// the coordinator declares it dead and SIGKILLs it. Workers heartbeat
+/// every 500 ms from a side thread, so only a truly wedged process trips
+/// this.
+const STALE_AFTER: Duration = Duration::from_secs(30);
+
+/// Handshake budget for a spawned child to connect and say `Hello`.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One spawned worker process, as the coordinator sees it.
+struct Worker {
+    id: NodeId,
+    child: Option<Child>,
+    /// write half of the control connection
+    stream: TcpStream,
+    rx: mpsc::Receiver<Option<Message>>,
+    last_heard: Arc<Mutex<Instant>>,
+    /// participating in the barrier protocol
+    alive: bool,
+    /// connection lost / process dead, conversion may still be pending
+    crashed: bool,
+    /// crash already converted into churn (or graceful shutdown)
+    converted: bool,
+    /// last barrier tick this worker completed (`BarrierReady` received)
+    reported_until: u64,
+    // -- last reported summary (doubles as the post-mortem record) --
+    digest: u64,
+    ticks_processed: u64,
+    samples_seen: u64,
+    samples_trained: u64,
+    samples_replayed: u64,
+    drift_detections: u64,
+    store_len: usize,
+    // -- per-barrier stashes --
+    barrier_preq: Vec<NodePreq>,
+    barrier_gossip: Option<Message>,
+    barrier_state: Option<Message>,
+}
+
+impl Worker {
+    fn send(&mut self, msg: &Message) -> bool {
+        if self.crashed {
+            return false;
+        }
+        if let Err(e) = wire::check_encodable(msg) {
+            // a coordinator-side bug, not a dead worker: report it loudly
+            // and do NOT mark the healthy worker crashed — converting it
+            // into kill-churn would mask the real problem as node death
+            log::error!(
+                "coordinator: refusing unencodable frame for worker {}: {e}",
+                self.id
+            );
+            return false;
+        }
+        self.send_frame(&wire::encode(msg))
+    }
+
+    fn send_frame(&mut self, frame: &[u8]) -> bool {
+        if self.crashed {
+            return false;
+        }
+        let ok = self
+            .stream
+            .write_all(frame)
+            .and_then(|_| self.stream.flush())
+            .is_ok();
+        if !ok {
+            self.crashed = true;
+        }
+        ok
+    }
+
+    /// Next non-heartbeat frame, or `None` when the worker is dead
+    /// (closed connection or stale heartbeat — the latter also SIGKILLs).
+    fn recv(&mut self) -> Option<Message> {
+        loop {
+            match self.rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(Some(Message::Heartbeat { .. })) => continue,
+                Ok(Some(m)) => return Some(m),
+                Ok(None) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    self.crashed = true;
+                    return None;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    let stale = self.last_heard.lock().unwrap().elapsed() > STALE_AFTER;
+                    if stale {
+                        log::warn!("worker {}: heartbeats stopped, declaring dead", self.id);
+                        if let Some(c) = self.child.as_mut() {
+                            let _ = c.kill();
+                        }
+                        self.crashed = true;
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    fn reap(&mut self) {
+        if let Some(mut c) = self.child.take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn reader_thread(
+    mut stream: TcpStream,
+    tx: mpsc::Sender<Option<Message>>,
+    last_heard: Arc<Mutex<Instant>>,
+) {
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(Some(m)) => {
+                *last_heard.lock().unwrap() = Instant::now();
+                if tx.send(Some(m)).is_err() {
+                    return;
+                }
+            }
+            Ok(None) | Err(_) => {
+                let _ = tx.send(None);
+                return;
+            }
+        }
+    }
+}
+
+/// The multi-process cluster coordinator (see module docs).
+pub struct Coordinator {
+    cfg: ClusterConfig,
+    cfg_json: String,
+    exe: PathBuf,
+    listener: TcpListener,
+    addr: String,
+    workers: Vec<Worker>,
+    // churn state
+    chaos_events: Vec<(u64, NodeId)>,
+    pending_churn: Vec<ChurnOrder>,
+    current_ring: HashRing,
+    remaps: Vec<(u64, f64)>,
+    chaos_fired: bool,
+    // accounting
+    gossip_rounds: u64,
+    merges: u64,
+    gossip_bytes: u64,
+    merge_bytes: u64,
+}
+
+impl Coordinator {
+    /// Bind the control listener and prepare a run. `exe` is the binary
+    /// spawned as `exe worker --coordinator ADDR --node-id N` — the
+    /// current executable from the CLI, an explicit path from tests and
+    /// benches (whose own executable has no `worker` subcommand).
+    pub fn new(cfg: &ClusterConfig, exe: PathBuf) -> anyhow::Result<Coordinator> {
+        let mut cfg = cfg.clone();
+        cfg.worker_mode = "processes".into();
+        cfg.validate()?;
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| anyhow::anyhow!("coordinator: bind control listener: {e}"))?;
+        let addr = listener.local_addr()?.to_string();
+        let cfg_json = cfg.to_json().to_string();
+        let current_ring =
+            HashRing::with_nodes(cfg.stream.seed, cfg.vnodes, 0..cfg.nodes);
+        Ok(Coordinator {
+            cfg,
+            cfg_json,
+            exe,
+            listener,
+            addr,
+            workers: Vec::new(),
+            chaos_events: Vec::new(),
+            pending_churn: Vec::new(),
+            current_ring,
+            remaps: Vec::new(),
+            chaos_fired: false,
+            gossip_rounds: 0,
+            merges: 0,
+            gossip_bytes: 0,
+            merge_bytes: 0,
+        })
+    }
+
+    fn spawn_child(&self, node: NodeId) -> anyhow::Result<Child> {
+        Command::new(&self.exe)
+            .arg("worker")
+            .arg("--coordinator")
+            .arg(&self.addr)
+            .arg("--node-id")
+            .arg(node.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .map_err(|e| {
+                anyhow::anyhow!("coordinator: spawn worker {node} ({:?}): {e}", self.exe)
+            })
+    }
+
+    /// Accept `children` (already spawned, keyed by node id) until every
+    /// one has said `Hello`, then register reader threads.
+    fn accept_workers(
+        &mut self,
+        mut children: BTreeMap<NodeId, Child>,
+    ) -> anyhow::Result<()> {
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        self.listener.set_nonblocking(true)?;
+        while !children.is_empty() {
+            match self.listener.accept() {
+                Ok((mut stream, peer)) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+                    // a stray local connection (port scanner, curious
+                    // operator) must not abort a training run: anything
+                    // that is not a clean Hello from a spawned child is
+                    // dropped, and we keep accepting until the deadline
+                    let id = match wire::read_frame(&mut stream) {
+                        Ok(Some(Message::Hello { from })) => from,
+                        other => {
+                            log::warn!(
+                                "coordinator: dropping non-worker connection from {peer} \
+                                 (first frame: {other:?})"
+                            );
+                            continue;
+                        }
+                    };
+                    let Some(child) = children.remove(&id) else {
+                        log::warn!(
+                            "coordinator: dropping connection claiming unexpected worker id {id}"
+                        );
+                        continue;
+                    };
+                    stream.set_read_timeout(None)?;
+                    let read_half = stream.try_clone()?;
+                    let (tx, rx) = mpsc::channel();
+                    let last_heard = Arc::new(Mutex::new(Instant::now()));
+                    {
+                        let last_heard = last_heard.clone();
+                        std::thread::spawn(move || reader_thread(read_half, tx, last_heard));
+                    }
+                    self.workers.push(Worker {
+                        id,
+                        child: Some(child),
+                        stream,
+                        rx,
+                        last_heard,
+                        alive: true,
+                        crashed: false,
+                        converted: false,
+                        reported_until: 0,
+                        digest: FNV_OFFSET,
+                        ticks_processed: 0,
+                        samples_seen: 0,
+                        samples_trained: 0,
+                        samples_replayed: 0,
+                        drift_detections: 0,
+                        store_len: 0,
+                        barrier_preq: Vec::new(),
+                        barrier_gossip: None,
+                        barrier_state: None,
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // a child that died before Hello would hang us forever
+                    for (id, c) in children.iter_mut() {
+                        if let Ok(Some(status)) = c.try_wait() {
+                            anyhow::bail!(
+                                "coordinator: worker {id} exited during handshake ({status})"
+                            );
+                        }
+                    }
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "coordinator: workers never connected: {:?}",
+                        children.keys().collect::<Vec<_>>()
+                    );
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        self.listener.set_nonblocking(false)?;
+        // keep id order stable regardless of connect order
+        self.workers.sort_by_key(|w| w.id);
+        Ok(())
+    }
+
+    fn alive_ids(&self) -> Vec<NodeId> {
+        self.workers
+            .iter()
+            .filter(|w| w.alive && !w.crashed)
+            .map(|w| w.id)
+            .collect()
+    }
+
+    /// Convert every un-converted crash into churn: ring epoch at the last
+    /// barrier the dead worker completed, bounded-remap measurement, and a
+    /// `ChurnOrder` telling survivors to re-process the dead shard's share
+    /// of `[epoch, survivors_at)`.
+    fn convert_crashes(&mut self, survivors_at: u64) -> anyhow::Result<()> {
+        for i in 0..self.workers.len() {
+            if !(self.workers[i].crashed && !self.workers[i].converted) {
+                continue;
+            }
+            let (id, epoch) = (self.workers[i].id, self.workers[i].reported_until);
+            let before = self.current_ring.clone();
+            self.current_ring.remove_node(id);
+            anyhow::ensure!(
+                !self.current_ring.is_empty(),
+                "coordinator: every worker is dead"
+            );
+            let frac =
+                HashRing::remap_fraction(&before, &self.current_ring, REMAP_SAMPLE);
+            self.remaps.push((epoch, frac));
+            self.chaos_events.push((epoch, id));
+            self.pending_churn.push(ChurnOrder {
+                dead: id,
+                epoch_tick: epoch,
+                backfill_to: survivors_at,
+            });
+            let w = &mut self.workers[i];
+            w.alive = false;
+            w.converted = true;
+            w.reap();
+            log::warn!(
+                "coordinator: worker {id} died; converted to churn (epoch @{epoch}, \
+                 backfill to {survivors_at}, {:.1}% of keys remapped)",
+                100.0 * frac
+            );
+        }
+        Ok(())
+    }
+
+    /// Collect the barrier from one worker: `BarrierReady`, then the
+    /// payloads its `BarrierGo` flags ordered. Returns an error only for
+    /// protocol violations / reported failures — a death just marks the
+    /// worker crashed.
+    fn collect_one(
+        &mut self,
+        i: usize,
+        sync: u64,
+        gossip: u8,
+        state_expected: bool,
+    ) -> anyhow::Result<()> {
+        let w = &mut self.workers[i];
+        w.barrier_preq.clear();
+        w.barrier_gossip = None;
+        w.barrier_state = None;
+        if w.crashed {
+            return Ok(());
+        }
+        match w.recv() {
+            Some(Message::BarrierReady {
+                preq,
+                digest,
+                ticks_processed,
+                samples_seen,
+                samples_trained,
+                samples_replayed,
+                drift_detections,
+                store_len,
+                failed,
+                ..
+            }) => {
+                anyhow::ensure!(
+                    failed.is_empty(),
+                    "cluster worker failed: {failed}"
+                );
+                w.reported_until = sync;
+                w.barrier_preq = preq;
+                w.digest = digest;
+                w.ticks_processed = ticks_processed;
+                w.samples_seen = samples_seen;
+                w.samples_trained = samples_trained;
+                w.samples_replayed = samples_replayed;
+                w.drift_detections = drift_detections;
+                w.store_len = store_len as usize;
+            }
+            Some(other) => anyhow::bail!(
+                "coordinator: worker {} sent {other:?} instead of BarrierReady",
+                w.id
+            ),
+            None => return Ok(()),
+        }
+        if gossip != GOSSIP_NONE {
+            match w.recv() {
+                Some(m @ Message::StoreGossip { .. }) => w.barrier_gossip = Some(m),
+                Some(other) => anyhow::bail!(
+                    "coordinator: worker {} sent {other:?} instead of StoreGossip",
+                    w.id
+                ),
+                None => return Ok(()),
+            }
+        }
+        if state_expected {
+            match w.recv() {
+                Some(m @ Message::State { .. }) => w.barrier_state = Some(m),
+                Some(other) => anyhow::bail!(
+                    "coordinator: worker {} sent {other:?} instead of State",
+                    w.id
+                ),
+                None => return Ok(()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Relay the collected gossip messages hub-and-spoke, in sender-id
+    /// order, skipping empty deltas exactly like the thread coordinator.
+    /// Returns wire bytes shipped to peers (the same `frame_len × peers`
+    /// the in-process run reports, so the two modes account identically).
+    fn relay_gossip(&mut self, mode: u8) -> u64 {
+        let ids = self.alive_ids();
+        if ids.len() < 2 {
+            return 0;
+        }
+        let mut bytes = 0u64;
+        for i in 0..self.workers.len() {
+            if !(self.workers[i].alive && !self.workers[i].crashed) {
+                continue;
+            }
+            let Some(msg) = self.workers[i].barrier_gossip.take() else {
+                continue;
+            };
+            if mode == GOSSIP_DELTA {
+                if let Message::StoreGossip { entries, .. } = &msg {
+                    if entries.is_empty() {
+                        continue; // a quiet shard's delta carries nothing
+                    }
+                }
+            }
+            let from = self.workers[i].id;
+            let frame = wire::encode(&msg);
+            let flen = wire::frame_len(&msg) as u64;
+            for j in 0..self.workers.len() {
+                if self.workers[j].id == from
+                    || !(self.workers[j].alive && !self.workers[j].crashed)
+                {
+                    continue;
+                }
+                if self.workers[j].send_frame(&frame) {
+                    bytes += flen;
+                }
+            }
+        }
+        bytes
+    }
+
+    /// Take the barrier `State` stashes from every live worker, in id
+    /// order — the single owner of the contributor-set rule shared by
+    /// barrier merges and the join bootstrap. Returns the merge material,
+    /// the uplink frame bytes, and the contributor count.
+    fn take_states(&mut self) -> (MergeMaterial, u64, usize) {
+        let mut mat = MergeMaterial::default();
+        let mut bytes = 0u64;
+        let mut contributed = 0usize;
+        for w in &mut self.workers {
+            if !(w.alive && !w.crashed) {
+                continue;
+            }
+            if let Some(msg) = w.barrier_state.take() {
+                bytes += wire::frame_len(&msg) as u64;
+                mat.push(msg);
+                contributed += 1;
+            }
+        }
+        (mat, bytes, contributed)
+    }
+
+    /// One merge round over the collected `State` material: weighted
+    /// average at the hub, `MergePayload` back to every live worker.
+    /// Mirrors the thread coordinator's no-op when fewer than two nodes
+    /// are alive. Returns wire bytes (uplink states + downlink payloads).
+    fn do_merge(&mut self) -> anyhow::Result<u64> {
+        if self.alive_ids().len() < 2 {
+            return Ok(0);
+        }
+        let (mat, mut bytes, contributed) = self.take_states();
+        anyhow::ensure!(contributed >= 1, "merge with no contributing workers");
+        let (avg, snap) = mat.merged()?;
+        let payload = Message::MergePayload { tensors: avg, policy: snap };
+        wire::check_encodable(&payload)?;
+        let frame = wire::encode(&payload);
+        let flen = wire::frame_len(&payload) as u64;
+        for i in 0..self.workers.len() {
+            if self.workers[i].alive
+                && !self.workers[i].crashed
+                && self.workers[i].send_frame(&frame)
+            {
+                bytes += flen;
+            }
+        }
+        Ok(bytes)
+    }
+
+    /// One *uniform* barrier round: the same `BarrierGo` flags to every
+    /// live worker, collect the replies, fold the prequential stashes.
+    /// Shared by the join mini-round and the crash-recovery round (the
+    /// main segment round stays in `drive` — its flags differ per worker
+    /// around a scheduled kill/join).
+    #[allow(clippy::too_many_arguments)]
+    fn uniform_round(
+        &mut self,
+        until: u64,
+        gossip: u8,
+        merge: bool,
+        churn: Vec<ChurnOrder>,
+        classification: bool,
+        roll_loss: &mut RollingWindow,
+        roll_acc: &mut RollingWindow,
+        rolling: &mut Vec<RollingPoint>,
+    ) -> anyhow::Result<()> {
+        let mut flags: Vec<(usize, u8, bool)> = Vec::new();
+        for i in 0..self.workers.len() {
+            if !(self.workers[i].alive && !self.workers[i].crashed) {
+                continue;
+            }
+            let go = Message::BarrierGo {
+                until,
+                gossip,
+                merge,
+                boot: false,
+                churn: churn.clone(),
+            };
+            if self.workers[i].send(&go) {
+                flags.push((i, gossip, merge));
+            }
+        }
+        for &(i, g, st) in &flags {
+            self.collect_one(i, until, g, st)?;
+        }
+        self.fold_barrier(classification, roll_loss, roll_acc, rolling);
+        Ok(())
+    }
+
+    /// Fold this barrier's prequential stashes, in worker-id order — the
+    /// same summation order `cluster::run` uses, for bit-identical
+    /// rolling traces.
+    fn fold_barrier(
+        &mut self,
+        classification: bool,
+        roll_loss: &mut RollingWindow,
+        roll_acc: &mut RollingWindow,
+        rolling: &mut Vec<RollingPoint>,
+    ) {
+        let per_node: Vec<Vec<NodePreq>> = self
+            .workers
+            .iter_mut()
+            .map(|w| std::mem::take(&mut w.barrier_preq))
+            .collect();
+        fold_preq_records(&per_node, classification, roll_loss, roll_acc, rolling);
+    }
+
+    /// Run the whole job. Consumes the coordinator.
+    pub fn run(mut self) -> anyhow::Result<ClusterResult> {
+        let r = self.drive();
+        // whatever happened, never leave children behind
+        for w in &mut self.workers {
+            let _ = w.send(&Message::Shutdown);
+        }
+        for w in &mut self.workers {
+            w.reap();
+        }
+        r
+    }
+
+    fn drive(&mut self) -> anyhow::Result<ClusterResult> {
+        let cfg = self.cfg.clone();
+        let s = &cfg.stream;
+        let max = s.max_ticks as u64;
+        let delta = cfg.gossip == "delta";
+
+        // traffic/task metadata (for rolling-accuracy semantics), plus the
+        // precompiled remap accounting for the *scheduled* churn
+        let source = build_source(
+            &s.dataset,
+            StreamKnobs {
+                seed: s.seed,
+                drift_period: s.drift_period,
+                burst_period: s.burst_period,
+                burst_min: s.burst_min,
+            },
+        )?;
+        let probe = NativeBackend::new();
+        let meta = probe.family_meta(source.family())?;
+        let classification = meta.task != TaskKind::Regression;
+        let (_, scheduled_remaps) = build_ring_schedule_with(&cfg, &[]);
+        self.remaps = scheduled_remaps;
+
+        log::info!(
+            "cluster start (processes): nodes={} vnodes={} stream={} γ={} B={} ticks={} gossip={}({}) merge={} kill@{} join@{} chaos@{}",
+            cfg.nodes,
+            cfg.vnodes,
+            s.dataset,
+            s.gamma,
+            meta.batch,
+            s.max_ticks,
+            cfg.gossip_every,
+            cfg.gossip,
+            cfg.merge_every,
+            cfg.kill_at,
+            cfg.join_at,
+            cfg.chaos_kill_at
+        );
+
+        // spawn + handshake + assign
+        let mut children = BTreeMap::new();
+        for id in 0..cfg.nodes {
+            children.insert(id, self.spawn_child(id)?);
+        }
+        self.accept_workers(children)?;
+        let cfg_json = self.cfg_json.clone();
+        for w in &mut self.workers {
+            let assign = Message::Assign {
+                node: w.id,
+                first_tick: 0,
+                config: cfg_json.clone(),
+                chaos: Vec::new(),
+            };
+            anyhow::ensure!(
+                w.send(&assign),
+                "coordinator: worker {} dropped before Assign",
+                w.id
+            );
+        }
+
+        let mut roll_loss = RollingWindow::new(s.window);
+        let mut roll_acc = RollingWindow::new(s.window);
+        let mut rolling: Vec<RollingPoint> = Vec::new();
+        let clock = Stopwatch::new();
+        let mut prev = 0u64;
+
+        for &sync in &sync_points(&cfg) {
+            let is_kill = cfg.kill_at > 0 && cfg.kill_at as u64 == sync;
+            let is_join = cfg.join_at > 0 && cfg.join_at as u64 == sync;
+            let cadence_gossip = sync < max
+                && cfg.gossip_every > 0
+                && sync % cfg.gossip_every as u64 == 0
+                && !is_join;
+            let cadence_merge =
+                sync < max && cfg.merge_every > 0 && sync % cfg.merge_every as u64 == 0;
+            let gossip_mode = if cadence_gossip {
+                if delta && self.gossip_rounds % cfg.full_gossip_every as u64 != 0 {
+                    GOSSIP_DELTA
+                } else {
+                    GOSSIP_FULL
+                }
+            } else {
+                GOSSIP_NONE
+            };
+
+            // crashes noticed after the previous barrier's conversion pass
+            // (e.g. during relays) become churn *before* this segment runs
+            self.convert_crashes(prev)?;
+            let churn = std::mem::take(&mut self.pending_churn);
+
+            // ---- segment barrier: GO, (maybe) chaos, collect ----
+            let mut flags: Vec<(usize, u8, bool)> = Vec::new(); // (idx, gossip, state?)
+            for i in 0..self.workers.len() {
+                if !(self.workers[i].alive && !self.workers[i].crashed) {
+                    continue;
+                }
+                let victim = is_kill && self.workers[i].id == cfg.kill_node;
+                let g = if victim { GOSSIP_NONE } else { gossip_mode };
+                let m = cadence_merge && !victim && !is_join;
+                let b = is_join && !victim;
+                let go = Message::BarrierGo {
+                    until: sync,
+                    gossip: g,
+                    merge: m,
+                    boot: b,
+                    churn: churn.clone(),
+                };
+                if self.workers[i].send(&go) {
+                    flags.push((i, g, m || b));
+                }
+            }
+            if cfg.chaos_kill_at > 0
+                && !self.chaos_fired
+                && prev <= cfg.chaos_kill_at as u64
+                && (cfg.chaos_kill_at as u64) < sync
+            {
+                self.chaos_fired = true;
+                // let the segment get going, then SIGKILL mid-flight
+                std::thread::sleep(Duration::from_millis(25));
+                if let Some(w) = self
+                    .workers
+                    .iter_mut()
+                    .find(|w| w.id == cfg.chaos_kill_node && w.alive)
+                {
+                    log::warn!("coordinator: chaos-killing worker {}", w.id);
+                    if let Some(c) = w.child.as_mut() {
+                        let _ = c.kill();
+                    }
+                }
+            }
+            for &(i, g, st) in &flags {
+                self.collect_one(i, sync, g, st)?;
+            }
+            self.fold_barrier(classification, &mut roll_loss, &mut roll_acc, &mut rolling);
+
+            // ---- churn: crashes first (mirrors kill-before-gossip), then
+            // the scheduled kill, then the scheduled join ----
+            self.convert_crashes(sync)?;
+            if is_kill {
+                if let Some(w) = self
+                    .workers
+                    .iter_mut()
+                    .find(|w| w.id == cfg.kill_node && w.alive && !w.crashed)
+                {
+                    let _ = w.send(&Message::Shutdown);
+                    w.alive = false;
+                    w.converted = true;
+                    if let Some(mut c) = w.child.take() {
+                        let _ = c.wait();
+                    }
+                    log::info!("cluster: killed worker {} at tick {sync}", cfg.kill_node);
+                }
+                self.current_ring.remove_node(cfg.kill_node);
+            }
+
+            if cadence_gossip {
+                let bytes = self.relay_gossip(gossip_mode);
+                self.gossip_bytes += bytes;
+                self.gossip_rounds += 1;
+            }
+
+            if is_join {
+                self.join_round(
+                    sync,
+                    cadence_merge,
+                    classification,
+                    &mut roll_loss,
+                    &mut roll_acc,
+                    &mut rolling,
+                )?;
+            } else if cadence_merge {
+                let bytes = self.do_merge()?;
+                self.merge_bytes += bytes;
+                self.merges += 1;
+            }
+            prev = sync;
+        }
+
+        // a worker that died during the *final* segment (or final relays)
+        // leaves churn no later BarrierGo can deliver — run one recovery
+        // round so survivors still backfill the dead shard's share and
+        // report their corrected counters, keeping arrival coverage exact
+        self.convert_crashes(max)?;
+        let churn = std::mem::take(&mut self.pending_churn);
+        if !churn.is_empty() {
+            self.uniform_round(
+                max,
+                GOSSIP_NONE,
+                false,
+                churn,
+                classification,
+                &mut roll_loss,
+                &mut roll_acc,
+                &mut rolling,
+            )?;
+            self.convert_crashes(max)?;
+            if !self.pending_churn.is_empty() {
+                // a second death during recovery: nobody left to backfill
+                // for it — surface the coverage gap instead of hiding it
+                log::warn!(
+                    "coordinator: {} churn event(s) could not be backfilled before \
+                     shutdown; arrival coverage may be short",
+                    self.pending_churn.len()
+                );
+            }
+        }
+
+        // graceful shutdown; the final barrier already reported every
+        // worker's end-of-run counters
+        for w in &mut self.workers {
+            if w.alive && !w.crashed {
+                let _ = w.send(&Message::Shutdown);
+            }
+        }
+        for w in &mut self.workers {
+            if w.alive {
+                if let Some(mut c) = w.child.take() {
+                    let _ = c.wait();
+                }
+            }
+        }
+
+        let elapsed = clock.elapsed_secs();
+        let mut digest = FNV_OFFSET;
+        let mut samples_seen = 0u64;
+        let mut samples_trained = 0u64;
+        let mut samples_replayed = 0u64;
+        let mut drift_detections = 0u64;
+        let mut store_live_total = 0usize;
+        let mut summaries = Vec::new();
+        for w in &self.workers {
+            digest = fnv_fold(digest, w.digest);
+            samples_seen += w.samples_seen;
+            samples_trained += w.samples_trained;
+            samples_replayed += w.samples_replayed;
+            drift_detections += w.drift_detections;
+            if w.alive {
+                store_live_total += w.store_len;
+            }
+            summaries.push(NodeSummary {
+                id: w.id,
+                ticks_processed: w.ticks_processed,
+                samples_seen: w.samples_seen,
+                samples_trained: w.samples_trained,
+                samples_replayed: w.samples_replayed,
+                store_len: w.store_len,
+                alive_at_end: w.alive,
+            });
+        }
+        let mut remaps = std::mem::take(&mut self.remaps);
+        remaps.sort_by(|a, b| a.0.cmp(&b.0));
+
+        Ok(ClusterResult {
+            nodes_started: cfg.nodes,
+            ticks: max,
+            samples_seen,
+            samples_trained,
+            samples_replayed,
+            drift_detections,
+            final_rolling_loss: roll_loss.mean() as f32,
+            final_rolling_acc: if classification {
+                roll_acc.mean() as f32
+            } else {
+                f32::NAN
+            },
+            rolling,
+            digest,
+            samples_per_sec: samples_seen as f64 / elapsed.max(1e-9),
+            gossip_rounds: self.gossip_rounds,
+            merges: self.merges,
+            gossip_bytes: self.gossip_bytes,
+            merge_bytes: self.merge_bytes,
+            store_live_total,
+            remaps,
+            node_summaries: summaries,
+            phases: PhaseTimer::default(),
+        })
+    }
+
+    /// The scheduled-join barrier: boot a fresh worker process from the
+    /// survivors' merged state, then run the same join round the thread
+    /// coordinator runs — an immediate full-gossip seeding (plus the
+    /// cadence merge when it lands on the join tick), joiner included.
+    #[allow(clippy::too_many_arguments)]
+    fn join_round(
+        &mut self,
+        sync: u64,
+        cadence_merge: bool,
+        classification: bool,
+        roll_loss: &mut RollingWindow,
+        roll_acc: &mut RollingWindow,
+        rolling: &mut Vec<RollingPoint>,
+    ) -> anyhow::Result<()> {
+        let join_id = self.cfg.nodes;
+        // boot material: every survivor sent its State with the `boot`
+        // flag at the segment barrier (bytes uncounted — the in-process
+        // join bootstrap never crosses a transport either)
+        let (mat, _, contributed) = self.take_states();
+        anyhow::ensure!(contributed >= 1, "join bootstrap: no surviving contributors");
+        let (tensors, snap) = mat.merged().map_err(|e| anyhow::anyhow!("join bootstrap: {e}"))?;
+
+        self.current_ring.add_node(join_id);
+        let mut children = BTreeMap::new();
+        children.insert(join_id, self.spawn_child(join_id)?);
+        self.accept_workers(children)?;
+        let ji = self
+            .workers
+            .iter()
+            .position(|w| w.id == join_id)
+            .expect("joiner registered");
+        let assign = Message::Assign {
+            node: join_id,
+            first_tick: sync,
+            config: self.cfg_json.clone(),
+            chaos: self.chaos_events.clone(),
+        };
+        anyhow::ensure!(
+            self.workers[ji].send(&assign)
+                && self.workers[ji].send(&Message::MergePayload { tensors, policy: snap }),
+            "coordinator: joiner dropped during bootstrap"
+        );
+        log::info!("cluster: worker {join_id} joined at tick {sync}");
+
+        // join mini-round: no ticks to run (everyone is already at `sync`),
+        // but every live worker — joiner included — re-synchronizes via a
+        // full gossip round and, on a merge cadence, a cluster merge
+        self.uniform_round(
+            sync,
+            GOSSIP_FULL,
+            cadence_merge,
+            Vec::new(),
+            classification,
+            roll_loss,
+            roll_acc,
+            rolling,
+        )?;
+        self.convert_crashes(sync)?;
+        let bytes = self.relay_gossip(GOSSIP_FULL);
+        self.gossip_bytes += bytes;
+        self.gossip_rounds += 1;
+        if cadence_merge {
+            let bytes = self.do_merge()?;
+            self.merge_bytes += bytes;
+            self.merges += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Run a multi-process cluster job, spawning workers from the current
+/// executable (the CLI path — `adaselection cluster --workers processes`).
+pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
+    let exe = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("coordinator: resolve current executable: {e}"))?;
+    run_with_exe(cfg, &exe)
+}
+
+/// Run with an explicit worker binary — tests and benches pass
+/// `env!("CARGO_BIN_EXE_adaselection")` because *their* executable has no
+/// `worker` subcommand.
+pub fn run_with_exe(cfg: &ClusterConfig, exe: &Path) -> anyhow::Result<ClusterResult> {
+    Coordinator::new(cfg, exe.to_path_buf())?.run()
+}

@@ -1,0 +1,37 @@
+//! Multi-process cluster workers: real OS processes instead of scoped
+//! threads (ROADMAP: "a worker binary + a coordinator that spawns
+//! processes instead of threads (barrier protocol over the same wire)").
+//!
+//!   * [`worker`] — the `adaselection worker` subcommand body: connect to
+//!     the coordinator, receive a [`crate::config::ClusterConfig`] +
+//!     ring-shard assignment over the control plane, then run the very
+//!     same [`crate::cluster::ClusterNode`]/`TickEngine` loop the thread
+//!     coordinator drives, between wire-level barriers;
+//!   * [`coordinator`] — [`coordinator::Coordinator`]: spawns N children
+//!     of the current executable with `std::process::Command`, drives the
+//!     identical sync-barrier/gossip/merge schedule the thread
+//!     coordinator runs (the barrier sequence comes from the shared
+//!     `sync_points`), detects a dead child (closed connection or missed
+//!     heartbeats) and converts it into the kill-churn path — ring epoch,
+//!     bounded remap, survivor backfill — so training continues, and
+//!     aggregates cluster-wide rolling metrics with the same fold the
+//!     in-process run uses.
+//!
+//! The control plane is the `Control` family of [`crate::cluster::wire`]
+//! messages (`Hello`/`Assign`/`BarrierGo`/`BarrierReady`/`MergePayload`/
+//! `Shutdown`/`Heartbeat`), versioned alongside the gossip/merge payloads
+//! in the same checksummed frames. Because every payload round-trips
+//! bitwise and the coordinator replays the exact thread-mode barrier
+//! schedule, a `--workers processes` run produces **bit-identical**
+//! digests, rolling metrics and remap accounting to the equivalent
+//! in-process run (`tests/cluster_proc_e2e.rs` pins this).
+//!
+//! CLI surface: `adaselection cluster --workers processes --nodes 4 ...`
+//! (the coordinator side) and the internally-spawned
+//! `adaselection worker --coordinator 127.0.0.1:PORT --node-id N`.
+
+pub mod coordinator;
+pub mod worker;
+
+pub use coordinator::{run, run_with_exe, Coordinator};
+pub use worker::run_worker;

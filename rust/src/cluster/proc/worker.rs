@@ -1,0 +1,269 @@
+//! The worker-process side of the multi-process cluster: a frame-driven
+//! state machine around one [`ClusterNode`].
+//!
+//! Life cycle: connect to the coordinator, send `Hello`, receive `Assign`
+//! (the full cluster config as JSON + this worker's node id and first
+//! tick), then obey frames until `Shutdown`:
+//!
+//!   * `BarrierGo { until, gossip, merge, boot, churn }` — apply any
+//!     crash-churn orders (ring epoch + backfill of the dead node's
+//!     share), run the tick loop to `until`, then report `BarrierReady`
+//!     (prequential records + running counters) followed by the ordered
+//!     barrier payloads: a store-gossip snapshot/delta and/or the merge
+//!     `State` material;
+//!   * `StoreGossip` — merge a peer's entries freshest-tick-wins;
+//!   * `MergePayload` — adopt the cluster-averaged model/policy state
+//!     (merge barriers; also the join bootstrap).
+//!
+//! A side thread heartbeats twice a second so the coordinator can tell a
+//! hung process from a long training segment. Any error is reported in
+//! `BarrierReady::failed` (best effort) before the process exits nonzero
+//! — a hard crash instead surfaces at the coordinator as a closed
+//! connection and becomes churn.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::node::ClusterNode;
+use crate::cluster::ring::NodeId;
+use crate::cluster::trainer::{build_ring_schedule_with, make_engine, replay_budget};
+use crate::cluster::transport::{ChurnOrder, Message, GOSSIP_FULL, GOSSIP_NONE};
+use crate::cluster::wire;
+use crate::config::ClusterConfig;
+use crate::runtime::{Backend, NativeBackend};
+use crate::stream::source::{build_source, StreamKnobs};
+use crate::util::json::Json;
+
+/// Heartbeat cadence of the side thread.
+const HEARTBEAT_MS: u64 = 500;
+
+/// Send one wire frame over the shared writer.
+fn send_msg(writer: &Mutex<TcpStream>, msg: &Message) -> anyhow::Result<()> {
+    wire::check_encodable(msg)?;
+    let frame = wire::encode(msg);
+    let mut w = writer.lock().unwrap();
+    std::io::Write::write_all(&mut *w, &frame)?;
+    std::io::Write::flush(&mut *w)?;
+    Ok(())
+}
+
+/// Everything a worker derives from its `Assign`.
+struct WorkerState {
+    cfg: ClusterConfig,
+    node: ClusterNode<NativeBackend>,
+    /// unplanned kills applied so far — the schedule recompile input
+    chaos: Vec<(u64, NodeId)>,
+}
+
+fn build_state(
+    config_json: &str,
+    node_id: NodeId,
+    first_tick: u64,
+    chaos: Vec<(u64, NodeId)>,
+) -> anyhow::Result<WorkerState> {
+    let cfg = ClusterConfig::from_json(
+        &Json::parse(config_json).map_err(|e| anyhow::anyhow!("assign config: {e}"))?,
+    )?;
+    let s = &cfg.stream;
+    anyhow::ensure!(
+        s.backend == "native",
+        "process workers are native-only (got backend '{}')",
+        s.backend
+    );
+    let source = build_source(
+        &s.dataset,
+        StreamKnobs {
+            seed: s.seed,
+            drift_period: s.drift_period,
+            burst_period: s.burst_period,
+            burst_min: s.burst_min,
+        },
+    )?;
+    let mut backend = NativeBackend::new();
+    let meta = backend.family_meta(source.family())?;
+    let b = meta.batch;
+    let state = backend.init_state(&meta.name, s.seed as i32)?;
+    let engine = make_engine(&cfg, node_id, b, replay_budget(&cfg, b))?;
+    let (rings, _) = build_ring_schedule_with(&cfg, &chaos);
+    let node = ClusterNode::new(
+        node_id,
+        backend,
+        state,
+        engine,
+        meta.name.clone(),
+        source,
+        rings,
+        b,
+        first_tick,
+        s.max_ticks,
+        s.eval_every,
+        s.workers,
+        s.capacity,
+    );
+    Ok(WorkerState { cfg, node, chaos })
+}
+
+/// Apply one crash-churn order: recompile the ownership timeline with the
+/// dead node removed, rebuild the loader, and redo the dead node's share
+/// of the segment that died with it.
+fn apply_churn(ws: &mut WorkerState, order: &ChurnOrder) -> anyhow::Result<()> {
+    let old = ws.node.rings();
+    ws.chaos.push((order.epoch_tick, order.dead));
+    let (rings, _) = build_ring_schedule_with(&ws.cfg, &ws.chaos);
+    ws.node.adopt_schedule(rings);
+    let redone =
+        ws.node
+            .backfill(order.dead, &old, order.epoch_tick, order.backfill_to)?;
+    log::info!(
+        "worker {}: churn absorbed node {} (epoch @{}, backfilled {} arrivals)",
+        ws.node.id,
+        order.dead,
+        order.epoch_tick,
+        redone
+    );
+    Ok(())
+}
+
+/// One barrier: run to `until`, then emit BarrierReady + ordered payloads.
+fn run_barrier(
+    ws: &mut WorkerState,
+    writer: &Mutex<TcpStream>,
+    until: u64,
+    gossip: u8,
+    merge: bool,
+    boot: bool,
+) -> anyhow::Result<()> {
+    ws.node.run_until(until);
+    let failed = ws.node.failed.clone().unwrap_or_default();
+    let ready = Message::BarrierReady {
+        from: ws.node.id,
+        until,
+        preq: ws.node.take_preq(),
+        digest: ws.node.digest,
+        ticks_processed: ws.node.tick_digests.len() as u64,
+        samples_seen: ws.node.engine.samples_seen,
+        samples_trained: ws.node.engine.samples_trained,
+        samples_replayed: ws.node.engine.samples_replayed,
+        drift_detections: ws.node.engine.drift_detections(),
+        store_len: ws.node.engine.store.len() as u64,
+        failed: failed.clone(),
+    };
+    send_msg(writer, &ready)?;
+    anyhow::ensure!(failed.is_empty(), "worker failed: {failed}");
+    if gossip != GOSSIP_NONE {
+        // the coordinator skips relaying empty deltas, but the frame
+        // itself must always go up — it is what ends the wait
+        send_msg(writer, &ws.node.gossip_message(gossip == GOSSIP_FULL))?;
+    }
+    if merge || boot {
+        send_msg(writer, &ws.node.state_message()?)?;
+    }
+    Ok(())
+}
+
+/// Body of the `adaselection worker` subcommand. Blocks until the
+/// coordinator sends `Shutdown` (or the connection drops).
+pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
+    let mut reader = TcpStream::connect(coordinator).map_err(|e| {
+        anyhow::anyhow!("worker {node_id}: connect to coordinator {coordinator}: {e}")
+    })?;
+    reader.set_nodelay(true).ok();
+    let writer = Arc::new(Mutex::new(reader.try_clone()?));
+    send_msg(&writer, &Message::Hello { from: node_id })?;
+
+    // heartbeats from a side thread: a long training segment must not
+    // read as a dead process
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let writer = writer.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                if send_msg(&writer, &Message::Heartbeat { from: node_id }).is_err() {
+                    return; // coordinator gone; main loop will notice too
+                }
+                std::thread::sleep(std::time::Duration::from_millis(HEARTBEAT_MS));
+            }
+        })
+    };
+
+    let result = worker_loop(&mut reader, &writer, node_id);
+    stop.store(true, Ordering::Relaxed);
+    // on error, report it on the control channel (best effort) so the
+    // coordinator aborts with the cause instead of inferring a crash
+    if let Err(e) = &result {
+        let _ = send_msg(
+            &writer,
+            &Message::BarrierReady {
+                from: node_id,
+                until: 0,
+                preq: Vec::new(),
+                digest: 0,
+                ticks_processed: 0,
+                samples_seen: 0,
+                samples_trained: 0,
+                samples_replayed: 0,
+                drift_detections: 0,
+                store_len: 0,
+                failed: format!("{e:#}"),
+            },
+        );
+    }
+    let _ = hb.join();
+    result
+}
+
+fn worker_loop(
+    reader: &mut TcpStream,
+    writer: &Mutex<TcpStream>,
+    node_id: NodeId,
+) -> anyhow::Result<()> {
+    let mut ws: Option<WorkerState> = None;
+    loop {
+        let msg = match wire::read_frame(reader)? {
+            Some(m) => m,
+            None => anyhow::bail!("worker {node_id}: coordinator closed the connection"),
+        };
+        match msg {
+            Message::Assign { node, first_tick, config, chaos } => {
+                anyhow::ensure!(
+                    node == node_id,
+                    "worker {node_id}: assigned someone else's id {node}"
+                );
+                log::info!("worker {node_id}: assigned shard from tick {first_tick}");
+                ws = Some(build_state(&config, node, first_tick, chaos)?);
+            }
+            Message::StoreGossip { entries, .. } => {
+                let ws = ws.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!("worker {node_id}: gossip before Assign")
+                })?;
+                ws.node.merge_store(entries.as_slice());
+            }
+            Message::MergePayload { tensors, policy } => {
+                let ws = ws.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!("worker {node_id}: merge payload before Assign")
+                })?;
+                ws.node.apply_merged(&tensors, policy.as_ref())?;
+            }
+            Message::BarrierGo { until, gossip, merge, boot, churn } => {
+                let ws = ws.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!("worker {node_id}: barrier before Assign")
+                })?;
+                for order in &churn {
+                    apply_churn(ws, order)?;
+                }
+                run_barrier(ws, writer, until, gossip, merge, boot)?;
+            }
+            Message::Shutdown => {
+                log::info!("worker {node_id}: shutdown");
+                return Ok(());
+            }
+            // coordinator never heartbeats, but tolerating one is free
+            Message::Heartbeat { .. } => {}
+            other => anyhow::bail!(
+                "worker {node_id}: unexpected control frame {other:?}"
+            ),
+        }
+    }
+}

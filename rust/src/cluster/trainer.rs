@@ -52,12 +52,7 @@ use crate::stream::tick::{fnv_fold, DriftGamma, TickEngine, FNV_OFFSET};
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
 /// Keys sampled when measuring churn remap fractions.
-const REMAP_SAMPLE: u64 = 4096;
-
-/// In delta-gossip mode, every K-th gossip round (and every join round)
-/// still ships full snapshots so peers that evicted entries — or joined
-/// late — reconverge on the cluster-wide statistics.
-const FULL_GOSSIP_EVERY: u64 = 8;
+pub(crate) const REMAP_SAMPLE: u64 = 4096;
 
 /// Per-node accounting in the run report.
 #[derive(Clone, Debug)]
@@ -106,7 +101,9 @@ pub struct ClusterResult {
 }
 
 /// Barrier ticks: gossip/merge cadences, churn events, and the run end.
-fn sync_points(cfg: &ClusterConfig) -> Vec<u64> {
+/// Shared with the process coordinator (`cluster::proc`), which must drive
+/// the exact same barrier sequence for bit-identical runs.
+pub(crate) fn sync_points(cfg: &ClusterConfig) -> Vec<u64> {
     let max = cfg.stream.max_ticks as u64;
     let mut pts: Vec<u64> = Vec::new();
     for every in [cfg.gossip_every as u64, cfg.merge_every as u64] {
@@ -132,8 +129,15 @@ fn sync_points(cfg: &ClusterConfig) -> Vec<u64> {
 }
 
 /// Compile the churn schedule into ring epochs, measuring the remapped key
-/// fraction at every membership change.
-fn build_ring_schedule(cfg: &ClusterConfig) -> (Arc<RingSchedule>, Vec<(u64, f64)>) {
+/// fraction at every membership change. `extra_kills` carries churn the
+/// config never scheduled — the process coordinator converts a crashed
+/// worker into exactly such an event, and every surviving worker rebuilds
+/// its schedule from the same list so ownership stays a pure function of
+/// the tick.
+pub(crate) fn build_ring_schedule_with(
+    cfg: &ClusterConfig,
+    extra_kills: &[(u64, NodeId)],
+) -> (Arc<RingSchedule>, Vec<(u64, f64)>) {
     let mut ring = HashRing::with_nodes(cfg.stream.seed, cfg.vnodes, 0..cfg.nodes);
     let mut sched = RingSchedule::new(ring.clone());
     // group events by tick so a same-tick kill+join becomes one epoch
@@ -150,6 +154,9 @@ fn build_ring_schedule(cfg: &ClusterConfig) -> (Arc<RingSchedule>, Vec<(u64, f64
             .or_default()
             .push(MembershipEvent::Join(cfg.nodes));
     }
+    for &(tick, node) in extra_kills {
+        events.entry(tick).or_default().push(MembershipEvent::Kill(node));
+    }
     let mut remaps = Vec::new();
     for (tick, evs) in events {
         let before = ring.clone();
@@ -165,14 +172,25 @@ fn build_ring_schedule(cfg: &ClusterConfig) -> (Arc<RingSchedule>, Vec<(u64, f64
     (Arc::new(sched), remaps)
 }
 
+fn build_ring_schedule(cfg: &ClusterConfig) -> (Arc<RingSchedule>, Vec<(u64, f64)>) {
+    build_ring_schedule_with(cfg, &[])
+}
+
 #[derive(Clone, Copy, Debug)]
 enum MembershipEvent {
     Kill(NodeId),
     Join(NodeId),
 }
 
+/// Per-node replay budget: the node's fair share of ⌈γB⌉. One definition
+/// for both worker runtimes — thread/process digest parity depends on
+/// this arithmetic being identical.
+pub(crate) fn replay_budget(cfg: &ClusterConfig, b: usize) -> usize {
+    (((cfg.stream.gamma * b as f64) / cfg.nodes as f64).ceil() as usize).clamp(1, b)
+}
+
 /// Build one node's tick engine from the stream config.
-fn make_engine(
+pub(crate) fn make_engine(
     cfg: &ClusterConfig,
     node: NodeId,
     chunk_rows: usize,
@@ -199,8 +217,10 @@ fn make_engine(
         store.enable_dirty_tracking();
     }
     let mut engine = TickEngine::new(policy, store, s.gamma, s.lr, chunk_rows);
-    if s.drift_detect && !engine.policy.is_benchmark() {
-        engine.drift = Some(DriftGamma::default());
+    if let Some(kind) = crate::stream::tick::DriftKind::parse(&s.drift_detect)? {
+        if !engine.policy.is_benchmark() {
+            engine.drift = Some(DriftGamma::new(kind));
+        }
     }
     if s.replay {
         engine.replay_budget = Some(replay_budget);
@@ -263,10 +283,10 @@ fn gossip_stores(
 }
 
 /// Merge material accumulated from `Message::State`s — the single owner
-/// of the weighted-average semantics shared by barrier merges and join
-/// bootstrapping.
+/// of the weighted-average semantics shared by barrier merges, join
+/// bootstrapping, and the process coordinator's `MergePayload` rounds.
 #[derive(Default)]
-struct MergeMaterial {
+pub(crate) struct MergeMaterial {
     states: Vec<Vec<Tensor>>,
     snaps: Vec<AdaSnapshot>,
     weights: Vec<f64>,
@@ -274,7 +294,7 @@ struct MergeMaterial {
 }
 
 impl MergeMaterial {
-    fn push(&mut self, m: Message) {
+    pub(crate) fn push(&mut self, m: Message) {
         if let Message::State { weight, tensors, policy, .. } = m {
             self.weights.push(weight);
             self.states.push(tensors);
@@ -287,7 +307,7 @@ impl MergeMaterial {
 
     /// Weighted-average model tensors + merged policy snapshot (None when
     /// any contributor has no snapshot — stateless policies stay local).
-    fn merged(&self) -> anyhow::Result<(Vec<Tensor>, Option<AdaSnapshot>)> {
+    pub(crate) fn merged(&self) -> anyhow::Result<(Vec<Tensor>, Option<AdaSnapshot>)> {
         anyhow::ensure!(!self.states.is_empty(), "merge with no contributing nodes");
         let avg = average_states(&self.states, &self.weights)?;
         let snap = if !self.missing_snaps && !self.snaps.is_empty() {
@@ -351,18 +371,20 @@ fn merged_boot_state(
         .map_err(|e| anyhow::anyhow!("join bootstrap: {e}"))
 }
 
-/// Fold the barrier's drained prequential records into the cluster-wide
-/// rolling windows (ticks are complete once every alive node passed them).
-fn fold_preq(
-    nodes: &mut [ClusterNode<NativeBackend>],
+/// Fold one barrier's prequential records (grouped per node, in node-id
+/// order) into the cluster-wide rolling windows. Shared with the process
+/// coordinator: the per-node iteration order fixes the float summation
+/// order, so both coordinators produce bit-identical rolling traces.
+pub(crate) fn fold_preq_records(
+    per_node: &[Vec<crate::cluster::node::NodePreq>],
     classification: bool,
     roll_loss: &mut RollingWindow,
     roll_acc: &mut RollingWindow,
     rolling: &mut Vec<RollingPoint>,
 ) {
     let mut per_tick: BTreeMap<u64, (f64, f64, u64)> = BTreeMap::new();
-    for n in nodes.iter_mut() {
-        for p in n.take_preq() {
+    for records in per_node {
+        for p in records {
             let e = per_tick.entry(p.tick).or_insert((0.0, 0.0, 0));
             e.0 += p.loss_sum as f64;
             e.1 += p.correct as f64;
@@ -385,8 +407,28 @@ fn fold_preq(
     }
 }
 
-/// Run a full cluster job on the native backend.
+/// Fold the barrier's drained prequential records into the cluster-wide
+/// rolling windows (ticks are complete once every alive node passed them).
+fn fold_preq(
+    nodes: &mut [ClusterNode<NativeBackend>],
+    classification: bool,
+    roll_loss: &mut RollingWindow,
+    roll_acc: &mut RollingWindow,
+    rolling: &mut Vec<RollingPoint>,
+) {
+    let per_node: Vec<Vec<crate::cluster::node::NodePreq>> =
+        nodes.iter_mut().map(|n| n.take_preq()).collect();
+    fold_preq_records(&per_node, classification, roll_loss, roll_acc, rolling);
+}
+
+/// Run a full cluster job on the native backend. Dispatches on
+/// `worker_mode`: the in-process thread runtime below, or the
+/// multi-process runtime (`cluster::proc`) spawning one OS process per
+/// node from the current executable.
 pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
+    if cfg.worker_mode == "processes" {
+        return crate::cluster::proc::run(cfg);
+    }
     cfg.validate()?;
     let s = &cfg.stream;
     anyhow::ensure!(
@@ -415,9 +457,7 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
         _ => Box::new(Loopback::new()),
     };
     let delta_gossip = cfg.gossip == "delta";
-    // per-node replay budget: the node's fair share of ⌈γB⌉
-    let replay_budget =
-        (((s.gamma * b as f64) / cfg.nodes as f64).ceil() as usize).clamp(1, b);
+    let replay_budget = replay_budget(cfg, b);
 
     let mut nodes: Vec<ClusterNode<NativeBackend>> = Vec::new();
     for id in 0..cfg.nodes {
@@ -520,7 +560,8 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
                 && cfg.gossip_every > 0
                 && sync % cfg.gossip_every as u64 == 0
             {
-                let full = !delta_gossip || gossip_rounds % FULL_GOSSIP_EVERY == 0;
+                let full =
+                    !delta_gossip || gossip_rounds % cfg.full_gossip_every as u64 == 0;
                 gossip_bytes += gossip_stores(&mut nodes, transport.as_ref(), full)?;
                 gossip_rounds += 1;
             }

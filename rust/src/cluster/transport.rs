@@ -14,12 +14,37 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
+use crate::cluster::node::NodePreq;
 use crate::cluster::ring::NodeId;
 use crate::runtime::Tensor;
 use crate::selection::AdaSnapshot;
 use crate::stream::InstanceRecord;
 
-/// What nodes exchange at sync points.
+/// `BarrierGo` gossip orders: skip the round, ship the dirty delta, or
+/// ship the full live snapshot.
+pub const GOSSIP_NONE: u8 = 0;
+pub const GOSSIP_DELTA: u8 = 1;
+pub const GOSSIP_FULL: u8 = 2;
+
+/// Unplanned-churn instruction carried by [`Message::BarrierGo`]: remove
+/// `dead` from the ring as of `epoch_tick`, then re-process the dead
+/// node's share of ticks `[epoch_tick, backfill_to)` under the new
+/// ownership before continuing (the crash-recovery path of the process
+/// coordinator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnOrder {
+    pub dead: NodeId,
+    pub epoch_tick: u64,
+    pub backfill_to: u64,
+}
+
+/// What cluster peers exchange at sync points — the two data-plane
+/// payloads (store gossip + merge material) every coordinator moves, and
+/// the control-plane family the multi-process runtime (`cluster::proc`)
+/// speaks over the same `cluster::wire` frames: `Hello`/`Assign` for the
+/// handshake, `BarrierGo`/`BarrierReady` for the sync-barrier protocol,
+/// `MergePayload` for the cluster-averaged state, `Shutdown`/`Heartbeat`
+/// for life-cycle and liveness.
 #[derive(Clone, Debug)]
 pub enum Message {
     /// Instance-store gossip: a snapshot to merge freshest-tick-wins.
@@ -39,12 +64,79 @@ pub enum Message {
         tensors: Vec<Tensor>,
         policy: Option<AdaSnapshot>,
     },
+    /// Worker → coordinator: first frame on a fresh control connection,
+    /// announcing which node id this process was spawned as.
+    Hello { from: NodeId },
+    /// Coordinator → worker: the run assignment — the full
+    /// `ClusterConfig` as JSON (the worker derives its ring schedule,
+    /// engine and loader from it, exactly like a thread node would),
+    /// the first tick of this worker's shard, and any unplanned kills
+    /// already converted to churn (so late joiners compile the same
+    /// ownership timeline the survivors use).
+    Assign {
+        node: NodeId,
+        first_tick: u64,
+        config: String,
+        chaos: Vec<(u64, NodeId)>,
+    },
+    /// Coordinator → worker: run to `until`, then report. `gossip`
+    /// (GOSSIP_*) and `merge`/`boot` order the barrier payloads the
+    /// worker must send after its `BarrierReady`; `churn` carries
+    /// crash conversions to apply *before* running.
+    BarrierGo {
+        until: u64,
+        gossip: u8,
+        merge: bool,
+        boot: bool,
+        churn: Vec<ChurnOrder>,
+    },
+    /// Worker → coordinator: barrier reached. Carries the prequential
+    /// records gathered since the last barrier plus the worker's running
+    /// counters, so the coordinator's last-seen values double as the
+    /// node summary even if the process later dies. `failed` is empty on
+    /// success (a non-empty string aborts the run, mirroring the
+    /// thread coordinator's error propagation).
+    BarrierReady {
+        from: NodeId,
+        until: u64,
+        preq: Vec<NodePreq>,
+        digest: u64,
+        ticks_processed: u64,
+        samples_seen: u64,
+        samples_trained: u64,
+        samples_replayed: u64,
+        drift_detections: u64,
+        store_len: u64,
+        failed: String,
+    },
+    /// Coordinator → worker: the cluster-averaged model tensors + policy
+    /// snapshot to adopt (merge barriers and join bootstrap).
+    MergePayload {
+        tensors: Vec<Tensor>,
+        policy: Option<AdaSnapshot>,
+    },
+    /// Coordinator → worker: exit cleanly.
+    Shutdown,
+    /// Liveness keep-alive (worker → coordinator, from a side thread, so
+    /// a hung process is distinguishable from a long training segment).
+    Heartbeat { from: NodeId },
 }
 
 impl Message {
+    /// The sending node, for messages that have one; coordinator-
+    /// originated control frames return `NodeId::MAX` (they are never
+    /// sorted by sender).
     pub fn from_node(&self) -> NodeId {
         match self {
-            Message::StoreGossip { from, .. } | Message::State { from, .. } => *from,
+            Message::StoreGossip { from, .. }
+            | Message::State { from, .. }
+            | Message::Hello { from }
+            | Message::BarrierReady { from, .. }
+            | Message::Heartbeat { from } => *from,
+            Message::Assign { node, .. } => *node,
+            Message::BarrierGo { .. } | Message::MergePayload { .. } | Message::Shutdown => {
+                NodeId::MAX
+            }
         }
     }
 }

@@ -25,8 +25,9 @@
 use std::io::Read;
 use std::sync::Arc;
 
+use crate::cluster::node::NodePreq;
 use crate::cluster::ring::NodeId;
-use crate::cluster::transport::Message;
+use crate::cluster::transport::{ChurnOrder, Message};
 use crate::runtime::Tensor;
 use crate::selection::AdaSnapshot;
 use crate::stream::InstanceRecord;
@@ -45,8 +46,24 @@ pub const MAX_PAYLOAD: usize = 64 << 20;
 
 const TAG_GOSSIP: u8 = 0;
 const TAG_STATE: u8 = 1;
+// control-plane family (multi-process workers, `cluster::proc`) — new
+// tags in the same versioned frame; a v1 peer that predates them rejects
+// the unknown tag with an error, never a panic
+const TAG_HELLO: u8 = 2;
+const TAG_ASSIGN: u8 = 3;
+const TAG_BARRIER_GO: u8 = 4;
+const TAG_BARRIER_READY: u8 = 5;
+const TAG_MERGE_PAYLOAD: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+const TAG_HEARTBEAT: u8 = 8;
 /// Encoded bytes per store-gossip entry: id + loss + gnorm + tick + visits.
 const ENTRY_LEN: usize = 24;
+/// Encoded bytes per prequential record: tick + loss_sum + correct + arrivals.
+const PREQ_LEN: usize = 20;
+/// Encoded bytes per churn order: dead + epoch_tick + backfill_to.
+const CHURN_LEN: usize = 24;
+/// Encoded bytes per chaos event in `Assign`: tick + node.
+const CHAOS_LEN: usize = 16;
 /// Decode-side sanity bounds (far above anything the cluster produces).
 const MAX_RANK: usize = 8;
 const MAX_TENSORS: usize = 4096;
@@ -62,24 +79,47 @@ fn fnv1a32(bytes: &[u8]) -> u32 {
     h
 }
 
+/// Encoded size of a tensor list (count prefix + per-tensor payload).
+fn tensors_len(tensors: &[Tensor]) -> usize {
+    let mut n = 4;
+    for t in tensors {
+        n += 4 + 4 * t.shape.len() + 4 + 4 * t.data.len();
+    }
+    n
+}
+
+/// Encoded size of an optional policy snapshot (flag + payload).
+fn policy_len(policy: &Option<AdaSnapshot>) -> usize {
+    let mut n = 1;
+    if let Some(p) = policy {
+        n += 4 + 4 * p.w.len() + 1 + 8;
+        if let Some(v) = &p.prev_loss {
+            n += 4 + 4 * v.len();
+        }
+    }
+    n
+}
+
 /// Exact payload size of `msg` (no allocation).
 pub fn payload_len(msg: &Message) -> usize {
     match msg {
         Message::StoreGossip { entries, .. } => 1 + 8 + 4 + entries.len() * ENTRY_LEN,
         Message::State { tensors, policy, .. } => {
-            let mut n = 1 + 8 + 8 + 4;
-            for t in tensors {
-                n += 4 + 4 * t.shape.len() + 4 + 4 * t.data.len();
-            }
-            n += 1; // policy flag
-            if let Some(p) = policy {
-                n += 4 + 4 * p.w.len() + 1 + 8;
-                if let Some(v) = &p.prev_loss {
-                    n += 4 + 4 * v.len();
-                }
-            }
-            n
+            1 + 8 + 8 + tensors_len(tensors) + policy_len(policy)
         }
+        Message::Hello { .. } => 1 + 8,
+        Message::Assign { config, chaos, .. } => {
+            1 + 8 + 8 + 4 + config.len() + 4 + chaos.len() * CHAOS_LEN
+        }
+        Message::BarrierGo { churn, .. } => 1 + 8 + 1 + 1 + 1 + 4 + churn.len() * CHURN_LEN,
+        Message::BarrierReady { preq, failed, .. } => {
+            1 + 8 + 8 + 4 + preq.len() * PREQ_LEN + 7 * 8 + 4 + failed.len()
+        }
+        Message::MergePayload { tensors, policy } => {
+            1 + tensors_len(tensors) + policy_len(policy)
+        }
+        Message::Shutdown => 1,
+        Message::Heartbeat { .. } => 1 + 8,
     }
 }
 
@@ -96,34 +136,46 @@ pub fn max_gossip_entries() -> usize {
     (MAX_PAYLOAD - (1 + 8 + 4)) / ENTRY_LEN
 }
 
+/// Tensor bounds shared by the `State` and `MergePayload` guards.
+fn check_tensors(tensors: &[Tensor]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        tensors.len() <= MAX_TENSORS,
+        "wire: message carries {} tensors (max {MAX_TENSORS})",
+        tensors.len()
+    );
+    for t in tensors {
+        anyhow::ensure!(
+            t.shape.len() <= MAX_RANK,
+            "wire: tensor rank {} exceeds {MAX_RANK}",
+            t.shape.len()
+        );
+        let product = t
+            .shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or_else(|| anyhow::anyhow!("wire: tensor shape {:?} overflows", t.shape))?;
+        anyhow::ensure!(
+            product == t.data.len(),
+            "wire: tensor shape {:?} does not match data length {}",
+            t.shape,
+            t.data.len()
+        );
+    }
+    Ok(())
+}
+
 /// Encode-side guard mirroring every decode-side bound, so a message the
 /// peer would reject fails at the *sender* with a clear error instead of
 /// poisoning the connection. Transports call this before [`encode`].
 pub fn check_encodable(msg: &Message) -> anyhow::Result<()> {
-    if let Message::State { tensors, .. } = msg {
-        anyhow::ensure!(
-            tensors.len() <= MAX_TENSORS,
-            "wire: message carries {} tensors (max {MAX_TENSORS})",
-            tensors.len()
-        );
-        for t in tensors {
-            anyhow::ensure!(
-                t.shape.len() <= MAX_RANK,
-                "wire: tensor rank {} exceeds {MAX_RANK}",
-                t.shape.len()
-            );
-            let product = t
-                .shape
-                .iter()
-                .try_fold(1usize, |a, &d| a.checked_mul(d))
-                .ok_or_else(|| anyhow::anyhow!("wire: tensor shape {:?} overflows", t.shape))?;
-            anyhow::ensure!(
-                product == t.data.len(),
-                "wire: tensor shape {:?} does not match data length {}",
-                t.shape,
-                t.data.len()
-            );
+    match msg {
+        Message::State { tensors, .. } | Message::MergePayload { tensors, .. } => {
+            check_tensors(tensors)?
         }
+        Message::BarrierGo { gossip, .. } => {
+            anyhow::ensure!(*gossip <= 2, "wire: bad gossip order {gossip}")
+        }
+        _ => {}
     }
     let len = payload_len(msg);
     anyhow::ensure!(len <= MAX_PAYLOAD, "wire: message payload {len} exceeds {MAX_PAYLOAD} bytes");
@@ -146,6 +198,44 @@ fn put_f64(b: &mut Vec<u8>, v: f64) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
+fn put_tensors(b: &mut Vec<u8>, tensors: &[Tensor]) {
+    put_u32(b, tensors.len() as u32);
+    for t in tensors {
+        put_u32(b, t.shape.len() as u32);
+        for &d in &t.shape {
+            put_u32(b, d as u32);
+        }
+        put_u32(b, t.data.len() as u32);
+        for &x in &t.data {
+            put_f32(b, x);
+        }
+    }
+}
+
+fn put_policy(b: &mut Vec<u8>, policy: &Option<AdaSnapshot>) {
+    match policy {
+        None => b.push(0),
+        Some(p) => {
+            b.push(1);
+            put_u32(b, p.w.len() as u32);
+            for &x in &p.w {
+                put_f32(b, x);
+            }
+            match &p.prev_loss {
+                None => b.push(0),
+                Some(v) => {
+                    b.push(1);
+                    put_u32(b, v.len() as u32);
+                    for &x in v {
+                        put_f32(b, x);
+                    }
+                }
+            }
+            put_u64(b, p.t as u64);
+        }
+    }
+}
+
 fn encode_payload(msg: &Message) -> Vec<u8> {
     let mut b = Vec::with_capacity(payload_len(msg));
     match msg {
@@ -165,38 +255,80 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
             b.push(TAG_STATE);
             put_u64(&mut b, *from as u64);
             put_f64(&mut b, *weight);
-            put_u32(&mut b, tensors.len() as u32);
-            for t in tensors {
-                put_u32(&mut b, t.shape.len() as u32);
-                for &d in &t.shape {
-                    put_u32(&mut b, d as u32);
-                }
-                put_u32(&mut b, t.data.len() as u32);
-                for &x in &t.data {
-                    put_f32(&mut b, x);
-                }
+            put_tensors(&mut b, tensors);
+            put_policy(&mut b, policy);
+        }
+        Message::Hello { from } => {
+            b.push(TAG_HELLO);
+            put_u64(&mut b, *from as u64);
+        }
+        Message::Assign { node, first_tick, config, chaos } => {
+            b.push(TAG_ASSIGN);
+            put_u64(&mut b, *node as u64);
+            put_u64(&mut b, *first_tick);
+            put_u32(&mut b, config.len() as u32);
+            b.extend_from_slice(config.as_bytes());
+            put_u32(&mut b, chaos.len() as u32);
+            for &(tick, node) in chaos {
+                put_u64(&mut b, tick);
+                put_u64(&mut b, node as u64);
             }
-            match policy {
-                None => b.push(0),
-                Some(p) => {
-                    b.push(1);
-                    put_u32(&mut b, p.w.len() as u32);
-                    for &x in &p.w {
-                        put_f32(&mut b, x);
-                    }
-                    match &p.prev_loss {
-                        None => b.push(0),
-                        Some(v) => {
-                            b.push(1);
-                            put_u32(&mut b, v.len() as u32);
-                            for &x in v {
-                                put_f32(&mut b, x);
-                            }
-                        }
-                    }
-                    put_u64(&mut b, p.t as u64);
-                }
+        }
+        Message::BarrierGo { until, gossip, merge, boot, churn } => {
+            b.push(TAG_BARRIER_GO);
+            put_u64(&mut b, *until);
+            b.push(*gossip);
+            b.push(*merge as u8);
+            b.push(*boot as u8);
+            put_u32(&mut b, churn.len() as u32);
+            for c in churn {
+                put_u64(&mut b, c.dead as u64);
+                put_u64(&mut b, c.epoch_tick);
+                put_u64(&mut b, c.backfill_to);
             }
+        }
+        Message::BarrierReady {
+            from,
+            until,
+            preq,
+            digest,
+            ticks_processed,
+            samples_seen,
+            samples_trained,
+            samples_replayed,
+            drift_detections,
+            store_len,
+            failed,
+        } => {
+            b.push(TAG_BARRIER_READY);
+            put_u64(&mut b, *from as u64);
+            put_u64(&mut b, *until);
+            put_u32(&mut b, preq.len() as u32);
+            for p in preq {
+                put_u64(&mut b, p.tick);
+                put_f32(&mut b, p.loss_sum);
+                put_f32(&mut b, p.correct);
+                put_u32(&mut b, p.arrivals);
+            }
+            put_u64(&mut b, *digest);
+            put_u64(&mut b, *ticks_processed);
+            put_u64(&mut b, *samples_seen);
+            put_u64(&mut b, *samples_trained);
+            put_u64(&mut b, *samples_replayed);
+            put_u64(&mut b, *drift_detections);
+            put_u64(&mut b, *store_len);
+            put_u32(&mut b, failed.len() as u32);
+            b.extend_from_slice(failed.as_bytes());
+        }
+        Message::MergePayload { tensors, policy } => {
+            b.push(TAG_MERGE_PAYLOAD);
+            put_tensors(&mut b, tensors);
+            put_policy(&mut b, policy);
+        }
+        Message::Shutdown => b.push(TAG_SHUTDOWN),
+        Message::Heartbeat { from } => {
+            b.push(TAG_HEARTBEAT);
+            put_u64(&mut b, *from as u64);
         }
     }
     b
@@ -283,6 +415,21 @@ impl<'a> Cursor<'a> {
             .collect())
     }
 
+    fn string(&mut self) -> anyhow::Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| anyhow::anyhow!("wire: string field is not valid UTF-8"))
+    }
+
+    fn bool(&mut self) -> anyhow::Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => anyhow::bail!("wire: bad bool byte {other}"),
+        }
+    }
+
     fn done(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.pos == self.buf.len(),
@@ -291,6 +438,56 @@ impl<'a> Cursor<'a> {
         );
         Ok(())
     }
+}
+
+fn read_tensors(c: &mut Cursor) -> anyhow::Result<Vec<Tensor>> {
+    let n_tensors = c.u32()? as usize;
+    anyhow::ensure!(
+        n_tensors <= MAX_TENSORS,
+        "wire: tensor count {n_tensors} exceeds {MAX_TENSORS}"
+    );
+    let mut tensors = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let rank = c.u32()? as usize;
+        anyhow::ensure!(rank <= MAX_RANK, "wire: tensor rank {rank} exceeds {MAX_RANK}");
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(c.u32()? as usize);
+        }
+        let data_len = c.u32()? as usize;
+        let product = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or_else(|| anyhow::anyhow!("wire: tensor shape {shape:?} overflows"))?;
+        anyhow::ensure!(
+            data_len == product,
+            "wire: tensor data length {data_len} != shape product {product}"
+        );
+        let data = c.f32_vec(data_len)?;
+        tensors.push(Tensor { shape, data });
+    }
+    Ok(tensors)
+}
+
+fn read_policy(c: &mut Cursor) -> anyhow::Result<Option<AdaSnapshot>> {
+    Ok(match c.u8()? {
+        0 => None,
+        1 => {
+            let wn = c.u32()? as usize;
+            let w = c.f32_vec(wn)?;
+            let prev_loss = match c.u8()? {
+                0 => None,
+                1 => {
+                    let pn = c.u32()? as usize;
+                    Some(c.f32_vec(pn)?)
+                }
+                other => anyhow::bail!("wire: bad prev-loss flag {other}"),
+            };
+            let t = c.u64()? as usize;
+            Some(AdaSnapshot { w, prev_loss, t })
+        }
+        other => anyhow::bail!("wire: bad policy flag {other}"),
+    })
 }
 
 fn decode_payload(payload: &[u8]) -> anyhow::Result<Message> {
@@ -317,48 +514,93 @@ fn decode_payload(payload: &[u8]) -> anyhow::Result<Message> {
         TAG_STATE => {
             let from = c.u64()? as NodeId;
             let weight = c.f64()?;
-            let n_tensors = c.u32()? as usize;
-            anyhow::ensure!(n_tensors <= MAX_TENSORS, "wire: tensor count {n_tensors} exceeds {MAX_TENSORS}");
-            let mut tensors = Vec::with_capacity(n_tensors);
-            for _ in 0..n_tensors {
-                let rank = c.u32()? as usize;
-                anyhow::ensure!(rank <= MAX_RANK, "wire: tensor rank {rank} exceeds {MAX_RANK}");
-                let mut shape = Vec::with_capacity(rank);
-                for _ in 0..rank {
-                    shape.push(c.u32()? as usize);
-                }
-                let data_len = c.u32()? as usize;
-                let product = shape
-                    .iter()
-                    .try_fold(1usize, |a, &d| a.checked_mul(d))
-                    .ok_or_else(|| anyhow::anyhow!("wire: tensor shape {shape:?} overflows"))?;
-                anyhow::ensure!(
-                    data_len == product,
-                    "wire: tensor data length {data_len} != shape product {product}"
-                );
-                let data = c.f32_vec(data_len)?;
-                tensors.push(Tensor { shape, data });
-            }
-            let policy = match c.u8()? {
-                0 => None,
-                1 => {
-                    let wn = c.u32()? as usize;
-                    let w = c.f32_vec(wn)?;
-                    let prev_loss = match c.u8()? {
-                        0 => None,
-                        1 => {
-                            let pn = c.u32()? as usize;
-                            Some(c.f32_vec(pn)?)
-                        }
-                        other => anyhow::bail!("wire: bad prev-loss flag {other}"),
-                    };
-                    let t = c.u64()? as usize;
-                    Some(AdaSnapshot { w, prev_loss, t })
-                }
-                other => anyhow::bail!("wire: bad policy flag {other}"),
-            };
+            let tensors = read_tensors(&mut c)?;
+            let policy = read_policy(&mut c)?;
             Message::State { from, weight, tensors, policy }
         }
+        TAG_HELLO => Message::Hello { from: c.u64()? as NodeId },
+        TAG_ASSIGN => {
+            let node = c.u64()? as NodeId;
+            let first_tick = c.u64()?;
+            let config = c.string()?;
+            let n = c.u32()? as usize;
+            anyhow::ensure!(
+                n.saturating_mul(CHAOS_LEN) <= c.remaining(),
+                "wire: chaos event count {n} exceeds the payload"
+            );
+            let mut chaos = Vec::with_capacity(n);
+            for _ in 0..n {
+                let tick = c.u64()?;
+                let dead = c.u64()? as NodeId;
+                chaos.push((tick, dead));
+            }
+            Message::Assign { node, first_tick, config, chaos }
+        }
+        TAG_BARRIER_GO => {
+            let until = c.u64()?;
+            let gossip = c.u8()?;
+            anyhow::ensure!(gossip <= 2, "wire: bad gossip order {gossip}");
+            let merge = c.bool()?;
+            let boot = c.bool()?;
+            let n = c.u32()? as usize;
+            anyhow::ensure!(
+                n.saturating_mul(CHURN_LEN) <= c.remaining(),
+                "wire: churn order count {n} exceeds the payload"
+            );
+            let mut churn = Vec::with_capacity(n);
+            for _ in 0..n {
+                let dead = c.u64()? as NodeId;
+                let epoch_tick = c.u64()?;
+                let backfill_to = c.u64()?;
+                churn.push(ChurnOrder { dead, epoch_tick, backfill_to });
+            }
+            Message::BarrierGo { until, gossip, merge, boot, churn }
+        }
+        TAG_BARRIER_READY => {
+            let from = c.u64()? as NodeId;
+            let until = c.u64()?;
+            let n = c.u32()? as usize;
+            anyhow::ensure!(
+                n.saturating_mul(PREQ_LEN) <= c.remaining(),
+                "wire: preq record count {n} exceeds the payload"
+            );
+            let mut preq = Vec::with_capacity(n);
+            for _ in 0..n {
+                let tick = c.u64()?;
+                let loss_sum = c.f32()?;
+                let correct = c.f32()?;
+                let arrivals = c.u32()?;
+                preq.push(NodePreq { tick, loss_sum, correct, arrivals });
+            }
+            let digest = c.u64()?;
+            let ticks_processed = c.u64()?;
+            let samples_seen = c.u64()?;
+            let samples_trained = c.u64()?;
+            let samples_replayed = c.u64()?;
+            let drift_detections = c.u64()?;
+            let store_len = c.u64()?;
+            let failed = c.string()?;
+            Message::BarrierReady {
+                from,
+                until,
+                preq,
+                digest,
+                ticks_processed,
+                samples_seen,
+                samples_trained,
+                samples_replayed,
+                drift_detections,
+                store_len,
+                failed,
+            }
+        }
+        TAG_MERGE_PAYLOAD => {
+            let tensors = read_tensors(&mut c)?;
+            let policy = read_policy(&mut c)?;
+            Message::MergePayload { tensors, policy }
+        }
+        TAG_SHUTDOWN => Message::Shutdown,
+        TAG_HEARTBEAT => Message::Heartbeat { from: c.u64()? as NodeId },
         other => anyhow::bail!("wire: unknown message tag {other}"),
     };
     c.done()?;
@@ -688,6 +930,138 @@ mod tests {
             policy: None,
         };
         assert!(check_encodable(&bad_len).is_err());
+    }
+
+    /// Bitwise equality for the control-plane variants (Debug-format
+    /// compare is enough for integers/strings; floats go through bits).
+    fn same_control(a: &Message, b: &Message) -> Result<(), String> {
+        match (a, b) {
+            (
+                Message::BarrierReady { preq: p0, .. },
+                Message::BarrierReady { preq: p1, .. },
+            ) => {
+                if p0.len() != p1.len() {
+                    return Err("preq length mismatch".into());
+                }
+                for (x, y) in p0.iter().zip(p1.iter()) {
+                    if x.tick != y.tick
+                        || x.loss_sum.to_bits() != y.loss_sum.to_bits()
+                        || x.correct.to_bits() != y.correct.to_bits()
+                        || x.arrivals != y.arrivals
+                    {
+                        return Err(format!("preq {x:?} != {y:?}"));
+                    }
+                }
+                let da = format!("{a:?}");
+                let db = format!("{b:?}");
+                if da != db {
+                    return Err(format!("{da} != {db}"));
+                }
+                Ok(())
+            }
+            _ => {
+                let da = format!("{a:?}");
+                let db = format!("{b:?}");
+                if da != db {
+                    return Err(format!("{da} != {db}"));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    #[test]
+    fn control_family_round_trips() {
+        let msgs = vec![
+            Message::Hello { from: 3 },
+            Message::Assign {
+                node: 4,
+                first_tick: 120,
+                config: r#"{"nodes": 4, "max-ticks": 200}"#.to_string(),
+                chaos: vec![(64, 1), (96, 2)],
+            },
+            Message::BarrierGo {
+                until: 96,
+                gossip: 2,
+                merge: true,
+                boot: false,
+                churn: vec![ChurnOrder { dead: 1, epoch_tick: 64, backfill_to: 96 }],
+            },
+            Message::BarrierGo { until: 8, gossip: 0, merge: false, boot: true, churn: vec![] },
+            Message::BarrierReady {
+                from: 2,
+                until: 96,
+                preq: vec![
+                    NodePreq { tick: 90, loss_sum: 1.25, correct: 11.0, arrivals: 17 },
+                    NodePreq { tick: 91, loss_sum: 0.5, correct: 3.0, arrivals: 4 },
+                ],
+                digest: 0xdead_beef_cafe_f00d,
+                ticks_processed: 96,
+                samples_seen: 1200,
+                samples_trained: 600,
+                samples_replayed: 12,
+                drift_detections: 1,
+                store_len: 512,
+                failed: String::new(),
+            },
+            Message::BarrierReady {
+                from: 0,
+                until: 0,
+                preq: vec![],
+                digest: 0,
+                ticks_processed: 0,
+                samples_seen: 0,
+                samples_trained: 0,
+                samples_replayed: 0,
+                drift_detections: 0,
+                store_len: 0,
+                failed: "node 0: loader ended early".to_string(),
+            },
+            Message::MergePayload {
+                tensors: vec![Tensor { shape: vec![2, 3], data: vec![0.5; 6] }],
+                policy: Some(AdaSnapshot {
+                    w: vec![0.25, 0.75],
+                    prev_loss: Some(vec![1.0, 2.0]),
+                    t: 9,
+                }),
+            },
+            Message::MergePayload { tensors: Vec::new(), policy: None },
+            Message::Shutdown,
+            Message::Heartbeat { from: 7 },
+        ];
+        for msg in &msgs {
+            check_encodable(msg).unwrap();
+            let frame = encode(msg);
+            assert_eq!(frame.len(), frame_len(msg), "frame_len model drifted: {msg:?}");
+            let back = decode(&frame).unwrap();
+            same_control(msg, &back).unwrap();
+            // and through the stream reader
+            let mut r = &frame[..];
+            same_control(msg, &read_frame(&mut r).unwrap().unwrap()).unwrap();
+        }
+        // oversized merge payloads fail at the sender, like State
+        let bad = Message::MergePayload {
+            tensors: vec![Tensor { shape: vec![1; MAX_RANK + 1], data: vec![0.0] }],
+            policy: None,
+        };
+        assert!(check_encodable(&bad).is_err());
+        // a non-UTF-8 config string is rejected at decode, never a panic
+        let ok = Message::Assign {
+            node: 0,
+            first_tick: 0,
+            config: "ab".to_string(),
+            chaos: vec![],
+        };
+        let mut frame = encode(&ok);
+        // config bytes start after tag(1) + node(8) + first_tick(8) + len(4)
+        frame[HEADER_LEN + 21] = 0xFF;
+        // fix the checksum so only the UTF-8 validation can complain
+        let plen = frame.len() - HEADER_LEN - TRAILER_LEN;
+        let sum = fnv1a32(&frame[HEADER_LEN..HEADER_LEN + plen]);
+        let at = frame.len() - TRAILER_LEN;
+        frame[at..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode(&frame).unwrap_err().to_string();
+        assert!(err.contains("UTF-8"), "unexpected error: {err}");
     }
 
     #[test]

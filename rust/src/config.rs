@@ -241,9 +241,11 @@ pub struct StreamConfig {
     pub eval_every: usize,
     /// weight-update rule: eq3[:beta] | exp3[:eta] | softmax[:tau]
     pub rule: String,
-    /// Page–Hinkley drift detection on the per-tick mean loss, boosting γ
-    /// and the method-weight learning rate while drift is fresh
-    pub drift_detect: bool,
+    /// drift detection on the per-tick mean loss, boosting γ and the
+    /// method-weight learning rate while drift is fresh:
+    /// off | page-hinkley | adwin (legacy booleans map to
+    /// off/page-hinkley)
+    pub drift_detect: String,
     /// top up lull ticks with high-loss instance-store rows so the
     /// training budget ⌈γB⌉ stays filled during arrival dips
     pub replay: bool,
@@ -279,7 +281,7 @@ impl Default for StreamConfig {
             window: 50,
             eval_every: 1,
             rule: "eq3".into(),
-            drift_detect: false,
+            drift_detect: "off".into(),
             replay: false,
             checkpoint: None,
             checkpoint_every: 0,
@@ -322,6 +324,7 @@ impl StreamConfig {
             "--resume requires --checkpoint FILE"
         );
         crate::stream::source::family_for(&self.dataset)?;
+        crate::stream::tick::DriftKind::parse(&self.drift_detect)?;
         crate::selection::bandit::UpdateRule::parse(&self.rule)?;
         crate::selection::build_selector(
             &self.selector,
@@ -356,7 +359,15 @@ impl StreamConfig {
             "window" => self.window = value.parse()?,
             "eval-every" => self.eval_every = value.parse()?,
             "rule" => self.rule = value.into(),
-            "drift-detect" => self.drift_detect = parse_bool(value)?,
+            // legacy boolean values picked the only detector there was;
+            // keep them working (`--drift-detect on` in older scripts)
+            "drift-detect" => {
+                self.drift_detect = match value {
+                    "true" | "1" | "yes" | "on" => "page-hinkley".to_string(),
+                    "false" | "0" | "no" | "off" => "off".to_string(),
+                    other => other.to_string(),
+                }
+            }
             "replay" => self.replay = parse_bool(value)?,
             "checkpoint" => self.checkpoint = Some(PathBuf::from(value)),
             "checkpoint-every" => self.checkpoint_every = value.parse()?,
@@ -416,7 +427,7 @@ impl StreamConfig {
         m.insert("rule".into(), Json::Str(self.rule.clone()));
         // both alter the selection/training sequence, so they are part of
         // the run identity a resume must match
-        m.insert("drift-detect".into(), Json::Bool(self.drift_detect));
+        m.insert("drift-detect".into(), Json::Str(self.drift_detect.clone()));
         m.insert("replay".into(), Json::Bool(self.replay));
         Json::Obj(m)
     }
@@ -444,7 +455,7 @@ impl StreamConfig {
         m.insert("window".into(), Json::Num(self.window as f64));
         m.insert("eval-every".into(), Json::Num(self.eval_every as f64));
         m.insert("rule".into(), Json::Str(self.rule.clone()));
-        m.insert("drift-detect".into(), Json::Bool(self.drift_detect));
+        m.insert("drift-detect".into(), Json::Str(self.drift_detect.clone()));
         m.insert("replay".into(), Json::Bool(self.replay));
         if let Some(p) = &self.checkpoint {
             m.insert("checkpoint".into(), Json::Str(p.display().to_string()));
@@ -470,8 +481,16 @@ pub struct ClusterConfig {
     pub nodes: usize,
     /// virtual nodes per worker on the hash ring
     pub vnodes: usize,
+    /// how workers run: threads (in-process nodes on scoped threads) |
+    /// processes (one OS process per node, coordinated over the
+    /// `cluster::wire` control plane). `--workers threads|processes` on
+    /// the CLI; a numeric `--workers N` still sets the pipeline worker
+    /// count.
+    pub worker_mode: String,
     /// node-to-node transport: loopback (in-process mailboxes) | tcp
-    /// (127.0.0.1 sockets speaking the `cluster::wire` frame format)
+    /// (127.0.0.1 sockets speaking the `cluster::wire` frame format).
+    /// Process workers always talk wire frames over their coordinator
+    /// sockets; this knob only selects the thread-mode transport.
     pub transport: String,
     /// store-gossip payload: full (whole snapshots every round) | delta
     /// (only entries touched since the last sync, with a periodic
@@ -479,6 +498,9 @@ pub struct ClusterConfig {
     pub gossip: String,
     /// ticks between store-gossip rounds (0 = never)
     pub gossip_every: usize,
+    /// in delta mode, every K-th gossip round still ships full snapshots
+    /// so evicting or late-joining peers reconverge (K ≥ 1)
+    pub full_gossip_every: usize,
     /// ticks between model/policy merges (0 = never)
     pub merge_every: usize,
     /// tick at which `kill_node` is removed (0 = no kill)
@@ -486,6 +508,12 @@ pub struct ClusterConfig {
     pub kill_node: usize,
     /// tick at which a fresh node joins the ring (0 = no join)
     pub join_at: usize,
+    /// crash injection (process workers only): SIGKILL `chaos_kill_node`
+    /// while the segment containing this tick runs (0 = off). Unlike
+    /// `kill_at` this is *not* in the precompiled ring schedule — the
+    /// coordinator must detect the death and convert it to churn.
+    pub chaos_kill_at: usize,
+    pub chaos_kill_node: usize,
 }
 
 impl Default for ClusterConfig {
@@ -494,13 +522,17 @@ impl Default for ClusterConfig {
             stream: StreamConfig::default(),
             nodes: 4,
             vnodes: 128,
+            worker_mode: "threads".into(),
             transport: "loopback".into(),
             gossip: "full".into(),
             gossip_every: 16,
+            full_gossip_every: 8,
             merge_every: 16,
             kill_at: 0,
             kill_node: 0,
             join_at: 0,
+            chaos_kill_at: 0,
+            chaos_kill_node: 0,
         }
     }
 }
@@ -515,6 +547,11 @@ impl ClusterConfig {
             self.vnodes
         );
         anyhow::ensure!(
+            self.worker_mode == "threads" || self.worker_mode == "processes",
+            "unknown worker mode '{}' (expected threads|processes)",
+            self.worker_mode
+        );
+        anyhow::ensure!(
             self.transport == "loopback" || self.transport == "tcp",
             "unknown transport '{}' (expected loopback|tcp)",
             self.transport
@@ -524,7 +561,49 @@ impl ClusterConfig {
             "unknown gossip mode '{}' (expected full|delta)",
             self.gossip
         );
-        if self.transport == "tcp" {
+        anyhow::ensure!(
+            self.full_gossip_every >= 1,
+            "full-gossip-every must be >= 1 (got {})",
+            self.full_gossip_every
+        );
+        if self.worker_mode == "processes" {
+            anyhow::ensure!(
+                self.stream.backend == "native",
+                "process workers run the native backend only (got '{}')",
+                self.stream.backend
+            );
+            anyhow::ensure!(
+                !self.stream.dataset.starts_with("tcp:"),
+                "process workers cannot share a tcp: stream feed (each \
+                 worker process would consume the socket independently); \
+                 capture it to a file: log first"
+            );
+            anyhow::ensure!(
+                self.chaos_kill_at < self.stream.max_ticks,
+                "chaos-kill-at {} beyond max-ticks {}",
+                self.chaos_kill_at,
+                self.stream.max_ticks
+            );
+            if self.chaos_kill_at > 0 {
+                anyhow::ensure!(
+                    self.chaos_kill_node < self.nodes,
+                    "chaos-kill-node {} out of range 0..{}",
+                    self.chaos_kill_node,
+                    self.nodes
+                );
+                anyhow::ensure!(self.nodes > 1, "chaos-killing the only worker");
+                anyhow::ensure!(
+                    self.kill_at == 0 || self.kill_node != self.chaos_kill_node,
+                    "chaos-kill-node and kill-node target the same worker"
+                );
+            }
+        } else {
+            anyhow::ensure!(
+                self.chaos_kill_at == 0,
+                "chaos-kill-at requires --workers processes"
+            );
+        }
+        if self.transport == "tcp" || self.worker_mode == "processes" {
             // the store's hard bound after rounding is ≤ max(capacity,
             // 2·shards); a full-snapshot gossip of that many entries must
             // fit in one wire frame, or the run would die at the first
@@ -533,7 +612,7 @@ impl ClusterConfig {
             let cap = crate::cluster::wire::max_gossip_entries();
             anyhow::ensure!(
                 worst <= cap,
-                "store-capacity {worst} exceeds the {cap} entries a tcp gossip frame can carry"
+                "store-capacity {worst} exceeds the {cap} entries a wire gossip frame can carry"
             );
         }
         anyhow::ensure!(
@@ -581,13 +660,22 @@ impl ClusterConfig {
         match key {
             "nodes" => self.nodes = value.parse()?,
             "vnodes" => self.vnodes = value.parse()?,
+            // `--workers` is overloaded on purpose: a mode name selects the
+            // worker runtime, a number keeps meaning pipeline workers
+            "workers" if value == "threads" || value == "processes" => {
+                self.worker_mode = value.into()
+            }
+            "worker-mode" => self.worker_mode = value.into(),
             "transport" => self.transport = value.into(),
             "gossip" => self.gossip = value.into(),
             "gossip-every" => self.gossip_every = value.parse()?,
+            "full-gossip-every" => self.full_gossip_every = value.parse()?,
             "merge-every" => self.merge_every = value.parse()?,
             "kill-at" => self.kill_at = value.parse()?,
             "kill-node" => self.kill_node = value.parse()?,
             "join-at" => self.join_at = value.parse()?,
+            "chaos-kill-at" => self.chaos_kill_at = value.parse()?,
+            "chaos-kill-node" => self.chaos_kill_node = value.parse()?,
             other => return self.stream.apply_override(other, value),
         }
         Ok(())
@@ -629,13 +717,23 @@ impl ClusterConfig {
         };
         m.insert("nodes".into(), Json::Num(self.nodes as f64));
         m.insert("vnodes".into(), Json::Num(self.vnodes as f64));
+        m.insert("worker-mode".into(), Json::Str(self.worker_mode.clone()));
         m.insert("transport".into(), Json::Str(self.transport.clone()));
         m.insert("gossip".into(), Json::Str(self.gossip.clone()));
         m.insert("gossip-every".into(), Json::Num(self.gossip_every as f64));
+        m.insert(
+            "full-gossip-every".into(),
+            Json::Num(self.full_gossip_every as f64),
+        );
         m.insert("merge-every".into(), Json::Num(self.merge_every as f64));
         m.insert("kill-at".into(), Json::Num(self.kill_at as f64));
         m.insert("kill-node".into(), Json::Num(self.kill_node as f64));
         m.insert("join-at".into(), Json::Num(self.join_at as f64));
+        m.insert("chaos-kill-at".into(), Json::Num(self.chaos_kill_at as f64));
+        m.insert(
+            "chaos-kill-node".into(),
+            Json::Num(self.chaos_kill_node as f64),
+        );
         Json::Obj(m)
     }
 }
@@ -763,23 +861,42 @@ mod tests {
         cfg.dataset = "drift-reg".into();
         cfg.gamma = 0.3;
         cfg.burst_min = 0.5;
-        cfg.drift_detect = true;
+        cfg.drift_detect = "adwin".into();
         cfg.replay = true;
         let back = StreamConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.dataset, "drift-reg");
         assert!((back.gamma - 0.3).abs() < 1e-12);
         assert!((back.burst_min - 0.5).abs() < 1e-12);
-        assert!(back.drift_detect && back.replay);
+        assert_eq!(back.drift_detect, "adwin");
+        assert!(back.replay);
+    }
+
+    #[test]
+    fn drift_detect_selector_parses_and_keeps_legacy_booleans() {
+        let mut cfg = StreamConfig::default();
+        assert_eq!(cfg.drift_detect, "off");
+        cfg.apply_override("drift-detect", "on").unwrap();
+        assert_eq!(cfg.drift_detect, "page-hinkley");
+        cfg.apply_override("drift-detect", "false").unwrap();
+        assert_eq!(cfg.drift_detect, "off");
+        cfg.apply_override("drift-detect", "adwin").unwrap();
+        cfg.validate().unwrap();
+        cfg.apply_override("drift-detect", "kswin").unwrap();
+        assert!(cfg.validate().is_err(), "unknown detector accepted");
     }
 
     #[test]
     fn drift_and_replay_are_part_of_run_identity() {
         let base = StreamConfig::default();
         let mut d = base.clone();
-        d.drift_detect = true;
+        d.drift_detect = "page-hinkley".into();
+        let mut a = base.clone();
+        a.drift_detect = "adwin".into();
         let mut r = base.clone();
         r.replay = true;
         assert_ne!(base.identity_json(), d.identity_json());
+        assert_ne!(base.identity_json(), a.identity_json());
+        assert_ne!(d.identity_json(), a.identity_json());
         assert_ne!(base.identity_json(), r.identity_json());
     }
 
@@ -810,6 +927,58 @@ mod tests {
         assert!((cfg.stream.gamma - 0.25).abs() < 1e-12);
         assert!(cfg.stream.replay);
         assert!(cfg.apply_override("bogus-key", "1").is_err());
+    }
+
+    #[test]
+    fn workers_flag_splits_mode_from_pipeline_count() {
+        let mut cfg = ClusterConfig::default();
+        assert_eq!(cfg.worker_mode, "threads");
+        // numeric: pipeline workers, mode untouched
+        cfg.apply_override("workers", "3").unwrap();
+        assert_eq!(cfg.stream.workers, 3);
+        assert_eq!(cfg.worker_mode, "threads");
+        // mode name: worker runtime, pipeline count untouched
+        cfg.apply_override("workers", "processes").unwrap();
+        assert_eq!(cfg.worker_mode, "processes");
+        assert_eq!(cfg.stream.workers, 3);
+        cfg.validate().unwrap();
+        cfg.apply_override("worker-mode", "threads").unwrap();
+        assert_eq!(cfg.worker_mode, "threads");
+        cfg.worker_mode = "fibers".into();
+        assert!(cfg.validate().is_err(), "unknown worker mode accepted");
+    }
+
+    #[test]
+    fn full_gossip_every_is_validated_and_round_trips() {
+        let mut cfg = ClusterConfig::default();
+        assert_eq!(cfg.full_gossip_every, 8);
+        cfg.apply_override("full-gossip-every", "3").unwrap();
+        cfg.validate().unwrap();
+        let back = ClusterConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.full_gossip_every, 3);
+        cfg.full_gossip_every = 0;
+        assert!(cfg.validate().is_err(), "full-gossip-every 0 accepted");
+    }
+
+    #[test]
+    fn chaos_kill_requires_process_workers() {
+        let mut cfg = ClusterConfig::default();
+        cfg.chaos_kill_at = 40;
+        cfg.chaos_kill_node = 1;
+        assert!(cfg.validate().is_err(), "chaos kill in thread mode accepted");
+        cfg.worker_mode = "processes".into();
+        cfg.validate().unwrap();
+        cfg.chaos_kill_node = cfg.nodes; // out of range
+        assert!(cfg.validate().is_err());
+        cfg.chaos_kill_node = 1;
+        cfg.kill_at = 80;
+        cfg.kill_node = 1; // same victim twice
+        assert!(cfg.validate().is_err());
+        cfg.kill_node = 2;
+        cfg.validate().unwrap();
+        // a tcp: feed cannot be re-consumed by N worker processes
+        cfg.stream.dataset = "tcp:127.0.0.1:9999".into();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

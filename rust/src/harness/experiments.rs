@@ -500,7 +500,8 @@ fn stream_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result
 
 /// Scale-out extension: the same drifting stream at an equal total tick
 /// budget through 1-, 2- and 4-node clusters, plus a 4-node delta-gossip
-/// job. Emits rolling-loss parity vs the single node, the aggregate-
+/// job and a 4-node *process-worker* job (one OS process per node).
+/// Emits rolling-loss parity vs the single node, the aggregate-
 /// throughput scaling curve, and gossip/merge bandwidth per job.
 fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result<()> {
     use crate::config::ClusterConfig;
@@ -523,20 +524,31 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
         "gossip",
         "gossip_bytes",
         "merge_bytes",
+        "workers",
     ]);
     let mut trace = crate::metrics::csv::CsvTable::new(vec![
-        "nodes", "gossip", "tick", "rolling_loss", "rolling_acc",
+        "nodes", "gossip", "workers", "tick", "rolling_loss", "rolling_acc",
     ]);
-    let jobs: &[(usize, &str)] = if opts.quick {
-        &[(1, "full"), (2, "full")]
+    // (nodes, gossip mode, worker mode); the process job only runs in the
+    // full sweep — spawning worker processes needs the real binary, which
+    // quick-mode test harnesses may not be
+    let jobs: &[(usize, &str, &str)] = if opts.quick {
+        &[(1, "full", "threads"), (2, "full", "threads")]
     } else {
-        &[(1, "full"), (2, "full"), (4, "full"), (4, "delta")]
+        &[
+            (1, "full", "threads"),
+            (2, "full", "threads"),
+            (4, "full", "threads"),
+            (4, "delta", "threads"),
+            (4, "full", "processes"),
+        ]
     };
     let mut base: Option<(f32, f64)> = None; // (loss, samples/s) at 1 node
-    for &(nodes, gossip) in jobs {
+    for &(nodes, gossip, workers) in jobs {
         let mut cfg = ClusterConfig::default();
         cfg.nodes = nodes;
         cfg.gossip = gossip.into();
+        cfg.worker_mode = workers.into();
         cfg.gossip_every = 8;
         cfg.merge_every = 8;
         cfg.stream.dataset = "drift-class".into();
@@ -546,7 +558,9 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
         cfg.stream.max_ticks = ticks;
         cfg.stream.window = 40;
         cfg.stream.workers = 1;
-        log::info!("cluster-cmp job: {nodes} node(s), {gossip} gossip, {ticks} ticks");
+        log::info!(
+            "cluster-cmp job: {nodes} node(s), {gossip} gossip, {workers} workers, {ticks} ticks"
+        );
         let r = crate::cluster::run(&cfg)?;
         if base.is_none() {
             base = Some((r.final_rolling_loss, r.samples_per_sec));
@@ -556,6 +570,7 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
             trace.push(vec![
                 nodes.to_string(),
                 gossip.to_string(),
+                workers.to_string(),
                 p.tick.to_string(),
                 format!("{:.6}", p.loss),
                 format!("{:.6}", p.acc),
@@ -574,6 +589,7 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
             gossip.to_string(),
             r.gossip_bytes.to_string(),
             r.merge_bytes.to_string(),
+            workers.to_string(),
         ]);
     }
     summary.save(&opts.out_dir.join("cluster_cmp_summary.csv"))?;

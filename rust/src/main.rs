@@ -32,6 +32,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         "train" => cmd_train(args),
         "stream" => cmd_stream(args),
         "cluster" => cmd_cluster(args),
+        "worker" => cmd_worker(args),
         "sweep" => cmd_sweep(args),
         "list-experiments" => {
             println!("{:<20} {:<12} description", "id", "paper");
@@ -167,6 +168,19 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The body of a spawned cluster worker process (normally launched by the
+/// `--workers processes` coordinator, not by hand).
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let addr = args
+        .flag("coordinator")
+        .ok_or_else(|| anyhow::anyhow!("worker requires --coordinator HOST:PORT"))?;
+    let node: usize = args
+        .flag("node-id")
+        .ok_or_else(|| anyhow::anyhow!("worker requires --node-id N"))?
+        .parse()?;
+    cluster::proc::run_worker(addr, node)
+}
+
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let mut cfg = match args.flag("config") {
         Some(path) => ClusterConfig::from_file(std::path::Path::new(path))?,
@@ -182,8 +196,8 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     println!("config: {}", cfg.to_json());
     let r = cluster::run(&cfg)?;
     println!(
-        "\ncluster result: nodes={} ticks={} gossip_rounds={} merges={}",
-        r.nodes_started, r.ticks, r.gossip_rounds, r.merges
+        "\ncluster result: nodes={} ({}) ticks={} gossip_rounds={} merges={}",
+        r.nodes_started, cfg.worker_mode, r.ticks, r.gossip_rounds, r.merges
     );
     println!(
         "  wire ({} transport, {} gossip): gossip={} KiB merge={} KiB",
@@ -222,7 +236,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             if n.alive_at_end { "alive" } else { "killed" }
         );
     }
-    println!("  phases: {}", r.phases.summary());
+    print_phases(&r.phases);
     if let Some(out) = args.flag("out") {
         let dir = PathBuf::from(out);
         std::fs::create_dir_all(&dir)?;
@@ -253,6 +267,15 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         println!("wrote {out}/cluster_rolling.csv and {out}/cluster_nodes.csv");
     }
     Ok(())
+}
+
+/// Phase timings live inside the worker processes in `--workers
+/// processes` runs, so an empty timer means "not measured here", not
+/// "everything was free".
+fn print_phases(phases: &adaselection::util::timer::PhaseTimer) {
+    if phases.grand_total_secs() > 0.0 {
+        println!("  phases: {}", phases.summary());
+    }
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {

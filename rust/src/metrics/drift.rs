@@ -7,8 +7,16 @@
 //! prequential loss it detects *loss increases* — concept drift — with a
 //! delay of roughly `lambda / step_size` ticks for a step change.
 //!
-//! The stream trainer uses it to drive γ and the method-weight learning
-//! rate (see `stream::tick::DriftGamma`) instead of keeping them fixed.
+//! [`Adwin`] (ADaptive WINdowing, Bifet & Gavaldà) keeps a bounded window
+//! of recent observations and drops its oldest part whenever some split of
+//! the window into old/new halves shows a mean difference larger than a
+//! Hoeffding bound — no magnitude tuning, the threshold adapts to the
+//! window sizes. Like the Page–Hinkley test here, it only fires on *upward*
+//! shifts (a loss drop is improvement, not drift).
+//!
+//! The stream trainer uses either to drive γ and the method-weight
+//! learning rate (see `stream::tick::DriftGamma`, `--drift-detect
+//! page-hinkley|adwin`) instead of keeping them fixed.
 
 /// Page–Hinkley test for an upward shift in the mean of a stream.
 #[derive(Clone, Debug)]
@@ -81,6 +89,118 @@ impl PageHinkley {
         self.mean = mean;
         self.cum = cum;
         self.min_cum = min_cum;
+        self.detections = detections;
+    }
+}
+
+/// ADWIN: adaptive-window change detection for an upward mean shift.
+///
+/// The window holds the most recent `max_window` finite observations.
+/// After every observation, all old/new splits (each side at least
+/// [`Adwin::MIN_SUB`] long) are tested: a split whose new-side mean
+/// exceeds the old-side mean by more than the Hoeffding cut
+/// `sqrt(ln(4n/δ) / 2m)` (with `m` the harmonic mean of the two sizes)
+/// drops the old side. Any drop counts as one detection; the surviving
+/// window is already the post-change regime, so the test re-arms
+/// naturally.
+#[derive(Clone, Debug)]
+pub struct Adwin {
+    /// Hoeffding-bound confidence (smaller ⇒ fewer false alarms).
+    delta: f64,
+    /// hard window cap in observations (memory and per-tick cost bound)
+    max_window: usize,
+    window: std::collections::VecDeque<f64>,
+    detections: u64,
+}
+
+impl Adwin {
+    /// Minimum observations on each side of a candidate cut.
+    pub const MIN_SUB: usize = 5;
+
+    /// `delta` = cut confidence, `max_window` = window cap (observations).
+    pub fn new(delta: f64, max_window: usize) -> Adwin {
+        Adwin {
+            delta: delta.clamp(1e-9, 1.0),
+            max_window: max_window.max(2 * Self::MIN_SUB),
+            window: std::collections::VecDeque::new(),
+            detections: 0,
+        }
+    }
+
+    /// Feed one observation; `true` when the window was cut (drift).
+    pub fn observe(&mut self, x: f64) -> bool {
+        if !x.is_finite() {
+            return false;
+        }
+        self.window.push_back(x);
+        if self.window.len() > self.max_window {
+            self.window.pop_front();
+        }
+        let mut detected = false;
+        loop {
+            let n = self.window.len();
+            if n < 2 * Self::MIN_SUB {
+                break;
+            }
+            let total: f64 = self.window.iter().sum();
+            let log_term = (4.0 * n as f64 / self.delta).ln();
+            let mut cut_at = None;
+            let mut prefix = 0.0;
+            for (i, &v) in self.window.iter().enumerate() {
+                prefix += v;
+                let n0 = i + 1;
+                let n1 = n - n0;
+                if n1 < Self::MIN_SUB {
+                    break;
+                }
+                if n0 < Self::MIN_SUB {
+                    continue;
+                }
+                let m0 = prefix / n0 as f64;
+                let m1 = (total - prefix) / n1 as f64;
+                // harmonic mean of the sub-window sizes
+                let m = 1.0 / (1.0 / n0 as f64 + 1.0 / n1 as f64);
+                let eps = (log_term / (2.0 * m)).sqrt();
+                if m1 - m0 > eps {
+                    cut_at = Some(n0);
+                    break;
+                }
+            }
+            match cut_at {
+                Some(k) => {
+                    self.window.drain(..k);
+                    detected = true;
+                }
+                None => break,
+            }
+        }
+        if detected {
+            self.detections += 1;
+        }
+        detected
+    }
+
+    /// Drop the whole window (detections counter survives).
+    pub fn reset(&mut self) {
+        self.window.clear();
+    }
+
+    pub fn detections(&self) -> u64 {
+        self.detections
+    }
+
+    /// Window contents, oldest first — checkpoint support.
+    pub fn window_values(&self) -> Vec<f64> {
+        self.window.iter().copied().collect()
+    }
+
+    /// Restore state captured by [`Adwin::window_values`] +
+    /// [`Adwin::detections`]. Values beyond the window cap keep only the
+    /// most recent `max_window` entries (matching live behaviour).
+    pub fn restore(&mut self, values: &[f64], detections: u64) {
+        self.window.clear();
+        let skip = values.len().saturating_sub(self.max_window);
+        self.window.extend(values[skip..].iter().copied());
         self.detections = detections;
     }
 }
@@ -170,5 +290,102 @@ mod tests {
         assert!(!ph.observe(f64::INFINITY));
         let (n, ..) = ph.state();
         assert_eq!(n, 0);
+    }
+
+    // ---- ADWIN (mirrors the Page–Hinkley suite) ----------------------------
+
+    fn adwin() -> Adwin {
+        Adwin::new(0.005, 256)
+    }
+
+    /// Same harness as [`first_detection`], for ADWIN.
+    fn adwin_first_detection(
+        a: &mut Adwin,
+        quiet: usize,
+        total: usize,
+        jump: f64,
+    ) -> Option<usize> {
+        let mut rng = Pcg64::new(11);
+        for i in 0..total {
+            let base = if i < quiet { 1.0 } else { 1.0 + jump };
+            let x = base + 0.05 * (rng.next_f64() - 0.5);
+            if a.observe(x) {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn adwin_detects_step_change_with_bounded_delay() {
+        let mut a = adwin();
+        let at = adwin_first_detection(&mut a, 200, 300, 1.0).expect("no detection");
+        assert!(at >= 200, "false positive at {at}");
+        // a unit step against the Hoeffding cut needs only a handful of
+        // post-change observations (eps ≈ sqrt(6/k) at small new sides)
+        assert!(at <= 215, "detection too slow: {at}");
+        assert_eq!(a.detections(), 1);
+    }
+
+    #[test]
+    fn adwin_stationary_stream_stays_quiet() {
+        let mut a = adwin();
+        assert_eq!(adwin_first_detection(&mut a, 500, 500, 0.0), None);
+        assert_eq!(a.detections(), 0);
+    }
+
+    #[test]
+    fn adwin_re_arms_after_detection() {
+        let mut a = adwin();
+        let mut hits = 0;
+        for block in 0..3 {
+            for _ in 0..100 {
+                if a.observe(1.0 + block as f64) {
+                    hits += 1;
+                }
+            }
+        }
+        assert!(hits >= 2, "only {hits} detections on a staircase");
+        assert_eq!(a.detections(), hits);
+    }
+
+    #[test]
+    fn adwin_downward_shift_is_ignored() {
+        let mut a = adwin();
+        for i in 0..400 {
+            let x = if i < 200 { 2.0 } else { 0.5 };
+            assert!(!a.observe(x), "fired on a loss drop at {i}");
+        }
+    }
+
+    #[test]
+    fn adwin_state_round_trips() {
+        let mut a = adwin();
+        let mut rng = Pcg64::new(3);
+        for _ in 0..50 {
+            a.observe(1.0 + rng.next_f64());
+        }
+        let mut b = adwin();
+        b.restore(&a.window_values(), a.detections());
+        for _ in 0..60 {
+            let x = 1.0 + 2.0 * rng.next_f64();
+            assert_eq!(a.observe(x), b.observe(x));
+        }
+        assert_eq!(a.detections(), b.detections());
+        assert_eq!(a.window_values(), b.window_values());
+    }
+
+    #[test]
+    fn adwin_window_is_bounded_and_nonfinite_skipped() {
+        let mut a = Adwin::new(0.01, 16);
+        assert!(!a.observe(f64::NAN));
+        assert!(!a.observe(f64::INFINITY));
+        assert!(a.window_values().is_empty());
+        for _ in 0..100 {
+            a.observe(1.0);
+        }
+        assert!(a.window_values().len() <= 16);
+        a.reset();
+        assert!(a.window_values().is_empty());
     }
 }

@@ -221,6 +221,20 @@ pub fn save(path: &Path, ck: &StreamCheckpoint) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Checkpoints written before `--drift-detect` grew detector names store
+/// the identity's `drift-detect` as a boolean; map it onto today's
+/// selector strings (`true` could only mean the then-only Page–Hinkley
+/// detector) so those runs stay resumable.
+fn normalize_identity(mut identity: Json) -> Json {
+    if let Json::Obj(m) = &mut identity {
+        if let Some(Json::Bool(b)) = m.get("drift-detect") {
+            let s = if *b { "page-hinkley" } else { "off" };
+            m.insert("drift-detect".into(), Json::Str(s.into()));
+        }
+    }
+    identity
+}
+
 /// Load a checkpoint written by [`save`].
 pub fn load(path: &Path) -> anyhow::Result<StreamCheckpoint> {
     let text = std::fs::read_to_string(path)?;
@@ -233,7 +247,7 @@ pub fn load(path: &Path) -> anyhow::Result<StreamCheckpoint> {
     Ok(StreamCheckpoint {
         tick: u64_from(j.at(&["tick"])?)?,
         family: j.at(&["family"])?.as_str()?.to_string(),
-        identity: j.at(&["identity"])?.clone(),
+        identity: normalize_identity(j.at(&["identity"])?.clone()),
         tensors: j
             .at(&["tensors"])?
             .as_arr()?
@@ -340,5 +354,49 @@ mod tests {
         let saved = policy_to_json(&p);
         let mut ada = build_policy("adaselection", 0, 0.5, true, -0.5).unwrap();
         assert!(restore_policy(&mut ada, &saved).is_err());
+    }
+
+    #[test]
+    fn legacy_boolean_drift_detect_identity_still_resumes() {
+        // checkpoints from before detector selection stored the identity's
+        // drift-detect as a boolean; loading must map it to the selector
+        // string today's identity_json emits
+        let mut cfg = crate::config::StreamConfig::default();
+        cfg.drift_detect = "off".into();
+        let mut legacy = match cfg.identity_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        legacy.insert("drift-detect".into(), Json::Bool(false));
+        let ck = StreamCheckpoint {
+            tick: 1,
+            family: "stream_class".into(),
+            identity: Json::Obj(legacy),
+            tensors: Vec::new(),
+            policy: policy_to_json(&build_policy("uniform", 0, 0.5, true, -0.5).unwrap()),
+            store: Vec::new(),
+            drift: Json::Null,
+            digest: 0,
+            samples_seen: 0,
+            samples_trained: 0,
+            samples_replayed: 0,
+        };
+        let path = tmp("legacy_identity");
+        save(&path, &ck).unwrap();
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.identity, cfg.identity_json(), "legacy bool not normalized");
+
+        // and the page-hinkley half of the mapping
+        cfg.drift_detect = "page-hinkley".into();
+        let mut legacy = match cfg.identity_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        legacy.insert("drift-detect".into(), Json::Bool(true));
+        assert_eq!(
+            super::normalize_identity(Json::Obj(legacy)),
+            cfg.identity_json()
+        );
     }
 }

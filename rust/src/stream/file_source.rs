@@ -107,8 +107,14 @@ struct Bucket {
     data: Dataset,
 }
 
-/// File-backed stream source with late-arrival watermarking.
+/// File-backed stream source with late-arrival watermarking. Also the
+/// parsing/bucketing core behind the socket tail
+/// (`stream::socket_source`), which ingests the identical `#stream-log
+/// v1` line format from a TCP feed via [`FileTailSource::from_text`].
 pub struct FileTailSource {
+    /// registry name: "file" when opened from a path, "tcp" when the
+    /// socket tail ingested the feed
+    name: &'static str,
     family: &'static str,
     task: Task,
     /// per-effective-tick buckets (load-time watermark assignment)
@@ -126,11 +132,20 @@ impl FileTailSource {
     pub fn open(path: &Path, lateness: u64) -> anyhow::Result<FileTailSource> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("cannot read stream log {path:?}: {e}"))?;
+        Self::from_text(&text, lateness, "file")
+            .map_err(|e| anyhow::anyhow!("stream log {path:?}: {e}"))
+    }
+
+    /// Parse a complete `#stream-log v1` document (the shared core of the
+    /// file and socket tails).
+    pub fn from_text(
+        text: &str,
+        lateness: u64,
+        name: &'static str,
+    ) -> anyhow::Result<FileTailSource> {
         let mut lines = text.lines();
         let header = parse_header(
-            lines
-                .next()
-                .ok_or_else(|| anyhow::anyhow!("empty stream log {path:?}"))?,
+            lines.next().ok_or_else(|| anyhow::anyhow!("empty stream log"))?,
         )?;
 
         let template = empty_dataset(&header);
@@ -257,6 +272,7 @@ impl FileTailSource {
         }
 
         Ok(FileTailSource {
+            name,
             family: header.family,
             task: header.task,
             buckets,
@@ -349,7 +365,7 @@ fn parse_csv_i32(s: &str, want: usize, lineno: usize) -> anyhow::Result<Vec<i32>
 
 impl StreamSource for FileTailSource {
     fn name(&self) -> &'static str {
-        "file"
+        self.name
     }
 
     fn family(&self) -> &'static str {
@@ -415,6 +431,18 @@ pub fn write_stream_log(
     ticks: u64,
     max_rows: usize,
 ) -> anyhow::Result<()> {
+    std::fs::write(path, stream_log_text(source, ticks, max_rows)?)?;
+    Ok(())
+}
+
+/// Render `ticks` chunks of `source` as the `#stream-log v1` document —
+/// what [`write_stream_log`] persists and what a socket producer streams
+/// over TCP (`stream::socket_source` tests drive exactly this).
+pub fn stream_log_text(
+    source: &dyn StreamSource,
+    ticks: u64,
+    max_rows: usize,
+) -> anyhow::Result<String> {
     use std::fmt::Write as _;
     let mut out = String::new();
     match source.task() {
@@ -465,8 +493,7 @@ pub fn write_stream_log(
             out.push('\n');
         }
     }
-    std::fs::write(path, out)?;
-    Ok(())
+    Ok(out)
 }
 
 fn push_csv_f32(out: &mut String, xs: &[f32]) -> std::fmt::Result {

@@ -7,6 +7,8 @@
 //!     configurable concept drift and arrival-rate bursts;
 //!   * [`file_source`] — the same trait over a line-delimited log file
 //!     with late-arrival watermarking (`--dataset file:PATH`);
+//!   * [`socket_source`] — the same `#stream-log v1` format ingested once
+//!     from a TCP producer (`--dataset tcp:ADDR`);
 //!   * [`store`] — the sharded, hard-capacity-bounded
 //!     [`store::InstanceStore`] of fixed per-instance records (also the
 //!     substrate of the batch trainer's stale-loss cache), with the
@@ -25,13 +27,15 @@
 
 pub mod checkpoint;
 pub mod file_source;
+pub mod socket_source;
 pub mod source;
 pub mod store;
 pub mod tick;
 pub mod trainer;
 
-pub use file_source::{write_stream_log, FileTailSource};
+pub use file_source::{stream_log_text, write_stream_log, FileTailSource};
+pub use socket_source::{serve_once, SocketTailSource};
 pub use source::{build_source, StreamChunk, StreamKnobs, StreamSource, ALL_STREAMS};
 pub use store::{InstanceRecord, InstanceStore, StoreCounters, BYTES_PER_INSTANCE};
-pub use tick::{DriftGamma, TickEngine, TickOutcome};
+pub use tick::{DriftGamma, DriftKind, TickEngine, TickOutcome};
 pub use trainer::{run, StreamResult, StreamTrainer};

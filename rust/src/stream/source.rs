@@ -389,7 +389,11 @@ impl StreamSource for DriftLmSource {
 pub const ALL_STREAMS: [&str; 3] = ["drift-class", "drift-reg", "drift-lm"];
 
 /// Which model family serves each stream (mirrors `data::family_for`).
-/// `file:PATH` resolves by reading the log's header.
+/// `file:PATH` resolves by reading the log's header. `tcp:ADDR` cannot be
+/// resolved without consuming the feed, so validation only checks the
+/// address shape and returns a placeholder — the real family comes from
+/// the header at [`build_source`] time (callers always take the family
+/// from the built source).
 pub fn family_for(name: &str) -> anyhow::Result<&'static str> {
     if let Some(path) = name.strip_prefix("file:") {
         let src = crate::stream::file_source::FileTailSource::open(
@@ -398,23 +402,40 @@ pub fn family_for(name: &str) -> anyhow::Result<&'static str> {
         )?;
         return Ok(src.family());
     }
+    if let Some(addr) = name.strip_prefix("tcp:") {
+        anyhow::ensure!(
+            addr.rsplit_once(':').map_or(false, |(h, p)| {
+                !h.is_empty() && p.parse::<u16>().is_ok()
+            }),
+            "tcp stream spec '{name}' is not HOST:PORT"
+        );
+        return Ok("(tcp feed: family resolved at connect)");
+    }
     Ok(match name {
         "drift-class" => "stream_class",
         "drift-reg" => "mlp_bike",
         "drift-lm" => "transformer",
         other => anyhow::bail!(
-            "unknown stream '{other}' (expected drift-class|drift-reg|drift-lm|file:PATH)"
+            "unknown stream '{other}' (expected drift-class|drift-reg|drift-lm|file:PATH|tcp:ADDR)"
         ),
     })
 }
 
 /// Build a registered stream source. `file:PATH` opens a line-delimited
-/// stream log (see `stream::file_source`) with the default lateness window;
-/// the seeded drift knobs do not apply to file feeds.
+/// stream log (see `stream::file_source`) with the default lateness
+/// window; `tcp:ADDR` ingests the same format once from a TCP producer
+/// (see `stream::socket_source`). The seeded drift knobs do not apply to
+/// captured feeds.
 pub fn build_source(name: &str, knobs: StreamKnobs) -> anyhow::Result<Arc<dyn StreamSource>> {
     if let Some(path) = name.strip_prefix("file:") {
         return Ok(Arc::new(crate::stream::file_source::FileTailSource::open(
             std::path::Path::new(path),
+            crate::stream::file_source::DEFAULT_LATENESS,
+        )?));
+    }
+    if let Some(addr) = name.strip_prefix("tcp:") {
+        return Ok(Arc::new(crate::stream::socket_source::SocketTailSource::connect(
+            addr,
             crate::stream::file_source::DEFAULT_LATENESS,
         )?));
     }
@@ -423,7 +444,7 @@ pub fn build_source(name: &str, knobs: StreamKnobs) -> anyhow::Result<Arc<dyn St
         "drift-reg" => Arc::new(DriftRegSource::new(knobs)),
         "drift-lm" => Arc::new(DriftLmSource::new(knobs)),
         other => anyhow::bail!(
-            "unknown stream '{other}' (expected drift-class|drift-reg|drift-lm|file:PATH)"
+            "unknown stream '{other}' (expected drift-class|drift-reg|drift-lm|file:PATH|tcp:ADDR)"
         ),
     })
 }

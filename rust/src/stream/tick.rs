@@ -12,7 +12,7 @@
 
 use std::collections::HashSet;
 
-use crate::metrics::drift::PageHinkley;
+use crate::metrics::drift::{Adwin, PageHinkley};
 use crate::pipeline::{gather, Batch};
 use crate::runtime::Backend;
 use crate::selection::policy::{Policy, SelectionContext};
@@ -33,6 +33,71 @@ pub(crate) fn fnv_fold(mut h: u64, x: u64) -> u64 {
 const PH_DELTA: f64 = 0.05;
 const PH_LAMBDA: f64 = 2.0;
 
+/// ADWIN defaults: cut confidence + window cap (per-tick mean losses).
+const ADWIN_DELTA: f64 = 0.005;
+const ADWIN_WINDOW: usize = 256;
+
+/// Which change detector drives [`DriftGamma`] (`--drift-detect
+/// page-hinkley|adwin`; `off` maps to `None`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftKind {
+    PageHinkley,
+    Adwin,
+}
+
+impl DriftKind {
+    /// Parse the `--drift-detect` value. `off` (and the legacy booleans
+    /// normalized by the config layer) selects no detector.
+    pub fn parse(s: &str) -> anyhow::Result<Option<DriftKind>> {
+        Ok(match s {
+            "off" => None,
+            "page-hinkley" => Some(DriftKind::PageHinkley),
+            "adwin" => Some(DriftKind::Adwin),
+            other => anyhow::bail!(
+                "unknown drift detector '{other}' (expected off|page-hinkley|adwin)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriftKind::PageHinkley => "page-hinkley",
+            DriftKind::Adwin => "adwin",
+        }
+    }
+}
+
+/// The detector behind [`DriftGamma`] — both observe the per-tick mean
+/// loss and fire on upward shifts only.
+#[derive(Clone, Debug)]
+enum Detector {
+    Ph(PageHinkley),
+    Adwin(Adwin),
+}
+
+impl Detector {
+    fn observe(&mut self, x: f64) -> bool {
+        match self {
+            Detector::Ph(d) => d.observe(x),
+            Detector::Adwin(d) => d.observe(x),
+        }
+    }
+
+    fn detections(&self) -> u64 {
+        match self {
+            Detector::Ph(d) => d.detections(),
+            Detector::Adwin(d) => d.detections(),
+        }
+    }
+
+    fn kind(&self) -> DriftKind {
+        match self {
+            Detector::Ph(_) => DriftKind::PageHinkley,
+            Detector::Adwin(_) => DriftKind::Adwin,
+        }
+    }
+}
+
 /// Stored-loss decay applied to a replayed instance after its train step.
 /// Replay rows skip the forward pass, so their store records would stay
 /// frozen at the arrival-time loss and `top_by_loss` would hand back the
@@ -42,13 +107,14 @@ const REPLAY_LOSS_DECAY: f32 = 0.7;
 
 /// Drift-adaptive control of γ and the method-weight learning rate
 /// (ROADMAP: "real drift detectors driving γ ... instead of fixed"):
-/// a [`PageHinkley`] test watches the pre-update mean loss of every tick;
-/// a detection boosts the sampling rate (train on more of each chunk) and
-/// the weight-update rate (re-rank candidate methods faster) for `hold`
-/// ticks, then both fall back to their configured base values.
+/// a change detector ([`PageHinkley`] or [`Adwin`], `--drift-detect`)
+/// watches the pre-update mean loss of every tick; a detection boosts the
+/// sampling rate (train on more of each chunk) and the weight-update rate
+/// (re-rank candidate methods faster) for `hold` ticks, then both fall
+/// back to their configured base values.
 #[derive(Clone, Debug)]
 pub struct DriftGamma {
-    ph: PageHinkley,
+    det: Detector,
     /// multiplier on γ while a boost is active (capped at γ=1)
     pub gamma_boost: f64,
     /// multiplier on the weight-update rule's learning parameter
@@ -60,20 +126,28 @@ pub struct DriftGamma {
 
 impl Default for DriftGamma {
     fn default() -> Self {
-        DriftGamma {
-            ph: PageHinkley::new(PH_DELTA, PH_LAMBDA),
-            gamma_boost: 2.0,
-            lr_boost: 3.0,
-            hold: 25,
-            left: 0,
-        }
+        DriftGamma::new(DriftKind::PageHinkley)
     }
 }
 
 impl DriftGamma {
+    /// A controller driven by the given detector kind.
+    pub fn new(kind: DriftKind) -> DriftGamma {
+        let det = match kind {
+            DriftKind::PageHinkley => Detector::Ph(PageHinkley::new(PH_DELTA, PH_LAMBDA)),
+            DriftKind::Adwin => Detector::Adwin(Adwin::new(ADWIN_DELTA, ADWIN_WINDOW)),
+        };
+        DriftGamma { det, gamma_boost: 2.0, lr_boost: 3.0, hold: 25, left: 0 }
+    }
+
+    /// The detector behind this controller.
+    pub fn kind(&self) -> DriftKind {
+        self.det.kind()
+    }
+
     /// Feed one tick's mean loss; `true` on a fresh detection.
     pub fn observe(&mut self, mean_loss: f64) -> bool {
-        if self.ph.observe(mean_loss) {
+        if self.det.observe(mean_loss) {
             self.left = self.hold;
             true
         } else {
@@ -103,31 +177,63 @@ impl DriftGamma {
     }
 
     pub fn detections(&self) -> u64 {
-        self.ph.detections()
+        self.det.detections()
     }
 
-    /// Checkpoint payload (deterministic resume needs the PH accumulators
-    /// and the remaining boost window).
+    /// Checkpoint payload (deterministic resume needs the detector
+    /// accumulators and the remaining boost window).
     pub fn to_json(&self) -> Json {
-        let (n, mean, cum, min_cum) = self.ph.state();
-        Json::obj(vec![
-            ("n", Json::from(n as usize)),
-            ("mean", Json::from(mean)),
-            ("cum", Json::from(cum)),
-            ("min_cum", Json::from(min_cum)),
-            ("detections", Json::from(self.ph.detections() as usize)),
-            ("left", Json::from(self.left as usize)),
-        ])
+        let mut pairs = vec![("kind", Json::from(self.det.kind().name()))];
+        match &self.det {
+            Detector::Ph(ph) => {
+                let (n, mean, cum, min_cum) = ph.state();
+                pairs.push(("n", Json::from(n as usize)));
+                pairs.push(("mean", Json::from(mean)));
+                pairs.push(("cum", Json::from(cum)));
+                pairs.push(("min_cum", Json::from(min_cum)));
+            }
+            Detector::Adwin(a) => {
+                pairs.push(("window", Json::arr_f64(&a.window_values())));
+            }
+        }
+        pairs.push(("detections", Json::from(self.detections() as usize)));
+        pairs.push(("left", Json::from(self.left as usize)));
+        Json::obj(pairs)
     }
 
-    /// Restore [`DriftGamma::to_json`] state.
+    /// Restore [`DriftGamma::to_json`] state. The checkpointed detector
+    /// kind must match this controller's (resume identity pins the
+    /// `--drift-detect` value); jsons without a `kind` key predate ADWIN
+    /// and are Page–Hinkley.
     pub fn restore_json(&mut self, j: &Json) -> anyhow::Result<()> {
-        let n = j.at(&["n"])?.as_usize()? as u64;
-        let mean = j.at(&["mean"])?.as_f64()?;
-        let cum = j.at(&["cum"])?.as_f64()?;
-        let min_cum = j.at(&["min_cum"])?.as_f64()?;
+        let kind = match j.get("kind") {
+            Some(k) => k.as_str()?.to_string(),
+            None => "page-hinkley".to_string(),
+        };
+        anyhow::ensure!(
+            kind == self.det.kind().name(),
+            "checkpoint drift detector '{kind}' does not match configured '{}'",
+            self.det.kind().name()
+        );
         let detections = j.at(&["detections"])?.as_usize()? as u64;
-        self.ph.restore(n, mean, cum, min_cum, detections);
+        match &mut self.det {
+            Detector::Ph(ph) => {
+                let n = j.at(&["n"])?.as_usize()? as u64;
+                let mean = j.at(&["mean"])?.as_f64()?;
+                let cum = j.at(&["cum"])?.as_f64()?;
+                let min_cum = j.at(&["min_cum"])?.as_f64()?;
+                ph.restore(n, mean, cum, min_cum, detections);
+            }
+            Detector::Adwin(a) => {
+                let vals: Vec<f64> = j
+                    .at(&["window"])?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64())
+                    .collect::<anyhow::Result<Vec<f64>>>()?;
+                a.restore(&vals, detections);
+            }
+        }
         self.left = j.at(&["left"])?.as_usize()? as u32;
         Ok(())
     }
@@ -429,6 +535,44 @@ mod tests {
         assert_eq!(a.detections(), b.detections());
         // garbage json rejected
         assert!(DriftGamma::default().restore_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn adwin_drift_gamma_boosts_and_round_trips() {
+        let mut d = DriftGamma::new(DriftKind::Adwin);
+        assert_eq!(d.kind(), DriftKind::Adwin);
+        let mut fired = false;
+        for _ in 0..50 {
+            fired |= d.observe(1.0);
+        }
+        assert!(!fired, "false positive on stationary signal");
+        for _ in 0..30 {
+            if d.observe(3.0) {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "no ADWIN detection on a 3x loss step");
+        assert!(d.boost_active());
+        // checkpoint round-trip keeps the window in sync
+        let j = d.to_json();
+        let mut b = DriftGamma::new(DriftKind::Adwin);
+        b.restore_json(&j).unwrap();
+        for x in [3.0, 3.1, 2.9, 3.0, 6.5, 6.5, 6.5, 6.5, 6.5, 6.5, 6.5, 6.5] {
+            assert_eq!(d.observe(x), b.observe(x));
+        }
+        assert_eq!(d.detections(), b.detections());
+        // a Page–Hinkley checkpoint cannot restore into an ADWIN controller
+        let ph_json = DriftGamma::default().to_json();
+        assert!(DriftGamma::new(DriftKind::Adwin).restore_json(&ph_json).is_err());
+        // and the selector grammar is pinned
+        assert_eq!(DriftKind::parse("off").unwrap(), None);
+        assert_eq!(DriftKind::parse("adwin").unwrap(), Some(DriftKind::Adwin));
+        assert_eq!(
+            DriftKind::parse("page-hinkley").unwrap(),
+            Some(DriftKind::PageHinkley)
+        );
+        assert!(DriftKind::parse("bogus").is_err());
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Multi-process cluster workers end to end: a `--workers processes` run
+//! must be bit-identical to the equivalent in-process `--transport tcp`
+//! run (digests, rolling metrics, remap accounting), and a worker
+//! SIGKILLed mid-run must be converted into kill-churn — bounded remap,
+//! survivor backfill, full arrival coverage — instead of sinking the job.
+//!
+//! Worker processes are spawned from the real `adaselection` binary
+//! (`CARGO_BIN_EXE_adaselection`): this test binary has no `worker`
+//! subcommand.
+
+use std::path::Path;
+
+use adaselection::cluster::{self, proc};
+use adaselection::config::ClusterConfig;
+use adaselection::stream::{build_source, StreamKnobs};
+
+fn worker_exe() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_adaselection"))
+}
+
+fn base_cfg(nodes: usize, ticks: usize) -> ClusterConfig {
+    let mut cfg = ClusterConfig::default();
+    cfg.nodes = nodes;
+    cfg.vnodes = 128;
+    cfg.gossip_every = 8;
+    cfg.merge_every = 4;
+    cfg.stream.dataset = "drift-class".into();
+    cfg.stream.selector = "adaselection".into();
+    cfg.stream.gamma = 0.5;
+    cfg.stream.seed = 7;
+    cfg.stream.max_ticks = ticks;
+    cfg.stream.window = 60;
+    cfg.stream.eval_every = 1;
+    cfg.stream.workers = 1;
+    cfg.stream.drift_period = 120;
+    cfg
+}
+
+fn total_arrivals(cfg: &ClusterConfig) -> u64 {
+    let source = build_source(
+        &cfg.stream.dataset,
+        StreamKnobs {
+            seed: cfg.stream.seed,
+            drift_period: cfg.stream.drift_period,
+            burst_period: cfg.stream.burst_period,
+            burst_min: cfg.stream.burst_min,
+        },
+    )
+    .unwrap();
+    (0..cfg.stream.max_ticks as u64)
+        .map(|t| source.gen_chunk(t, 128).ids.len() as u64)
+        .sum()
+}
+
+#[test]
+fn process_workers_are_bit_identical_to_in_process_tcp() {
+    // the acceptance bar: same seed, same barrier schedule, scheduled
+    // kill + join churn, delta gossip with its periodic full fallback,
+    // replay steering training through the gossiped stores — once through
+    // in-process tcp nodes, once through 4 real worker processes
+    let ticks = 140;
+    let mk = || {
+        let mut cfg = base_cfg(4, ticks);
+        cfg.gossip = "delta".into();
+        cfg.stream.replay = true;
+        cfg.kill_at = 50;
+        cfg.kill_node = 1;
+        cfg.join_at = 90;
+        cfg
+    };
+    let mut thread_cfg = mk();
+    thread_cfg.transport = "tcp".into();
+    let threads = cluster::run(&thread_cfg).unwrap();
+
+    let procs = proc::run_with_exe(&mk(), worker_exe()).unwrap();
+
+    assert_eq!(
+        procs.digest, threads.digest,
+        "process workers diverged from the in-process run"
+    );
+    assert_eq!(procs.samples_seen, threads.samples_seen);
+    assert_eq!(procs.samples_trained, threads.samples_trained);
+    assert_eq!(procs.samples_replayed, threads.samples_replayed);
+    assert_eq!(procs.drift_detections, threads.drift_detections);
+    assert_eq!(procs.remaps, threads.remaps, "remap accounting diverged");
+    assert_eq!(procs.gossip_rounds, threads.gossip_rounds);
+    assert_eq!(procs.merges, threads.merges);
+    assert_eq!(
+        procs.gossip_bytes, threads.gossip_bytes,
+        "relayed gossip must ship the same frames the mesh ships"
+    );
+    assert_eq!(
+        procs.final_rolling_loss.to_bits(),
+        threads.final_rolling_loss.to_bits(),
+        "rolling loss not bit-identical"
+    );
+    assert_eq!(procs.rolling.len(), threads.rolling.len());
+    for (a, b) in procs.rolling.iter().zip(threads.rolling.iter()) {
+        assert_eq!(a.tick, b.tick);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+    }
+    // per-node accounting lines up too (4 starters + 1 joiner)
+    assert_eq!(procs.node_summaries.len(), threads.node_summaries.len());
+    for (a, b) in procs.node_summaries.iter().zip(threads.node_summaries.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.ticks_processed, b.ticks_processed, "node {}", a.id);
+        assert_eq!(a.samples_seen, b.samples_seen, "node {}", a.id);
+        assert_eq!(a.samples_trained, b.samples_trained, "node {}", a.id);
+        assert_eq!(a.alive_at_end, b.alive_at_end, "node {}", a.id);
+    }
+}
+
+#[test]
+fn sigkilled_worker_becomes_kill_churn_with_full_coverage() {
+    // no scheduled churn at all: the only membership change is the
+    // coordinator SIGKILLing worker 2 mid-segment; the run must convert
+    // it to churn (bounded remap), backfill the lost segment share, and
+    // finish with exact arrival coverage
+    let mut cfg = base_cfg(4, 160);
+    cfg.worker_mode = "processes".into();
+    cfg.chaos_kill_at = 60;
+    cfg.chaos_kill_node = 2;
+    let r = proc::run_with_exe(&cfg, worker_exe()).unwrap();
+
+    assert!(r.final_rolling_loss.is_finite(), "training halted");
+    assert_eq!(
+        r.samples_seen,
+        total_arrivals(&cfg),
+        "crash conversion dropped or duplicated arrivals"
+    );
+    assert_eq!(r.remaps.len(), 1, "expected exactly the crash churn event");
+    let (tick, frac) = r.remaps[0];
+    assert!(tick < 160, "churn epoch {tick} outside the run");
+    assert!(
+        frac > 0.05 && frac < 0.6,
+        "crash remapped an unbounded key fraction: {frac}"
+    );
+
+    assert_eq!(r.node_summaries.len(), 4);
+    let victim = r.node_summaries.iter().find(|n| n.id == 2).unwrap();
+    assert!(!victim.alive_at_end, "victim reported alive");
+    assert!(
+        victim.ticks_processed < 160,
+        "victim 'processed' the whole run after dying"
+    );
+    for n in r.node_summaries.iter().filter(|n| n.id != 2) {
+        assert!(n.alive_at_end, "survivor {} died", n.id);
+        assert_eq!(n.ticks_processed, 160, "survivor {} stalled", n.id);
+    }
+    assert!(r.samples_trained > 0);
+}
+
+#[test]
+fn binary_runs_process_workers_end_to_end() {
+    // the CLI path: the coordinator spawns workers from its *own*
+    // executable (std::env::current_exe), so drive the real binary
+    let bin = env!("CARGO_BIN_EXE_adaselection");
+    let out = std::process::Command::new(bin)
+        .args([
+            "cluster",
+            "--workers",
+            "processes",
+            "--nodes",
+            "2",
+            "--max-ticks",
+            "30",
+            "--gossip-every",
+            "8",
+            "--merge-every",
+            "8",
+            "--window",
+            "10",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("cluster result"), "{stdout}");
+    assert!(stdout.contains("(processes)"), "{stdout}");
+
+    // a worker invoked without a coordinator address fails cleanly
+    let out = std::process::Command::new(bin).args(["worker"]).output().unwrap();
+    assert!(!out.status.success());
+}

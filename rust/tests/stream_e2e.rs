@@ -206,11 +206,11 @@ fn drift_detector_boosts_gamma_on_the_drifting_stream() {
     cfg.max_ticks = 200;
     cfg.drift_period = 100;
     cfg.burst_period = 0;
-    cfg.drift_detect = true;
+    cfg.drift_detect = "page-hinkley".into();
     let adaptive = run(cfg.clone());
 
     let mut fixed_cfg = cfg.clone();
-    fixed_cfg.drift_detect = false;
+    fixed_cfg.drift_detect = "off".into();
     let fixed = run(fixed_cfg);
 
     assert!(adaptive.drift_detections >= 1, "Page–Hinkley never fired");
@@ -225,6 +225,32 @@ fn drift_detector_boosts_gamma_on_the_drifting_stream() {
 }
 
 #[test]
+fn adwin_detector_fires_on_the_drifting_stream() {
+    // the ADWIN-backed controller must also catch the prototype rotation
+    // and train more rows than the fixed-γ run (same harness as the
+    // Page–Hinkley e2e above)
+    let mut cfg = base_cfg();
+    cfg.max_ticks = 200;
+    cfg.drift_period = 100;
+    cfg.burst_period = 0;
+    cfg.drift_detect = "adwin".into();
+    let adaptive = run(cfg.clone());
+
+    let mut fixed_cfg = cfg.clone();
+    fixed_cfg.drift_detect = "off".into();
+    let fixed = run(fixed_cfg);
+
+    assert!(adaptive.drift_detections >= 1, "ADWIN never fired");
+    assert_eq!(adaptive.samples_seen, fixed.samples_seen);
+    assert!(
+        adaptive.samples_trained > fixed.samples_trained,
+        "ADWIN boost did not raise the training volume: {} vs {}",
+        adaptive.samples_trained,
+        fixed.samples_trained
+    );
+}
+
+#[test]
 fn checkpoint_resume_with_drift_and_replay_is_deterministic() {
     let dir = std::env::temp_dir().join(format!("ada_stream_ckdr_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
@@ -236,7 +262,7 @@ fn checkpoint_resume_with_drift_and_replay_is_deterministic() {
     cfg.eval_every = 2;
     cfg.burst_period = 16;
     cfg.burst_min = 0.25;
-    cfg.drift_detect = true;
+    cfg.drift_detect = "page-hinkley".into();
     cfg.replay = true;
     // default (ample) store capacity: replay determinism across a resume
     // requires the store not to have rotated generations (see
@@ -268,7 +294,7 @@ fn checkpoint_resume_with_drift_and_replay_is_deterministic() {
     let mut cfg3 = cfg.clone();
     cfg3.checkpoint = Some(ck.clone());
     cfg3.resume = true;
-    cfg3.drift_detect = false;
+    cfg3.drift_detect = "off".into();
     let mut backend = NativeBackend::new();
     assert!(StreamTrainer::new(&mut backend, cfg3).unwrap().run().is_err());
 
@@ -301,6 +327,31 @@ fn stream_trains_from_a_file_tail_source() {
     assert_eq!(r.samples_seen, expect);
 
     std::fs::remove_file(&log).ok();
+}
+
+#[test]
+fn stream_trains_from_a_socket_tail_source() {
+    use adaselection::stream::{build_source, serve_once, stream_log_text, StreamKnobs};
+
+    let gen = build_source(
+        "drift-class",
+        StreamKnobs { seed: 19, drift_period: 64, burst_period: 8, burst_min: 0.5 },
+    )
+    .unwrap();
+    let text = stream_log_text(gen.as_ref(), 25, 128).unwrap();
+    let (addr, producer) = serve_once(text).unwrap();
+
+    let mut cfg = base_cfg();
+    cfg.dataset = format!("tcp:{addr}");
+    cfg.max_ticks = 25;
+    cfg.window = 10;
+    let r = run(cfg);
+    producer.join().unwrap().unwrap();
+    assert_eq!(r.ticks, 25);
+    assert!(r.final_rolling_loss.is_finite());
+    // the socket feed reproduces the generator's traffic volume exactly
+    let expect: u64 = (0..25u64).map(|t| gen.gen_chunk(t, 128).ids.len() as u64).sum();
+    assert_eq!(r.samples_seen, expect);
 }
 
 #[test]
