@@ -8,7 +8,7 @@
 use adaselection::runtime::{Backend, NativeBackend};
 use adaselection::selection::adaselection::score_host;
 use adaselection::selection::method::all_alphas;
-use adaselection::selection::{AdaConfig, AdaSelection, Method};
+use adaselection::selection::{AdaConfig, AdaSelection, Arm, Method};
 use adaselection::util::bench::{bench, print_results, write_json, BenchResult};
 use adaselection::util::rng::Pcg64;
 use adaselection::util::topk::top_k_indices;
@@ -44,7 +44,7 @@ fn main() {
     // full AdaSelection iteration (α + fuse + top-k + eq.3 update)
     let (loss, gnorm) = inputs(128, 9);
     let mut ada = AdaSelection::new(AdaConfig {
-        candidates: Method::ALL.to_vec(),
+        candidates: Method::ALL.iter().copied().map(Arm::Kernel).collect(),
         ..AdaConfig::default()
     });
     results.push(bench("AdaSelection::step_host B=128 (7 cand)", ms(80), || {

@@ -1,6 +1,9 @@
 //! Streaming-subsystem benchmarks: source generation cost, instance-store
-//! update throughput, and end-to-end stream-trainer throughput
-//! (samples/sec) at γ ∈ {0.25, 0.5, 1.0} on the drift-class stream.
+//! update throughput, end-to-end stream-trainer throughput (samples/sec)
+//! at γ ∈ {0.25, 0.5, 1.0} on the drift-class stream, and a per-method
+//! forward/backward cost split at γ=0.25 (benchmark, big_loss, obftf,
+//! selective-backprop, adaselection). Asserts — against the emitted JSON —
+//! that obftf backward-scores strictly fewer rows than the benchmark.
 //!
 //! Emits `BENCH_stream.json` (see `util::bench::write_json`) so the perf
 //! trajectory is tracked across PRs.
@@ -83,5 +86,87 @@ fn main() {
         });
     }
 
+    // per-method e2e at γ=0.25: forward-cheap methods must buy their
+    // speedup by scoring forward-only candidates while the backward pass
+    // runs on strictly fewer rows than the full-batch benchmark.
+    println!("\n## per-method stream throughput (drift-class, γ=0.25, B=128)");
+    println!(
+        "{:<22} {:>12} {:>12} {:>14}",
+        "method", "fwd rows", "bwd rows", "samples/s"
+    );
+    for method in [
+        "benchmark",
+        "big_loss",
+        "obftf",
+        "selective-backprop",
+        "adaselection",
+    ] {
+        let mut cfg = StreamConfig::default();
+        cfg.dataset = "drift-class".into();
+        cfg.selector = method.into();
+        cfg.gamma = 0.25;
+        cfg.max_ticks = ticks;
+        cfg.eval_every = 0;
+        cfg.burst_period = 0;
+        cfg.window = 50;
+        let mut backend = NativeBackend::new();
+        let sw = Stopwatch::new();
+        let r = StreamTrainer::new(&mut backend, cfg).unwrap().run().unwrap();
+        let dt = sw.elapsed_secs();
+        println!(
+            "{:<22} {:>12} {:>12} {:>14.1}",
+            method, r.samples_forward, r.samples_trained, r.samples_per_sec
+        );
+        // iters carries the backward-row count so the emitted JSON records
+        // the cost split; forward rows ride in the name.
+        results.push(BenchResult {
+            name: format!(
+                "stream e2e method={method} γ=0.25 fwd={} (per backward row)",
+                r.samples_forward
+            ),
+            iters: r.samples_trained as usize,
+            median_ns: dt * 1e9 / (r.samples_trained.max(1) as f64),
+            p95_ns: dt * 1e9 / (r.samples_trained.max(1) as f64),
+            mean_ns: dt * 1e9 / (r.samples_trained.max(1) as f64),
+        });
+    }
+
     write_json("stream", &results).expect("write BENCH_stream.json");
+
+    // read the emitted file back: the perf contract is on the artifact,
+    // not the in-memory values.
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_stream.json");
+    let text = std::fs::read_to_string(&path).expect("read back BENCH_stream.json");
+    let j = adaselection::util::json::Json::parse(&text).expect("parse BENCH_stream.json");
+    let backward_rows = |method: &str| -> f64 {
+        let tag = format!("method={method} ");
+        j.at(&["results"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|r| {
+                r.at(&["name"])
+                    .ok()
+                    .and_then(|n| n.as_str().ok())
+                    .map(|n| n.contains(&tag))
+                    .unwrap_or(false)
+            })
+            .unwrap_or_else(|| panic!("no {tag}entry in BENCH_stream.json"))
+            .at(&["iters"])
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    let obftf = backward_rows("obftf");
+    let benchmark = backward_rows("benchmark");
+    assert!(
+        obftf < benchmark,
+        "obftf must backward-score strictly fewer rows than benchmark at γ=0.25 \
+         (got obftf={obftf}, benchmark={benchmark})"
+    );
+    println!(
+        "[ok] obftf backward rows {obftf} < benchmark backward rows {benchmark}"
+    );
 }

@@ -10,16 +10,21 @@
 //!
 //! Run: cargo run --release --example policy_playground
 
-use adaselection::selection::{AdaConfig, AdaSelection, Method};
+use adaselection::selection::{AdaConfig, AdaSelection, Arm, Method};
 use adaselection::util::rng::Pcg64;
 
 fn main() {
     let mut ada = AdaSelection::new(AdaConfig {
-        candidates: vec![Method::BigLoss, Method::SmallLoss, Method::Uniform],
+        candidates: vec![
+            Arm::Kernel(Method::BigLoss),
+            Arm::Kernel(Method::SmallLoss),
+            Arm::Kernel(Method::Uniform),
+        ],
         beta: 0.5,
         cl_on: true,
         cl_power: -0.5,
         rule: None,
+        obftf_k: 10,
     });
     let mut rng = Pcg64::new(7);
     let b = 128;

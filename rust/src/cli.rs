@@ -67,13 +67,15 @@ USAGE:
 COMMANDS:
   train               run one training job
                       --backend native|xla --dataset D --selector S
+                      (--method is an alias for --selector)
                       --gamma G --epochs N --lr X
                       --beta B --cl on|off --cl-power P --seed N
                       --data-scale F --workers N --accumulate on|off
                       --kernel-scorer on|off --config FILE --out DIR
   stream              continuous training on an unbounded sample stream
                       --dataset drift-class|drift-reg|drift-lm|file:PATH|tcp:ADDR
-                      --selector S --gamma G --max-ticks N --lr X
+                      --selector S (alias --method) --gamma G --max-ticks N
+                      --obftf-k K (candidate multiplier for obftf) --lr X
                       --drift-period N --burst-period N --burst-min F
                       --store-capacity N --store-shards N
                       --window N --eval-every N --workers N
@@ -100,6 +102,12 @@ COMMANDS:
   gen-data            generate + describe a dataset
                       --dataset D [--data-scale F --seed N]
   help                this text
+
+Selector ids: benchmark, uniform, big_loss, small_loss, grad_norm, adaboost,
+coreset1, coreset2, obftf, selective-backprop, adaselection, or
+adaselection:<id>+<id>+... to pick the bandit arm pool. `obftf` and
+`selective-backprop` are forward-cheap: they forward-score candidates and
+run the backward pass only on the selected rows.
 
 The default backend is `native` (pure Rust, no artifacts needed). The xla
 backend executes the HLO artifacts from `make artifacts` and requires

@@ -43,8 +43,7 @@ use crate::config::ClusterConfig;
 use crate::metrics::rolling::{RollingPoint, RollingWindow};
 use crate::runtime::{average_states, Backend, NativeBackend, TaskKind, Tensor};
 use crate::selection::adaselection::merge_snapshots;
-use crate::selection::bandit::UpdateRule;
-use crate::selection::policy::build_policy;
+use crate::selection::policy::Policy;
 use crate::selection::AdaSnapshot;
 use crate::stream::source::{build_source, StreamKnobs};
 use crate::stream::store::InstanceStore;
@@ -199,29 +198,14 @@ pub(crate) fn make_engine(
     let s = &cfg.stream;
     // fold the node id into the policy seed so stochastic baselines
     // (uniform/adaboost) draw independent streams per shard
-    let mut policy = build_policy(
-        &s.selector,
-        s.seed.wrapping_add(node as u64),
-        s.beta,
-        s.cl_on,
-        s.cl_power,
-    )?;
-    if s.rule != "eq3" {
-        let rule = UpdateRule::parse(&s.rule)?;
-        if let Some(ada) = policy.as_ada() {
-            ada.state_mut().set_rule(rule);
-        }
-    }
+    let policy = Policy::from_config_with_seed(s, s.seed.wrapping_add(node as u64))?;
+    let drift = DriftGamma::from_config(s, &policy)?;
     let store = InstanceStore::new(s.store_capacity, s.store_shards);
     if cfg.gossip == "delta" {
         store.enable_dirty_tracking();
     }
     let mut engine = TickEngine::new(policy, store, s.gamma, s.lr, chunk_rows);
-    if let Some(kind) = crate::stream::tick::DriftKind::parse(&s.drift_detect)? {
-        if !engine.policy.is_benchmark() {
-            engine.drift = Some(DriftGamma::new(kind));
-        }
-    }
+    engine.drift = drift;
     if s.replay {
         engine.replay_budget = Some(replay_budget);
     }

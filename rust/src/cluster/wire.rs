@@ -484,7 +484,10 @@ fn read_policy(c: &mut Cursor) -> anyhow::Result<Option<AdaSnapshot>> {
                 other => anyhow::bail!("wire: bad prev-loss flag {other}"),
             };
             let t = c.u64()? as usize;
-            Some(AdaSnapshot { w, prev_loss, t })
+            // arm ids never ride the wire: same-config peers restore
+            // positionally, which `AdaState::restore` accepts for id-less
+            // snapshots of matching arity
+            Some(AdaSnapshot { w, prev_loss, t, ids: None })
         }
         other => anyhow::bail!("wire: bad policy flag {other}"),
     })
@@ -708,6 +711,7 @@ mod tests {
                 w: (0..m).map(|_| rng.next_f32()).collect(),
                 prev_loss: prev,
                 t: rng.next_below(10_000) as usize,
+                ids: None,
             })
         };
         Message::State {
@@ -818,7 +822,7 @@ mod tests {
                 from: 7,
                 weight: 2.5,
                 tensors: vec![Tensor { shape: vec![0, 4], data: Vec::new() }],
-                policy: Some(AdaSnapshot { w: vec![0.5; 7], prev_loss: None, t: 0 }),
+                policy: Some(AdaSnapshot { w: vec![0.5; 7], prev_loss: None, t: 0, ids: None }),
             },
         ];
         for msg in &edges {
@@ -1023,6 +1027,7 @@ mod tests {
                     w: vec![0.25, 0.75],
                     prev_loss: Some(vec![1.0, 2.0]),
                     t: 9,
+                    ids: None,
                 }),
             },
             Message::MergePayload { tensors: Vec::new(), policy: None },

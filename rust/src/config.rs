@@ -125,7 +125,7 @@ impl RunConfig {
         match key {
             "backend" => self.backend = value.into(),
             "dataset" => self.dataset = value.into(),
-            "selector" => self.selector = value.into(),
+            "selector" | "method" => self.selector = value.into(),
             "gamma" => self.gamma = value.parse()?,
             "beta" => self.beta = value.parse()?,
             "cl" => self.cl_on = parse_bool(value)?,
@@ -213,6 +213,9 @@ pub struct StreamConfig {
     pub dataset: String,
     /// selector spec (same grammar as [`RunConfig::selector`])
     pub selector: String,
+    /// OBFTF candidate multiplier: forward-score up to `obftf_k·⌈γB⌉`
+    /// rows, backward only on the top ⌈γB⌉ (paper's forward-cheap mode)
+    pub obftf_k: usize,
     /// sampling rate γ ∈ (0, 1]
     pub gamma: f64,
     pub beta: f32,
@@ -264,6 +267,7 @@ impl Default for StreamConfig {
             backend: "native".into(),
             dataset: "drift-class".into(),
             selector: "adaselection".into(),
+            obftf_k: 10,
             gamma: 0.5,
             beta: 0.5,
             cl_on: true,
@@ -323,15 +327,17 @@ impl StreamConfig {
             !self.resume || self.checkpoint.is_some(),
             "--resume requires --checkpoint FILE"
         );
+        anyhow::ensure!(self.obftf_k >= 1, "obftf-k must be >= 1");
         crate::stream::source::family_for(&self.dataset)?;
         crate::stream::tick::DriftKind::parse(&self.drift_detect)?;
         crate::selection::bandit::UpdateRule::parse(&self.rule)?;
-        crate::selection::build_selector(
+        crate::selection::build_policy_full(
             &self.selector,
             self.seed,
             self.beta,
             self.cl_on,
             self.cl_power,
+            self.obftf_k,
         )?;
         Ok(())
     }
@@ -341,7 +347,9 @@ impl StreamConfig {
         match key {
             "backend" => self.backend = value.into(),
             "dataset" => self.dataset = value.into(),
-            "selector" => self.selector = value.into(),
+            // `--method` is the reader-friendly alias the paper tables use
+            "selector" | "method" => self.selector = value.into(),
+            "obftf-k" => self.obftf_k = value.parse()?,
             "gamma" => self.gamma = value.parse()?,
             "beta" => self.beta = value.parse()?,
             "cl" => self.cl_on = parse_bool(value)?,
@@ -416,6 +424,9 @@ impl StreamConfig {
         let mut m = BTreeMap::new();
         m.insert("dataset".into(), Json::Str(self.dataset.clone()));
         m.insert("selector".into(), Json::Str(self.selector.clone()));
+        // the candidate multiplier changes which rows get scored, hence
+        // the selection sequence
+        m.insert("obftf-k".into(), Json::Num(self.obftf_k as f64));
         m.insert("gamma".into(), Json::Num(self.gamma));
         m.insert("beta".into(), Json::Num(self.beta as f64));
         m.insert("cl".into(), Json::Bool(self.cl_on));
@@ -438,6 +449,7 @@ impl StreamConfig {
         m.insert("backend".into(), Json::Str(self.backend.clone()));
         m.insert("dataset".into(), Json::Str(self.dataset.clone()));
         m.insert("selector".into(), Json::Str(self.selector.clone()));
+        m.insert("obftf-k".into(), Json::Num(self.obftf_k as f64));
         m.insert("gamma".into(), Json::Num(self.gamma));
         m.insert("beta".into(), Json::Num(self.beta as f64));
         m.insert("cl".into(), Json::Bool(self.cl_on));
@@ -883,6 +895,38 @@ mod tests {
         cfg.validate().unwrap();
         cfg.apply_override("drift-detect", "kswin").unwrap();
         assert!(cfg.validate().is_err(), "unknown detector accepted");
+    }
+
+    #[test]
+    fn method_alias_and_obftf_k_apply_and_validate() {
+        let mut cfg = StreamConfig::default();
+        cfg.apply_override("method", "obftf").unwrap();
+        assert_eq!(cfg.selector, "obftf");
+        cfg.apply_override("obftf-k", "4").unwrap();
+        assert_eq!(cfg.obftf_k, 4);
+        cfg.validate().unwrap();
+        cfg.apply_override("method", "selective-backprop").unwrap();
+        cfg.validate().unwrap();
+        cfg.apply_override("method", "adaselection:big_loss+obftf").unwrap();
+        cfg.validate().unwrap();
+        cfg.obftf_k = 0;
+        assert!(cfg.validate().is_err(), "obftf-k 0 accepted");
+        cfg.obftf_k = 10;
+        cfg.selector = "bogus".into();
+        let e = cfg.validate().unwrap_err().to_string();
+        assert!(e.contains("obftf"), "error must list valid ids: {e}");
+
+        // the multiplier is part of the resume identity
+        let base = StreamConfig::default();
+        let mut k4 = base.clone();
+        k4.obftf_k = 4;
+        assert_ne!(base.identity_json(), k4.identity_json());
+
+        // the batch config accepts the alias too
+        let mut rc = RunConfig::default();
+        rc.apply_override("method", "big_loss").unwrap();
+        assert_eq!(rc.selector, "big_loss");
+        rc.validate().unwrap();
     }
 
     #[test]

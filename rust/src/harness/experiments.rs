@@ -41,7 +41,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "ablate-stale", paper_ref: "§5 (future work)", description: "stale-loss forward approximation: refresh window sweep" },
         Experiment { id: "ablate-rule", paper_ref: "§3.2 (bandit view)", description: "weight-update rule: eq3 vs exp3 vs softmax" },
         Experiment { id: "tables-from-aggregates", paper_ref: "Tables 3/4", description: "assemble tables 3+4 from aggregate_*.csv already in --out (no re-training)" },
-        Experiment { id: "stream-cmp", paper_ref: "§1/§5 (streaming)", description: "continuous-training stream: AdaSelection vs uniform vs benchmark rolling loss at equal tick budget (γ=0.5, drift-class)" },
+        Experiment { id: "stream-cmp", paper_ref: "§1/§5 (streaming)", description: "continuous-training stream: AdaSelection vs uniform vs benchmark vs forward-cheap (obftf, selective-backprop) rolling loss at equal tick budget (γ=0.5, drift-class)" },
         Experiment { id: "cluster-cmp", paper_ref: "§1 (scale-out)", description: "multi-node sharded streaming: 1 vs 2 vs 4 nodes at equal total tick budget — rolling loss parity + aggregate samples/sec (native only)" },
     ]
 }
@@ -457,10 +457,17 @@ fn stream_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result
         "final_rolling_acc",
         "samples_per_sec",
         "samples_trained",
+        "samples_forward",
         "store_live",
         "store_evictions",
     ]);
-    for selector in ["adaselection", "uniform", "benchmark"] {
+    for selector in [
+        "adaselection",
+        "uniform",
+        "benchmark",
+        "obftf",
+        "selective-backprop",
+    ] {
         let mut cfg = StreamConfig::default();
         cfg.dataset = "drift-class".into();
         cfg.selector = selector.into();
@@ -485,6 +492,7 @@ fn stream_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result
             format!("{:.6}", r.final_rolling_acc),
             format!("{:.1}", r.samples_per_sec),
             r.samples_trained.to_string(),
+            r.samples_forward.to_string(),
             r.store_len.to_string(),
             r.store_counters.evictions.to_string(),
         ]);

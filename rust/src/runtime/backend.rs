@@ -176,6 +176,29 @@ pub trait Backend {
     }
 }
 
+/// Forward-score a candidate subset (`rows` = batch positions) of `batch`:
+/// gather the rows into a dense sub-batch, run [`Backend::forward_scores`]
+/// over it, and return per-candidate (loss, gnorm) aligned with `rows`.
+/// The phase-1 scoring entry point for candidate-superset policies (OBFTF)
+/// — the forward pass covers only the planned candidates, and the backward
+/// pass later sees only the finally-selected rows.
+pub fn forward_scores_rows<B: Backend>(
+    backend: &mut B,
+    state: &B::State,
+    batch: &Batch,
+    rows: &[usize],
+) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+    let sub = batch.gather_rows(rows);
+    let (loss, gnorm) = backend.forward_scores(state, &sub)?;
+    anyhow::ensure!(
+        loss.len() >= rows.len() && gnorm.len() >= rows.len(),
+        "forward_scores returned {} rows for a {}-row candidate batch",
+        loss.len(),
+        rows.len()
+    );
+    Ok((loss[..rows.len()].to_vec(), gnorm[..rows.len()].to_vec()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -17,7 +17,7 @@ pub mod manifest;
 pub mod merge;
 pub mod native;
 
-pub use backend::{Backend, FamilyMeta, FusedForward, TaskKind, Tensor};
+pub use backend::{forward_scores_rows, Backend, FamilyMeta, FusedForward, TaskKind, Tensor};
 pub use merge::average_states;
 #[cfg(feature = "xla")]
 pub use engine::{Engine, ModelState};

@@ -7,15 +7,15 @@
 //! pure-rust scorer (`score_host`) that is the kernel's oracle and fallback.
 
 use crate::selection::bandit::UpdateRule;
-use crate::selection::method::{all_alphas, Method};
+use crate::selection::method::{all_alphas, Arm, Method};
 use crate::util::stats;
 use crate::util::topk::top_k_indices;
 
 /// Configuration for the AdaSelection policy.
 #[derive(Clone, Debug)]
 pub struct AdaConfig {
-    /// candidate pool (subset of `Method::ALL`), e.g. [BigLoss, SmallLoss, Uniform]
-    pub candidates: Vec<Method>,
+    /// candidate arm pool (any registry methods), e.g. [BigLoss, SmallLoss, Uniform]
+    pub candidates: Vec<Arm>,
     /// β ∈ [-1, 1] of eq. 3: >0 rewards loss volatility, <0 rewards stability
     pub beta: f32,
     /// enable the curriculum reward of eq. 4
@@ -25,16 +25,23 @@ pub struct AdaConfig {
     /// weight-update rule; None = the paper's eq. 3 with `beta`
     /// (the bandit framing of §3.2 — see `selection::bandit`)
     pub rule: Option<UpdateRule>,
+    /// candidate multiplier for an `obftf` arm's hypothetical slice
+    pub obftf_k: usize,
 }
 
 impl Default for AdaConfig {
     fn default() -> Self {
         AdaConfig {
-            candidates: vec![Method::BigLoss, Method::SmallLoss, Method::Uniform],
+            candidates: vec![
+                Arm::Kernel(Method::BigLoss),
+                Arm::Kernel(Method::SmallLoss),
+                Arm::Kernel(Method::Uniform),
+            ],
             beta: 0.5,
             cl_on: true,
             cl_power: -0.5,
             rule: None,
+            obftf_k: 10,
         }
     }
 }
@@ -64,11 +71,18 @@ pub struct AdaSelection {
 
 /// Checkpoint view of the mutable policy state (see
 /// [`AdaSelection::snapshot`] / [`AdaSelection::restore`]).
+///
+/// `ids` is the snapshot-format versioning hook: `Some` carries the stable
+/// string id of each weight's arm so restore can re-map by id; `None` marks
+/// a legacy (pre-registry) positional snapshot, accepted when the arity
+/// matches the restoring policy's pool. Weights are renormalized to
+/// sum = M on read either way.
 #[derive(Clone, Debug)]
 pub struct AdaSnapshot {
     pub w: Vec<f32>,
     pub prev_loss: Option<Vec<f32>>,
     pub t: usize,
+    pub ids: Option<Vec<String>>,
 }
 
 /// Everything produced for one batch.
@@ -123,38 +137,113 @@ impl AdaSelection {
             w: self.w.clone(),
             prev_loss: self.prev_loss.clone(),
             t: self.t,
+            ids: Some(
+                self.cfg
+                    .candidates
+                    .iter()
+                    .map(|a| a.id().to_string())
+                    .collect(),
+            ),
         }
     }
 
-    /// Restore state captured by [`AdaSelection::snapshot`]; the candidate
-    /// pool must match the snapshot's arity.
+    /// Restore state captured by [`AdaSelection::snapshot`]. Snapshots that
+    /// carry arm ids are re-mapped by id (order-independent, every id must
+    /// be in this policy's pool and vice versa); legacy positional
+    /// snapshots (`ids: None`) must match the pool's arity. Weights are
+    /// renormalized to sum = M on read so pre-registry checkpoints written
+    /// before normalization was guaranteed still load cleanly.
     pub fn restore(&mut self, snap: AdaSnapshot) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            snap.w.len() == self.cfg.candidates.len(),
-            "snapshot has {} weights, policy has {} candidates",
-            snap.w.len(),
-            self.cfg.candidates.len()
-        );
-        if let Some(prev) = &snap.prev_loss {
-            anyhow::ensure!(
-                prev.len() == self.cfg.candidates.len(),
-                "snapshot prev_loss arity mismatch"
-            );
-        }
-        self.w = snap.w;
-        self.prev_loss = snap.prev_loss;
+        let m = self.cfg.candidates.len();
+        let (mut w, prev_loss) = match &snap.ids {
+            Some(ids) => {
+                anyhow::ensure!(
+                    ids.len() == snap.w.len(),
+                    "snapshot has {} ids but {} weights",
+                    ids.len(),
+                    snap.w.len()
+                );
+                anyhow::ensure!(
+                    ids.len() == m,
+                    "snapshot has {} arms, policy has {} candidates",
+                    ids.len(),
+                    m
+                );
+                let mut w = vec![0.0f32; m];
+                let mut prev = snap.prev_loss.as_ref().map(|_| vec![0.0f32; m]);
+                for (slot, arm) in self.cfg.candidates.iter().enumerate() {
+                    let src = ids
+                        .iter()
+                        .position(|id| id == arm.id())
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "snapshot is missing arm '{}' (has: {})",
+                                arm.id(),
+                                ids.join(", ")
+                            )
+                        })?;
+                    w[slot] = snap.w[src];
+                    if let (Some(p), Some(sp)) = (prev.as_mut(), snap.prev_loss.as_ref()) {
+                        anyhow::ensure!(
+                            sp.len() == ids.len(),
+                            "snapshot prev_loss arity mismatch"
+                        );
+                        p[slot] = sp[src];
+                    }
+                }
+                (w, prev)
+            }
+            None => {
+                anyhow::ensure!(
+                    snap.w.len() == m,
+                    "snapshot has {} weights, policy has {} candidates",
+                    snap.w.len(),
+                    m
+                );
+                if let Some(prev) = &snap.prev_loss {
+                    anyhow::ensure!(
+                        prev.len() == m,
+                        "snapshot prev_loss arity mismatch"
+                    );
+                }
+                (snap.w, snap.prev_loss)
+            }
+        };
+        crate::selection::bandit::normalize(&mut w);
+        self.w = w;
+        self.prev_loss = prev_loss;
         self.t = snap.t;
         Ok(())
     }
 
-    /// The full 7-slot weight vector the score kernel consumes: candidate
-    /// weights at their `Method::index()` positions, zeros elsewhere.
-    pub fn full_weights(&self) -> [f32; 7] {
+    /// The full 7-slot weight vector the fused score kernel consumes:
+    /// candidate weights at their frozen `Method::index()` positions, zeros
+    /// elsewhere. `None` when any arm lives outside the kernel's 7-row α
+    /// matrix (obftf / selective-backprop) — callers must fall back to the
+    /// host scorer for those pools.
+    pub fn kernel_weights(&self) -> Option<[f32; 7]> {
         let mut w = [0.0f32; 7];
-        for (m, &wm) in self.cfg.candidates.iter().zip(self.w.iter()) {
-            w[m.index()] = wm;
+        for (a, &wa) in self.cfg.candidates.iter().zip(self.w.iter()) {
+            w[a.kernel_index()?] = wa;
         }
-        w
+        Some(w)
+    }
+
+    /// Multiply one arm's weight (drift boost on that arm) and renormalize
+    /// the pool back to sum = M.
+    pub fn boost_weight(&mut self, arm: usize, factor: f32) {
+        if arm >= self.w.len() || !factor.is_finite() || factor <= 0.0 {
+            return;
+        }
+        self.w[arm] *= factor;
+        crate::selection::bandit::normalize(&mut self.w);
+    }
+
+    /// The per-arm hypothetical top-k mean losses ℓ_t^m observed by the
+    /// most recent update (None before the first iteration). This is the
+    /// signal the per-method drift detectors watch.
+    pub fn last_method_losses(&self) -> Option<&[f32]> {
+        self.prev_loss.as_deref()
     }
 
     /// The curriculum reward r_t (eq. 4), normalized to mean 1.
@@ -177,14 +266,27 @@ impl AdaSelection {
     /// (eq. 3). This is the oracle for the XLA score artifact; the runtime
     /// path calls [`AdaSelection::select_with_alphas`] with kernel outputs.
     pub fn step_host(&mut self, loss: &[f32], gnorm: &[f32], k: usize) -> ScoreOutput {
-        let full = all_alphas(loss, gnorm);
-        let alphas: Vec<Vec<f32>> = self
-            .cfg
+        let alphas = self.host_alphas(loss, gnorm);
+        self.select_with_alphas(loss, &alphas, k)
+    }
+
+    /// Per-candidate α rows on the CPU: kernel arms slice the shared 7-row
+    /// matrix; registry-only arms (obftf / selective-backprop) compute
+    /// their own α directly.
+    pub fn host_alphas(&self, loss: &[f32], gnorm: &[f32]) -> Vec<Vec<f32>> {
+        let full = if self.cfg.candidates.iter().any(|a| a.kernel_index().is_some()) {
+            Some(all_alphas(loss, gnorm))
+        } else {
+            None
+        };
+        self.cfg
             .candidates
             .iter()
-            .map(|m| full[m.index()].clone())
-            .collect();
-        self.select_with_alphas(loss, &alphas, k)
+            .map(|a| match a.kernel_index() {
+                Some(idx) => full.as_ref().expect("kernel arm present")[idx].clone(),
+                None => a.alpha(loss, gnorm, self.cfg.obftf_k),
+            })
+            .collect()
     }
 
     /// One iteration given per-candidate α rows (from the L1 kernel or from
@@ -269,6 +371,12 @@ pub fn merge_snapshots(snaps: &[AdaSnapshot], weights: &[f64]) -> anyhow::Result
     let m = snaps[0].w.len();
     for s in snaps {
         anyhow::ensure!(s.w.len() == m, "merge_snapshots: candidate arity mismatch");
+        // positional merge is only sound when every party agrees on which
+        // arm sits in which slot; id-carrying snapshots must match exactly
+        // (legacy `None` snapshots are trusted positionally, as before)
+        if let (Some(a), Some(b)) = (&snaps[0].ids, &s.ids) {
+            anyhow::ensure!(a == b, "merge_snapshots: arm id mismatch ({a:?} vs {b:?})");
+        }
     }
     let total: f64 = weights.iter().sum();
     anyhow::ensure!(
@@ -302,6 +410,7 @@ pub fn merge_snapshots(snaps: &[AdaSnapshot], weights: &[f64]) -> anyhow::Result
         w,
         prev_loss,
         t: snaps.iter().map(|s| s.t).max().unwrap_or(0),
+        ids: snaps.iter().find_map(|s| s.ids.clone()),
     })
 }
 
@@ -413,11 +522,12 @@ mod tests {
         // with only BigLoss in the pool and CL off, selection = top-k loss
         let (l, g) = batch(2, 32);
         let mut ada = AdaSelection::new(AdaConfig {
-            candidates: vec![Method::BigLoss],
+            candidates: vec![Arm::Kernel(Method::BigLoss)],
             beta: 0.5,
             cl_on: false,
             cl_power: -0.5,
             rule: None,
+            obftf_k: 10,
         });
         let out = ada.step_host(&l, &g, 5);
         let want = crate::util::topk::top_k_indices(&l, 5);
@@ -428,11 +538,12 @@ mod tests {
     fn cl_shifts_early_selection_toward_small_loss() {
         let (l, g) = batch(3, 64);
         let cfg_on = AdaConfig {
-            candidates: vec![Method::Uniform],
+            candidates: vec![Arm::Kernel(Method::Uniform)],
             beta: 0.0,
             cl_on: true,
             cl_power: 0.9, // strongly CL-weighted early
             rule: None,
+            obftf_k: 10,
         };
         let mut ada = AdaSelection::new(cfg_on);
         let out = ada.step_host(&l, &g, 8);
@@ -450,11 +561,15 @@ mod tests {
         // candidate 0 sees stable losses, candidate 1 volatile ones: with
         // β > 0 the volatile candidate's weight must grow.
         let mut ada = AdaSelection::new(AdaConfig {
-            candidates: vec![Method::SmallLoss, Method::BigLoss],
+            candidates: vec![
+                Arm::Kernel(Method::SmallLoss),
+                Arm::Kernel(Method::BigLoss),
+            ],
             beta: 1.0,
             cl_on: false,
             cl_power: -0.5,
             rule: None,
+            obftf_k: 10,
         });
         let mut rng = Pcg64::new(9);
         for t in 0..30 {
@@ -477,11 +592,12 @@ mod tests {
     fn score_host_matches_step_host_scores() {
         let (l, g) = batch(5, 48);
         let mut ada = AdaSelection::new(AdaConfig {
-            candidates: Method::ALL.to_vec(),
+            candidates: Method::ALL.iter().map(|&m| Arm::Kernel(m)).collect(),
             beta: 0.5,
             cl_on: true,
             cl_power: -0.5,
             rule: None,
+            obftf_k: 10,
         });
         let out = ada.step_host(&l, &g, 10);
         let w = [1.0f32; 7]; // first iteration: weights all 1
@@ -512,10 +628,120 @@ mod tests {
         }
         // arity mismatch rejected
         let mut c = AdaSelection::new(AdaConfig {
-            candidates: vec![Method::BigLoss],
+            candidates: vec![Arm::Kernel(Method::BigLoss)],
             ..AdaConfig::default()
         });
         assert!(c.restore(a.snapshot()).is_err());
+    }
+
+    #[test]
+    fn restore_maps_arms_by_id_and_normalizes() {
+        // a snapshot written with the arms in a different order restores to
+        // the right slots, and denormalized weights are renormalized
+        let mut ada = AdaSelection::new(AdaConfig::default()); // big+small+uniform
+        let snap = AdaSnapshot {
+            w: vec![0.2, 0.4, 0.6], // sums to 1.2, not 3.0
+            prev_loss: Some(vec![10.0, 20.0, 30.0]),
+            t: 7,
+            ids: Some(vec![
+                "uniform".to_string(),
+                "small_loss".to_string(),
+                "big_loss".to_string(),
+            ]),
+        };
+        ada.restore(snap).unwrap();
+        assert_eq!(ada.iteration(), 7);
+        let w = ada.weights();
+        let sum: f32 = w.iter().sum();
+        assert!((sum - 3.0).abs() < 1e-4, "{w:?}");
+        // big_loss carried 0.6, small_loss 0.4, uniform 0.2 — order preserved
+        assert!(w[0] > w[1] && w[1] > w[2], "{w:?}");
+        assert_eq!(
+            ada.last_method_losses(),
+            Some(&[30.0f32, 20.0, 10.0][..])
+        );
+
+        // unknown arm id rejected
+        let bad = AdaSnapshot {
+            w: vec![1.0, 1.0, 1.0],
+            prev_loss: None,
+            t: 1,
+            ids: Some(vec![
+                "big_loss".to_string(),
+                "small_loss".to_string(),
+                "obftf".to_string(),
+            ]),
+        };
+        assert!(ada.restore(bad).is_err());
+
+        // legacy positional snapshot (no ids) still loads
+        let legacy = AdaSnapshot {
+            w: vec![1.0, 1.0, 1.0],
+            prev_loss: None,
+            t: 3,
+            ids: None,
+        };
+        ada.restore(legacy).unwrap();
+        assert_eq!(ada.iteration(), 3);
+    }
+
+    #[test]
+    fn kernel_weights_gated_on_pool_membership() {
+        let ada = AdaSelection::new(AdaConfig::default());
+        let w = ada.kernel_weights().expect("all-kernel pool");
+        assert_eq!(w[Method::BigLoss.index()], 1.0);
+        assert_eq!(w[Method::Coreset2.index()], 0.0);
+
+        let mixed = AdaSelection::new(AdaConfig {
+            candidates: vec![Arm::Kernel(Method::BigLoss), Arm::Obftf],
+            ..AdaConfig::default()
+        });
+        assert!(mixed.kernel_weights().is_none());
+    }
+
+    #[test]
+    fn boost_weight_shifts_and_renormalizes() {
+        let mut ada = AdaSelection::new(AdaConfig::default());
+        ada.boost_weight(1, 2.0);
+        let w = ada.weights().to_vec();
+        let sum: f32 = w.iter().sum();
+        assert!((sum - 3.0).abs() < 1e-4, "{w:?}");
+        assert!(w[1] > w[0] && w[1] > w[2], "{w:?}");
+        // degenerate inputs are ignored
+        ada.boost_weight(99, 2.0);
+        ada.boost_weight(0, f32::NAN);
+        ada.boost_weight(0, 0.0);
+        assert_eq!(ada.weights(), &w[..]);
+    }
+
+    #[test]
+    fn registry_arms_join_the_pool() {
+        // obftf + selective-backprop arms step without kernel support and
+        // keep weights normalized
+        let mut ada = AdaSelection::new(AdaConfig {
+            candidates: vec![
+                Arm::Kernel(Method::BigLoss),
+                Arm::Obftf,
+                Arm::SelectiveBackprop,
+            ],
+            ..AdaConfig::default()
+        });
+        for s in 0..20 {
+            let (l, g) = batch(s, 64);
+            let out = ada.step_host(&l, &g, 13);
+            assert_eq!(out.selected.len(), 13);
+            let sum: f32 = ada.weights().iter().sum();
+            assert!((sum - 3.0).abs() < 1e-3);
+        }
+        let snap = ada.snapshot();
+        assert_eq!(
+            snap.ids.as_deref(),
+            Some(&[
+                "big_loss".to_string(),
+                "obftf".to_string(),
+                "selective-backprop".to_string()
+            ][..])
+        );
     }
 
     #[test]
@@ -552,8 +778,8 @@ mod tests {
 
     #[test]
     fn merge_snapshots_weighted_mean() {
-        let a = AdaSnapshot { w: vec![2.0, 1.0, 0.0], prev_loss: Some(vec![1.0, 2.0, 3.0]), t: 5 };
-        let b = AdaSnapshot { w: vec![0.0, 1.0, 2.0], prev_loss: Some(vec![3.0, 2.0, 1.0]), t: 9 };
+        let a = AdaSnapshot { w: vec![2.0, 1.0, 0.0], prev_loss: Some(vec![1.0, 2.0, 3.0]), t: 5, ids: None };
+        let b = AdaSnapshot { w: vec![0.0, 1.0, 2.0], prev_loss: Some(vec![3.0, 2.0, 1.0]), t: 9, ids: None };
         let m = merge_snapshots(&[a.clone(), b.clone()], &[1.0, 1.0]).unwrap();
         assert_eq!(m.t, 9);
         let w = &m.w;
@@ -565,16 +791,34 @@ mod tests {
         assert!(m.w[0] > m.w[2], "{:?}", m.w);
 
         // any missing prev_loss clears it
-        let c = AdaSnapshot { w: vec![1.0, 1.0, 1.0], prev_loss: None, t: 0 };
+        let c = AdaSnapshot { w: vec![1.0, 1.0, 1.0], prev_loss: None, t: 0, ids: None };
         let m = merge_snapshots(&[a.clone(), c], &[1.0, 1.0]).unwrap();
         assert_eq!(m.prev_loss, None);
 
         // arity / weight errors
-        let bad = AdaSnapshot { w: vec![1.0], prev_loss: None, t: 0 };
+        let bad = AdaSnapshot { w: vec![1.0], prev_loss: None, t: 0, ids: None };
         assert!(merge_snapshots(&[a.clone(), bad], &[1.0, 1.0]).is_err());
         assert!(merge_snapshots(&[a.clone()], &[0.0]).is_err());
         assert!(merge_snapshots(&[], &[]).is_err());
-        assert!(merge_snapshots(&[a], &[1.0, 1.0]).is_err());
+        assert!(merge_snapshots(&[a.clone()], &[1.0, 1.0]).is_err());
+
+        // id-carrying snapshots must agree on slot order
+        let with_ids = |ids: [&str; 3]| AdaSnapshot {
+            w: vec![1.0, 1.0, 1.0],
+            prev_loss: None,
+            t: 1,
+            ids: Some(ids.iter().map(|s| s.to_string()).collect()),
+        };
+        let x = with_ids(["big_loss", "obftf", "uniform"]);
+        let y = with_ids(["big_loss", "obftf", "uniform"]);
+        let merged = merge_snapshots(&[x.clone(), y], &[1.0, 1.0]).unwrap();
+        assert_eq!(merged.ids, x.ids);
+        let z = with_ids(["obftf", "big_loss", "uniform"]);
+        assert!(merge_snapshots(&[x.clone(), z], &[1.0, 1.0]).is_err());
+        // legacy (None) merges positionally with id-carrying peers; the
+        // merged snapshot keeps the first ids seen
+        let merged = merge_snapshots(&[a, x.clone()], &[1.0, 1.0]).unwrap();
+        assert_eq!(merged.ids, x.ids);
     }
 
     #[test]

@@ -72,6 +72,175 @@ pub fn dev_stat(loss: &[f32]) -> Vec<f32> {
     loss.iter().map(|&l| (l - m).abs()).collect()
 }
 
+/// Scoring cost class of a selection method (what the trainer must pay
+/// before the method can rank rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoringCost {
+    /// no selection forward pass at all (the no-sampling benchmark)
+    None,
+    /// one forward pass over the whole arrival batch
+    BatchForward,
+    /// forward over a candidate subset only (k·⌈γB⌉ rows)
+    CandidateForward,
+}
+
+impl ScoringCost {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScoringCost::None => "none",
+            ScoringCost::BatchForward => "batch-forward",
+            ScoringCost::CandidateForward => "candidate-forward",
+        }
+    }
+}
+
+/// One entry of the method registry: a stable string id plus the metadata
+/// the CLI / bandit / docs need. The seven legacy methods keep their frozen
+/// kernel alpha-matrix row (`kernel_index`); registry-only methods carry
+/// `None` and are computed host-side.
+#[derive(Clone, Copy, Debug)]
+pub struct MethodSpec {
+    pub id: &'static str,
+    pub cost: ScoringCost,
+    /// row in the L1 kernel's alpha matrix, when the method has one
+    pub kernel_index: Option<usize>,
+}
+
+/// The method registry: the 7 kernel methods at their frozen indices 0–6,
+/// followed by the forward-cheap registry-only methods. Adding a method
+/// here (plus an `Arm` variant) is the whole extension surface — the
+/// kernel/manifest indices of existing methods never move.
+pub const REGISTRY: [MethodSpec; 9] = [
+    MethodSpec { id: "uniform", cost: ScoringCost::BatchForward, kernel_index: Some(0) },
+    MethodSpec { id: "big_loss", cost: ScoringCost::BatchForward, kernel_index: Some(1) },
+    MethodSpec { id: "small_loss", cost: ScoringCost::BatchForward, kernel_index: Some(2) },
+    MethodSpec { id: "grad_norm", cost: ScoringCost::BatchForward, kernel_index: Some(3) },
+    MethodSpec { id: "adaboost", cost: ScoringCost::BatchForward, kernel_index: Some(4) },
+    MethodSpec { id: "coreset1", cost: ScoringCost::BatchForward, kernel_index: Some(5) },
+    MethodSpec { id: "coreset2", cost: ScoringCost::BatchForward, kernel_index: Some(6) },
+    MethodSpec { id: "obftf", cost: ScoringCost::CandidateForward, kernel_index: None },
+    MethodSpec {
+        id: "selective-backprop",
+        cost: ScoringCost::BatchForward,
+        kernel_index: None,
+    },
+];
+
+/// Every id a selector spec / adaselection pool may name.
+pub fn valid_method_ids() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.id).collect()
+}
+
+/// Look up a registry entry by its stable id.
+pub fn lookup(id: &str) -> anyhow::Result<&'static MethodSpec> {
+    REGISTRY.iter().find(|s| s.id == id).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown method '{id}' (valid: {})",
+            valid_method_ids().join(", ")
+        )
+    })
+}
+
+/// A bandit arm of the AdaSelection pool: either one of the seven kernel
+/// methods (α computed by the L1 scorer) or a registry-only forward-cheap
+/// method whose α row is computed host-side.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arm {
+    Kernel(Method),
+    /// One-Backward-From-Ten-Forward (Dong et al., 2021) as an in-batch
+    /// arm: uniform mass over the top ⌈B/k⌉ rows by loss.
+    Obftf,
+    /// Selective-Backprop (Jiang et al., 2019) as an in-batch arm: mass ∝
+    /// the in-batch loss-CDF raised to a power (rank-flattened big-loss).
+    SelectiveBackprop,
+}
+
+impl From<Method> for Arm {
+    fn from(m: Method) -> Arm {
+        Arm::Kernel(m)
+    }
+}
+
+/// CDF power of the selective-backprop α row (Jiang et al. use the squared
+/// percentile as the keep probability).
+const SB_CDF_POWER: f32 = 2.0;
+
+impl Arm {
+    pub fn id(&self) -> &'static str {
+        match self {
+            Arm::Kernel(m) => m.name(),
+            Arm::Obftf => "obftf",
+            Arm::SelectiveBackprop => "selective-backprop",
+        }
+    }
+
+    pub fn from_id(s: &str) -> anyhow::Result<Arm> {
+        match s {
+            "obftf" => Ok(Arm::Obftf),
+            "selective-backprop" => Ok(Arm::SelectiveBackprop),
+            other => {
+                lookup(other)?; // canonical unknown-id error with the valid list
+                Ok(Arm::Kernel(Method::from_name(other)?))
+            }
+        }
+    }
+
+    /// Kernel alpha-matrix row, when this arm is one of the frozen seven.
+    pub fn kernel_index(&self) -> Option<usize> {
+        match self {
+            Arm::Kernel(m) => Some(m.index()),
+            _ => None,
+        }
+    }
+
+    /// α_i for this arm. `obftf_k` is the candidate multiplier the obftf
+    /// arm slices the batch with (`--obftf-k`).
+    pub fn alpha(&self, loss: &[f32], gnorm: &[f32], obftf_k: usize) -> Vec<f32> {
+        match self {
+            Arm::Kernel(m) => alpha(*m, loss, gnorm),
+            Arm::Obftf => obftf_alpha(loss, obftf_k),
+            Arm::SelectiveBackprop => sb_alpha(loss),
+        }
+    }
+}
+
+/// α of the obftf arm: uniform over the top ⌈B/k⌉ rows by loss ("one
+/// backward from k forward" — every candidate-slice row equally likely).
+fn obftf_alpha(loss: &[f32], k: usize) -> Vec<f32> {
+    let b = loss.len();
+    let k = k.max(1);
+    let slice = ((b + k - 1) / k).clamp(1, b);
+    let top = crate::util::topk::top_k_indices(loss, slice);
+    let mut a = vec![0.0f32; b];
+    let p = 1.0 / top.len().max(1) as f32;
+    for i in top {
+        a[i] = p;
+    }
+    a
+}
+
+/// α of the selective-backprop arm: in-batch loss-CDF percentile raised to
+/// `SB_CDF_POWER`, normalized to a simplex. Monotone in loss like big-loss
+/// but rank-flattened, so outlier losses do not dominate the fused score.
+fn sb_alpha(loss: &[f32]) -> Vec<f32> {
+    let b = loss.len();
+    if b == 1 {
+        return vec![1.0];
+    }
+    let order = crate::util::topk::argsort_desc(loss);
+    let mut a = vec![0.0f32; b];
+    for (rank_desc, &i) in order.iter().enumerate() {
+        // percentile ∈ (0, 1]: highest loss → 1, lowest → 1/B
+        let pct = (b - rank_desc) as f32 / b as f32;
+        a[i] = pct.powf(SB_CDF_POWER);
+    }
+    let sum: f32 = a.iter().sum();
+    for v in a.iter_mut() {
+        *v /= sum.max(1e-12);
+    }
+    a
+}
+
 /// α_i^m: softmax over the standardized ordering statistic — the exact
 /// pure-rust mirror of the L1 score kernel (see kernels/score.py).
 pub fn alpha(method: Method, loss: &[f32], gnorm: &[f32]) -> Vec<f32> {
@@ -205,6 +374,61 @@ mod tests {
             .unwrap()
             .0;
         assert_eq!(max_a, closest);
+    }
+
+    #[test]
+    fn registry_keeps_legacy_kernel_indices_frozen() {
+        // the 7 kernel methods stay at their frozen rows; registry-only
+        // methods carry no kernel row
+        for m in Method::ALL {
+            let spec = lookup(m.name()).unwrap();
+            assert_eq!(spec.kernel_index, Some(m.index()), "{}", m.name());
+        }
+        assert_eq!(lookup("obftf").unwrap().kernel_index, None);
+        assert_eq!(lookup("selective-backprop").unwrap().kernel_index, None);
+        assert_eq!(lookup("obftf").unwrap().cost, ScoringCost::CandidateForward);
+        let err = lookup("bogus").unwrap_err().to_string();
+        assert!(err.contains("obftf") && err.contains("big_loss"), "{err}");
+        assert_eq!(valid_method_ids().len(), REGISTRY.len());
+    }
+
+    #[test]
+    fn arm_ids_round_trip() {
+        for spec in REGISTRY {
+            let arm = Arm::from_id(spec.id).unwrap();
+            assert_eq!(arm.id(), spec.id);
+            assert_eq!(arm.kernel_index(), spec.kernel_index);
+        }
+        assert!(Arm::from_id("nope").is_err());
+    }
+
+    #[test]
+    fn obftf_alpha_is_uniform_over_top_slice() {
+        let loss = [0.1f32, 5.0, 0.2, 4.0, 0.3, 3.0, 0.4, 2.0];
+        let a = Arm::Obftf.alpha(&loss, &loss, 4); // slice = ⌈8/4⌉ = 2
+        let nonzero: Vec<usize> =
+            (0..a.len()).filter(|&i| a[i] > 0.0).collect();
+        assert_eq!(nonzero, vec![1, 3], "{a:?}"); // two biggest losses
+        assert!((a[1] - 0.5).abs() < 1e-6 && (a[3] - 0.5).abs() < 1e-6);
+        let sum: f32 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sb_alpha_is_monotone_rank_flattened_simplex() {
+        let loss = [0.5f32, 3.0, 1.0, 100.0, 0.1];
+        let a = Arm::SelectiveBackprop.alpha(&loss, &loss, 10);
+        let sum: f32 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        // monotone in loss
+        let mut idx: Vec<usize> = (0..loss.len()).collect();
+        idx.sort_by(|&x, &y| loss[x].partial_cmp(&loss[y]).unwrap());
+        for w in idx.windows(2) {
+            assert!(a[w[0]] <= a[w[1]] + 1e-7);
+        }
+        // rank-based: the 100.0 outlier gets the top-rank mass, not
+        // outlier-proportional mass (contrast with raw-loss weighting)
+        assert!(a[3] < 0.5, "{a:?}");
     }
 
     #[test]

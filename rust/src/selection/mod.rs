@@ -11,8 +11,10 @@ pub mod staleness;
 
 pub use adaselection::{merge_snapshots, AdaConfig, AdaSelection, AdaSnapshot, ScoreOutput};
 pub use bandit::UpdateRule;
-pub use method::Method;
+pub use method::{lookup, valid_method_ids, Arm, Method, MethodSpec, ScoringCost};
 pub use staleness::LossCache;
 pub use policy::{
-    build_selector, AdaSelectionPolicy, BenchmarkAll, SelectionContext, Selector, SingleMethod,
+    build_policy, build_policy_full, build_selector, AdaSelectionPolicy, BenchmarkAll,
+    LossHistory, ObftfPolicy, Policy, ScoringNeeds, SelectionContext, SelectionPlan,
+    SelectiveBackprop, Selector, SingleMethod,
 };

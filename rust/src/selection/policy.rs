@@ -1,21 +1,58 @@
 //! The `Selector` abstraction the trainer drives: one implementation per
-//! baseline (§3.1 semantics) plus AdaSelection and the no-sampling
-//! benchmark. Policies receive per-sample losses and gnorm proxies from the
-//! forward artifact and return the rows to train on.
+//! baseline (§3.1 semantics) plus the forward-cheap methods (OBFTF,
+//! Selective-Backprop), AdaSelection, and the no-sampling benchmark.
+//!
+//! Selection is two-phase. Phase 1 (`Selector::plan`) declares which rows
+//! of the arriving batch need forward-only scoring — `ScoringNeeds` names
+//! the cost class, the plan pins the concrete candidate rows. Phase 2
+//! (`Selector::select`) runs over the scored candidates and returns the
+//! rows to backprop on. Most policies score the whole batch; the benchmark
+//! scores nothing; OBFTF scores a k·(target) candidate superset only.
 
 use crate::selection::adaselection::{AdaConfig, AdaSelection};
-use crate::selection::method::{adaboost_stat, dev_stat, Method};
+use crate::selection::method::{adaboost_stat, dev_stat, valid_method_ids, Arm, Method};
 use crate::util::rng::Pcg64;
-use crate::util::topk::{bottom_k_indices, top_k_indices};
+use crate::util::topk::{argsort_desc, bottom_k_indices, top_k_indices};
 
-/// Inputs available to a policy at iteration t.
+/// What the selection forward pass must produce for a policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoringNeeds {
+    /// no selection forward pass at all (the no-sampling benchmark)
+    None,
+    /// per-sample loss/gnorm over every real row of the arriving batch
+    BatchForward,
+    /// per-sample loss/gnorm over a candidate subset of ≈ k·(target rows)
+    CandidateForward { k: usize },
+}
+
+/// Phase-1 output: the rows needing forward-only scoring this iteration.
+#[derive(Clone, Debug, Default)]
+pub struct SelectionPlan {
+    /// candidate rows (batch positions, strictly increasing); `None` means
+    /// every real row — the degenerate full-batch plan
+    pub candidate_rows: Option<Vec<usize>>,
+}
+
+/// Minimal view of the historical per-sample loss distribution a policy
+/// may consult at select time (implemented by `stream::store::InstanceStore`).
+pub trait LossHistory {
+    /// The q-quantile (q ∈ [0, 1]) of live historical losses, deterministic
+    /// given identical history; `None` when the history is empty.
+    fn loss_quantile(&self, q: f32) -> Option<f32>;
+}
+
+/// Inputs available to a policy at iteration t. `loss`/`gnorm` cover the
+/// scored candidate rows (the whole batch unless phase 1 planned a subset),
+/// so `select` returns candidate-local positions.
 pub struct SelectionContext<'a> {
-    /// per-sample losses over the REAL rows of the batch
+    /// per-sample losses over the scored rows
     pub loss: &'a [f32],
     /// per-sample gradient-norm proxies
     pub gnorm: &'a [f32],
     /// subset size k = ceil(γ·B)
     pub k: usize,
+    /// historical loss distribution (selective-backprop threshold source)
+    pub history: Option<&'a dyn LossHistory>,
 }
 
 /// A subsampling policy.
@@ -23,18 +60,25 @@ pub trait Selector: Send {
     /// Stable identifier used in reports (e.g. "big_loss", "adaselection").
     fn name(&self) -> String;
 
-    /// Rows (positions within the batch) to keep, deterministic given state.
+    /// The cost class of this policy's selection forward pass.
+    fn scoring(&self) -> ScoringNeeds {
+        ScoringNeeds::BatchForward
+    }
+
+    /// Phase 1: declare the candidate rows to forward-score for a batch of
+    /// `arrivals` real rows targeting `k` kept rows. Advances sampler
+    /// state for stochastic planners, so call exactly once per iteration.
+    fn plan(&mut self, _arrivals: usize, _k: usize) -> SelectionPlan {
+        SelectionPlan::default()
+    }
+
+    /// Phase 2: rows (positions within the scored candidate set) to keep,
+    /// deterministic given state.
     fn select(&mut self, ctx: &SelectionContext) -> Vec<usize>;
 
     /// AdaSelection's method weights, if any (Fig-8 traces).
     fn weights(&self) -> Option<Vec<f32>> {
         None
-    }
-
-    /// Whether this policy skips the selection forward pass entirely
-    /// (the no-sampling benchmark).
-    fn is_benchmark(&self) -> bool {
-        false
     }
 }
 
@@ -46,12 +90,12 @@ impl Selector for BenchmarkAll {
         "benchmark".into()
     }
 
-    fn select(&mut self, ctx: &SelectionContext) -> Vec<usize> {
-        (0..ctx.loss.len()).collect()
+    fn scoring(&self) -> ScoringNeeds {
+        ScoringNeeds::None
     }
 
-    fn is_benchmark(&self) -> bool {
-        true
+    fn select(&mut self, ctx: &SelectionContext) -> Vec<usize> {
+        (0..ctx.loss.len()).collect()
     }
 }
 
@@ -141,6 +185,165 @@ impl Selector for SingleMethod {
     }
 }
 
+/// One Backward From Ten Forward (Dong et al., 2021): forward-score only a
+/// random candidate superset of `mult`·k rows, then backprop the top-k of
+/// those by loss. When `mult`·k covers the batch the plan degenerates to a
+/// full-batch forward — still one backward on k rows.
+pub struct ObftfPolicy {
+    mult: usize,
+    rng: Pcg64,
+}
+
+impl ObftfPolicy {
+    pub fn new(mult: usize, seed: u64) -> Self {
+        ObftfPolicy {
+            mult: mult.max(1),
+            rng: Pcg64::new(seed ^ 0x0bf7_f0bf),
+        }
+    }
+
+    /// The candidate multiplier k of "k forward, one backward".
+    pub fn mult(&self) -> usize {
+        self.mult
+    }
+
+    /// Raw sampler state (checkpoint support).
+    pub fn rng_words(&self) -> [u64; 4] {
+        self.rng.state_words()
+    }
+
+    /// Restore sampler state captured by [`ObftfPolicy::rng_words`].
+    pub fn set_rng_words(&mut self, w: [u64; 4]) {
+        self.rng = Pcg64::from_state_words(w);
+    }
+}
+
+impl Selector for ObftfPolicy {
+    fn name(&self) -> String {
+        "obftf".into()
+    }
+
+    fn scoring(&self) -> ScoringNeeds {
+        ScoringNeeds::CandidateForward { k: self.mult }
+    }
+
+    fn plan(&mut self, arrivals: usize, k: usize) -> SelectionPlan {
+        let want = self.mult.saturating_mul(k.max(1));
+        if want >= arrivals {
+            return SelectionPlan::default();
+        }
+        let mut rows = self.rng.permutation(arrivals);
+        rows.truncate(want.max(1));
+        rows.sort_unstable();
+        SelectionPlan {
+            candidate_rows: Some(rows),
+        }
+    }
+
+    fn select(&mut self, ctx: &SelectionContext) -> Vec<usize> {
+        top_k_indices(ctx.loss, ctx.k.min(ctx.loss.len()))
+    }
+}
+
+/// Historical-loss quantile used as the Selective-Backprop threshold.
+const SB_QUANTILE: f32 = 0.7;
+/// Select calls between threshold refreshes from the history store.
+const SB_REFRESH: u64 = 16;
+
+/// Selective-Backprop (Jiang et al., 2019), deterministic variant: keep the
+/// highest-loss rows at or above a threshold τ — the `SB_QUANTILE` of the
+/// historical loss distribution (`InstanceStore`), refreshed every
+/// `SB_REFRESH` iterations, falling back to the in-batch quantile while no
+/// history exists. Rows short of k are topped up by a seeded uniform draw
+/// from the below-threshold remainder so exactly k rows always train.
+pub struct SelectiveBackprop {
+    rng: Pcg64,
+    threshold: Option<f32>,
+    calls: u64,
+}
+
+impl SelectiveBackprop {
+    pub fn new(seed: u64) -> Self {
+        SelectiveBackprop {
+            rng: Pcg64::new(seed ^ 0x5e1b_ac99),
+            threshold: None,
+            calls: 0,
+        }
+    }
+
+    /// Raw sampler state (checkpoint support).
+    pub fn rng_words(&self) -> [u64; 4] {
+        self.rng.state_words()
+    }
+
+    /// Restore sampler state captured by [`SelectiveBackprop::rng_words`].
+    pub fn set_rng_words(&mut self, w: [u64; 4]) {
+        self.rng = Pcg64::from_state_words(w);
+    }
+
+    /// Cached threshold + refresh counter (checkpoint support).
+    pub fn threshold_state(&self) -> (Option<f32>, u64) {
+        (self.threshold, self.calls)
+    }
+
+    /// Restore state captured by [`SelectiveBackprop::threshold_state`].
+    pub fn set_threshold_state(&mut self, threshold: Option<f32>, calls: u64) {
+        self.threshold = threshold;
+        self.calls = calls;
+    }
+
+    fn in_batch_quantile(loss: &[f32]) -> f32 {
+        let mut s = loss.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        s[((s.len() - 1) as f32 * SB_QUANTILE) as usize]
+    }
+}
+
+impl Selector for SelectiveBackprop {
+    fn name(&self) -> String {
+        "selective-backprop".into()
+    }
+
+    fn select(&mut self, ctx: &SelectionContext) -> Vec<usize> {
+        let b = ctx.loss.len();
+        let k = ctx.k.min(b);
+        if k == 0 || b == 0 {
+            return Vec::new();
+        }
+        if self.threshold.is_none() || self.calls % SB_REFRESH == 0 {
+            self.threshold = ctx
+                .history
+                .and_then(|h| h.loss_quantile(SB_QUANTILE))
+                .or_else(|| Some(Self::in_batch_quantile(ctx.loss)));
+        }
+        self.calls += 1;
+        let tau = self.threshold.expect("set above");
+        let order = argsort_desc(ctx.loss);
+        let mut out: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| ctx.loss[i] >= tau)
+            .take(k)
+            .collect();
+        if out.len() < k {
+            // below-threshold fill keeps the contract of exactly k rows
+            let below: Vec<usize> = order
+                .iter()
+                .copied()
+                .filter(|&i| ctx.loss[i] < tau)
+                .collect();
+            let perm = self.rng.permutation(below.len());
+            for &p in perm.iter() {
+                if out.len() == k {
+                    break;
+                }
+                out.push(below[p]);
+            }
+        }
+        out
+    }
+}
+
 /// The AdaSelection policy as a `Selector`.
 pub struct AdaSelectionPolicy {
     state: AdaSelection,
@@ -153,7 +356,7 @@ impl AdaSelectionPolicy {
             "adaselection[{}]",
             cfg.candidates
                 .iter()
-                .map(|m| m.name())
+                .map(|a| a.id())
                 .collect::<Vec<_>>()
                 .join("+")
         );
@@ -184,7 +387,8 @@ impl AdaSelectionPolicy {
     /// Backend-scorer path (`kernel_scorer`): the L1 scorer — the Pallas
     /// kernel on the XLA backend, `score_full` on the native backend —
     /// produced the full 7-row α matrix plus the fused scores; slice out
-    /// this policy's candidates and update.
+    /// this policy's candidates and update. Only reachable for all-kernel
+    /// pools (`AdaSelection::kernel_weights` returned `Some`).
     pub fn select_kernel(
         &mut self,
         loss: &[f32],
@@ -197,7 +401,12 @@ impl AdaSelectionPolicy {
             .config()
             .candidates
             .iter()
-            .map(|m| full_alphas[m.index()].clone())
+            .map(|a| {
+                let idx = a
+                    .kernel_index()
+                    .expect("select_kernel called with a non-kernel arm in the pool");
+                full_alphas[idx].clone()
+            })
             .collect();
         self.state.select_scored(loss, &cand, scores, k).selected
     }
@@ -222,34 +431,49 @@ impl Selector for AdaSelectionPolicy {
 pub enum Policy {
     Benchmark(BenchmarkAll),
     Single(SingleMethod),
+    Obftf(ObftfPolicy),
+    SelectiveBackprop(SelectiveBackprop),
     Ada(AdaSelectionPolicy),
 }
 
 impl Policy {
     pub fn name(&self) -> String {
-        match self {
-            Policy::Benchmark(p) => p.name(),
-            Policy::Single(p) => p.name(),
-            Policy::Ada(p) => p.name(),
-        }
+        self.as_selector().name()
     }
 
-    pub fn is_benchmark(&self) -> bool {
-        matches!(self, Policy::Benchmark(_))
+    pub fn scoring(&self) -> ScoringNeeds {
+        self.as_selector().scoring()
+    }
+
+    pub fn plan(&mut self, arrivals: usize, k: usize) -> SelectionPlan {
+        self.as_selector_mut().plan(arrivals, k)
     }
 
     pub fn select(&mut self, ctx: &SelectionContext) -> Vec<usize> {
-        match self {
-            Policy::Benchmark(p) => p.select(ctx),
-            Policy::Single(p) => p.select(ctx),
-            Policy::Ada(p) => p.select(ctx),
-        }
+        self.as_selector_mut().select(ctx)
     }
 
     pub fn weights(&self) -> Option<Vec<f32>> {
+        self.as_selector().weights()
+    }
+
+    fn as_selector(&self) -> &dyn Selector {
         match self {
-            Policy::Ada(p) => p.weights(),
-            _ => None,
+            Policy::Benchmark(p) => p,
+            Policy::Single(p) => p,
+            Policy::Obftf(p) => p,
+            Policy::SelectiveBackprop(p) => p,
+            Policy::Ada(p) => p,
+        }
+    }
+
+    fn as_selector_mut(&mut self) -> &mut dyn Selector {
+        match self {
+            Policy::Benchmark(p) => p,
+            Policy::Single(p) => p,
+            Policy::Obftf(p) => p,
+            Policy::SelectiveBackprop(p) => p,
+            Policy::Ada(p) => p,
         }
     }
 
@@ -266,9 +490,129 @@ impl Policy {
             _ => None,
         }
     }
+
+    /// Build from a [`crate::config::StreamConfig`] — THE policy factory.
+    /// Applies the spec grammar, the `obftf-k` knob, and the bandit rule
+    /// override in one place (CLI, stream trainer, cluster nodes, and the
+    /// batch trainer all route through here or a sibling below).
+    pub fn from_config(cfg: &crate::config::StreamConfig) -> anyhow::Result<Policy> {
+        Self::from_config_with_seed(cfg, cfg.seed)
+    }
+
+    /// [`Policy::from_config`] with an explicit seed (cluster nodes offset
+    /// the config seed per node so stochastic policies decorrelate).
+    pub fn from_config_with_seed(
+        cfg: &crate::config::StreamConfig,
+        seed: u64,
+    ) -> anyhow::Result<Policy> {
+        Self::from_parts(
+            &cfg.selector,
+            seed,
+            cfg.beta,
+            cfg.cl_on,
+            cfg.cl_power,
+            cfg.obftf_k,
+            &cfg.rule,
+        )
+    }
+
+    /// Build from a [`crate::config::RunConfig`] (the batch trainer). Same
+    /// spec grammar and rule override; the obftf candidate multiplier
+    /// stays at its default because the batch trainer scores full batches
+    /// (candidate planning is a stream-path optimization).
+    pub fn from_run_config(cfg: &crate::config::RunConfig) -> anyhow::Result<Policy> {
+        Self::from_parts(
+            &cfg.selector,
+            cfg.seed,
+            cfg.beta,
+            cfg.cl_on,
+            cfg.cl_power,
+            10,
+            &cfg.rule,
+        )
+    }
+
+    /// Shared tail of every factory: spec grammar, then the bandit rule
+    /// override (bare "eq3" keeps AdaConfig's β — the fig-7 knob; an
+    /// explicit spec like "eq3:0.7" or "exp3" overrides it).
+    #[allow(clippy::too_many_arguments)]
+    fn from_parts(
+        spec: &str,
+        seed: u64,
+        beta: f32,
+        cl_on: bool,
+        cl_power: f32,
+        obftf_k: usize,
+        rule: &str,
+    ) -> anyhow::Result<Policy> {
+        let mut policy = build_policy_full(spec, seed, beta, cl_on, cl_power, obftf_k)?;
+        if rule != "eq3" {
+            let rule = crate::selection::bandit::UpdateRule::parse(rule)?;
+            if let Some(ada) = policy.as_ada() {
+                ada.state_mut().set_rule(rule);
+            }
+        }
+        Ok(policy)
+    }
 }
 
-/// Build a [`Policy`] from a spec string (same grammar as `build_selector`).
+/// Build a [`Policy`] from a spec string with every knob explicit.
+///
+/// Accepted specs: `benchmark`, any registry method id (`big_loss`, …,
+/// `obftf`, `selective-backprop`), `adaselection` (default pool), or
+/// `adaselection:big_loss+obftf+…` to pick the pool. Unknown names error
+/// with the full valid-id list.
+pub fn build_policy_full(
+    spec: &str,
+    seed: u64,
+    beta: f32,
+    cl_on: bool,
+    cl_power: f32,
+    obftf_k: usize,
+) -> anyhow::Result<Policy> {
+    if spec == "benchmark" {
+        return Ok(Policy::Benchmark(BenchmarkAll));
+    }
+    if spec == "adaselection" {
+        return Ok(Policy::Ada(AdaSelectionPolicy::new(AdaConfig {
+            beta,
+            cl_on,
+            cl_power,
+            obftf_k,
+            ..AdaConfig::default()
+        })));
+    }
+    if let Some(pool) = spec.strip_prefix("adaselection:") {
+        let candidates = pool
+            .split('+')
+            .map(Arm::from_id)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(!candidates.is_empty(), "empty adaselection pool");
+        return Ok(Policy::Ada(AdaSelectionPolicy::new(AdaConfig {
+            candidates,
+            beta,
+            cl_on,
+            cl_power,
+            rule: None,
+            obftf_k,
+        })));
+    }
+    match Arm::from_id(spec) {
+        Ok(Arm::Kernel(m)) => Ok(Policy::Single(SingleMethod::new(m, seed))),
+        Ok(Arm::Obftf) => Ok(Policy::Obftf(ObftfPolicy::new(obftf_k, seed))),
+        Ok(Arm::SelectiveBackprop) => {
+            Ok(Policy::SelectiveBackprop(SelectiveBackprop::new(seed)))
+        }
+        Err(_) => anyhow::bail!(
+            "unknown selector spec '{spec}' (valid: benchmark, adaselection, \
+             adaselection:<id>+<id>, {})",
+            valid_method_ids().join(", ")
+        ),
+    }
+}
+
+/// Build a [`Policy`] from a spec string (legacy 5-knob surface; the
+/// `obftf-k` multiplier takes its default of 10).
 pub fn build_policy(
     spec: &str,
     seed: u64,
@@ -276,41 +620,11 @@ pub fn build_policy(
     cl_on: bool,
     cl_power: f32,
 ) -> anyhow::Result<Policy> {
-    if spec == "benchmark" {
-        return Ok(Policy::Benchmark(BenchmarkAll));
-    }
-    if let Ok(m) = Method::from_name(spec) {
-        return Ok(Policy::Single(SingleMethod::new(m, seed)));
-    }
-    if spec == "adaselection" {
-        return Ok(Policy::Ada(AdaSelectionPolicy::new(AdaConfig {
-            beta,
-            cl_on,
-            cl_power,
-            ..AdaConfig::default()
-        })));
-    }
-    if let Some(pool) = spec.strip_prefix("adaselection:") {
-        let candidates = pool
-            .split('+')
-            .map(Method::from_name)
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        anyhow::ensure!(!candidates.is_empty(), "empty adaselection pool");
-        return Ok(Policy::Ada(AdaSelectionPolicy::new(AdaConfig {
-            candidates,
-            beta,
-            cl_on,
-            cl_power,
-            rule: None,
-        })));
-    }
-    anyhow::bail!("unknown selector spec '{spec}'")
+    build_policy_full(spec, seed, beta, cl_on, cl_power, 10)
 }
 
-/// Build a selector from its report name (config / CLI surface).
-///
-/// Accepted: `benchmark`, any `Method` name, `adaselection` (default pool),
-/// or `adaselection:big_loss+small_loss+uniform` to pick the pool.
+/// Build a boxed selector from its report name (config / CLI surface).
+/// Same grammar as [`build_policy_full`].
 pub fn build_selector(
     spec: &str,
     seed: u64,
@@ -318,35 +632,13 @@ pub fn build_selector(
     cl_on: bool,
     cl_power: f32,
 ) -> anyhow::Result<Box<dyn Selector>> {
-    if spec == "benchmark" {
-        return Ok(Box::new(BenchmarkAll));
-    }
-    if let Ok(m) = Method::from_name(spec) {
-        return Ok(Box::new(SingleMethod::new(m, seed)));
-    }
-    if spec == "adaselection" {
-        return Ok(Box::new(AdaSelectionPolicy::new(AdaConfig {
-            beta,
-            cl_on,
-            cl_power,
-            ..AdaConfig::default()
-        })));
-    }
-    if let Some(pool) = spec.strip_prefix("adaselection:") {
-        let candidates = pool
-            .split('+')
-            .map(Method::from_name)
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        anyhow::ensure!(!candidates.is_empty(), "empty adaselection pool");
-        return Ok(Box::new(AdaSelectionPolicy::new(AdaConfig {
-            candidates,
-            beta,
-            cl_on,
-            cl_power,
-            rule: None,
-        })));
-    }
-    anyhow::bail!("unknown selector spec '{spec}'")
+    Ok(match build_policy(spec, seed, beta, cl_on, cl_power)? {
+        Policy::Benchmark(p) => Box::new(p),
+        Policy::Single(p) => Box::new(p),
+        Policy::Obftf(p) => Box::new(p),
+        Policy::SelectiveBackprop(p) => Box::new(p),
+        Policy::Ada(p) => Box::new(p),
+    })
 }
 
 #[cfg(test)]
@@ -354,7 +646,12 @@ mod tests {
     use super::*;
 
     fn ctx<'a>(loss: &'a [f32], gnorm: &'a [f32], k: usize) -> SelectionContext<'a> {
-        SelectionContext { loss, gnorm, k }
+        SelectionContext {
+            loss,
+            gnorm,
+            k,
+            history: None,
+        }
     }
 
     #[test]
@@ -362,7 +659,7 @@ mod tests {
         let l = [1.0f32, 2.0, 3.0];
         let mut b = BenchmarkAll;
         assert_eq!(b.select(&ctx(&l, &l, 1)), vec![0, 1, 2]);
-        assert!(b.is_benchmark());
+        assert_eq!(b.scoring(), ScoringNeeds::None);
     }
 
     #[test]
@@ -442,16 +739,126 @@ mod tests {
     }
 
     #[test]
+    fn obftf_plans_candidate_superset() {
+        let mut p = ObftfPolicy::new(3, 42);
+        assert_eq!(p.scoring(), ScoringNeeds::CandidateForward { k: 3 });
+        // 3·k = 12 < 64 arrivals: a strict, sorted, unique subset
+        let plan = p.plan(64, 4);
+        let rows = plan.candidate_rows.expect("subset plan");
+        assert_eq!(rows.len(), 12);
+        assert!(rows.windows(2).all(|w| w[0] < w[1]), "{rows:?}");
+        assert!(rows.iter().all(|&r| r < 64));
+        // 3·k ≥ arrivals: degenerates to the full batch
+        assert!(p.plan(10, 4).candidate_rows.is_none());
+        // deterministic under the same seed + state
+        let mut q = ObftfPolicy::new(3, 42);
+        assert_eq!(q.plan(64, 4).candidate_rows.unwrap(), rows);
+        // rng state survives the words round-trip
+        let words = p.rng_words();
+        let next = p.plan(64, 4).candidate_rows.unwrap();
+        let mut r = ObftfPolicy::new(3, 1);
+        r.set_rng_words(words);
+        assert_eq!(r.plan(64, 4).candidate_rows.unwrap(), next);
+    }
+
+    #[test]
+    fn obftf_selects_top_loss_candidates() {
+        let loss = [0.5f32, 3.0, 1.0, 0.1];
+        let mut p = ObftfPolicy::new(10, 0);
+        assert_eq!(p.select(&ctx(&loss, &loss, 2)), vec![1, 2]);
+    }
+
+    #[test]
+    fn selective_backprop_thresholds_and_fills_to_k() {
+        struct FixedHist(f32);
+        impl LossHistory for FixedHist {
+            fn loss_quantile(&self, _q: f32) -> Option<f32> {
+                Some(self.0)
+            }
+        }
+        let loss = [0.1f32, 5.0, 0.2, 4.0, 0.3, 0.4];
+        let hist = FixedHist(1.0);
+        let mut sb = SelectiveBackprop::new(3);
+        // two rows clear τ=1.0; k=2 keeps exactly those, biggest first
+        let sel = sb.select(&SelectionContext {
+            loss: &loss,
+            gnorm: &loss,
+            k: 2,
+            history: Some(&hist),
+        });
+        assert_eq!(sel, vec![1, 3]);
+        // k=4 needs a fill: still exactly 4 unique in-bounds rows, the two
+        // above-threshold rows leading
+        let sel = sb.select(&SelectionContext {
+            loss: &loss,
+            gnorm: &loss,
+            k: 4,
+            history: Some(&hist),
+        });
+        assert_eq!(sel.len(), 4);
+        assert_eq!(&sel[..2], &[1, 3]);
+        let mut s = sel.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 4, "{sel:?}");
+        // no history: in-batch quantile fallback still returns k rows
+        let mut sb2 = SelectiveBackprop::new(3);
+        let sel = sb2.select(&ctx(&loss, &loss, 3));
+        assert_eq!(sel.len(), 3);
+        // determinism under the same seed + state
+        let mut sb3 = SelectiveBackprop::new(3);
+        assert_eq!(sb3.select(&ctx(&loss, &loss, 3)), sel);
+    }
+
+    #[test]
+    fn selective_backprop_state_round_trips() {
+        let loss: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin().abs()).collect();
+        let mut a = SelectiveBackprop::new(9);
+        for _ in 0..5 {
+            a.select(&ctx(&loss, &loss, 30)); // large k forces rng fills
+        }
+        let words = a.rng_words();
+        let (tau, calls) = a.threshold_state();
+        let mut b = SelectiveBackprop::new(0);
+        b.set_rng_words(words);
+        b.set_threshold_state(tau, calls);
+        for _ in 0..5 {
+            assert_eq!(a.select(&ctx(&loss, &loss, 30)), b.select(&ctx(&loss, &loss, 30)));
+        }
+    }
+
+    #[test]
     fn build_selector_specs() {
-        assert!(build_selector("benchmark", 0, 0.5, true, -0.5).unwrap().is_benchmark());
+        assert_eq!(
+            build_selector("benchmark", 0, 0.5, true, -0.5).unwrap().scoring(),
+            ScoringNeeds::None
+        );
         assert_eq!(
             build_selector("big_loss", 0, 0.5, true, -0.5).unwrap().name(),
             "big_loss"
         );
+        assert_eq!(
+            build_selector("obftf", 0, 0.5, true, -0.5).unwrap().name(),
+            "obftf"
+        );
+        assert_eq!(
+            build_selector("selective-backprop", 0, 0.5, true, -0.5)
+                .unwrap()
+                .name(),
+            "selective-backprop"
+        );
         let ada = build_selector("adaselection:big_loss+uniform", 0, 0.5, true, -0.5).unwrap();
         assert_eq!(ada.name(), "adaselection[big_loss+uniform]");
         assert_eq!(ada.weights().unwrap().len(), 2);
-        assert!(build_selector("bogus", 0, 0.5, true, -0.5).is_err());
+        // forward-cheap arms join the bandit pool
+        let ada = build_selector("adaselection:big_loss+obftf+selective-backprop", 0, 0.5, true, -0.5)
+            .unwrap();
+        assert_eq!(ada.name(), "adaselection[big_loss+obftf+selective-backprop]");
+        assert_eq!(ada.weights().unwrap().len(), 3);
+        let err = build_selector("bogus", 0, 0.5, true, -0.5)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("obftf") && err.contains("benchmark"), "{err}");
         assert!(build_selector("adaselection:", 0, 0.5, true, -0.5).is_err());
     }
 }

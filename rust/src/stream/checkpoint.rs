@@ -29,7 +29,13 @@ use crate::util::json::Json;
 
 /// On-disk format version (bump on layout changes).
 /// v2: added the drift-detector state and the replay counter.
-const VERSION: f64 = 2.0;
+/// v3: added the forward-scored sample counter, the obftf /
+/// selective-backprop policy kinds, and bandit arm ids in the ada
+/// snapshot. v2 checkpoints still load (counter defaults to 0, ids to
+/// the legacy positional layout, per-method drift detectors to fresh).
+const VERSION: f64 = 3.0;
+/// Oldest version [`load`] still accepts.
+const MIN_VERSION: f64 = 2.0;
 
 /// Everything needed to continue a stream run.
 pub struct StreamCheckpoint {
@@ -55,6 +61,8 @@ pub struct StreamCheckpoint {
     pub samples_seen: u64,
     pub samples_trained: u64,
     pub samples_replayed: u64,
+    /// rows forward-scored during selection (v2 checkpoints: 0)
+    pub samples_forward: u64,
 }
 
 fn u64_json(x: u64) -> Json {
@@ -77,6 +85,31 @@ pub fn policy_to_json(p: &Policy) -> Json {
                 Json::Arr(s.rng_words().iter().map(|&w| u64_json(w)).collect()),
             ),
         ]),
+        Policy::Obftf(o) => Json::obj(vec![
+            ("kind", Json::Str("obftf".into())),
+            (
+                "rng",
+                Json::Arr(o.rng_words().iter().map(|&w| u64_json(w)).collect()),
+            ),
+        ]),
+        Policy::SelectiveBackprop(sb) => {
+            let (threshold, calls) = sb.threshold_state();
+            Json::obj(vec![
+                ("kind", Json::Str("selective-backprop".into())),
+                (
+                    "rng",
+                    Json::Arr(sb.rng_words().iter().map(|&w| u64_json(w)).collect()),
+                ),
+                (
+                    "threshold",
+                    match threshold {
+                        None => Json::Null,
+                        Some(t) => Json::from(t as f64),
+                    },
+                ),
+                ("calls", u64_json(calls)),
+            ])
+        }
         Policy::Ada(a) => {
             let snap = a.state().snapshot();
             Json::obj(vec![
@@ -92,9 +125,28 @@ pub fn policy_to_json(p: &Policy) -> Json {
                     },
                 ),
                 ("t", Json::from(snap.t)),
+                (
+                    "ids",
+                    match &snap.ids {
+                        None => Json::Null,
+                        Some(ids) => Json::Arr(
+                            ids.iter().map(|id| Json::Str(id.clone())).collect(),
+                        ),
+                    },
+                ),
             ])
         }
     }
+}
+
+fn rng_words_from(j: &Json) -> anyhow::Result<[u64; 4]> {
+    let words = j.as_arr()?;
+    anyhow::ensure!(words.len() == 4, "rng state must be 4 words");
+    let mut w = [0u64; 4];
+    for (slot, v) in w.iter_mut().zip(words.iter()) {
+        *slot = u64_from(v)?;
+    }
+    Ok(w)
 }
 
 /// Restore [`policy_to_json`] state into a freshly-built policy of the
@@ -104,13 +156,21 @@ pub fn restore_policy(p: &mut Policy, j: &Json) -> anyhow::Result<()> {
     match (p, kind) {
         (Policy::Benchmark(_), "benchmark") => Ok(()),
         (Policy::Single(s), "single") => {
-            let words = j.at(&["rng"])?.as_arr()?;
-            anyhow::ensure!(words.len() == 4, "rng state must be 4 words");
-            let mut w = [0u64; 4];
-            for (slot, v) in w.iter_mut().zip(words.iter()) {
-                *slot = u64_from(v)?;
-            }
-            s.set_rng_words(w);
+            s.set_rng_words(rng_words_from(j.at(&["rng"])?)?);
+            Ok(())
+        }
+        (Policy::Obftf(o), "obftf") => {
+            o.set_rng_words(rng_words_from(j.at(&["rng"])?)?);
+            Ok(())
+        }
+        (Policy::SelectiveBackprop(sb), "selective-backprop") => {
+            sb.set_rng_words(rng_words_from(j.at(&["rng"])?)?);
+            let threshold = match j.at(&["threshold"])? {
+                Json::Null => None,
+                v => Some(v.as_f64()? as f32),
+            };
+            let calls = u64_from(j.at(&["calls"])?)?;
+            sb.set_threshold_state(threshold, calls);
             Ok(())
         }
         (Policy::Ada(a), "ada") => {
@@ -130,7 +190,17 @@ pub fn restore_policy(p: &mut Policy, j: &Json) -> anyhow::Result<()> {
                 ),
             };
             let t = j.at(&["t"])?.as_usize()?;
-            a.state_mut().restore(crate::selection::AdaSnapshot { w, prev_loss, t })
+            // v2 checkpoints carry no "ids": restore positionally
+            let ids = match j.at(&["ids"]) {
+                Err(_) | Ok(Json::Null) => None,
+                Ok(arr) => Some(
+                    arr.as_arr()?
+                        .iter()
+                        .map(|v| Ok(v.as_str()?.to_string()))
+                        .collect::<anyhow::Result<Vec<String>>>()?,
+                ),
+            };
+            a.state_mut().restore(crate::selection::AdaSnapshot { w, prev_loss, t, ids })
         }
         (_, other) => anyhow::bail!(
             "checkpoint policy kind '{other}' does not match the configured selector"
@@ -214,6 +284,7 @@ pub fn save(path: &Path, ck: &StreamCheckpoint) -> anyhow::Result<()> {
         ("samples_seen", u64_json(ck.samples_seen)),
         ("samples_trained", u64_json(ck.samples_trained)),
         ("samples_replayed", u64_json(ck.samples_replayed)),
+        ("samples_forward", u64_json(ck.samples_forward)),
     ]);
     let tmp = path.with_extension("tmp");
     std::fs::write(&tmp, j.to_string())?;
@@ -224,12 +295,17 @@ pub fn save(path: &Path, ck: &StreamCheckpoint) -> anyhow::Result<()> {
 /// Checkpoints written before `--drift-detect` grew detector names store
 /// the identity's `drift-detect` as a boolean; map it onto today's
 /// selector strings (`true` could only mean the then-only Page–Hinkley
-/// detector) so those runs stay resumable.
+/// detector) so those runs stay resumable. Likewise, checkpoints from
+/// before `--obftf-k` existed lack the key — fill in its default so the
+/// identity check passes for runs that could not have used it.
 fn normalize_identity(mut identity: Json) -> Json {
     if let Json::Obj(m) = &mut identity {
         if let Some(Json::Bool(b)) = m.get("drift-detect") {
             let s = if *b { "page-hinkley" } else { "off" };
             m.insert("drift-detect".into(), Json::Str(s.into()));
+        }
+        if !m.contains_key("obftf-k") {
+            m.insert("obftf-k".into(), Json::from(10usize));
         }
     }
     identity
@@ -241,8 +317,8 @@ pub fn load(path: &Path) -> anyhow::Result<StreamCheckpoint> {
     let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
     let version = j.at(&["version"])?.as_f64()?;
     anyhow::ensure!(
-        version == VERSION,
-        "checkpoint version {version} unsupported (expected {VERSION})"
+        (MIN_VERSION..=VERSION).contains(&version),
+        "checkpoint version {version} unsupported (expected {MIN_VERSION}..={VERSION})"
     );
     Ok(StreamCheckpoint {
         tick: u64_from(j.at(&["tick"])?)?,
@@ -266,6 +342,11 @@ pub fn load(path: &Path) -> anyhow::Result<StreamCheckpoint> {
         samples_seen: u64_from(j.at(&["samples_seen"])?)?,
         samples_trained: u64_from(j.at(&["samples_trained"])?)?,
         samples_replayed: u64_from(j.at(&["samples_replayed"])?)?,
+        // absent in v2 checkpoints
+        samples_forward: match j.at(&["samples_forward"]) {
+            Ok(v) => u64_from(v)?,
+            Err(_) => 0,
+        },
     })
 }
 
@@ -286,7 +367,7 @@ mod tests {
         let loss: Vec<f32> = (0..16).map(|i| 0.1 + i as f32 * 0.2).collect();
         let gnorm = vec![1.0f32; 16];
         for _ in 0..3 {
-            policy.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 4 });
+            policy.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 4, history: None });
         }
         let ck = StreamCheckpoint {
             tick: 0xdead_beef_0000_0042,
@@ -303,6 +384,7 @@ mod tests {
             samples_seen: 1 << 60,
             samples_trained: 12345,
             samples_replayed: 678,
+            samples_forward: 90123,
         };
         let path = tmp("round_trip");
         save(&path, &ck).unwrap();
@@ -321,13 +403,14 @@ mod tests {
         assert_eq!(back.samples_seen, ck.samples_seen);
         assert_eq!(back.samples_trained, ck.samples_trained);
         assert_eq!(back.samples_replayed, ck.samples_replayed);
+        assert_eq!(back.samples_forward, ck.samples_forward);
 
         // policy state restores into an identically-specced policy
         let mut fresh = build_policy("adaselection", 1, 0.5, true, -0.5).unwrap();
         restore_policy(&mut fresh, &back.policy).unwrap();
         assert_eq!(fresh.weights(), policy.weights());
-        let a = policy.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 4 });
-        let b = fresh.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 4 });
+        let a = policy.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 4, history: None });
+        let b = fresh.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 4, history: None });
         assert_eq!(a, b);
     }
 
@@ -337,15 +420,93 @@ mod tests {
         let gnorm = vec![1.0f32; 32];
         let mut p = build_policy("uniform", 9, 0.5, true, -0.5).unwrap();
         for _ in 0..5 {
-            p.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 8 });
+            p.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 8, history: None });
         }
         let saved = policy_to_json(&p);
-        let expect = p.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 8 });
+        let expect = p.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 8, history: None });
 
         let mut q = build_policy("uniform", 9, 0.5, true, -0.5).unwrap();
         restore_policy(&mut q, &saved).unwrap();
-        let got = q.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 8 });
+        let got = q.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 8, history: None });
         assert_eq!(expect, got);
+    }
+
+    #[test]
+    fn forward_cheap_policy_state_round_trips() {
+        let loss: Vec<f32> = (0..32).map(|i| (i * 7 % 13) as f32).collect();
+        let gnorm = vec![1.0f32; 32];
+        let ctx = |k| SelectionContext { loss: &loss, gnorm: &gnorm, k, history: None };
+
+        // obftf: rng words carry across save/restore
+        let mut p = build_policy("obftf", 3, 0.5, true, -0.5).unwrap();
+        p.plan(256, 8); // advance the candidate-plan rng
+        let saved = policy_to_json(&p);
+        let expect_plan = p.plan(256, 8).candidate_rows;
+        let mut q = build_policy("obftf", 3, 0.5, true, -0.5).unwrap();
+        restore_policy(&mut q, &saved).unwrap();
+        assert_eq!(q.plan(256, 8).candidate_rows, expect_plan);
+
+        // selective-backprop: threshold + call counter + fill rng carry
+        let mut p = build_policy("selective-backprop", 3, 0.5, true, -0.5).unwrap();
+        p.select(&ctx(8));
+        let saved = policy_to_json(&p);
+        let expect = p.select(&ctx(8));
+        let mut q = build_policy("selective-backprop", 3, 0.5, true, -0.5).unwrap();
+        restore_policy(&mut q, &saved).unwrap();
+        assert_eq!(q.select(&ctx(8)), expect);
+
+        // kind mismatch between the two new kinds is rejected
+        let mut o = build_policy("obftf", 3, 0.5, true, -0.5).unwrap();
+        assert!(restore_policy(&mut o, &saved).is_err());
+    }
+
+    #[test]
+    fn v2_checkpoint_without_forward_counter_or_ids_loads() {
+        // simulate a v2-era file: version 2.0, no samples_forward key,
+        // ada policy without "ids"
+        let mut policy = build_policy("adaselection", 1, 0.5, true, -0.5).unwrap();
+        let loss: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let gnorm = vec![1.0f32; 16];
+        policy.select(&SelectionContext { loss: &loss, gnorm: &gnorm, k: 4, history: None });
+        let mut pj = match policy_to_json(&policy) {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        pj.remove("ids");
+        let ck = StreamCheckpoint {
+            tick: 7,
+            family: "stream_class".into(),
+            identity: crate::config::StreamConfig::default().identity_json(),
+            tensors: Vec::new(),
+            policy: Json::Obj(pj),
+            store: Vec::new(),
+            drift: Json::Null,
+            digest: 0,
+            samples_seen: 10,
+            samples_trained: 4,
+            samples_replayed: 0,
+            samples_forward: 999, // will be dropped from the v2 payload below
+        };
+        let path = tmp("v2_compat");
+        save(&path, &ck).unwrap();
+        // rewrite as v2: drop the new key, stamp the old version
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut j = match Json::parse(&text).unwrap() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        j.remove("samples_forward");
+        j.insert("version".into(), Json::Num(2.0));
+        std::fs::write(&path, Json::Obj(j).to_string()).unwrap();
+
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.samples_forward, 0, "v2 load must default the counter");
+
+        // the id-less ada payload restores positionally into the same spec
+        let mut fresh = build_policy("adaselection", 1, 0.5, true, -0.5).unwrap();
+        restore_policy(&mut fresh, &back.policy).unwrap();
+        assert_eq!(fresh.weights(), policy.weights());
     }
 
     #[test]

@@ -304,11 +304,51 @@ impl InstanceStore {
         all.sort_unstable_by(cmp);
         all
     }
+
+    /// The q-quantile (q ∈ [0, 1]) of live losses, or `None` when empty.
+    /// Sorting by (loss, id) makes the pick deterministic regardless of
+    /// shard-iteration order — the selective-backprop threshold source.
+    pub fn loss_quantile(&self, q: f32) -> Option<f32> {
+        let mut all = self.live_records();
+        if all.is_empty() {
+            return None;
+        }
+        all.sort_unstable_by(|a, b| {
+            a.1.loss
+                .partial_cmp(&b.1.loss)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        let q = q.clamp(0.0, 1.0);
+        let idx = ((all.len() - 1) as f32 * q) as usize;
+        Some(all[idx].1.loss)
+    }
+}
+
+impl crate::selection::policy::LossHistory for InstanceStore {
+    fn loss_quantile(&self, q: f32) -> Option<f32> {
+        InstanceStore::loss_quantile(self, q)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn loss_quantile_is_deterministic_and_ordered() {
+        let store = InstanceStore::new(128, 4);
+        assert_eq!(store.loss_quantile(0.5), None);
+        for id in 0..10u64 {
+            store.update(id, id as f32, 0.1, 1);
+        }
+        assert_eq!(store.loss_quantile(0.0), Some(0.0));
+        assert_eq!(store.loss_quantile(1.0), Some(9.0));
+        // index (10-1)*0.7 = 6.3 → floor 6
+        assert_eq!(store.loss_quantile(0.7), Some(6.0));
+        // out-of-range q clamps
+        assert_eq!(store.loss_quantile(7.0), Some(9.0));
+    }
 
     #[test]
     fn round_trips_records() {

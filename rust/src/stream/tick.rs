@@ -15,7 +15,7 @@ use std::collections::HashSet;
 use crate::metrics::drift::{Adwin, PageHinkley};
 use crate::pipeline::{gather, Batch};
 use crate::runtime::Backend;
-use crate::selection::policy::{Policy, SelectionContext};
+use crate::selection::policy::{Policy, ScoringNeeds, SelectionContext};
 use crate::stream::source::StreamSource;
 use crate::stream::store::InstanceStore;
 use crate::util::json::Json;
@@ -76,6 +76,13 @@ enum Detector {
 }
 
 impl Detector {
+    fn new(kind: DriftKind) -> Detector {
+        match kind {
+            DriftKind::PageHinkley => Detector::Ph(PageHinkley::new(PH_DELTA, PH_LAMBDA)),
+            DriftKind::Adwin => Detector::Adwin(Adwin::new(ADWIN_DELTA, ADWIN_WINDOW)),
+        }
+    }
+
     fn observe(&mut self, x: f64) -> bool {
         match self {
             Detector::Ph(d) => d.observe(x),
@@ -95,6 +102,61 @@ impl Detector {
             Detector::Ph(_) => DriftKind::PageHinkley,
             Detector::Adwin(_) => DriftKind::Adwin,
         }
+    }
+
+    /// Serialized accumulator state (kind + detector fields + detections) —
+    /// the same flat pair layout `DriftGamma::to_json` has always written,
+    /// reused verbatim for the per-method detector entries.
+    fn state_pairs(&self) -> Vec<(&'static str, Json)> {
+        let mut pairs = vec![("kind", Json::from(self.kind().name()))];
+        match self {
+            Detector::Ph(ph) => {
+                let (n, mean, cum, min_cum) = ph.state();
+                pairs.push(("n", Json::from(n as usize)));
+                pairs.push(("mean", Json::from(mean)));
+                pairs.push(("cum", Json::from(cum)));
+                pairs.push(("min_cum", Json::from(min_cum)));
+            }
+            Detector::Adwin(a) => {
+                pairs.push(("window", Json::arr_f64(&a.window_values())));
+            }
+        }
+        pairs.push(("detections", Json::from(self.detections() as usize)));
+        pairs
+    }
+
+    /// Restore [`Detector::state_pairs`]; jsons without a `kind` key
+    /// predate ADWIN and are Page–Hinkley.
+    fn restore_pairs(&mut self, j: &Json) -> anyhow::Result<()> {
+        let kind = match j.get("kind") {
+            Some(k) => k.as_str()?.to_string(),
+            None => "page-hinkley".to_string(),
+        };
+        anyhow::ensure!(
+            kind == self.kind().name(),
+            "checkpoint drift detector '{kind}' does not match configured '{}'",
+            self.kind().name()
+        );
+        let detections = j.at(&["detections"])?.as_usize()? as u64;
+        match self {
+            Detector::Ph(ph) => {
+                let n = j.at(&["n"])?.as_usize()? as u64;
+                let mean = j.at(&["mean"])?.as_f64()?;
+                let cum = j.at(&["cum"])?.as_f64()?;
+                let min_cum = j.at(&["min_cum"])?.as_f64()?;
+                ph.restore(n, mean, cum, min_cum, detections);
+            }
+            Detector::Adwin(a) => {
+                let vals: Vec<f64> = j
+                    .at(&["window"])?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64())
+                    .collect::<anyhow::Result<Vec<f64>>>()?;
+                a.restore(&vals, detections);
+            }
+        }
+        Ok(())
     }
 }
 
@@ -119,9 +181,16 @@ pub struct DriftGamma {
     pub gamma_boost: f64,
     /// multiplier on the weight-update rule's learning parameter
     pub lr_boost: f32,
+    /// multiplier on a bandit arm's weight when that arm's own detector
+    /// fires (per-method drift: shift the method mix, not just γ)
+    pub weight_boost: f32,
     /// ticks a boost stays active after a detection
     pub hold: u32,
     left: u32,
+    /// one detector per bandit arm (same kind as `det`), each observing
+    /// that arm's hypothetical top-k mean loss ℓ_t^m; empty = per-method
+    /// drift off (non-AdaSelection policies)
+    per_method: Vec<Detector>,
 }
 
 impl Default for DriftGamma {
@@ -133,16 +202,72 @@ impl Default for DriftGamma {
 impl DriftGamma {
     /// A controller driven by the given detector kind.
     pub fn new(kind: DriftKind) -> DriftGamma {
-        let det = match kind {
-            DriftKind::PageHinkley => Detector::Ph(PageHinkley::new(PH_DELTA, PH_LAMBDA)),
-            DriftKind::Adwin => Detector::Adwin(Adwin::new(ADWIN_DELTA, ADWIN_WINDOW)),
+        DriftGamma {
+            det: Detector::new(kind),
+            gamma_boost: 2.0,
+            lr_boost: 3.0,
+            weight_boost: 2.0,
+            hold: 25,
+            left: 0,
+            per_method: Vec::new(),
+        }
+    }
+
+    /// Build the controller a config + policy pair calls for: `None` when
+    /// `--drift-detect off` or the policy runs no selection forward pass
+    /// (nothing to observe); per-method detectors attached for
+    /// AdaSelection pools, one per bandit arm.
+    pub fn from_config(
+        cfg: &crate::config::StreamConfig,
+        policy: &Policy,
+    ) -> anyhow::Result<Option<DriftGamma>> {
+        let kind = match DriftKind::parse(&cfg.drift_detect)? {
+            Some(k) => k,
+            None => return Ok(None),
         };
-        DriftGamma { det, gamma_boost: 2.0, lr_boost: 3.0, hold: 25, left: 0 }
+        if policy.scoring() == ScoringNeeds::None {
+            return Ok(None);
+        }
+        let mut d = DriftGamma::new(kind);
+        if let Some(ada) = policy.as_ada_ref() {
+            d.enable_per_method(ada.state().config().candidates.len());
+        }
+        Ok(Some(d))
     }
 
     /// The detector behind this controller.
     pub fn kind(&self) -> DriftKind {
         self.det.kind()
+    }
+
+    /// Attach one fresh detector (same kind) per bandit arm.
+    pub fn enable_per_method(&mut self, arms: usize) {
+        self.per_method = (0..arms).map(|_| Detector::new(self.det.kind())).collect();
+    }
+
+    /// Number of per-method detectors attached (0 = per-method drift off).
+    pub fn per_method_arms(&self) -> usize {
+        self.per_method.len()
+    }
+
+    /// Feed every arm's observed loss ℓ_t^m for this tick; returns the
+    /// arm indices whose detectors fired.
+    pub fn observe_methods(&mut self, losses: &[f32]) -> Vec<usize> {
+        let mut fired = Vec::new();
+        for (i, det) in self.per_method.iter_mut().enumerate() {
+            if i >= losses.len() {
+                break;
+            }
+            if det.observe(losses[i] as f64) {
+                fired.push(i);
+            }
+        }
+        fired
+    }
+
+    /// Total detections across the per-method detectors.
+    pub fn method_detections(&self) -> u64 {
+        self.per_method.iter().map(|d| d.detections()).sum()
     }
 
     /// Feed one tick's mean loss; `true` on a fresh detection.
@@ -181,60 +306,47 @@ impl DriftGamma {
     }
 
     /// Checkpoint payload (deterministic resume needs the detector
-    /// accumulators and the remaining boost window).
+    /// accumulators, the remaining boost window, and every per-method
+    /// detector). The base detector's fields stay flat at the top level —
+    /// the pre-v3 layout — so older checkpoints round-trip unchanged;
+    /// per-method detectors ride in a `per_method` array of the same
+    /// per-detector layout.
     pub fn to_json(&self) -> Json {
-        let mut pairs = vec![("kind", Json::from(self.det.kind().name()))];
-        match &self.det {
-            Detector::Ph(ph) => {
-                let (n, mean, cum, min_cum) = ph.state();
-                pairs.push(("n", Json::from(n as usize)));
-                pairs.push(("mean", Json::from(mean)));
-                pairs.push(("cum", Json::from(cum)));
-                pairs.push(("min_cum", Json::from(min_cum)));
-            }
-            Detector::Adwin(a) => {
-                pairs.push(("window", Json::arr_f64(&a.window_values())));
-            }
-        }
-        pairs.push(("detections", Json::from(self.detections() as usize)));
+        let mut pairs = self.det.state_pairs();
         pairs.push(("left", Json::from(self.left as usize)));
+        if !self.per_method.is_empty() {
+            pairs.push((
+                "per_method",
+                Json::Arr(
+                    self.per_method
+                        .iter()
+                        .map(|d| Json::obj(d.state_pairs()))
+                        .collect(),
+                ),
+            ));
+        }
         Json::obj(pairs)
     }
 
     /// Restore [`DriftGamma::to_json`] state. The checkpointed detector
     /// kind must match this controller's (resume identity pins the
-    /// `--drift-detect` value); jsons without a `kind` key predate ADWIN
-    /// and are Page–Hinkley.
+    /// `--drift-detect` value). A checkpoint without a `per_method` key
+    /// predates per-method drift: attached detectors simply start fresh.
     pub fn restore_json(&mut self, j: &Json) -> anyhow::Result<()> {
-        let kind = match j.get("kind") {
-            Some(k) => k.as_str()?.to_string(),
-            None => "page-hinkley".to_string(),
-        };
-        anyhow::ensure!(
-            kind == self.det.kind().name(),
-            "checkpoint drift detector '{kind}' does not match configured '{}'",
-            self.det.kind().name()
-        );
-        let detections = j.at(&["detections"])?.as_usize()? as u64;
-        match &mut self.det {
-            Detector::Ph(ph) => {
-                let n = j.at(&["n"])?.as_usize()? as u64;
-                let mean = j.at(&["mean"])?.as_f64()?;
-                let cum = j.at(&["cum"])?.as_f64()?;
-                let min_cum = j.at(&["min_cum"])?.as_f64()?;
-                ph.restore(n, mean, cum, min_cum, detections);
-            }
-            Detector::Adwin(a) => {
-                let vals: Vec<f64> = j
-                    .at(&["window"])?
-                    .as_arr()?
-                    .iter()
-                    .map(|v| v.as_f64())
-                    .collect::<anyhow::Result<Vec<f64>>>()?;
-                a.restore(&vals, detections);
+        self.det.restore_pairs(j)?;
+        self.left = j.at(&["left"])?.as_usize()? as u32;
+        if let Some(arr) = j.get("per_method") {
+            let arr = arr.as_arr()?;
+            anyhow::ensure!(
+                arr.len() == self.per_method.len(),
+                "checkpoint has {} per-method detectors, policy has {} arms",
+                arr.len(),
+                self.per_method.len()
+            );
+            for (det, dj) in self.per_method.iter_mut().zip(arr.iter()) {
+                det.restore_pairs(dj)?;
             }
         }
-        self.left = j.at(&["left"])?.as_usize()? as u32;
         Ok(())
     }
 }
@@ -270,6 +382,9 @@ pub struct TickEngine {
     pub samples_seen: u64,
     pub samples_trained: u64,
     pub samples_replayed: u64,
+    /// rows put through the selection forward pass (candidate scoring);
+    /// benchmark runs keep this at 0, OBFTF at ≈ obftf_k·⌈γB⌉ per tick
+    pub samples_forward: u64,
 }
 
 impl TickEngine {
@@ -291,6 +406,7 @@ impl TickEngine {
             samples_seen: 0,
             samples_trained: 0,
             samples_replayed: 0,
+            samples_forward: 0,
         }
     }
 
@@ -333,55 +449,79 @@ impl TickEngine {
         let mut selected: Vec<usize> = Vec::new();
         let mut digest = FNV_OFFSET;
         if real > 0 {
-            if self.policy.is_benchmark() {
+            if self.policy.scoring() == ScoringNeeds::None {
+                // no selection forward pass at all: train on everything
                 selected = (0..real).collect();
             } else {
-                // forward + score: fused on the backend scorer for
-                // AdaSelection, separate passes otherwise. α/scores are
-                // computed over the padded batch (compiled-shape friendly)
-                // and sliced to the real arrivals before selection.
-                let fused = match self.policy.as_ada() {
-                    Some(ada) => {
-                        let w_full = ada.state().full_weights();
-                        let t_next = ada.state().iteration() + 1;
-                        let (cl_on, cl_power) = {
-                            let c = ada.state().config();
-                            (c.cl_on, c.cl_power)
-                        };
-                        phases.time("forward", || {
-                            backend.forward_score_fused(
-                                state, batch, &w_full, t_next, cl_power, cl_on,
-                            )
-                        })?
-                    }
-                    None => None,
-                };
-                let (loss_real, gnorm_real, prepared) = match fused {
-                    Some(f) => {
-                        let loss_real = f.loss[..real].to_vec();
-                        let gnorm_real = f.gnorm[..real].to_vec();
-                        let scores = f.scores[..real].to_vec();
-                        let alphas: Vec<Vec<f32>> =
-                            f.alphas.iter().map(|row| row[..real].to_vec()).collect();
-                        (loss_real, gnorm_real, Some((scores, alphas)))
+                // phase 1: the policy plans which rows need forward-only
+                // scoring (OBFTF plans a candidate superset; everyone else
+                // scores the full batch). Planned with base γ — the drift
+                // boost below only widens the final keep count.
+                let k_base = ((self.gamma * real as f64).ceil() as usize).clamp(1, real);
+                let cand_rows = self.policy.plan(real, k_base).candidate_rows;
+
+                // phase 2 scoring: candidate-subset forward when planned;
+                // otherwise the full batch — fused on the backend scorer
+                // when AdaSelection's pool is all-kernel, separate passes
+                // else. Full-batch α/scores are computed over the padded
+                // batch (compiled-shape friendly) and sliced to the real
+                // arrivals before selection.
+                let (loss_c, gnorm_c, prepared) = match &cand_rows {
+                    Some(rows) => {
+                        let (l, g) = phases.time("forward", || {
+                            crate::runtime::forward_scores_rows(backend, state, batch, rows)
+                        })?;
+                        (l, g, None)
                     }
                     None => {
-                        let (loss, gnorm) =
-                            phases.time("forward", || backend.forward_scores(state, batch))?;
-                        (loss[..real].to_vec(), gnorm[..real].to_vec(), None)
+                        let fused = match self.policy.as_ada() {
+                            Some(ada) => match ada.state().kernel_weights() {
+                                Some(w_full) => {
+                                    let t_next = ada.state().iteration() + 1;
+                                    let (cl_on, cl_power) = {
+                                        let c = ada.state().config();
+                                        (c.cl_on, c.cl_power)
+                                    };
+                                    phases.time("forward", || {
+                                        backend.forward_score_fused(
+                                            state, batch, &w_full, t_next, cl_power, cl_on,
+                                        )
+                                    })?
+                                }
+                                None => None,
+                            },
+                            None => None,
+                        };
+                        match fused {
+                            Some(f) => {
+                                let loss_real = f.loss[..real].to_vec();
+                                let gnorm_real = f.gnorm[..real].to_vec();
+                                let scores = f.scores[..real].to_vec();
+                                let alphas: Vec<Vec<f32>> =
+                                    f.alphas.iter().map(|row| row[..real].to_vec()).collect();
+                                (loss_real, gnorm_real, Some((scores, alphas)))
+                            }
+                            None => {
+                                let (loss, gnorm) = phases
+                                    .time("forward", || backend.forward_scores(state, batch))?;
+                                (loss[..real].to_vec(), gnorm[..real].to_vec(), None)
+                            }
+                        }
                     }
                 };
+                let n_cand = loss_c.len();
+                self.samples_forward += n_cand as u64;
 
                 // drift control: the tick that exposes a loss jump already
-                // trains harder — observe, then derive γ and the
-                // weight-update rate for this very tick
+                // trains harder — observe the scored rows' mean loss, then
+                // derive γ and the weight-update rate for this very tick
                 if let Some(d) = self.drift.as_mut() {
                     let mean =
-                        loss_real.iter().map(|&l| l as f64).sum::<f64>() / real as f64;
+                        loss_c.iter().map(|&l| l as f64).sum::<f64>() / n_cand.max(1) as f64;
                     d.observe(mean);
                 }
                 let gamma_eff = self.effective_gamma();
-                let k = ((gamma_eff * real as f64).ceil() as usize).clamp(1, real);
+                let k = ((gamma_eff * real as f64).ceil() as usize).clamp(1, n_cand);
                 let lr_scale =
                     self.drift.as_ref().map(|d| d.lr_scale()).unwrap_or(1.0);
                 if let Some(ada) = self.policy.as_ada() {
@@ -389,28 +529,60 @@ impl TickEngine {
                 }
 
                 let t0 = std::time::Instant::now();
-                selected = match prepared {
+                let picks = match prepared {
                     Some((scores, alphas)) => {
                         let ada = self.policy.as_ada().expect("fused path is ada-only");
-                        ada.select_kernel(&loss_real, &alphas, scores, k)
+                        ada.select_kernel(&loss_c, &alphas, scores, k)
                     }
                     None => self.policy.select(&SelectionContext {
-                        loss: &loss_real,
-                        gnorm: &gnorm_real,
+                        loss: &loss_c,
+                        gnorm: &gnorm_c,
                         k,
+                        history: Some(&self.store),
                     }),
+                };
+                // map candidate-local picks back to batch positions
+                selected = match &cand_rows {
+                    Some(rows) => picks.iter().map(|&c| rows[c]).collect(),
+                    None => picks,
                 };
                 phases.add("select", t0.elapsed());
 
-                // constant information per instance: record every arrival
+                // per-method drift: each bandit arm's detector watches that
+                // arm's own ℓ_t^m; a firing arm gets its weight boosted so
+                // a regime change re-ranks the method mix, not just γ
+                if let (Some(d), Some(ada)) = (self.drift.as_mut(), self.policy.as_ada()) {
+                    if d.per_method_arms() > 0 {
+                        if let Some(cur) = ada.state().last_method_losses() {
+                            let cur = cur.to_vec();
+                            let boost = d.weight_boost;
+                            for m in d.observe_methods(&cur) {
+                                ada.state_mut().boost_weight(m, boost);
+                            }
+                        }
+                    }
+                }
+
+                // constant information per instance: record every scored row
                 let t0 = std::time::Instant::now();
                 let tick32 = tick.min(u32::MAX as u64) as u32;
-                for ((&id, &l), &g) in batch.indices[..real]
-                    .iter()
-                    .zip(loss_real.iter())
-                    .zip(gnorm_real.iter())
-                {
-                    self.store.update(id as u64, l, g, tick32);
+                match &cand_rows {
+                    Some(rows) => {
+                        for ((&row, &l), &g) in
+                            rows.iter().zip(loss_c.iter()).zip(gnorm_c.iter())
+                        {
+                            self.store.update(batch.indices[row] as u64, l, g, tick32);
+                        }
+                    }
+                    None => {
+                        for ((&id, &l), &g) in batch.indices[..real]
+                            .iter()
+                            .zip(loss_c.iter())
+                            .zip(gnorm_c.iter())
+                        {
+                            self.store.update(id as u64, l, g, tick32);
+                        }
+                    }
                 }
                 phases.add("store", t0.elapsed());
             }
@@ -573,6 +745,53 @@ mod tests {
             Some(DriftKind::PageHinkley)
         );
         assert!(DriftKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn per_method_detectors_fire_independently_and_round_trip() {
+        let mut d = DriftGamma::default();
+        d.enable_per_method(2);
+        assert_eq!(d.per_method_arms(), 2);
+        for _ in 0..50 {
+            assert!(d.observe_methods(&[1.0, 1.0]).is_empty());
+        }
+        // only arm 1 sees a shift: only its detector may fire
+        let mut hit = None;
+        for _ in 0..30 {
+            let f = d.observe_methods(&[1.0, 4.0]);
+            if !f.is_empty() {
+                hit = Some(f);
+                break;
+            }
+        }
+        assert_eq!(hit, Some(vec![1]));
+        assert!(d.method_detections() >= 1);
+        // per-method state rides the json round trip tick-for-tick
+        let j = d.to_json();
+        let mut b = DriftGamma::default();
+        b.enable_per_method(2);
+        b.restore_json(&j).unwrap();
+        assert_eq!(b.method_detections(), d.method_detections());
+        for _ in 0..10 {
+            assert_eq!(
+                d.observe_methods(&[1.0, 4.0]),
+                b.observe_methods(&[1.0, 4.0])
+            );
+        }
+        // arity mismatch rejected
+        let mut c = DriftGamma::default();
+        c.enable_per_method(3);
+        assert!(c.restore_json(&j).is_err());
+        // kind mismatch rejected (adwin controller, page-hinkley payload)
+        let mut k = DriftGamma::new(DriftKind::Adwin);
+        k.enable_per_method(2);
+        assert!(k.restore_json(&j).is_err());
+        // a pre-per-method payload restores with fresh arm detectors
+        let legacy = DriftGamma::default().to_json();
+        let mut fresh = DriftGamma::default();
+        fresh.enable_per_method(2);
+        fresh.restore_json(&legacy).unwrap();
+        assert_eq!(fresh.method_detections(), 0);
     }
 
     #[test]

@@ -20,9 +20,8 @@ use crate::data::{self, Dataset};
 use crate::metrics::{EpochStats, RunResult};
 use crate::pipeline::{gather, Batch, Loader, LoaderConfig};
 use crate::runtime::{Backend, FamilyMeta, NativeBackend};
-use crate::selection::bandit::UpdateRule;
-use crate::selection::policy::{build_policy, Policy};
-use crate::selection::{LossCache, SelectionContext};
+use crate::selection::policy::Policy;
+use crate::selection::{LossCache, ScoringNeeds, SelectionContext};
 
 use super::earlystop::EarlyStop;
 use crate::util::stats::Welford;
@@ -68,21 +67,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
     pub fn run(&mut self) -> anyhow::Result<RunResult> {
         let b = self.meta.batch;
         let k = self.subset_size();
-        let mut policy = build_policy(
-            &self.cfg.selector,
-            self.cfg.seed,
-            self.cfg.beta,
-            self.cfg.cl_on,
-            self.cfg.cl_power,
-        )?;
-        // bare "eq3" keeps AdaConfig's β (the fig-7 knob); an explicit
-        // rule spec ("eq3:0.7", "exp3", ...) overrides it
-        if self.cfg.rule != "eq3" {
-            let rule = UpdateRule::parse(&self.cfg.rule)?;
-            if let Some(ada) = policy.as_ada() {
-                ada.state_mut().set_rule(rule);
-            }
-        }
+        let mut policy = Policy::from_run_config(&self.cfg)?;
         // §5 future-work: stale-loss forward approximation + early stopping.
         // The cache is a shim over the same sharded InstanceStore the
         // stream trainer uses (one statistics store for both trainers).
@@ -91,8 +76,12 @@ impl<'b, B: Backend> Trainer<'b, B> {
             .cfg
             .early_stop
             .then(|| EarlyStop::new(self.cfg.patience, 0.01, 0.02));
-        // keep compilation out of the timed loop (no-op natively)
-        let sizes: Vec<usize> = if policy.is_benchmark() { vec![b] } else { vec![k, b] };
+        // keep compilation out of the timed loop (no-op natively). The
+        // batch trainer always forward-scores the full batch (candidate
+        // planning is a stream-path optimization), so every non-benchmark
+        // policy needs the same {k, b} sizes here.
+        let sizes: Vec<usize> =
+            if policy.scoring() == ScoringNeeds::None { vec![b] } else { vec![k, b] };
         self.backend.preload_family(&self.family, &sizes)?;
 
         let mut state = self.backend.init_state(&self.family, self.cfg.seed as i32)?;
@@ -142,7 +131,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
                 };
                 iterations += 1;
 
-                if policy.is_benchmark() {
+                if policy.scoring() == ScoringNeeds::None {
                     let loss = phases.time("update", || {
                         self.backend.train_step(&mut state, &batch, self.cfg.lr)
                     })?;
@@ -164,15 +153,19 @@ impl<'b, B: Backend> Trainer<'b, B> {
                     phases.add("select", t0.elapsed());
                     sel
                 } else {
+                    // the fused kernel path needs the frozen 7-row α layout,
+                    // so it only applies to all-kernel bandit pools
+                    // (`kernel_weights` is None once a forward-cheap arm
+                    // like obftf joins)
                     let fused = if self.cfg.kernel_scorer {
-                        match policy.as_ada() {
-                            Some(ada) => {
-                                let w_full = ada.state().full_weights();
+                        match policy.as_ada().and_then(|ada| {
+                            ada.state().kernel_weights().map(|w| {
                                 let t_next = ada.state().iteration() + 1;
-                                let (cl_on, cl_power) = {
-                                    let c = ada.state().config();
-                                    (c.cl_on, c.cl_power)
-                                };
+                                let c = ada.state().config();
+                                (w, t_next, c.cl_on, c.cl_power)
+                            })
+                        }) {
+                            Some((w_full, t_next, cl_on, cl_power)) => {
                                 phases.time("forward", || {
                                     self.backend.forward_score_fused(
                                         &state, &batch, &w_full, t_next, cl_power, cl_on,
@@ -286,7 +279,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
                     .config()
                     .candidates
                     .iter()
-                    .map(|m| m.name().to_string())
+                    .map(|m| m.id().to_string())
                     .collect(),
                 _ => Vec::new(),
             },
@@ -305,20 +298,22 @@ impl<'b, B: Backend> Trainer<'b, B> {
         if self.cfg.kernel_scorer {
             if let Some(ada) = policy.as_ada() {
                 // backend scorer (the L1 Pallas kernel on XLA, same math
-                // natively): fused α + s computed off-policy
-                let w_full = ada.state().full_weights();
-                let t_next = ada.state().iteration() + 1;
-                let (cl_on, cl_power) = {
-                    let c = ada.state().config();
-                    (c.cl_on, c.cl_power)
-                };
-                let (scores, alphas) =
-                    self.backend
-                        .score(loss, gnorm, &w_full, t_next, cl_power, cl_on)?;
-                return Ok(ada.select_kernel(loss, &alphas, scores, k));
+                // natively): fused α + s computed off-policy. Pools with a
+                // non-kernel arm fall through to the host path below.
+                if let Some(w_full) = ada.state().kernel_weights() {
+                    let t_next = ada.state().iteration() + 1;
+                    let (cl_on, cl_power) = {
+                        let c = ada.state().config();
+                        (c.cl_on, c.cl_power)
+                    };
+                    let (scores, alphas) =
+                        self.backend
+                            .score(loss, gnorm, &w_full, t_next, cl_power, cl_on)?;
+                    return Ok(ada.select_kernel(loss, &alphas, scores, k));
+                }
             }
         }
-        Ok(policy.select(&SelectionContext { loss, gnorm, k }))
+        Ok(policy.select(&SelectionContext { loss, gnorm, k, history: None }))
     }
 
     /// Full test-set evaluation: (mean loss, accuracy | NaN).

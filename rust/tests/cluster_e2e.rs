@@ -201,6 +201,34 @@ fn tcp_delta_gossip_is_bit_identical_to_loopback_full() {
 }
 
 #[test]
+fn four_node_per_method_drift_is_bit_deterministic() {
+    // acceptance: a 4-node cluster running a mixed kernel + forward-cheap
+    // bandit pool with per-method drift detectors is bit-identical across
+    // re-runs — detector state and the forward-cheap rng paths are pure
+    // functions of config + seed
+    let mut cfg = base_cfg(4, 120);
+    cfg.stream.selector = "adaselection:big_loss+uniform+obftf+selective-backprop".into();
+    cfg.stream.drift_detect = "page-hinkley".into();
+    cfg.stream.drift_period = 100;
+    let a = cluster::run(&cfg).unwrap();
+    let b = cluster::run(&cfg).unwrap();
+    assert_eq!(a.digest, b.digest, "per-method drift runs diverged");
+    assert_eq!(a.samples_seen, b.samples_seen);
+    assert_eq!(a.samples_trained, b.samples_trained);
+    assert_eq!(
+        a.final_rolling_loss.to_bits(),
+        b.final_rolling_loss.to_bits(),
+        "rolling loss not bit-identical"
+    );
+    assert_eq!(a.rolling.len(), b.rolling.len());
+    for (x, y) in a.rolling.iter().zip(b.rolling.iter()) {
+        assert_eq!(x.tick, y.tick);
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+    }
+    assert!(a.final_rolling_loss.is_finite());
+}
+
+#[test]
 fn replay_tops_up_thin_cluster_shards() {
     // 8 nodes over a burst-heavy stream: single shards regularly fall
     // below the per-node budget, so the replay scheduler must fire

@@ -4,7 +4,7 @@
 use adaselection::selection::adaselection::score_host;
 use adaselection::selection::method::{all_alphas, alpha};
 use adaselection::selection::{
-    AdaConfig, AdaSelection, Method, SelectionContext, Selector, SingleMethod,
+    AdaConfig, AdaSelection, Arm, Method, SelectionContext, Selector, SingleMethod,
 };
 use adaselection::testutil::prop::{loss_gnorm, prop_check};
 use adaselection::util::rng::Pcg64;
@@ -120,11 +120,12 @@ fn prop_weights_positive_normalized_under_any_stream() {
         },
         |(steps, beta)| {
             let mut ada = AdaSelection::new(AdaConfig {
-                candidates: Method::ALL.to_vec(),
+                candidates: Method::ALL.iter().copied().map(Arm::Kernel).collect(),
                 beta: *beta,
                 cl_on: true,
                 cl_power: -0.5,
                 rule: None,
+                obftf_k: 10,
             });
             for (l, g) in steps {
                 let k = (l.len() / 4).max(1);
@@ -164,6 +165,7 @@ fn prop_single_method_selects_k_unique_in_range() {
                 loss: l,
                 gnorm: g,
                 k: *k,
+                history: None,
             });
             if sel.len() != *k {
                 return Err(format!("{m:?}: got {} want {k}", sel.len()));

@@ -355,6 +355,209 @@ fn stream_trains_from_a_socket_tail_source() {
 }
 
 #[test]
+fn every_policy_selects_exact_budget_deterministically() {
+    // property sweep over the whole selector registry on the two-phase
+    // API directly: identical seeds ⇒ identical plans and picks, and the
+    // backward set is always exactly k unique in-bounds candidate-local
+    // rows (the benchmark keeps everything)
+    use adaselection::selection::method::valid_method_ids;
+    use adaselection::selection::{build_policy_full, ScoringNeeds, SelectionContext};
+    use adaselection::util::rng::Pcg64;
+
+    let mut specs: Vec<String> = vec!["benchmark".into(), "adaselection".into()];
+    specs.extend(valid_method_ids().iter().map(|s| s.to_string()));
+    specs.push("adaselection:big_loss+obftf+selective-backprop".into());
+
+    for spec in &specs {
+        let mk = || build_policy_full(spec, 0xC0FFEE, 0.5, true, -0.5, 4).unwrap();
+        let mut p = mk();
+        let mut q = mk();
+        let mut rng = Pcg64::new(0xE2E5);
+        for iter in 0..40 {
+            let arrivals = 1 + rng.next_below(256) as usize;
+            let k = 1 + rng.next_below(arrivals as u64) as usize;
+            let plan = p.plan(arrivals, k);
+            assert_eq!(
+                plan.candidate_rows,
+                q.plan(arrivals, k).candidate_rows,
+                "{spec} iter {iter}: plans diverged under equal seeds"
+            );
+            let rows: Vec<usize> = match &plan.candidate_rows {
+                Some(rows) => {
+                    assert!(
+                        rows.len() >= k && rows.len() <= arrivals,
+                        "{spec} iter {iter}: candidate pool {} outside [k={k}, B={arrivals}]",
+                        rows.len()
+                    );
+                    assert!(
+                        rows.windows(2).all(|w| w[0] < w[1]),
+                        "{spec} iter {iter}: candidates not strictly increasing"
+                    );
+                    assert!(rows.iter().all(|&r| r < arrivals));
+                    rows.clone()
+                }
+                None => (0..arrivals).collect(),
+            };
+            let loss: Vec<f32> =
+                rows.iter().map(|&r| 0.05 + ((r * 37 + iter) % 101) as f32 * 0.03).collect();
+            let gnorm: Vec<f32> = loss.iter().map(|&l| 0.5 * l + 0.01).collect();
+            let sel = p.select(&SelectionContext {
+                loss: &loss,
+                gnorm: &gnorm,
+                k,
+                history: None,
+            });
+            assert_eq!(
+                sel,
+                q.select(&SelectionContext {
+                    loss: &loss,
+                    gnorm: &gnorm,
+                    k,
+                    history: None,
+                }),
+                "{spec} iter {iter}: selection diverged under equal seeds"
+            );
+            let want = if p.scoring() == ScoringNeeds::None {
+                loss.len()
+            } else {
+                k.min(loss.len())
+            };
+            assert_eq!(sel.len(), want, "{spec} iter {iter}: wrong keep count");
+            let mut s = sel.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), want, "{spec} iter {iter}: duplicate rows in {sel:?}");
+            assert!(
+                s.iter().all(|&i| i < loss.len()),
+                "{spec} iter {iter}: candidate-local row out of range"
+            );
+        }
+    }
+}
+
+#[test]
+fn obftf_stream_budget_and_forward_cost() {
+    // obftf_k=2 at γ=0.25, B=128: forward-score 2·32=64 candidates per
+    // tick, backprop exactly ⌈γB⌉=32 — half the forward cost of a
+    // full-batch-scoring policy, identical digests across re-runs
+    let mut cfg = base_cfg();
+    cfg.selector = "obftf".into();
+    cfg.obftf_k = 2;
+    cfg.gamma = 0.25;
+    cfg.max_ticks = 40;
+    cfg.burst_period = 0;
+    cfg.eval_every = 0;
+    let a = run(cfg.clone());
+    let b = run(cfg.clone());
+    assert_eq!(a.tick_digests, b.tick_digests, "obftf not deterministic");
+    assert_eq!(a.digest, b.digest);
+    assert_eq!(a.samples_trained, 40 * 32, "backward budget must be exactly ⌈γB⌉ per tick");
+    assert_eq!(a.samples_forward, 40 * 64, "forward cost must be obftf_k·⌈γB⌉ per tick");
+    assert!(a.samples_forward < a.samples_seen);
+
+    // selective-backprop scores the full batch but trains the same budget
+    let mut sb_cfg = cfg.clone();
+    sb_cfg.selector = "selective-backprop".into();
+    let sb = run(sb_cfg.clone());
+    assert_eq!(sb.tick_digests, run(sb_cfg).tick_digests, "selective-backprop not deterministic");
+    assert_eq!(sb.samples_trained, 40 * 32);
+    assert_eq!(sb.samples_forward, 40 * 128);
+
+    // and the benchmark never runs a selection forward pass at all
+    let mut bench_cfg = cfg.clone();
+    bench_cfg.selector = "benchmark".into();
+    let bench = run(bench_cfg);
+    assert_eq!(bench.samples_forward, 0);
+    assert_eq!(bench.samples_trained, bench.samples_seen);
+}
+
+#[test]
+fn forward_cheap_policies_survive_checkpoint_resume() {
+    // obftf rng state and the selective-backprop threshold cache both ride
+    // the v3 checkpoint: a killed run resumes tick-for-tick
+    for selector in ["obftf", "selective-backprop"] {
+        let dir = std::env::temp_dir().join(format!(
+            "ada_stream_fc_{}_{}",
+            selector.replace('-', "_"),
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("ck.json");
+        let _ = std::fs::remove_file(&ck);
+
+        let mut cfg = base_cfg();
+        cfg.selector = selector.into();
+        cfg.obftf_k = 2; // non-degenerate candidate plans: rng state matters
+        cfg.gamma = 0.25;
+        cfg.max_ticks = 40;
+        cfg.eval_every = 4;
+
+        let full = run(cfg.clone());
+
+        let mut cfg1 = cfg.clone();
+        cfg1.max_ticks = 20;
+        cfg1.checkpoint = Some(ck.clone());
+        let half = run(cfg1);
+        assert_eq!(&full.tick_digests[..20], &half.tick_digests[..], "{selector}");
+
+        let mut cfg2 = cfg.clone();
+        cfg2.checkpoint = Some(ck.clone());
+        cfg2.resume = true;
+        let resumed = run(cfg2);
+        assert_eq!(
+            &full.tick_digests[20..],
+            &resumed.tick_digests[..],
+            "{selector}: post-resume selection sequence diverged"
+        );
+        assert_eq!(full.digest, resumed.digest, "{selector}");
+        assert_eq!(full.samples_forward, resumed.samples_forward, "{selector}");
+
+        std::fs::remove_file(&ck).ok();
+    }
+}
+
+#[test]
+fn per_method_drift_with_forward_cheap_pool_survives_resume() {
+    // a bandit pool mixing kernel and forward-cheap arms, each arm with
+    // its own drift detector: detector state (global + per-method) must
+    // ride the checkpoint so a killed run resumes tick-for-tick
+    let dir = std::env::temp_dir().join(format!("ada_stream_pmd_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir.join("ck.json");
+    let _ = std::fs::remove_file(&ck);
+
+    let mut cfg = base_cfg();
+    cfg.selector = "adaselection:big_loss+uniform+obftf+selective-backprop".into();
+    cfg.max_ticks = 60;
+    cfg.drift_period = 100;
+    cfg.burst_period = 0;
+    cfg.eval_every = 2;
+    cfg.drift_detect = "page-hinkley".into();
+
+    let full = run(cfg.clone());
+
+    let mut cfg1 = cfg.clone();
+    cfg1.max_ticks = 30;
+    cfg1.checkpoint = Some(ck.clone());
+    let half = run(cfg1);
+    assert_eq!(&full.tick_digests[..30], &half.tick_digests[..]);
+
+    let mut cfg2 = cfg.clone();
+    cfg2.checkpoint = Some(ck.clone());
+    cfg2.resume = true;
+    let resumed = run(cfg2);
+    assert_eq!(
+        &full.tick_digests[30..],
+        &resumed.tick_digests[..],
+        "per-method drift state did not survive the checkpoint"
+    );
+    assert_eq!(full.digest, resumed.digest);
+    assert_eq!(full.drift_detections, resumed.drift_detections);
+
+    std::fs::remove_file(&ck).ok();
+}
+
+#[test]
 fn regression_and_lm_streams_train() {
     for (name, ticks) in [("drift-reg", 30usize), ("drift-lm", 12)] {
         let mut cfg = base_cfg();

@@ -45,6 +45,7 @@ fn state(from: usize) -> Message {
             w: vec![0.125, 0.25, 0.5, 0.0625, 0.03125, 0.015625, 0.0078125],
             prev_loss: Some(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]),
             t: 99,
+            ids: None,
         }),
     }
 }
