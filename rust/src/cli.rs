@@ -81,6 +81,8 @@ COMMANDS:
                       --window N --eval-every N --workers N
                       --drift-detect off|page-hinkley|adwin --replay on|off
                       --checkpoint FILE [--checkpoint-every N] [--resume]
+                      --trace FILE (per-tick JSONL trace journal)
+                      --status-addr HOST:PORT (/metrics + /status endpoint)
                       --config FILE --out DIR
   cluster             multi-node sharded streaming training
                       --nodes N --vnodes N --gossip-every N --merge-every N
@@ -89,7 +91,8 @@ COMMANDS:
                       [--full-gossip-every K]
                       [--kill-at T --kill-node I] [--join-at T]
                       [--chaos-kill-at T --chaos-kill-node I] (processes)
-                      plus all stream options; native backend only
+                      plus all stream options (--trace writes PATH.node<i>
+                      per process worker); native backend only
   worker              one spawned cluster worker process (internal; started
                       by `cluster --workers processes`)
                       --coordinator HOST:PORT --node-id N
@@ -101,6 +104,10 @@ COMMANDS:
   inspect-artifacts   print the artifact manifest summary (xla backend)
   gen-data            generate + describe a dataset
                       --dataset D [--data-scale F --seed N]
+  bench-diff          compare two directories of BENCH_*.json summaries
+                      --baseline DIR --current DIR [--tolerance 0.15]
+                      exits nonzero when any matching benchmark's median
+                      regresses past the tolerance (CI perf gate)
   help                this text
 
 Selector ids: benchmark, uniform, big_loss, small_loss, grad_norm, adaboost,

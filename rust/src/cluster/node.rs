@@ -11,12 +11,13 @@
 use std::sync::Arc;
 
 use crate::cluster::ring::{HashRing, NodeId, RingSchedule};
-use crate::cluster::transport::Message;
+use crate::cluster::transport::{Message, SharedTelemetry, TelemetrySnapshot};
+use crate::obs::{TickObserver, TickSample};
 use crate::pipeline::{gather, Batch, BatchProducer, Loader};
 use crate::runtime::Backend;
 use crate::selection::AdaSnapshot;
 use crate::stream::source::StreamSource;
-use crate::stream::tick::{fnv_fold, TickEngine, FNV_OFFSET};
+use crate::stream::tick::{fnv_fold, TickEngine, TickOutcome, FNV_OFFSET};
 use crate::util::timer::PhaseTimer;
 
 /// Feeds a node's loader: batch `id` is stream tick `first_tick + id`,
@@ -107,6 +108,10 @@ pub struct ClusterNode<B: Backend> {
     pub alive: bool,
     /// samples_trained at the last merge (merge weights = volume since)
     trained_at_last_merge: u64,
+    /// telemetry sinks — strictly read-only over tick state, so both stay
+    /// off the digest path (see `obs`); None keeps the node silent
+    observer: Option<TickObserver>,
+    telemetry_out: Option<Arc<SharedTelemetry>>,
 }
 
 impl<B: Backend> ClusterNode<B> {
@@ -158,7 +163,28 @@ impl<B: Backend> ClusterNode<B> {
             failed: None,
             alive: true,
             trained_at_last_merge: 0,
+            observer: None,
+            telemetry_out: None,
         }
+    }
+
+    /// Attach a registry/trace observer. Per-node series get a
+    /// `{node="<id>"}` label; `trace` journals one event per tick.
+    pub fn attach_observer(&mut self, trace: Option<crate::obs::TraceHandle>) {
+        self.observer = Some(TickObserver::new(Some(self.id), trace));
+    }
+
+    /// Attach the lock-free mailbox a heartbeat side thread samples
+    /// (process workers piggyback it on `Heartbeat`).
+    pub fn attach_telemetry_out(&mut self, out: Arc<SharedTelemetry>) {
+        self.telemetry_out = Some(out);
+    }
+
+    /// Drop the observer (and with it its trace sender). Must happen
+    /// before the owning journal's `finish()` or the writer-thread join
+    /// would wait on this sender forever.
+    pub fn detach_observer(&mut self) {
+        self.observer = None;
     }
 
     /// Process ticks `[next_tick, end_tick)`. Errors are captured in
@@ -200,6 +226,7 @@ impl<B: Backend> ClusterNode<B> {
                     }
                     self.tick_digests.push(out.digest);
                     self.digest = fnv_fold(self.digest, out.digest);
+                    self.publish_telemetry(tick, &out);
                 }
                 Err(e) => {
                     self.failed = Some(format!("node {}: {e:#}", self.id));
@@ -207,6 +234,49 @@ impl<B: Backend> ClusterNode<B> {
                 }
             }
             self.next_tick += 1;
+        }
+    }
+
+    /// Publish one tick's telemetry to whatever sinks are attached.
+    /// Backfill ticks deliberately skip this: they replay another node's
+    /// share out of order, which would break per-node tick contiguity in
+    /// the journal and double-count rows in the per-node rates.
+    fn publish_telemetry(&mut self, tick: u64, out: &TickOutcome) {
+        if self.observer.is_none() && self.telemetry_out.is_none() {
+            return;
+        }
+        let telem = self.engine.telemetry();
+        if let Some(sink) = &self.telemetry_out {
+            sink.store(TelemetrySnapshot {
+                ticks: self.tick_digests.len() as u64,
+                samples_seen: telem.samples_seen,
+                samples_trained: telem.samples_trained,
+                samples_replayed: telem.samples_replayed,
+                drift_detections: telem.drift_detections,
+                store_len: telem.store_len,
+            });
+        }
+        if let Some(obs) = self.observer.as_mut() {
+            let counters = self.engine.store.counters();
+            obs.observe(TickSample {
+                tick,
+                gamma: self.engine.effective_gamma() as f32,
+                arrivals: out.arrivals,
+                trained: out.trained,
+                replayed: out.replayed,
+                forward_total: telem.samples_forward,
+                drift_total: telem.drift_detections,
+                weights: self.engine.policy.weight_pairs(),
+                store_live: self.engine.store.len(),
+                store_capacity: self.engine.store.capacity(),
+                store_hits: counters.hits,
+                store_misses: counters.misses,
+                store_evictions: counters.evictions,
+                // nodes see only their shard; the coordinator owns the
+                // cluster-wide rolling window
+                rolling: None,
+                phases: &self.phases,
+            });
         }
     }
 

@@ -37,11 +37,12 @@ use crate::cluster::trainer::{
     NodeSummary, REMAP_SAMPLE,
 };
 use crate::cluster::transport::{
-    ChurnOrder, Message, GOSSIP_DELTA, GOSSIP_FULL, GOSSIP_NONE,
+    ChurnOrder, Message, TelemetrySnapshot, GOSSIP_DELTA, GOSSIP_FULL, GOSSIP_NONE,
 };
 use crate::cluster::wire;
 use crate::config::ClusterConfig;
 use crate::metrics::rolling::{RollingPoint, RollingWindow};
+use crate::obs::{self, TraceJournal};
 use crate::runtime::{Backend, NativeBackend, TaskKind};
 use crate::stream::source::{build_source, StreamKnobs};
 use crate::stream::tick::{fnv_fold, FNV_OFFSET};
@@ -121,19 +122,31 @@ impl Worker {
 
     /// Next non-heartbeat frame, or `None` when the worker is dead
     /// (closed connection or stale heartbeat — the latter also SIGKILLs).
+    /// Heartbeats are consumed here: `last_heard` was already stamped by
+    /// the reader thread, and the piggybacked telemetry snapshot is
+    /// published as per-node registry gauges for the status endpoint.
     fn recv(&mut self) -> Option<Message> {
         loop {
             match self.rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(Some(Message::Heartbeat { .. })) => continue,
+                Ok(Some(Message::Heartbeat { from, telemetry })) => {
+                    publish_worker_heartbeat(from, &telemetry);
+                    continue;
+                }
                 Ok(Some(m)) => return Some(m),
                 Ok(None) | Err(mpsc::RecvTimeoutError::Disconnected) => {
                     self.crashed = true;
                     return None;
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
-                    let stale = self.last_heard.lock().unwrap().elapsed() > STALE_AFTER;
-                    if stale {
-                        log::warn!("worker {}: heartbeats stopped, declaring dead", self.id);
+                    let staleness = self.last_heard.lock().unwrap().elapsed();
+                    if staleness > STALE_AFTER {
+                        log::warn!(
+                            "worker {}: silent for {:.1}s (stale threshold {}s) — \
+                             declaring dead",
+                            self.id,
+                            staleness.as_secs_f64(),
+                            STALE_AFTER.as_secs()
+                        );
                         if let Some(c) = self.child.as_mut() {
                             let _ = c.kill();
                         }
@@ -151,6 +164,25 @@ impl Worker {
             let _ = c.wait();
         }
     }
+}
+
+/// Publish one worker's heartbeat telemetry as per-node gauges. The
+/// heartbeat-age trick: the gauge stores coordinator uptime *at receipt*,
+/// so a scraper (or `/status`) computes age as `uptime_now - value`
+/// without any wall-clock in the registry.
+fn publish_worker_heartbeat(id: NodeId, t: &TelemetrySnapshot) {
+    let reg = obs::registry();
+    let node = id.to_string();
+    let gauge = |name: &str, v: f64| {
+        reg.gauge(&obs::series(name, &[("node", node.as_str())])).set(v);
+    };
+    gauge("adaselection_node_heartbeat_uptime_seconds", obs::uptime_seconds());
+    gauge("adaselection_node_ticks_total", t.ticks as f64);
+    gauge("adaselection_node_samples_seen", t.samples_seen as f64);
+    gauge("adaselection_node_samples_trained", t.samples_trained as f64);
+    gauge("adaselection_node_samples_replayed", t.samples_replayed as f64);
+    gauge("adaselection_node_drift_detections", t.drift_detections as f64);
+    gauge("adaselection_node_store_live", t.store_len as f64);
 }
 
 fn reader_thread(
@@ -193,6 +225,10 @@ pub struct Coordinator {
     merges: u64,
     gossip_bytes: u64,
     merge_bytes: u64,
+    /// coordinator-side trace journal (`--trace PATH` writes gossip/merge
+    /// events here; each worker process journals its ticks to
+    /// `PATH.node<id>`)
+    journal: Option<TraceJournal>,
 }
 
 impl Coordinator {
@@ -210,6 +246,10 @@ impl Coordinator {
         let cfg_json = cfg.to_json().to_string();
         let current_ring =
             HashRing::with_nodes(cfg.stream.seed, cfg.vnodes, 0..cfg.nodes);
+        let journal = match &cfg.stream.trace {
+            Some(path) => Some(TraceJournal::open(path)?),
+            None => None,
+        };
         Ok(Coordinator {
             cfg,
             cfg_json,
@@ -226,7 +266,15 @@ impl Coordinator {
             merges: 0,
             gossip_bytes: 0,
             merge_bytes: 0,
+            journal,
         })
+    }
+
+    /// Journal one coordinator-side wire event (gossip relay / merge).
+    fn trace_event(&self, kind: &str, tick: u64, bytes: u64) {
+        if let Some(j) = &self.journal {
+            j.handle().emit_wire_event(kind, tick, bytes);
+        }
     }
 
     fn spawn_child(&self, node: NodeId) -> anyhow::Result<Child> {
@@ -597,6 +645,24 @@ impl Coordinator {
             .map(|w| std::mem::take(&mut w.barrier_preq))
             .collect();
         fold_preq_records(&per_node, classification, roll_loss, roll_acc, rolling);
+        // fleet-wide gauges for the status endpoint (per-node detail comes
+        // in over the heartbeats)
+        let reg = obs::registry();
+        let loss = roll_loss.mean();
+        if loss.is_finite() {
+            reg.gauge("adaselection_rolling_loss").set(loss);
+        }
+        let acc = roll_acc.mean();
+        if classification && acc.is_finite() {
+            reg.gauge("adaselection_rolling_acc").set(acc);
+        }
+        let live: usize = self
+            .workers
+            .iter()
+            .filter(|w| w.alive && !w.crashed)
+            .map(|w| w.store_len)
+            .sum();
+        reg.gauge("adaselection_store_live").set(live as f64);
     }
 
     /// Run the whole job. Consumes the coordinator.
@@ -608,6 +674,15 @@ impl Coordinator {
         }
         for w in &mut self.workers {
             w.reap();
+        }
+        // all trace senders are transient (per-event handles), so the
+        // writer thread drains and exits as soon as the journal's own
+        // sender drops inside finish()
+        if let Some(j) = self.journal.take() {
+            let finished = j.finish();
+            if r.is_ok() {
+                finished?;
+            }
         }
         r
     }
@@ -771,6 +846,7 @@ impl Coordinator {
                 let bytes = self.relay_gossip(gossip_mode);
                 self.gossip_bytes += bytes;
                 self.gossip_rounds += 1;
+                self.trace_event("gossip", sync, bytes);
             }
 
             if is_join {
@@ -786,6 +862,7 @@ impl Coordinator {
                 let bytes = self.do_merge()?;
                 self.merge_bytes += bytes;
                 self.merges += 1;
+                self.trace_event("merge", sync, bytes);
             }
             prev = sync;
         }
@@ -952,10 +1029,12 @@ impl Coordinator {
         let bytes = self.relay_gossip(GOSSIP_FULL);
         self.gossip_bytes += bytes;
         self.gossip_rounds += 1;
+        self.trace_event("gossip", sync, bytes);
         if cadence_merge {
             let bytes = self.do_merge()?;
             self.merge_bytes += bytes;
             self.merges += 1;
+            self.trace_event("merge", sync, bytes);
         }
         Ok(())
     }

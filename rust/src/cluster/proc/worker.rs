@@ -28,9 +28,12 @@ use std::sync::{Arc, Mutex};
 use crate::cluster::node::ClusterNode;
 use crate::cluster::ring::NodeId;
 use crate::cluster::trainer::{build_ring_schedule_with, make_engine, replay_budget};
-use crate::cluster::transport::{ChurnOrder, Message, GOSSIP_FULL, GOSSIP_NONE};
+use crate::cluster::transport::{
+    ChurnOrder, Message, SharedTelemetry, GOSSIP_FULL, GOSSIP_NONE,
+};
 use crate::cluster::wire;
 use crate::config::ClusterConfig;
+use crate::obs::TraceJournal;
 use crate::runtime::{Backend, NativeBackend};
 use crate::stream::source::{build_source, StreamKnobs};
 use crate::util::json::Json;
@@ -54,6 +57,22 @@ struct WorkerState {
     node: ClusterNode<NativeBackend>,
     /// unplanned kills applied so far — the schedule recompile input
     chaos: Vec<(u64, NodeId)>,
+    /// per-worker trace journal (`--trace PATH` writes `PATH.node<id>`
+    /// here — each process owns its own file, no cross-process locking)
+    journal: Option<TraceJournal>,
+}
+
+impl WorkerState {
+    /// Detach the trace sender from the node, then close the journal.
+    /// Order matters: `finish()` joins the writer thread, which only
+    /// exits once every sender is gone.
+    fn finish_journal(&mut self) -> anyhow::Result<()> {
+        self.node.detach_observer();
+        if let Some(j) = self.journal.take() {
+            j.finish()?;
+        }
+        Ok(())
+    }
 }
 
 fn build_state(
@@ -61,6 +80,7 @@ fn build_state(
     node_id: NodeId,
     first_tick: u64,
     chaos: Vec<(u64, NodeId)>,
+    telemetry: &Arc<SharedTelemetry>,
 ) -> anyhow::Result<WorkerState> {
     let cfg = ClusterConfig::from_json(
         &Json::parse(config_json).map_err(|e| anyhow::anyhow!("assign config: {e}"))?,
@@ -86,7 +106,7 @@ fn build_state(
     let state = backend.init_state(&meta.name, s.seed as i32)?;
     let engine = make_engine(&cfg, node_id, b, replay_budget(&cfg, b))?;
     let (rings, _) = build_ring_schedule_with(&cfg, &chaos);
-    let node = ClusterNode::new(
+    let mut node = ClusterNode::new(
         node_id,
         backend,
         state,
@@ -101,7 +121,17 @@ fn build_state(
         s.workers,
         s.capacity,
     );
-    Ok(WorkerState { cfg, node, chaos })
+    node.attach_telemetry_out(telemetry.clone());
+    let journal = match &s.trace {
+        Some(path) => {
+            let per_node =
+                std::path::PathBuf::from(format!("{}.node{}", path.display(), node_id));
+            Some(TraceJournal::open(&per_node)?)
+        }
+        None => None,
+    };
+    node.attach_observer(journal.as_ref().map(|j| j.handle()));
+    Ok(WorkerState { cfg, node, chaos, journal })
 }
 
 /// Apply one crash-churn order: recompile the ownership timeline with the
@@ -173,14 +203,19 @@ pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
     send_msg(&writer, &Message::Hello { from: node_id })?;
 
     // heartbeats from a side thread: a long training segment must not
-    // read as a dead process
+    // read as a dead process. Each beat piggybacks the latest telemetry
+    // snapshot the training loop published to the shared mailbox.
     let stop = Arc::new(AtomicBool::new(false));
+    let telemetry = Arc::new(SharedTelemetry::default());
     let hb = {
         let writer = writer.clone();
         let stop = stop.clone();
+        let telemetry = telemetry.clone();
         std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
-                if send_msg(&writer, &Message::Heartbeat { from: node_id }).is_err() {
+                let beat =
+                    Message::Heartbeat { from: node_id, telemetry: telemetry.load() };
+                if send_msg(&writer, &beat).is_err() {
                     return; // coordinator gone; main loop will notice too
                 }
                 std::thread::sleep(std::time::Duration::from_millis(HEARTBEAT_MS));
@@ -188,7 +223,7 @@ pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
         })
     };
 
-    let result = worker_loop(&mut reader, &writer, node_id);
+    let result = worker_loop(&mut reader, &writer, node_id, &telemetry);
     stop.store(true, Ordering::Relaxed);
     // on error, report it on the control channel (best effort) so the
     // coordinator aborts with the cause instead of inferring a crash
@@ -218,6 +253,7 @@ fn worker_loop(
     reader: &mut TcpStream,
     writer: &Mutex<TcpStream>,
     node_id: NodeId,
+    telemetry: &Arc<SharedTelemetry>,
 ) -> anyhow::Result<()> {
     let mut ws: Option<WorkerState> = None;
     loop {
@@ -232,7 +268,7 @@ fn worker_loop(
                     "worker {node_id}: assigned someone else's id {node}"
                 );
                 log::info!("worker {node_id}: assigned shard from tick {first_tick}");
-                ws = Some(build_state(&config, node, first_tick, chaos)?);
+                ws = Some(build_state(&config, node, first_tick, chaos, telemetry)?);
             }
             Message::StoreGossip { entries, .. } => {
                 let ws = ws.as_mut().ok_or_else(|| {
@@ -257,6 +293,9 @@ fn worker_loop(
             }
             Message::Shutdown => {
                 log::info!("worker {node_id}: shutdown");
+                if let Some(ws) = ws.as_mut() {
+                    ws.finish_journal()?;
+                }
                 return Ok(());
             }
             // coordinator never heartbeats, but tolerating one is free

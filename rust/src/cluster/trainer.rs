@@ -41,6 +41,7 @@ use crate::cluster::transport::{Loopback, Message, Transport};
 use crate::cluster::wire;
 use crate::config::ClusterConfig;
 use crate::metrics::rolling::{RollingPoint, RollingWindow};
+use crate::obs::{self, StatusServer, TraceJournal};
 use crate::runtime::{average_states, Backend, NativeBackend, TaskKind, Tensor};
 use crate::selection::adaselection::merge_snapshots;
 use crate::selection::policy::Policy;
@@ -405,11 +406,50 @@ fn fold_preq(
     fold_preq_records(&per_node, classification, roll_loss, roll_acc, rolling);
 }
 
+/// Publish fleet-wide rolling gauges plus per-node liveness gauges at a
+/// sync barrier — the thread-mode equivalent of the heartbeat telemetry
+/// the process coordinator aggregates, so `/status` reads the same
+/// series in both worker modes.
+fn publish_barrier_gauges(
+    nodes: &[ClusterNode<NativeBackend>],
+    classification: bool,
+    roll_loss: &RollingWindow,
+    roll_acc: &RollingWindow,
+) {
+    let reg = obs::registry();
+    let loss = roll_loss.mean();
+    if loss.is_finite() {
+        reg.gauge("adaselection_rolling_loss").set(loss);
+    }
+    let acc = roll_acc.mean();
+    if classification && acc.is_finite() {
+        reg.gauge("adaselection_rolling_acc").set(acc);
+    }
+    let mut live = 0usize;
+    for n in nodes.iter().filter(|n| n.alive) {
+        live += n.engine.store.len();
+        let id = n.id.to_string();
+        let gauge = |name: &str, v: f64| {
+            reg.gauge(&obs::series(name, &[("node", id.as_str())])).set(v);
+        };
+        gauge("adaselection_node_heartbeat_uptime_seconds", obs::uptime_seconds());
+        gauge("adaselection_node_ticks_total", n.tick_digests.len() as f64);
+        gauge("adaselection_node_store_live", n.engine.store.len() as f64);
+    }
+    reg.gauge("adaselection_store_live").set(live as f64);
+}
+
 /// Run a full cluster job on the native backend. Dispatches on
 /// `worker_mode`: the in-process thread runtime below, or the
 /// multi-process runtime (`cluster::proc`) spawning one OS process per
 /// node from the current executable.
 pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
+    // the status endpoint serves both worker modes from the coordinator
+    // process; it only reads the registry, never the training state
+    let _status = match &cfg.stream.status_addr {
+        Some(addr) => Some(StatusServer::start(addr)?),
+        None => None,
+    };
     if cfg.worker_mode == "processes" {
         return crate::cluster::proc::run(cfg);
     }
@@ -467,6 +507,18 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
         ));
     }
 
+    // one journal for the whole in-process cluster: per-node tick events
+    // interleave across nodes but stay tick-contiguous within each node,
+    // and gossip/merge events are emitted coordinator-side
+    let journal = match &s.trace {
+        Some(path) => Some(TraceJournal::open(path)?),
+        None => None,
+    };
+    let trace = journal.as_ref().map(|j| j.handle());
+    for n in nodes.iter_mut() {
+        n.attach_observer(trace.clone());
+    }
+
     log::info!(
         "cluster start: nodes={} vnodes={} stream={} γ={} B={} ticks={} gossip={}({}) merge={} transport={} kill@{} join@{}",
         cfg.nodes,
@@ -495,6 +547,7 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
     for &sync in &sync_points(cfg) {
         run_segment(&mut nodes, sync)?;
         fold_preq(&mut nodes, classification, &mut roll_loss, &mut roll_acc, &mut rolling);
+        publish_barrier_gauges(&nodes, classification, &roll_loss, &roll_acc);
 
         // churn first: a killed node must not gossip, a joined node must
         if cfg.kill_at > 0 && cfg.kill_at as u64 == sync {
@@ -531,10 +584,18 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
                 s.workers,
                 s.capacity,
             ));
+            nodes
+                .last_mut()
+                .expect("joiner just pushed")
+                .attach_observer(trace.clone());
             // seed the newcomer's store right away — always with full
             // snapshots, whatever the steady-state gossip mode
-            gossip_bytes += gossip_stores(&mut nodes, transport.as_ref(), true)?;
+            let bytes = gossip_stores(&mut nodes, transport.as_ref(), true)?;
+            gossip_bytes += bytes;
             gossip_rounds += 1;
+            if let Some(t) = &trace {
+                t.emit_wire_event("gossip", sync, bytes);
+            }
             did_gossip = true;
             log::info!("cluster: node {id} joined at tick {sync}");
         }
@@ -546,14 +607,32 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
             {
                 let full =
                     !delta_gossip || gossip_rounds % cfg.full_gossip_every as u64 == 0;
-                gossip_bytes += gossip_stores(&mut nodes, transport.as_ref(), full)?;
+                let bytes = gossip_stores(&mut nodes, transport.as_ref(), full)?;
+                gossip_bytes += bytes;
                 gossip_rounds += 1;
+                if let Some(t) = &trace {
+                    t.emit_wire_event("gossip", sync, bytes);
+                }
             }
             if cfg.merge_every > 0 && sync % cfg.merge_every as u64 == 0 {
-                merge_bytes += merge_models(&mut nodes, transport.as_ref())?;
+                let bytes = merge_models(&mut nodes, transport.as_ref())?;
+                merge_bytes += bytes;
                 merges += 1;
+                if let Some(t) = &trace {
+                    t.emit_wire_event("merge", sync, bytes);
+                }
             }
         }
+    }
+
+    // release every trace sender (node observers + the coordinator handle)
+    // before finish() joins the journal's writer thread
+    for n in nodes.iter_mut() {
+        n.detach_observer();
+    }
+    drop(trace);
+    if let Some(j) = journal {
+        j.finish()?;
     }
 
     let elapsed = clock.elapsed_secs();

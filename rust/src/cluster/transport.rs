@@ -119,7 +119,58 @@ pub enum Message {
     Shutdown,
     /// Liveness keep-alive (worker → coordinator, from a side thread, so
     /// a hung process is distinguishable from a long training segment).
-    Heartbeat { from: NodeId },
+    /// Piggybacks a compact telemetry snapshot so the coordinator can
+    /// aggregate fleet-wide metrics without a second channel.
+    Heartbeat { from: NodeId, telemetry: TelemetrySnapshot },
+}
+
+/// Compact per-worker counters riding on `Heartbeat`. All cumulative
+/// since worker start; the coordinator publishes them as per-node gauges.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TelemetrySnapshot {
+    pub ticks: u64,
+    pub samples_seen: u64,
+    pub samples_trained: u64,
+    pub samples_replayed: u64,
+    pub drift_detections: u64,
+    pub store_len: u64,
+}
+
+/// Lock-free mailbox a worker's training loop writes each tick and its
+/// heartbeat side thread reads — relaxed ordering is fine, heartbeats
+/// only need an eventually-consistent view.
+#[derive(Debug, Default)]
+pub struct SharedTelemetry {
+    ticks: std::sync::atomic::AtomicU64,
+    samples_seen: std::sync::atomic::AtomicU64,
+    samples_trained: std::sync::atomic::AtomicU64,
+    samples_replayed: std::sync::atomic::AtomicU64,
+    drift_detections: std::sync::atomic::AtomicU64,
+    store_len: std::sync::atomic::AtomicU64,
+}
+
+impl SharedTelemetry {
+    pub fn store(&self, snap: TelemetrySnapshot) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.ticks.store(snap.ticks, Relaxed);
+        self.samples_seen.store(snap.samples_seen, Relaxed);
+        self.samples_trained.store(snap.samples_trained, Relaxed);
+        self.samples_replayed.store(snap.samples_replayed, Relaxed);
+        self.drift_detections.store(snap.drift_detections, Relaxed);
+        self.store_len.store(snap.store_len, Relaxed);
+    }
+
+    pub fn load(&self) -> TelemetrySnapshot {
+        use std::sync::atomic::Ordering::Relaxed;
+        TelemetrySnapshot {
+            ticks: self.ticks.load(Relaxed),
+            samples_seen: self.samples_seen.load(Relaxed),
+            samples_trained: self.samples_trained.load(Relaxed),
+            samples_replayed: self.samples_replayed.load(Relaxed),
+            drift_detections: self.drift_detections.load(Relaxed),
+            store_len: self.store_len.load(Relaxed),
+        }
+    }
 }
 
 impl Message {
@@ -132,7 +183,7 @@ impl Message {
             | Message::State { from, .. }
             | Message::Hello { from }
             | Message::BarrierReady { from, .. }
-            | Message::Heartbeat { from } => *from,
+            | Message::Heartbeat { from, .. } => *from,
             Message::Assign { node, .. } => *node,
             Message::BarrierGo { .. } | Message::MergePayload { .. } | Message::Shutdown => {
                 NodeId::MAX

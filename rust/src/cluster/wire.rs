@@ -27,7 +27,7 @@ use std::sync::Arc;
 
 use crate::cluster::node::NodePreq;
 use crate::cluster::ring::NodeId;
-use crate::cluster::transport::{ChurnOrder, Message};
+use crate::cluster::transport::{ChurnOrder, Message, TelemetrySnapshot};
 use crate::runtime::Tensor;
 use crate::selection::AdaSnapshot;
 use crate::stream::InstanceRecord;
@@ -119,7 +119,7 @@ pub fn payload_len(msg: &Message) -> usize {
             1 + tensors_len(tensors) + policy_len(policy)
         }
         Message::Shutdown => 1,
-        Message::Heartbeat { .. } => 1 + 8,
+        Message::Heartbeat { .. } => 1 + 8 + 6 * 8,
     }
 }
 
@@ -326,9 +326,15 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
             put_policy(&mut b, policy);
         }
         Message::Shutdown => b.push(TAG_SHUTDOWN),
-        Message::Heartbeat { from } => {
+        Message::Heartbeat { from, telemetry } => {
             b.push(TAG_HEARTBEAT);
             put_u64(&mut b, *from as u64);
+            put_u64(&mut b, telemetry.ticks);
+            put_u64(&mut b, telemetry.samples_seen);
+            put_u64(&mut b, telemetry.samples_trained);
+            put_u64(&mut b, telemetry.samples_replayed);
+            put_u64(&mut b, telemetry.drift_detections);
+            put_u64(&mut b, telemetry.store_len);
         }
     }
     b
@@ -603,7 +609,17 @@ fn decode_payload(payload: &[u8]) -> anyhow::Result<Message> {
             Message::MergePayload { tensors, policy }
         }
         TAG_SHUTDOWN => Message::Shutdown,
-        TAG_HEARTBEAT => Message::Heartbeat { from: c.u64()? as NodeId },
+        TAG_HEARTBEAT => Message::Heartbeat {
+            from: c.u64()? as NodeId,
+            telemetry: TelemetrySnapshot {
+                ticks: c.u64()?,
+                samples_seen: c.u64()?,
+                samples_trained: c.u64()?,
+                samples_replayed: c.u64()?,
+                drift_detections: c.u64()?,
+                store_len: c.u64()?,
+            },
+        },
         other => anyhow::bail!("wire: unknown message tag {other}"),
     };
     c.done()?;
@@ -1032,7 +1048,17 @@ mod tests {
             },
             Message::MergePayload { tensors: Vec::new(), policy: None },
             Message::Shutdown,
-            Message::Heartbeat { from: 7 },
+            Message::Heartbeat {
+                from: 7,
+                telemetry: TelemetrySnapshot {
+                    ticks: 41,
+                    samples_seen: 1312,
+                    samples_trained: 650,
+                    samples_replayed: 12,
+                    drift_detections: 2,
+                    store_len: 96,
+                },
+            },
         ];
         for msg in &msgs {
             check_encodable(msg).unwrap();

@@ -258,6 +258,13 @@ pub struct StreamConfig {
     pub checkpoint_every: usize,
     /// continue from `checkpoint` instead of starting fresh
     pub resume: bool,
+    /// structured trace journal path (schema-v1 JSONL, one event per
+    /// processed tick; see `obs::trace`). Off the digest path: tracing
+    /// on/off never changes selection.
+    pub trace: Option<PathBuf>,
+    /// serve Prometheus `/metrics` + JSON `/status` on this address
+    /// (e.g. `127.0.0.1:9464`; port 0 picks an ephemeral port)
+    pub status_addr: Option<String>,
     pub artifacts_dir: PathBuf,
 }
 
@@ -290,6 +297,8 @@ impl Default for StreamConfig {
             checkpoint: None,
             checkpoint_every: 0,
             resume: false,
+            trace: None,
+            status_addr: None,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
         }
     }
@@ -380,6 +389,8 @@ impl StreamConfig {
             "checkpoint" => self.checkpoint = Some(PathBuf::from(value)),
             "checkpoint-every" => self.checkpoint_every = value.parse()?,
             "resume" => self.resume = parse_bool(value)?,
+            "trace" => self.trace = Some(PathBuf::from(value)),
+            "status-addr" => self.status_addr = Some(value.into()),
             "artifacts" => self.artifacts_dir = PathBuf::from(value),
             other => anyhow::bail!("unknown stream config key '--{other}'"),
         }
@@ -477,6 +488,16 @@ impl StreamConfig {
             Json::Num(self.checkpoint_every as f64),
         );
         m.insert("resume".into(), Json::Bool(self.resume));
+        // operational telemetry knobs: serialized for provenance (and so
+        // process workers inherit them via the Assign config payload) but
+        // deliberately NOT part of identity_json — telemetry must never
+        // gate a resume
+        if let Some(p) = &self.trace {
+            m.insert("trace".into(), Json::Str(p.display().to_string()));
+        }
+        if let Some(a) = &self.status_addr {
+            m.insert("status-addr".into(), Json::Str(a.clone()));
+        }
         Json::Obj(m)
     }
 }

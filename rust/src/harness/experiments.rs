@@ -436,6 +436,24 @@ fn ablate_rule<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
     Ok(())
 }
 
+/// Per-phase seconds columns shared by the stream/cluster comparison
+/// summaries. The values are the run's `util::timer` profile — the same
+/// accounting the telemetry registry publishes as
+/// `adaselection_phase_seconds` — so the CSVs and `/metrics` can never
+/// disagree, and neither experiment keeps its own stopwatch plumbing.
+const CMP_PHASES: &[&str] = &["data", "forward", "select", "store", "replay", "update", "eval"];
+
+fn phase_headers() -> Vec<String> {
+    CMP_PHASES.iter().map(|p| format!("{p}_s")).collect()
+}
+
+fn phase_cells(phases: &crate::util::timer::PhaseTimer) -> Vec<String> {
+    CMP_PHASES
+        .iter()
+        .map(|p| format!("{:.3}", phases.total_secs(p)))
+        .collect()
+}
+
 /// Streaming extension: AdaSelection vs uniform vs full-batch benchmark on
 /// the drift-classification stream at an equal train-tick budget. Emits the
 /// per-tick rolling-loss trace and a summary row per selector.
@@ -451,7 +469,7 @@ fn stream_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result
     let mut trace = crate::metrics::csv::CsvTable::new(vec![
         "selector", "tick", "rolling_loss", "rolling_acc",
     ]);
-    let mut summary = crate::metrics::csv::CsvTable::new(vec![
+    let mut summary_cols: Vec<String> = [
         "selector",
         "final_rolling_loss",
         "final_rolling_acc",
@@ -460,7 +478,12 @@ fn stream_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result
         "samples_forward",
         "store_live",
         "store_evictions",
-    ]);
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    summary_cols.extend(phase_headers());
+    let mut summary = crate::metrics::csv::CsvTable::new(summary_cols);
     for selector in [
         "adaselection",
         "uniform",
@@ -486,7 +509,7 @@ fn stream_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result
                 format!("{:.6}", p.acc),
             ]);
         }
-        summary.push(vec![
+        let mut row = vec![
             selector.to_string(),
             format!("{:.6}", r.final_rolling_loss),
             format!("{:.6}", r.final_rolling_acc),
@@ -495,7 +518,9 @@ fn stream_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Result
             r.samples_forward.to_string(),
             r.store_len.to_string(),
             r.store_counters.evictions.to_string(),
-        ]);
+        ];
+        row.extend(phase_cells(&r.phases));
+        summary.push(row);
     }
     trace.save(&opts.out_dir.join("stream_cmp_trace.csv"))?;
     summary.save(&opts.out_dir.join("stream_cmp_summary.csv"))?;
@@ -519,7 +544,7 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
         return Ok(());
     }
     let ticks = if opts.quick { 80 } else { 400 };
-    let mut summary = crate::metrics::csv::CsvTable::new(vec![
+    let mut summary_cols: Vec<String> = [
         "nodes",
         "final_rolling_loss",
         "loss_vs_1node_%",
@@ -533,7 +558,14 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
         "gossip_bytes",
         "merge_bytes",
         "workers",
-    ]);
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    // phase columns sum over thread-mode nodes; process workers time their
+    // phases in their own address space, so the processes row reads 0
+    summary_cols.extend(phase_headers());
+    let mut summary = crate::metrics::csv::CsvTable::new(summary_cols);
     let mut trace = crate::metrics::csv::CsvTable::new(vec![
         "nodes", "gossip", "workers", "tick", "rolling_loss", "rolling_acc",
     ]);
@@ -584,7 +616,7 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
                 format!("{:.6}", p.acc),
             ]);
         }
-        summary.push(vec![
+        let mut row = vec![
             nodes.to_string(),
             format!("{:.6}", r.final_rolling_loss),
             format!("{:+.1}", 100.0 * (r.final_rolling_loss - base_loss) / base_loss),
@@ -598,7 +630,9 @@ fn cluster_cmp<B: Backend>(engine: &mut B, opts: &SweepOptions) -> anyhow::Resul
             r.gossip_bytes.to_string(),
             r.merge_bytes.to_string(),
             workers.to_string(),
-        ]);
+        ];
+        row.extend(phase_cells(&r.phases));
+        summary.push(row);
     }
     summary.save(&opts.out_dir.join("cluster_cmp_summary.csv"))?;
     trace.save(&opts.out_dir.join("cluster_cmp_trace.csv"))?;

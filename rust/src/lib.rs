@@ -46,6 +46,7 @@ pub mod config;
 pub mod data;
 pub mod harness;
 pub mod metrics;
+pub mod obs;
 pub mod pipeline;
 pub mod runtime;
 pub mod selection;

@@ -43,6 +43,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         }
         "inspect-artifacts" => cmd_inspect(args),
         "gen-data" => cmd_gen_data(args),
+        "bench-diff" => cmd_bench_diff(args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -329,6 +330,61 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
         );
     }
     println!("{} artifacts total", m.artifacts.len());
+    Ok(())
+}
+
+/// CI perf gate: compare this run's `BENCH_*.json` files against a
+/// baseline directory. A missing baseline directory passes trivially
+/// (the first run of the gate has no previous artifact to fetch).
+fn cmd_bench_diff(args: &Args) -> anyhow::Result<()> {
+    let baseline = PathBuf::from(
+        args.flag("baseline")
+            .ok_or_else(|| anyhow::anyhow!("bench-diff requires --baseline DIR"))?,
+    );
+    let current = PathBuf::from(args.flag_or("current", "."));
+    let tolerance: f64 = args.flag_or("tolerance", "0.15").parse()?;
+    if !baseline.is_dir() {
+        println!(
+            "bench-diff: baseline {} not found; nothing to compare (pass)",
+            baseline.display()
+        );
+        return Ok(());
+    }
+    let d = adaselection::util::bench::diff(&baseline, &current, tolerance)?;
+    println!(
+        "bench-diff: {} compared, {} unmatched, tolerance {:.0}%",
+        d.compared.len(),
+        d.unmatched.len(),
+        tolerance * 100.0
+    );
+    for (bench, name, old, new) in &d.compared {
+        println!(
+            "  {:<44} {:>12} -> {:>12} ({:+.1}%)",
+            format!("{bench}/{name}"),
+            adaselection::util::bench::fmt_ns(*old),
+            adaselection::util::bench::fmt_ns(*new),
+            100.0 * (new - old) / old.max(1e-9)
+        );
+    }
+    for key in &d.unmatched {
+        println!("  {key}: not compared");
+    }
+    if !d.regressions.is_empty() {
+        for (bench, name, old, new) in &d.regressions {
+            eprintln!(
+                "REGRESSION {bench}/{name}: median {} -> {} (>{:.0}% slower)",
+                adaselection::util::bench::fmt_ns(*old),
+                adaselection::util::bench::fmt_ns(*new),
+                tolerance * 100.0
+            );
+        }
+        anyhow::bail!(
+            "bench-diff: {} benchmark(s) regressed past {:.0}%",
+            d.regressions.len(),
+            tolerance * 100.0
+        );
+    }
+    println!("bench-diff: no regressions");
     Ok(())
 }
 

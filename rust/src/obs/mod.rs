@@ -1,0 +1,267 @@
+//! Unified telemetry layer: a process-wide metrics [`registry`], the
+//! per-tick JSONL [`trace`] journal (`--trace PATH`), and the scrapeable
+//! [`status`] endpoint (`--status-addr ADDR`, `/metrics` + `/status`).
+//!
+//! Everything here is strictly *observational*: handles read training
+//! state after it is computed and never feed anything back, so enabling
+//! telemetry cannot change a selection digest (pinned by e2e tests).
+
+pub mod registry;
+pub mod status;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+pub use registry::{registry, series, Counter, Gauge, Histogram, Registry};
+pub use status::StatusServer;
+pub use trace::{TraceHandle, TraceJournal};
+
+use crate::util::timer::PhaseTimer;
+use trace::{PhaseDelta, TickEvent};
+
+/// Seconds since the registry was first touched in this process.
+pub fn uptime_seconds() -> f64 {
+    registry().uptime_seconds()
+}
+
+/// Everything one processed tick reports, assembled by the trainer after
+/// the tick's work (and digest) are final. Counter-like fields that the
+/// engine keeps cumulatively are passed cumulative; the observer
+/// differences them.
+pub struct TickSample<'a> {
+    pub tick: u64,
+    /// Effective γ this tick (drift boosts included).
+    pub gamma: f32,
+    pub arrivals: usize,
+    pub trained: usize,
+    pub replayed: usize,
+    /// Cumulative candidate rows forward-scored.
+    pub forward_total: u64,
+    /// Cumulative drift-detector fires.
+    pub drift_total: u64,
+    /// `(arm id, weight)` pairs for bandit policies.
+    pub weights: Option<Vec<(String, f32)>>,
+    pub store_live: usize,
+    pub store_capacity: usize,
+    pub store_hits: u64,
+    pub store_misses: u64,
+    pub store_evictions: u64,
+    /// `(rolling_loss, rolling_acc)` on prequential-eval ticks.
+    pub rolling: Option<(f32, f32)>,
+    /// The run's cumulative phase accounting.
+    pub phases: &'a PhaseTimer,
+}
+
+/// Per-run bundle of registry handles plus the optional trace emitter.
+///
+/// Handles are resolved once at construction (or on first sight of an
+/// arm/phase label) so the per-tick path is pure atomic stores — the
+/// registry mutex is off the hot loop.
+pub struct TickObserver {
+    node: Option<usize>,
+    trace: Option<TraceHandle>,
+    phase_delta: PhaseDelta,
+    prev_forward: u64,
+    prev_drift: u64,
+    ticks: Arc<Counter>,
+    seen: Arc<Counter>,
+    trained: Arc<Counter>,
+    replayed: Arc<Counter>,
+    forward: Arc<Counter>,
+    drift: Arc<Counter>,
+    gamma: Arc<Gauge>,
+    rolling_loss: Arc<Gauge>,
+    rolling_acc: Arc<Gauge>,
+    store_live: Arc<Gauge>,
+    store_capacity: Arc<Gauge>,
+    store_pressure: Arc<Gauge>,
+    store_hits: Arc<Gauge>,
+    store_misses: Arc<Gauge>,
+    store_evictions: Arc<Gauge>,
+    trained_rows: Arc<Histogram>,
+    arm_gauges: BTreeMap<String, Arc<Gauge>>,
+    phase_gauges: BTreeMap<&'static str, Arc<Gauge>>,
+}
+
+impl TickObserver {
+    /// `node = None` for single-process stream/batch runs (unlabelled
+    /// series); `Some(i)` labels every series `{node="i"}` so concurrent
+    /// cluster nodes stay distinct.
+    pub fn new(node: Option<usize>, trace: Option<TraceHandle>) -> TickObserver {
+        let name = |base: &str| match node {
+            Some(n) => series(base, &[("node", &n.to_string())]),
+            None => base.to_string(),
+        };
+        let r = registry();
+        TickObserver {
+            node,
+            trace,
+            phase_delta: PhaseDelta::default(),
+            prev_forward: 0,
+            prev_drift: 0,
+            ticks: r.counter(&name("adaselection_ticks_total")),
+            seen: r.counter(&name("adaselection_samples_seen_total")),
+            trained: r.counter(&name("adaselection_samples_trained_total")),
+            replayed: r.counter(&name("adaselection_samples_replayed_total")),
+            forward: r.counter(&name("adaselection_samples_forward_total")),
+            drift: r.counter(&name("adaselection_drift_detections_total")),
+            gamma: r.gauge(&name("adaselection_effective_gamma")),
+            rolling_loss: r.gauge(&name("adaselection_rolling_loss")),
+            rolling_acc: r.gauge(&name("adaselection_rolling_acc")),
+            store_live: r.gauge(&name("adaselection_store_live")),
+            store_capacity: r.gauge(&name("adaselection_store_capacity")),
+            store_pressure: r.gauge(&name("adaselection_store_pressure")),
+            store_hits: r.gauge(&name("adaselection_store_hits")),
+            store_misses: r.gauge(&name("adaselection_store_misses")),
+            store_evictions: r.gauge(&name("adaselection_store_evictions")),
+            trained_rows: r.histogram(
+                &name("adaselection_tick_trained_rows"),
+                &[8.0, 16.0, 32.0, 64.0, 128.0, 256.0],
+            ),
+            arm_gauges: BTreeMap::new(),
+            phase_gauges: BTreeMap::new(),
+        }
+    }
+
+    fn labelled(&self, base: &str, key: &'static str, value: &str) -> String {
+        match self.node {
+            Some(n) => series(base, &[("node", &n.to_string()), (key, value)]),
+            None => series(base, &[(key, value)]),
+        }
+    }
+
+    /// Record one processed tick: update the registry and, when tracing,
+    /// enqueue the schema-v1 journal line.
+    pub fn observe(&mut self, s: TickSample<'_>) {
+        self.ticks.inc();
+        self.seen.add(s.arrivals as u64);
+        self.trained.add(s.trained as u64);
+        self.replayed.add(s.replayed as u64);
+        self.forward.add(s.forward_total.saturating_sub(self.prev_forward));
+        self.drift.add(s.drift_total.saturating_sub(self.prev_drift));
+        let forward_this_tick = s.forward_total.saturating_sub(self.prev_forward);
+        self.prev_forward = s.forward_total;
+        self.prev_drift = s.drift_total;
+        self.gamma.set(s.gamma as f64);
+        self.store_live.set(s.store_live as f64);
+        self.store_capacity.set(s.store_capacity as f64);
+        self.store_pressure.set(if s.store_capacity > 0 {
+            s.store_live as f64 / s.store_capacity as f64
+        } else {
+            0.0
+        });
+        self.store_hits.set(s.store_hits as f64);
+        self.store_misses.set(s.store_misses as f64);
+        self.store_evictions.set(s.store_evictions as f64);
+        self.trained_rows.observe(s.trained as f64);
+        if let Some((loss, acc)) = s.rolling {
+            self.rolling_loss.set(loss as f64);
+            if !acc.is_nan() {
+                self.rolling_acc.set(acc as f64);
+            }
+        }
+        if let Some(weights) = &s.weights {
+            for (arm, w) in weights {
+                if !self.arm_gauges.contains_key(arm) {
+                    let g = registry()
+                        .gauge(&self.labelled("adaselection_arm_weight", "arm", arm));
+                    self.arm_gauges.insert(arm.clone(), g);
+                }
+                self.arm_gauges[arm].set(*w as f64);
+            }
+        }
+        for (phase, total) in s.phases.phases() {
+            let g = self.phase_gauges.entry(phase).or_insert_with(|| {
+                registry().gauge(&self.labelled("adaselection_phase_seconds", "phase", phase))
+            });
+            g.set(total.as_secs_f64());
+        }
+        if let Some(trace) = &self.trace {
+            let phases = self.phase_delta.delta(s.phases);
+            let empty: Vec<(String, f32)> = Vec::new();
+            let line = TickEvent {
+                tick: s.tick,
+                node: self.node.unwrap_or(0),
+                gamma: s.gamma,
+                arrivals: s.arrivals,
+                trained: s.trained,
+                replayed: s.replayed,
+                forward: forward_this_tick,
+                drift: s.drift_total,
+                weights: s.weights.as_deref().unwrap_or(&empty),
+                store_live: s.store_live,
+                store_capacity: s.store_capacity,
+                store_hits: s.store_hits,
+                store_misses: s.store_misses,
+                store_evictions: s.store_evictions,
+                phases: &phases,
+                rolling: s.rolling,
+            }
+            .to_line();
+            trace.emit(line);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn observer_updates_registry_and_journal() {
+        let dir = std::env::temp_dir().join(format!("ada_obs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("obs.jsonl");
+        let journal = TraceJournal::open(&path).unwrap();
+        let mut obs = TickObserver::new(Some(91), Some(journal.handle()));
+        let mut phases = PhaseTimer::default();
+        for tick in 0..3u64 {
+            phases.add("forward", Duration::from_millis(1));
+            obs.observe(TickSample {
+                tick,
+                gamma: 0.5,
+                arrivals: 128,
+                trained: 64,
+                replayed: 0,
+                forward_total: (tick + 1) * 64,
+                drift_total: 0,
+                weights: Some(vec![("big_loss".into(), 0.6), ("uniform".into(), 0.4)]),
+                store_live: 10,
+                store_capacity: 100,
+                store_hits: 1,
+                store_misses: 9,
+                store_evictions: 0,
+                rolling: Some((1.0, 0.5)),
+                phases: &phases,
+            });
+        }
+        drop(obs);
+        assert_eq!(journal.finish().unwrap(), 0);
+
+        let r = registry();
+        assert_eq!(r.counter("adaselection_ticks_total{node=\"91\"}").get(), 3);
+        assert_eq!(r.counter("adaselection_samples_seen_total{node=\"91\"}").get(), 3 * 128);
+        // forward was differenced from the cumulative engine counter
+        assert_eq!(r.counter("adaselection_samples_forward_total{node=\"91\"}").get(), 3 * 64);
+        assert_eq!(r.gauge("adaselection_store_pressure{node=\"91\"}").get(), 0.1);
+        assert_eq!(
+            r.gauge("adaselection_arm_weight{node=\"91\",arm=\"big_loss\"}").get(),
+            0.6
+        );
+        assert!(r.gauge("adaselection_phase_seconds{node=\"91\",phase=\"forward\"}").get() > 0.0);
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut expect = 0u64;
+        for line in text.lines() {
+            let ev = trace::validate_v1_line(line).unwrap();
+            assert_eq!(ev.kind, "tick");
+            assert_eq!(ev.node, Some(91));
+            assert_eq!(ev.tick, expect, "journal not tick-contiguous");
+            expect += 1;
+        }
+        assert_eq!(expect, 3);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,345 @@
+//! Process-wide metrics registry: monotonic counters, gauges, and
+//! fixed-bucket histograms behind cheap atomics.
+//!
+//! Handles are registered once (a `Mutex<BTreeMap>` guards the name
+//! space) and sampled anywhere through `Arc`s — the hot loop never takes
+//! the registry lock. Series names carry their labels Prometheus-style
+//! (`adaselection_arm_weight{arm="big_loss"}`); two registrations of the
+//! same name return the same underlying metric.
+//!
+//! The registry is process-wide and cumulative: sequential runs in one
+//! process share series unless they label them apart (the cluster layer
+//! labels per node). Telemetry only *reads* training state, so nothing
+//! here can perturb selection — the digest parity e2es pin that.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge storing an `f64` as its bit pattern.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: cumulative-style bucket counts plus sum/count.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Upper bounds of the finite buckets; an implicit +Inf bucket follows.
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        // CAS loop on the f64 bit pattern: contention here is negligible
+        // (histograms are sampled per tick, not per row)
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// `(upper_bound, cumulative_count)` pairs ending with the +Inf bucket.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.counts.len());
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            let bound = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((bound, acc));
+        }
+        out
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// The registry proper: a guarded name → metric map.
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+    start: Instant,
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry { metrics: Mutex::new(BTreeMap::new()), start: Instant::now() }
+    }
+
+    /// Seconds since this registry was first touched.
+    pub fn uptime_seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Get-or-register a counter under `name` (labels included).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Get-or-register a gauge under `name` (labels included).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Get-or-register a histogram with the given finite bucket bounds.
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds))))
+        {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Flat `(series_name, value)` view (histograms contribute `_sum` and
+    /// `_count` series). Used to assemble `/status`.
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let m = self.metrics.lock().unwrap();
+        let mut out = Vec::with_capacity(m.len());
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => out.push((name.clone(), c.get() as f64)),
+                Metric::Gauge(g) => out.push((name.clone(), g.get())),
+                Metric::Histogram(h) => {
+                    out.push((hist_series(name, "_sum"), h.sum()));
+                    out.push((hist_series(name, "_count"), h.count() as f64));
+                }
+            }
+        }
+        out
+    }
+
+    /// Prometheus text exposition (format 0.0.4) of every registered series.
+    pub fn render_prometheus(&self) -> String {
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for (name, metric) in m.iter() {
+            let family = name.split('{').next().unwrap_or(name);
+            if family != last_family {
+                let kind = match metric {
+                    Metric::Counter(_) => "counter",
+                    Metric::Gauge(_) => "gauge",
+                    Metric::Histogram(_) => "histogram",
+                };
+                out.push_str(&format!("# TYPE {family} {kind}\n"));
+                last_family = family.to_string();
+            }
+            match metric {
+                Metric::Counter(c) => out.push_str(&format!("{name} {}\n", c.get())),
+                Metric::Gauge(g) => out.push_str(&format!("{name} {}\n", fmt_f64(g.get()))),
+                Metric::Histogram(h) => {
+                    for (bound, cum) in h.cumulative_buckets() {
+                        let le = if bound.is_infinite() {
+                            "+Inf".to_string()
+                        } else {
+                            fmt_f64(bound)
+                        };
+                        out.push_str(&format!(
+                            "{} {cum}\n",
+                            with_label(name, "le", &le, "_bucket")
+                        ));
+                    }
+                    out.push_str(&format!("{} {}\n", hist_series(name, "_sum"), fmt_f64(h.sum())));
+                    out.push_str(&format!("{} {}\n", hist_series(name, "_count"), h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `name{labels}` + suffix → `name<suffix>{labels}`.
+fn hist_series(name: &str, suffix: &str) -> String {
+    match name.split_once('{') {
+        Some((base, rest)) => format!("{base}{suffix}{{{rest}"),
+        None => format!("{name}{suffix}"),
+    }
+}
+
+/// Append one more label to a possibly-already-labelled series name.
+fn with_label(name: &str, key: &str, value: &str, suffix: &str) -> String {
+    match name.split_once('{') {
+        Some((base, rest)) => {
+            let rest = rest.trim_end_matches('}');
+            format!("{base}{suffix}{{{rest},{key}=\"{value}\"}}")
+        }
+        None => format!("{name}{suffix}{{{key}=\"{value}\"}}"),
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{v:.0}")
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Build a labelled series name: `series("x", &[("a","1")])` → `x{a="1"}`.
+pub fn series(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_round_trip() {
+        let r = Registry::new();
+        let c = r.counter("t_total");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // re-registration returns the same metric
+        assert_eq!(r.counter("t_total").get(), 5);
+        let g = r.gauge(&series("t_gamma", &[("node", "3")]));
+        g.set(0.75);
+        assert_eq!(r.gauge("t_gamma{node=\"3\"}").get(), 0.75);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let r = Registry::new();
+        let h = r.histogram("t_lat", &[1.0, 10.0]);
+        for v in [0.5, 0.7, 5.0, 50.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 56.2).abs() < 1e-9);
+        assert_eq!(
+            h.cumulative_buckets(),
+            vec![(1.0, 2), (10.0, 3), (f64::INFINITY, 4)]
+        );
+    }
+
+    #[test]
+    fn prometheus_rendering_is_parseable_lines() {
+        let r = Registry::new();
+        r.counter("t_ticks_total").add(7);
+        r.gauge(&series("t_w", &[("arm", "big_loss")])).set(0.25);
+        r.histogram("t_lat", &[1.0]).observe(0.5);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE t_ticks_total counter"));
+        assert!(text.contains("t_ticks_total 7"));
+        assert!(text.contains("t_w{arm=\"big_loss\"} 0.25"));
+        assert!(text.contains("t_lat_bucket{le=\"1\"} 1"));
+        assert!(text.contains("t_lat_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("t_lat_sum 0.5"));
+        assert!(text.contains("t_lat_count 1"));
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.rsplit_once(' ').unwrap();
+            assert!(!name.is_empty());
+            assert!(value == "+Inf" || value.parse::<f64>().is_ok(), "bad value in {line}");
+        }
+    }
+
+    #[test]
+    fn snapshot_lists_every_series() {
+        let r = Registry::new();
+        r.counter("t_a").inc();
+        r.gauge("t_b").set(2.0);
+        r.histogram("t_c", &[1.0]).observe(3.0);
+        let snap = r.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["t_a", "t_b", "t_c_sum", "t_c_count"]);
+    }
+
+    #[test]
+    fn series_name_builder() {
+        assert_eq!(series("x", &[]), "x");
+        assert_eq!(series("x", &[("a", "1"), ("b", "2")]), "x{a=\"1\",b=\"2\"}");
+    }
+}

@@ -1,0 +1,239 @@
+//! `--status-addr` scrape endpoint: a tiny hand-rolled HTTP/1.0 responder
+//! on `std::net::TcpListener` (the crate's existing TCP stack; no HTTP
+//! dependency offline).
+//!
+//! Routes:
+//!   * `GET /metrics` — Prometheus text exposition of the whole registry.
+//!   * `GET /status`  — JSON: uptime, rolling prequential loss/acc, store
+//!     pressure, and per-node last-heartbeat age (process clusters).
+//!
+//! The server runs on its own accept thread; requests are served inline
+//! (scrapes are rare and tiny), and the training loop never touches it.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::registry::registry;
+
+/// Most recently bound status address in this process (tests and log
+/// output discover the real port behind `--status-addr 127.0.0.1:0`).
+static LAST_BOUND: OnceLock<Mutex<Option<SocketAddr>>> = OnceLock::new();
+
+fn last_bound_slot() -> &'static Mutex<Option<SocketAddr>> {
+    LAST_BOUND.get_or_init(|| Mutex::new(None))
+}
+
+/// The address the most recent [`StatusServer`] bound, if any.
+pub fn last_bound_addr() -> Option<SocketAddr> {
+    *last_bound_slot().lock().unwrap()
+}
+
+/// A running scrape endpoint; stops (and joins) on [`StatusServer::stop`]
+/// or drop.
+pub struct StatusServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl StatusServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and start
+    /// serving.
+    pub fn start(addr: &str) -> anyhow::Result<StatusServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("status: cannot bind {addr}: {e}"))?;
+        let bound = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        *last_bound_slot().lock().unwrap() = Some(bound);
+        log::info!("status endpoint listening on http://{bound} (/metrics, /status)");
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => serve_one(stream),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                }
+            }
+        });
+        Ok(StatusServer { addr: bound, stop, handle: Some(handle) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept loop and join it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_one(mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut buf = [0u8; 1024];
+    let n = match stream.read(&mut buf) {
+        Ok(n) if n > 0 => n,
+        _ => return,
+    };
+    let request = String::from_utf8_lossy(&buf[..n]);
+    let path = request
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/");
+    let (status, content_type, body) = match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            registry().render_prometheus(),
+        ),
+        "/status" | "/" => ("200 OK", "application/json", status_json().to_string()),
+        _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+    };
+    let _ = write!(
+        stream,
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.flush();
+}
+
+/// Assemble the `/status` document from the registry snapshot.
+fn status_json() -> Json {
+    let uptime = registry().uptime_seconds();
+    let snap = registry().snapshot();
+    let value = |name: &str| snap.iter().find(|(n, _)| n == name).map(|&(_, v)| v);
+
+    let live = value("adaselection_store_live").unwrap_or(0.0);
+    let capacity = value("adaselection_store_capacity").unwrap_or(0.0);
+    let store = Json::obj(vec![
+        ("live", Json::from(live)),
+        ("capacity", Json::from(capacity)),
+        ("pressure", Json::from(if capacity > 0.0 { live / capacity } else { 0.0 })),
+    ]);
+
+    // per-node rows come from the heartbeat gauges the coordinator sets:
+    // the gauge holds "uptime seconds at last heartbeat", so the age is a
+    // subtraction at scrape time
+    let mut nodes: std::collections::BTreeMap<String, Json> = Default::default();
+    for (name, v) in &snap {
+        if let Some(rest) = name.strip_prefix("adaselection_node_heartbeat_uptime_seconds{node=\"")
+        {
+            if let Some(node) = rest.strip_suffix("\"}") {
+                let ticks = value(&format!(
+                    "adaselection_node_ticks_total{{node=\"{node}\"}}"
+                ))
+                .unwrap_or(0.0);
+                nodes.insert(
+                    node.to_string(),
+                    Json::obj(vec![
+                        ("heartbeat_age_seconds", Json::from((uptime - v).max(0.0))),
+                        ("ticks", Json::from(ticks)),
+                    ]),
+                );
+            }
+        }
+    }
+
+    Json::obj(vec![
+        ("uptime_seconds", Json::from(uptime)),
+        ("rolling_loss", json_num_or_null(value("adaselection_rolling_loss"))),
+        ("rolling_acc", json_num_or_null(value("adaselection_rolling_acc"))),
+        ("store", store),
+        ("nodes", Json::Obj(nodes)),
+        ("series", Json::from(snap.len())),
+    ])
+}
+
+/// NaN (no eval yet) serializes as `null` — JSON has no NaN literal.
+fn json_num_or_null(v: Option<f64>) -> Json {
+    match v {
+        Some(x) if x.is_finite() => Json::from(x),
+        _ => Json::Null,
+    }
+}
+
+/// Minimal HTTP/1.0 GET used by tests (and handy for debugging).
+pub fn http_get(addr: SocketAddr, path: &str) -> anyhow::Result<(u16, String)> {
+    let mut stream = TcpStream::connect_timeout(&addr, Duration::from_secs(2))?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    write!(stream, "GET {path} HTTP/1.0\r\nHost: {addr}\r\n\r\n")?;
+    let mut response = String::new();
+    stream.read_to_string(&mut response)?;
+    let code: u16 = response
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed HTTP response"))?;
+    let body = response
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((code, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::series;
+
+    #[test]
+    fn serves_metrics_status_and_404() {
+        registry().counter("adaselection_status_test_total").add(3);
+        registry().gauge("adaselection_store_live").set(10.0);
+        registry().gauge("adaselection_store_capacity").set(40.0);
+        registry()
+            .gauge(&series(
+                "adaselection_node_heartbeat_uptime_seconds",
+                &[("node", "2")],
+            ))
+            .set(0.0);
+        let server = StatusServer::start("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        assert_eq!(last_bound_addr(), Some(addr));
+
+        let (code, body) = http_get(addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("adaselection_status_test_total 3"));
+
+        let (code, body) = http_get(addr, "/status").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(&body).unwrap();
+        assert!(j.at(&["uptime_seconds"]).unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(j.at(&["store", "pressure"]).unwrap().as_f64().unwrap(), 0.25);
+        let nodes = j.at(&["nodes"]).unwrap().as_obj().unwrap();
+        assert!(nodes.contains_key("2"));
+        assert!(
+            nodes["2"].at(&["heartbeat_age_seconds"]).unwrap().as_f64().unwrap() >= 0.0
+        );
+
+        let (code, _) = http_get(addr, "/bogus").unwrap();
+        assert_eq!(code, 404);
+
+        server.stop();
+    }
+}

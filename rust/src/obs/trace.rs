@@ -1,0 +1,384 @@
+//! Structured trace journal: per-tick JSONL events behind `--trace PATH`.
+//!
+//! The hot loop hands finished lines to a bounded channel and never
+//! blocks on I/O — a dedicated writer thread drains into a `BufWriter`,
+//! and when the channel is full the line is *dropped* and counted
+//! (`dropped_lines` on [`TraceJournal::finish`]) rather than stalling
+//! training. Telemetry must stay off the digest path: the journal only
+//! ever receives copies of already-computed state.
+//!
+//! ## Schema v1
+//!
+//! One JSON object per line. Common fields: `v` (always 1), `kind`.
+//!
+//! * `kind = "tick"` — one per processed tick per node:
+//!   `tick`, `node`, `gamma` (effective γ this tick), `arrivals`,
+//!   `trained`, `replayed`, `forward` (candidate rows forward-scored this
+//!   tick), `drift` (cumulative detector fires), `weights` (object
+//!   arm → weight; present for bandit policies), `store` (object with
+//!   `live`, `capacity`, `hits`, `misses`, `evictions` — cumulative),
+//!   `phases` (object phase → seconds spent *this tick*), and optional
+//!   `rolling` (`loss`, `acc`) on prequential-eval ticks.
+//! * `kind = "gossip"` / `kind = "merge"` — cluster coordinator events:
+//!   `tick` (the sync point), `bytes` (wire bytes this round).
+//!
+//! Tick events are tick-contiguous per node: node `n` emits ticks
+//! `t, t+1, t+2, ...` without gaps (backfill replays after churn are
+//! deliberately not journalled as ticks).
+
+use std::collections::BTreeMap;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::timer::PhaseTimer;
+
+/// Journal schema version emitted in every line.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Lines buffered between the hot loop and the writer thread.
+const CHANNEL_CAPACITY: usize = 8192;
+
+/// Owning side of the journal: opens the file, runs the writer thread,
+/// and reports drop/flush status on [`TraceJournal::finish`].
+pub struct TraceJournal {
+    tx: Option<SyncSender<String>>,
+    writer: Option<JoinHandle<std::io::Result<()>>>,
+    dropped: Arc<AtomicU64>,
+}
+
+/// Cheap clonable emitter handle (cluster nodes share one journal).
+#[derive(Clone)]
+pub struct TraceHandle {
+    tx: SyncSender<String>,
+    dropped: Arc<AtomicU64>,
+}
+
+impl TraceJournal {
+    /// Open `path` for writing and start the writer thread.
+    pub fn open(path: &Path) -> anyhow::Result<TraceJournal> {
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("trace: cannot create {path:?}: {e}"))?;
+        let (tx, rx) = sync_channel::<String>(CHANNEL_CAPACITY);
+        let writer = std::thread::spawn(move || -> std::io::Result<()> {
+            let mut w = BufWriter::new(file);
+            while let Ok(line) = rx.recv() {
+                w.write_all(line.as_bytes())?;
+                w.write_all(b"\n")?;
+            }
+            w.flush()
+        });
+        Ok(TraceJournal {
+            tx: Some(tx),
+            writer: Some(writer),
+            dropped: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// A clonable emitter for this journal.
+    pub fn handle(&self) -> TraceHandle {
+        TraceHandle {
+            tx: self.tx.as_ref().expect("journal already finished").clone(),
+            dropped: Arc::clone(&self.dropped),
+        }
+    }
+
+    /// Close the channel, join the writer (flushing the file), and return
+    /// how many lines were dropped under backpressure.
+    pub fn finish(mut self) -> anyhow::Result<u64> {
+        self.tx = None; // all emission must go through since-dropped handles
+        if let Some(w) = self.writer.take() {
+            w.join()
+                .map_err(|_| anyhow::anyhow!("trace writer thread panicked"))??;
+        }
+        let dropped = self.dropped.load(Ordering::Relaxed);
+        if dropped > 0 {
+            log::warn!("trace: dropped {dropped} journal lines under backpressure");
+        }
+        Ok(dropped)
+    }
+}
+
+impl Drop for TraceJournal {
+    fn drop(&mut self) {
+        self.tx = None;
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl TraceHandle {
+    /// Enqueue one already-serialized line; drops (and counts) when the
+    /// writer is behind instead of blocking the hot loop.
+    pub fn emit(&self, line: String) {
+        match self.tx.try_send(line) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Emit a coordinator-side gossip/merge event.
+    pub fn emit_wire_event(&self, kind: &str, tick: u64, bytes: u64) {
+        self.emit(
+            Json::obj(vec![
+                ("v", Json::from(SCHEMA_VERSION as usize)),
+                ("kind", Json::from(kind)),
+                ("tick", Json::from(tick as usize)),
+                ("bytes", Json::from(bytes as usize)),
+            ])
+            .to_string(),
+        );
+    }
+}
+
+/// Everything a `kind:"tick"` line carries, assembled by the caller
+/// *after* the tick's training work is complete.
+pub struct TickEvent<'a> {
+    pub tick: u64,
+    pub node: usize,
+    pub gamma: f32,
+    pub arrivals: usize,
+    pub trained: usize,
+    pub replayed: usize,
+    /// Candidate rows forward-scored this tick.
+    pub forward: u64,
+    /// Cumulative drift-detector fires.
+    pub drift: u64,
+    /// `(arm id, weight)` pairs; empty for single-method policies.
+    pub weights: &'a [(String, f32)],
+    pub store_live: usize,
+    pub store_capacity: usize,
+    pub store_hits: u64,
+    pub store_misses: u64,
+    pub store_evictions: u64,
+    /// Per-phase seconds spent this tick.
+    pub phases: &'a [(String, f64)],
+    /// `(rolling_loss, rolling_acc)` on eval ticks.
+    pub rolling: Option<(f32, f32)>,
+}
+
+impl TickEvent<'_> {
+    /// Serialize as one schema-v1 JSONL line.
+    pub fn to_line(&self) -> String {
+        // NaN/Inf have no JSON spelling (rolling acc is NaN on regression
+        // streams); journal them as null so every line stays parseable
+        fn num(v: f64) -> Json {
+            if v.is_finite() { Json::from(v) } else { Json::Null }
+        }
+        let weights = Json::Obj(
+            self.weights
+                .iter()
+                .map(|(id, w)| (id.clone(), num(*w as f64)))
+                .collect(),
+        );
+        let phases = Json::Obj(
+            self.phases
+                .iter()
+                .map(|(p, s)| (p.clone(), Json::from(*s)))
+                .collect(),
+        );
+        let store = Json::obj(vec![
+            ("live", Json::from(self.store_live)),
+            ("capacity", Json::from(self.store_capacity)),
+            ("hits", Json::from(self.store_hits as usize)),
+            ("misses", Json::from(self.store_misses as usize)),
+            ("evictions", Json::from(self.store_evictions as usize)),
+        ]);
+        let mut pairs = vec![
+            ("v", Json::from(SCHEMA_VERSION as usize)),
+            ("kind", Json::from("tick")),
+            ("tick", Json::from(self.tick as usize)),
+            ("node", Json::from(self.node)),
+            ("gamma", num(self.gamma as f64)),
+            ("arrivals", Json::from(self.arrivals)),
+            ("trained", Json::from(self.trained)),
+            ("replayed", Json::from(self.replayed)),
+            ("forward", Json::from(self.forward as usize)),
+            ("drift", Json::from(self.drift as usize)),
+            ("weights", weights),
+            ("store", store),
+            ("phases", phases),
+        ];
+        if let Some((loss, acc)) = self.rolling {
+            pairs.push((
+                "rolling",
+                Json::obj(vec![("loss", num(loss as f64)), ("acc", num(acc as f64))]),
+            ));
+        }
+        Json::obj(pairs).to_string()
+    }
+}
+
+/// Computes per-tick phase deltas from the cumulative [`PhaseTimer`].
+#[derive(Default)]
+pub struct PhaseDelta {
+    prev: BTreeMap<String, Duration>,
+}
+
+impl PhaseDelta {
+    /// `(phase, seconds since the previous call)` for every phase that
+    /// advanced, in BTreeMap (alphabetical) order.
+    pub fn delta(&mut self, timer: &PhaseTimer) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for (phase, total) in timer.phases() {
+            let prev = self.prev.get(phase).copied().unwrap_or_default();
+            if total > prev {
+                out.push((phase.to_string(), (total - prev).as_secs_f64()));
+            }
+            self.prev.insert(phase.to_string(), total);
+        }
+        out
+    }
+}
+
+/// A parsed-and-validated schema-v1 journal line (tests + tooling).
+#[derive(Debug)]
+pub struct ParsedEvent {
+    pub kind: String,
+    pub tick: u64,
+    /// Present on `tick` events only.
+    pub node: Option<usize>,
+}
+
+/// Validate one journal line against schema v1.
+pub fn validate_v1_line(line: &str) -> anyhow::Result<ParsedEvent> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("trace line is not JSON: {e:?}"))?;
+    let v = j.at(&["v"])?.as_usize()?;
+    anyhow::ensure!(v == SCHEMA_VERSION as usize, "schema version {v} != {SCHEMA_VERSION}");
+    let kind = j.at(&["kind"])?.as_str()?.to_string();
+    let tick = j.at(&["tick"])?.as_usize()? as u64;
+    let node = match kind.as_str() {
+        "tick" => {
+            for field in
+                ["gamma", "arrivals", "trained", "replayed", "forward", "drift"]
+            {
+                j.at(&[field])?.as_f64()?;
+            }
+            j.at(&["weights"])?.as_obj()?;
+            let store = j.at(&["store"])?;
+            for field in ["live", "capacity", "hits", "misses", "evictions"] {
+                store.at(&[field])?.as_f64()?;
+            }
+            j.at(&["phases"])?.as_obj()?;
+            Some(j.at(&["node"])?.as_usize()?)
+        }
+        "gossip" | "merge" => {
+            j.at(&["bytes"])?.as_f64()?;
+            None
+        }
+        other => anyhow::bail!("unknown trace kind '{other}'"),
+    };
+    Ok(ParsedEvent { kind, tick, node })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_event() -> String {
+        TickEvent {
+            tick: 3,
+            node: 1,
+            gamma: 0.5,
+            arrivals: 128,
+            trained: 64,
+            replayed: 2,
+            forward: 64,
+            drift: 1,
+            weights: &[("big_loss".to_string(), 0.7), ("uniform".to_string(), 0.3)],
+            store_live: 100,
+            store_capacity: 4096,
+            store_hits: 10,
+            store_misses: 90,
+            store_evictions: 0,
+            phases: &[("forward".to_string(), 0.001), ("update".to_string(), 0.002)],
+            rolling: Some((1.25, 0.5)),
+        }
+        .to_line()
+    }
+
+    #[test]
+    fn tick_event_round_trips_schema_v1() {
+        let line = sample_event();
+        let ev = validate_v1_line(&line).unwrap();
+        assert_eq!(ev.kind, "tick");
+        assert_eq!(ev.tick, 3);
+        assert_eq!(ev.node, Some(1));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.at(&["weights", "big_loss"]).unwrap().as_f64().unwrap() as f32, 0.7);
+        assert_eq!(j.at(&["rolling", "acc"]).unwrap().as_f64().unwrap() as f32, 0.5);
+    }
+
+    #[test]
+    fn wire_events_validate() {
+        let j = Json::obj(vec![
+            ("v", Json::from(1usize)),
+            ("kind", Json::from("gossip")),
+            ("tick", Json::from(16usize)),
+            ("bytes", Json::from(2048usize)),
+        ]);
+        let ev = validate_v1_line(&j.to_string()).unwrap();
+        assert_eq!(ev.kind, "gossip");
+        assert_eq!(ev.node, None);
+    }
+
+    #[test]
+    fn bad_lines_are_rejected() {
+        assert!(validate_v1_line("not json").is_err());
+        assert!(validate_v1_line("{\"v\":2,\"kind\":\"tick\",\"tick\":0}").is_err());
+        assert!(validate_v1_line("{\"v\":1,\"kind\":\"bogus\",\"tick\":0}").is_err());
+        // a tick event missing its store block is rejected
+        assert!(validate_v1_line(
+            "{\"v\":1,\"kind\":\"tick\",\"tick\":0,\"node\":0,\"gamma\":0.5,\
+             \"arrivals\":1,\"trained\":1,\"replayed\":0,\"forward\":0,\
+             \"drift\":0,\"weights\":{},\"phases\":{}}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn journal_writes_flush_and_count_nothing_dropped() {
+        let dir = std::env::temp_dir().join(format!("ada_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.jsonl");
+        let journal = TraceJournal::open(&path).unwrap();
+        let h = journal.handle();
+        for _ in 0..100 {
+            h.emit(sample_event());
+        }
+        drop(h);
+        assert_eq!(journal.finish().unwrap(), 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 100);
+        for line in text.lines() {
+            validate_v1_line(line).unwrap();
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn phase_delta_tracks_increments() {
+        let mut timer = PhaseTimer::default();
+        timer.add("forward", Duration::from_millis(10));
+        let mut d = PhaseDelta::default();
+        let first = d.delta(&timer);
+        assert_eq!(first.len(), 1);
+        assert!((first[0].1 - 0.010).abs() < 1e-9);
+        // no advance → no rows
+        assert!(d.delta(&timer).is_empty());
+        timer.add("forward", Duration::from_millis(5));
+        timer.add("update", Duration::from_millis(2));
+        let next = d.delta(&timer);
+        assert_eq!(next.len(), 2);
+        assert!((next[0].1 - 0.005).abs() < 1e-9); // forward delta only
+        assert!((next[1].1 - 0.002).abs() < 1e-9);
+    }
+}

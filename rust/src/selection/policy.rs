@@ -491,6 +491,27 @@ impl Policy {
         }
     }
 
+    /// Arm ids aligned with [`Policy::weights`] (empty for single-method
+    /// policies, which report no weights).
+    pub fn weight_ids(&self) -> Vec<String> {
+        match self {
+            Policy::Ada(p) => p
+                .state()
+                .config()
+                .candidates
+                .iter()
+                .map(|m| m.id().to_string())
+                .collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// `(arm id, weight)` pairs for bandit policies — the telemetry view.
+    pub fn weight_pairs(&self) -> Option<Vec<(String, f32)>> {
+        let weights = self.weights()?;
+        Some(self.weight_ids().into_iter().zip(weights).collect())
+    }
+
     /// Build from a [`crate::config::StreamConfig`] — THE policy factory.
     /// Applies the spec grammar, the `obftf-k` knob, and the bandit rule
     /// override in one place (CLI, stream trainer, cluster nodes, and the

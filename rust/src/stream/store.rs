@@ -222,6 +222,12 @@ impl InstanceStore {
         self.len() * BYTES_PER_INSTANCE
     }
 
+    /// Fill fraction `len / capacity` in `[0, 1]` — the "store pressure"
+    /// number the status endpoint and trace journal report.
+    pub fn pressure(&self) -> f64 {
+        self.len() as f64 / self.capacity.max(1) as f64
+    }
+
     pub fn counters(&self) -> StoreCounters {
         StoreCounters {
             hits: self.hits.load(Ordering::Relaxed),

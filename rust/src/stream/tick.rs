@@ -369,6 +369,19 @@ pub struct TickOutcome {
 
 /// The reusable per-tick trainer core. `chunk_rows` is the stream's chunk
 /// width (the family batch size) — the id inversion the replay fetch needs.
+/// Cumulative engine counters sampled for telemetry (see
+/// [`TickEngine::telemetry`]); also the payload the cluster `Heartbeat`
+/// wire message piggybacks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineTelemetry {
+    pub samples_seen: u64,
+    pub samples_trained: u64,
+    pub samples_replayed: u64,
+    pub samples_forward: u64,
+    pub drift_detections: u64,
+    pub store_len: u64,
+}
+
 pub struct TickEngine {
     pub policy: Policy,
     pub store: InstanceStore,
@@ -420,6 +433,21 @@ impl TickEngine {
 
     pub fn drift_detections(&self) -> u64 {
         self.drift.as_ref().map(|d| d.detections()).unwrap_or(0)
+    }
+
+    /// Point-in-time telemetry snapshot of the engine's cumulative
+    /// counters plus current store occupancy — what heartbeats piggyback
+    /// and the [`crate::obs::TickObserver`] samples. Read-only: taking a
+    /// snapshot cannot perturb selection.
+    pub fn telemetry(&self) -> EngineTelemetry {
+        EngineTelemetry {
+            samples_seen: self.samples_seen,
+            samples_trained: self.samples_trained,
+            samples_replayed: self.samples_replayed,
+            samples_forward: self.samples_forward,
+            drift_detections: self.drift_detections(),
+            store_len: self.store.len() as u64,
+        }
     }
 
     /// Run one tick: prequential eval (optional), score + select + store,

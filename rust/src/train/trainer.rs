@@ -18,6 +18,7 @@
 use crate::config::RunConfig;
 use crate::data::{self, Dataset};
 use crate::metrics::{EpochStats, RunResult};
+use crate::obs;
 use crate::pipeline::{gather, Batch, Loader, LoaderConfig};
 use crate::runtime::{Backend, FamilyMeta, NativeBackend};
 use crate::selection::policy::Policy;
@@ -84,6 +85,22 @@ impl<'b, B: Backend> Trainer<'b, B> {
             if policy.scoring() == ScoringNeeds::None { vec![b] } else { vec![k, b] };
         self.backend.preload_family(&self.family, &sizes)?;
 
+        // registry handles resolved once; per-iteration cost is an atomic
+        // store. The batch trainer shares the arm-weight and phase series
+        // with the stream path so one dashboard covers both.
+        let reg = obs::registry();
+        let iter_counter = reg.counter("adaselection_train_iterations_total");
+        let epoch_gauge = reg.gauge("adaselection_train_epoch");
+        let test_loss_gauge = reg.gauge("adaselection_train_test_loss");
+        let test_acc_gauge = reg.gauge("adaselection_train_test_acc");
+        let arm_gauges: Vec<_> = policy
+            .weight_ids()
+            .iter()
+            .map(|id| {
+                reg.gauge(&obs::series("adaselection_arm_weight", &[("arm", id.as_str())]))
+            })
+            .collect();
+
         let mut state = self.backend.init_state(&self.family, self.cfg.seed as i32)?;
         let mut phases = PhaseTimer::default();
         let mut epochs: Vec<EpochStats> = Vec::new();
@@ -130,6 +147,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
                     }
                 };
                 iterations += 1;
+                iter_counter.inc();
 
                 if policy.scoring() == ScoringNeeds::None {
                     let loss = phases.time("update", || {
@@ -202,6 +220,11 @@ impl<'b, B: Backend> Trainer<'b, B> {
                     if let Some(es) = early.as_mut() {
                         es.observe_weights(&w);
                     }
+                    for (g, &v) in arm_gauges.iter().zip(&w) {
+                        if v.is_finite() {
+                            g.set(v as f64);
+                        }
+                    }
                     weight_trace.push(w);
                 }
 
@@ -234,6 +257,11 @@ impl<'b, B: Backend> Trainer<'b, B> {
             train_clock += epoch_clock.elapsed_secs();
             let (test_loss, test_acc) =
                 phases.time("eval", || self.evaluate(&state))?;
+            epoch_gauge.set(epoch as f64);
+            test_loss_gauge.set(test_loss as f64);
+            if test_acc.is_finite() {
+                test_acc_gauge.set(test_acc as f64);
+            }
             log::info!(
                 "epoch {epoch}: train_loss={:.4} test_loss={test_loss:.4} \
                  test_acc={test_acc:.4} ({:.1}s train)",
@@ -265,6 +293,13 @@ impl<'b, B: Backend> Trainer<'b, B> {
             );
         }
 
+        // publish cumulative per-phase seconds so `/metrics` carries the
+        // same profile the CSV summaries print
+        for (name, d) in phases.phases() {
+            reg.gauge(&obs::series("adaselection_phase_seconds", &[("phase", name)]))
+                .set(d.as_secs_f64());
+        }
+
         Ok(RunResult {
             dataset: self.cfg.dataset.clone(),
             selector: policy.name(),
@@ -273,16 +308,7 @@ impl<'b, B: Backend> Trainer<'b, B> {
             seed: self.cfg.seed,
             epochs,
             weight_trace,
-            weight_names: match &policy {
-                Policy::Ada(p) => p
-                    .state()
-                    .config()
-                    .candidates
-                    .iter()
-                    .map(|m| m.id().to_string())
-                    .collect(),
-                _ => Vec::new(),
-            },
+            weight_names: policy.weight_ids(),
             phases,
             iterations,
         })

@@ -97,6 +97,86 @@ pub fn write_json(bench_name: &str, results: &[BenchResult]) -> std::io::Result<
     Ok(())
 }
 
+/// Outcome of comparing one run's bench JSONs against a baseline.
+#[derive(Clone, Debug, Default)]
+pub struct BenchDiff {
+    /// (bench, name, old_median_ns, new_median_ns) for every key in both
+    pub compared: Vec<(String, String, f64, f64)>,
+    /// subset of `compared` whose median regressed past the tolerance
+    pub regressions: Vec<(String, String, f64, f64)>,
+    /// keys present in only one side (new/renamed/deleted benchmarks)
+    pub unmatched: Vec<String>,
+}
+
+/// Collect `(bench, name) -> median_ns` from every `BENCH_*.json` in `dir`.
+fn load_medians(
+    dir: &std::path::Path,
+) -> anyhow::Result<std::collections::BTreeMap<(String, String), f64>> {
+    use crate::util::json::Json;
+    let mut out = std::collections::BTreeMap::new();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("bench-diff: read {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let Some(fname) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if !(fname.starts_with("BENCH_") && fname.ends_with(".json")) {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("bench-diff: parse {}: {e}", path.display()))?;
+        let bench = j
+            .at(&["bench"])
+            .and_then(|b| b.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        let Some(results) = j.at(&["results"]).and_then(|r| r.as_arr()) else { continue };
+        for r in results {
+            let (Some(name), Some(median)) = (
+                r.at(&["name"]).and_then(|n| n.as_str()),
+                r.at(&["median_ns"]).and_then(|m| m.as_f64()),
+            ) else {
+                continue;
+            };
+            out.insert((bench.clone(), name.to_string()), median);
+        }
+    }
+    Ok(out)
+}
+
+/// Compare every matching `(bench, name)` key between two directories of
+/// `BENCH_*.json` files. A key regresses when its new median exceeds the
+/// old by more than `tolerance` (0.15 = >15% slower). Keys on only one
+/// side are reported but never fail — they are new or retired benchmarks,
+/// and an empty baseline passes trivially (the first CI run has nothing
+/// to compare against).
+pub fn diff(
+    baseline: &std::path::Path,
+    current: &std::path::Path,
+    tolerance: f64,
+) -> anyhow::Result<BenchDiff> {
+    let old = load_medians(baseline)?;
+    let new = load_medians(current)?;
+    let mut d = BenchDiff::default();
+    for (key, &new_median) in &new {
+        match old.get(key) {
+            Some(&old_median) => {
+                d.compared.push((key.0.clone(), key.1.clone(), old_median, new_median));
+                if new_median > old_median * (1.0 + tolerance) {
+                    d.regressions.push((key.0.clone(), key.1.clone(), old_median, new_median));
+                }
+            }
+            None => d.unmatched.push(format!("{}/{} (new)", key.0, key.1)),
+        }
+    }
+    for key in old.keys() {
+        if !new.contains_key(key) {
+            d.unmatched.push(format!("{}/{} (baseline only)", key.0, key.1));
+        }
+    }
+    Ok(d)
+}
+
 /// Human time formatting.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -142,6 +222,52 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].at(&["name"]).unwrap().as_str().unwrap(), "one op");
         assert!(results[0].at(&["median_ns"]).unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    fn write_bench_json(dir: &std::path::Path, bench: &str, items: &[(&str, f64)]) {
+        let results: Vec<String> = items
+            .iter()
+            .map(|(name, median)| {
+                format!(
+                    r#"{{"name": "{name}", "iters": 10, "median_ns": {median}, "p95_ns": {median}, "mean_ns": {median}, "ops_per_s": 1.0}}"#
+                )
+            })
+            .collect();
+        let body =
+            format!(r#"{{"bench": "{bench}", "results": [{}]}}"#, results.join(", "));
+        std::fs::write(dir.join(format!("BENCH_{bench}.json")), body).unwrap();
+    }
+
+    #[test]
+    fn diff_flags_only_regressions_past_tolerance() {
+        let root =
+            std::env::temp_dir().join(format!("ada_bench_diff_{}", std::process::id()));
+        let (old, new) = (root.join("old"), root.join("new"));
+        std::fs::create_dir_all(&old).unwrap();
+        std::fs::create_dir_all(&new).unwrap();
+        write_bench_json(&old, "suite", &[("fast", 100.0), ("slow", 100.0), ("gone", 5.0)]);
+        write_bench_json(&new, "suite", &[("fast", 110.0), ("slow", 130.0), ("born", 5.0)]);
+        let d = diff(&old, &new, 0.15).unwrap();
+        assert_eq!(d.compared.len(), 2);
+        assert_eq!(d.regressions.len(), 1, "{:?}", d.regressions);
+        assert_eq!(d.regressions[0].1, "slow");
+        assert_eq!(d.unmatched.len(), 2, "{:?}", d.unmatched);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn diff_empty_baseline_passes_trivially() {
+        let root =
+            std::env::temp_dir().join(format!("ada_bench_diff_empty_{}", std::process::id()));
+        let (old, new) = (root.join("old"), root.join("new"));
+        std::fs::create_dir_all(&old).unwrap();
+        std::fs::create_dir_all(&new).unwrap();
+        write_bench_json(&new, "suite", &[("anything", 42.0)]);
+        let d = diff(&old, &new, 0.15).unwrap();
+        assert!(d.regressions.is_empty());
+        assert!(d.compared.is_empty());
+        assert_eq!(d.unmatched.len(), 1);
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

@@ -10,6 +10,9 @@ use log::{Level, LevelFilter, Metadata, Record};
 static START: OnceLock<Instant> = OnceLock::new();
 static LOGGER: Logger = Logger;
 
+/// The level names `ADASELECTION_LOG` accepts (case-insensitive).
+const ACCEPTED: &str = "off|error|warn|info|debug|trace";
+
 struct Logger;
 
 impl log::Log for Logger {
@@ -35,15 +38,37 @@ impl log::Log for Logger {
     fn flush(&self) {}
 }
 
-/// Install the logger (idempotent; later calls are no-ops).
+/// Install the logger (idempotent; later calls are no-ops). An
+/// unrecognized `ADASELECTION_LOG` value falls back to `info` and warns
+/// once, naming the bad value — silent fallback used to hide typos like
+/// `ADASELECTION_LOG=verbose`.
 pub fn init() {
     let _ = START.set(Instant::now());
-    let level = std::env::var("ADASELECTION_LOG")
-        .ok()
-        .and_then(|s| parse_level(&s))
-        .unwrap_or(LevelFilter::Info);
+    let raw = std::env::var("ADASELECTION_LOG").ok();
+    let (level, bad) = resolve_level(raw.as_deref());
     if log::set_logger(&LOGGER).is_ok() {
         log::set_max_level(level);
+        if let Some(msg) = bad {
+            log::warn!("{msg}");
+        }
+    }
+}
+
+/// Map the env value to a level; an unparseable value yields the `info`
+/// default plus the one-time warning text (testable without env races).
+fn resolve_level(raw: Option<&str>) -> (LevelFilter, Option<String>) {
+    match raw {
+        None => (LevelFilter::Info, None),
+        Some(s) => match parse_level(s) {
+            Some(l) => (l, None),
+            None => (
+                LevelFilter::Info,
+                Some(format!(
+                    "ADASELECTION_LOG={s:?} is not a log level (accepted: {ACCEPTED}); \
+                     using 'info'"
+                )),
+            ),
+        },
     }
 }
 
@@ -67,7 +92,29 @@ mod tests {
     fn parse_levels() {
         assert_eq!(parse_level("debug"), Some(LevelFilter::Debug));
         assert_eq!(parse_level("WARN"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("Off"), Some(LevelFilter::Off));
         assert_eq!(parse_level("bogus"), None);
+        assert_eq!(parse_level(""), None);
+    }
+
+    #[test]
+    fn resolve_unset_is_quiet_info() {
+        assert_eq!(resolve_level(None), (LevelFilter::Info, None));
+    }
+
+    #[test]
+    fn resolve_valid_is_quiet() {
+        assert_eq!(resolve_level(Some("trace")), (LevelFilter::Trace, None));
+        assert_eq!(resolve_level(Some("ERROR")), (LevelFilter::Error, None));
+    }
+
+    #[test]
+    fn resolve_invalid_warns_naming_value_and_accepted_set() {
+        let (level, warning) = resolve_level(Some("verbose"));
+        assert_eq!(level, LevelFilter::Info);
+        let msg = warning.expect("invalid value must produce a warning");
+        assert!(msg.contains("verbose"), "warning must name the bad value: {msg}");
+        assert!(msg.contains(ACCEPTED), "warning must list the accepted set: {msg}");
     }
 
     #[test]

@@ -148,4 +148,67 @@ mod tests {
         assert_eq!(a.total("p"), Duration::from_millis(12));
         assert_eq!(a.count("p"), 2);
     }
+
+    #[test]
+    fn timed_phases_sum_to_wall_clock_within_tolerance() {
+        // timing a sequence of exclusive phases must account for (almost)
+        // all of the elapsed wall-clock — per-call overhead is the only
+        // slack, and it is bounded
+        let mut pt = PhaseTimer::default();
+        let wall = Stopwatch::new();
+        for _ in 0..5 {
+            pt.time("a", || std::thread::sleep(Duration::from_millis(2)));
+            pt.time("b", || std::thread::sleep(Duration::from_millis(1)));
+        }
+        let wall = wall.elapsed_secs();
+        let accounted = pt.grand_total_secs();
+        assert!(
+            accounted <= wall,
+            "phases cannot exceed the wall clock that contains them: \
+             {accounted} > {wall}"
+        );
+        // 20ms of sleeps inside a loop: allow generous scheduler slack but
+        // require the bulk of the time to land in the phases
+        assert!(
+            accounted >= 0.5 * (15.0 / 1000.0),
+            "phases lost most of the wall clock: {accounted}s of {wall}s"
+        );
+        assert_eq!(pt.count("a"), 5);
+        assert_eq!(pt.count("b"), 5);
+    }
+
+    #[test]
+    fn stopwatch_restart_returns_lap_and_resets() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(3));
+        let lap = sw.restart();
+        assert!(lap >= Duration::from_millis(3), "lap too short: {lap:?}");
+        // after the restart the elapsed clock starts over: it must read
+        // less than the first lap took
+        let after = sw.elapsed();
+        assert!(after < lap, "restart must reset the origin: {after:?} vs {lap:?}");
+        // and a second lap measures only its own interval
+        std::thread::sleep(Duration::from_millis(1));
+        let lap2 = sw.restart();
+        assert!(lap2 >= Duration::from_millis(1) && lap2 < lap + Duration::from_millis(1000));
+    }
+
+    #[test]
+    fn phases_iterate_in_stable_name_order() {
+        // the profile is a BTreeMap: iteration order is lexicographic by
+        // phase name regardless of insertion order, so emitted profiles
+        // (CSV columns, trace JSON keys) are stable run to run
+        let mut pt = PhaseTimer::default();
+        for name in ["update", "data", "select", "forward", "eval"] {
+            pt.add(name, Duration::from_millis(1));
+        }
+        let order: Vec<&str> = pt.phases().map(|(k, _)| k).collect();
+        assert_eq!(order, vec!["data", "eval", "forward", "select", "update"]);
+        // merging new phases keeps the invariant
+        let mut other = PhaseTimer::default();
+        other.add("cache", Duration::from_millis(1));
+        pt.merge(&other);
+        let order: Vec<&str> = pt.phases().map(|(k, _)| k).collect();
+        assert_eq!(order, vec!["cache", "data", "eval", "forward", "select", "update"]);
+    }
 }

@@ -229,6 +229,116 @@ fn four_node_per_method_drift_is_bit_deterministic() {
 }
 
 #[test]
+fn telemetry_is_off_the_cluster_digest_path_and_metrics_scrape_live() {
+    use adaselection::obs::status::{http_get, last_bound_addr};
+    use adaselection::obs::trace::validate_v1_line;
+    use std::collections::BTreeMap;
+    use std::time::{Duration, Instant};
+
+    let ticks = 120;
+    let plain = cluster::run(&base_cfg(4, ticks)).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("ada_cluster_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.jsonl");
+    let mut cfg = base_cfg(4, ticks);
+    cfg.stream.trace = Some(trace.clone());
+    cfg.stream.status_addr = Some("127.0.0.1:0".into());
+
+    // run in a thread so /metrics can be scraped while the cluster is live
+    let runner = std::thread::spawn(move || cluster::run(&cfg).unwrap());
+    let distinct_series = |body: &str| -> usize {
+        body.lines()
+            .filter(|l| l.starts_with("adaselection"))
+            .filter_map(|l| l.rsplit_once(' ').map(|(name, _)| name.to_string()))
+            .collect::<std::collections::BTreeSet<_>>()
+            .len()
+    };
+    let mut best = 0usize;
+    let mut metrics_body = String::new();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while Instant::now() < deadline {
+        if runner.is_finished() {
+            // the run (and its server) ended before a rich scrape landed;
+            // the registry is process-wide and outlives the run, so a
+            // fresh endpoint still serves the full series set
+            let server = adaselection::obs::StatusServer::start("127.0.0.1:0").unwrap();
+            let (code, body) = http_get(server.local_addr(), "/metrics").unwrap();
+            assert_eq!(code, 200);
+            if distinct_series(&body) > best {
+                best = distinct_series(&body);
+                metrics_body = body;
+            }
+            break;
+        }
+        if let Some(addr) = last_bound_addr() {
+            if let Ok((200, body)) = http_get(addr, "/metrics") {
+                let n = distinct_series(&body);
+                if n > best {
+                    best = n;
+                    metrics_body = body;
+                }
+                if best >= 20
+                    && metrics_body.contains("adaselection_arm_weight{")
+                    && metrics_body.contains("adaselection_phase_seconds{")
+                {
+                    let (code, status) = http_get(addr, "/status").unwrap();
+                    assert_eq!(code, 200);
+                    let j = adaselection::util::json::Json::parse(&status).unwrap();
+                    assert!(j.at(&["uptime_seconds"]).unwrap().as_f64().unwrap() >= 0.0);
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let traced = runner.join().unwrap();
+    assert!(
+        best >= 20,
+        "live /metrics served only {best} distinct series:\n{metrics_body}"
+    );
+    assert!(metrics_body.contains("adaselection_arm_weight{"), "no per-arm weights");
+    assert!(metrics_body.contains("adaselection_phase_seconds{"), "no per-phase seconds");
+
+    // zero interference: the traced + scraped run selects identically
+    assert_eq!(plain.digest, traced.digest, "telemetry changed the cluster digest");
+    assert_eq!(plain.samples_seen, traced.samples_seen);
+    assert_eq!(plain.samples_trained, traced.samples_trained);
+    assert_eq!(
+        plain.final_rolling_loss.to_bits(),
+        traced.final_rolling_loss.to_bits(),
+        "rolling loss not bit-identical under telemetry"
+    );
+
+    // journal round-trip: every line validates, tick events stay
+    // tick-contiguous per node, and coordinator wire events are present
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut next: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut wire_events = 0usize;
+    for line in text.lines() {
+        let ev = validate_v1_line(line)
+            .unwrap_or_else(|e| panic!("bad trace line: {e}\n{line}"));
+        match ev.node {
+            Some(node) => {
+                let expect = next.entry(node).or_insert(0);
+                assert_eq!(ev.tick, *expect, "node {node} journal not tick-contiguous");
+                *expect += 1;
+            }
+            None => {
+                assert!(ev.kind == "gossip" || ev.kind == "merge");
+                wire_events += 1;
+            }
+        }
+    }
+    assert_eq!(next.len(), 4, "expected tick events from all 4 nodes");
+    for (&node, &n) in &next {
+        assert_eq!(n, ticks as u64, "node {node} journalled {n}/{ticks} ticks");
+    }
+    assert!(wire_events > 0, "no gossip/merge events journalled");
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
 fn replay_tops_up_thin_cluster_shards() {
     // 8 nodes over a burst-heavy stream: single shards regularly fall
     // below the per-node budget, so the replay scheduler must fire

@@ -558,6 +558,55 @@ fn per_method_drift_with_forward_cheap_pool_survives_resume() {
 }
 
 #[test]
+fn telemetry_is_off_the_digest_path_and_journal_round_trips() {
+    use adaselection::obs::trace::validate_v1_line;
+
+    let dir = std::env::temp_dir().join(format!("ada_stream_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.jsonl");
+
+    // a busy 200-tick run: drift boosts, replay top-ups, bursts and evals
+    // all active so the journal carries every event shape
+    let mut cfg = base_cfg();
+    cfg.max_ticks = 200;
+    cfg.eval_every = 4;
+    cfg.burst_period = 16;
+    cfg.burst_min = 0.25;
+    cfg.drift_detect = "page-hinkley".into();
+    cfg.replay = true;
+
+    let plain = run(cfg.clone());
+
+    let mut traced_cfg = cfg.clone();
+    traced_cfg.trace = Some(trace.clone());
+    traced_cfg.status_addr = Some("127.0.0.1:0".into());
+    let traced = adaselection::stream::run(traced_cfg).unwrap();
+
+    // zero interference: telemetry only reads state the tick already
+    // produced, so the selection sequence is bit-identical
+    assert_eq!(plain.tick_digests, traced.tick_digests, "tracing changed a tick digest");
+    assert_eq!(plain.digest, traced.digest);
+    assert_eq!(plain.samples_trained, traced.samples_trained);
+    assert_eq!(plain.samples_replayed, traced.samples_replayed);
+    assert_eq!(plain.drift_detections, traced.drift_detections);
+
+    // journal round-trip: every line parses against schema v1 and the
+    // tick sequence is contiguous from 0
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut expect = 0u64;
+    for line in text.lines() {
+        let ev = validate_v1_line(line)
+            .unwrap_or_else(|e| panic!("bad trace line {expect}: {e}\n{line}"));
+        assert_eq!(ev.kind, "tick");
+        assert_eq!(ev.node, Some(0));
+        assert_eq!(ev.tick, expect, "journal not tick-contiguous");
+        expect += 1;
+    }
+    assert_eq!(expect, 200, "one journal line per processed tick");
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
 fn regression_and_lm_streams_train() {
     for (name, ticks) in [("drift-reg", 30usize), ("drift-lm", 12)] {
         let mut cfg = base_cfg();
