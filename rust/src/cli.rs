@@ -108,6 +108,14 @@ COMMANDS:
                       --baseline DIR --current DIR [--tolerance 0.15]
                       exits nonzero when any matching benchmark's median
                       regresses past the tolerance (CI perf gate)
+  trace-analyze       offline profiler over trace journals (schema v1/v2)
+                      trace-analyze JOURNAL [JOURNAL...] [--out FILE]
+                      merges coordinator + PATH.node<i> journals by
+                      (round, node); reports per-arm selection efficiency,
+                      the barrier critical path + straggler table, gossip
+                      vs merge bandwidth, and the drift/γ timeline as
+                      canonical sorted-key JSON (byte-identical for
+                      identical inputs); summary table on stderr
   help                this text
 
 Selector ids: benchmark, uniform, big_loss, small_loss, grad_norm, adaboost,

@@ -112,6 +112,9 @@ pub struct ClusterNode<B: Backend> {
     /// off the digest path (see `obs`); None keeps the node silent
     observer: Option<TickObserver>,
     telemetry_out: Option<Arc<SharedTelemetry>>,
+    /// the coordinator's barrier round; stamped into every journal line
+    /// so offline analysis can merge journals by `(round, node)`
+    round: u64,
 }
 
 impl<B: Backend> ClusterNode<B> {
@@ -165,7 +168,20 @@ impl<B: Backend> ClusterNode<B> {
             trained_at_last_merge: 0,
             observer: None,
             telemetry_out: None,
+            round: 0,
         }
+    }
+
+    /// Adopt the coordinator's barrier round (stamped by `BarrierGo` in
+    /// the process runtime, set directly by the thread coordinator).
+    /// Telemetry-only: the round never feeds selection.
+    pub fn set_round(&mut self, round: u64) {
+        self.round = round;
+    }
+
+    /// The last round adopted via [`ClusterNode::set_round`].
+    pub fn round(&self) -> u64 {
+        self.round
     }
 
     /// Attach a registry/trace observer. Per-node series get a
@@ -260,6 +276,7 @@ impl<B: Backend> ClusterNode<B> {
             let counters = self.engine.store.counters();
             obs.observe(TickSample {
                 tick,
+                round: self.round,
                 gamma: self.engine.effective_gamma() as f32,
                 arrivals: out.arrivals,
                 trained: out.trained,

@@ -128,7 +128,7 @@ impl Worker {
     fn recv(&mut self) -> Option<Message> {
         loop {
             match self.rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(Some(Message::Heartbeat { from, telemetry })) => {
+                Ok(Some(Message::Heartbeat { from, telemetry, .. })) => {
                     publish_worker_heartbeat(from, &telemetry);
                     continue;
                 }
@@ -225,6 +225,13 @@ pub struct Coordinator {
     merges: u64,
     gossip_bytes: u64,
     merge_bytes: u64,
+    /// Monotonically increasing barrier-round id, stamped into every
+    /// `BarrierGo`/`MergePayload` frame so workers echo it into their
+    /// journal lines and offline analysis can merge by `(round, node)`.
+    round: u64,
+    /// Run clock for span timestamps — every span's `start` is seconds on
+    /// this clock, so coordinator spans in one journal share a timeline.
+    span_clock: Stopwatch,
     /// coordinator-side trace journal (`--trace PATH` writes gossip/merge
     /// events here; each worker process journals its ticks to
     /// `PATH.node<id>`)
@@ -266,6 +273,8 @@ impl Coordinator {
             merges: 0,
             gossip_bytes: 0,
             merge_bytes: 0,
+            round: 0,
+            span_clock: Stopwatch::new(),
             journal,
         })
     }
@@ -273,7 +282,15 @@ impl Coordinator {
     /// Journal one coordinator-side wire event (gossip relay / merge).
     fn trace_event(&self, kind: &str, tick: u64, bytes: u64) {
         if let Some(j) = &self.journal {
-            j.handle().emit_wire_event(kind, tick, bytes);
+            j.handle().emit_wire_event(kind, self.round, tick, bytes);
+        }
+    }
+
+    /// Journal one coordinator-side span under the current round. `start`
+    /// is seconds on `span_clock`.
+    fn trace_span(&self, name: &str, tick: u64, node: Option<usize>, start: f64, duration: f64) {
+        if let Some(j) = &self.journal {
+            j.handle().emit_span(name, self.round, tick, node, start, duration);
         }
     }
 
@@ -574,7 +591,8 @@ impl Coordinator {
         let (mat, mut bytes, contributed) = self.take_states();
         anyhow::ensure!(contributed >= 1, "merge with no contributing workers");
         let (avg, snap) = mat.merged()?;
-        let payload = Message::MergePayload { tensors: avg, policy: snap };
+        let payload =
+            Message::MergePayload { round: self.round, tensors: avg, policy: snap };
         wire::check_encodable(&payload)?;
         let frame = wire::encode(&payload);
         let flen = wire::frame_len(&payload) as u64;
@@ -606,12 +624,15 @@ impl Coordinator {
         roll_acc: &mut RollingWindow,
         rolling: &mut Vec<RollingPoint>,
     ) -> anyhow::Result<()> {
+        self.round += 1;
+        let barrier_start = self.span_clock.elapsed_secs();
         let mut flags: Vec<(usize, u8, bool)> = Vec::new();
         for i in 0..self.workers.len() {
             if !(self.workers[i].alive && !self.workers[i].crashed) {
                 continue;
             }
             let go = Message::BarrierGo {
+                round: self.round,
                 until,
                 gossip,
                 merge,
@@ -624,7 +645,12 @@ impl Coordinator {
         }
         for &(i, g, st) in &flags {
             self.collect_one(i, until, g, st)?;
+            let lag = self.span_clock.elapsed_secs() - barrier_start;
+            let id = self.workers[i].id;
+            self.trace_span("ready_lag", until, Some(id), barrier_start, lag);
         }
+        let dur = self.span_clock.elapsed_secs() - barrier_start;
+        self.trace_span("barrier", until, None, barrier_start, dur);
         self.fold_barrier(classification, roll_loss, roll_acc, rolling);
         Ok(())
     }
@@ -778,6 +804,8 @@ impl Coordinator {
             let churn = std::mem::take(&mut self.pending_churn);
 
             // ---- segment barrier: GO, (maybe) chaos, collect ----
+            self.round += 1;
+            let barrier_start = self.span_clock.elapsed_secs();
             let mut flags: Vec<(usize, u8, bool)> = Vec::new(); // (idx, gossip, state?)
             for i in 0..self.workers.len() {
                 if !(self.workers[i].alive && !self.workers[i].crashed) {
@@ -788,6 +816,7 @@ impl Coordinator {
                 let m = cadence_merge && !victim && !is_join;
                 let b = is_join && !victim;
                 let go = Message::BarrierGo {
+                    round: self.round,
                     until: sync,
                     gossip: g,
                     merge: m,
@@ -819,7 +848,12 @@ impl Coordinator {
             }
             for &(i, g, st) in &flags {
                 self.collect_one(i, sync, g, st)?;
+                let lag = self.span_clock.elapsed_secs() - barrier_start;
+                let id = self.workers[i].id;
+                self.trace_span("ready_lag", sync, Some(id), barrier_start, lag);
             }
+            let dur = self.span_clock.elapsed_secs() - barrier_start;
+            self.trace_span("barrier", sync, None, barrier_start, dur);
             self.fold_barrier(classification, &mut roll_loss, &mut roll_acc, &mut rolling);
 
             // ---- churn: crashes first (mirrors kill-before-gossip), then
@@ -843,10 +877,13 @@ impl Coordinator {
             }
 
             if cadence_gossip {
+                let gossip_start = self.span_clock.elapsed_secs();
                 let bytes = self.relay_gossip(gossip_mode);
                 self.gossip_bytes += bytes;
                 self.gossip_rounds += 1;
                 self.trace_event("gossip", sync, bytes);
+                let dur = self.span_clock.elapsed_secs() - gossip_start;
+                self.trace_span("gossip_relay", sync, None, gossip_start, dur);
             }
 
             if is_join {
@@ -859,10 +896,13 @@ impl Coordinator {
                     &mut rolling,
                 )?;
             } else if cadence_merge {
+                let merge_start = self.span_clock.elapsed_secs();
                 let bytes = self.do_merge()?;
                 self.merge_bytes += bytes;
                 self.merges += 1;
                 self.trace_event("merge", sync, bytes);
+                let dur = self.span_clock.elapsed_secs() - merge_start;
+                self.trace_span("merge", sync, None, merge_start, dur);
             }
             prev = sync;
         }
@@ -1005,9 +1045,9 @@ impl Coordinator {
             config: self.cfg_json.clone(),
             chaos: self.chaos_events.clone(),
         };
+        let boot = Message::MergePayload { round: self.round, tensors, policy: snap };
         anyhow::ensure!(
-            self.workers[ji].send(&assign)
-                && self.workers[ji].send(&Message::MergePayload { tensors, policy: snap }),
+            self.workers[ji].send(&assign) && self.workers[ji].send(&boot),
             "coordinator: joiner dropped during bootstrap"
         );
         log::info!("cluster: worker {join_id} joined at tick {sync}");
@@ -1026,15 +1066,21 @@ impl Coordinator {
             rolling,
         )?;
         self.convert_crashes(sync)?;
+        let gossip_start = self.span_clock.elapsed_secs();
         let bytes = self.relay_gossip(GOSSIP_FULL);
         self.gossip_bytes += bytes;
         self.gossip_rounds += 1;
         self.trace_event("gossip", sync, bytes);
+        let dur = self.span_clock.elapsed_secs() - gossip_start;
+        self.trace_span("gossip_relay", sync, None, gossip_start, dur);
         if cadence_merge {
+            let merge_start = self.span_clock.elapsed_secs();
             let bytes = self.do_merge()?;
             self.merge_bytes += bytes;
             self.merges += 1;
             self.trace_event("merge", sync, bytes);
+            let dur = self.span_clock.elapsed_secs() - merge_start;
+            self.trace_span("merge", sync, None, merge_start, dur);
         }
         Ok(())
     }

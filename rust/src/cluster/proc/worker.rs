@@ -5,7 +5,9 @@
 //! (the full cluster config as JSON + this worker's node id and first
 //! tick), then obey frames until `Shutdown`:
 //!
-//!   * `BarrierGo { until, gossip, merge, boot, churn }` — apply any
+//!   * `BarrierGo { round, until, gossip, merge, boot, churn }` — adopt
+//!     the coordinator's barrier-round id (echoed into every journal
+//!     line and reply frame), apply any
 //!     crash-churn orders (ring epoch + backfill of the dead node's
 //!     share), run the tick loop to `until`, then report `BarrierReady`
 //!     (prequential records + running counters) followed by the ordered
@@ -22,7 +24,7 @@
 //! connection and becomes churn.
 
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cluster::node::ClusterNode;
@@ -156,9 +158,13 @@ fn apply_churn(ws: &mut WorkerState, order: &ChurnOrder) -> anyhow::Result<()> {
 }
 
 /// One barrier: run to `until`, then emit BarrierReady + ordered payloads.
+/// `round` is echoed back so the coordinator's journal and this worker's
+/// journal agree on the barrier-round id.
+#[allow(clippy::too_many_arguments)]
 fn run_barrier(
     ws: &mut WorkerState,
     writer: &Mutex<TcpStream>,
+    round: u64,
     until: u64,
     gossip: u8,
     merge: bool,
@@ -168,6 +174,7 @@ fn run_barrier(
     let failed = ws.node.failed.clone().unwrap_or_default();
     let ready = Message::BarrierReady {
         from: ws.node.id,
+        round,
         until,
         preq: ws.node.take_preq(),
         digest: ws.node.digest,
@@ -204,17 +211,23 @@ pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
 
     // heartbeats from a side thread: a long training segment must not
     // read as a dead process. Each beat piggybacks the latest telemetry
-    // snapshot the training loop published to the shared mailbox.
+    // snapshot the training loop published to the shared mailbox, plus
+    // the barrier round the main loop last adopted from a `BarrierGo`.
     let stop = Arc::new(AtomicBool::new(false));
     let telemetry = Arc::new(SharedTelemetry::default());
+    let round = Arc::new(AtomicU64::new(0));
     let hb = {
         let writer = writer.clone();
         let stop = stop.clone();
         let telemetry = telemetry.clone();
+        let round = round.clone();
         std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
-                let beat =
-                    Message::Heartbeat { from: node_id, telemetry: telemetry.load() };
+                let beat = Message::Heartbeat {
+                    from: node_id,
+                    round: round.load(Ordering::Relaxed),
+                    telemetry: telemetry.load(),
+                };
                 if send_msg(&writer, &beat).is_err() {
                     return; // coordinator gone; main loop will notice too
                 }
@@ -223,7 +236,7 @@ pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
         })
     };
 
-    let result = worker_loop(&mut reader, &writer, node_id, &telemetry);
+    let result = worker_loop(&mut reader, &writer, node_id, &telemetry, &round);
     stop.store(true, Ordering::Relaxed);
     // on error, report it on the control channel (best effort) so the
     // coordinator aborts with the cause instead of inferring a crash
@@ -232,6 +245,7 @@ pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
             &writer,
             &Message::BarrierReady {
                 from: node_id,
+                round: round.load(Ordering::Relaxed),
                 until: 0,
                 preq: Vec::new(),
                 digest: 0,
@@ -254,6 +268,7 @@ fn worker_loop(
     writer: &Mutex<TcpStream>,
     node_id: NodeId,
     telemetry: &Arc<SharedTelemetry>,
+    round_out: &Arc<AtomicU64>,
 ) -> anyhow::Result<()> {
     let mut ws: Option<WorkerState> = None;
     loop {
@@ -276,20 +291,24 @@ fn worker_loop(
                 })?;
                 ws.node.merge_store(entries.as_slice());
             }
-            Message::MergePayload { tensors, policy } => {
+            Message::MergePayload { tensors, policy, .. } => {
                 let ws = ws.as_mut().ok_or_else(|| {
                     anyhow::anyhow!("worker {node_id}: merge payload before Assign")
                 })?;
                 ws.node.apply_merged(&tensors, policy.as_ref())?;
             }
-            Message::BarrierGo { until, gossip, merge, boot, churn } => {
+            Message::BarrierGo { round, until, gossip, merge, boot, churn } => {
                 let ws = ws.as_mut().ok_or_else(|| {
                     anyhow::anyhow!("worker {node_id}: barrier before Assign")
                 })?;
+                // adopt the coordinator's round id before any tick runs so
+                // every journal line in this segment carries it
+                ws.node.set_round(round);
+                round_out.store(round, Ordering::Relaxed);
                 for order in &churn {
                     apply_churn(ws, order)?;
                 }
-                run_barrier(ws, writer, until, gossip, merge, boot)?;
+                run_barrier(ws, writer, round, until, gossip, merge, boot)?;
             }
             Message::Shutdown => {
                 log::info!("worker {node_id}: shutdown");

@@ -215,10 +215,31 @@ pub(crate) fn make_engine(
 
 /// Run every alive node up to `end` on its own thread, then surface any
 /// captured worker error.
-fn run_segment(nodes: &mut [ClusterNode<NativeBackend>], end: u64) -> anyhow::Result<()> {
+fn run_segment(
+    nodes: &mut [ClusterNode<NativeBackend>],
+    end: u64,
+) -> anyhow::Result<Vec<(NodeId, f64)>> {
+    // per-node ready lag: seconds from barrier open (all threads start
+    // together) until that node finished its share — the straggler is the
+    // max. Telemetry-only; the scope still joins every thread.
+    let mut lags: Vec<(NodeId, f64)> = Vec::new();
     std::thread::scope(|scope| {
-        for node in nodes.iter_mut().filter(|n| n.alive) {
-            scope.spawn(move || node.run_until(end));
+        let handles: Vec<_> = nodes
+            .iter_mut()
+            .filter(|n| n.alive)
+            .map(|node| {
+                let id = node.id;
+                let h = scope.spawn(move || {
+                    let sw = Stopwatch::new();
+                    node.run_until(end);
+                    sw.elapsed_secs()
+                });
+                (id, h)
+            })
+            .collect();
+        for (id, h) in handles {
+            let secs = h.join().expect("cluster worker thread panicked");
+            lags.push((id, secs));
         }
     });
     for n in nodes.iter() {
@@ -226,7 +247,7 @@ fn run_segment(nodes: &mut [ClusterNode<NativeBackend>], end: u64) -> anyhow::Re
             anyhow::bail!("cluster worker failed: {e}");
         }
     }
-    Ok(())
+    Ok(lags)
 }
 
 /// One gossip round: every alive node broadcasts its store entries (full
@@ -543,9 +564,24 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
     let mut gossip_bytes = 0u64;
     let mut merge_bytes = 0u64;
     let clock = Stopwatch::new();
+    let mut round = 0u64;
 
     for &sync in &sync_points(cfg) {
-        run_segment(&mut nodes, sync)?;
+        round += 1;
+        for n in nodes.iter_mut().filter(|n| n.alive) {
+            n.set_round(round);
+        }
+        let barrier_start = clock.elapsed_secs();
+        let lags = run_segment(&mut nodes, sync)?;
+        if let Some(t) = &trace {
+            // barrier span covers open → all nodes ready; per-node
+            // ready_lag spans time each node's share of the segment
+            let dur = clock.elapsed_secs() - barrier_start;
+            t.emit_span("barrier", round, sync, None, barrier_start, dur);
+            for &(id, secs) in &lags {
+                t.emit_span("ready_lag", round, sync, Some(id), barrier_start, secs);
+            }
+        }
         fold_preq(&mut nodes, classification, &mut roll_loss, &mut roll_acc, &mut rolling);
         publish_barrier_gauges(&nodes, classification, &roll_loss, &roll_acc);
 
@@ -590,11 +626,14 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
                 .attach_observer(trace.clone());
             // seed the newcomer's store right away — always with full
             // snapshots, whatever the steady-state gossip mode
+            let gossip_start = clock.elapsed_secs();
             let bytes = gossip_stores(&mut nodes, transport.as_ref(), true)?;
             gossip_bytes += bytes;
             gossip_rounds += 1;
             if let Some(t) = &trace {
-                t.emit_wire_event("gossip", sync, bytes);
+                t.emit_wire_event("gossip", round, sync, bytes);
+                let dur = clock.elapsed_secs() - gossip_start;
+                t.emit_span("gossip_relay", round, sync, None, gossip_start, dur);
             }
             did_gossip = true;
             log::info!("cluster: node {id} joined at tick {sync}");
@@ -607,19 +646,25 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
             {
                 let full =
                     !delta_gossip || gossip_rounds % cfg.full_gossip_every as u64 == 0;
+                let gossip_start = clock.elapsed_secs();
                 let bytes = gossip_stores(&mut nodes, transport.as_ref(), full)?;
                 gossip_bytes += bytes;
                 gossip_rounds += 1;
                 if let Some(t) = &trace {
-                    t.emit_wire_event("gossip", sync, bytes);
+                    t.emit_wire_event("gossip", round, sync, bytes);
+                    let dur = clock.elapsed_secs() - gossip_start;
+                    t.emit_span("gossip_relay", round, sync, None, gossip_start, dur);
                 }
             }
             if cfg.merge_every > 0 && sync % cfg.merge_every as u64 == 0 {
+                let merge_start = clock.elapsed_secs();
                 let bytes = merge_models(&mut nodes, transport.as_ref())?;
                 merge_bytes += bytes;
                 merges += 1;
                 if let Some(t) = &trace {
-                    t.emit_wire_event("merge", sync, bytes);
+                    t.emit_wire_event("merge", round, sync, bytes);
+                    let dur = clock.elapsed_secs() - merge_start;
+                    t.emit_span("merge", round, sync, None, merge_start, dur);
                 }
             }
         }

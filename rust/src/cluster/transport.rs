@@ -79,11 +79,15 @@ pub enum Message {
         config: String,
         chaos: Vec<(u64, NodeId)>,
     },
-    /// Coordinator → worker: run to `until`, then report. `gossip`
-    /// (GOSSIP_*) and `merge`/`boot` order the barrier payloads the
-    /// worker must send after its `BarrierReady`; `churn` carries
-    /// crash conversions to apply *before* running.
+    /// Coordinator → worker: run to `until`, then report. `round` is the
+    /// coordinator's monotonically increasing barrier-round id — workers
+    /// echo it into every trace-journal line so offline analysis can
+    /// merge journals by `(round, node)`. `gossip` (GOSSIP_*) and
+    /// `merge`/`boot` order the barrier payloads the worker must send
+    /// after its `BarrierReady`; `churn` carries crash conversions to
+    /// apply *before* running.
     BarrierGo {
+        round: u64,
         until: u64,
         gossip: u8,
         merge: bool,
@@ -95,9 +99,11 @@ pub enum Message {
     /// counters, so the coordinator's last-seen values double as the
     /// node summary even if the process later dies. `failed` is empty on
     /// success (a non-empty string aborts the run, mirroring the
-    /// thread coordinator's error propagation).
+    /// thread coordinator's error propagation). `round` echoes the
+    /// triggering `BarrierGo`'s round id.
     BarrierReady {
         from: NodeId,
+        round: u64,
         until: u64,
         preq: Vec<NodePreq>,
         digest: u64,
@@ -110,8 +116,10 @@ pub enum Message {
         failed: String,
     },
     /// Coordinator → worker: the cluster-averaged model tensors + policy
-    /// snapshot to adopt (merge barriers and join bootstrap).
+    /// snapshot to adopt (merge barriers and join bootstrap), stamped
+    /// with the barrier round that produced the merge.
     MergePayload {
+        round: u64,
         tensors: Vec<Tensor>,
         policy: Option<AdaSnapshot>,
     },
@@ -120,8 +128,13 @@ pub enum Message {
     /// Liveness keep-alive (worker → coordinator, from a side thread, so
     /// a hung process is distinguishable from a long training segment).
     /// Piggybacks a compact telemetry snapshot so the coordinator can
-    /// aggregate fleet-wide metrics without a second channel.
-    Heartbeat { from: NodeId, telemetry: TelemetrySnapshot },
+    /// aggregate fleet-wide metrics without a second channel, plus the
+    /// last barrier round the worker has started.
+    Heartbeat {
+        from: NodeId,
+        round: u64,
+        telemetry: TelemetrySnapshot,
+    },
 }
 
 /// Compact per-worker counters riding on `Heartbeat`. All cumulative

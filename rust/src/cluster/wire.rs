@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! magic    u16  = 0xAD51          (little-endian, like every field)
-//! version  u8   = 1
+//! version  u8   = 2               (v1 frames still decode; see below)
 //! len      u32  — payload bytes that follow
 //! payload  [u8; len]
 //! checksum u32  — FNV-1a-32 over the payload
@@ -17,6 +17,13 @@
 //! checksum mismatches, absurd length prefixes and malformed payloads all
 //! return errors, never panic, so a misbehaving peer cannot take a node
 //! down.
+//!
+//! **v1 → v2:** v2 adds a `round: u64` barrier-round id to the
+//! `BarrierGo`/`BarrierReady`/`MergePayload`/`Heartbeat` control frames
+//! (round-scoped tracing). Encoding always writes v2; decoding accepts
+//! v1 frames and defaults their `round` to 0, so an old capture or an
+//! old peer's control frames still parse. Versions above [`VERSION`]
+//! are rejected with an explicit error.
 //!
 //! [`frame_len`] computes a message's on-wire size without encoding it;
 //! the coordinator uses it to report gossip/merge bandwidth for *every*
@@ -35,7 +42,10 @@ use crate::stream::InstanceRecord;
 /// Frame magic ("AdaSelection wire").
 pub const MAGIC: u16 = 0xAD51;
 /// Current wire-format version; bumped on any layout change.
-pub const VERSION: u8 = 1;
+pub const VERSION: u8 = 2;
+/// Oldest version this node still decodes (v1 control frames carry no
+/// `round`; it defaults to 0).
+pub const MIN_VERSION: u8 = 1;
 /// Bytes before the payload: magic (2) + version (1) + length (4).
 pub const HEADER_LEN: usize = 7;
 /// Bytes after the payload: the FNV-1a-32 checksum.
@@ -111,15 +121,15 @@ pub fn payload_len(msg: &Message) -> usize {
         Message::Assign { config, chaos, .. } => {
             1 + 8 + 8 + 4 + config.len() + 4 + chaos.len() * CHAOS_LEN
         }
-        Message::BarrierGo { churn, .. } => 1 + 8 + 1 + 1 + 1 + 4 + churn.len() * CHURN_LEN,
+        Message::BarrierGo { churn, .. } => 1 + 8 + 8 + 1 + 1 + 1 + 4 + churn.len() * CHURN_LEN,
         Message::BarrierReady { preq, failed, .. } => {
-            1 + 8 + 8 + 4 + preq.len() * PREQ_LEN + 7 * 8 + 4 + failed.len()
+            1 + 8 + 8 + 8 + 4 + preq.len() * PREQ_LEN + 7 * 8 + 4 + failed.len()
         }
-        Message::MergePayload { tensors, policy } => {
-            1 + tensors_len(tensors) + policy_len(policy)
+        Message::MergePayload { tensors, policy, .. } => {
+            1 + 8 + tensors_len(tensors) + policy_len(policy)
         }
         Message::Shutdown => 1,
-        Message::Heartbeat { .. } => 1 + 8 + 6 * 8,
+        Message::Heartbeat { .. } => 1 + 8 + 8 + 6 * 8,
     }
 }
 
@@ -274,8 +284,9 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
                 put_u64(&mut b, node as u64);
             }
         }
-        Message::BarrierGo { until, gossip, merge, boot, churn } => {
+        Message::BarrierGo { round, until, gossip, merge, boot, churn } => {
             b.push(TAG_BARRIER_GO);
+            put_u64(&mut b, *round);
             put_u64(&mut b, *until);
             b.push(*gossip);
             b.push(*merge as u8);
@@ -289,6 +300,7 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
         }
         Message::BarrierReady {
             from,
+            round,
             until,
             preq,
             digest,
@@ -302,6 +314,7 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
         } => {
             b.push(TAG_BARRIER_READY);
             put_u64(&mut b, *from as u64);
+            put_u64(&mut b, *round);
             put_u64(&mut b, *until);
             put_u32(&mut b, preq.len() as u32);
             for p in preq {
@@ -320,15 +333,17 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
             put_u32(&mut b, failed.len() as u32);
             b.extend_from_slice(failed.as_bytes());
         }
-        Message::MergePayload { tensors, policy } => {
+        Message::MergePayload { round, tensors, policy } => {
             b.push(TAG_MERGE_PAYLOAD);
+            put_u64(&mut b, *round);
             put_tensors(&mut b, tensors);
             put_policy(&mut b, policy);
         }
         Message::Shutdown => b.push(TAG_SHUTDOWN),
-        Message::Heartbeat { from, telemetry } => {
+        Message::Heartbeat { from, round, telemetry } => {
             b.push(TAG_HEARTBEAT);
             put_u64(&mut b, *from as u64);
+            put_u64(&mut b, *round);
             put_u64(&mut b, telemetry.ticks);
             put_u64(&mut b, telemetry.samples_seen);
             put_u64(&mut b, telemetry.samples_trained);
@@ -353,19 +368,21 @@ pub fn encode(msg: &Message) -> Vec<u8> {
     out
 }
 
-/// Validate a header slice (≥ [`HEADER_LEN`] bytes); returns the payload
-/// length.
-fn parse_header(h: &[u8]) -> anyhow::Result<usize> {
+/// Validate a header slice (≥ [`HEADER_LEN`] bytes); returns the frame
+/// version and the payload length. Any version in
+/// `[MIN_VERSION, VERSION]` is accepted — the payload decoder handles
+/// per-version layout differences.
+fn parse_header(h: &[u8]) -> anyhow::Result<(u8, usize)> {
     let magic = u16::from_le_bytes([h[0], h[1]]);
     anyhow::ensure!(magic == MAGIC, "wire: bad magic {magic:#06x} (want {MAGIC:#06x})");
     anyhow::ensure!(
-        h[2] == VERSION,
-        "wire: version mismatch: peer speaks v{}, this node v{VERSION}",
+        (MIN_VERSION..=VERSION).contains(&h[2]),
+        "wire: version mismatch: peer speaks v{}, this node v{VERSION} (accepts v{MIN_VERSION}..v{VERSION})",
         h[2]
     );
     let len = u32::from_le_bytes([h[3], h[4], h[5], h[6]]) as usize;
     anyhow::ensure!(len <= MAX_PAYLOAD, "wire: payload length {len} exceeds {MAX_PAYLOAD}");
-    Ok(len)
+    Ok((h[2], len))
 }
 
 /// Bounds-checked payload reader.
@@ -499,8 +516,16 @@ fn read_policy(c: &mut Cursor) -> anyhow::Result<Option<AdaSnapshot>> {
     })
 }
 
-fn decode_payload(payload: &[u8]) -> anyhow::Result<Message> {
+fn decode_payload(version: u8, payload: &[u8]) -> anyhow::Result<Message> {
     let mut c = Cursor { buf: payload, pos: 0 };
+    // v1 control frames carry no round id; default it to 0
+    let round_field = |c: &mut Cursor| -> anyhow::Result<u64> {
+        if version >= 2 {
+            c.u64()
+        } else {
+            Ok(0)
+        }
+    };
     let msg = match c.u8()? {
         TAG_GOSSIP => {
             let from = c.u64()? as NodeId;
@@ -546,6 +571,7 @@ fn decode_payload(payload: &[u8]) -> anyhow::Result<Message> {
             Message::Assign { node, first_tick, config, chaos }
         }
         TAG_BARRIER_GO => {
+            let round = round_field(&mut c)?;
             let until = c.u64()?;
             let gossip = c.u8()?;
             anyhow::ensure!(gossip <= 2, "wire: bad gossip order {gossip}");
@@ -563,10 +589,11 @@ fn decode_payload(payload: &[u8]) -> anyhow::Result<Message> {
                 let backfill_to = c.u64()?;
                 churn.push(ChurnOrder { dead, epoch_tick, backfill_to });
             }
-            Message::BarrierGo { until, gossip, merge, boot, churn }
+            Message::BarrierGo { round, until, gossip, merge, boot, churn }
         }
         TAG_BARRIER_READY => {
             let from = c.u64()? as NodeId;
+            let round = round_field(&mut c)?;
             let until = c.u64()?;
             let n = c.u32()? as usize;
             anyhow::ensure!(
@@ -591,6 +618,7 @@ fn decode_payload(payload: &[u8]) -> anyhow::Result<Message> {
             let failed = c.string()?;
             Message::BarrierReady {
                 from,
+                round,
                 until,
                 preq,
                 digest,
@@ -604,13 +632,15 @@ fn decode_payload(payload: &[u8]) -> anyhow::Result<Message> {
             }
         }
         TAG_MERGE_PAYLOAD => {
+            let round = round_field(&mut c)?;
             let tensors = read_tensors(&mut c)?;
             let policy = read_policy(&mut c)?;
-            Message::MergePayload { tensors, policy }
+            Message::MergePayload { round, tensors, policy }
         }
         TAG_SHUTDOWN => Message::Shutdown,
         TAG_HEARTBEAT => Message::Heartbeat {
             from: c.u64()? as NodeId,
+            round: round_field(&mut c)?,
             telemetry: TelemetrySnapshot {
                 ticks: c.u64()?,
                 samples_seen: c.u64()?,
@@ -635,7 +665,7 @@ pub fn decode(buf: &[u8]) -> anyhow::Result<Message> {
         buf.len(),
         HEADER_LEN + TRAILER_LEN
     );
-    let payload_len = parse_header(&buf[..HEADER_LEN])?;
+    let (version, payload_len) = parse_header(&buf[..HEADER_LEN])?;
     let total = HEADER_LEN + payload_len + TRAILER_LEN;
     anyhow::ensure!(
         buf.len() == total,
@@ -645,7 +675,7 @@ pub fn decode(buf: &[u8]) -> anyhow::Result<Message> {
     let payload = &buf[HEADER_LEN..HEADER_LEN + payload_len];
     let want = u32::from_le_bytes(buf[total - TRAILER_LEN..].try_into().unwrap());
     anyhow::ensure!(want == fnv1a32(payload), "wire: checksum mismatch");
-    decode_payload(payload)
+    decode_payload(version, payload)
 }
 
 /// Read one frame from a byte stream. `Ok(None)` on a clean EOF *between*
@@ -666,14 +696,14 @@ pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Option<Message>> {
             Err(e) => return Err(e.into()),
         }
     }
-    let payload_len = parse_header(&header)?;
+    let (version, payload_len) = parse_header(&header)?;
     let mut rest = vec![0u8; payload_len + TRAILER_LEN];
     r.read_exact(&mut rest)
         .map_err(|e| anyhow::anyhow!("wire: EOF inside a frame body: {e}"))?;
     let payload = &rest[..payload_len];
     let want = u32::from_le_bytes(rest[payload_len..].try_into().unwrap());
     anyhow::ensure!(want == fnv1a32(payload), "wire: checksum mismatch");
-    decode_payload(payload).map(Some)
+    decode_payload(version, payload).map(Some)
 }
 
 #[cfg(test)]
@@ -1001,15 +1031,24 @@ mod tests {
                 chaos: vec![(64, 1), (96, 2)],
             },
             Message::BarrierGo {
+                round: 6,
                 until: 96,
                 gossip: 2,
                 merge: true,
                 boot: false,
                 churn: vec![ChurnOrder { dead: 1, epoch_tick: 64, backfill_to: 96 }],
             },
-            Message::BarrierGo { until: 8, gossip: 0, merge: false, boot: true, churn: vec![] },
+            Message::BarrierGo {
+                round: 0,
+                until: 8,
+                gossip: 0,
+                merge: false,
+                boot: true,
+                churn: vec![],
+            },
             Message::BarrierReady {
                 from: 2,
+                round: 6,
                 until: 96,
                 preq: vec![
                     NodePreq { tick: 90, loss_sum: 1.25, correct: 11.0, arrivals: 17 },
@@ -1026,6 +1065,7 @@ mod tests {
             },
             Message::BarrierReady {
                 from: 0,
+                round: 0,
                 until: 0,
                 preq: vec![],
                 digest: 0,
@@ -1038,6 +1078,7 @@ mod tests {
                 failed: "node 0: loader ended early".to_string(),
             },
             Message::MergePayload {
+                round: 12,
                 tensors: vec![Tensor { shape: vec![2, 3], data: vec![0.5; 6] }],
                 policy: Some(AdaSnapshot {
                     w: vec![0.25, 0.75],
@@ -1046,10 +1087,11 @@ mod tests {
                     ids: None,
                 }),
             },
-            Message::MergePayload { tensors: Vec::new(), policy: None },
+            Message::MergePayload { round: 0, tensors: Vec::new(), policy: None },
             Message::Shutdown,
             Message::Heartbeat {
                 from: 7,
+                round: 11,
                 telemetry: TelemetrySnapshot {
                     ticks: 41,
                     samples_seen: 1312,
@@ -1072,6 +1114,7 @@ mod tests {
         }
         // oversized merge payloads fail at the sender, like State
         let bad = Message::MergePayload {
+            round: 0,
             tensors: vec![Tensor { shape: vec![1; MAX_RANK + 1], data: vec![0.0] }],
             policy: None,
         };
@@ -1093,6 +1136,92 @@ mod tests {
         frame[at..].copy_from_slice(&sum.to_le_bytes());
         let err = decode(&frame).unwrap_err().to_string();
         assert!(err.contains("UTF-8"), "unexpected error: {err}");
+    }
+
+    /// Frame `payload` under an explicit header version (encode always
+    /// writes [`VERSION`]; v1 frames must be built by hand).
+    fn frame_with_version(version: u8, payload: &[u8]) -> Vec<u8> {
+        let mut f = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+        f.extend_from_slice(&MAGIC.to_le_bytes());
+        f.push(version);
+        f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        f.extend_from_slice(payload);
+        f.extend_from_slice(&fnv1a32(payload).to_le_bytes());
+        f
+    }
+
+    #[test]
+    fn v1_control_frames_still_decode_with_round_zero() {
+        // a v1 BarrierGo payload: tag, until, gossip, merge, boot, churn
+        // (no round field existed in v1)
+        let mut go = vec![TAG_BARRIER_GO];
+        go.extend_from_slice(&96u64.to_le_bytes()); // until
+        go.push(2); // gossip = FULL
+        go.push(1); // merge
+        go.push(0); // boot
+        go.extend_from_slice(&1u32.to_le_bytes()); // one churn order
+        go.extend_from_slice(&1u64.to_le_bytes()); // dead
+        go.extend_from_slice(&64u64.to_le_bytes()); // epoch_tick
+        go.extend_from_slice(&96u64.to_le_bytes()); // backfill_to
+        match decode(&frame_with_version(1, &go)).unwrap() {
+            Message::BarrierGo { round, until, gossip, merge, boot, churn } => {
+                assert_eq!(round, 0, "v1 frames default round to 0");
+                assert_eq!(until, 96);
+                assert_eq!(gossip, 2);
+                assert!(merge);
+                assert!(!boot);
+                assert_eq!(churn, vec![ChurnOrder { dead: 1, epoch_tick: 64, backfill_to: 96 }]);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // the same payload under a v2 header is short by the round field
+        assert!(decode(&frame_with_version(2, &go)).is_err());
+
+        // a v1 Heartbeat payload: tag, from, 6 telemetry u64s
+        let mut hb = vec![TAG_HEARTBEAT];
+        hb.extend_from_slice(&7u64.to_le_bytes()); // from
+        for v in [41u64, 1312, 650, 12, 2, 96] {
+            hb.extend_from_slice(&v.to_le_bytes());
+        }
+        match decode(&frame_with_version(1, &hb)).unwrap() {
+            Message::Heartbeat { from, round, telemetry } => {
+                assert_eq!(from, 7);
+                assert_eq!(round, 0);
+                assert_eq!(telemetry.ticks, 41);
+                assert_eq!(telemetry.store_len, 96);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert!(decode(&frame_with_version(2, &hb)).is_err());
+
+        // a v1 MergePayload: tag, empty tensor list, no policy
+        let mut mp = vec![TAG_MERGE_PAYLOAD];
+        mp.extend_from_slice(&0u32.to_le_bytes()); // 0 tensors
+        mp.push(0); // policy = None
+        match decode(&frame_with_version(1, &mp)).unwrap() {
+            Message::MergePayload { round, tensors, policy } => {
+                assert_eq!(round, 0);
+                assert!(tensors.is_empty());
+                assert!(policy.is_none());
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        // non-control v1 frames (unchanged layout) decode identically
+        let hello = vec![TAG_HELLO, 3, 0, 0, 0, 0, 0, 0, 0];
+        assert!(matches!(
+            decode(&frame_with_version(1, &hello)).unwrap(),
+            Message::Hello { from: 3 }
+        ));
+        // the stream reader is version-aware too
+        let mut r = &frame_with_version(1, &go)[..];
+        assert!(matches!(
+            read_frame(&mut r).unwrap().unwrap(),
+            Message::BarrierGo { round: 0, until: 96, .. }
+        ));
+        // versions above VERSION stay rejected
+        let err = decode(&frame_with_version(VERSION + 1, &go)).unwrap_err().to_string();
+        assert!(err.contains("version"), "unhelpful version error: {err}");
     }
 
     #[test]

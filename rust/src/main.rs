@@ -44,6 +44,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         "inspect-artifacts" => cmd_inspect(args),
         "gen-data" => cmd_gen_data(args),
         "bench-diff" => cmd_bench_diff(args),
+        "trace-analyze" => cmd_trace_analyze(args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -385,6 +386,29 @@ fn cmd_bench_diff(args: &Args) -> anyhow::Result<()> {
         );
     }
     println!("bench-diff: no regressions");
+    Ok(())
+}
+
+/// Offline trace profiler: merge a run's journals (coordinator +
+/// `PATH.node<i>`), validate every line, and emit the canonical report.
+/// JSON goes to `--out FILE` or stdout; the human summary to stderr so
+/// piping the JSON stays clean.
+fn cmd_trace_analyze(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !args.positionals.is_empty(),
+        "trace-analyze requires at least one journal path"
+    );
+    let paths: Vec<PathBuf> = args.positionals.iter().map(PathBuf::from).collect();
+    let report = adaselection::obs::analyze::analyze_files(&paths)?;
+    let json = report.to_string();
+    match args.flag("out") {
+        Some(out) => {
+            std::fs::write(out, format!("{json}\n"))?;
+            eprintln!("trace-analyze: wrote {out}");
+        }
+        None => println!("{json}"),
+    }
+    eprint!("{}", adaselection::obs::analyze::render_summary(&report));
     Ok(())
 }
 

@@ -1,0 +1,810 @@
+//! Offline trace profiler: `adaselection trace-analyze J [J...]`.
+//!
+//! Merges one run's journals — the coordinator journal plus each
+//! worker's `PATH.node<i>` file — by `(round, node)` and computes the
+//! four attribution views the paper's efficiency story needs:
+//!
+//! * **per-arm selection efficiency** — forward rows, backward rows
+//!   (trained + replayed) and prequential-loss delta attributed to each
+//!   bandit arm per round window, weighted by the arm's posted weight on
+//!   every tick (ticks without weights fall back to one implicit arm);
+//! * **barrier critical path** — per-round barrier open→all-ready
+//!   duration from `span` events, the per-node ready lags behind it, a
+//!   straggler table (who was slowest, how often) and a lag histogram;
+//! * **wire bandwidth** — gossip vs merge bytes per round and in total;
+//! * **drift timeline** — every detector fire (cumulative `drift`
+//!   increments per node) with the effective γ around it, so boosts are
+//!   visible next to the event that caused them.
+//!
+//! The report is canonical: sorted-key JSON (the [`Json`] writer emits
+//! `BTreeMap` order), derived purely from the input bytes — identical
+//! journals produce byte-identical reports, pinned by `input_hash` /
+//! `report_hash` (FNV-1a/64). Every line must validate against schema
+//! v1 or v2 ([`trace::validate_line`]); any invalid line aborts the
+//! analysis with its `file:line` location.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use crate::obs::trace;
+use crate::util::json::Json;
+
+/// FNV-1a/64 offset basis (the 32-bit sibling lives in `stream::tick`).
+const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV64_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Lag-histogram upper bounds, seconds (`None` = +Inf overflow bucket).
+const LAG_BOUNDS: [f64; 5] = [0.0001, 0.001, 0.01, 0.1, 1.0];
+
+/// Arm id used when a tick posts no bandit weights (single-method runs).
+const IMPLICIT_ARM: &str = "(single)";
+
+fn fnv1a64(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+/// One `kind:"tick"` line, decoded past validation.
+struct TickRow {
+    node: usize,
+    tick: u64,
+    round: u64,
+    gamma: f64,
+    arrivals: u64,
+    trained: u64,
+    replayed: u64,
+    forward: u64,
+    /// cumulative detector fires as of this tick
+    drift: u64,
+    weights: Vec<(String, f64)>,
+    rolling_loss: Option<f64>,
+}
+
+struct WireRow {
+    kind: String,
+    round: u64,
+    bytes: u64,
+}
+
+struct SpanRow {
+    name: String,
+    round: u64,
+    tick: u64,
+    node: Option<usize>,
+    duration: f64,
+}
+
+#[derive(Default)]
+struct Journals {
+    ticks: Vec<TickRow>,
+    wire: Vec<WireRow>,
+    spans: Vec<SpanRow>,
+    lines: u64,
+    versions: BTreeSet<u64>,
+}
+
+fn parse_line(name: &str, lineno: usize, line: &str, out: &mut Journals) -> anyhow::Result<()> {
+    let ev = trace::validate_line(line)
+        .map_err(|e| anyhow::anyhow!("{name}:{}: {e}", lineno + 1))?;
+    let j = Json::parse(line).expect("validated line re-parses");
+    out.lines += 1;
+    out.versions.insert(j.at(&["v"])?.as_usize()? as u64);
+    match ev.kind.as_str() {
+        "tick" => {
+            let weights = j
+                .at(&["weights"])?
+                .as_obj()?
+                .iter()
+                .filter_map(|(arm, w)| w.as_f64().ok().map(|w| (arm.clone(), w)))
+                .collect();
+            let rolling_loss = j
+                .get("rolling")
+                .and_then(|r| r.get("loss"))
+                .and_then(|l| l.as_f64().ok());
+            out.ticks.push(TickRow {
+                node: ev.node.unwrap_or(0),
+                tick: ev.tick,
+                round: ev.round,
+                gamma: j.at(&["gamma"])?.as_f64().unwrap_or(0.0),
+                arrivals: j.at(&["arrivals"])?.as_usize()? as u64,
+                trained: j.at(&["trained"])?.as_usize()? as u64,
+                replayed: j.at(&["replayed"])?.as_usize()? as u64,
+                forward: j.at(&["forward"])?.as_usize()? as u64,
+                drift: j.at(&["drift"])?.as_usize()? as u64,
+                weights,
+                rolling_loss,
+            });
+        }
+        "gossip" | "merge" => out.wire.push(WireRow {
+            kind: ev.kind,
+            round: ev.round,
+            bytes: j.at(&["bytes"])?.as_usize()? as u64,
+        }),
+        "span" => out.spans.push(SpanRow {
+            name: ev.name.clone().unwrap_or_default(),
+            round: ev.round,
+            tick: ev.tick,
+            node: ev.node,
+            duration: j.at(&["duration"])?.as_f64()?,
+        }),
+        _ => unreachable!("validate_line admits only known kinds"),
+    }
+    Ok(())
+}
+
+/// Per-arm accumulator for one window (= one barrier round).
+#[derive(Default, Clone)]
+struct ArmShare {
+    forward: f64,
+    backward: f64,
+    loss_delta: f64,
+    weight_sum: f64,
+    weighted_ticks: u64,
+}
+
+fn attribution(ticks: &[TickRow]) -> (Json, Json) {
+    // window = barrier round (stream journals collapse to round 0)
+    let mut windows: BTreeMap<u64, BTreeMap<String, ArmShare>> = BTreeMap::new();
+    let mut window_loss: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut ordered: Vec<&TickRow> = ticks.iter().collect();
+    ordered.sort_by_key(|t| (t.round, t.tick, t.node));
+    for t in &ordered {
+        let arms = windows.entry(t.round).or_default();
+        let fwd = t.forward as f64;
+        let bwd = (t.trained + t.replayed) as f64;
+        let wsum: f64 = t.weights.iter().map(|(_, w)| w.max(0.0)).sum();
+        if t.weights.is_empty() || wsum <= 0.0 {
+            let a = arms.entry(IMPLICIT_ARM.to_string()).or_default();
+            a.forward += fwd;
+            a.backward += bwd;
+        } else {
+            for (arm, w) in &t.weights {
+                let share = w.max(0.0) / wsum;
+                let a = arms.entry(arm.clone()).or_default();
+                a.forward += fwd * share;
+                a.backward += bwd * share;
+                a.weight_sum += w.max(0.0);
+                a.weighted_ticks += 1;
+            }
+        }
+        if let Some(loss) = t.rolling_loss {
+            window_loss.insert(t.round, loss); // ordered scan → last wins
+        }
+    }
+    // prequential-loss delta per window, split across arms by backward share
+    let mut prev_loss: Option<f64> = None;
+    for (round, arms) in windows.iter_mut() {
+        let Some(&loss) = window_loss.get(round) else { continue };
+        let delta = loss - prev_loss.unwrap_or(loss);
+        prev_loss = Some(loss);
+        let total_bwd: f64 = arms.values().map(|a| a.backward).sum();
+        if total_bwd > 0.0 {
+            for a in arms.values_mut() {
+                a.loss_delta = delta * a.backward / total_bwd;
+            }
+        }
+    }
+    // totals across windows
+    let mut totals: BTreeMap<String, ArmShare> = BTreeMap::new();
+    let mut arm_windows: BTreeMap<String, u64> = BTreeMap::new();
+    for arms in windows.values() {
+        for (arm, a) in arms {
+            let t = totals.entry(arm.clone()).or_default();
+            t.forward += a.forward;
+            t.backward += a.backward;
+            t.loss_delta += a.loss_delta;
+            t.weight_sum += a.weight_sum;
+            t.weighted_ticks += a.weighted_ticks;
+            *arm_windows.entry(arm.clone()).or_default() += 1;
+        }
+    }
+    let arm_json = |a: &ArmShare, windows: u64| {
+        let mut m = vec![
+            ("backward_rows", Json::from(round3(a.backward))),
+            ("forward_rows", Json::from(round3(a.forward))),
+            ("loss_delta", Json::from(round6(a.loss_delta))),
+            ("windows", Json::from(windows as usize)),
+        ];
+        if a.weighted_ticks > 0 {
+            m.push((
+                "mean_weight",
+                Json::from(round6(a.weight_sum / a.weighted_ticks as f64)),
+            ));
+        }
+        Json::obj(m)
+    };
+    let totals_json = Json::Obj(
+        totals
+            .iter()
+            .map(|(arm, a)| (arm.clone(), arm_json(a, arm_windows[arm])))
+            .collect(),
+    );
+    let per_window = Json::Arr(
+        windows
+            .iter()
+            .map(|(round, arms)| {
+                Json::obj(vec![
+                    (
+                        "arms",
+                        Json::Obj(
+                            arms.iter().map(|(arm, a)| (arm.clone(), arm_json(a, 1))).collect(),
+                        ),
+                    ),
+                    ("round", Json::from(*round as usize)),
+                ])
+            })
+            .collect(),
+    );
+    (totals_json, per_window)
+}
+
+fn barriers(spans: &[SpanRow]) -> Json {
+    let mut rounds: BTreeMap<u64, (Option<(u64, f64)>, Vec<(usize, f64)>)> = BTreeMap::new();
+    for s in spans {
+        let entry = rounds.entry(s.round).or_default();
+        match s.name.as_str() {
+            "barrier" => entry.0 = Some((s.tick, s.duration)),
+            "ready_lag" => {
+                if let Some(n) = s.node {
+                    entry.1.push((n, s.duration));
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut per_round = Vec::new();
+    let mut hist = vec![0u64; LAG_BOUNDS.len() + 1];
+    let mut by_node: BTreeMap<usize, (u64, f64, f64, u64)> = BTreeMap::new(); // slowest, max, sum, count
+    for (round, (barrier, mut lags)) in rounds {
+        lags.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut straggler: Option<(usize, f64)> = None;
+        for &(node, lag) in &lags {
+            let bucket = LAG_BOUNDS.iter().position(|&b| lag <= b).unwrap_or(LAG_BOUNDS.len());
+            hist[bucket] += 1;
+            let e = by_node.entry(node).or_insert((0, 0.0, 0.0, 0));
+            e.1 = e.1.max(lag);
+            e.2 += lag;
+            e.3 += 1;
+            if straggler.map(|(_, worst)| lag > worst).unwrap_or(true) {
+                straggler = Some((node, lag));
+            }
+        }
+        if let Some((node, _)) = straggler {
+            by_node.get_mut(&node).unwrap().0 += 1;
+        }
+        let mut row = vec![("round", Json::from(round as usize))];
+        if let Some((tick, duration)) = barrier {
+            row.push(("duration", Json::from(round6(duration))));
+            row.push(("tick", Json::from(tick as usize)));
+        }
+        row.push((
+            "ready",
+            Json::Arr(
+                lags.iter()
+                    .map(|&(node, lag)| {
+                        Json::obj(vec![
+                            ("lag", Json::from(round6(lag))),
+                            ("node", Json::from(node)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+        if let Some((node, lag)) = straggler {
+            row.push((
+                "straggler",
+                Json::obj(vec![("lag", Json::from(round6(lag))), ("node", Json::from(node))]),
+            ));
+        }
+        per_round.push(Json::obj(row));
+    }
+    let histogram = Json::Arr(
+        hist.iter()
+            .enumerate()
+            .map(|(i, &count)| {
+                Json::obj(vec![
+                    ("count", Json::from(count as usize)),
+                    (
+                        "le",
+                        LAG_BOUNDS.get(i).map(|&b| Json::from(b)).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    let stragglers = Json::Arr(
+        by_node
+            .iter()
+            .map(|(&node, &(slowest, max, sum, count))| {
+                Json::obj(vec![
+                    ("max_lag", Json::from(round6(max))),
+                    (
+                        "mean_lag",
+                        Json::from(round6(if count > 0 { sum / count as f64 } else { 0.0 })),
+                    ),
+                    ("node", Json::from(node)),
+                    ("rounds_slowest", Json::from(slowest as usize)),
+                ])
+            })
+            .collect(),
+    );
+    let n_rounds = per_round.len();
+    Json::obj(vec![
+        ("lag_histogram", histogram),
+        ("per_round", Json::Arr(per_round)),
+        ("rounds", Json::from(n_rounds)),
+        ("stragglers", stragglers),
+    ])
+}
+
+fn bandwidth(wire: &[WireRow]) -> Json {
+    let mut per_round: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+    let (mut gossip_total, mut merge_total) = (0u64, 0u64);
+    for w in wire {
+        let e = per_round.entry(w.round).or_default();
+        if w.kind == "gossip" {
+            e.0 += w.bytes;
+            gossip_total += w.bytes;
+        } else {
+            e.1 += w.bytes;
+            merge_total += w.bytes;
+        }
+    }
+    Json::obj(vec![
+        ("gossip_bytes_total", Json::from(gossip_total as usize)),
+        ("merge_bytes_total", Json::from(merge_total as usize)),
+        (
+            "per_round",
+            Json::Arr(
+                per_round
+                    .iter()
+                    .map(|(&round, &(g, m))| {
+                        Json::obj(vec![
+                            ("gossip_bytes", Json::from(g as usize)),
+                            ("merge_bytes", Json::from(m as usize)),
+                            ("round", Json::from(round as usize)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn drift_timeline(ticks: &[TickRow]) -> Json {
+    // γ base = the smallest effective γ seen; boosts only push γ up
+    let gamma_base = ticks
+        .iter()
+        .map(|t| t.gamma)
+        .filter(|g| g.is_finite() && *g > 0.0)
+        .fold(f64::INFINITY, f64::min);
+    let gamma_base = if gamma_base.is_finite() { gamma_base } else { 0.0 };
+    let mut per_node: BTreeMap<usize, Vec<&TickRow>> = BTreeMap::new();
+    for t in ticks {
+        per_node.entry(t.node).or_default().push(t);
+    }
+    let mut events = Vec::new();
+    for rows in per_node.values_mut() {
+        rows.sort_by_key(|t| t.tick);
+        let mut prev = 0u64;
+        for (i, t) in rows.iter().enumerate() {
+            if t.drift > prev {
+                let gamma_next = rows.get(i + 1).map(|n| n.gamma).unwrap_or(t.gamma);
+                let boosted = gamma_next > gamma_base * 1.000001 || t.gamma > gamma_base * 1.000001;
+                events.push((
+                    t.round,
+                    t.tick,
+                    t.node,
+                    Json::obj(vec![
+                        ("boosted", Json::from(boosted)),
+                        ("fires", Json::from((t.drift - prev) as usize)),
+                        ("gamma", Json::from(round6(t.gamma))),
+                        ("gamma_next", Json::from(round6(gamma_next))),
+                        ("node", Json::from(t.node)),
+                        ("round", Json::from(t.round as usize)),
+                        ("tick", Json::from(t.tick as usize)),
+                    ]),
+                ));
+            }
+            prev = t.drift;
+        }
+    }
+    events.sort_by_key(|(round, tick, node, _)| (*round, *tick, *node));
+    let total: usize = ticks
+        .iter()
+        .map(|t| t.node)
+        .collect::<BTreeSet<_>>()
+        .iter()
+        .map(|n| {
+            per_node[n]
+                .last()
+                .map(|t| t.drift as usize)
+                .unwrap_or(0)
+        })
+        .sum();
+    Json::obj(vec![
+        ("events", Json::Arr(events.into_iter().map(|(_, _, _, j)| j).collect())),
+        ("gamma_base", Json::from(round6(gamma_base))),
+        ("total", Json::from(total)),
+    ])
+}
+
+fn round3(v: f64) -> f64 {
+    (v * 1e3).round() / 1e3
+}
+
+fn round6(v: f64) -> f64 {
+    (v * 1e6).round() / 1e6
+}
+
+/// Analyze in-memory journals: `(name, contents)` pairs. The unit of the
+/// CLI path and the test seam — deterministic in its inputs alone.
+pub fn analyze_inputs(inputs: &[(String, String)]) -> anyhow::Result<Json> {
+    anyhow::ensure!(!inputs.is_empty(), "trace-analyze: no journals given");
+    let mut sorted: Vec<&(String, String)> = inputs.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut input_hash = FNV64_OFFSET;
+    let mut data = Journals::default();
+    for (name, text) in &sorted {
+        input_hash = fnv1a64(input_hash, name.as_bytes());
+        input_hash = fnv1a64(input_hash, text.as_bytes());
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            parse_line(name, lineno, line, &mut data)?;
+        }
+    }
+    anyhow::ensure!(data.lines > 0, "trace-analyze: journals contain no events");
+
+    let nodes: BTreeSet<usize> = data.ticks.iter().map(|t| t.node).collect();
+    let max_round = data
+        .ticks
+        .iter()
+        .map(|t| t.round)
+        .chain(data.spans.iter().map(|s| s.round))
+        .chain(data.wire.iter().map(|w| w.round))
+        .max()
+        .unwrap_or(0);
+    let (arm_totals, per_window) = attribution(&data.ticks);
+    let totals = Json::obj(vec![
+        ("arrivals", Json::from(data.ticks.iter().map(|t| t.arrivals).sum::<u64>() as usize)),
+        ("forward", Json::from(data.ticks.iter().map(|t| t.forward).sum::<u64>() as usize)),
+        ("nodes", Json::from(nodes.len())),
+        ("replayed", Json::from(data.ticks.iter().map(|t| t.replayed).sum::<u64>() as usize)),
+        ("ticks", Json::from(data.ticks.len())),
+        ("trained", Json::from(data.ticks.iter().map(|t| t.trained).sum::<u64>() as usize)),
+    ]);
+    let mut report = Json::obj(vec![
+        (
+            "arms",
+            Json::obj(vec![("per_window", per_window), ("totals", arm_totals)]),
+        ),
+        ("bandwidth", bandwidth(&data.wire)),
+        ("barriers", barriers(&data.spans)),
+        ("drift", drift_timeline(&data.ticks)),
+        (
+            "inputs",
+            Json::obj(vec![
+                (
+                    "files",
+                    Json::arr_str(&sorted.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>()),
+                ),
+                ("input_hash", Json::from(format!("{input_hash:016x}").as_str())),
+                ("lines", Json::from(data.lines as usize)),
+                (
+                    "schema_versions",
+                    Json::Arr(data.versions.iter().map(|&v| Json::from(v as usize)).collect()),
+                ),
+            ]),
+        ),
+        ("rounds", Json::from(max_round as usize)),
+        ("ticks", totals),
+    ]);
+    let report_hash = format!("{:016x}", fnv1a64(FNV64_OFFSET, report.to_string().as_bytes()));
+    if let Json::Obj(m) = &mut report {
+        m.insert("report_hash".to_string(), Json::from(report_hash.as_str()));
+    }
+    Ok(report)
+}
+
+/// Read and analyze journal files from disk (the CLI entry point).
+pub fn analyze_files<P: AsRef<Path>>(paths: &[P]) -> anyhow::Result<Json> {
+    let mut inputs = Vec::new();
+    for p in paths {
+        let p = p.as_ref();
+        let name = p
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| p.display().to_string());
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("trace-analyze: read {}: {e}", p.display()))?;
+        inputs.push((name, text));
+    }
+    analyze_inputs(&inputs)
+}
+
+/// Human-readable summary table for a report from [`analyze_inputs`].
+pub fn render_summary(report: &Json) -> String {
+    let mut out = String::new();
+    let usize_at = |path: &[&str]| report.at(path).and_then(|j| j.as_usize()).unwrap_or(0);
+    out.push_str(&format!(
+        "trace-analyze: {} lines across {} file(s), {} round(s), {} tick event(s)\n",
+        usize_at(&["inputs", "lines"]),
+        report
+            .at(&["inputs", "files"])
+            .and_then(|f| f.as_arr().map(|a| a.len()))
+            .unwrap_or(0),
+        usize_at(&["rounds"]),
+        usize_at(&["ticks", "ticks"]),
+    ));
+    out.push_str(&format!(
+        "bandwidth: gossip {} B, merge {} B\n",
+        usize_at(&["bandwidth", "gossip_bytes_total"]),
+        usize_at(&["bandwidth", "merge_bytes_total"]),
+    ));
+    if let Ok(arms) = report.at(&["arms", "totals"]).and_then(|a| a.as_obj()) {
+        out.push_str("arm                forward     backward   loss-delta\n");
+        for (arm, a) in arms {
+            out.push_str(&format!(
+                "{arm:<16} {:>10.1} {:>12.1} {:>12.4}\n",
+                a.get("forward_rows").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                a.get("backward_rows").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                a.get("loss_delta").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+            ));
+        }
+    }
+    if let Ok(rows) = report.at(&["barriers", "stragglers"]).and_then(|s| s.as_arr()) {
+        if !rows.is_empty() {
+            out.push_str("node   slowest-in   max-lag(s)   mean-lag(s)\n");
+            for r in rows {
+                out.push_str(&format!(
+                    "{:<6} {:>10} {:>12.6} {:>13.6}\n",
+                    r.get("node").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+                    r.get("rounds_slowest").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+                    r.get("max_lag").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                    r.get("mean_lag").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                ));
+            }
+        }
+    }
+    let drift_events = report
+        .at(&["drift", "events"])
+        .and_then(|e| e.as_arr().map(|a| a.len()))
+        .unwrap_or(0);
+    let boosted = report
+        .at(&["drift", "events"])
+        .ok()
+        .and_then(|e| e.as_arr().ok())
+        .map(|a| {
+            a.iter()
+                .filter(|e| e.get("boosted").and_then(|b| b.as_bool().ok()).unwrap_or(false))
+                .count()
+        })
+        .unwrap_or(0);
+    out.push_str(&format!(
+        "drift: {} event(s), {} with a γ boost visible\n",
+        drift_events, boosted
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tick_line(
+        v: u64,
+        node: usize,
+        tick: u64,
+        round: u64,
+        forward: u64,
+        trained: u64,
+        weights: &[(&str, f64)],
+        drift: u64,
+        gamma: f64,
+        loss: Option<f64>,
+    ) -> String {
+        let mut pairs = vec![
+            ("v", Json::from(v as usize)),
+            ("kind", Json::from("tick")),
+            ("tick", Json::from(tick as usize)),
+            ("node", Json::from(node)),
+            ("gamma", Json::from(gamma)),
+            ("arrivals", Json::from(forward as usize)),
+            ("trained", Json::from(trained as usize)),
+            ("replayed", Json::from(0usize)),
+            ("forward", Json::from(forward as usize)),
+            ("drift", Json::from(drift as usize)),
+            (
+                "weights",
+                Json::Obj(weights.iter().map(|(a, w)| (a.to_string(), Json::from(*w))).collect()),
+            ),
+            (
+                "store",
+                Json::obj(vec![
+                    ("live", Json::from(1usize)),
+                    ("capacity", Json::from(64usize)),
+                    ("hits", Json::from(0usize)),
+                    ("misses", Json::from(0usize)),
+                    ("evictions", Json::from(0usize)),
+                ]),
+            ),
+            ("phases", Json::obj(vec![])),
+        ];
+        if v >= 2 {
+            pairs.push(("round", Json::from(round as usize)));
+        }
+        if let Some(l) = loss {
+            pairs.push(("rolling", Json::obj(vec![("loss", Json::from(l)), ("acc", Json::Null)])));
+        }
+        Json::obj(pairs).to_string()
+    }
+
+    fn span_line(name: &str, round: u64, tick: u64, node: Option<usize>, dur: f64) -> String {
+        let mut pairs = vec![
+            ("v", Json::from(2usize)),
+            ("kind", Json::from("span")),
+            ("name", Json::from(name)),
+            ("round", Json::from(round as usize)),
+            ("tick", Json::from(tick as usize)),
+            ("start", Json::from(0.5)),
+            ("duration", Json::from(dur)),
+        ];
+        if let Some(n) = node {
+            pairs.push(("node", Json::from(n)));
+        }
+        Json::obj(pairs).to_string()
+    }
+
+    fn wire_line(kind: &str, round: u64, tick: u64, bytes: u64) -> String {
+        Json::obj(vec![
+            ("v", Json::from(2usize)),
+            ("kind", Json::from(kind)),
+            ("round", Json::from(round as usize)),
+            ("tick", Json::from(tick as usize)),
+            ("bytes", Json::from(bytes as usize)),
+        ])
+        .to_string()
+    }
+
+    fn sample_inputs() -> Vec<(String, String)> {
+        let coord = [
+            span_line("barrier", 1, 16, None, 0.02),
+            span_line("ready_lag", 1, 16, Some(0), 0.005),
+            span_line("ready_lag", 1, 16, Some(1), 0.02),
+            span_line("barrier", 2, 32, None, 0.01),
+            span_line("ready_lag", 2, 32, Some(0), 0.01),
+            span_line("ready_lag", 2, 32, Some(1), 0.002),
+            wire_line("gossip", 1, 16, 2048),
+            wire_line("merge", 2, 32, 8192),
+        ]
+        .join("\n");
+        let n0 = [
+            tick_line(2, 0, 0, 1, 100, 50, &[("a", 0.75), ("b", 0.25)], 0, 0.5, Some(2.0)),
+            tick_line(2, 0, 1, 2, 100, 50, &[("a", 0.5), ("b", 0.5)], 1, 0.8, Some(1.0)),
+        ]
+        .join("\n");
+        let n1 = [
+            tick_line(2, 1, 0, 1, 60, 30, &[("a", 0.75), ("b", 0.25)], 0, 0.5, None),
+            tick_line(2, 1, 1, 2, 60, 30, &[("a", 0.5), ("b", 0.5)], 0, 0.5, None),
+        ]
+        .join("\n");
+        vec![
+            ("trace.jsonl".to_string(), coord),
+            ("trace.jsonl.node0".to_string(), n0),
+            ("trace.jsonl.node1".to_string(), n1),
+        ]
+    }
+
+    #[test]
+    fn report_is_deterministic_and_hashed() {
+        let inputs = sample_inputs();
+        let a = analyze_inputs(&inputs).unwrap().to_string();
+        let b = analyze_inputs(&inputs).unwrap().to_string();
+        assert_eq!(a, b, "identical inputs must produce byte-identical reports");
+        let j = Json::parse(&a).unwrap();
+        assert_eq!(j.at(&["inputs", "lines"]).unwrap().as_usize().unwrap(), 12);
+        assert!(j.at(&["report_hash"]).unwrap().as_str().unwrap().len() == 16);
+        // input order must not matter: the analyzer sorts by file name
+        let mut rev = inputs.clone();
+        rev.reverse();
+        assert_eq!(a, analyze_inputs(&rev).unwrap().to_string());
+    }
+
+    #[test]
+    fn per_arm_attribution_follows_weights() {
+        let j = analyze_inputs(&sample_inputs()).unwrap();
+        // round 1: both nodes posted {a: .75, b: .25} over 160 forward rows
+        let arms = j.at(&["arms", "totals"]).unwrap().as_obj().unwrap();
+        assert!(arms.contains_key("a") && arms.contains_key("b"));
+        let fwd_a = arms["a"].at(&["forward_rows"]).unwrap().as_f64().unwrap();
+        let fwd_b = arms["b"].at(&["forward_rows"]).unwrap().as_f64().unwrap();
+        // a: 160*.75 + 160*.5 = 200; b: 160*.25 + 160*.5 = 120
+        assert!((fwd_a - 200.0).abs() < 1e-6, "fwd_a = {fwd_a}");
+        assert!((fwd_b - 120.0).abs() < 1e-6, "fwd_b = {fwd_b}");
+        // loss fell 2.0 → 1.0 across windows; round-2 delta −1 split 50/50
+        let dl_a = arms["a"].at(&["loss_delta"]).unwrap().as_f64().unwrap();
+        assert!((dl_a - (-0.5)).abs() < 1e-6, "dl_a = {dl_a}");
+        let windows = j.at(&["arms", "per_window"]).unwrap().as_arr().unwrap();
+        assert_eq!(windows.len(), 2);
+    }
+
+    #[test]
+    fn straggler_table_and_histogram() {
+        let j = analyze_inputs(&sample_inputs()).unwrap();
+        assert_eq!(j.at(&["barriers", "rounds"]).unwrap().as_usize().unwrap(), 2);
+        let stragglers = j.at(&["barriers", "stragglers"]).unwrap().as_arr().unwrap();
+        assert_eq!(stragglers.len(), 2);
+        // node 1 was slowest in round 1, node 0 in round 2
+        for s in stragglers {
+            assert_eq!(s.at(&["rounds_slowest"]).unwrap().as_usize().unwrap(), 1);
+        }
+        let per_round = j.at(&["barriers", "per_round"]).unwrap().as_arr().unwrap();
+        assert_eq!(
+            per_round[0].at(&["straggler", "node"]).unwrap().as_usize().unwrap(),
+            1
+        );
+        let hist: usize = j
+            .at(&["barriers", "lag_histogram"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| b.at(&["count"]).unwrap().as_usize().unwrap())
+            .sum();
+        assert_eq!(hist, 4, "every ready_lag lands in exactly one bucket");
+    }
+
+    #[test]
+    fn bandwidth_and_drift_views() {
+        let j = analyze_inputs(&sample_inputs()).unwrap();
+        assert_eq!(
+            j.at(&["bandwidth", "gossip_bytes_total"]).unwrap().as_usize().unwrap(),
+            2048
+        );
+        assert_eq!(
+            j.at(&["bandwidth", "merge_bytes_total"]).unwrap().as_usize().unwrap(),
+            8192
+        );
+        let events = j.at(&["drift", "events"]).unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].at(&["node"]).unwrap().as_usize().unwrap(), 0);
+        // γ rose from the 0.5 base to 0.8 on the drift tick → boost visible
+        assert!(events[0].at(&["boosted"]).unwrap().as_bool().unwrap());
+        assert_eq!(j.at(&["drift", "total"]).unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn v1_journals_still_analyze() {
+        let v1 = tick_line(1, 0, 0, 0, 10, 5, &[], 0, 0.5, None);
+        let j = analyze_inputs(&[("old.jsonl".into(), v1)]).unwrap();
+        let arms = j.at(&["arms", "totals"]).unwrap().as_obj().unwrap();
+        assert!(arms.contains_key(IMPLICIT_ARM), "weightless ticks get the implicit arm");
+        assert_eq!(j.at(&["rounds"]).unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn invalid_lines_abort_with_location() {
+        let err = analyze_inputs(&[("bad.jsonl".into(), "not json".into())]).unwrap_err();
+        assert!(err.to_string().contains("bad.jsonl:1"), "{err}");
+        let future = "{\"v\":9,\"kind\":\"gossip\",\"tick\":0,\"round\":0,\"bytes\":0}";
+        let err = analyze_inputs(&[("f.jsonl".into(), future.into())]).unwrap_err();
+        assert!(err.to_string().contains("schema version"), "{err}");
+        assert!(analyze_inputs(&[]).is_err());
+        assert!(analyze_inputs(&[("empty.jsonl".into(), "\n\n".into())]).is_err());
+    }
+
+    #[test]
+    fn summary_renders_key_facts() {
+        let j = analyze_inputs(&sample_inputs()).unwrap();
+        let text = render_summary(&j);
+        assert!(text.contains("2 round(s)"), "{text}");
+        assert!(text.contains("gossip 2048 B"), "{text}");
+        assert!(text.contains("drift: 1 event(s)"), "{text}");
+        assert!(text.contains('a') && text.contains('b'));
+    }
+}

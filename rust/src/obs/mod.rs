@@ -6,6 +6,7 @@
 //! state after it is computed and never feed anything back, so enabling
 //! telemetry cannot change a selection digest (pinned by e2e tests).
 
+pub mod analyze;
 pub mod registry;
 pub mod status;
 pub mod trace;
@@ -31,6 +32,8 @@ pub fn uptime_seconds() -> f64 {
 /// differences them.
 pub struct TickSample<'a> {
     pub tick: u64,
+    /// Barrier round this tick ran under (0 for stream runs).
+    pub round: u64,
     /// Effective γ this tick (drift boosts included).
     pub gamma: f32,
     pub arrivals: usize,
@@ -132,7 +135,7 @@ impl TickObserver {
     }
 
     /// Record one processed tick: update the registry and, when tracing,
-    /// enqueue the schema-v1 journal line.
+    /// enqueue the schema-v2 journal line.
     pub fn observe(&mut self, s: TickSample<'_>) {
         self.ticks.inc();
         self.seen.add(s.arrivals as u64);
@@ -183,6 +186,7 @@ impl TickObserver {
             let line = TickEvent {
                 tick: s.tick,
                 node: self.node.unwrap_or(0),
+                round: s.round,
                 gamma: s.gamma,
                 arrivals: s.arrivals,
                 trained: s.trained,
@@ -221,6 +225,7 @@ mod tests {
             phases.add("forward", Duration::from_millis(1));
             obs.observe(TickSample {
                 tick,
+                round: tick / 2,
                 gamma: 0.5,
                 arrivals: 128,
                 trained: 64,
@@ -255,10 +260,11 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let mut expect = 0u64;
         for line in text.lines() {
-            let ev = trace::validate_v1_line(line).unwrap();
+            let ev = trace::validate_line(line).unwrap();
             assert_eq!(ev.kind, "tick");
             assert_eq!(ev.node, Some(91));
             assert_eq!(ev.tick, expect, "journal not tick-contiguous");
+            assert_eq!(ev.round, expect / 2, "round not echoed into the line");
             expect += 1;
         }
         assert_eq!(expect, 3);

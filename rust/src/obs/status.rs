@@ -91,14 +91,64 @@ impl Drop for StatusServer {
     }
 }
 
+/// Cap on the request head we are willing to buffer. Anything larger is
+/// rejected with `431` — a scrape request is a few hundred bytes.
+const MAX_REQUEST_BYTES: usize = 8192;
+
+enum RequestHead {
+    Ok(String),
+    TooLarge,
+    Empty,
+}
+
+/// Read until the blank line ending the request head, tolerating split
+/// reads (a client may deliver `GET /sta` and `tus HTTP/1.0\r\n\r\n` in
+/// separate segments). A read timeout or EOF serves whatever arrived.
+fn read_request_head(stream: &mut TcpStream) -> RequestHead {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.len() > MAX_REQUEST_BYTES {
+                    return RequestHead::TooLarge;
+                }
+                if buf.windows(4).any(|w| w == b"\r\n\r\n")
+                    || buf.windows(2).any(|w| w == b"\n\n")
+                {
+                    break;
+                }
+            }
+            Err(_) => break, // timeout: a stalled client gets best-effort
+        }
+    }
+    if buf.is_empty() {
+        RequestHead::Empty
+    } else {
+        RequestHead::Ok(String::from_utf8_lossy(&buf).into_owned())
+    }
+}
+
 fn serve_one(mut stream: TcpStream) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
-    let mut buf = [0u8; 1024];
-    let n = match stream.read(&mut buf) {
-        Ok(n) if n > 0 => n,
-        _ => return,
+    let request = match read_request_head(&mut stream) {
+        RequestHead::Ok(head) => head,
+        RequestHead::TooLarge => {
+            let _ = write!(
+                stream,
+                "HTTP/1.0 431 Request Header Fields Too Large\r\nContent-Length: 0\r\nConnection: close\r\n\r\n"
+            );
+            // drain the rest of the oversized request (bounded by the read
+            // timeout) so close() sends a clean FIN instead of an RST that
+            // could yank the 431 out of the client's receive buffer
+            let mut sink = [0u8; 512];
+            while matches!(stream.read(&mut sink), Ok(n) if n > 0) {}
+            return;
+        }
+        RequestHead::Empty => return,
     };
-    let request = String::from_utf8_lossy(&buf[..n]);
     let path = request
         .lines()
         .next()
@@ -158,13 +208,57 @@ fn status_json() -> Json {
         }
     }
 
+    // per-arm bandit weights, mirrored from the `adaselection_arm_weight`
+    // series (`{arm="x"}` for single-process runs, `{node="i",arm="x"}`
+    // for clusters — the latter nests node → weight under the arm)
+    let mut arms: std::collections::BTreeMap<String, Json> = Default::default();
+    let mut arms_by_node: std::collections::BTreeMap<
+        String,
+        std::collections::BTreeMap<String, Json>,
+    > = Default::default();
+    for (name, v) in &snap {
+        let Some(rest) = name.strip_prefix("adaselection_arm_weight{") else {
+            continue;
+        };
+        let Some(labels) = rest.strip_suffix('}') else { continue };
+        let (mut arm, mut node) = (None, None);
+        for part in labels.split(',') {
+            if let Some((k, val)) = part.split_once('=') {
+                let val = val.trim_matches('"').to_string();
+                match k {
+                    "arm" => arm = Some(val),
+                    "node" => node = Some(val),
+                    _ => {}
+                }
+            }
+        }
+        if let Some(arm) = arm {
+            match node {
+                Some(n) => {
+                    arms_by_node.entry(arm).or_default().insert(n, Json::from(*v));
+                }
+                None => {
+                    arms.insert(arm, Json::from(*v));
+                }
+            }
+        }
+    }
+    for (arm, per_node) in arms_by_node {
+        arms.entry(arm).or_insert(Json::Obj(per_node));
+    }
+
     Json::obj(vec![
         ("uptime_seconds", Json::from(uptime)),
         ("rolling_loss", json_num_or_null(value("adaselection_rolling_loss"))),
         ("rolling_acc", json_num_or_null(value("adaselection_rolling_acc"))),
         ("store", store),
+        ("arms", Json::Obj(arms)),
         ("nodes", Json::Obj(nodes)),
         ("series", Json::from(snap.len())),
+        (
+            "trace_dropped_lines",
+            Json::from(value("adaselection_trace_dropped_lines_total").unwrap_or(0.0)),
+        ),
     ])
 }
 
@@ -212,6 +306,9 @@ mod tests {
                 &[("node", "2")],
             ))
             .set(0.0);
+        registry()
+            .gauge(&series("adaselection_arm_weight", &[("arm", "status_arm")]))
+            .set(0.625);
         let server = StatusServer::start("127.0.0.1:0").unwrap();
         let addr = server.local_addr();
         assert_eq!(last_bound_addr(), Some(addr));
@@ -230,10 +327,60 @@ mod tests {
         assert!(
             nodes["2"].at(&["heartbeat_age_seconds"]).unwrap().as_f64().unwrap() >= 0.0
         );
+        // satellite: per-arm weights and trace-drop visibility on /status
+        assert_eq!(
+            j.at(&["arms", "status_arm"]).unwrap().as_f64().unwrap(),
+            0.625
+        );
+        assert!(j.at(&["trace_dropped_lines"]).unwrap().as_f64().unwrap() >= 0.0);
 
         let (code, _) = http_get(addr, "/bogus").unwrap();
         assert_eq!(code, 404);
 
+        server.stop();
+    }
+
+    #[test]
+    fn tolerates_split_request_reads() {
+        let server = StatusServer::start("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let mut stream =
+            TcpStream::connect_timeout(&addr, Duration::from_secs(2)).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        // deliver the request line in two segments with a pause between
+        stream.write_all(b"GET /sta").unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        stream.write_all(b"tus HTTP/1.0\r\n\r\n").unwrap();
+        stream.flush().unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.0 200"), "{response}");
+        let body = response.split_once("\r\n\r\n").unwrap().1;
+        Json::parse(body).expect("split request still yields the JSON body");
+        server.stop();
+    }
+
+    #[test]
+    fn oversized_request_rejected_without_panic() {
+        let server = StatusServer::start("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let mut stream =
+            TcpStream::connect_timeout(&addr, Duration::from_secs(2)).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        // a request head past MAX_REQUEST_BYTES with no terminating blank
+        // line must be refused, not buffered forever or panicked on
+        let junk = vec![b'A'; MAX_REQUEST_BYTES + 1024];
+        stream.write_all(b"GET /").unwrap();
+        stream.write_all(&junk).unwrap();
+        stream.flush().unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.0 431"), "{response}");
+        // the server survives and keeps answering normal requests
+        let (code, _) = http_get(addr, "/status").unwrap();
+        assert_eq!(code, 200);
         server.stop();
     }
 }

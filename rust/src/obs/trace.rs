@@ -7,20 +7,30 @@
 //! training. Telemetry must stay off the digest path: the journal only
 //! ever receives copies of already-computed state.
 //!
-//! ## Schema v1
+//! ## Schema v2
 //!
-//! One JSON object per line. Common fields: `v` (always 1), `kind`.
+//! One JSON object per line. Common fields: `v` (the schema version the
+//! line was written under), `kind`. Validation accepts v1 and v2 lines;
+//! v1 lines simply predate the `round` field (it defaults to 0) and the
+//! `span` kind.
 //!
 //! * `kind = "tick"` — one per processed tick per node:
-//!   `tick`, `node`, `gamma` (effective γ this tick), `arrivals`,
-//!   `trained`, `replayed`, `forward` (candidate rows forward-scored this
-//!   tick), `drift` (cumulative detector fires), `weights` (object
-//!   arm → weight; present for bandit policies), `store` (object with
-//!   `live`, `capacity`, `hits`, `misses`, `evictions` — cumulative),
-//!   `phases` (object phase → seconds spent *this tick*), and optional
-//!   `rolling` (`loss`, `acc`) on prequential-eval ticks.
+//!   `tick`, `node`, `round` (the coordinator's barrier round this tick
+//!   ran under; 0 for stream runs and v1 journals), `gamma` (effective γ
+//!   this tick), `arrivals`, `trained`, `replayed`, `forward` (candidate
+//!   rows forward-scored this tick), `drift` (cumulative detector
+//!   fires), `weights` (object arm → weight; present for bandit
+//!   policies), `store` (object with `live`, `capacity`, `hits`,
+//!   `misses`, `evictions` — cumulative), `phases` (object phase →
+//!   seconds spent *this tick*), and optional `rolling` (`loss`, `acc`)
+//!   on prequential-eval ticks.
 //! * `kind = "gossip"` / `kind = "merge"` — cluster coordinator events:
-//!   `tick` (the sync point), `bytes` (wire bytes this round).
+//!   `tick` (the sync point), `round`, `bytes` (wire bytes this round).
+//! * `kind = "span"` (v2 only) — coordinator timing spans: `name`
+//!   (`barrier` open→all-ready, `ready_lag` per node, `gossip_relay`,
+//!   `merge`), `round`, `tick` (the sync point), optional `node` (set
+//!   on per-node spans like `ready_lag`), `start` (seconds since the
+//!   coordinator's run clock started), `duration` (seconds).
 //!
 //! Tick events are tick-contiguous per node: node `n` emits ticks
 //! `t, t+1, t+2, ...` without gaps (backfill replays after churn are
@@ -35,11 +45,14 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::obs::registry::{registry, Counter};
 use crate::util::json::Json;
 use crate::util::timer::PhaseTimer;
 
 /// Journal schema version emitted in every line.
-pub const SCHEMA_VERSION: u64 = 1;
+pub const SCHEMA_VERSION: u64 = 2;
+/// Oldest schema version [`validate_line`] still accepts.
+pub const MIN_SCHEMA_VERSION: u64 = 1;
 
 /// Lines buffered between the hot loop and the writer thread.
 const CHANNEL_CAPACITY: usize = 8192;
@@ -50,6 +63,7 @@ pub struct TraceJournal {
     tx: Option<SyncSender<String>>,
     writer: Option<JoinHandle<std::io::Result<()>>>,
     dropped: Arc<AtomicU64>,
+    dropped_total: Arc<Counter>,
 }
 
 /// Cheap clonable emitter handle (cluster nodes share one journal).
@@ -57,6 +71,7 @@ pub struct TraceJournal {
 pub struct TraceHandle {
     tx: SyncSender<String>,
     dropped: Arc<AtomicU64>,
+    dropped_total: Arc<Counter>,
 }
 
 impl TraceJournal {
@@ -77,6 +92,7 @@ impl TraceJournal {
             tx: Some(tx),
             writer: Some(writer),
             dropped: Arc::new(AtomicU64::new(0)),
+            dropped_total: registry().counter("adaselection_trace_dropped_lines_total"),
         })
     }
 
@@ -85,11 +101,15 @@ impl TraceJournal {
         TraceHandle {
             tx: self.tx.as_ref().expect("journal already finished").clone(),
             dropped: Arc::clone(&self.dropped),
+            dropped_total: Arc::clone(&self.dropped_total),
         }
     }
 
     /// Close the channel, join the writer (flushing the file), and return
-    /// how many lines were dropped under backpressure.
+    /// how many lines were dropped under backpressure. Any drops are
+    /// WARNed once here and published to the registry
+    /// (`adaselection_trace_dropped_lines_total`, also on `/status`) so
+    /// overflow is visible without grepping logs.
     pub fn finish(mut self) -> anyhow::Result<u64> {
         self.tx = None; // all emission must go through since-dropped handles
         if let Some(w) = self.writer.take() {
@@ -114,28 +134,60 @@ impl Drop for TraceJournal {
 }
 
 impl TraceHandle {
-    /// Enqueue one already-serialized line; drops (and counts) when the
-    /// writer is behind instead of blocking the hot loop.
+    /// Enqueue one already-serialized line; drops (and counts, both in
+    /// the journal and the live registry counter) when the writer is
+    /// behind instead of blocking the hot loop.
     pub fn emit(&self, line: String) {
         match self.tx.try_send(line) {
             Ok(()) => {}
             Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
                 self.dropped.fetch_add(1, Ordering::Relaxed);
+                self.dropped_total.inc();
             }
         }
     }
 
     /// Emit a coordinator-side gossip/merge event.
-    pub fn emit_wire_event(&self, kind: &str, tick: u64, bytes: u64) {
+    pub fn emit_wire_event(&self, kind: &str, round: u64, tick: u64, bytes: u64) {
         self.emit(
             Json::obj(vec![
                 ("v", Json::from(SCHEMA_VERSION as usize)),
                 ("kind", Json::from(kind)),
+                ("round", Json::from(round as usize)),
                 ("tick", Json::from(tick as usize)),
                 ("bytes", Json::from(bytes as usize)),
             ])
             .to_string(),
         );
+    }
+
+    /// Emit a coordinator-side timing span (v2): `name` scopes what was
+    /// measured (`barrier`, `ready_lag`, `gossip_relay`, `merge`),
+    /// `start`/`duration` are seconds on the coordinator's run clock
+    /// ([`crate::util::timer::Stopwatch`]), `node` is set on per-node
+    /// spans like `ready_lag`.
+    pub fn emit_span(
+        &self,
+        name: &str,
+        round: u64,
+        tick: u64,
+        node: Option<usize>,
+        start: f64,
+        duration: f64,
+    ) {
+        let mut pairs = vec![
+            ("v", Json::from(SCHEMA_VERSION as usize)),
+            ("kind", Json::from("span")),
+            ("name", Json::from(name)),
+            ("round", Json::from(round as usize)),
+            ("tick", Json::from(tick as usize)),
+        ];
+        if let Some(n) = node {
+            pairs.push(("node", Json::from(n)));
+        }
+        pairs.push(("start", Json::from(start)));
+        pairs.push(("duration", Json::from(duration)));
+        self.emit(Json::obj(pairs).to_string());
     }
 }
 
@@ -144,6 +196,8 @@ impl TraceHandle {
 pub struct TickEvent<'a> {
     pub tick: u64,
     pub node: usize,
+    /// Barrier round this tick ran under (0 for stream runs).
+    pub round: u64,
     pub gamma: f32,
     pub arrivals: usize,
     pub trained: usize,
@@ -166,7 +220,7 @@ pub struct TickEvent<'a> {
 }
 
 impl TickEvent<'_> {
-    /// Serialize as one schema-v1 JSONL line.
+    /// Serialize as one schema-v2 JSONL line.
     pub fn to_line(&self) -> String {
         // NaN/Inf have no JSON spelling (rolling acc is NaN on regression
         // streams); journal them as null so every line stays parseable
@@ -197,6 +251,7 @@ impl TickEvent<'_> {
             ("kind", Json::from("tick")),
             ("tick", Json::from(self.tick as usize)),
             ("node", Json::from(self.node)),
+            ("round", Json::from(self.round as usize)),
             ("gamma", num(self.gamma as f64)),
             ("arrivals", Json::from(self.arrivals)),
             ("trained", Json::from(self.trained)),
@@ -239,23 +294,35 @@ impl PhaseDelta {
     }
 }
 
-/// A parsed-and-validated schema-v1 journal line (tests + tooling).
+/// A parsed-and-validated journal line (tests + tooling).
 #[derive(Debug)]
 pub struct ParsedEvent {
     pub kind: String,
     pub tick: u64,
-    /// Present on `tick` events only.
+    /// Barrier round; 0 on v1 lines (which predate the field) and on
+    /// stream-run tick events.
+    pub round: u64,
+    /// Present on `tick` events and per-node spans.
     pub node: Option<usize>,
+    /// Present on `span` events.
+    pub name: Option<String>,
 }
 
-/// Validate one journal line against schema v1.
-pub fn validate_v1_line(line: &str) -> anyhow::Result<ParsedEvent> {
+/// Validate one journal line against schema v1 *or* v2 (the v1→v2
+/// compatibility rule: v1 lines carry no `round` — it defaults to 0 —
+/// and cannot carry `span` events; anything past [`SCHEMA_VERSION`] is
+/// rejected).
+pub fn validate_line(line: &str) -> anyhow::Result<ParsedEvent> {
     let j = Json::parse(line).map_err(|e| anyhow::anyhow!("trace line is not JSON: {e:?}"))?;
-    let v = j.at(&["v"])?.as_usize()?;
-    anyhow::ensure!(v == SCHEMA_VERSION as usize, "schema version {v} != {SCHEMA_VERSION}");
+    let v = j.at(&["v"])?.as_usize()? as u64;
+    anyhow::ensure!(
+        (MIN_SCHEMA_VERSION..=SCHEMA_VERSION).contains(&v),
+        "schema version {v} outside v{MIN_SCHEMA_VERSION}..v{SCHEMA_VERSION}"
+    );
     let kind = j.at(&["kind"])?.as_str()?.to_string();
     let tick = j.at(&["tick"])?.as_usize()? as u64;
-    let node = match kind.as_str() {
+    let round = if v >= 2 { j.at(&["round"])?.as_usize()? as u64 } else { 0 };
+    let (node, name) = match kind.as_str() {
         "tick" => {
             for field in
                 ["gamma", "arrivals", "trained", "replayed", "forward", "drift"]
@@ -268,15 +335,26 @@ pub fn validate_v1_line(line: &str) -> anyhow::Result<ParsedEvent> {
                 store.at(&[field])?.as_f64()?;
             }
             j.at(&["phases"])?.as_obj()?;
-            Some(j.at(&["node"])?.as_usize()?)
+            (Some(j.at(&["node"])?.as_usize()?), None)
         }
         "gossip" | "merge" => {
             j.at(&["bytes"])?.as_f64()?;
-            None
+            (None, None)
+        }
+        "span" => {
+            anyhow::ensure!(v >= 2, "span events require schema v2");
+            let name = j.at(&["name"])?.as_str()?.to_string();
+            j.at(&["start"])?.as_f64()?;
+            j.at(&["duration"])?.as_f64()?;
+            let node = match j.get("node") {
+                Some(n) => Some(n.as_usize()?),
+                None => None,
+            };
+            (node, Some(name))
         }
         other => anyhow::bail!("unknown trace kind '{other}'"),
     };
-    Ok(ParsedEvent { kind, tick, node })
+    Ok(ParsedEvent { kind, tick, round, node, name })
 }
 
 #[cfg(test)]
@@ -287,6 +365,7 @@ mod tests {
         TickEvent {
             tick: 3,
             node: 1,
+            round: 2,
             gamma: 0.5,
             arrivals: 128,
             trained: 64,
@@ -306,11 +385,12 @@ mod tests {
     }
 
     #[test]
-    fn tick_event_round_trips_schema_v1() {
+    fn tick_event_round_trips_schema_v2() {
         let line = sample_event();
-        let ev = validate_v1_line(&line).unwrap();
+        let ev = validate_line(&line).unwrap();
         assert_eq!(ev.kind, "tick");
         assert_eq!(ev.tick, 3);
+        assert_eq!(ev.round, 2);
         assert_eq!(ev.node, Some(1));
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.at(&["weights", "big_loss"]).unwrap().as_f64().unwrap() as f32, 0.7);
@@ -319,24 +399,78 @@ mod tests {
 
     #[test]
     fn wire_events_validate() {
+        // a v1 coordinator event (no round) still validates, round = 0
         let j = Json::obj(vec![
             ("v", Json::from(1usize)),
             ("kind", Json::from("gossip")),
             ("tick", Json::from(16usize)),
             ("bytes", Json::from(2048usize)),
         ]);
-        let ev = validate_v1_line(&j.to_string()).unwrap();
+        let ev = validate_line(&j.to_string()).unwrap();
         assert_eq!(ev.kind, "gossip");
+        assert_eq!(ev.round, 0);
         assert_eq!(ev.node, None);
+        // the v2 emitter carries the round
+        let journal_line = {
+            let dir = std::env::temp_dir().join(format!("ada_wire_ev_{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let path = dir.join("w.jsonl");
+            let journal = TraceJournal::open(&path).unwrap();
+            journal.handle().emit_wire_event("merge", 5, 80, 4096);
+            journal.finish().unwrap();
+            let text = std::fs::read_to_string(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            text.lines().next().unwrap().to_string()
+        };
+        let ev = validate_line(&journal_line).unwrap();
+        assert_eq!(ev.kind, "merge");
+        assert_eq!(ev.round, 5);
+        assert_eq!(ev.tick, 80);
+    }
+
+    #[test]
+    fn span_events_validate() {
+        let dir = std::env::temp_dir().join(format!("ada_span_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.jsonl");
+        let journal = TraceJournal::open(&path).unwrap();
+        let h = journal.handle();
+        h.emit_span("barrier", 3, 40, None, 1.25, 0.5);
+        h.emit_span("ready_lag", 3, 40, Some(2), 1.25, 0.125);
+        drop(h);
+        journal.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let barrier = validate_line(lines[0]).unwrap();
+        assert_eq!(barrier.kind, "span");
+        assert_eq!(barrier.name.as_deref(), Some("barrier"));
+        assert_eq!(barrier.round, 3);
+        assert_eq!(barrier.node, None);
+        let lag = validate_line(lines[1]).unwrap();
+        assert_eq!(lag.name.as_deref(), Some("ready_lag"));
+        assert_eq!(lag.node, Some(2));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn bad_lines_are_rejected() {
-        assert!(validate_v1_line("not json").is_err());
-        assert!(validate_v1_line("{\"v\":2,\"kind\":\"tick\",\"tick\":0}").is_err());
-        assert!(validate_v1_line("{\"v\":1,\"kind\":\"bogus\",\"tick\":0}").is_err());
+        assert!(validate_line("not json").is_err());
+        // v2 tick line missing every required field
+        assert!(validate_line("{\"v\":2,\"kind\":\"tick\",\"tick\":0}").is_err());
+        assert!(validate_line("{\"v\":1,\"kind\":\"bogus\",\"tick\":0}").is_err());
+        // future schema versions are rejected outright
+        assert!(validate_line("{\"v\":3,\"kind\":\"gossip\",\"tick\":0,\"bytes\":0}").is_err());
+        // spans did not exist in v1
+        assert!(validate_line(
+            "{\"v\":1,\"kind\":\"span\",\"name\":\"barrier\",\"tick\":0,\
+             \"start\":0.0,\"duration\":0.1}"
+        )
+        .is_err());
+        // a v2 wire event without its round is rejected
+        assert!(validate_line("{\"v\":2,\"kind\":\"gossip\",\"tick\":16,\"bytes\":10}").is_err());
         // a tick event missing its store block is rejected
-        assert!(validate_v1_line(
+        assert!(validate_line(
             "{\"v\":1,\"kind\":\"tick\",\"tick\":0,\"node\":0,\"gamma\":0.5,\
              \"arrivals\":1,\"trained\":1,\"replayed\":0,\"forward\":0,\
              \"drift\":0,\"weights\":{},\"phases\":{}}"
@@ -359,7 +493,7 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 100);
         for line in text.lines() {
-            validate_v1_line(line).unwrap();
+            validate_line(line).unwrap();
         }
         std::fs::remove_file(&path).ok();
     }

@@ -108,9 +108,15 @@ pub struct BenchDiff {
     pub unmatched: Vec<String>,
 }
 
-/// Collect `(bench, name) -> median_ns` from every `BENCH_*.json` in `dir`.
+/// Collect `(bench, name) -> median_ns` from every `BENCH_*.json` in
+/// `dir`. With `lenient` set (the baseline side of the CI gate), a file
+/// that cannot be read or parsed, or whose schema doesn't match, is
+/// WARNed and skipped — its benchmarks simply go unmatched, degrading to
+/// the same trivial pass as a missing baseline. The current side stays
+/// strict: a corrupt file *this* run produced is a real error.
 fn load_medians(
     dir: &std::path::Path,
+    lenient: bool,
 ) -> anyhow::Result<std::collections::BTreeMap<(String, String), f64>> {
     use crate::util::json::Json;
     let mut out = std::collections::BTreeMap::new();
@@ -122,19 +128,40 @@ fn load_medians(
         if !(fname.starts_with("BENCH_") && fname.ends_with(".json")) {
             continue;
         }
-        let text = std::fs::read_to_string(&path)?;
-        let j = Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("bench-diff: parse {}: {e}", path.display()))?;
+        let parsed = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("bench-diff: read {}: {e}", path.display()))
+            .and_then(|text| {
+                Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("bench-diff: parse {}: {e}", path.display()))
+            });
+        let j = match parsed {
+            Ok(j) => j,
+            Err(e) if lenient => {
+                log::warn!("{e:#}; skipping this baseline file (degrades to trivial pass)");
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
         let bench = j
             .at(&["bench"])
-            .and_then(|b| b.as_str())
+            .ok()
+            .and_then(|b| b.as_str().ok())
             .unwrap_or("unknown")
             .to_string();
-        let Some(results) = j.at(&["results"]).and_then(|r| r.as_arr()) else { continue };
+        let Some(results) = j.at(&["results"]).ok().and_then(|r| r.as_arr().ok()) else {
+            if lenient {
+                log::warn!(
+                    "bench-diff: {} has no results array (schema mismatch); \
+                     skipping this baseline file (degrades to trivial pass)",
+                    path.display()
+                );
+            }
+            continue;
+        };
         for r in results {
             let (Some(name), Some(median)) = (
-                r.at(&["name"]).and_then(|n| n.as_str()),
-                r.at(&["median_ns"]).and_then(|m| m.as_f64()),
+                r.at(&["name"]).ok().and_then(|n| n.as_str().ok()),
+                r.at(&["median_ns"]).ok().and_then(|m| m.as_f64().ok()),
             ) else {
                 continue;
             };
@@ -155,8 +182,8 @@ pub fn diff(
     current: &std::path::Path,
     tolerance: f64,
 ) -> anyhow::Result<BenchDiff> {
-    let old = load_medians(baseline)?;
-    let new = load_medians(current)?;
+    let old = load_medians(baseline, true)?;
+    let new = load_medians(current, false)?;
     let mut d = BenchDiff::default();
     for (key, &new_median) in &new {
         match old.get(key) {
@@ -267,6 +294,47 @@ mod tests {
         assert!(d.regressions.is_empty());
         assert!(d.compared.is_empty());
         assert_eq!(d.unmatched.len(), 1);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn diff_corrupt_baseline_degrades_to_trivial_pass() {
+        let root = std::env::temp_dir()
+            .join(format!("ada_bench_diff_corrupt_{}", std::process::id()));
+        let (old, new) = (root.join("old"), root.join("new"));
+        std::fs::create_dir_all(&old).unwrap();
+        std::fs::create_dir_all(&new).unwrap();
+        // Truncated/garbage JSON in the baseline: WARN + skip, never an error.
+        std::fs::write(old.join("BENCH_suite.json"), r#"{"bench": "suite", "resul"#).unwrap();
+        write_bench_json(&new, "suite", &[("anything", 42.0)]);
+        let d = diff(&old, &new, 0.15).unwrap();
+        assert!(d.regressions.is_empty());
+        assert!(d.compared.is_empty());
+        assert_eq!(d.unmatched.len(), 1, "{:?}", d.unmatched);
+        // The same corruption on the *current* side is a hard error.
+        std::fs::write(new.join("BENCH_bad.json"), r#"not json"#).unwrap();
+        assert!(diff(&old, &new, 0.15).is_err());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn diff_schema_mismatched_baseline_degrades_to_trivial_pass() {
+        let root = std::env::temp_dir()
+            .join(format!("ada_bench_diff_schema_{}", std::process::id()));
+        let (old, new) = (root.join("old"), root.join("new"));
+        std::fs::create_dir_all(&old).unwrap();
+        std::fs::create_dir_all(&new).unwrap();
+        // Valid JSON, wrong shape: `results` is not an array.
+        std::fs::write(
+            old.join("BENCH_suite.json"),
+            r#"{"bench": "suite", "results": {"oops": true}}"#,
+        )
+        .unwrap();
+        write_bench_json(&new, "suite", &[("anything", 42.0)]);
+        let d = diff(&old, &new, 0.15).unwrap();
+        assert!(d.regressions.is_empty());
+        assert!(d.compared.is_empty());
+        assert_eq!(d.unmatched.len(), 1, "{:?}", d.unmatched);
         std::fs::remove_dir_all(&root).ok();
     }
 

@@ -231,7 +231,7 @@ fn four_node_per_method_drift_is_bit_deterministic() {
 #[test]
 fn telemetry_is_off_the_cluster_digest_path_and_metrics_scrape_live() {
     use adaselection::obs::status::{http_get, last_bound_addr};
-    use adaselection::obs::trace::validate_v1_line;
+    use adaselection::obs::trace::validate_line;
     use std::collections::BTreeMap;
     use std::time::{Duration, Instant};
 
@@ -310,24 +310,40 @@ fn telemetry_is_off_the_cluster_digest_path_and_metrics_scrape_live() {
         "rolling loss not bit-identical under telemetry"
     );
 
-    // journal round-trip: every line validates, tick events stay
-    // tick-contiguous per node, and coordinator wire events are present
+    // journal round-trip: every line validates (schema v2), tick events
+    // stay tick-contiguous per node, coordinator wire events are present,
+    // and every barrier round journals spans with per-node ready lags
     let text = std::fs::read_to_string(&trace).unwrap();
     let mut next: BTreeMap<usize, u64> = BTreeMap::new();
     let mut wire_events = 0usize;
+    let mut barrier_rounds: std::collections::BTreeSet<u64> = Default::default();
+    let mut lag_nodes: std::collections::BTreeSet<usize> = Default::default();
     for line in text.lines() {
-        let ev = validate_v1_line(line)
+        let ev = validate_line(line)
             .unwrap_or_else(|e| panic!("bad trace line: {e}\n{line}"));
-        match ev.node {
-            Some(node) => {
+        match ev.kind.as_str() {
+            "tick" => {
+                let node = ev.node.expect("tick events carry a node");
                 let expect = next.entry(node).or_insert(0);
                 assert_eq!(ev.tick, *expect, "node {node} journal not tick-contiguous");
                 *expect += 1;
             }
-            None => {
-                assert!(ev.kind == "gossip" || ev.kind == "merge");
+            "gossip" | "merge" => {
+                assert!(ev.node.is_none());
+                assert!(ev.round > 0, "wire event outside any barrier round");
                 wire_events += 1;
             }
+            "span" => match ev.name.as_deref() {
+                Some("barrier") => {
+                    assert!(barrier_rounds.insert(ev.round), "duplicate barrier span");
+                }
+                Some("ready_lag") => {
+                    lag_nodes.insert(ev.node.expect("ready_lag spans carry a node"));
+                }
+                Some("gossip_relay") | Some("merge") => {}
+                other => panic!("unexpected span name {other:?}"),
+            },
+            other => panic!("unexpected event kind {other}"),
         }
     }
     assert_eq!(next.len(), 4, "expected tick events from all 4 nodes");
@@ -335,6 +351,8 @@ fn telemetry_is_off_the_cluster_digest_path_and_metrics_scrape_live() {
         assert_eq!(n, ticks as u64, "node {node} journalled {n}/{ticks} ticks");
     }
     assert!(wire_events > 0, "no gossip/merge events journalled");
+    assert!(!barrier_rounds.is_empty(), "no barrier spans journalled");
+    assert_eq!(lag_nodes.len(), 4, "expected ready-lag spans for all 4 nodes");
     std::fs::remove_file(&trace).ok();
 }
 

@@ -152,6 +152,80 @@ fn sigkilled_worker_becomes_kill_churn_with_full_coverage() {
 }
 
 #[test]
+fn traced_process_run_is_digest_neutral_and_analyzable() {
+    // v2 round-scoped tracing must not perturb training, and the journals
+    // it writes (coordinator + one per worker process) must analyze into
+    // a byte-stable report with spans for every barrier round
+    let ticks = 100;
+    let plain = proc::run_with_exe(&base_cfg(4, ticks), worker_exe()).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("ada_proc_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.jsonl");
+    let mut cfg = base_cfg(4, ticks);
+    cfg.stream.trace = Some(trace.clone());
+    let traced = proc::run_with_exe(&cfg, worker_exe()).unwrap();
+
+    assert_eq!(plain.digest, traced.digest, "tracing changed the cluster digest");
+    assert_eq!(plain.samples_seen, traced.samples_seen);
+    assert_eq!(plain.samples_trained, traced.samples_trained);
+    assert_eq!(
+        plain.final_rolling_loss.to_bits(),
+        traced.final_rolling_loss.to_bits(),
+        "rolling loss not bit-identical under tracing"
+    );
+
+    let mut paths = vec![trace.clone()];
+    for i in 0..4 {
+        let p = dir.join(format!("trace.jsonl.node{i}"));
+        assert!(p.exists(), "missing worker journal {}", p.display());
+        paths.push(p);
+    }
+    let report = adaselection::obs::analyze::analyze_files(&paths).unwrap();
+    let again = adaselection::obs::analyze::analyze_files(&paths).unwrap();
+    assert_eq!(report.to_string(), again.to_string(), "report not byte-identical");
+
+    // every barrier round carries a span with per-node ready lags, and
+    // the straggler table is populated from them
+    let rounds = report.at(&["barriers", "rounds"]).unwrap().as_usize().unwrap();
+    assert!(rounds > 0, "no barrier rounds in the report");
+    let per_round = report.at(&["barriers", "per_round"]).unwrap().as_arr().unwrap();
+    assert_eq!(per_round.len(), rounds);
+    for r in per_round {
+        assert!(r.at(&["duration"]).is_ok(), "round without a barrier span");
+        let ready = r.at(&["ready"]).unwrap().as_arr().unwrap();
+        assert!(!ready.is_empty(), "round without per-node ready lags");
+    }
+    let stragglers = report.at(&["barriers", "stragglers"]).unwrap().as_arr().unwrap();
+    assert!(!stragglers.is_empty(), "empty straggler table");
+
+    // per-arm attribution covers every arm the bandit posted weights for
+    let arms = report.at(&["arms", "totals"]).unwrap().as_obj().unwrap();
+    let node0 = std::fs::read_to_string(dir.join("trace.jsonl.node0")).unwrap();
+    let first = adaselection::util::json::Json::parse(node0.lines().next().unwrap()).unwrap();
+    let posted = first.at(&["weights"]).unwrap().as_obj().unwrap();
+    assert!(!posted.is_empty(), "adaselection run posted no arm weights");
+    for arm in posted.keys() {
+        assert!(arms.contains_key(arm), "arm {arm} missing from attribution");
+    }
+
+    // wire traffic is attributed (gossip every 8 + merge every 4 ticks)
+    let gossip = report
+        .at(&["bandwidth", "gossip_bytes_total"])
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    let merge =
+        report.at(&["bandwidth", "merge_bytes_total"]).unwrap().as_usize().unwrap();
+    assert!(gossip > 0, "no gossip bytes attributed");
+    assert!(merge > 0, "no merge bytes attributed");
+
+    for p in &paths {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
 fn binary_runs_process_workers_end_to_end() {
     // the CLI path: the coordinator spawns workers from its *own*
     // executable (std::env::current_exe), so drive the real binary

@@ -559,7 +559,7 @@ fn per_method_drift_with_forward_cheap_pool_survives_resume() {
 
 #[test]
 fn telemetry_is_off_the_digest_path_and_journal_round_trips() {
-    use adaselection::obs::trace::validate_v1_line;
+    use adaselection::obs::trace::validate_line;
 
     let dir = std::env::temp_dir().join(format!("ada_stream_trace_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
@@ -590,12 +590,12 @@ fn telemetry_is_off_the_digest_path_and_journal_round_trips() {
     assert_eq!(plain.samples_replayed, traced.samples_replayed);
     assert_eq!(plain.drift_detections, traced.drift_detections);
 
-    // journal round-trip: every line parses against schema v1 and the
+    // journal round-trip: every line validates (schema v1/v2) and the
     // tick sequence is contiguous from 0
     let text = std::fs::read_to_string(&trace).unwrap();
     let mut expect = 0u64;
     for line in text.lines() {
-        let ev = validate_v1_line(line)
+        let ev = validate_line(line)
             .unwrap_or_else(|e| panic!("bad trace line {expect}: {e}\n{line}"));
         assert_eq!(ev.kind, "tick");
         assert_eq!(ev.node, Some(0));
