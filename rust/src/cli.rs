@@ -91,11 +91,23 @@ COMMANDS:
                       [--full-gossip-every K]
                       [--kill-at T --kill-node I] [--join-at T]
                       [--chaos-kill-at T --chaos-kill-node I] (processes)
+                      [--listen HOST:PORT] (accept remote worker
+                      registrations; processes)
+                      [--spawn on|off] (off: spawn nothing, wait for N
+                      external workers to register on --listen)
+                      [--elastic-admit-above R --elastic-shed-below R]
+                      [--elastic-min-nodes N --elastic-max-nodes N]
+                      (arrival-rate watermarks, samples/tick: admit a
+                      registered standby above R, shed the worst straggler
+                      below R; processes)
                       plus all stream options (--trace writes PATH.node<i>
                       per process worker); native backend only
-  worker              one spawned cluster worker process (internal; started
-                      by `cluster --workers processes`)
-                      --coordinator HOST:PORT --node-id N
+  worker              one cluster worker process: spawned by `cluster
+                      --workers processes`, or started by hand on any
+                      machine to register with a listening coordinator
+                      --coordinator HOST:PORT [--node-id N]
+                      (no --node-id: the coordinator assigns one; extra
+                      workers wait as elastic standbys)
   sweep               reproduce a paper experiment
                       --exp fig1|...|fig9|table3|table4|stream-cmp|all
                       --out DIR [--backend native|xla --epochs N

@@ -306,7 +306,10 @@ impl<B: Backend> ClusterNode<B> {
     /// This node's store-gossip message: the full live snapshot, or (delta
     /// gossip) only the entries touched since the last sync. A full
     /// snapshot also clears the dirty marks — everything live was just
-    /// shared, so re-sending it as a delta would only echo.
+    /// shared, so re-sending it as a delta would only echo. Either way the
+    /// store's eviction mark advances: the next
+    /// [`ClusterNode::store_evicted_since_gossip`] answers "rotated since
+    /// this message was built".
     pub fn gossip_message(&self, full: bool) -> Message {
         let entries = if full {
             let snap = self.engine.store.snapshot();
@@ -315,7 +318,18 @@ impl<B: Backend> ClusterNode<B> {
         } else {
             self.engine.store.take_dirty()
         };
+        self.engine.store.mark_gossip_synced();
         Message::StoreGossip { from: self.id, entries: Arc::new(entries) }
+    }
+
+    /// Whether this node's store rotated a generation since its last
+    /// gossip message. Delta gossip cannot represent an eviction (a
+    /// dropped id is simply absent from the delta, and `take_dirty` skips
+    /// ids evicted after being touched), so any rotation forces the next
+    /// gossip round cluster-wide to full mode — that is what keeps delta
+    /// runs bit-identical to full-gossip runs under eviction pressure.
+    pub fn store_evicted_since_gossip(&self) -> bool {
+        self.engine.store.evicted_since_sync()
     }
 
     /// This node's merge material: exported tensors + policy snapshot,

@@ -1,6 +1,14 @@
-//! The process coordinator: spawn N worker processes of the current
-//! executable and drive the thread coordinator's exact barrier schedule
-//! over the `cluster::wire` control plane.
+//! The process coordinator: drive the thread coordinator's exact barrier
+//! schedule over the `cluster::wire` control plane, against a fleet of
+//! worker processes that *register* via the `Hello` handshake — spawned
+//! children of the current executable by default, or (with `--listen`,
+//! optionally `--spawn off`) `adaselection worker --coordinator HOST:PORT`
+//! processes started by hand on any machine. Registrations beyond the
+//! configured node count park in a standby pool, the reservoir for
+//! elastic scale-out: arrival-rate watermarks admit a standby when the
+//! stream runs hot and shed the worst straggler (by per-round ready-lag)
+//! when it runs cold, reusing the bounded-remap ring machinery and the
+//! crash-conversion `ChurnOrder` path as the involuntary half.
 //!
 //! Topology is hub-and-spoke: every worker holds one TCP connection to
 //! the coordinator; store gossip is relayed through the hub in node-id
@@ -26,8 +34,9 @@ use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cluster::node::NodePreq;
@@ -37,7 +46,8 @@ use crate::cluster::trainer::{
     NodeSummary, REMAP_SAMPLE,
 };
 use crate::cluster::transport::{
-    ChurnOrder, Message, TelemetrySnapshot, GOSSIP_DELTA, GOSSIP_FULL, GOSSIP_NONE,
+    ChurnOrder, Message, TelemetrySnapshot, GOSSIP_AUTO, GOSSIP_DELTA, GOSSIP_FULL,
+    GOSSIP_NONE, UNASSIGNED,
 };
 use crate::cluster::wire;
 use crate::config::ClusterConfig;
@@ -54,17 +64,77 @@ use crate::util::timer::{PhaseTimer, Stopwatch};
 /// this.
 const STALE_AFTER: Duration = Duration::from_secs(30);
 
-/// Handshake budget for a spawned child to connect and say `Hello`.
+/// Budget for required workers (spawned children or awaited external
+/// registrations) to show up in the registration channel.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// One spawned worker process, as the coordinator sees it.
+/// Per-connection budget for the first (`Hello`) frame. Short on purpose:
+/// a connected-but-silent socket ties up only its own handshake thread
+/// for this long, never the accept loop (the slow-loris guard).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// A worker connection's liveness pulse. The reader thread stamps it on
+/// every inbound frame (recording the last heartbeat-reported barrier
+/// round as it goes by), and waiters block on the condvar instead of
+/// sleep-polling — the chaos injector waits here for the victim to
+/// confirm it has started the segment.
+struct Pulse {
+    state: Mutex<Instant>,
+    beat: Condvar,
+    round: AtomicU64,
+}
+
+impl Pulse {
+    fn new() -> Pulse {
+        Pulse {
+            state: Mutex::new(Instant::now()),
+            beat: Condvar::new(),
+            round: AtomicU64::new(0),
+        }
+    }
+
+    fn stamp(&self, round: Option<u64>) {
+        if let Some(r) = round {
+            self.round.store(r, Ordering::Relaxed);
+        }
+        *self.state.lock().unwrap() = Instant::now();
+        self.beat.notify_all();
+    }
+
+    fn staleness(&self) -> Duration {
+        self.state.lock().unwrap().elapsed()
+    }
+
+    /// Block until the next stamp or `timeout`, whichever comes first.
+    fn wait_beat(&self, timeout: Duration) {
+        let guard = self.state.lock().unwrap();
+        let _ = self.beat.wait_timeout(guard, timeout).unwrap();
+    }
+
+    fn last_round(&self) -> u64 {
+        self.round.load(Ordering::Relaxed)
+    }
+}
+
+/// A completed handshake, handed from a per-connection handshake thread
+/// to whoever is filling worker slots. `hello_id` is the id the worker
+/// announced — [`UNASSIGNED`] for a bare
+/// `adaselection worker --coordinator HOST:PORT` registration.
+struct Registration {
+    hello_id: NodeId,
+    stream: TcpStream,
+}
+
+/// One worker process, as the coordinator sees it — spawned child or
+/// externally registered peer (then `child` is `None` and shutdown is
+/// purely protocol-level).
 struct Worker {
     id: NodeId,
     child: Option<Child>,
     /// write half of the control connection
     stream: TcpStream,
     rx: mpsc::Receiver<Option<Message>>,
-    last_heard: Arc<Mutex<Instant>>,
+    pulse: Arc<Pulse>,
     /// participating in the barrier protocol
     alive: bool,
     /// connection lost / process dead, conversion may still be pending
@@ -81,10 +151,66 @@ struct Worker {
     samples_replayed: u64,
     drift_detections: u64,
     store_len: usize,
+    /// seconds from barrier GO to this worker's `BarrierReady`, as of the
+    /// last collected barrier — the straggler signal the elastic shed
+    /// ranks by
+    last_ready_lag: f64,
     // -- per-barrier stashes --
     barrier_preq: Vec<NodePreq>,
+    /// `BarrierReady::store_evicted` from the last collect — the input
+    /// for resolving a `GOSSIP_AUTO` round
+    store_evicted: bool,
     barrier_gossip: Option<Message>,
     barrier_state: Option<Message>,
+}
+
+/// Build a [`Worker`] around a handshaken control connection (reader
+/// thread included). `alive: false` parks it as an elastic standby.
+fn make_worker(
+    id: NodeId,
+    child: Option<Child>,
+    stream: TcpStream,
+    alive: bool,
+) -> anyhow::Result<Worker> {
+    let read_half = stream.try_clone()?;
+    let (tx, rx) = mpsc::channel();
+    let pulse = Arc::new(Pulse::new());
+    {
+        let pulse = pulse.clone();
+        std::thread::spawn(move || reader_thread(read_half, tx, pulse));
+    }
+    Ok(Worker {
+        id,
+        child,
+        stream,
+        rx,
+        pulse,
+        alive,
+        crashed: false,
+        converted: false,
+        reported_until: 0,
+        digest: FNV_OFFSET,
+        ticks_processed: 0,
+        samples_seen: 0,
+        samples_trained: 0,
+        samples_replayed: 0,
+        drift_detections: 0,
+        store_len: 0,
+        last_ready_lag: 0.0,
+        barrier_preq: Vec::new(),
+        store_evicted: false,
+        barrier_gossip: None,
+        barrier_state: None,
+    })
+}
+
+/// Display a `Hello` id ([`UNASSIGNED`] reads as "unassigned").
+fn fmt_hello(id: NodeId) -> String {
+    if id == UNASSIGNED {
+        "unassigned".to_string()
+    } else {
+        id.to_string()
+    }
 }
 
 impl Worker {
@@ -122,7 +248,7 @@ impl Worker {
 
     /// Next non-heartbeat frame, or `None` when the worker is dead
     /// (closed connection or stale heartbeat — the latter also SIGKILLs).
-    /// Heartbeats are consumed here: `last_heard` was already stamped by
+    /// Heartbeats are consumed here: the pulse was already stamped by
     /// the reader thread, and the piggybacked telemetry snapshot is
     /// published as per-node registry gauges for the status endpoint.
     fn recv(&mut self) -> Option<Message> {
@@ -138,7 +264,7 @@ impl Worker {
                     return None;
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
-                    let staleness = self.last_heard.lock().unwrap().elapsed();
+                    let staleness = self.pulse.staleness();
                     if staleness > STALE_AFTER {
                         log::warn!(
                             "worker {}: silent for {:.1}s (stale threshold {}s) — \
@@ -171,6 +297,9 @@ impl Worker {
 /// so a scraper (or `/status`) computes age as `uptime_now - value`
 /// without any wall-clock in the registry.
 fn publish_worker_heartbeat(id: NodeId, t: &TelemetrySnapshot) {
+    if id == UNASSIGNED {
+        return; // a standby's beats carry no node identity yet
+    }
     let reg = obs::registry();
     let node = id.to_string();
     let gauge = |name: &str, v: f64| {
@@ -185,15 +314,15 @@ fn publish_worker_heartbeat(id: NodeId, t: &TelemetrySnapshot) {
     gauge("adaselection_node_store_live", t.store_len as f64);
 }
 
-fn reader_thread(
-    mut stream: TcpStream,
-    tx: mpsc::Sender<Option<Message>>,
-    last_heard: Arc<Mutex<Instant>>,
-) {
+fn reader_thread(mut stream: TcpStream, tx: mpsc::Sender<Option<Message>>, pulse: Arc<Pulse>) {
     loop {
         match wire::read_frame(&mut stream) {
             Ok(Some(m)) => {
-                *last_heard.lock().unwrap() = Instant::now();
+                let round = match &m {
+                    Message::Heartbeat { round, .. } => Some(*round),
+                    _ => None,
+                };
+                pulse.stamp(round);
                 if tx.send(Some(m)).is_err() {
                     return;
                 }
@@ -206,14 +335,86 @@ fn reader_thread(
     }
 }
 
+/// The accept loop, on its own thread so the listener is *always* being
+/// served: spawned children, late external registrations and elastic
+/// standbys all come in here, whatever the coordinator is doing. Each
+/// accepted connection gets its own handshake thread with a short first-
+/// frame budget, so a slow or silent socket cannot stall the accept loop
+/// or a startup handshake (the slow-loris fix). Completed handshakes
+/// land in the registration channel.
+fn registrar(listener: TcpListener, tx: mpsc::Sender<Registration>, stop: Arc<AtomicBool>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if stop.load(Ordering::Relaxed) {
+                    return; // the shutdown wake-up connection
+                }
+                let tx = tx.clone();
+                std::thread::spawn(move || handshake(stream, peer, tx));
+            }
+            Err(e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                // transient accept errors (EMFILE et al.): keep serving
+                log::warn!("coordinator: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// One connection's handshake: read the `Hello` frame under
+/// [`HANDSHAKE_TIMEOUT`], then hand the stream over. A stray local
+/// connection (port scanner, curious operator) must not abort a training
+/// run: anything that is not a clean `Hello` is dropped here.
+fn handshake(mut stream: TcpStream, peer: std::net::SocketAddr, tx: mpsc::Sender<Registration>) {
+    stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).is_err() {
+        return;
+    }
+    match wire::read_frame(&mut stream) {
+        Ok(Some(Message::Hello { from })) => {
+            if stream.set_read_timeout(None).is_err() {
+                return;
+            }
+            let _ = tx.send(Registration { hello_id: from, stream });
+        }
+        other => {
+            log::warn!(
+                "coordinator: dropping non-worker connection from {peer} \
+                 (first frame: {other:?})"
+            );
+        }
+    }
+}
+
 /// The multi-process cluster coordinator (see module docs).
 pub struct Coordinator {
     cfg: ClusterConfig,
     cfg_json: String,
     exe: PathBuf,
-    listener: TcpListener,
+    /// handshaken registrations from the registrar thread
+    reg_rx: mpsc::Receiver<Registration>,
+    /// raised (plus one wake-up dial) to stop the registrar
+    reg_stop: Arc<AtomicBool>,
+    /// dialable control address — what spawned children and the README
+    /// quickstart pass as `--coordinator` (loopback-substituted when the
+    /// listen address is a wildcard bind)
     addr: String,
     workers: Vec<Worker>,
+    /// registered-but-unassigned workers, in arrival order — the elastic
+    /// admit pool
+    standbys: Vec<Worker>,
+    /// next id handed to an elastically admitted worker (starts above
+    /// every preassigned id, scheduled joiner included)
+    next_node_id: NodeId,
+    /// elastic admissions so far, broadcast cumulatively in every
+    /// `Assign`/`BarrierGo` so all nodes compile the same ring timeline
+    joins_events: Vec<(u64, NodeId)>,
+    /// `(barrier tick, fleet samples_seen)` of the last arrival-rate
+    /// measurement
+    last_rate_check: Option<(u64, u64)>,
     // churn state
     chaos_events: Vec<(u64, NodeId)>,
     pending_churn: Vec<ChurnOrder>,
@@ -247,9 +448,31 @@ impl Coordinator {
         let mut cfg = cfg.clone();
         cfg.worker_mode = "processes".into();
         cfg.validate()?;
-        let listener = TcpListener::bind("127.0.0.1:0")
-            .map_err(|e| anyhow::anyhow!("coordinator: bind control listener: {e}"))?;
-        let addr = listener.local_addr()?.to_string();
+        let bind_addr = cfg
+            .listen
+            .clone()
+            .unwrap_or_else(|| "127.0.0.1:0".to_string());
+        let listener = TcpListener::bind(&bind_addr).map_err(|e| {
+            anyhow::anyhow!("coordinator: bind control listener {bind_addr}: {e}")
+        })?;
+        let local = listener.local_addr()?;
+        // children (and the shutdown wake-up) dial this address; a
+        // wildcard bind (0.0.0.0 / ::) is not dialable, so substitute
+        // loopback while remote workers use the machine's real address
+        let addr = if local.ip().is_unspecified() {
+            format!("127.0.0.1:{}", local.port())
+        } else {
+            local.to_string()
+        };
+        if cfg.listen.is_some() {
+            log::info!("coordinator: accepting worker registrations on {local}");
+        }
+        let (reg_tx, reg_rx) = mpsc::channel();
+        let reg_stop = Arc::new(AtomicBool::new(false));
+        {
+            let stop = reg_stop.clone();
+            std::thread::spawn(move || registrar(listener, reg_tx, stop));
+        }
         let cfg_json = cfg.to_json().to_string();
         let current_ring =
             HashRing::with_nodes(cfg.stream.seed, cfg.vnodes, 0..cfg.nodes);
@@ -257,13 +480,19 @@ impl Coordinator {
             Some(path) => Some(TraceJournal::open(path)?),
             None => None,
         };
+        let next_node_id = cfg.nodes + usize::from(cfg.join_at > 0);
         Ok(Coordinator {
             cfg,
             cfg_json,
             exe,
-            listener,
+            reg_rx,
+            reg_stop,
             addr,
             workers: Vec::new(),
+            standbys: Vec::new(),
+            next_node_id,
+            joins_events: Vec::new(),
+            last_rate_check: None,
             chaos_events: Vec::new(),
             pending_churn: Vec::new(),
             current_ring,
@@ -310,70 +539,51 @@ impl Coordinator {
             })
     }
 
-    /// Accept `children` (already spawned, keyed by node id) until every
-    /// one has said `Hello`, then register reader threads.
-    fn accept_workers(
+    /// Fill the worker ids in `need` from (in order) already-parked
+    /// standbys, then fresh registrations — blocking on the registration
+    /// channel under a deadline, never sleep-polling. `children` maps the
+    /// ids we spawned ourselves (their `Hello` must announce the id); an
+    /// id in `need` with no child entry may be claimed by any unassigned
+    /// registration (`--spawn off` startup and scheduled joins without
+    /// spawning). Registrations that fill no slot park as standbys.
+    fn fill_slots(
         &mut self,
         mut children: BTreeMap<NodeId, Child>,
+        mut need: Vec<NodeId>,
     ) -> anyhow::Result<()> {
+        need.sort_unstable();
         let deadline = Instant::now() + CONNECT_TIMEOUT;
-        self.listener.set_nonblocking(true)?;
-        while !children.is_empty() {
-            match self.listener.accept() {
-                Ok((mut stream, peer)) => {
-                    stream.set_nodelay(true).ok();
-                    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
-                    // a stray local connection (port scanner, curious
-                    // operator) must not abort a training run: anything
-                    // that is not a clean Hello from a spawned child is
-                    // dropped, and we keep accepting until the deadline
-                    let id = match wire::read_frame(&mut stream) {
-                        Ok(Some(Message::Hello { from })) => from,
-                        other => {
-                            log::warn!(
-                                "coordinator: dropping non-worker connection from {peer} \
-                                 (first frame: {other:?})"
-                            );
-                            continue;
-                        }
-                    };
-                    let Some(child) = children.remove(&id) else {
-                        log::warn!(
-                            "coordinator: dropping connection claiming unexpected worker id {id}"
-                        );
-                        continue;
-                    };
-                    stream.set_read_timeout(None)?;
-                    let read_half = stream.try_clone()?;
-                    let (tx, rx) = mpsc::channel();
-                    let last_heard = Arc::new(Mutex::new(Instant::now()));
-                    {
-                        let last_heard = last_heard.clone();
-                        std::thread::spawn(move || reader_thread(read_half, tx, last_heard));
+        // standbys first: explicit ids, then unassigned in arrival order
+        // (two passes so an explicit --node-id is honored even when an
+        // unassigned standby registered earlier)
+        for pass in 0..2 {
+            let mut k = 0;
+            while k < self.standbys.len() && !need.is_empty() {
+                let hid = self.standbys[k].id;
+                let claim = if pass == 0 {
+                    need.iter()
+                        .position(|&n| n == hid && !children.contains_key(&n))
+                } else if hid == UNASSIGNED {
+                    need.iter().position(|&n| !children.contains_key(&n))
+                } else {
+                    None
+                };
+                match claim {
+                    Some(p) => {
+                        let id = need.remove(p);
+                        let mut w = self.standbys.remove(k);
+                        w.id = id;
+                        w.alive = true;
+                        self.workers.push(w);
                     }
-                    self.workers.push(Worker {
-                        id,
-                        child: Some(child),
-                        stream,
-                        rx,
-                        last_heard,
-                        alive: true,
-                        crashed: false,
-                        converted: false,
-                        reported_until: 0,
-                        digest: FNV_OFFSET,
-                        ticks_processed: 0,
-                        samples_seen: 0,
-                        samples_trained: 0,
-                        samples_replayed: 0,
-                        drift_detections: 0,
-                        store_len: 0,
-                        barrier_preq: Vec::new(),
-                        barrier_gossip: None,
-                        barrier_state: None,
-                    });
+                    None => k += 1,
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+            }
+        }
+        while !need.is_empty() {
+            match self.reg_rx.recv_timeout(Duration::from_millis(250)) {
+                Ok(reg) => self.place_registration(reg, &mut children, &mut need),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
                     // a child that died before Hello would hang us forever
                     for (id, c) in children.iter_mut() {
                         if let Ok(Some(status)) = c.try_wait() {
@@ -384,18 +594,63 @@ impl Coordinator {
                     }
                     anyhow::ensure!(
                         Instant::now() < deadline,
-                        "coordinator: workers never connected: {:?}",
-                        children.keys().collect::<Vec<_>>()
+                        "coordinator: workers never registered: {need:?}"
                     );
-                    std::thread::sleep(Duration::from_millis(5));
                 }
-                Err(e) => return Err(e.into()),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("coordinator: registrar thread died")
+                }
             }
         }
-        self.listener.set_nonblocking(false)?;
         // keep id order stable regardless of connect order
         self.workers.sort_by_key(|w| w.id);
         Ok(())
+    }
+
+    /// Route one registration: claim a needed slot (matching child id, or
+    /// any unspawned slot for an unassigned `Hello`) or park as standby.
+    fn place_registration(
+        &mut self,
+        reg: Registration,
+        children: &mut BTreeMap<NodeId, Child>,
+        need: &mut Vec<NodeId>,
+    ) {
+        let Registration { hello_id, stream } = reg;
+        let slot = match need.iter().position(|&n| n == hello_id) {
+            Some(p) => Some(p),
+            None if hello_id == UNASSIGNED => {
+                need.iter().position(|&n| !children.contains_key(&n))
+            }
+            None => None,
+        };
+        let (id, alive, child) = match slot {
+            Some(p) => {
+                let id = need.remove(p);
+                (id, true, children.remove(&id))
+            }
+            None => (hello_id, false, None),
+        };
+        match make_worker(id, child, stream, alive) {
+            Ok(w) if alive => self.workers.push(w),
+            Ok(w) => {
+                log::info!(
+                    "coordinator: parked registration (hello id {}) as standby #{}",
+                    fmt_hello(hello_id),
+                    self.standbys.len() + 1
+                );
+                self.standbys.push(w);
+            }
+            Err(e) => log::warn!("coordinator: dropping registration: {e}"),
+        }
+    }
+
+    /// Sweep registrations that arrived mid-run into the standby pool
+    /// (called at every barrier, so `/status` and the elastic admit see
+    /// them promptly).
+    fn drain_registrations(&mut self) {
+        while let Ok(reg) = self.reg_rx.try_recv() {
+            self.place_registration(reg, &mut BTreeMap::new(), &mut Vec::new());
+        }
     }
 
     fn alive_ids(&self) -> Vec<NodeId> {
@@ -444,19 +699,13 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Collect the barrier from one worker: `BarrierReady`, then the
-    /// payloads its `BarrierGo` flags ordered. Returns an error only for
-    /// protocol violations / reported failures — a death just marks the
-    /// worker crashed.
-    fn collect_one(
-        &mut self,
-        i: usize,
-        sync: u64,
-        gossip: u8,
-        state_expected: bool,
-    ) -> anyhow::Result<()> {
+    /// Collect one worker's `BarrierReady` (counters + eviction flag).
+    /// Returns an error only for protocol violations / reported failures
+    /// — a death just marks the worker crashed.
+    fn collect_ready(&mut self, i: usize, sync: u64) -> anyhow::Result<()> {
         let w = &mut self.workers[i];
         w.barrier_preq.clear();
+        w.store_evicted = false;
         w.barrier_gossip = None;
         w.barrier_state = None;
         if w.crashed {
@@ -472,6 +721,7 @@ impl Coordinator {
                 samples_replayed,
                 drift_detections,
                 store_len,
+                store_evicted,
                 failed,
                 ..
             }) => {
@@ -488,6 +738,7 @@ impl Coordinator {
                 w.samples_replayed = samples_replayed;
                 w.drift_detections = drift_detections;
                 w.store_len = store_len as usize;
+                w.store_evicted = store_evicted;
             }
             Some(other) => anyhow::bail!(
                 "coordinator: worker {} sent {other:?} instead of BarrierReady",
@@ -495,7 +746,22 @@ impl Coordinator {
             ),
             None => return Ok(()),
         }
-        if gossip != GOSSIP_NONE {
+        Ok(())
+    }
+
+    /// Collect one worker's ordered barrier payloads (gossip, then merge
+    /// `State`), per its `BarrierGo` flags.
+    fn collect_payloads(
+        &mut self,
+        i: usize,
+        gossip: bool,
+        state_expected: bool,
+    ) -> anyhow::Result<()> {
+        let w = &mut self.workers[i];
+        if w.crashed {
+            return Ok(());
+        }
+        if gossip {
             match w.recv() {
                 Some(m @ Message::StoreGossip { .. }) => w.barrier_gossip = Some(m),
                 Some(other) => anyhow::bail!(
@@ -516,6 +782,54 @@ impl Coordinator {
             }
         }
         Ok(())
+    }
+
+    /// Collect one barrier round across `flags` (worker index, gossip
+    /// order, state expected): every `BarrierReady` first, then — on a
+    /// `GOSSIP_AUTO` round — resolve the cluster-wide delta/full choice
+    /// from the reported eviction flags and release the workers with a
+    /// `GossipGo`, then the ordered payloads. Returns the resolved gossip
+    /// mode (what `relay_gossip` should assume). `GossipGo` frames are
+    /// control plane, not counted into `gossip_bytes`.
+    fn collect_round(
+        &mut self,
+        flags: &[(usize, u8, bool)],
+        sync: u64,
+        barrier_start: f64,
+    ) -> anyhow::Result<u8> {
+        for &(i, _, _) in flags {
+            self.collect_ready(i, sync)?;
+            let lag = self.span_clock.elapsed_secs() - barrier_start;
+            self.workers[i].last_ready_lag = lag;
+            let id = self.workers[i].id;
+            self.trace_span("ready_lag", sync, Some(id), barrier_start, lag);
+        }
+        let mut resolved = flags
+            .iter()
+            .map(|&(_, g, _)| g)
+            .find(|&g| g != GOSSIP_NONE)
+            .unwrap_or(GOSSIP_NONE);
+        if resolved == GOSSIP_AUTO {
+            // a delta cannot resurrect entries a receiver evicted, so one
+            // eviction anywhere escalates the whole round to full — the
+            // same rule the thread coordinator applies locally
+            let evicted = flags.iter().any(|&(i, g, _)| {
+                g == GOSSIP_AUTO
+                    && !self.workers[i].crashed
+                    && self.workers[i].store_evicted
+            });
+            resolved = if evicted { GOSSIP_FULL } else { GOSSIP_DELTA };
+            let go = Message::GossipGo { round: self.round, mode: resolved };
+            for &(i, g, _) in flags {
+                if g == GOSSIP_AUTO {
+                    self.workers[i].send(&go);
+                }
+            }
+        }
+        for &(i, g, st) in flags {
+            self.collect_payloads(i, g != GOSSIP_NONE, st)?;
+        }
+        Ok(resolved)
     }
 
     /// Relay the collected gossip messages hub-and-spoke, in sender-id
@@ -618,6 +932,7 @@ impl Coordinator {
         until: u64,
         gossip: u8,
         merge: bool,
+        boot: bool,
         churn: Vec<ChurnOrder>,
         classification: bool,
         roll_loss: &mut RollingWindow,
@@ -626,6 +941,7 @@ impl Coordinator {
     ) -> anyhow::Result<()> {
         self.round += 1;
         let barrier_start = self.span_clock.elapsed_secs();
+        let joins = self.joins_events.clone();
         let mut flags: Vec<(usize, u8, bool)> = Vec::new();
         for i in 0..self.workers.len() {
             if !(self.workers[i].alive && !self.workers[i].crashed) {
@@ -636,19 +952,15 @@ impl Coordinator {
                 until,
                 gossip,
                 merge,
-                boot: false,
+                boot,
                 churn: churn.clone(),
+                joins: joins.clone(),
             };
             if self.workers[i].send(&go) {
-                flags.push((i, gossip, merge));
+                flags.push((i, gossip, merge || boot));
             }
         }
-        for &(i, g, st) in &flags {
-            self.collect_one(i, until, g, st)?;
-            let lag = self.span_clock.elapsed_secs() - barrier_start;
-            let id = self.workers[i].id;
-            self.trace_span("ready_lag", until, Some(id), barrier_start, lag);
-        }
+        self.collect_round(&flags, until, barrier_start)?;
         let dur = self.span_clock.elapsed_secs() - barrier_start;
         self.trace_span("barrier", until, None, barrier_start, dur);
         self.fold_barrier(classification, roll_loss, roll_acc, rolling);
@@ -689,17 +1001,40 @@ impl Coordinator {
             .map(|w| w.store_len)
             .sum();
         reg.gauge("adaselection_store_live").set(live as f64);
+        // live membership for /status: fleet counts plus a per-node
+        // alive flag (dead workers keep reporting 0 so the view shows
+        // the shed/crash instead of silently dropping the row)
+        let alive = self
+            .workers
+            .iter()
+            .filter(|w| w.alive && !w.crashed)
+            .count();
+        reg.gauge("adaselection_cluster_nodes").set(alive as f64);
+        reg.gauge("adaselection_cluster_standbys")
+            .set(self.standbys.len() as f64);
+        for w in &self.workers {
+            let node = w.id.to_string();
+            reg.gauge(&obs::series("adaselection_node_alive", &[("node", node.as_str())]))
+                .set(f64::from(u8::from(w.alive && !w.crashed)));
+        }
     }
 
     /// Run the whole job. Consumes the coordinator.
     pub fn run(mut self) -> anyhow::Result<ClusterResult> {
         let r = self.drive();
-        // whatever happened, never leave children behind
-        for w in &mut self.workers {
+        // whatever happened, never leave children (or parked externally
+        // registered standbys) behind
+        for w in self.workers.iter_mut().chain(self.standbys.iter_mut()) {
             let _ = w.send(&Message::Shutdown);
         }
-        for w in &mut self.workers {
+        for w in self.workers.iter_mut().chain(self.standbys.iter_mut()) {
             w.reap();
+        }
+        // stop the registrar: raise the flag, then dial the listener once
+        // so the blocking accept wakes up and sees it
+        self.reg_stop.store(true, Ordering::Relaxed);
+        if let Ok(sa) = self.addr.parse::<std::net::SocketAddr>() {
+            let _ = TcpStream::connect_timeout(&sa, Duration::from_millis(250));
         }
         // all trace senders are transient (per-event handles), so the
         // writer thread drains and exits as soon as the journal's own
@@ -752,12 +1087,20 @@ impl Coordinator {
             cfg.chaos_kill_at
         );
 
-        // spawn + handshake + assign
+        // spawn (unless --spawn off) + registration + assign
         let mut children = BTreeMap::new();
-        for id in 0..cfg.nodes {
-            children.insert(id, self.spawn_child(id)?);
+        if cfg.spawn {
+            for id in 0..cfg.nodes {
+                children.insert(id, self.spawn_child(id)?);
+            }
+        } else {
+            log::info!(
+                "coordinator: waiting for {} external worker registration(s) on {}",
+                cfg.nodes,
+                self.addr
+            );
         }
-        self.accept_workers(children)?;
+        self.fill_slots(children, (0..cfg.nodes).collect())?;
         let cfg_json = self.cfg_json.clone();
         for w in &mut self.workers {
             let assign = Message::Assign {
@@ -765,6 +1108,7 @@ impl Coordinator {
                 first_tick: 0,
                 config: cfg_json.clone(),
                 chaos: Vec::new(),
+                joins: Vec::new(),
             };
             anyhow::ensure!(
                 w.send(&assign),
@@ -788,9 +1132,14 @@ impl Coordinator {
                 && !is_join;
             let cadence_merge =
                 sync < max && cfg.merge_every > 0 && sync % cfg.merge_every as u64 == 0;
+            // delta-cadence rounds go out as GOSSIP_AUTO: whether the
+            // round may actually ship deltas depends on eviction flags
+            // the workers only report at the barrier, so the choice is
+            // resolved post-collect by a GossipGo (cadence-full rounds
+            // are full no matter what, so they are ordered directly)
             let gossip_mode = if cadence_gossip {
                 if delta && self.gossip_rounds % cfg.full_gossip_every as u64 != 0 {
-                    GOSSIP_DELTA
+                    GOSSIP_AUTO
                 } else {
                     GOSSIP_FULL
                 }
@@ -806,6 +1155,7 @@ impl Coordinator {
             // ---- segment barrier: GO, (maybe) chaos, collect ----
             self.round += 1;
             let barrier_start = self.span_clock.elapsed_secs();
+            let joins = self.joins_events.clone();
             let mut flags: Vec<(usize, u8, bool)> = Vec::new(); // (idx, gossip, state?)
             for i in 0..self.workers.len() {
                 if !(self.workers[i].alive && !self.workers[i].crashed) {
@@ -822,36 +1172,41 @@ impl Coordinator {
                     merge: m,
                     boot: b,
                     churn: churn.clone(),
+                    joins: joins.clone(),
                 };
                 if self.workers[i].send(&go) {
                     flags.push((i, g, m || b));
                 }
             }
+            let mut chaos_this_barrier = false;
             if cfg.chaos_kill_at > 0
                 && !self.chaos_fired
                 && prev <= cfg.chaos_kill_at as u64
                 && (cfg.chaos_kill_at as u64) < sync
             {
                 self.chaos_fired = true;
-                // let the segment get going, then SIGKILL mid-flight
-                std::thread::sleep(Duration::from_millis(25));
+                chaos_this_barrier = true;
+                // wait (condvar beats, not a sleep-poll) until the
+                // victim's heartbeat confirms it has adopted this round —
+                // i.e. the segment is under way — so the SIGKILL lands
+                // mid-flight; a cap keeps a wedged victim from stalling us
+                let round = self.round;
                 if let Some(w) = self
                     .workers
                     .iter_mut()
                     .find(|w| w.id == cfg.chaos_kill_node && w.alive)
                 {
+                    let cap = Instant::now() + Duration::from_secs(2);
+                    while w.pulse.last_round() < round && Instant::now() < cap {
+                        w.pulse.wait_beat(Duration::from_millis(100));
+                    }
                     log::warn!("coordinator: chaos-killing worker {}", w.id);
                     if let Some(c) = w.child.as_mut() {
                         let _ = c.kill();
                     }
                 }
             }
-            for &(i, g, st) in &flags {
-                self.collect_one(i, sync, g, st)?;
-                let lag = self.span_clock.elapsed_secs() - barrier_start;
-                let id = self.workers[i].id;
-                self.trace_span("ready_lag", sync, Some(id), barrier_start, lag);
-            }
+            let resolved = self.collect_round(&flags, sync, barrier_start)?;
             let dur = self.span_clock.elapsed_secs() - barrier_start;
             self.trace_span("barrier", sync, None, barrier_start, dur);
             self.fold_barrier(classification, &mut roll_loss, &mut roll_acc, &mut rolling);
@@ -878,7 +1233,7 @@ impl Coordinator {
 
             if cadence_gossip {
                 let gossip_start = self.span_clock.elapsed_secs();
-                let bytes = self.relay_gossip(gossip_mode);
+                let bytes = self.relay_gossip(resolved);
                 self.gossip_bytes += bytes;
                 self.gossip_rounds += 1;
                 self.trace_event("gossip", sync, bytes);
@@ -904,6 +1259,18 @@ impl Coordinator {
                 let dur = self.span_clock.elapsed_secs() - merge_start;
                 self.trace_span("merge", sync, None, merge_start, dur);
             }
+
+            // ---- elastic membership: watermark admit / shed ----
+            self.drain_registrations();
+            if sync < max && !is_kill && !is_join && !chaos_this_barrier {
+                self.elastic_step(
+                    sync,
+                    classification,
+                    &mut roll_loss,
+                    &mut roll_acc,
+                    &mut rolling,
+                )?;
+            }
             prev = sync;
         }
 
@@ -917,6 +1284,7 @@ impl Coordinator {
             self.uniform_round(
                 max,
                 GOSSIP_NONE,
+                false,
                 false,
                 churn,
                 classification,
@@ -1032,8 +1400,15 @@ impl Coordinator {
 
         self.current_ring.add_node(join_id);
         let mut children = BTreeMap::new();
-        children.insert(join_id, self.spawn_child(join_id)?);
-        self.accept_workers(children)?;
+        if self.cfg.spawn {
+            children.insert(join_id, self.spawn_child(join_id)?);
+        } else {
+            log::info!(
+                "coordinator: waiting for an external joiner registration on {}",
+                self.addr
+            );
+        }
+        self.fill_slots(children, vec![join_id])?;
         let ji = self
             .workers
             .iter()
@@ -1044,6 +1419,7 @@ impl Coordinator {
             first_tick: sync,
             config: self.cfg_json.clone(),
             chaos: self.chaos_events.clone(),
+            joins: self.joins_events.clone(),
         };
         let boot = Message::MergePayload { round: self.round, tensors, policy: snap };
         anyhow::ensure!(
@@ -1059,6 +1435,7 @@ impl Coordinator {
             sync,
             GOSSIP_FULL,
             cadence_merge,
+            false,
             Vec::new(),
             classification,
             roll_loss,
@@ -1082,6 +1459,208 @@ impl Coordinator {
             let dur = self.span_clock.elapsed_secs() - merge_start;
             self.trace_span("merge", sync, None, merge_start, dur);
         }
+        Ok(())
+    }
+
+    /// One elastic-membership decision, taken after a regular segment
+    /// barrier: measure the fleet arrival rate (samples/tick) since the
+    /// last check, admit a registered standby above the high watermark,
+    /// shed the worst straggler below the low one. At most one membership
+    /// change per barrier, never below `elastic_min_nodes` or above
+    /// `elastic_max_nodes`, and never while crash churn is pending (one
+    /// membership event settles before the next is considered).
+    #[allow(clippy::too_many_arguments)]
+    fn elastic_step(
+        &mut self,
+        sync: u64,
+        classification: bool,
+        roll_loss: &mut RollingWindow,
+        roll_acc: &mut RollingWindow,
+        rolling: &mut Vec<RollingPoint>,
+    ) -> anyhow::Result<()> {
+        let admit_above = self.cfg.elastic_admit_above;
+        let shed_below = self.cfg.elastic_shed_below;
+        if admit_above == 0.0 && shed_below == 0.0 {
+            return Ok(());
+        }
+        if !self.pending_churn.is_empty() {
+            return Ok(());
+        }
+        // counters of dead workers stay frozen at their last report, so
+        // summing over everyone keeps the series monotone across sheds
+        let seen: u64 = self.workers.iter().map(|w| w.samples_seen).sum();
+        let Some((t0, s0)) = self.last_rate_check.replace((sync, seen)) else {
+            return Ok(()); // first barrier: baseline only
+        };
+        if sync <= t0 {
+            return Ok(());
+        }
+        let rate = seen.saturating_sub(s0) as f64 / (sync - t0) as f64;
+        obs::registry()
+            .gauge("adaselection_cluster_arrival_rate")
+            .set(rate);
+        let alive = self.alive_ids().len();
+        if admit_above > 0.0
+            && rate > admit_above
+            && !self.standbys.is_empty()
+            && (self.cfg.elastic_max_nodes == 0 || alive < self.cfg.elastic_max_nodes)
+        {
+            log::info!(
+                "cluster: arrival rate {rate:.1}/tick above watermark {admit_above} \
+                 — admitting a standby"
+            );
+            return self.admit_standby(sync, classification, roll_loss, roll_acc, rolling);
+        }
+        if shed_below > 0.0 && rate < shed_below && alive > self.cfg.elastic_min_nodes {
+            log::info!(
+                "cluster: arrival rate {rate:.1}/tick below watermark {shed_below} \
+                 — shedding the worst straggler"
+            );
+            self.shed_straggler(sync)?;
+        }
+        Ok(())
+    }
+
+    /// Voluntary scale-in: shed the alive worker with the worst ready-lag
+    /// this barrier. The victim completed the barrier at `sync`, so the
+    /// leave is clean — ring epoch and backfill horizon coincide and
+    /// survivors re-process nothing (the involuntary crash path reuses
+    /// the same `ChurnOrder` machinery with a real backfill span).
+    fn shed_straggler(&mut self, sync: u64) -> anyhow::Result<()> {
+        let Some(vi) = (0..self.workers.len())
+            .filter(|&i| self.workers[i].alive && !self.workers[i].crashed)
+            .max_by(|&a, &b| {
+                self.workers[a]
+                    .last_ready_lag
+                    .total_cmp(&self.workers[b].last_ready_lag)
+            })
+        else {
+            return Ok(());
+        };
+        let id = self.workers[vi].id;
+        let lag = self.workers[vi].last_ready_lag;
+        {
+            let w = &mut self.workers[vi];
+            let _ = w.send(&Message::Shutdown);
+            w.alive = false;
+            w.converted = true;
+            if let Some(mut c) = w.child.take() {
+                let _ = c.wait();
+            }
+        }
+        let before = self.current_ring.clone();
+        self.current_ring.remove_node(id);
+        anyhow::ensure!(
+            !self.current_ring.is_empty(),
+            "coordinator: elastic shed emptied the ring"
+        );
+        let frac = HashRing::remap_fraction(&before, &self.current_ring, REMAP_SAMPLE);
+        self.remaps.push((sync, frac));
+        self.chaos_events.push((sync, id));
+        self.pending_churn.push(ChurnOrder {
+            dead: id,
+            epoch_tick: sync,
+            backfill_to: sync,
+        });
+        log::info!(
+            "cluster: elastic shed of worker {id} at tick {sync} \
+             (ready-lag {lag:.3}s, {:.1}% of keys remapped)",
+            100.0 * frac
+        );
+        Ok(())
+    }
+
+    /// Voluntary scale-out: promote the oldest standby under a fresh node
+    /// id. Mirrors the scheduled join — a no-tick boot round collects the
+    /// survivors' merged state, the joiner gets `Assign` + boot payload,
+    /// and a full-gossip mini-round seeds its store — except the ring
+    /// change is broadcast through the cumulative `joins` list instead of
+    /// being precompiled into every schedule.
+    fn admit_standby(
+        &mut self,
+        sync: u64,
+        classification: bool,
+        roll_loss: &mut RollingWindow,
+        roll_acc: &mut RollingWindow,
+        rolling: &mut Vec<RollingPoint>,
+    ) -> anyhow::Result<()> {
+        // boot material: a no-tick round where every survivor ships State
+        // (sent before the joins list grows, so nobody recompiles early)
+        self.uniform_round(
+            sync,
+            GOSSIP_NONE,
+            false,
+            true,
+            Vec::new(),
+            classification,
+            roll_loss,
+            roll_acc,
+            rolling,
+        )?;
+        self.convert_crashes(sync)?;
+        let (mat, _, contributed) = self.take_states();
+        anyhow::ensure!(contributed >= 1, "elastic admit: no surviving contributors");
+        let (tensors, snap) = mat
+            .merged()
+            .map_err(|e| anyhow::anyhow!("elastic admit bootstrap: {e}"))?;
+
+        let id = self.next_node_id;
+        self.next_node_id += 1;
+        let mut w = self.standbys.remove(0);
+        w.id = id;
+        w.alive = true;
+        self.workers.push(w);
+        let before = self.current_ring.clone();
+        self.current_ring.add_node(id);
+        let frac = HashRing::remap_fraction(&before, &self.current_ring, REMAP_SAMPLE);
+        self.remaps.push((sync, frac));
+        self.joins_events.push((sync, id));
+        let wi = self.workers.len() - 1;
+        let assign = Message::Assign {
+            node: id,
+            first_tick: sync,
+            config: self.cfg_json.clone(),
+            chaos: self.chaos_events.clone(),
+            joins: self.joins_events.clone(),
+        };
+        let boot = Message::MergePayload {
+            round: self.round,
+            tensors,
+            policy: snap,
+        };
+        anyhow::ensure!(
+            self.workers[wi].send(&assign) && self.workers[wi].send(&boot),
+            "coordinator: admitted standby dropped during bootstrap"
+        );
+        self.workers.sort_by_key(|w| w.id);
+        log::info!(
+            "cluster: elastic admit of a standby as worker {id} at tick {sync} \
+             ({} standby(s) left, {:.1}% of keys remapped)",
+            self.standbys.len(),
+            100.0 * frac
+        );
+
+        // seed the joiner: a full-gossip mini-round, everyone included —
+        // the survivors learn the grown ring from this round's BarrierGo
+        self.uniform_round(
+            sync,
+            GOSSIP_FULL,
+            false,
+            false,
+            Vec::new(),
+            classification,
+            roll_loss,
+            roll_acc,
+            rolling,
+        )?;
+        self.convert_crashes(sync)?;
+        let gossip_start = self.span_clock.elapsed_secs();
+        let bytes = self.relay_gossip(GOSSIP_FULL);
+        self.gossip_bytes += bytes;
+        self.gossip_rounds += 1;
+        self.trace_event("gossip", sync, bytes);
+        let dur = self.span_clock.elapsed_secs() - gossip_start;
+        self.trace_span("gossip_relay", sync, None, gossip_start, dur);
         Ok(())
     }
 }

@@ -24,24 +24,70 @@
 //! connection and becomes churn.
 
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cluster::node::ClusterNode;
 use crate::cluster::ring::NodeId;
-use crate::cluster::trainer::{build_ring_schedule_with, make_engine, replay_budget};
+use crate::cluster::trainer::{
+    build_ring_schedule_with_events, make_engine, replay_budget,
+};
 use crate::cluster::transport::{
-    ChurnOrder, Message, SharedTelemetry, GOSSIP_FULL, GOSSIP_NONE,
+    ChurnOrder, Message, SharedTelemetry, GOSSIP_AUTO, GOSSIP_FULL, GOSSIP_NONE,
+    UNASSIGNED,
 };
 use crate::cluster::wire;
 use crate::config::ClusterConfig;
 use crate::obs::TraceJournal;
 use crate::runtime::{Backend, NativeBackend};
 use crate::stream::source::{build_source, StreamKnobs};
+use crate::stream::tick::{fnv_fold, FNV_OFFSET};
 use crate::util::json::Json;
 
 /// Heartbeat cadence of the side thread.
 const HEARTBEAT_MS: u64 = 500;
+
+/// Connect retry/backoff: first retry after [`CONNECT_BASE_MS`], doubling
+/// to [`CONNECT_CAP_MS`], giving up after [`CONNECT_BUDGET_MS`] total —
+/// enough for "worker launched before the coordinator listens" without
+/// hanging forever on a dead address.
+const CONNECT_BASE_MS: u64 = 50;
+const CONNECT_CAP_MS: u64 = 2_000;
+const CONNECT_BUDGET_MS: u64 = 30_000;
+
+/// Dial the coordinator with jittered exponential backoff. The jitter is
+/// deterministic per (attempt, pid) — ±25% of the nominal delay — so a
+/// fleet of workers started together does not reconnect in lockstep, yet
+/// a given worker's retry schedule is reproducible.
+fn connect_with_retry(coordinator: &str) -> anyhow::Result<TcpStream> {
+    let start = std::time::Instant::now();
+    let mut delay = CONNECT_BASE_MS;
+    let mut attempt = 0u64;
+    loop {
+        match TcpStream::connect(coordinator) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                let elapsed = start.elapsed().as_millis() as u64;
+                if elapsed >= CONNECT_BUDGET_MS {
+                    anyhow::bail!(
+                        "connect to coordinator {coordinator}: {e} \
+                         (gave up after {attempt} attempts over {elapsed} ms)"
+                    );
+                }
+                let h = fnv_fold(
+                    fnv_fold(FNV_OFFSET, attempt),
+                    std::process::id() as u64,
+                );
+                let jitter = (delay / 4).max(1);
+                let sleep = (delay - jitter + h % (2 * jitter + 1))
+                    .min(CONNECT_BUDGET_MS.saturating_sub(elapsed));
+                std::thread::sleep(std::time::Duration::from_millis(sleep));
+                delay = (delay * 2).min(CONNECT_CAP_MS);
+                attempt += 1;
+            }
+        }
+    }
+}
 
 /// Send one wire frame over the shared writer.
 fn send_msg(writer: &Mutex<TcpStream>, msg: &Message) -> anyhow::Result<()> {
@@ -59,6 +105,9 @@ struct WorkerState {
     node: ClusterNode<NativeBackend>,
     /// unplanned kills applied so far — the schedule recompile input
     chaos: Vec<(u64, NodeId)>,
+    /// unscheduled elastic joins applied so far (same recompile input;
+    /// the coordinator broadcasts the cumulative list on every barrier)
+    joins: Vec<(u64, NodeId)>,
     /// per-worker trace journal (`--trace PATH` writes `PATH.node<id>`
     /// here — each process owns its own file, no cross-process locking)
     journal: Option<TraceJournal>,
@@ -82,6 +131,7 @@ fn build_state(
     node_id: NodeId,
     first_tick: u64,
     chaos: Vec<(u64, NodeId)>,
+    joins: Vec<(u64, NodeId)>,
     telemetry: &Arc<SharedTelemetry>,
 ) -> anyhow::Result<WorkerState> {
     let cfg = ClusterConfig::from_json(
@@ -107,7 +157,7 @@ fn build_state(
     let b = meta.batch;
     let state = backend.init_state(&meta.name, s.seed as i32)?;
     let engine = make_engine(&cfg, node_id, b, replay_budget(&cfg, b))?;
-    let (rings, _) = build_ring_schedule_with(&cfg, &chaos);
+    let (rings, _) = build_ring_schedule_with_events(&cfg, &chaos, &joins);
     let mut node = ClusterNode::new(
         node_id,
         backend,
@@ -133,7 +183,7 @@ fn build_state(
         None => None,
     };
     node.attach_observer(journal.as_ref().map(|j| j.handle()));
-    Ok(WorkerState { cfg, node, chaos, journal })
+    Ok(WorkerState { cfg, node, chaos, joins, journal })
 }
 
 /// Apply one crash-churn order: recompile the ownership timeline with the
@@ -142,7 +192,7 @@ fn build_state(
 fn apply_churn(ws: &mut WorkerState, order: &ChurnOrder) -> anyhow::Result<()> {
     let old = ws.node.rings();
     ws.chaos.push((order.epoch_tick, order.dead));
-    let (rings, _) = build_ring_schedule_with(&ws.cfg, &ws.chaos);
+    let (rings, _) = build_ring_schedule_with_events(&ws.cfg, &ws.chaos, &ws.joins);
     ws.node.adopt_schedule(rings);
     let redone =
         ws.node
@@ -160,9 +210,17 @@ fn apply_churn(ws: &mut WorkerState, order: &ChurnOrder) -> anyhow::Result<()> {
 /// One barrier: run to `until`, then emit BarrierReady + ordered payloads.
 /// `round` is echoed back so the coordinator's journal and this worker's
 /// journal agree on the barrier-round id.
+///
+/// `GOSSIP_AUTO` defers the delta/full choice to the coordinator: the
+/// `BarrierReady` reports whether this store rotated a generation since
+/// its last gossip, and the worker then blocks on exactly one `GossipGo`
+/// frame carrying the cluster-wide resolution. The read is safe because
+/// the control channel is FIFO and the coordinator sends nothing else to
+/// this worker between the `BarrierGo` and the `GossipGo`.
 #[allow(clippy::too_many_arguments)]
 fn run_barrier(
     ws: &mut WorkerState,
+    reader: &mut TcpStream,
     writer: &Mutex<TcpStream>,
     round: u64,
     until: u64,
@@ -184,14 +242,37 @@ fn run_barrier(
         samples_replayed: ws.node.engine.samples_replayed,
         drift_detections: ws.node.engine.drift_detections(),
         store_len: ws.node.engine.store.len() as u64,
+        store_evicted: ws.node.store_evicted_since_gossip(),
         failed: failed.clone(),
     };
     send_msg(writer, &ready)?;
     anyhow::ensure!(failed.is_empty(), "worker failed: {failed}");
     if gossip != GOSSIP_NONE {
+        let full = if gossip == GOSSIP_AUTO {
+            match wire::read_frame(reader)? {
+                Some(Message::GossipGo { round: r, mode }) => {
+                    anyhow::ensure!(
+                        r == round,
+                        "worker {}: GossipGo for round {r} during round {round}",
+                        ws.node.id
+                    );
+                    mode == GOSSIP_FULL
+                }
+                Some(other) => anyhow::bail!(
+                    "worker {}: expected GossipGo, got {other:?}",
+                    ws.node.id
+                ),
+                None => anyhow::bail!(
+                    "worker {}: coordinator closed before GossipGo",
+                    ws.node.id
+                ),
+            }
+        } else {
+            gossip == GOSSIP_FULL
+        };
         // the coordinator skips relaying empty deltas, but the frame
         // itself must always go up — it is what ends the wait
-        send_msg(writer, &ws.node.gossip_message(gossip == GOSSIP_FULL))?;
+        send_msg(writer, &ws.node.gossip_message(full))?;
     }
     if merge || boot {
         send_msg(writer, &ws.node.state_message()?)?;
@@ -201,30 +282,41 @@ fn run_barrier(
 
 /// Body of the `adaselection worker` subcommand. Blocks until the
 /// coordinator sends `Shutdown` (or the connection drops).
-pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
-    let mut reader = TcpStream::connect(coordinator).map_err(|e| {
-        anyhow::anyhow!("worker {node_id}: connect to coordinator {coordinator}: {e}")
-    })?;
+///
+/// `node_id: None` registers *unassigned*: the Hello carries the
+/// [`UNASSIGNED`] sentinel and the worker adopts whatever id its `Assign`
+/// hands it — possibly after waiting in the coordinator's standby pool
+/// for an elastic admit. The connection itself retries with jittered
+/// exponential backoff, so a worker launched before the coordinator
+/// listens still joins.
+pub fn run_worker(coordinator: &str, node_id: Option<NodeId>) -> anyhow::Result<()> {
+    let hello_id = node_id.unwrap_or(UNASSIGNED);
+    let mut reader = connect_with_retry(coordinator)
+        .map_err(|e| anyhow::anyhow!("worker: {e}"))?;
     reader.set_nodelay(true).ok();
     let writer = Arc::new(Mutex::new(reader.try_clone()?));
-    send_msg(&writer, &Message::Hello { from: node_id })?;
+    send_msg(&writer, &Message::Hello { from: hello_id })?;
 
     // heartbeats from a side thread: a long training segment must not
     // read as a dead process. Each beat piggybacks the latest telemetry
     // snapshot the training loop published to the shared mailbox, plus
     // the barrier round the main loop last adopted from a `BarrierGo`.
+    // The id cell starts at the Hello id and is overwritten when an
+    // unassigned worker adopts the id its Assign grants.
     let stop = Arc::new(AtomicBool::new(false));
     let telemetry = Arc::new(SharedTelemetry::default());
     let round = Arc::new(AtomicU64::new(0));
+    let my_id = Arc::new(AtomicUsize::new(hello_id));
     let hb = {
         let writer = writer.clone();
         let stop = stop.clone();
         let telemetry = telemetry.clone();
         let round = round.clone();
+        let my_id = my_id.clone();
         std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
                 let beat = Message::Heartbeat {
-                    from: node_id,
+                    from: my_id.load(Ordering::Relaxed),
                     round: round.load(Ordering::Relaxed),
                     telemetry: telemetry.load(),
                 };
@@ -236,7 +328,7 @@ pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
         })
     };
 
-    let result = worker_loop(&mut reader, &writer, node_id, &telemetry, &round);
+    let result = worker_loop(&mut reader, &writer, &my_id, &telemetry, &round);
     stop.store(true, Ordering::Relaxed);
     // on error, report it on the control channel (best effort) so the
     // coordinator aborts with the cause instead of inferring a crash
@@ -244,7 +336,7 @@ pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
         let _ = send_msg(
             &writer,
             &Message::BarrierReady {
-                from: node_id,
+                from: my_id.load(Ordering::Relaxed),
                 round: round.load(Ordering::Relaxed),
                 until: 0,
                 preq: Vec::new(),
@@ -255,6 +347,7 @@ pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
                 samples_replayed: 0,
                 drift_detections: 0,
                 store_len: 0,
+                store_evicted: false,
                 failed: format!("{e:#}"),
             },
         );
@@ -266,10 +359,11 @@ pub fn run_worker(coordinator: &str, node_id: NodeId) -> anyhow::Result<()> {
 fn worker_loop(
     reader: &mut TcpStream,
     writer: &Mutex<TcpStream>,
-    node_id: NodeId,
+    my_id: &Arc<AtomicUsize>,
     telemetry: &Arc<SharedTelemetry>,
     round_out: &Arc<AtomicU64>,
 ) -> anyhow::Result<()> {
+    let mut node_id: NodeId = my_id.load(Ordering::Relaxed);
     let mut ws: Option<WorkerState> = None;
     loop {
         let msg = match wire::read_frame(reader)? {
@@ -277,13 +371,22 @@ fn worker_loop(
             None => anyhow::bail!("worker {node_id}: coordinator closed the connection"),
         };
         match msg {
-            Message::Assign { node, first_tick, config, chaos } => {
-                anyhow::ensure!(
-                    node == node_id,
-                    "worker {node_id}: assigned someone else's id {node}"
-                );
+            Message::Assign { node, first_tick, config, chaos, joins } => {
+                if node_id == UNASSIGNED {
+                    // unassigned registration: adopt the granted id (the
+                    // heartbeat thread picks it up on its next beat)
+                    node_id = node;
+                    my_id.store(node, Ordering::Relaxed);
+                } else {
+                    anyhow::ensure!(
+                        node == node_id,
+                        "worker {node_id}: assigned someone else's id {node}"
+                    );
+                }
                 log::info!("worker {node_id}: assigned shard from tick {first_tick}");
-                ws = Some(build_state(&config, node, first_tick, chaos, telemetry)?);
+                ws = Some(build_state(
+                    &config, node, first_tick, chaos, joins, telemetry,
+                )?);
             }
             Message::StoreGossip { entries, .. } => {
                 let ws = ws.as_mut().ok_or_else(|| {
@@ -297,7 +400,7 @@ fn worker_loop(
                 })?;
                 ws.node.apply_merged(&tensors, policy.as_ref())?;
             }
-            Message::BarrierGo { round, until, gossip, merge, boot, churn } => {
+            Message::BarrierGo { round, until, gossip, merge, boot, churn, joins } => {
                 let ws = ws.as_mut().ok_or_else(|| {
                     anyhow::anyhow!("worker {node_id}: barrier before Assign")
                 })?;
@@ -305,10 +408,20 @@ fn worker_loop(
                 // every journal line in this segment carries it
                 ws.node.set_round(round);
                 round_out.store(round, Ordering::Relaxed);
+                // elastic joins: the coordinator broadcasts the cumulative
+                // list; a longer list means the ring grew since our last
+                // barrier, so recompile ownership before any tick runs
+                if joins.len() > ws.joins.len() {
+                    ws.joins = joins;
+                    let (rings, _) = build_ring_schedule_with_events(
+                        &ws.cfg, &ws.chaos, &ws.joins,
+                    );
+                    ws.node.adopt_schedule(rings);
+                }
                 for order in &churn {
                     apply_churn(ws, order)?;
                 }
-                run_barrier(ws, writer, round, until, gossip, merge, boot)?;
+                run_barrier(ws, reader, writer, round, until, gossip, merge, boot)?;
             }
             Message::Shutdown => {
                 log::info!("worker {node_id}: shutdown");

@@ -138,6 +138,19 @@ pub(crate) fn build_ring_schedule_with(
     cfg: &ClusterConfig,
     extra_kills: &[(u64, NodeId)],
 ) -> (Arc<RingSchedule>, Vec<(u64, f64)>) {
+    build_ring_schedule_with_events(cfg, extra_kills, &[])
+}
+
+/// [`build_ring_schedule_with`], plus unscheduled joins: the elastic
+/// coordinator admits registered standbys at runtime, and every worker
+/// (survivors via `BarrierGo::joins`, late joiners via `Assign::joins`)
+/// rebuilds its schedule from the same `(tick, node)` lists so ownership
+/// stays a pure function of the tick across the whole fleet.
+pub(crate) fn build_ring_schedule_with_events(
+    cfg: &ClusterConfig,
+    extra_kills: &[(u64, NodeId)],
+    extra_joins: &[(u64, NodeId)],
+) -> (Arc<RingSchedule>, Vec<(u64, f64)>) {
     let mut ring = HashRing::with_nodes(cfg.stream.seed, cfg.vnodes, 0..cfg.nodes);
     let mut sched = RingSchedule::new(ring.clone());
     // group events by tick so a same-tick kill+join becomes one epoch
@@ -156,6 +169,9 @@ pub(crate) fn build_ring_schedule_with(
     }
     for &(tick, node) in extra_kills {
         events.entry(tick).or_default().push(MembershipEvent::Kill(node));
+    }
+    for &(tick, node) in extra_joins {
+        events.entry(tick).or_default().push(MembershipEvent::Join(node));
     }
     let mut remaps = Vec::new();
     for (tick, evs) in events {
@@ -447,17 +463,27 @@ fn publish_barrier_gauges(
         reg.gauge("adaselection_rolling_acc").set(acc);
     }
     let mut live = 0usize;
-    for n in nodes.iter().filter(|n| n.alive) {
-        live += n.engine.store.len();
+    let mut alive = 0usize;
+    for n in nodes.iter() {
         let id = n.id.to_string();
         let gauge = |name: &str, v: f64| {
             reg.gauge(&obs::series(name, &[("node", id.as_str())])).set(v);
         };
+        gauge("adaselection_node_alive", n.alive as u8 as f64);
+        if !n.alive {
+            continue;
+        }
+        alive += 1;
+        live += n.engine.store.len();
         gauge("adaselection_node_heartbeat_uptime_seconds", obs::uptime_seconds());
         gauge("adaselection_node_ticks_total", n.tick_digests.len() as f64);
         gauge("adaselection_node_store_live", n.engine.store.len() as f64);
     }
     reg.gauge("adaselection_store_live").set(live as f64);
+    reg.gauge("adaselection_cluster_nodes").set(alive as f64);
+    // the thread runtime has no registration pool; the process coordinator
+    // overwrites this with the real standby count
+    reg.gauge("adaselection_cluster_standbys").set(0.0);
 }
 
 /// Run a full cluster job on the native backend. Dispatches on
@@ -644,8 +670,19 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
                 && cfg.gossip_every > 0
                 && sync % cfg.gossip_every as u64 == 0
             {
-                let full =
-                    !delta_gossip || gossip_rounds % cfg.full_gossip_every as u64 == 0;
+                // a generation rotation anywhere escalates the round to
+                // full: deltas cannot represent evictions, so a delta-mode
+                // sync after one would leave peers holding records the
+                // evictor no longer has — diverging from a full-gossip run.
+                // Checked before any gossip_message resets the marks.
+                let any_evicted = delta_gossip
+                    && nodes
+                        .iter()
+                        .filter(|n| n.alive)
+                        .any(|n| n.store_evicted_since_gossip());
+                let full = !delta_gossip
+                    || gossip_rounds % cfg.full_gossip_every as u64 == 0
+                    || any_evicted;
                 let gossip_start = clock.elapsed_secs();
                 let bytes = gossip_stores(&mut nodes, transport.as_ref(), full)?;
                 gossip_bytes += bytes;

@@ -21,10 +21,22 @@ use crate::selection::AdaSnapshot;
 use crate::stream::InstanceRecord;
 
 /// `BarrierGo` gossip orders: skip the round, ship the dirty delta, or
-/// ship the full live snapshot.
+/// ship the full live snapshot. `GOSSIP_AUTO` defers the delta/full
+/// choice to a post-barrier [`Message::GossipGo`]: workers report whether
+/// their store evicted since the last gossip sync in `BarrierReady`, and
+/// the coordinator escalates the whole round to full when any did — the
+/// eviction-safe delta cadence (a delta cannot resurrect entries a
+/// receiver evicted, a full snapshot can).
 pub const GOSSIP_NONE: u8 = 0;
 pub const GOSSIP_DELTA: u8 = 1;
 pub const GOSSIP_FULL: u8 = 2;
+pub const GOSSIP_AUTO: u8 = 3;
+
+/// `Hello` sentinel for a worker that registers without a preassigned
+/// node id (`adaselection worker --coordinator HOST:PORT` with no
+/// `--node-id`): the coordinator picks an id and the worker adopts it
+/// from its `Assign`.
+pub const UNASSIGNED: NodeId = NodeId::MAX;
 
 /// Unplanned-churn instruction carried by [`Message::BarrierGo`]: remove
 /// `dead` from the ring as of `epoch_tick`, then re-process the dead
@@ -70,22 +82,25 @@ pub enum Message {
     /// Coordinator → worker: the run assignment — the full
     /// `ClusterConfig` as JSON (the worker derives its ring schedule,
     /// engine and loader from it, exactly like a thread node would),
-    /// the first tick of this worker's shard, and any unplanned kills
-    /// already converted to churn (so late joiners compile the same
-    /// ownership timeline the survivors use).
+    /// the first tick of this worker's shard, any unplanned kills
+    /// already converted to churn, and any elastic joins already
+    /// admitted (so late joiners compile the same ownership timeline the
+    /// survivors use).
     Assign {
         node: NodeId,
         first_tick: u64,
         config: String,
         chaos: Vec<(u64, NodeId)>,
+        joins: Vec<(u64, NodeId)>,
     },
     /// Coordinator → worker: run to `until`, then report. `round` is the
     /// coordinator's monotonically increasing barrier-round id — workers
     /// echo it into every trace-journal line so offline analysis can
     /// merge journals by `(round, node)`. `gossip` (GOSSIP_*) and
     /// `merge`/`boot` order the barrier payloads the worker must send
-    /// after its `BarrierReady`; `churn` carries crash conversions to
-    /// apply *before* running.
+    /// after its `BarrierReady`; `churn` carries crash conversions and
+    /// `joins` carries elastic admissions, both to apply *before*
+    /// running.
     BarrierGo {
         round: u64,
         until: u64,
@@ -93,6 +108,7 @@ pub enum Message {
         merge: bool,
         boot: bool,
         churn: Vec<ChurnOrder>,
+        joins: Vec<(u64, NodeId)>,
     },
     /// Worker → coordinator: barrier reached. Carries the prequential
     /// records gathered since the last barrier plus the worker's running
@@ -100,7 +116,9 @@ pub enum Message {
     /// node summary even if the process later dies. `failed` is empty on
     /// success (a non-empty string aborts the run, mirroring the
     /// thread coordinator's error propagation). `round` echoes the
-    /// triggering `BarrierGo`'s round id.
+    /// triggering `BarrierGo`'s round id. `store_evicted` reports whether
+    /// the instance store evicted records since the last gossip sync —
+    /// the coordinator's input for resolving a `GOSSIP_AUTO` round.
     BarrierReady {
         from: NodeId,
         round: u64,
@@ -113,8 +131,13 @@ pub enum Message {
         samples_replayed: u64,
         drift_detections: u64,
         store_len: u64,
+        store_evicted: bool,
         failed: String,
     },
+    /// Coordinator → worker: resolve a `GOSSIP_AUTO` barrier — ship your
+    /// gossip now, in `mode` (GOSSIP_DELTA or GOSSIP_FULL, escalated to
+    /// full when any peer's store evicted since its last sync).
+    GossipGo { round: u64, mode: u8 },
     /// Coordinator → worker: the cluster-averaged model tensors + policy
     /// snapshot to adopt (merge barriers and join bootstrap), stamped
     /// with the barrier round that produced the merge.
@@ -198,9 +221,10 @@ impl Message {
             | Message::BarrierReady { from, .. }
             | Message::Heartbeat { from, .. } => *from,
             Message::Assign { node, .. } => *node,
-            Message::BarrierGo { .. } | Message::MergePayload { .. } | Message::Shutdown => {
-                NodeId::MAX
-            }
+            Message::BarrierGo { .. }
+            | Message::GossipGo { .. }
+            | Message::MergePayload { .. }
+            | Message::Shutdown => NodeId::MAX,
         }
     }
 }

@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! magic    u16  = 0xAD51          (little-endian, like every field)
-//! version  u8   = 2               (v1 frames still decode; see below)
+//! version  u8   = 3               (v1/v2 frames still decode; see below)
 //! len      u32  — payload bytes that follow
 //! payload  [u8; len]
 //! checksum u32  — FNV-1a-32 over the payload
@@ -20,10 +20,14 @@
 //!
 //! **v1 → v2:** v2 adds a `round: u64` barrier-round id to the
 //! `BarrierGo`/`BarrierReady`/`MergePayload`/`Heartbeat` control frames
-//! (round-scoped tracing). Encoding always writes v2; decoding accepts
-//! v1 frames and defaults their `round` to 0, so an old capture or an
-//! old peer's control frames still parse. Versions above [`VERSION`]
-//! are rejected with an explicit error.
+//! (round-scoped tracing). **v2 → v3:** v3 adds elastic-membership
+//! fields — `joins` on `Assign`/`BarrierGo`, a `store_evicted` flag on
+//! `BarrierReady`, and the `GossipGo` frame resolving `GOSSIP_AUTO`
+//! rounds. Encoding always writes v3; decoding accepts v1/v2 frames and
+//! defaults the missing fields (`round` 0, empty `joins`, false
+//! `store_evicted`), so an old capture or an old peer's control frames
+//! still parse. Versions above [`VERSION`] are rejected with an explicit
+//! error.
 //!
 //! [`frame_len`] computes a message's on-wire size without encoding it;
 //! the coordinator uses it to report gossip/merge bandwidth for *every*
@@ -42,9 +46,9 @@ use crate::stream::InstanceRecord;
 /// Frame magic ("AdaSelection wire").
 pub const MAGIC: u16 = 0xAD51;
 /// Current wire-format version; bumped on any layout change.
-pub const VERSION: u8 = 2;
+pub const VERSION: u8 = 3;
 /// Oldest version this node still decodes (v1 control frames carry no
-/// `round`; it defaults to 0).
+/// `round`, v1/v2 frames no elastic-membership fields; all default).
 pub const MIN_VERSION: u8 = 1;
 /// Bytes before the payload: magic (2) + version (1) + length (4).
 pub const HEADER_LEN: usize = 7;
@@ -66,13 +70,15 @@ const TAG_BARRIER_READY: u8 = 5;
 const TAG_MERGE_PAYLOAD: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
 const TAG_HEARTBEAT: u8 = 8;
+const TAG_GOSSIP_GO: u8 = 9;
 /// Encoded bytes per store-gossip entry: id + loss + gnorm + tick + visits.
 const ENTRY_LEN: usize = 24;
 /// Encoded bytes per prequential record: tick + loss_sum + correct + arrivals.
 const PREQ_LEN: usize = 20;
 /// Encoded bytes per churn order: dead + epoch_tick + backfill_to.
 const CHURN_LEN: usize = 24;
-/// Encoded bytes per chaos event in `Assign`: tick + node.
+/// Encoded bytes per membership event (`Assign` chaos kills, and the
+/// elastic joins on `Assign`/`BarrierGo`): tick + node.
 const CHAOS_LEN: usize = 16;
 /// Decode-side sanity bounds (far above anything the cluster produces).
 const MAX_RANK: usize = 8;
@@ -118,13 +124,18 @@ pub fn payload_len(msg: &Message) -> usize {
             1 + 8 + 8 + tensors_len(tensors) + policy_len(policy)
         }
         Message::Hello { .. } => 1 + 8,
-        Message::Assign { config, chaos, .. } => {
-            1 + 8 + 8 + 4 + config.len() + 4 + chaos.len() * CHAOS_LEN
+        Message::Assign { config, chaos, joins, .. } => {
+            1 + 8 + 8 + 4 + config.len() + 4 + chaos.len() * CHAOS_LEN + 4
+                + joins.len() * CHAOS_LEN
         }
-        Message::BarrierGo { churn, .. } => 1 + 8 + 8 + 1 + 1 + 1 + 4 + churn.len() * CHURN_LEN,
+        Message::BarrierGo { churn, joins, .. } => {
+            1 + 8 + 8 + 1 + 1 + 1 + 4 + churn.len() * CHURN_LEN + 4
+                + joins.len() * CHAOS_LEN
+        }
         Message::BarrierReady { preq, failed, .. } => {
-            1 + 8 + 8 + 8 + 4 + preq.len() * PREQ_LEN + 7 * 8 + 4 + failed.len()
+            1 + 8 + 8 + 8 + 4 + preq.len() * PREQ_LEN + 7 * 8 + 1 + 4 + failed.len()
         }
+        Message::GossipGo { .. } => 1 + 8 + 1,
         Message::MergePayload { tensors, policy, .. } => {
             1 + 8 + tensors_len(tensors) + policy_len(policy)
         }
@@ -183,7 +194,14 @@ pub fn check_encodable(msg: &Message) -> anyhow::Result<()> {
             check_tensors(tensors)?
         }
         Message::BarrierGo { gossip, .. } => {
-            anyhow::ensure!(*gossip <= 2, "wire: bad gossip order {gossip}")
+            anyhow::ensure!(*gossip <= 3, "wire: bad gossip order {gossip}")
+        }
+        Message::GossipGo { mode, .. } => {
+            // the resolved mode is always concrete: delta or full
+            anyhow::ensure!(
+                *mode == 1 || *mode == 2,
+                "wire: bad resolved gossip mode {mode}"
+            )
         }
         _ => {}
     }
@@ -272,7 +290,7 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
             b.push(TAG_HELLO);
             put_u64(&mut b, *from as u64);
         }
-        Message::Assign { node, first_tick, config, chaos } => {
+        Message::Assign { node, first_tick, config, chaos, joins } => {
             b.push(TAG_ASSIGN);
             put_u64(&mut b, *node as u64);
             put_u64(&mut b, *first_tick);
@@ -283,8 +301,13 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
                 put_u64(&mut b, tick);
                 put_u64(&mut b, node as u64);
             }
+            put_u32(&mut b, joins.len() as u32);
+            for &(tick, node) in joins {
+                put_u64(&mut b, tick);
+                put_u64(&mut b, node as u64);
+            }
         }
-        Message::BarrierGo { round, until, gossip, merge, boot, churn } => {
+        Message::BarrierGo { round, until, gossip, merge, boot, churn, joins } => {
             b.push(TAG_BARRIER_GO);
             put_u64(&mut b, *round);
             put_u64(&mut b, *until);
@@ -296,6 +319,11 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
                 put_u64(&mut b, c.dead as u64);
                 put_u64(&mut b, c.epoch_tick);
                 put_u64(&mut b, c.backfill_to);
+            }
+            put_u32(&mut b, joins.len() as u32);
+            for &(tick, node) in joins {
+                put_u64(&mut b, tick);
+                put_u64(&mut b, node as u64);
             }
         }
         Message::BarrierReady {
@@ -310,6 +338,7 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
             samples_replayed,
             drift_detections,
             store_len,
+            store_evicted,
             failed,
         } => {
             b.push(TAG_BARRIER_READY);
@@ -330,8 +359,14 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
             put_u64(&mut b, *samples_replayed);
             put_u64(&mut b, *drift_detections);
             put_u64(&mut b, *store_len);
+            b.push(*store_evicted as u8);
             put_u32(&mut b, failed.len() as u32);
             b.extend_from_slice(failed.as_bytes());
+        }
+        Message::GossipGo { round, mode } => {
+            b.push(TAG_GOSSIP_GO);
+            put_u64(&mut b, *round);
+            b.push(*mode);
         }
         Message::MergePayload { round, tensors, policy } => {
             b.push(TAG_MERGE_PAYLOAD);
@@ -526,6 +561,24 @@ fn decode_payload(version: u8, payload: &[u8]) -> anyhow::Result<Message> {
             Ok(0)
         }
     };
+    // v1/v2 frames carry no elastic joins; default to none
+    let joins_field = |c: &mut Cursor| -> anyhow::Result<Vec<(u64, NodeId)>> {
+        if version < 3 {
+            return Ok(Vec::new());
+        }
+        let n = c.u32()? as usize;
+        anyhow::ensure!(
+            n.saturating_mul(CHAOS_LEN) <= c.remaining(),
+            "wire: join event count {n} exceeds the payload"
+        );
+        let mut joins = Vec::with_capacity(n);
+        for _ in 0..n {
+            let tick = c.u64()?;
+            let node = c.u64()? as NodeId;
+            joins.push((tick, node));
+        }
+        Ok(joins)
+    };
     let msg = match c.u8()? {
         TAG_GOSSIP => {
             let from = c.u64()? as NodeId;
@@ -568,13 +621,14 @@ fn decode_payload(version: u8, payload: &[u8]) -> anyhow::Result<Message> {
                 let dead = c.u64()? as NodeId;
                 chaos.push((tick, dead));
             }
-            Message::Assign { node, first_tick, config, chaos }
+            let joins = joins_field(&mut c)?;
+            Message::Assign { node, first_tick, config, chaos, joins }
         }
         TAG_BARRIER_GO => {
             let round = round_field(&mut c)?;
             let until = c.u64()?;
             let gossip = c.u8()?;
-            anyhow::ensure!(gossip <= 2, "wire: bad gossip order {gossip}");
+            anyhow::ensure!(gossip <= 3, "wire: bad gossip order {gossip}");
             let merge = c.bool()?;
             let boot = c.bool()?;
             let n = c.u32()? as usize;
@@ -589,7 +643,8 @@ fn decode_payload(version: u8, payload: &[u8]) -> anyhow::Result<Message> {
                 let backfill_to = c.u64()?;
                 churn.push(ChurnOrder { dead, epoch_tick, backfill_to });
             }
-            Message::BarrierGo { round, until, gossip, merge, boot, churn }
+            let joins = joins_field(&mut c)?;
+            Message::BarrierGo { round, until, gossip, merge, boot, churn, joins }
         }
         TAG_BARRIER_READY => {
             let from = c.u64()? as NodeId;
@@ -615,6 +670,8 @@ fn decode_payload(version: u8, payload: &[u8]) -> anyhow::Result<Message> {
             let samples_replayed = c.u64()?;
             let drift_detections = c.u64()?;
             let store_len = c.u64()?;
+            // v1/v2 frames carry no eviction flag; default to false
+            let store_evicted = if version >= 3 { c.bool()? } else { false };
             let failed = c.string()?;
             Message::BarrierReady {
                 from,
@@ -628,8 +685,18 @@ fn decode_payload(version: u8, payload: &[u8]) -> anyhow::Result<Message> {
                 samples_replayed,
                 drift_detections,
                 store_len,
+                store_evicted,
                 failed,
             }
+        }
+        TAG_GOSSIP_GO => {
+            let round = c.u64()?;
+            let mode = c.u8()?;
+            anyhow::ensure!(
+                mode == 1 || mode == 2,
+                "wire: bad resolved gossip mode {mode}"
+            );
+            Message::GossipGo { round, mode }
         }
         TAG_MERGE_PAYLOAD => {
             let round = round_field(&mut c)?;
@@ -1029,6 +1096,7 @@ mod tests {
                 first_tick: 120,
                 config: r#"{"nodes": 4, "max-ticks": 200}"#.to_string(),
                 chaos: vec![(64, 1), (96, 2)],
+                joins: vec![(80, 5)],
             },
             Message::BarrierGo {
                 round: 6,
@@ -1037,15 +1105,19 @@ mod tests {
                 merge: true,
                 boot: false,
                 churn: vec![ChurnOrder { dead: 1, epoch_tick: 64, backfill_to: 96 }],
+                joins: vec![(96, 6)],
             },
             Message::BarrierGo {
                 round: 0,
                 until: 8,
-                gossip: 0,
+                gossip: 3,
                 merge: false,
                 boot: true,
                 churn: vec![],
+                joins: vec![],
             },
+            Message::GossipGo { round: 7, mode: 2 },
+            Message::GossipGo { round: 8, mode: 1 },
             Message::BarrierReady {
                 from: 2,
                 round: 6,
@@ -1061,6 +1133,7 @@ mod tests {
                 samples_replayed: 12,
                 drift_detections: 1,
                 store_len: 512,
+                store_evicted: true,
                 failed: String::new(),
             },
             Message::BarrierReady {
@@ -1075,6 +1148,7 @@ mod tests {
                 samples_replayed: 0,
                 drift_detections: 0,
                 store_len: 0,
+                store_evicted: false,
                 failed: "node 0: loader ended early".to_string(),
             },
             Message::MergePayload {
@@ -1119,12 +1193,16 @@ mod tests {
             policy: None,
         };
         assert!(check_encodable(&bad).is_err());
+        // an unresolved gossip mode never rides a GossipGo frame
+        assert!(check_encodable(&Message::GossipGo { round: 1, mode: 0 }).is_err());
+        assert!(check_encodable(&Message::GossipGo { round: 1, mode: 3 }).is_err());
         // a non-UTF-8 config string is rejected at decode, never a panic
         let ok = Message::Assign {
             node: 0,
             first_tick: 0,
             config: "ab".to_string(),
             chaos: vec![],
+            joins: vec![],
         };
         let mut frame = encode(&ok);
         // config bytes start after tag(1) + node(8) + first_tick(8) + len(4)
@@ -1164,13 +1242,14 @@ mod tests {
         go.extend_from_slice(&64u64.to_le_bytes()); // epoch_tick
         go.extend_from_slice(&96u64.to_le_bytes()); // backfill_to
         match decode(&frame_with_version(1, &go)).unwrap() {
-            Message::BarrierGo { round, until, gossip, merge, boot, churn } => {
+            Message::BarrierGo { round, until, gossip, merge, boot, churn, joins } => {
                 assert_eq!(round, 0, "v1 frames default round to 0");
                 assert_eq!(until, 96);
                 assert_eq!(gossip, 2);
                 assert!(merge);
                 assert!(!boot);
                 assert_eq!(churn, vec![ChurnOrder { dead: 1, epoch_tick: 64, backfill_to: 96 }]);
+                assert!(joins.is_empty(), "v1 frames default joins to empty");
             }
             other => panic!("wrong variant: {other:?}"),
         }
@@ -1222,6 +1301,68 @@ mod tests {
         // versions above VERSION stay rejected
         let err = decode(&frame_with_version(VERSION + 1, &go)).unwrap_err().to_string();
         assert!(err.contains("version"), "unhelpful version error: {err}");
+    }
+
+    #[test]
+    fn v2_control_frames_still_decode_with_default_elastic_fields() {
+        // a v2 BarrierGo payload: tag, round, until, gossip, merge, boot,
+        // churn (no joins list existed in v2)
+        let mut go = vec![TAG_BARRIER_GO];
+        go.extend_from_slice(&6u64.to_le_bytes()); // round
+        go.extend_from_slice(&96u64.to_le_bytes()); // until
+        go.push(1); // gossip = DELTA
+        go.push(0); // merge
+        go.push(0); // boot
+        go.extend_from_slice(&0u32.to_le_bytes()); // no churn
+        match decode(&frame_with_version(2, &go)).unwrap() {
+            Message::BarrierGo { round, until, gossip, joins, .. } => {
+                assert_eq!((round, until, gossip), (6, 96, 1));
+                assert!(joins.is_empty(), "v2 frames default joins to empty");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // the same payload under a v3 header is short by the joins list
+        assert!(decode(&frame_with_version(3, &go)).is_err());
+
+        // a v2 BarrierReady payload: no store_evicted flag before `failed`
+        let mut ready = vec![TAG_BARRIER_READY];
+        ready.extend_from_slice(&2u64.to_le_bytes()); // from
+        ready.extend_from_slice(&6u64.to_le_bytes()); // round
+        ready.extend_from_slice(&96u64.to_le_bytes()); // until
+        ready.extend_from_slice(&0u32.to_le_bytes()); // no preq
+        for v in [0xBEEFu64, 96, 1200, 600, 12, 1, 512] {
+            // digest + the six counters
+            ready.extend_from_slice(&v.to_le_bytes());
+        }
+        ready.extend_from_slice(&0u32.to_le_bytes()); // failed = ""
+        match decode(&frame_with_version(2, &ready)).unwrap() {
+            Message::BarrierReady { from, store_len, store_evicted, failed, .. } => {
+                assert_eq!((from, store_len), (2, 512));
+                assert!(!store_evicted, "v2 frames default store_evicted to false");
+                assert!(failed.is_empty());
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert!(decode(&frame_with_version(3, &ready)).is_err());
+
+        // a v2 Assign payload: chaos list but no joins list
+        let mut assign = vec![TAG_ASSIGN];
+        assign.extend_from_slice(&4u64.to_le_bytes()); // node
+        assign.extend_from_slice(&120u64.to_le_bytes()); // first_tick
+        assign.extend_from_slice(&2u32.to_le_bytes()); // config len
+        assign.extend_from_slice(b"{}");
+        assign.extend_from_slice(&1u32.to_le_bytes()); // one chaos event
+        assign.extend_from_slice(&64u64.to_le_bytes());
+        assign.extend_from_slice(&1u64.to_le_bytes());
+        match decode(&frame_with_version(2, &assign)).unwrap() {
+            Message::Assign { node, chaos, joins, .. } => {
+                assert_eq!(node, 4);
+                assert_eq!(chaos, vec![(64, 1)]);
+                assert!(joins.is_empty());
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert!(decode(&frame_with_version(3, &assign)).is_err());
     }
 
     #[test]

@@ -547,6 +547,27 @@ pub struct ClusterConfig {
     /// coordinator must detect the death and convert it to churn.
     pub chaos_kill_at: usize,
     pub chaos_kill_node: usize,
+    /// control-plane listen address for process workers (e.g.
+    /// `0.0.0.0:7400`); None binds an ephemeral loopback port. A fixed
+    /// address lets `adaselection worker --coordinator HOST:PORT` register
+    /// from any machine (process workers only).
+    pub listen: Option<String>,
+    /// spawn the worker processes locally (default). With `--spawn off`
+    /// the coordinator spawns nothing and waits for `nodes` external
+    /// workers to register on `listen` instead.
+    pub spawn: bool,
+    /// elastic scale-out: admit a registered standby worker when the
+    /// cluster-wide arrival rate (samples per tick, measured between
+    /// barriers) rises above this watermark (0 = off; process workers
+    /// only)
+    pub elastic_admit_above: f64,
+    /// elastic scale-in: shed the worst straggler when the arrival rate
+    /// falls below this watermark (0 = off; process workers only)
+    pub elastic_shed_below: f64,
+    /// never shed below this many alive workers
+    pub elastic_min_nodes: usize,
+    /// never admit above this many alive workers (0 = unlimited)
+    pub elastic_max_nodes: usize,
 }
 
 impl Default for ClusterConfig {
@@ -566,6 +587,12 @@ impl Default for ClusterConfig {
             join_at: 0,
             chaos_kill_at: 0,
             chaos_kill_node: 0,
+            listen: None,
+            spawn: true,
+            elastic_admit_above: 0.0,
+            elastic_shed_below: 0.0,
+            elastic_min_nodes: 1,
+            elastic_max_nodes: 0,
         }
     }
 }
@@ -635,7 +662,34 @@ impl ClusterConfig {
                 self.chaos_kill_at == 0,
                 "chaos-kill-at requires --workers processes"
             );
+            anyhow::ensure!(
+                self.listen.is_none(),
+                "--listen requires --workers processes"
+            );
+            anyhow::ensure!(self.spawn, "--spawn off requires --workers processes");
+            anyhow::ensure!(
+                self.elastic_admit_above == 0.0 && self.elastic_shed_below == 0.0,
+                "elastic watermarks require --workers processes"
+            );
         }
+        anyhow::ensure!(
+            self.spawn || self.listen.is_some(),
+            "--spawn off needs --listen ADDR so external workers can register"
+        );
+        anyhow::ensure!(
+            self.elastic_admit_above >= 0.0 && self.elastic_shed_below >= 0.0,
+            "elastic watermarks must be >= 0"
+        );
+        anyhow::ensure!(
+            self.elastic_min_nodes >= 1,
+            "elastic-min-nodes must be >= 1"
+        );
+        anyhow::ensure!(
+            self.elastic_max_nodes == 0 || self.elastic_max_nodes >= self.nodes,
+            "elastic-max-nodes {} below the starting node count {}",
+            self.elastic_max_nodes,
+            self.nodes
+        );
         if self.transport == "tcp" || self.worker_mode == "processes" {
             // the store's hard bound after rounding is ≤ max(capacity,
             // 2·shards); a full-snapshot gossip of that many entries must
@@ -709,6 +763,12 @@ impl ClusterConfig {
             "join-at" => self.join_at = value.parse()?,
             "chaos-kill-at" => self.chaos_kill_at = value.parse()?,
             "chaos-kill-node" => self.chaos_kill_node = value.parse()?,
+            "listen" => self.listen = Some(value.into()),
+            "spawn" => self.spawn = parse_bool(value)?,
+            "elastic-admit-above" => self.elastic_admit_above = value.parse()?,
+            "elastic-shed-below" => self.elastic_shed_below = value.parse()?,
+            "elastic-min-nodes" => self.elastic_min_nodes = value.parse()?,
+            "elastic-max-nodes" => self.elastic_max_nodes = value.parse()?,
             other => return self.stream.apply_override(other, value),
         }
         Ok(())
@@ -766,6 +826,26 @@ impl ClusterConfig {
         m.insert(
             "chaos-kill-node".into(),
             Json::Num(self.chaos_kill_node as f64),
+        );
+        if let Some(a) = &self.listen {
+            m.insert("listen".into(), Json::Str(a.clone()));
+        }
+        m.insert("spawn".into(), Json::Bool(self.spawn));
+        m.insert(
+            "elastic-admit-above".into(),
+            Json::Num(self.elastic_admit_above),
+        );
+        m.insert(
+            "elastic-shed-below".into(),
+            Json::Num(self.elastic_shed_below),
+        );
+        m.insert(
+            "elastic-min-nodes".into(),
+            Json::Num(self.elastic_min_nodes as f64),
+        );
+        m.insert(
+            "elastic-max-nodes".into(),
+            Json::Num(self.elastic_max_nodes as f64),
         );
         Json::Obj(m)
     }
@@ -1088,6 +1168,47 @@ mod tests {
         cfg.transport = "tcp".into();
         cfg.stream.store_capacity = 65_536;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn listen_spawn_and_elastic_knobs_gate_on_process_workers() {
+        let mut cfg = ClusterConfig::default();
+        cfg.apply_override("listen", "127.0.0.1:7400").unwrap();
+        assert!(cfg.validate().is_err(), "--listen in thread mode accepted");
+        cfg.apply_override("workers", "processes").unwrap();
+        cfg.validate().unwrap();
+
+        cfg.apply_override("spawn", "off").unwrap();
+        cfg.validate().unwrap();
+        cfg.listen = None;
+        assert!(cfg.validate().is_err(), "--spawn off without --listen accepted");
+        cfg.listen = Some("127.0.0.1:7400".into());
+
+        cfg.apply_override("elastic-admit-above", "64").unwrap();
+        cfg.apply_override("elastic-shed-below", "8").unwrap();
+        cfg.apply_override("elastic-min-nodes", "2").unwrap();
+        cfg.apply_override("elastic-max-nodes", "6").unwrap();
+        cfg.validate().unwrap();
+        cfg.elastic_max_nodes = 2; // below the starting count of 4
+        assert!(cfg.validate().is_err(), "elastic-max-nodes < nodes accepted");
+        cfg.elastic_max_nodes = 0;
+        cfg.elastic_min_nodes = 0;
+        assert!(cfg.validate().is_err(), "elastic-min-nodes 0 accepted");
+        cfg.elastic_min_nodes = 1;
+
+        cfg.worker_mode = "threads".into();
+        cfg.listen = None;
+        assert!(cfg.validate().is_err(), "elastic in thread mode accepted");
+
+        // the new keys survive a JSON round trip
+        cfg.worker_mode = "processes".into();
+        cfg.listen = Some("0.0.0.0:7401".into());
+        cfg.spawn = false;
+        let back = ClusterConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.listen.as_deref(), Some("0.0.0.0:7401"));
+        assert!(!back.spawn);
+        assert!((back.elastic_admit_above - 64.0).abs() < 1e-12);
+        assert!((back.elastic_shed_below - 8.0).abs() < 1e-12);
     }
 
     #[test]

@@ -170,16 +170,19 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The body of a spawned cluster worker process (normally launched by the
-/// `--workers processes` coordinator, not by hand).
+/// The body of a cluster worker process: spawned by the `--workers
+/// processes` coordinator, or started by hand on any machine to register
+/// with a coordinator listening via `--listen`. Without `--node-id` the
+/// worker registers unassigned and adopts whatever id the coordinator
+/// hands it (possibly waiting as an elastic standby).
 fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     let addr = args
         .flag("coordinator")
         .ok_or_else(|| anyhow::anyhow!("worker requires --coordinator HOST:PORT"))?;
-    let node: usize = args
-        .flag("node-id")
-        .ok_or_else(|| anyhow::anyhow!("worker requires --node-id N"))?
-        .parse()?;
+    let node: Option<usize> = match args.flag("node-id") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
     cluster::proc::run_worker(addr, node)
 }
 

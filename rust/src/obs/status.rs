@@ -197,11 +197,17 @@ fn status_json() -> Json {
                     "adaselection_node_ticks_total{{node=\"{node}\"}}"
                 ))
                 .unwrap_or(0.0);
+                // membership flag from the coordinator's barrier gauges;
+                // absent (single-process runs) serializes as null
+                let alive = value(&format!("adaselection_node_alive{{node=\"{node}\"}}"))
+                    .map(|a| Json::from(a > 0.0))
+                    .unwrap_or(Json::Null);
                 nodes.insert(
                     node.to_string(),
                     Json::obj(vec![
                         ("heartbeat_age_seconds", Json::from((uptime - v).max(0.0))),
                         ("ticks", Json::from(ticks)),
+                        ("alive", alive),
                     ]),
                 );
             }
@@ -247,11 +253,29 @@ fn status_json() -> Json {
         arms.entry(arm).or_insert(Json::Obj(per_node));
     }
 
+    // fleet membership (cluster runs only): alive node count, parked
+    // standbys awaiting an elastic admit, and the measured arrival rate
+    let cluster = match value("adaselection_cluster_nodes") {
+        Some(n) => Json::obj(vec![
+            ("nodes", Json::from(n)),
+            (
+                "standbys",
+                Json::from(value("adaselection_cluster_standbys").unwrap_or(0.0)),
+            ),
+            (
+                "arrival_rate",
+                json_num_or_null(value("adaselection_cluster_arrival_rate")),
+            ),
+        ]),
+        None => Json::Null,
+    };
+
     Json::obj(vec![
         ("uptime_seconds", Json::from(uptime)),
         ("rolling_loss", json_num_or_null(value("adaselection_rolling_loss"))),
         ("rolling_acc", json_num_or_null(value("adaselection_rolling_acc"))),
         ("store", store),
+        ("cluster", cluster),
         ("arms", Json::Obj(arms)),
         ("nodes", Json::Obj(nodes)),
         ("series", Json::from(snap.len())),
@@ -309,6 +333,11 @@ mod tests {
         registry()
             .gauge(&series("adaselection_arm_weight", &[("arm", "status_arm")]))
             .set(0.625);
+        registry()
+            .gauge(&series("adaselection_node_alive", &[("node", "2")]))
+            .set(1.0);
+        registry().gauge("adaselection_cluster_nodes").set(3.0);
+        registry().gauge("adaselection_cluster_standbys").set(2.0);
         let server = StatusServer::start("127.0.0.1:0").unwrap();
         let addr = server.local_addr();
         assert_eq!(last_bound_addr(), Some(addr));
@@ -327,6 +356,10 @@ mod tests {
         assert!(
             nodes["2"].at(&["heartbeat_age_seconds"]).unwrap().as_f64().unwrap() >= 0.0
         );
+        // tentpole: the live membership view rides along on /status
+        assert_eq!(nodes["2"].at(&["alive"]).unwrap().as_bool().unwrap(), true);
+        assert_eq!(j.at(&["cluster", "nodes"]).unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.at(&["cluster", "standbys"]).unwrap().as_f64().unwrap(), 2.0);
         // satellite: per-arm weights and trace-drop visibility on /status
         assert_eq!(
             j.at(&["arms", "status_arm"]).unwrap().as_f64().unwrap(),

@@ -13,12 +13,12 @@
 //! rng words, digests) are hex strings because JSON numbers are f64 and
 //! would truncate them; f32 payloads are exact as f64.
 //!
-//! Caveat: the store snapshot preserves *records*, not the generational
-//! (cur/old) placement inside each shard — a reloaded store evicts in a
-//! different order once it rotates. Selection itself never reads the
-//! store, so plain resumes stay exactly deterministic; with `--replay`
-//! (which picks from the store), exact post-resume determinism
-//! additionally requires the run not to have outgrown its store capacity.
+//! Since v4 the store snapshot also records the generational (cur/old)
+//! placement inside each shard (`store_old`), so a reloaded store evicts
+//! in exactly the saver's order — `--replay` resumes are tick-identical
+//! even after the run outgrows its store capacity. v3 checkpoints (no
+//! placement) still load; their stores re-age from scratch, which only
+//! matters once the resumed run rotates a generation.
 
 use std::path::Path;
 
@@ -33,7 +33,10 @@ use crate::util::json::Json;
 /// selective-backprop policy kinds, and bandit arm ids in the ada
 /// snapshot. v2 checkpoints still load (counter defaults to 0, ids to
 /// the legacy positional layout, per-method drift detectors to fresh).
-const VERSION: f64 = 3.0;
+/// v4: added the store's old-generation membership (`store_old`) for
+/// exact generational placement on resume. v2/v3 checkpoints still load
+/// (membership defaults to empty — everything re-ages as current).
+const VERSION: f64 = 4.0;
 /// Oldest version [`load`] still accepts.
 const MIN_VERSION: f64 = 2.0;
 
@@ -53,6 +56,10 @@ pub struct StreamCheckpoint {
     pub policy: Json,
     /// live instance-store records
     pub store: Vec<(u64, InstanceRecord)>,
+    /// ids of `store` entries that sat in their shard's *old* generation
+    /// at save time (v4; empty for v2/v3 checkpoints) — restoring the
+    /// placement makes post-resume eviction order exact
+    pub store_old: Vec<u64>,
     /// drift-controller state (`DriftGamma::to_json`; `Json::Null` when
     /// drift detection is off)
     pub drift: Json,
@@ -279,6 +286,10 @@ pub fn save(path: &Path, ck: &StreamCheckpoint) -> anyhow::Result<()> {
             "store",
             Json::Arr(ck.store.iter().map(|(id, r)| record_to_json(*id, r)).collect()),
         ),
+        (
+            "store_old",
+            Json::Arr(ck.store_old.iter().map(|&id| u64_json(id)).collect()),
+        ),
         ("drift", ck.drift.clone()),
         ("digest", u64_json(ck.digest)),
         ("samples_seen", u64_json(ck.samples_seen)),
@@ -337,6 +348,15 @@ pub fn load(path: &Path) -> anyhow::Result<StreamCheckpoint> {
             .iter()
             .map(record_from_json)
             .collect::<anyhow::Result<Vec<_>>>()?,
+        // absent in v2/v3 checkpoints — the store re-ages as all-current
+        store_old: match j.at(&["store_old"]) {
+            Ok(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(u64_from)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            Err(_) => Vec::new(),
+        },
         drift: j.at(&["drift"])?.clone(),
         digest: u64_from(j.at(&["digest"])?)?,
         samples_seen: u64_from(j.at(&["samples_seen"])?)?,
@@ -379,6 +399,7 @@ mod tests {
                 (u64::MAX, InstanceRecord { loss: 1.5, gnorm: 0.25, last_tick: 9, visits: 3 }),
                 (0, InstanceRecord { loss: 0.0, gnorm: 0.0, last_tick: 0, visits: 1 }),
             ],
+            store_old: vec![0, u64::MAX],
             drift: crate::stream::tick::DriftGamma::default().to_json(),
             digest: u64::MAX - 7,
             samples_seen: 1 << 60,
@@ -398,6 +419,7 @@ mod tests {
         assert_eq!(back.tensors[0].shape, vec![2, 3]);
         assert_eq!(back.tensors[0].data, ck.tensors[0].data);
         assert_eq!(back.store, ck.store);
+        assert_eq!(back.store_old, ck.store_old);
         assert_eq!(back.drift, ck.drift);
         assert_eq!(back.digest, ck.digest);
         assert_eq!(back.samples_seen, ck.samples_seen);
@@ -480,6 +502,7 @@ mod tests {
             tensors: Vec::new(),
             policy: Json::Obj(pj),
             store: Vec::new(),
+            store_old: Vec::new(),
             drift: Json::Null,
             digest: 0,
             samples_seen: 10,
@@ -496,12 +519,14 @@ mod tests {
             _ => unreachable!(),
         };
         j.remove("samples_forward");
+        j.remove("store_old");
         j.insert("version".into(), Json::Num(2.0));
         std::fs::write(&path, Json::Obj(j).to_string()).unwrap();
 
         let back = load(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(back.samples_forward, 0, "v2 load must default the counter");
+        assert!(back.store_old.is_empty(), "v2 load must default the placement");
 
         // the id-less ada payload restores positionally into the same spec
         let mut fresh = build_policy("adaselection", 1, 0.5, true, -0.5).unwrap();
@@ -536,11 +561,13 @@ mod tests {
             tensors: Vec::new(),
             policy: policy_to_json(&build_policy("uniform", 0, 0.5, true, -0.5).unwrap()),
             store: Vec::new(),
+            store_old: Vec::new(),
             drift: Json::Null,
             digest: 0,
             samples_seen: 0,
             samples_trained: 0,
             samples_replayed: 0,
+            samples_forward: 0,
         };
         let path = tmp("legacy_identity");
         save(&path, &ck).unwrap();

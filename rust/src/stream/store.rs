@@ -78,6 +78,9 @@ pub struct InstanceStore {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    /// eviction count at the last gossip sync — the delta between this
+    /// and `evictions` is the cluster's escalate-to-full signal
+    evictions_at_sync: AtomicU64,
     /// opt-in (cluster delta gossip): off by default so stores that never
     /// sync don't accumulate an unbounded dirty set
     track_dirty: AtomicBool,
@@ -103,6 +106,7 @@ impl InstanceStore {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            evictions_at_sync: AtomicU64::new(0),
             track_dirty: AtomicBool::new(false),
         }
     }
@@ -197,6 +201,24 @@ impl InstanceStore {
         }
     }
 
+    /// Whether any shard evicted records since the last
+    /// [`InstanceStore::mark_gossip_synced`]. A delta gossip cannot
+    /// restore entries a *receiver* evicted (a full snapshot can), so
+    /// cluster coordinators escalate a delta round to full whenever any
+    /// live node reports this — the rule that keeps tcp+delta runs
+    /// bit-identical to loopback+full under eviction pressure.
+    pub fn evicted_since_sync(&self) -> bool {
+        self.evictions.load(Ordering::Relaxed)
+            != self.evictions_at_sync.load(Ordering::Relaxed)
+    }
+
+    /// Record the current eviction count as the gossip-sync baseline;
+    /// called when a gossip payload is built (delta or full).
+    pub fn mark_gossip_synced(&self) {
+        self.evictions_at_sync
+            .store(self.evictions.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// Live records across all shards and both generations.
     pub fn len(&self) -> usize {
         self.shards
@@ -255,12 +277,76 @@ impl InstanceStore {
     }
 
     /// Re-insert checkpointed records (visit counts preserved verbatim).
+    /// Everything lands in the current generation, so a resumed store
+    /// re-ages from scratch — exact generational placement comes from
+    /// [`InstanceStore::load_with_generations`].
     pub fn load(&self, entries: &[(u64, InstanceRecord)]) {
         for &(id, rec) in entries {
             let mut s = self.shard(id).lock().unwrap();
             s.old.remove(&id);
             self.insert_cur(&mut s, id, rec);
         }
+    }
+
+    /// Like [`InstanceStore::snapshot`], plus the sorted ids of the
+    /// old-generation members — the checkpoint v4 payload. Membership is
+    /// all generational placement needs: shard assignment is a pure
+    /// function of the id and rotation drops whole generations, so the
+    /// cur/old split fully determines future eviction behavior.
+    pub fn snapshot_with_generations(&self) -> (Vec<(u64, InstanceRecord)>, Vec<u64>) {
+        let mut old_ids: Vec<u64> = Vec::new();
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            old_ids.extend(s.old.keys().copied());
+        }
+        old_ids.sort_unstable();
+        (self.snapshot(), old_ids)
+    }
+
+    /// Restore a checkpoint with exact generational placement: entries
+    /// whose ids appear in `old_ids` land in the old generation, the
+    /// rest in the current one, bit-for-bit reproducing the saver's
+    /// rotation state. Returns `true` on exact placement. When the split
+    /// does not fit this store's shard geometry (a resume under a
+    /// different `--store-capacity`/`--store-shards`), falls back to
+    /// [`InstanceStore::load`] — the resume still works, the store just
+    /// re-ages like the v3 checkpoint format always did.
+    pub fn load_with_generations(
+        &self,
+        entries: &[(u64, InstanceRecord)],
+        old_ids: &[u64],
+    ) -> bool {
+        let old: HashSet<u64> = old_ids.iter().copied().collect();
+        let n = self.shards.len();
+        let mut cur_count = vec![0usize; n];
+        let mut old_count = vec![0usize; n];
+        for &(id, _) in entries {
+            let shard = (mix(id) as usize) % n;
+            if old.contains(&id) {
+                old_count[shard] += 1;
+            } else {
+                cur_count[shard] += 1;
+            }
+        }
+        let fits = cur_count
+            .iter()
+            .chain(old_count.iter())
+            .all(|&c| c <= self.gen_capacity);
+        if !fits {
+            self.load(entries);
+            return false;
+        }
+        for &(id, rec) in entries {
+            let mut s = self.shard(id).lock().unwrap();
+            if old.contains(&id) {
+                s.cur.remove(&id);
+                s.old.insert(id, rec);
+            } else {
+                s.old.remove(&id);
+                s.cur.insert(id, rec);
+            }
+        }
+        true
     }
 
     /// Merge a peer store's snapshot (cluster gossip): freshest-tick-wins
@@ -506,6 +592,57 @@ mod tests {
         for &(id, _) in &d {
             assert!(s.peek(id).is_some(), "dirty id {id} is not live");
         }
+    }
+
+    #[test]
+    fn generation_snapshot_restores_exact_eviction_behavior() {
+        let a = InstanceStore::new(16, 2); // gen_capacity = 4: constant rotation
+        for id in 0..40u64 {
+            a.update(id, id as f32, 0.1, id as u32);
+        }
+        let (snap, old_ids) = a.snapshot_with_generations();
+        assert!(!old_ids.is_empty(), "rotation never produced an old generation");
+        let b = InstanceStore::new(16, 2);
+        assert!(b.load_with_generations(&snap, &old_ids), "same geometry must fit");
+        assert_eq!(b.snapshot(), snap);
+        let (_, b_old) = b.snapshot_with_generations();
+        assert_eq!(b_old, old_ids, "old-generation membership must round-trip");
+        // identical continuation: same inserts → same rotations → same content
+        for id in 100..140u64 {
+            a.update(id, 1.0, 0.2, id as u32);
+            b.update(id, 1.0, 0.2, id as u32);
+        }
+        assert_eq!(a.snapshot(), b.snapshot(), "restored store diverged under pressure");
+    }
+
+    #[test]
+    fn generation_load_falls_back_on_geometry_mismatch() {
+        let a = InstanceStore::new(64, 4);
+        for id in 0..200u64 {
+            a.update(id, 1.0, 0.1, 1);
+        }
+        let (snap, old_ids) = a.snapshot_with_generations();
+        let b = InstanceStore::new(16, 2); // too small for the saver's split
+        assert!(!b.load_with_generations(&snap, &old_ids), "mismatch must fall back");
+        assert!(b.len() <= b.capacity());
+    }
+
+    #[test]
+    fn eviction_sync_mark_tracks_rotations() {
+        let s = InstanceStore::new(8, 1);
+        assert!(!s.evicted_since_sync(), "fresh store has no evictions");
+        s.update(1, 1.0, 1.0, 1);
+        assert!(!s.evicted_since_sync(), "inserts without rotation don't trip it");
+        for id in 0..100u64 {
+            s.update(id, 1.0, 1.0, 1);
+        }
+        assert!(s.evicted_since_sync());
+        s.mark_gossip_synced();
+        assert!(!s.evicted_since_sync(), "mark must reset the baseline");
+        for id in 100..200u64 {
+            s.update(id, 1.0, 1.0, 2);
+        }
+        assert!(s.evicted_since_sync(), "new rotations re-trip it");
     }
 
     #[test]

@@ -155,9 +155,8 @@ fn tcp_delta_gossip_is_bit_identical_to_loopback_full() {
     // the same seed through (a) the in-process loopback with full-snapshot
     // gossip and (b) real 127.0.0.1 sockets with delta gossip, including a
     // kill and a join. Replay is on so store contents actually steer
-    // training (the store capacity holds every arrival, so delta and full
-    // gossip must converge on identical stores — and therefore identical
-    // replay picks and training digests).
+    // training; the store capacity holds every arrival here, and the
+    // eviction-pressure case is pinned by the next test.
     let ticks = 140;
     let mk = |transport: &str, gossip: &str| {
         let mut cfg = base_cfg(4, ticks);
@@ -198,6 +197,66 @@ fn tcp_delta_gossip_is_bit_identical_to_loopback_full() {
         full.gossip_bytes
     );
     assert_eq!(full.merge_bytes, delta.merge_bytes);
+}
+
+#[test]
+fn tcp_delta_matches_loopback_full_under_eviction_pressure() {
+    // the eviction case of the parity pin above: stores far smaller than
+    // the traffic rotate generations constantly, so deltas computed from
+    // since-last-sync marks alone would silently drop evicted-and-
+    // re-inserted records. Workers flag evicted-since-sync stores at the
+    // barrier and the coordinator escalates those rounds to full
+    // snapshots — parity must survive with no capacity caveat.
+    let ticks = 140;
+    let mk = |transport: &str, gossip: &str| {
+        let mut cfg = base_cfg(4, ticks);
+        cfg.transport = transport.into();
+        cfg.gossip = gossip.into();
+        cfg.stream.replay = true;
+        cfg.stream.store_capacity = 512;
+        cfg.stream.store_shards = 4;
+        cfg.kill_at = 50;
+        cfg.kill_node = 1;
+        cfg.join_at = 90;
+        cfg
+    };
+    let full = cluster::run(&mk("loopback", "full")).unwrap();
+    let delta = cluster::run(&mk("tcp", "delta")).unwrap();
+
+    assert_eq!(full.digest, delta.digest, "delta gossip diverged under eviction");
+    assert_eq!(full.samples_seen, delta.samples_seen);
+    assert_eq!(full.samples_trained, delta.samples_trained);
+    assert_eq!(full.samples_replayed, delta.samples_replayed);
+    assert_eq!(full.remaps, delta.remaps, "churn remap accounting diverged");
+    assert_eq!(
+        full.final_rolling_loss.to_bits(),
+        delta.final_rolling_loss.to_bits(),
+        "rolling loss not bit-identical under eviction"
+    );
+    assert_eq!(full.rolling.len(), delta.rolling.len());
+    for (a, b) in full.rolling.iter().zip(delta.rolling.iter()) {
+        assert_eq!(a.tick, b.tick);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+    assert_eq!(full.merge_bytes, delta.merge_bytes);
+    // escalation may turn every delta round into a full snapshot, but it
+    // must never ship *more* than the all-full run
+    assert!(
+        delta.gossip_bytes > 0 && delta.gossip_bytes <= full.gossip_bytes,
+        "escalated delta shipped more than full: {} vs {}",
+        delta.gossip_bytes,
+        full.gossip_bytes
+    );
+
+    // the pressure was real: every store pinned at the cap while the run
+    // saw far more arrivals than fit
+    for n in &delta.node_summaries {
+        assert!(n.store_len <= 512, "node {} store over capacity", n.id);
+    }
+    assert!(
+        delta.node_summaries.iter().any(|n| n.samples_seen > 1024),
+        "eviction pressure never materialized"
+    );
 }
 
 #[test]

@@ -226,6 +226,144 @@ fn traced_process_run_is_digest_neutral_and_analyzable() {
 }
 
 #[test]
+fn registered_workers_match_spawned_baseline() {
+    // the registration pin: a coordinator that spawns nothing
+    // (`--spawn off`) and waits on `--listen` for externally launched
+    // workers must produce the exact run the self-spawning coordinator
+    // produces at equal membership. The external workers are started
+    // BEFORE the coordinator binds its port — they sit in the jittered
+    // connect-retry loop until it comes up — and a silent socket that
+    // never sends its Hello leans on the listener for the whole
+    // registration window (slow-loris: the per-connection handshake
+    // budget keeps it off the accept path).
+    let ticks = 120;
+    let mk = || {
+        let mut cfg = base_cfg(2, ticks);
+        cfg.worker_mode = "processes".into();
+        cfg.gossip = "delta".into();
+        cfg.stream.replay = true;
+        cfg
+    };
+    let baseline = proc::run_with_exe(&mk(), worker_exe()).unwrap();
+
+    // pre-pick a free port so the workers can dial it before the
+    // coordinator exists (the probe listener is dropped immediately)
+    let addr = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().to_string()
+    };
+
+    // the external fleet: no --node-id — the coordinator assigns ids in
+    // registration order
+    let mut externals: Vec<std::process::Child> = (0..2)
+        .map(|_| {
+            std::process::Command::new(worker_exe())
+                .args(["worker", "--coordinator", &addr])
+                .stdin(std::process::Stdio::null())
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::inherit())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+
+    // slow-loris: connects as soon as the port opens, then says nothing
+    // for longer than the handshake budget
+    let loris_addr = addr.clone();
+    let loris = std::thread::spawn(move || {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        while std::time::Instant::now() < deadline {
+            if let Ok(s) = std::net::TcpStream::connect(&loris_addr) {
+                std::thread::sleep(std::time::Duration::from_secs(5));
+                drop(s);
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+    });
+
+    // let the workers burn a few failed dial attempts first
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    let mut cfg = mk();
+    cfg.listen = Some(addr);
+    cfg.spawn = false;
+    let registered = proc::run_with_exe(&cfg, worker_exe()).unwrap();
+
+    assert_eq!(
+        registered.digest, baseline.digest,
+        "registered fleet diverged from the spawned baseline"
+    );
+    assert_eq!(registered.samples_seen, baseline.samples_seen);
+    assert_eq!(registered.samples_trained, baseline.samples_trained);
+    assert_eq!(registered.samples_replayed, baseline.samples_replayed);
+    assert_eq!(registered.gossip_rounds, baseline.gossip_rounds);
+    assert_eq!(registered.gossip_bytes, baseline.gossip_bytes);
+    assert_eq!(registered.merges, baseline.merges);
+    assert_eq!(
+        registered.final_rolling_loss.to_bits(),
+        baseline.final_rolling_loss.to_bits(),
+        "rolling loss not bit-identical"
+    );
+    assert_eq!(registered.node_summaries.len(), baseline.node_summaries.len());
+    for (a, b) in registered.node_summaries.iter().zip(baseline.node_summaries.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.ticks_processed, b.ticks_processed, "node {}", a.id);
+        assert_eq!(a.samples_seen, b.samples_seen, "node {}", a.id);
+        assert_eq!(a.samples_trained, b.samples_trained, "node {}", a.id);
+    }
+
+    // the coordinator's protocol Shutdown lets both externals exit clean
+    for c in externals.iter_mut() {
+        let st = c.wait().unwrap();
+        assert!(st.success(), "external worker exited with {st}");
+    }
+    loris.join().unwrap();
+}
+
+#[test]
+fn arrival_watermark_sheds_straggler_with_exact_coverage() {
+    // elastic scale-in pin: no scheduled churn, no chaos kill — an
+    // arrival-rate watermark the stream can never meet makes the
+    // coordinator voluntarily shed the worst straggler. The leave is
+    // clean: the victim finished its barrier, so the ring epoch and the
+    // backfill horizon coincide and survivors re-process nothing —
+    // coverage stays exact. The min-nodes floor then holds even though
+    // the rate stays below the watermark for the rest of the run.
+    let mut cfg = base_cfg(3, 160);
+    cfg.worker_mode = "processes".into();
+    cfg.elastic_shed_below = 1e12; // any real rate is "too low"
+    cfg.elastic_min_nodes = 2;
+    let r = proc::run_with_exe(&cfg, worker_exe()).unwrap();
+
+    assert!(r.final_rolling_loss.is_finite(), "training halted");
+    assert_eq!(
+        r.samples_seen,
+        total_arrivals(&cfg),
+        "elastic shed dropped or duplicated arrivals"
+    );
+    assert_eq!(r.remaps.len(), 1, "expected exactly one voluntary shed");
+    let (tick, frac) = r.remaps[0];
+    assert!(tick > 0 && tick < 160, "shed epoch {tick} outside the run");
+    assert!(
+        frac > 0.05 && frac < 0.7,
+        "shed remapped an unbounded key fraction: {frac}"
+    );
+
+    assert_eq!(r.node_summaries.len(), 3);
+    let shed: Vec<_> = r.node_summaries.iter().filter(|n| !n.alive_at_end).collect();
+    assert_eq!(shed.len(), 1, "expected exactly one shed worker");
+    assert!(
+        shed[0].ticks_processed < 160,
+        "shed worker 'processed' the whole run after leaving"
+    );
+    for n in r.node_summaries.iter().filter(|n| n.alive_at_end) {
+        assert_eq!(n.ticks_processed, 160, "survivor {} stalled", n.id);
+    }
+    assert!(r.samples_trained > 0);
+}
+
+#[test]
 fn binary_runs_process_workers_end_to_end() {
     // the CLI path: the coordinator spawns workers from its *own*
     // executable (std::env::current_exe), so drive the real binary

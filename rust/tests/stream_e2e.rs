@@ -264,9 +264,8 @@ fn checkpoint_resume_with_drift_and_replay_is_deterministic() {
     cfg.burst_min = 0.25;
     cfg.drift_detect = "page-hinkley".into();
     cfg.replay = true;
-    // default (ample) store capacity: replay determinism across a resume
-    // requires the store not to have rotated generations (see
-    // stream::checkpoint docs) — eviction pressure is covered separately
+    // default (ample) store capacity here; the eviction-pressure case is
+    // pinned by checkpoint_resume_under_eviction_pressure_is_tick_identical
 
     let full = run(cfg.clone());
 
@@ -297,6 +296,59 @@ fn checkpoint_resume_with_drift_and_replay_is_deterministic() {
     cfg3.drift_detect = "off".into();
     let mut backend = NativeBackend::new();
     assert!(StreamTrainer::new(&mut backend, cfg3).unwrap().run().is_err());
+
+    std::fs::remove_file(&ck).ok();
+}
+
+#[test]
+fn checkpoint_resume_under_eviction_pressure_is_tick_identical() {
+    // checkpoint v4 pin: with a store far too small for the traffic,
+    // replay picks depend on exactly which records were live and which
+    // generation each shard held at the kill point. The v4 snapshot
+    // records per-shard generation boundaries, so the resumed run replays
+    // the identical selection sequence the uninterrupted run produces —
+    // tick digest for tick digest.
+    let dir = std::env::temp_dir().join(format!("ada_stream_ckev_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir.join("ck.json");
+    let _ = std::fs::remove_file(&ck);
+
+    let mut cfg = base_cfg();
+    cfg.max_ticks = 60;
+    cfg.eval_every = 2;
+    cfg.replay = true;
+    cfg.store_capacity = 512; // ~7.6k arrivals by tick 60: constant eviction
+    cfg.store_shards = 4;
+
+    let full = run(cfg.clone());
+    assert!(
+        full.store_counters.evictions > 0,
+        "no eviction pressure — this pin is vacuous"
+    );
+
+    let mut cfg1 = cfg.clone();
+    cfg1.max_ticks = 30;
+    cfg1.checkpoint = Some(ck.clone());
+    let half = run(cfg1);
+    assert!(
+        half.store_counters.evictions > 0,
+        "store never rotated before the kill"
+    );
+    assert_eq!(&full.tick_digests[..30], &half.tick_digests[..]);
+
+    let mut cfg2 = cfg.clone();
+    cfg2.checkpoint = Some(ck.clone());
+    cfg2.resume = true;
+    let resumed = run(cfg2);
+    assert_eq!(
+        &full.tick_digests[30..],
+        &resumed.tick_digests[..],
+        "resume under eviction diverged — per-shard generation boundaries lost"
+    );
+    assert_eq!(full.digest, resumed.digest);
+    assert_eq!(full.samples_seen, resumed.samples_seen);
+    assert_eq!(full.samples_trained, resumed.samples_trained);
+    assert_eq!(full.samples_replayed, resumed.samples_replayed);
 
     std::fs::remove_file(&ck).ok();
 }
