@@ -131,6 +131,15 @@ fn main() {
         });
     }
 
+    // per-kernel digests from the continuous profiler: the e2e runs above
+    // timed every backend kernel, so a future bench-diff regression can
+    // name the kernel that moved instead of just the end-to-end number
+    let kernels = adaselection::util::bench::kernel_results();
+    if !kernels.is_empty() {
+        print_results("backend kernels (continuous profiler)", &kernels);
+        results.extend(kernels);
+    }
+
     write_json("stream", &results).expect("write BENCH_stream.json");
 
     // read the emitted file back: the perf contract is on the artifact,

@@ -81,8 +81,14 @@ COMMANDS:
                       --window N --eval-every N --workers N
                       --drift-detect off|page-hinkley|adwin --replay on|off
                       --checkpoint FILE [--checkpoint-every N] [--resume]
-                      --trace FILE (per-tick JSONL trace journal)
-                      --status-addr HOST:PORT (/metrics + /status endpoint)
+                      --trace FILE (per-tick JSONL trace journal; a crash
+                      flight-recorder dump of the journal tail lands next
+                      to it as FILE.flight.jsonl on panic/SIGTERM)
+                      --status-addr HOST:PORT (/metrics + /status +
+                      /profile endpoints)
+                      --health off|warn|strict (fleet health rules: warn
+                      journals alert events, strict also exits nonzero if
+                      any alert is still firing at the end of the run)
                       --config FILE --out DIR
   cluster             multi-node sharded streaming training
                       --nodes N --vnodes N --gossip-every N --merge-every N
@@ -91,6 +97,9 @@ COMMANDS:
                       [--full-gossip-every K]
                       [--kill-at T --kill-node I] [--join-at T]
                       [--chaos-kill-at T --chaos-kill-node I] (processes)
+                      [--chaos-straggler-ms MS --chaos-straggler-node I]
+                      (node I sleeps MS per barrier — a synthetic straggler
+                      for health-rule testing; processes)
                       [--listen HOST:PORT] (accept remote worker
                       registrations; processes)
                       [--spawn on|off] (off: spawn nothing, wait for N
@@ -101,7 +110,9 @@ COMMANDS:
                       registered standby above R, shed the worst straggler
                       below R; processes)
                       plus all stream options (--trace writes PATH.node<i>
-                      per process worker); native backend only
+                      per process worker; --health evaluates fleet rules
+                      at every barrier — stragglers, stale heartbeats,
+                      store pressure, arrival stalls); native backend only
   worker              one cluster worker process: spawned by `cluster
                       --workers processes`, or started by hand on any
                       machine to register with a listening coordinator
@@ -119,13 +130,15 @@ COMMANDS:
   bench-diff          compare two directories of BENCH_*.json summaries
                       --baseline DIR --current DIR [--tolerance 0.15]
                       exits nonzero when any matching benchmark's median
-                      regresses past the tolerance (CI perf gate)
-  trace-analyze       offline profiler over trace journals (schema v1/v2)
+                      regresses past the tolerance, naming the worst
+                      regressed kernel/phase (CI perf gate)
+  trace-analyze       offline profiler over trace journals (schema v1–v3)
                       trace-analyze JOURNAL [JOURNAL...] [--out FILE]
                       merges coordinator + PATH.node<i> journals by
                       (round, node); reports per-arm selection efficiency,
                       the barrier critical path + straggler table, gossip
-                      vs merge bandwidth, and the drift/γ timeline as
+                      vs merge bandwidth, the drift/γ timeline, the health
+                      alert timeline, and per-kernel p50/p95/p99 as
                       canonical sorted-key JSON (byte-identical for
                       identical inputs); summary table on stderr
   help                this text

@@ -42,8 +42,8 @@ use std::time::{Duration, Instant};
 use crate::cluster::node::NodePreq;
 use crate::cluster::ring::{HashRing, NodeId};
 use crate::cluster::trainer::{
-    build_ring_schedule_with, fold_preq_records, sync_points, ClusterResult, MergeMaterial,
-    NodeSummary, REMAP_SAMPLE,
+    build_ring_schedule_with, fold_preq_records, publish_ready_lag_gauges, sync_points,
+    ClusterResult, MergeMaterial, NodeSummary, REMAP_SAMPLE,
 };
 use crate::cluster::transport::{
     ChurnOrder, Message, TelemetrySnapshot, GOSSIP_AUTO, GOSSIP_DELTA, GOSSIP_FULL,
@@ -52,7 +52,8 @@ use crate::cluster::transport::{
 use crate::cluster::wire;
 use crate::config::ClusterConfig;
 use crate::metrics::rolling::{RollingPoint, RollingWindow};
-use crate::obs::{self, TraceJournal};
+use crate::obs::trace::{span_line, wire_event_line};
+use crate::obs::{self, flight, HealthEngine, HealthInputs, HealthMode, TraceJournal};
 use crate::runtime::{Backend, NativeBackend, TaskKind};
 use crate::stream::source::{build_source, StreamKnobs};
 use crate::stream::tick::{fnv_fold, FNV_OFFSET};
@@ -437,6 +438,9 @@ pub struct Coordinator {
     /// events here; each worker process journals its ticks to
     /// `PATH.node<id>`)
     journal: Option<TraceJournal>,
+    /// fleet health rules, evaluated once per barrier round against the
+    /// registry snapshot the barrier just refreshed
+    health: HealthEngine,
 }
 
 impl Coordinator {
@@ -480,6 +484,13 @@ impl Coordinator {
             Some(path) => Some(TraceJournal::open(path)?),
             None => None,
         };
+        // the flight ring records barrier/relay/alert lines whether or not
+        // a journal is open; a panic, SIGTERM, or converted worker crash
+        // dumps the last rounds to disk
+        flight::set_dump_path(flight::default_dump_path(cfg.stream.trace.as_deref()));
+        flight::install_crash_hooks();
+        let mut health = HealthEngine::new(HealthMode::parse(&cfg.stream.health)?);
+        health.attach_trace(journal.as_ref().map(|j| j.handle()));
         let next_node_id = cfg.nodes + usize::from(cfg.join_at > 0);
         Ok(Coordinator {
             cfg,
@@ -505,22 +516,23 @@ impl Coordinator {
             round: 0,
             span_clock: Stopwatch::new(),
             journal,
+            health,
         })
     }
 
     /// Journal one coordinator-side wire event (gossip relay / merge).
+    /// Lines flow through `emit_journal` so the flight ring records them
+    /// even without `--trace`.
     fn trace_event(&self, kind: &str, tick: u64, bytes: u64) {
-        if let Some(j) = &self.journal {
-            j.handle().emit_wire_event(kind, self.round, tick, bytes);
-        }
+        let t = self.journal.as_ref().map(|j| j.handle());
+        obs::emit_journal(t.as_ref(), wire_event_line(kind, self.round, tick, bytes));
     }
 
     /// Journal one coordinator-side span under the current round. `start`
     /// is seconds on `span_clock`.
     fn trace_span(&self, name: &str, tick: u64, node: Option<usize>, start: f64, duration: f64) {
-        if let Some(j) = &self.journal {
-            j.handle().emit_span(name, self.round, tick, node, start, duration);
-        }
+        let t = self.journal.as_ref().map(|j| j.handle());
+        obs::emit_journal(t.as_ref(), span_line(name, self.round, tick, node, start, duration));
     }
 
     fn spawn_child(&self, node: NodeId) -> anyhow::Result<Child> {
@@ -695,6 +707,9 @@ impl Coordinator {
                  backfill to {survivors_at}, {:.1}% of keys remapped)",
                 100.0 * frac
             );
+            // post-mortem: dump the flight ring (the last rounds of
+            // barrier/relay/alert lines) next to the journal
+            flight::dump_now("worker crash");
         }
         Ok(())
     }
@@ -799,6 +814,13 @@ impl Coordinator {
     ) -> anyhow::Result<u8> {
         for &(i, _, _) in flags {
             self.collect_ready(i, sync)?;
+            if self.workers[i].crashed {
+                // no BarrierReady arrived: the elapsed time measures death
+                // detection, not readiness — don't report it as a lag (so
+                // a flight dump's last ready_lag for a crashed worker is
+                // its final completed barrier)
+                continue;
+            }
             let lag = self.span_clock.elapsed_secs() - barrier_start;
             self.workers[i].last_ready_lag = lag;
             let id = self.workers[i].id;
@@ -964,6 +986,7 @@ impl Coordinator {
         let dur = self.span_clock.elapsed_secs() - barrier_start;
         self.trace_span("barrier", until, None, barrier_start, dur);
         self.fold_barrier(classification, roll_loss, roll_acc, rolling);
+        self.health_check(until, roll_loss);
         Ok(())
     }
 
@@ -1016,7 +1039,39 @@ impl Coordinator {
             let node = w.id.to_string();
             reg.gauge(&obs::series("adaselection_node_alive", &[("node", node.as_str())]))
                 .set(f64::from(u8::from(w.alive && !w.crashed)));
+            if w.alive && !w.crashed {
+                // arrival counters straight from this barrier's
+                // BarrierReady — fresher than the heartbeat copies, so
+                // the arrival-stall health rule sees progress even when
+                // a fast segment outpaces the 500 ms heartbeat cadence
+                reg.gauge(&obs::series(
+                    "adaselection_node_samples_seen",
+                    &[("node", node.as_str())],
+                ))
+                .set(w.samples_seen as f64);
+            }
         }
+        // per-node ready lag from this barrier's collect — the series the
+        // straggler health rule medians over (and the shed ranks by)
+        let lags: Vec<(NodeId, f64)> = self
+            .workers
+            .iter()
+            .filter(|w| w.alive && !w.crashed)
+            .map(|w| (w.id, w.last_ready_lag))
+            .collect();
+        publish_ready_lag_gauges(&lags);
+    }
+
+    /// Evaluate the fleet health rules against the registry snapshot the
+    /// barrier just refreshed. Telemetry-only: never touches training
+    /// state, so enabling it cannot move the digest.
+    fn health_check(&mut self, sync: u64, roll_loss: &RollingWindow) {
+        if self.health.mode().is_off() {
+            return;
+        }
+        let m = roll_loss.mean();
+        self.health
+            .evaluate(self.round, sync, &HealthInputs::from_registry(m.is_finite().then_some(m)));
     }
 
     /// Run the whole job. Consumes the coordinator.
@@ -1036,16 +1091,22 @@ impl Coordinator {
         if let Ok(sa) = self.addr.parse::<std::net::SocketAddr>() {
             let _ = TcpStream::connect_timeout(&sa, Duration::from_millis(250));
         }
-        // all trace senders are transient (per-event handles), so the
-        // writer thread drains and exits as soon as the journal's own
-        // sender drops inside finish()
+        // the health engine holds the only persistent trace sender —
+        // detach it (event handles are transient) so the writer thread
+        // drains and exits as soon as the journal's own sender drops
+        // inside finish(). Strict-mode failure is surfaced only after the
+        // journal is flushed, so the firing alerts reach disk first.
+        let health_verdict = self.health.finish();
+        self.health.attach_trace(None);
         if let Some(j) = self.journal.take() {
             let finished = j.finish();
             if r.is_ok() {
                 finished?;
             }
         }
-        r
+        let result = r?;
+        health_verdict?;
+        Ok(result)
     }
 
     fn drive(&mut self) -> anyhow::Result<ClusterResult> {
@@ -1210,6 +1271,7 @@ impl Coordinator {
             let dur = self.span_clock.elapsed_secs() - barrier_start;
             self.trace_span("barrier", sync, None, barrier_start, dur);
             self.fold_barrier(classification, &mut roll_loss, &mut roll_acc, &mut rolling);
+            self.health_check(sync, &roll_loss);
 
             // ---- churn: crashes first (mirrors kill-before-gossip), then
             // the scheduled kill, then the scheduled join ----

@@ -38,7 +38,7 @@ use crate::cluster::transport::{
 };
 use crate::cluster::wire;
 use crate::config::ClusterConfig;
-use crate::obs::TraceJournal;
+use crate::obs::{flight, TraceJournal};
 use crate::runtime::{Backend, NativeBackend};
 use crate::stream::source::{build_source, StreamKnobs};
 use crate::stream::tick::{fnv_fold, FNV_OFFSET};
@@ -178,9 +178,18 @@ fn build_state(
         Some(path) => {
             let per_node =
                 std::path::PathBuf::from(format!("{}.node{}", path.display(), node_id));
+            // this worker's flight dump sits next to its own journal file
+            flight::set_dump_path(flight::default_dump_path(Some(&per_node)));
             Some(TraceJournal::open(&per_node)?)
         }
-        None => None,
+        None => {
+            // no journal: still give each worker process a distinct dump
+            // path so post-mortems from a fleet in one cwd don't collide
+            flight::set_dump_path(std::path::PathBuf::from(format!(
+                "adaselection.node{node_id}.flight.jsonl"
+            )));
+            None
+        }
     };
     node.attach_observer(journal.as_ref().map(|j| j.handle()));
     Ok(WorkerState { cfg, node, chaos, joins, journal })
@@ -228,6 +237,14 @@ fn run_barrier(
     merge: bool,
     boot: bool,
 ) -> anyhow::Result<()> {
+    // chaos injection: the configured straggler sleeps before its segment,
+    // inflating the ready lag the coordinator measures — training state
+    // and digests are untouched, only the health telemetry moves
+    if ws.cfg.chaos_straggler_ms > 0 && ws.node.id == ws.cfg.chaos_straggler_node {
+        std::thread::sleep(std::time::Duration::from_millis(
+            ws.cfg.chaos_straggler_ms as u64,
+        ));
+    }
     ws.node.run_until(until);
     let failed = ws.node.failed.clone().unwrap_or_default();
     let ready = Message::BarrierReady {
@@ -290,6 +307,10 @@ fn run_barrier(
 /// exponential backoff, so a worker launched before the coordinator
 /// listens still joins.
 pub fn run_worker(coordinator: &str, node_id: Option<NodeId>) -> anyhow::Result<()> {
+    // a panicking or SIGTERMed worker dumps its flight ring (the last
+    // rounds of tick lines) before dying; SIGKILL is uncatchable, so that
+    // post-mortem comes from the coordinator's crash-conversion dump
+    flight::install_crash_hooks();
     let hello_id = node_id.unwrap_or(UNASSIGNED);
     let mut reader = connect_with_retry(coordinator)
         .map_err(|e| anyhow::anyhow!("worker: {e}"))?;

@@ -41,7 +41,8 @@ use crate::cluster::transport::{Loopback, Message, Transport};
 use crate::cluster::wire;
 use crate::config::ClusterConfig;
 use crate::metrics::rolling::{RollingPoint, RollingWindow};
-use crate::obs::{self, StatusServer, TraceJournal};
+use crate::obs::trace::{span_line, wire_event_line};
+use crate::obs::{self, flight, HealthEngine, HealthInputs, HealthMode, StatusServer, TraceJournal};
 use crate::runtime::{average_states, Backend, NativeBackend, TaskKind, Tensor};
 use crate::selection::adaselection::merge_snapshots;
 use crate::selection::policy::Policy;
@@ -486,6 +487,21 @@ fn publish_barrier_gauges(
     reg.gauge("adaselection_cluster_standbys").set(0.0);
 }
 
+/// Publish per-node barrier ready-lag gauges — the series the
+/// `straggler_ready_lag` health rule medians over. Shared with the
+/// process coordinator so both worker modes feed the same rule.
+pub(crate) fn publish_ready_lag_gauges(lags: &[(NodeId, f64)]) {
+    let reg = obs::registry();
+    for &(id, secs) in lags {
+        let id = id.to_string();
+        reg.gauge(&obs::series(
+            "adaselection_node_ready_lag_seconds",
+            &[("node", id.as_str())],
+        ))
+        .set(secs);
+    }
+}
+
 /// Run a full cluster job on the native backend. Dispatches on
 /// `worker_mode`: the in-process thread runtime below, or the
 /// multi-process runtime (`cluster::proc`) spawning one OS process per
@@ -565,6 +581,12 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
     for n in nodes.iter_mut() {
         n.attach_observer(trace.clone());
     }
+    // the flight ring records tick/span/wire/alert lines whether or not a
+    // journal is open; a panic or SIGTERM dumps the last rounds to disk
+    flight::set_dump_path(flight::default_dump_path(s.trace.as_deref()));
+    flight::install_crash_hooks();
+    let mut health = HealthEngine::new(HealthMode::parse(&s.health)?);
+    health.attach_trace(trace.clone());
 
     log::info!(
         "cluster start: nodes={} vnodes={} stream={} γ={} B={} ticks={} gossip={}({}) merge={} transport={} kill@{} join@{}",
@@ -599,17 +621,24 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
         }
         let barrier_start = clock.elapsed_secs();
         let lags = run_segment(&mut nodes, sync)?;
-        if let Some(t) = &trace {
-            // barrier span covers open → all nodes ready; per-node
-            // ready_lag spans time each node's share of the segment
-            let dur = clock.elapsed_secs() - barrier_start;
-            t.emit_span("barrier", round, sync, None, barrier_start, dur);
-            for &(id, secs) in &lags {
-                t.emit_span("ready_lag", round, sync, Some(id), barrier_start, secs);
-            }
+        // barrier span covers open → all nodes ready; per-node ready_lag
+        // spans time each node's share of the segment. Lines flow through
+        // emit_journal so the flight ring sees them even without --trace.
+        let dur = clock.elapsed_secs() - barrier_start;
+        obs::emit_journal(trace.as_ref(), span_line("barrier", round, sync, None, barrier_start, dur));
+        for &(id, secs) in &lags {
+            obs::emit_journal(
+                trace.as_ref(),
+                span_line("ready_lag", round, sync, Some(id), barrier_start, secs),
+            );
         }
         fold_preq(&mut nodes, classification, &mut roll_loss, &mut roll_acc, &mut rolling);
         publish_barrier_gauges(&nodes, classification, &roll_loss, &roll_acc);
+        publish_ready_lag_gauges(&lags);
+        if !health.mode().is_off() {
+            let m = roll_loss.mean();
+            health.evaluate(round, sync, &HealthInputs::from_registry(m.is_finite().then_some(m)));
+        }
 
         // churn first: a killed node must not gossip, a joined node must
         if cfg.kill_at > 0 && cfg.kill_at as u64 == sync {
@@ -656,11 +685,12 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
             let bytes = gossip_stores(&mut nodes, transport.as_ref(), true)?;
             gossip_bytes += bytes;
             gossip_rounds += 1;
-            if let Some(t) = &trace {
-                t.emit_wire_event("gossip", round, sync, bytes);
-                let dur = clock.elapsed_secs() - gossip_start;
-                t.emit_span("gossip_relay", round, sync, None, gossip_start, dur);
-            }
+            obs::emit_journal(trace.as_ref(), wire_event_line("gossip", round, sync, bytes));
+            let dur = clock.elapsed_secs() - gossip_start;
+            obs::emit_journal(
+                trace.as_ref(),
+                span_line("gossip_relay", round, sync, None, gossip_start, dur),
+            );
             did_gossip = true;
             log::info!("cluster: node {id} joined at tick {sync}");
         }
@@ -687,35 +717,42 @@ pub fn run(cfg: &ClusterConfig) -> anyhow::Result<ClusterResult> {
                 let bytes = gossip_stores(&mut nodes, transport.as_ref(), full)?;
                 gossip_bytes += bytes;
                 gossip_rounds += 1;
-                if let Some(t) = &trace {
-                    t.emit_wire_event("gossip", round, sync, bytes);
-                    let dur = clock.elapsed_secs() - gossip_start;
-                    t.emit_span("gossip_relay", round, sync, None, gossip_start, dur);
-                }
+                obs::emit_journal(trace.as_ref(), wire_event_line("gossip", round, sync, bytes));
+                let dur = clock.elapsed_secs() - gossip_start;
+                obs::emit_journal(
+                    trace.as_ref(),
+                    span_line("gossip_relay", round, sync, None, gossip_start, dur),
+                );
             }
             if cfg.merge_every > 0 && sync % cfg.merge_every as u64 == 0 {
                 let merge_start = clock.elapsed_secs();
                 let bytes = merge_models(&mut nodes, transport.as_ref())?;
                 merge_bytes += bytes;
                 merges += 1;
-                if let Some(t) = &trace {
-                    t.emit_wire_event("merge", round, sync, bytes);
-                    let dur = clock.elapsed_secs() - merge_start;
-                    t.emit_span("merge", round, sync, None, merge_start, dur);
-                }
+                obs::emit_journal(trace.as_ref(), wire_event_line("merge", round, sync, bytes));
+                let dur = clock.elapsed_secs() - merge_start;
+                obs::emit_journal(
+                    trace.as_ref(),
+                    span_line("merge", round, sync, None, merge_start, dur),
+                );
             }
         }
     }
 
-    // release every trace sender (node observers + the coordinator handle)
-    // before finish() joins the journal's writer thread
+    // release every trace sender (node observers, the health engine, the
+    // coordinator handle) before finish() joins the journal's writer
+    // thread; a strict-mode health failure is surfaced only after the
+    // journal is flushed so the firing alerts reach disk first
     for n in nodes.iter_mut() {
         n.detach_observer();
     }
+    let health_verdict = health.finish();
+    drop(health);
     drop(trace);
     if let Some(j) = journal {
         j.finish()?;
     }
+    health_verdict?;
 
     let elapsed = clock.elapsed_secs();
     let mut digest = FNV_OFFSET;

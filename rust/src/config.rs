@@ -262,9 +262,13 @@ pub struct StreamConfig {
     /// processed tick; see `obs::trace`). Off the digest path: tracing
     /// on/off never changes selection.
     pub trace: Option<PathBuf>,
-    /// serve Prometheus `/metrics` + JSON `/status` on this address
-    /// (e.g. `127.0.0.1:9464`; port 0 picks an ephemeral port)
+    /// serve Prometheus `/metrics` + JSON `/status` + `/profile` on this
+    /// address (e.g. `127.0.0.1:9464`; port 0 picks an ephemeral port)
     pub status_addr: Option<String>,
+    /// fleet health rule engine (see `obs::health`): off (default) |
+    /// warn (evaluate + journal alerts) | strict (warn + exit nonzero if
+    /// any alert is still firing when the run ends; CI gate)
+    pub health: String,
     pub artifacts_dir: PathBuf,
 }
 
@@ -299,6 +303,7 @@ impl Default for StreamConfig {
             resume: false,
             trace: None,
             status_addr: None,
+            health: "off".into(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
         }
     }
@@ -337,6 +342,7 @@ impl StreamConfig {
             "--resume requires --checkpoint FILE"
         );
         anyhow::ensure!(self.obftf_k >= 1, "obftf-k must be >= 1");
+        crate::obs::health::HealthMode::parse(&self.health)?;
         crate::stream::source::family_for(&self.dataset)?;
         crate::stream::tick::DriftKind::parse(&self.drift_detect)?;
         crate::selection::bandit::UpdateRule::parse(&self.rule)?;
@@ -391,6 +397,7 @@ impl StreamConfig {
             "resume" => self.resume = parse_bool(value)?,
             "trace" => self.trace = Some(PathBuf::from(value)),
             "status-addr" => self.status_addr = Some(value.into()),
+            "health" => self.health = value.into(),
             "artifacts" => self.artifacts_dir = PathBuf::from(value),
             other => anyhow::bail!("unknown stream config key '--{other}'"),
         }
@@ -498,6 +505,9 @@ impl StreamConfig {
         if let Some(a) = &self.status_addr {
             m.insert("status-addr".into(), Json::Str(a.clone()));
         }
+        if self.health != "off" {
+            m.insert("health".into(), Json::Str(self.health.clone()));
+        }
         Json::Obj(m)
     }
 }
@@ -547,6 +557,12 @@ pub struct ClusterConfig {
     /// coordinator must detect the death and convert it to churn.
     pub chaos_kill_at: usize,
     pub chaos_kill_node: usize,
+    /// straggler injection (process workers only): `chaos_straggler_node`
+    /// sleeps this many milliseconds at every barrier segment, inflating
+    /// its ready lag without touching training state (0 = off). This is
+    /// how the health e2e makes `straggler_ready_lag` fire on demand.
+    pub chaos_straggler_ms: usize,
+    pub chaos_straggler_node: usize,
     /// control-plane listen address for process workers (e.g.
     /// `0.0.0.0:7400`); None binds an ephemeral loopback port. A fixed
     /// address lets `adaselection worker --coordinator HOST:PORT` register
@@ -587,6 +603,8 @@ impl Default for ClusterConfig {
             join_at: 0,
             chaos_kill_at: 0,
             chaos_kill_node: 0,
+            chaos_straggler_ms: 0,
+            chaos_straggler_node: 0,
             listen: None,
             spawn: true,
             elastic_admit_above: 0.0,
@@ -657,10 +675,22 @@ impl ClusterConfig {
                     "chaos-kill-node and kill-node target the same worker"
                 );
             }
+            if self.chaos_straggler_ms > 0 {
+                anyhow::ensure!(
+                    self.chaos_straggler_node < self.nodes,
+                    "chaos-straggler-node {} out of range 0..{}",
+                    self.chaos_straggler_node,
+                    self.nodes
+                );
+            }
         } else {
             anyhow::ensure!(
                 self.chaos_kill_at == 0,
                 "chaos-kill-at requires --workers processes"
+            );
+            anyhow::ensure!(
+                self.chaos_straggler_ms == 0,
+                "chaos-straggler-ms requires --workers processes"
             );
             anyhow::ensure!(
                 self.listen.is_none(),
@@ -763,6 +793,8 @@ impl ClusterConfig {
             "join-at" => self.join_at = value.parse()?,
             "chaos-kill-at" => self.chaos_kill_at = value.parse()?,
             "chaos-kill-node" => self.chaos_kill_node = value.parse()?,
+            "chaos-straggler-ms" => self.chaos_straggler_ms = value.parse()?,
+            "chaos-straggler-node" => self.chaos_straggler_node = value.parse()?,
             "listen" => self.listen = Some(value.into()),
             "spawn" => self.spawn = parse_bool(value)?,
             "elastic-admit-above" => self.elastic_admit_above = value.parse()?,
@@ -826,6 +858,14 @@ impl ClusterConfig {
         m.insert(
             "chaos-kill-node".into(),
             Json::Num(self.chaos_kill_node as f64),
+        );
+        m.insert(
+            "chaos-straggler-ms".into(),
+            Json::Num(self.chaos_straggler_ms as f64),
+        );
+        m.insert(
+            "chaos-straggler-node".into(),
+            Json::Num(self.chaos_straggler_node as f64),
         );
         if let Some(a) = &self.listen {
             m.insert("listen".into(), Json::Str(a.clone()));
@@ -996,6 +1036,30 @@ mod tests {
         cfg.validate().unwrap();
         cfg.apply_override("drift-detect", "kswin").unwrap();
         assert!(cfg.validate().is_err(), "unknown detector accepted");
+    }
+
+    #[test]
+    fn health_knob_parses_validates_and_round_trips() {
+        let mut cfg = StreamConfig::default();
+        assert_eq!(cfg.health, "off");
+        cfg.validate().unwrap();
+        cfg.apply_override("health", "warn").unwrap();
+        cfg.validate().unwrap();
+        cfg.apply_override("health", "strict").unwrap();
+        cfg.validate().unwrap();
+        let back = StreamConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.health, "strict");
+        cfg.health = "paranoid".into();
+        assert!(cfg.validate().is_err(), "unknown health mode accepted");
+        // telemetry must never gate a resume
+        let mut warn = StreamConfig::default();
+        warn.health = "warn".into();
+        assert_eq!(StreamConfig::default().identity_json(), warn.identity_json());
+        // the knob falls through the cluster override surface too
+        let mut cc = ClusterConfig::default();
+        cc.apply_override("health", "warn").unwrap();
+        assert_eq!(cc.stream.health, "warn");
+        cc.validate().unwrap();
     }
 
     #[test]

@@ -382,10 +382,22 @@ fn cmd_bench_diff(args: &Args) -> anyhow::Result<()> {
                 tolerance * 100.0
             );
         }
+        // name the worst offender — with kernel/<name> rows in the bench
+        // JSON this pins the regression to a specific backend kernel
+        let worst = d
+            .regressions
+            .iter()
+            .max_by(|a, b| (a.3 / a.2.max(1e-9)).total_cmp(&(b.3 / b.2.max(1e-9))))
+            .expect("regressions is non-empty");
         anyhow::bail!(
-            "bench-diff: {} benchmark(s) regressed past {:.0}%",
+            "bench-diff: {} benchmark(s) regressed past {:.0}%; worst is {}/{} ({} -> {}, {:+.1}%)",
             d.regressions.len(),
-            tolerance * 100.0
+            tolerance * 100.0,
+            worst.0,
+            worst.1,
+            adaselection::util::bench::fmt_ns(worst.2),
+            adaselection::util::bench::fmt_ns(worst.3),
+            100.0 * (worst.3 - worst.2) / worst.2.max(1e-9)
         );
     }
     println!("bench-diff: no regressions");

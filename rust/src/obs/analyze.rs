@@ -14,13 +14,19 @@
 //! * **wire bandwidth** — gossip vs merge bytes per round and in total;
 //! * **drift timeline** — every detector fire (cumulative `drift`
 //!   increments per node) with the effective γ around it, so boosts are
-//!   visible next to the event that caused them.
+//!   visible next to the event that caused them;
+//! * **alert timeline** — every health-rule firing/resolved transition
+//!   (schema-v3 `alert` events) ordered by round, with per-rule firing
+//!   totals and the set still unresolved at end of journal;
+//! * **per-kernel quantiles** — p50/p95/p99 per-tick seconds for every
+//!   backend kernel, rebuilt offline from the `kernel:<name>` entries
+//!   the continuous profiler writes into each tick's `phases` object.
 //!
 //! The report is canonical: sorted-key JSON (the [`Json`] writer emits
 //! `BTreeMap` order), derived purely from the input bytes — identical
 //! journals produce byte-identical reports, pinned by `input_hash` /
 //! `report_hash` (FNV-1a/64). Every line must validate against schema
-//! v1 or v2 ([`trace::validate_line`]); any invalid line aborts the
+//! v1–v3 ([`trace::validate_line`]); any invalid line aborts the
 //! analysis with its `file:line` location.
 
 use std::collections::{BTreeMap, BTreeSet};
@@ -61,6 +67,8 @@ struct TickRow {
     drift: u64,
     weights: Vec<(String, f64)>,
     rolling_loss: Option<f64>,
+    /// `kernel:<name>` sub-phase seconds this tick, prefix stripped.
+    kernels: Vec<(String, f64)>,
 }
 
 struct WireRow {
@@ -77,11 +85,22 @@ struct SpanRow {
     duration: f64,
 }
 
+struct AlertRow {
+    rule: String,
+    state: String,
+    round: u64,
+    tick: u64,
+    node: Option<usize>,
+    value: Option<f64>,
+    threshold: Option<f64>,
+}
+
 #[derive(Default)]
 struct Journals {
     ticks: Vec<TickRow>,
     wire: Vec<WireRow>,
     spans: Vec<SpanRow>,
+    alerts: Vec<AlertRow>,
     lines: u64,
     versions: BTreeSet<u64>,
 }
@@ -104,6 +123,15 @@ fn parse_line(name: &str, lineno: usize, line: &str, out: &mut Journals) -> anyh
                 .get("rolling")
                 .and_then(|r| r.get("loss"))
                 .and_then(|l| l.as_f64().ok());
+            let kernels = j
+                .at(&["phases"])?
+                .as_obj()?
+                .iter()
+                .filter_map(|(name, secs)| {
+                    let k = name.strip_prefix("kernel:")?;
+                    secs.as_f64().ok().map(|s| (k.to_string(), s))
+                })
+                .collect();
             out.ticks.push(TickRow {
                 node: ev.node.unwrap_or(0),
                 tick: ev.tick,
@@ -116,6 +144,7 @@ fn parse_line(name: &str, lineno: usize, line: &str, out: &mut Journals) -> anyh
                 drift: j.at(&["drift"])?.as_usize()? as u64,
                 weights,
                 rolling_loss,
+                kernels,
             });
         }
         "gossip" | "merge" => out.wire.push(WireRow {
@@ -130,6 +159,18 @@ fn parse_line(name: &str, lineno: usize, line: &str, out: &mut Journals) -> anyh
             node: ev.node,
             duration: j.at(&["duration"])?.as_f64()?,
         }),
+        "alert" => {
+            let (rule, state) = ev.alert.clone().expect("validated alert carries rule/state");
+            out.alerts.push(AlertRow {
+                rule,
+                state,
+                round: ev.round,
+                tick: ev.tick,
+                node: ev.node,
+                value: j.get("value").and_then(|v| v.as_f64().ok()),
+                threshold: j.get("threshold").and_then(|v| v.as_f64().ok()),
+            });
+        }
         _ => unreachable!("validate_line admits only known kinds"),
     }
     Ok(())
@@ -432,12 +473,108 @@ fn drift_timeline(ticks: &[TickRow]) -> Json {
     ])
 }
 
+fn alert_timeline(alerts: &[AlertRow]) -> Json {
+    let mut ordered: Vec<&AlertRow> = alerts.iter().collect();
+    ordered.sort_by(|a, b| {
+        (a.round, a.tick, a.rule.as_str(), a.node).cmp(&(b.round, b.tick, b.rule.as_str(), b.node))
+    });
+    let mut firing_total: BTreeMap<String, u64> = BTreeMap::new();
+    let mut last_state: BTreeMap<(String, Option<usize>), String> = BTreeMap::new();
+    let mut events = Vec::new();
+    for a in &ordered {
+        if a.state == "firing" {
+            *firing_total.entry(a.rule.clone()).or_default() += 1;
+        }
+        last_state.insert((a.rule.clone(), a.node), a.state.clone());
+        let mut row = vec![
+            ("round", Json::from(a.round as usize)),
+            ("rule", Json::from(a.rule.as_str())),
+            ("state", Json::from(a.state.as_str())),
+            (
+                "threshold",
+                a.threshold.map(|v| Json::from(round6(v))).unwrap_or(Json::Null),
+            ),
+            ("tick", Json::from(a.tick as usize)),
+            ("value", a.value.map(|v| Json::from(round6(v))).unwrap_or(Json::Null)),
+        ];
+        if let Some(n) = a.node {
+            row.push(("node", Json::from(n)));
+        }
+        events.push(Json::obj(row));
+    }
+    let unresolved = Json::Arr(
+        last_state
+            .iter()
+            .filter(|(_, state)| state.as_str() == "firing")
+            .map(|((rule, node), _)| {
+                let mut row = vec![("rule", Json::from(rule.as_str()))];
+                if let Some(n) = node {
+                    row.push(("node", Json::from(*n)));
+                }
+                Json::obj(row)
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("events", Json::Arr(events)),
+        (
+            "firing_total",
+            Json::Obj(
+                firing_total
+                    .iter()
+                    .map(|(rule, n)| (rule.clone(), Json::from(*n as usize)))
+                    .collect(),
+            ),
+        ),
+        ("unresolved", unresolved),
+    ])
+}
+
+/// Per-kernel per-tick-seconds quantiles, rebuilt from the
+/// `kernel:<name>` phase entries the continuous profiler journals.
+fn kernel_quantiles(ticks: &[TickRow]) -> Json {
+    let mut per: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for t in ticks {
+        for (kernel, secs) in &t.kernels {
+            per.entry(kernel.clone()).or_default().push(*secs);
+        }
+    }
+    // nearest-rank quantile over the sorted per-tick samples
+    fn rank(vals: &[f64], q: f64) -> f64 {
+        let idx = ((vals.len() as f64 * q).ceil() as usize).max(1) - 1;
+        vals[idx.min(vals.len() - 1)]
+    }
+    Json::Obj(
+        per.into_iter()
+            .map(|(kernel, mut vals)| {
+                vals.sort_by(|a, b| a.total_cmp(b));
+                let total: f64 = vals.iter().sum();
+                (
+                    kernel,
+                    Json::obj(vec![
+                        ("p50_seconds", Json::from(round9(rank(&vals, 0.50)))),
+                        ("p95_seconds", Json::from(round9(rank(&vals, 0.95)))),
+                        ("p99_seconds", Json::from(round9(rank(&vals, 0.99)))),
+                        ("ticks", Json::from(vals.len())),
+                        ("total_seconds", Json::from(round9(total))),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
 fn round3(v: f64) -> f64 {
     (v * 1e3).round() / 1e3
 }
 
 fn round6(v: f64) -> f64 {
     (v * 1e6).round() / 1e6
+}
+
+/// Nanosecond precision — kernel timings are often sub-microsecond.
+fn round9(v: f64) -> f64 {
+    (v * 1e9).round() / 1e9
 }
 
 /// Analyze in-memory journals: `(name, contents)` pairs. The unit of the
@@ -479,6 +616,7 @@ pub fn analyze_inputs(inputs: &[(String, String)]) -> anyhow::Result<Json> {
         ("trained", Json::from(data.ticks.iter().map(|t| t.trained).sum::<u64>() as usize)),
     ]);
     let mut report = Json::obj(vec![
+        ("alerts", alert_timeline(&data.alerts)),
         (
             "arms",
             Json::obj(vec![("per_window", per_window), ("totals", arm_totals)]),
@@ -486,6 +624,7 @@ pub fn analyze_inputs(inputs: &[(String, String)]) -> anyhow::Result<Json> {
         ("bandwidth", bandwidth(&data.wire)),
         ("barriers", barriers(&data.spans)),
         ("drift", drift_timeline(&data.ticks)),
+        ("kernels", kernel_quantiles(&data.ticks)),
         (
             "inputs",
             Json::obj(vec![
@@ -589,6 +728,32 @@ pub fn render_summary(report: &Json) -> String {
         "drift: {} event(s), {} with a γ boost visible\n",
         drift_events, boosted
     ));
+    let alert_events = report
+        .at(&["alerts", "events"])
+        .and_then(|e| e.as_arr().map(|a| a.len()))
+        .unwrap_or(0);
+    let unresolved = report
+        .at(&["alerts", "unresolved"])
+        .and_then(|e| e.as_arr().map(|a| a.len()))
+        .unwrap_or(0);
+    out.push_str(&format!(
+        "alerts: {} transition(s), {} unresolved at end of journal\n",
+        alert_events, unresolved
+    ));
+    if let Ok(kernels) = report.at(&["kernels"]).and_then(|k| k.as_obj()) {
+        if !kernels.is_empty() {
+            out.push_str("kernel                  ticks      p50(s)      p95(s)      p99(s)\n");
+            for (kernel, k) in kernels {
+                out.push_str(&format!(
+                    "{kernel:<20} {:>8} {:>11.6} {:>11.6} {:>11.6}\n",
+                    k.get("ticks").and_then(|v| v.as_usize().ok()).unwrap_or(0),
+                    k.get("p50_seconds").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                    k.get("p95_seconds").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                    k.get("p99_seconds").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                ));
+            }
+        }
+    }
     out
 }
 
@@ -796,6 +961,106 @@ mod tests {
         assert!(err.to_string().contains("schema version"), "{err}");
         assert!(analyze_inputs(&[]).is_err());
         assert!(analyze_inputs(&[("empty.jsonl".into(), "\n\n".into())]).is_err());
+    }
+
+    fn kernel_tick_line(node: usize, tick: u64, round: u64, kernels: &[(&str, f64)]) -> String {
+        Json::obj(vec![
+            ("v", Json::from(3usize)),
+            ("kind", Json::from("tick")),
+            ("tick", Json::from(tick as usize)),
+            ("node", Json::from(node)),
+            ("round", Json::from(round as usize)),
+            ("gamma", Json::from(0.5)),
+            ("arrivals", Json::from(10usize)),
+            ("trained", Json::from(5usize)),
+            ("replayed", Json::from(0usize)),
+            ("forward", Json::from(10usize)),
+            ("drift", Json::from(0usize)),
+            ("weights", Json::obj(vec![])),
+            (
+                "store",
+                Json::obj(vec![
+                    ("live", Json::from(1usize)),
+                    ("capacity", Json::from(64usize)),
+                    ("hits", Json::from(0usize)),
+                    ("misses", Json::from(0usize)),
+                    ("evictions", Json::from(0usize)),
+                ]),
+            ),
+            (
+                "phases",
+                Json::Obj(
+                    kernels
+                        .iter()
+                        .map(|(k, s)| (format!("kernel:{k}"), Json::from(*s)))
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string()
+    }
+
+    #[test]
+    fn alert_timeline_tracks_transitions_and_unresolved() {
+        let journal = [
+            trace::alert_line("straggler_ready_lag", "firing", 3, 48, Some(2), 0.5, 0.15),
+            trace::alert_line("straggler_ready_lag", "resolved", 5, 80, Some(2), 0.01, 0.15),
+            trace::alert_line("loss_blowup", "firing", 6, 96, None, f64::NAN, 1e6),
+        ]
+        .join("\n");
+        let j = analyze_inputs(&[("trace.jsonl".into(), journal)]).unwrap();
+        let events = j.at(&["alerts", "events"]).unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(
+            events[0].at(&["rule"]).unwrap().as_str().unwrap(),
+            "straggler_ready_lag"
+        );
+        assert_eq!(events[0].at(&["node"]).unwrap().as_usize().unwrap(), 2);
+        assert_eq!(events[0].at(&["state"]).unwrap().as_str().unwrap(), "firing");
+        // NaN alert values serialize (and re-analyze) as null
+        assert!(matches!(*events[2].at(&["value"]).unwrap(), Json::Null));
+        assert_eq!(
+            j.at(&["alerts", "firing_total", "straggler_ready_lag"])
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            1
+        );
+        // the straggler resolved; only loss_blowup is still firing at end
+        let unresolved = j.at(&["alerts", "unresolved"]).unwrap().as_arr().unwrap();
+        assert_eq!(unresolved.len(), 1);
+        assert_eq!(
+            unresolved[0].at(&["rule"]).unwrap().as_str().unwrap(),
+            "loss_blowup"
+        );
+        let text = render_summary(&j);
+        assert!(text.contains("alerts: 3 transition(s), 1 unresolved"), "{text}");
+    }
+
+    #[test]
+    fn kernel_quantiles_rebuild_from_phases() {
+        let mut lines = Vec::new();
+        for tick in 0..100u64 {
+            // per-tick seconds 0.001..=0.100 → p50 = 0.050, p99 = 0.099
+            let secs = (tick + 1) as f64 / 1000.0;
+            lines.push(kernel_tick_line(0, tick, 0, &[("sgd_step", secs), ("eval", 2e-7)]));
+        }
+        let j = analyze_inputs(&[("trace.jsonl".into(), lines.join("\n"))]).unwrap();
+        let sgd = j.at(&["kernels", "sgd_step"]).unwrap();
+        assert_eq!(sgd.at(&["ticks"]).unwrap().as_usize().unwrap(), 100);
+        let p50 = sgd.at(&["p50_seconds"]).unwrap().as_f64().unwrap();
+        let p99 = sgd.at(&["p99_seconds"]).unwrap().as_f64().unwrap();
+        assert!((p50 - 0.050).abs() < 1e-9, "p50 = {p50}");
+        assert!((p99 - 0.099).abs() < 1e-9, "p99 = {p99}");
+        // sub-microsecond kernels keep nanosecond resolution
+        let eval_p50 = j
+            .at(&["kernels", "eval", "p50_seconds"])
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((eval_p50 - 2e-7).abs() < 1e-12, "eval p50 = {eval_p50}");
+        let text = render_summary(&j);
+        assert!(text.contains("sgd_step"), "{text}");
     }
 
     #[test]

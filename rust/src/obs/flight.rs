@@ -1,0 +1,228 @@
+//! Crash flight recorder: an always-on bounded in-memory ring of the
+//! most recent journal lines (tick/span/wire/alert events), independent
+//! of `--trace`.
+//!
+//! Every event serializer already produces schema-valid JSONL; the ring
+//! keeps the last [`FLIGHT_CAPACITY`] of them so a post-mortem has a
+//! validated journal tail even when tracing was off. The ring is dumped
+//! to `<path>.flight.jsonl` on:
+//!
+//!   * a panic anywhere in the process (chained panic hook),
+//!   * `SIGTERM` (unix; the handler re-raises the default exit), and
+//!   * the process coordinator converting a dead worker into kill-churn
+//!     (the worker itself got `SIGKILL` and cannot dump — the
+//!     coordinator's ring carries the fleet's last rounds instead).
+//!
+//! Recording is a short mutex-guarded push of an already-built string —
+//! strictly off the digest path, like the rest of `obs`.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Lines the ring retains — sized for several rounds of a wide fleet
+/// (a 4-node round is ~4 tick lines per tick plus a handful of spans).
+pub const FLIGHT_CAPACITY: usize = 4096;
+
+/// A bounded ring of serialized journal lines.
+pub struct FlightRing {
+    lines: Mutex<VecDeque<String>>,
+    capacity: usize,
+}
+
+impl FlightRing {
+    pub fn new(capacity: usize) -> FlightRing {
+        FlightRing { lines: Mutex::new(VecDeque::with_capacity(capacity)), capacity }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, VecDeque<String>> {
+        // a panicked recorder must not take the dump path down with it
+        self.lines.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Append one already-serialized journal line, evicting the oldest
+    /// once the ring is full.
+    pub fn record(&self, line: String) {
+        let mut q = self.lock();
+        if q.len() == self.capacity {
+            q.pop_front();
+        }
+        q.push_back(line);
+    }
+
+    /// Current ring contents, oldest first.
+    pub fn snapshot(&self) -> Vec<String> {
+        self.lock().iter().cloned().collect()
+    }
+
+    /// Best-effort snapshot that never blocks — safe to call from a
+    /// signal handler where the recording thread may hold the lock.
+    fn snapshot_try(&self) -> Option<Vec<String>> {
+        match self.lines.try_lock() {
+            Ok(q) => Some(q.iter().cloned().collect()),
+            Err(std::sync::TryLockError::Poisoned(p)) => {
+                Some(p.into_inner().iter().cloned().collect())
+            }
+            Err(std::sync::TryLockError::WouldBlock) => None,
+        }
+    }
+
+    /// Write the ring to `path` as JSONL, oldest line first. Returns the
+    /// number of lines written.
+    pub fn dump_to(&self, path: &Path) -> std::io::Result<usize> {
+        let lines = self.snapshot_try().unwrap_or_default();
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for line in &lines {
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+        }
+        w.flush()?;
+        Ok(lines.len())
+    }
+}
+
+static FLIGHT: OnceLock<FlightRing> = OnceLock::new();
+static DUMP_PATH: OnceLock<Mutex<Option<PathBuf>>> = OnceLock::new();
+static HOOKS_INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// The process-wide flight ring.
+pub fn flight() -> &'static FlightRing {
+    FLIGHT.get_or_init(|| FlightRing::new(FLIGHT_CAPACITY))
+}
+
+/// Record one line into the process-wide ring.
+pub fn record(line: String) {
+    flight().record(line);
+}
+
+fn dump_path_slot() -> &'static Mutex<Option<PathBuf>> {
+    DUMP_PATH.get_or_init(|| Mutex::new(None))
+}
+
+/// Derive the dump path for a run: `<trace>.flight.jsonl` next to the
+/// journal when tracing, else `adaselection.flight.jsonl` in the cwd.
+pub fn default_dump_path(trace: Option<&Path>) -> PathBuf {
+    match trace {
+        Some(p) => {
+            let mut s = p.as_os_str().to_os_string();
+            s.push(".flight.jsonl");
+            PathBuf::from(s)
+        }
+        None => PathBuf::from("adaselection.flight.jsonl"),
+    }
+}
+
+/// Set where crash dumps land for this process.
+pub fn set_dump_path(path: PathBuf) {
+    *dump_path_slot().lock().unwrap_or_else(|p| p.into_inner()) = Some(path);
+}
+
+/// The configured dump path, if any.
+pub fn dump_path() -> Option<PathBuf> {
+    dump_path_slot().lock().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
+/// Dump the ring to the configured path now (e.g. on coordinator
+/// crash-conversion). Returns the path written, or `None` when no path
+/// is configured or the write failed — a failed post-mortem dump must
+/// never escalate the original failure.
+pub fn dump_now(reason: &str) -> Option<PathBuf> {
+    let path = dump_path()?;
+    match flight().dump_to(&path) {
+        Ok(n) => {
+            log::warn!("flight recorder: dumped {n} lines to {path:?} ({reason})");
+            Some(path)
+        }
+        Err(e) => {
+            log::warn!("flight recorder: dump to {path:?} failed: {e}");
+            None
+        }
+    }
+}
+
+#[cfg(unix)]
+mod sig {
+    /// `signal(2)` from the already-linked C runtime — the offline build
+    /// carries no libc crate. Registering a plain fn pointer is the
+    /// oldest stable slice of the API and all we need for a best-effort
+    /// dump-and-exit on SIGTERM.
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn on_sigterm(_sig: i32) {
+        super::dump_now("sigterm");
+        // 128 + SIGTERM: the conventional exit code for a terminated run
+        std::process::exit(143);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_sigterm as usize);
+        }
+    }
+}
+
+/// Install the crash hooks once per process: a chained panic hook and
+/// (unix) a SIGTERM handler, both dumping the ring to the configured
+/// path before the process dies.
+pub fn install_crash_hooks() {
+    if HOOKS_INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        dump_now("panic");
+        prev(info);
+    }));
+    #[cfg(unix)]
+    sig::install();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bounds_and_dumps() {
+        let ring = FlightRing::new(4);
+        for i in 0..10 {
+            ring.record(format!("{{\"line\":{i}}}"));
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 4);
+        assert_eq!(snap[0], "{\"line\":6}");
+        assert_eq!(snap[3], "{\"line\":9}");
+        let dir = std::env::temp_dir().join(format!("ada_flight_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ring.flight.jsonl");
+        assert_eq!(ring.dump_to(&path).unwrap(), 4);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        assert_eq!(text.lines().last().unwrap(), "{\"line\":9}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dump_path_derivation() {
+        assert_eq!(
+            default_dump_path(Some(Path::new("/tmp/out/trace.jsonl"))),
+            PathBuf::from("/tmp/out/trace.jsonl.flight.jsonl")
+        );
+        assert_eq!(default_dump_path(None), PathBuf::from("adaselection.flight.jsonl"));
+    }
+
+    #[test]
+    fn recorded_journal_lines_validate_from_a_dump() {
+        use crate::obs::trace;
+        let ring = FlightRing::new(16);
+        ring.record(trace::alert_line("heartbeat_stale", "firing", 2, 32, Some(1), 9.0, 5.0));
+        for line in ring.snapshot() {
+            trace::validate_line(&line).unwrap();
+        }
+    }
+}

@@ -1,0 +1,598 @@
+//! Fleet health alerting: a declarative rule engine evaluated from the
+//! metrics-registry snapshot each tick (stream) or barrier round
+//! (cluster).
+//!
+//! Built-in rules (all thresholds in [`Thresholds`]):
+//!
+//! | rule                    | fires when                                        |
+//! |-------------------------|---------------------------------------------------|
+//! | `straggler_ready_lag`   | a node's barrier ready-lag exceeds `factor` × the fleet median (and an absolute floor) |
+//! | `heartbeat_stale`       | an alive node's last heartbeat is older than `heartbeat_stale_seconds` |
+//! | `store_eviction_pressure` | the store is evicting while pressure ≥ `store_pressure_max` |
+//! | `trace_dropped_lines`   | the trace journal dropped lines since the last evaluation |
+//! | `arrival_rate_stall`    | no new arrivals for `stall_evals` consecutive evaluations |
+//! | `rolling_loss_blowup`   | the rolling loss is non-finite or above `loss_blowup` |
+//!
+//! Each rule runs a firing→resolved state machine per `(rule, node)`:
+//! transitions emit `kind:"alert"` journal lines (trace schema v3, also
+//! recorded by the flight ring), bump `adaselection_alerts_total{rule}`,
+//! and WARN/log. Active alerts are published for the `/status` `alerts`
+//! block. `--health strict` turns any *still-firing* alert at run end
+//! into a nonzero exit for CI gating; alerts that resolved (e.g. a
+//! straggler that was shed) do not fail the run.
+//!
+//! The engine only reads already-published telemetry, so evaluation is
+//! off the digest path — pinned by the zero-interference e2es.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+use super::flight;
+use super::registry::{registry, series};
+use super::trace::{alert_line, TraceHandle};
+
+/// `--health` knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthMode {
+    /// No evaluation at all (default).
+    Off,
+    /// Evaluate + alert, never fail the run.
+    Warn,
+    /// Like `warn`, but any alert still firing at run end exits nonzero.
+    Strict,
+}
+
+impl HealthMode {
+    pub fn parse(s: &str) -> anyhow::Result<HealthMode> {
+        match s {
+            "off" => Ok(HealthMode::Off),
+            "warn" => Ok(HealthMode::Warn),
+            "strict" => Ok(HealthMode::Strict),
+            other => anyhow::bail!("--health must be off|warn|strict (got '{other}')"),
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        matches!(self, HealthMode::Off)
+    }
+}
+
+/// Rule thresholds; the defaults are deliberately conservative so a
+/// healthy run stays silent.
+#[derive(Clone, Debug)]
+pub struct Thresholds {
+    /// A node is a straggler above `factor × fleet-median ready lag`...
+    pub straggler_lag_factor: f64,
+    /// ...but never below this absolute floor (scheduler noise).
+    pub straggler_lag_min_seconds: f64,
+    pub heartbeat_stale_seconds: f64,
+    /// Store pressure (live/capacity) at or above this while evicting.
+    pub store_pressure_max: f64,
+    /// Rolling loss above this counts as blown up even while finite.
+    pub loss_blowup: f64,
+    /// Consecutive zero-arrival evaluations before a stall fires.
+    pub stall_evals: u32,
+}
+
+impl Default for Thresholds {
+    fn default() -> Thresholds {
+        Thresholds {
+            straggler_lag_factor: 3.0,
+            straggler_lag_min_seconds: 0.05,
+            heartbeat_stale_seconds: 5.0,
+            store_pressure_max: 0.9,
+            loss_blowup: 1e6,
+            stall_evals: 3,
+        }
+    }
+}
+
+/// One active (firing) alert.
+#[derive(Clone, Debug)]
+pub struct ActiveAlert {
+    pub rule: &'static str,
+    pub node: Option<usize>,
+    pub value: f64,
+    pub threshold: f64,
+    pub since_round: u64,
+    pub since_tick: u64,
+}
+
+/// What one evaluation reads. Built from the live registry via
+/// [`HealthInputs::from_registry`]; tests hand-roll snapshots.
+pub struct HealthInputs {
+    /// Flat registry snapshot (`Registry::snapshot` shape).
+    pub snapshot: Vec<(String, f64)>,
+    /// Registry uptime at snapshot time (heartbeat ages subtract it).
+    pub uptime: f64,
+    /// The *raw* rolling loss — passed explicitly because the gauge is
+    /// only written when finite, which would hide exactly the non-finite
+    /// case this rule exists for.
+    pub rolling_loss: Option<f64>,
+}
+
+impl HealthInputs {
+    pub fn from_registry(rolling_loss: Option<f64>) -> HealthInputs {
+        HealthInputs {
+            snapshot: registry().snapshot(),
+            uptime: registry().uptime_seconds(),
+            rolling_loss,
+        }
+    }
+}
+
+/// Process-wide view of currently-firing alerts, for `/status`.
+static ACTIVE: OnceLock<Mutex<Vec<ActiveAlert>>> = OnceLock::new();
+
+fn active_slot() -> &'static Mutex<Vec<ActiveAlert>> {
+    ACTIVE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Currently-firing alerts (most recent evaluation).
+pub fn active_alerts() -> Vec<ActiveAlert> {
+    active_slot().lock().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
+/// The `/status` `alerts` block.
+pub fn alerts_json() -> Json {
+    fn num(v: f64) -> Json {
+        if v.is_finite() { Json::from(v) } else { Json::Null }
+    }
+    let active = active_alerts();
+    let rows: Vec<Json> = active
+        .iter()
+        .map(|a| {
+            let mut pairs = vec![("rule", Json::from(a.rule))];
+            if let Some(n) = a.node {
+                pairs.push(("node", Json::from(n)));
+            }
+            pairs.push(("value", num(a.value)));
+            pairs.push(("threshold", num(a.threshold)));
+            pairs.push(("since_round", Json::from(a.since_round as usize)));
+            pairs.push(("since_tick", Json::from(a.since_tick as usize)));
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("firing", Json::from(active.len())),
+        ("active", Json::Arr(rows)),
+    ])
+}
+
+/// A rule violation observed by one evaluation pass.
+struct Violation {
+    rule: &'static str,
+    node: Option<usize>,
+    value: f64,
+    threshold: f64,
+}
+
+/// The rule engine: one per run, owned by the trainer/coordinator.
+pub struct HealthEngine {
+    mode: HealthMode,
+    thresholds: Thresholds,
+    trace: Option<TraceHandle>,
+    active: BTreeMap<(&'static str, Option<usize>), ActiveAlert>,
+    prev_dropped: f64,
+    prev_evictions: f64,
+    prev_arrivals: f64,
+    zero_arrival_evals: u32,
+    evals: u64,
+}
+
+impl HealthEngine {
+    pub fn new(mode: HealthMode) -> HealthEngine {
+        HealthEngine {
+            mode,
+            thresholds: Thresholds::default(),
+            trace: None,
+            active: BTreeMap::new(),
+            prev_dropped: 0.0,
+            prev_evictions: 0.0,
+            prev_arrivals: 0.0,
+            zero_arrival_evals: 0,
+            evals: 0,
+        }
+    }
+
+    /// Alert transitions also land in the journal when tracing.
+    pub fn attach_trace(&mut self, trace: Option<TraceHandle>) {
+        self.trace = trace;
+    }
+
+    pub fn mode(&self) -> HealthMode {
+        self.mode
+    }
+
+    /// Evaluate every rule against `inputs`; emit firing/resolved
+    /// transitions. No-op when the mode is `off`.
+    pub fn evaluate(&mut self, round: u64, tick: u64, inputs: &HealthInputs) {
+        if self.mode.is_off() {
+            return;
+        }
+        self.evals += 1;
+        let mut violations = Vec::new();
+        self.rule_straggler(inputs, &mut violations);
+        self.rule_heartbeat(inputs, &mut violations);
+        self.rule_store_pressure(inputs, &mut violations);
+        self.rule_trace_drops(inputs, &mut violations);
+        self.rule_arrival_stall(inputs, &mut violations);
+        self.rule_loss_blowup(inputs, &mut violations);
+
+        // firing→resolved state machine per (rule, node)
+        let mut seen: std::collections::BTreeSet<(&'static str, Option<usize>)> =
+            Default::default();
+        for v in violations {
+            let key = (v.rule, v.node);
+            seen.insert(key);
+            if let Some(a) = self.active.get_mut(&key) {
+                a.value = v.value;
+                a.threshold = v.threshold;
+                continue;
+            }
+            registry()
+                .counter(&series("adaselection_alerts_total", &[("rule", v.rule)]))
+                .inc();
+            self.emit(v.rule, "firing", round, tick, v.node, v.value, v.threshold);
+            log::warn!(
+                "health: {} firing{} (value {:.6}, threshold {:.6}) @round {round} tick {tick}",
+                v.rule,
+                v.node.map(|n| format!(" node {n}")).unwrap_or_default(),
+                v.value,
+                v.threshold
+            );
+            self.active.insert(
+                key,
+                ActiveAlert {
+                    rule: v.rule,
+                    node: v.node,
+                    value: v.value,
+                    threshold: v.threshold,
+                    since_round: round,
+                    since_tick: tick,
+                },
+            );
+        }
+        let resolved: Vec<(&'static str, Option<usize>)> =
+            self.active.keys().filter(|k| !seen.contains(*k)).copied().collect();
+        for key in resolved {
+            let a = self.active.remove(&key).expect("key came from the map");
+            self.emit(a.rule, "resolved", round, tick, a.node, a.value, a.threshold);
+            log::info!(
+                "health: {} resolved{} @round {round} tick {tick}",
+                a.rule,
+                a.node.map(|n| format!(" node {n}")).unwrap_or_default()
+            );
+        }
+        *active_slot().lock().unwrap_or_else(|p| p.into_inner()) =
+            self.active.values().cloned().collect();
+    }
+
+    fn emit(
+        &self,
+        rule: &str,
+        state: &str,
+        round: u64,
+        tick: u64,
+        node: Option<usize>,
+        value: f64,
+        threshold: f64,
+    ) {
+        let line = alert_line(rule, state, round, tick, node, value, threshold);
+        if let Some(t) = &self.trace {
+            flight::record(line.clone());
+            t.emit(line);
+        } else {
+            flight::record(line);
+        }
+    }
+
+    fn rule_straggler(&self, inputs: &HealthInputs, out: &mut Vec<Violation>) {
+        let lags = alive_node_series(inputs, "adaselection_node_ready_lag_seconds");
+        if lags.len() < 2 {
+            return;
+        }
+        let mut sorted: Vec<f64> = lags.iter().map(|&(_, v)| v).collect();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let mid = sorted.len() / 2;
+        let median = if sorted.len() % 2 == 0 {
+            (sorted[mid - 1] + sorted[mid]) / 2.0
+        } else {
+            sorted[mid]
+        };
+        let threshold = (self.thresholds.straggler_lag_factor * median)
+            .max(self.thresholds.straggler_lag_min_seconds);
+        for (node, lag) in lags {
+            if lag > threshold {
+                out.push(Violation {
+                    rule: "straggler_ready_lag",
+                    node: Some(node),
+                    value: lag,
+                    threshold,
+                });
+            }
+        }
+    }
+
+    fn rule_heartbeat(&self, inputs: &HealthInputs, out: &mut Vec<Violation>) {
+        for (node, at) in
+            alive_node_series(inputs, "adaselection_node_heartbeat_uptime_seconds")
+        {
+            let age = (inputs.uptime - at).max(0.0);
+            if age > self.thresholds.heartbeat_stale_seconds {
+                out.push(Violation {
+                    rule: "heartbeat_stale",
+                    node: Some(node),
+                    value: age,
+                    threshold: self.thresholds.heartbeat_stale_seconds,
+                });
+            }
+        }
+    }
+
+    fn rule_store_pressure(&mut self, inputs: &HealthInputs, out: &mut Vec<Violation>) {
+        let value = |name: &str| {
+            inputs.snapshot.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+        };
+        let evictions = value("adaselection_store_evictions").unwrap_or(0.0);
+        let evicting = evictions > self.prev_evictions;
+        self.prev_evictions = evictions;
+        let Some(pressure) = value("adaselection_store_pressure") else { return };
+        if evicting && pressure >= self.thresholds.store_pressure_max {
+            out.push(Violation {
+                rule: "store_eviction_pressure",
+                node: None,
+                value: pressure,
+                threshold: self.thresholds.store_pressure_max,
+            });
+        }
+    }
+
+    fn rule_trace_drops(&mut self, inputs: &HealthInputs, out: &mut Vec<Violation>) {
+        let dropped = inputs
+            .snapshot
+            .iter()
+            .find(|(n, _)| n == "adaselection_trace_dropped_lines_total")
+            .map(|&(_, v)| v)
+            .unwrap_or(0.0);
+        let delta = dropped - self.prev_dropped;
+        self.prev_dropped = dropped;
+        if delta > 0.0 {
+            out.push(Violation {
+                rule: "trace_dropped_lines",
+                node: None,
+                value: delta,
+                threshold: 0.0,
+            });
+        }
+    }
+
+    fn rule_arrival_stall(&mut self, inputs: &HealthInputs, out: &mut Vec<Violation>) {
+        // sum arrivals across every runtime's spelling: the stream
+        // counter (plus node-labelled variants) and the process
+        // coordinator's per-node heartbeat gauges
+        let arrivals: f64 = inputs
+            .snapshot
+            .iter()
+            .filter(|(n, _)| {
+                n.starts_with("adaselection_samples_seen_total")
+                    || n.starts_with("adaselection_node_samples_seen")
+            })
+            .map(|&(_, v)| v)
+            .sum();
+        let stalled = self.evals > 1 && arrivals <= self.prev_arrivals;
+        self.prev_arrivals = arrivals;
+        if stalled {
+            self.zero_arrival_evals += 1;
+        } else {
+            self.zero_arrival_evals = 0;
+        }
+        if self.zero_arrival_evals >= self.thresholds.stall_evals {
+            out.push(Violation {
+                rule: "arrival_rate_stall",
+                node: None,
+                value: self.zero_arrival_evals as f64,
+                threshold: self.thresholds.stall_evals as f64,
+            });
+        }
+    }
+
+    fn rule_loss_blowup(&self, inputs: &HealthInputs, out: &mut Vec<Violation>) {
+        let Some(loss) = inputs.rolling_loss else { return };
+        if !loss.is_finite() || loss > self.thresholds.loss_blowup {
+            out.push(Violation {
+                rule: "rolling_loss_blowup",
+                node: None,
+                value: loss,
+                threshold: self.thresholds.loss_blowup,
+            });
+        }
+    }
+
+    /// Currently-firing alerts.
+    pub fn active(&self) -> Vec<ActiveAlert> {
+        self.active.values().cloned().collect()
+    }
+
+    /// End-of-run gate: in `strict` mode any alert still firing fails
+    /// the run (resolved alerts do not).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        if self.mode != HealthMode::Strict || self.active.is_empty() {
+            return Ok(());
+        }
+        let rules: Vec<String> = self
+            .active
+            .values()
+            .map(|a| match a.node {
+                Some(n) => format!("{}(node {n})", a.rule),
+                None => a.rule.to_string(),
+            })
+            .collect();
+        anyhow::bail!(
+            "health strict: {} alert(s) still firing at run end: {}",
+            rules.len(),
+            rules.join(", ")
+        )
+    }
+}
+
+/// `(node, value)` pairs for `base{node="i"}` series, restricted to
+/// nodes whose `adaselection_node_alive` gauge is 1 (or absent — the
+/// single-process stream has no membership gauges).
+fn alive_node_series(inputs: &HealthInputs, base: &str) -> Vec<(usize, f64)> {
+    let prefix = format!("{base}{{node=\"");
+    let mut out = Vec::new();
+    for (name, v) in &inputs.snapshot {
+        let Some(rest) = name.strip_prefix(&prefix) else { continue };
+        let Some(node) = rest.strip_suffix("\"}") else { continue };
+        let Ok(node_id) = node.parse::<usize>() else { continue };
+        let alive = inputs
+            .snapshot
+            .iter()
+            .find(|(n, _)| n == &format!("adaselection_node_alive{{node=\"{node}\"}}"))
+            .map(|&(_, a)| a > 0.0)
+            .unwrap_or(true);
+        if alive {
+            out.push((node_id, *v));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(snapshot: Vec<(&str, f64)>, loss: Option<f64>) -> HealthInputs {
+        HealthInputs {
+            snapshot: snapshot.into_iter().map(|(n, v)| (n.to_string(), v)).collect(),
+            uptime: 100.0,
+            rolling_loss: loss,
+        }
+    }
+
+    #[test]
+    fn off_mode_never_evaluates() {
+        let mut e = HealthEngine::new(HealthMode::Off);
+        e.evaluate(1, 1, &inputs(vec![], Some(f64::NAN)));
+        assert!(e.active().is_empty());
+        assert!(e.finish().is_ok());
+    }
+
+    #[test]
+    fn straggler_fires_and_resolves() {
+        let mut e = HealthEngine::new(HealthMode::Warn);
+        let lag = |n: &str, v: f64| {
+            (format!("adaselection_node_ready_lag_seconds{{node=\"{n}\"}}"), v)
+        };
+        let snap: Vec<(String, f64)> =
+            vec![lag("0", 0.01), lag("1", 0.012), lag("2", 0.5), lag("3", 0.011)];
+        let inp = HealthInputs { snapshot: snap, uptime: 1.0, rolling_loss: None };
+        e.evaluate(1, 8, &inp);
+        let active = e.active();
+        assert_eq!(active.len(), 1);
+        assert_eq!(active[0].rule, "straggler_ready_lag");
+        assert_eq!(active[0].node, Some(2));
+        // the straggler sheds: its alive gauge goes 0 → alert resolves
+        let mut snap2 = inp.snapshot.clone();
+        snap2.push(("adaselection_node_alive{node=\"2\"}".to_string(), 0.0));
+        e.evaluate(2, 16, &HealthInputs { snapshot: snap2, uptime: 2.0, rolling_loss: None });
+        assert!(e.active().is_empty());
+        assert!(e.finish().is_ok());
+    }
+
+    #[test]
+    fn uniform_lags_stay_silent() {
+        let mut e = HealthEngine::new(HealthMode::Warn);
+        let snap: Vec<(String, f64)> = (0..4)
+            .map(|n| {
+                (format!("adaselection_node_ready_lag_seconds{{node=\"{n}\"}}"), 0.01)
+            })
+            .collect();
+        e.evaluate(1, 8, &HealthInputs { snapshot: snap, uptime: 1.0, rolling_loss: None });
+        assert!(e.active().is_empty());
+    }
+
+    #[test]
+    fn heartbeat_staleness_respects_liveness() {
+        let mut e = HealthEngine::new(HealthMode::Warn);
+        let inp = inputs(
+            vec![
+                ("adaselection_node_heartbeat_uptime_seconds{node=\"0\"}", 99.5),
+                ("adaselection_node_heartbeat_uptime_seconds{node=\"1\"}", 10.0),
+                ("adaselection_node_heartbeat_uptime_seconds{node=\"2\"}", 10.0),
+                ("adaselection_node_alive{node=\"2\"}", 0.0),
+            ],
+            None,
+        );
+        e.evaluate(3, 24, &inp);
+        let active = e.active();
+        // node 1 is stale (age 90s); node 2 is just as old but dead
+        assert_eq!(active.len(), 1);
+        assert_eq!(active[0].rule, "heartbeat_stale");
+        assert_eq!(active[0].node, Some(1));
+    }
+
+    #[test]
+    fn loss_blowup_and_stall_fire() {
+        let mut e = HealthEngine::new(HealthMode::Strict);
+        // NaN loss fires immediately
+        e.evaluate(1, 1, &inputs(vec![], Some(f64::NAN)));
+        assert!(e.active().iter().any(|a| a.rule == "rolling_loss_blowup"));
+        assert!(e.finish().is_err());
+        // arrivals frozen across stall_evals+1 evaluations → stall fires
+        let mut e = HealthEngine::new(HealthMode::Warn);
+        for t in 0..5u64 {
+            e.evaluate(1, t, &inputs(vec![("adaselection_samples_seen_total", 128.0)], None));
+        }
+        assert!(e.active().iter().any(|a| a.rule == "arrival_rate_stall"));
+        // arrivals move again → resolves
+        e.evaluate(1, 6, &inputs(vec![("adaselection_samples_seen_total", 256.0)], None));
+        assert!(!e.active().iter().any(|a| a.rule == "arrival_rate_stall"));
+    }
+
+    #[test]
+    fn store_pressure_requires_active_eviction() {
+        let mut e = HealthEngine::new(HealthMode::Warn);
+        // high pressure but no evictions yet: silent
+        e.evaluate(
+            1,
+            1,
+            &inputs(
+                vec![
+                    ("adaselection_store_pressure", 0.99),
+                    ("adaselection_store_evictions", 0.0),
+                ],
+                None,
+            ),
+        );
+        assert!(e.active().is_empty());
+        // evictions advance under pressure: fires
+        e.evaluate(
+            1,
+            2,
+            &inputs(
+                vec![
+                    ("adaselection_store_pressure", 0.99),
+                    ("adaselection_store_evictions", 32.0),
+                ],
+                None,
+            ),
+        );
+        assert!(e.active().iter().any(|a| a.rule == "store_eviction_pressure"));
+    }
+
+    #[test]
+    fn trace_drop_delta_fires_once_per_burst() {
+        let mut e = HealthEngine::new(HealthMode::Warn);
+        e.evaluate(1, 1, &inputs(vec![("adaselection_trace_dropped_lines_total", 0.0)], None));
+        assert!(e.active().is_empty());
+        e.evaluate(1, 2, &inputs(vec![("adaselection_trace_dropped_lines_total", 7.0)], None));
+        assert!(e.active().iter().any(|a| a.rule == "trace_dropped_lines"));
+        // no further drops → resolves
+        e.evaluate(1, 3, &inputs(vec![("adaselection_trace_dropped_lines_total", 7.0)], None));
+        assert!(e.active().is_empty());
+    }
+}

@@ -1,12 +1,18 @@
 //! Unified telemetry layer: a process-wide metrics [`registry`], the
-//! per-tick JSONL [`trace`] journal (`--trace PATH`), and the scrapeable
-//! [`status`] endpoint (`--status-addr ADDR`, `/metrics` + `/status`).
+//! per-tick JSONL [`trace`] journal (`--trace PATH`), the scrapeable
+//! [`status`] endpoint (`--status-addr ADDR`, `/metrics` + `/status` +
+//! `/profile`), the [`health`] rule engine (`--health off|warn|strict`),
+//! the always-on [`flight`] crash recorder, and [`prof`] per-kernel
+//! continuous profiling.
 //!
 //! Everything here is strictly *observational*: handles read training
 //! state after it is computed and never feed anything back, so enabling
 //! telemetry cannot change a selection digest (pinned by e2e tests).
 
 pub mod analyze;
+pub mod flight;
+pub mod health;
+pub mod prof;
 pub mod registry;
 pub mod status;
 pub mod trace;
@@ -14,6 +20,7 @@ pub mod trace;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+pub use health::{HealthEngine, HealthInputs, HealthMode};
 pub use registry::{registry, series, Counter, Gauge, Histogram, Registry};
 pub use status::StatusServer;
 pub use trace::{TraceHandle, TraceJournal};
@@ -134,8 +141,8 @@ impl TickObserver {
         }
     }
 
-    /// Record one processed tick: update the registry and, when tracing,
-    /// enqueue the schema-v2 journal line.
+    /// Record one processed tick: update the registry, feed the flight
+    /// ring, and, when tracing, enqueue the journal line.
     pub fn observe(&mut self, s: TickSample<'_>) {
         self.ticks.inc();
         self.seen.add(s.arrivals as u64);
@@ -180,31 +187,52 @@ impl TickObserver {
             });
             g.set(total.as_secs_f64());
         }
-        if let Some(trace) = &self.trace {
-            let phases = self.phase_delta.delta(s.phases);
-            let empty: Vec<(String, f32)> = Vec::new();
-            let line = TickEvent {
-                tick: s.tick,
-                node: self.node.unwrap_or(0),
-                round: s.round,
-                gamma: s.gamma,
-                arrivals: s.arrivals,
-                trained: s.trained,
-                replayed: s.replayed,
-                forward: forward_this_tick,
-                drift: s.drift_total,
-                weights: s.weights.as_deref().unwrap_or(&empty),
-                store_live: s.store_live,
-                store_capacity: s.store_capacity,
-                store_hits: s.store_hits,
-                store_misses: s.store_misses,
-                store_evictions: s.store_evictions,
-                phases: &phases,
-                rolling: s.rolling,
-            }
-            .to_line();
-            trace.emit(line);
+        // the line is built whether or not tracing is on: the flight
+        // ring keeps the journal tail for post-mortems regardless
+        let mut phases = self.phase_delta.delta(s.phases);
+        // per-kernel sub-phase seconds measured inside the backend this
+        // tick, drained from this node's thread (`kernel:<name>` keys)
+        phases.extend(prof::take_tick_deltas());
+        phases.sort_by(|a, b| a.0.cmp(&b.0));
+        let empty: Vec<(String, f32)> = Vec::new();
+        let line = TickEvent {
+            tick: s.tick,
+            node: self.node.unwrap_or(0),
+            round: s.round,
+            gamma: s.gamma,
+            arrivals: s.arrivals,
+            trained: s.trained,
+            replayed: s.replayed,
+            forward: forward_this_tick,
+            drift: s.drift_total,
+            weights: s.weights.as_deref().unwrap_or(&empty),
+            store_live: s.store_live,
+            store_capacity: s.store_capacity,
+            store_hits: s.store_hits,
+            store_misses: s.store_misses,
+            store_evictions: s.store_evictions,
+            phases: &phases,
+            rolling: s.rolling,
         }
+        .to_line();
+        if let Some(trace) = &self.trace {
+            flight::record(line.clone());
+            trace.emit(line);
+        } else {
+            flight::record(line);
+        }
+    }
+}
+
+/// Route one already-serialized journal line to the flight ring and,
+/// when tracing, the journal — the single choke point that keeps the
+/// two byte-identical.
+pub fn emit_journal(trace: Option<&TraceHandle>, line: String) {
+    if let Some(t) = trace {
+        flight::record(line.clone());
+        t.emit(line);
+    } else {
+        flight::record(line);
     }
 }
 

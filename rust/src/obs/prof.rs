@@ -1,0 +1,167 @@
+//! Continuous per-kernel profiling: sub-phase timers inside the native
+//! backend's hot paths (per-sample loss kernels, the fused AdaSelection
+//! scorer, the SGD step, eval) aggregated into streaming p50/p95/p99
+//! digests per kernel.
+//!
+//! Two sinks per recorded duration:
+//!
+//!   * a process-wide [`Histogram`] per kernel (log-spaced duration
+//!     buckets) backing the `/profile` endpoint and the
+//!     `adaselection_kernel_seconds{kernel=...}` series on `/metrics`;
+//!   * a thread-local per-tick accumulator the [`super::TickObserver`]
+//!     drains into the journal's `phases` object as `kernel:<name>`
+//!     entries — each cluster node ticks on its own thread, so the
+//!     thread-local keeps per-node attribution exact and
+//!     `trace-analyze` can rebuild per-kernel quantiles offline.
+//!
+//! Timing only *reads* the clock around already-scheduled work, so the
+//! digest-parity e2es hold with profiling on (it is always on).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+use super::registry::{registry, series, Histogram};
+
+/// Finite bucket bounds in seconds: 1µs · 2^k for k = 0..20 (≈1µs to
+/// ≈1s); slower calls land in the +Inf bucket and clamp to the last
+/// bound in quantile estimates.
+fn duration_bounds() -> &'static [f64] {
+    static BOUNDS: OnceLock<Vec<f64>> = OnceLock::new();
+    BOUNDS.get_or_init(|| (0..21).map(|k| 1e-6 * f64::powi(2.0, k)).collect())
+}
+
+fn kernels() -> &'static Mutex<BTreeMap<&'static str, Arc<Histogram>>> {
+    static KERNELS: OnceLock<Mutex<BTreeMap<&'static str, Arc<Histogram>>>> = OnceLock::new();
+    KERNELS.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+thread_local! {
+    /// Seconds per kernel accumulated on this thread since the last
+    /// [`take_tick_deltas`] — exactly one tick's worth in steady state.
+    static TICK_ACC: RefCell<BTreeMap<&'static str, f64>> = RefCell::new(BTreeMap::new());
+}
+
+/// Record one kernel invocation.
+pub fn record(kernel: &'static str, elapsed: Duration) {
+    let secs = elapsed.as_secs_f64();
+    let hist = {
+        let mut m = kernels().lock().unwrap_or_else(|p| p.into_inner());
+        Arc::clone(m.entry(kernel).or_insert_with(|| {
+            registry().histogram(
+                &series("adaselection_kernel_seconds", &[("kernel", kernel)]),
+                duration_bounds(),
+            )
+        }))
+    };
+    hist.observe(secs);
+    TICK_ACC.with(|acc| {
+        *acc.borrow_mut().entry(kernel).or_insert(0.0) += secs;
+    });
+}
+
+/// Time `f` under `kernel`.
+pub fn time<T>(kernel: &'static str, f: impl FnOnce() -> T) -> T {
+    let start = Instant::now();
+    let out = f();
+    record(kernel, start.elapsed());
+    out
+}
+
+/// Drain this thread's per-tick kernel seconds as journal phase entries
+/// (`kernel:<name>` → seconds), alphabetical. Empty off the native
+/// backend's threads.
+pub fn take_tick_deltas() -> Vec<(String, f64)> {
+    TICK_ACC.with(|acc| {
+        let mut m = acc.borrow_mut();
+        let out = m.iter().map(|(k, s)| (format!("kernel:{k}"), *s)).collect();
+        m.clear();
+        out
+    })
+}
+
+/// One kernel's streaming digest.
+#[derive(Debug, Clone)]
+pub struct KernelStats {
+    pub kernel: &'static str,
+    pub count: u64,
+    pub total_seconds: f64,
+    pub p50_seconds: f64,
+    pub p95_seconds: f64,
+    pub p99_seconds: f64,
+}
+
+/// Every kernel's digest, alphabetical by kernel name.
+pub fn kernel_stats() -> Vec<KernelStats> {
+    let m = kernels().lock().unwrap_or_else(|p| p.into_inner());
+    m.iter()
+        .map(|(&kernel, h)| KernelStats {
+            kernel,
+            count: h.count(),
+            total_seconds: h.sum(),
+            p50_seconds: h.quantile(0.50),
+            p95_seconds: h.quantile(0.95),
+            p99_seconds: h.quantile(0.99),
+        })
+        .collect()
+}
+
+/// The `/profile` document.
+pub fn profile_json() -> Json {
+    fn num(v: f64) -> Json {
+        if v.is_finite() { Json::from(v) } else { Json::Null }
+    }
+    let mut per_kernel: BTreeMap<String, Json> = BTreeMap::new();
+    for s in kernel_stats() {
+        per_kernel.insert(
+            s.kernel.to_string(),
+            Json::obj(vec![
+                ("count", Json::from(s.count as usize)),
+                ("total_seconds", num(s.total_seconds)),
+                ("p50_seconds", num(s.p50_seconds)),
+                ("p95_seconds", num(s.p95_seconds)),
+                ("p99_seconds", num(s.p99_seconds)),
+            ]),
+        );
+    }
+    Json::obj(vec![
+        ("uptime_seconds", Json::from(super::uptime_seconds())),
+        ("kernels", Json::Obj(per_kernel)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_aggregate_and_drain_per_tick() {
+        time("test_kernel_a", || std::thread::sleep(Duration::from_micros(200)));
+        record("test_kernel_a", Duration::from_micros(100));
+        record("test_kernel_b", Duration::from_millis(2));
+
+        let stats = kernel_stats();
+        let a = stats.iter().find(|s| s.kernel == "test_kernel_a").unwrap();
+        assert!(a.count >= 2);
+        assert!(a.total_seconds > 0.0);
+        assert!(a.p50_seconds > 0.0 && a.p99_seconds >= a.p50_seconds);
+
+        let deltas = take_tick_deltas();
+        let names: Vec<&str> = deltas.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"kernel:test_kernel_a"));
+        assert!(names.contains(&"kernel:test_kernel_b"));
+        for (_, secs) in &deltas {
+            assert!(*secs > 0.0);
+        }
+        // drained: the next tick starts from zero
+        assert!(take_tick_deltas()
+            .iter()
+            .all(|(n, _)| !n.starts_with("kernel:test_kernel_")));
+
+        let j = profile_json();
+        assert!(j.at(&["kernels", "test_kernel_a", "count"]).unwrap().as_f64().unwrap() >= 2.0);
+    }
+}

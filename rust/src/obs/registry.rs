@@ -109,6 +109,37 @@ impl Histogram {
         }
         out
     }
+
+    /// Estimated quantile (`q` in 0..=1) by linear interpolation inside
+    /// the bucket whose cumulative count crosses the target rank —
+    /// Prometheus `histogram_quantile` semantics. Observations in the
+    /// +Inf bucket clamp to the last finite bound; an empty histogram
+    /// returns NaN.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return f64::NAN;
+        }
+        let rank = q.clamp(0.0, 1.0) * total as f64;
+        let mut prev_cum = 0u64;
+        let mut lower = 0.0f64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let cum = prev_cum + c.load(Ordering::Relaxed);
+            if cum as f64 >= rank && cum > prev_cum {
+                let upper = match self.bounds.get(i) {
+                    Some(&b) => b,
+                    None => return self.bounds.last().copied().unwrap_or(f64::NAN),
+                };
+                let frac = (rank - prev_cum as f64) / (cum - prev_cum) as f64;
+                return lower + (upper - lower) * frac.clamp(0.0, 1.0);
+            }
+            prev_cum = cum;
+            if let Some(&b) = self.bounds.get(i) {
+                lower = b;
+            }
+        }
+        self.bounds.last().copied().unwrap_or(f64::NAN)
+    }
 }
 
 enum Metric {
@@ -128,6 +159,14 @@ impl Registry {
         Registry { metrics: Mutex::new(BTreeMap::new()), start: Instant::now() }
     }
 
+    /// Lock the name map, recovering from poisoning: a panic in one
+    /// scrape or writer thread must not take `/metrics` down for every
+    /// later request. The map holds only `Arc` handles, so a poisoned
+    /// guard is still structurally sound.
+    fn lock_metrics(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        self.metrics.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Seconds since this registry was first touched.
     pub fn uptime_seconds(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
@@ -135,7 +174,7 @@ impl Registry {
 
     /// Get-or-register a counter under `name` (labels included).
     pub fn counter(&self, name: &str) -> Arc<Counter> {
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = self.lock_metrics();
         match m
             .entry(name.to_string())
             .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
@@ -147,7 +186,7 @@ impl Registry {
 
     /// Get-or-register a gauge under `name` (labels included).
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = self.lock_metrics();
         match m
             .entry(name.to_string())
             .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
@@ -159,7 +198,7 @@ impl Registry {
 
     /// Get-or-register a histogram with the given finite bucket bounds.
     pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = self.lock_metrics();
         match m
             .entry(name.to_string())
             .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds))))
@@ -172,7 +211,7 @@ impl Registry {
     /// Flat `(series_name, value)` view (histograms contribute `_sum` and
     /// `_count` series). Used to assemble `/status`.
     pub fn snapshot(&self) -> Vec<(String, f64)> {
-        let m = self.metrics.lock().unwrap();
+        let m = self.lock_metrics();
         let mut out = Vec::with_capacity(m.len());
         for (name, metric) in m.iter() {
             match metric {
@@ -181,6 +220,9 @@ impl Registry {
                 Metric::Histogram(h) => {
                     out.push((hist_series(name, "_sum"), h.sum()));
                     out.push((hist_series(name, "_count"), h.count() as f64));
+                    out.push((hist_series(name, "_p50"), h.quantile(0.50)));
+                    out.push((hist_series(name, "_p95"), h.quantile(0.95)));
+                    out.push((hist_series(name, "_p99"), h.quantile(0.99)));
                 }
             }
         }
@@ -189,7 +231,7 @@ impl Registry {
 
     /// Prometheus text exposition (format 0.0.4) of every registered series.
     pub fn render_prometheus(&self) -> String {
-        let m = self.metrics.lock().unwrap();
+        let m = self.lock_metrics();
         let mut out = String::new();
         let mut last_family = String::new();
         for (name, metric) in m.iter() {
@@ -220,6 +262,13 @@ impl Registry {
                     }
                     out.push_str(&format!("{} {}\n", hist_series(name, "_sum"), fmt_f64(h.sum())));
                     out.push_str(&format!("{} {}\n", hist_series(name, "_count"), h.count()));
+                    for (suffix, q) in [("_p50", 0.50), ("_p95", 0.95), ("_p99", 0.99)] {
+                        out.push_str(&format!(
+                            "{} {}\n",
+                            hist_series(name, suffix),
+                            fmt_f64(h.quantile(q))
+                        ));
+                    }
                 }
             }
         }
@@ -334,7 +383,55 @@ mod tests {
         r.histogram("t_c", &[1.0]).observe(3.0);
         let snap = r.snapshot();
         let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
-        assert_eq!(names, vec!["t_a", "t_b", "t_c_sum", "t_c_count"]);
+        assert_eq!(
+            names,
+            vec!["t_a", "t_b", "t_c_sum", "t_c_count", "t_c_p50", "t_c_p95", "t_c_p99"]
+        );
+    }
+
+    #[test]
+    fn quantiles_match_known_distributions() {
+        let r = Registry::new();
+        // uniform 1..=100 over decade buckets: interpolation is exact
+        let h = r.histogram("t_q", &[10., 20., 30., 40., 50., 60., 70., 80., 90., 100.]);
+        for v in 1..=100 {
+            h.observe(v as f64);
+        }
+        assert!((h.quantile(0.50) - 50.0).abs() < 1e-9, "p50 {}", h.quantile(0.50));
+        assert!((h.quantile(0.95) - 95.0).abs() < 1e-9, "p95 {}", h.quantile(0.95));
+        assert!((h.quantile(0.99) - 99.0).abs() < 1e-9, "p99 {}", h.quantile(0.99));
+        // skewed mass: 90 observations in the first bucket, 10 in the last
+        let s = r.histogram("t_skew", &[1.0, 100.0]);
+        for _ in 0..90 {
+            s.observe(0.5);
+        }
+        for _ in 0..10 {
+            s.observe(60.0);
+        }
+        assert!(s.quantile(0.50) <= 1.0);
+        assert!(s.quantile(0.95) > 1.0 && s.quantile(0.95) <= 100.0);
+        // +Inf bucket clamps to the last finite bound
+        let c = r.histogram("t_clamp", &[1.0]);
+        c.observe(5.0);
+        assert_eq!(c.quantile(0.99), 1.0);
+        // empty histogram: NaN, never a misleading number
+        assert!(r.histogram("t_empty", &[1.0]).quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn poisoned_lock_recovers() {
+        let r = std::sync::Arc::new(Registry::new());
+        r.counter("t_poison").add(3);
+        let r2 = std::sync::Arc::clone(&r);
+        // poison the metrics mutex by panicking while holding it
+        let _ = std::thread::spawn(move || {
+            let _guard = r2.metrics.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(r.metrics.is_poisoned());
+        assert_eq!(r.counter("t_poison").get(), 3);
+        assert!(!r.render_prometheus().is_empty());
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! Routes:
 //!   * `GET /metrics` — Prometheus text exposition of the whole registry.
 //!   * `GET /status`  — JSON: uptime, rolling prequential loss/acc, store
-//!     pressure, and per-node last-heartbeat age (process clusters).
+//!     pressure, firing health alerts, and per-node last-heartbeat age
+//!     (process clusters). Never-sampled series render as `null`, not 0.
+//!   * `GET /profile` — JSON per-kernel streaming p50/p95/p99 digests
+//!     from the native backend's continuous profiler (`obs::prof`).
 //!
 //! The server runs on its own accept thread; requests are served inline
 //! (scrapes are rare and tiny), and the training loop never touches it.
@@ -29,9 +32,11 @@ fn last_bound_slot() -> &'static Mutex<Option<SocketAddr>> {
     LAST_BOUND.get_or_init(|| Mutex::new(None))
 }
 
-/// The address the most recent [`StatusServer`] bound, if any.
+/// The address the most recent [`StatusServer`] bound, if any. A panic
+/// in some other holder must not poison every later lookup, so the
+/// guard recovers from poisoning.
 pub fn last_bound_addr() -> Option<SocketAddr> {
-    *last_bound_slot().lock().unwrap()
+    *last_bound_slot().lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// A running scrape endpoint; stops (and joins) on [`StatusServer::stop`]
@@ -50,8 +55,10 @@ impl StatusServer {
             .map_err(|e| anyhow::anyhow!("status: cannot bind {addr}: {e}"))?;
         let bound = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        *last_bound_slot().lock().unwrap() = Some(bound);
-        log::info!("status endpoint listening on http://{bound} (/metrics, /status)");
+        *last_bound_slot().lock().unwrap_or_else(|p| p.into_inner()) = Some(bound);
+        log::info!(
+            "status endpoint listening on http://{bound} (/metrics, /status, /profile)"
+        );
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
         let handle = std::thread::spawn(move || {
@@ -161,6 +168,11 @@ fn serve_one(mut stream: TcpStream) {
             registry().render_prometheus(),
         ),
         "/status" | "/" => ("200 OK", "application/json", status_json().to_string()),
+        "/profile" => (
+            "200 OK",
+            "application/json",
+            super::prof::profile_json().to_string(),
+        ),
         _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
     };
     let _ = write!(
@@ -177,12 +189,19 @@ fn status_json() -> Json {
     let snap = registry().snapshot();
     let value = |name: &str| snap.iter().find(|(n, _)| n == name).map(|&(_, v)| v);
 
-    let live = value("adaselection_store_live").unwrap_or(0.0);
-    let capacity = value("adaselection_store_capacity").unwrap_or(0.0);
+    // never-sampled series render as null, not 0.0 — "no data yet" must
+    // stay distinguishable from a true zero; the pressure division is
+    // guarded on a *reported* nonzero capacity
+    let live = value("adaselection_store_live");
+    let capacity = value("adaselection_store_capacity");
+    let pressure = match (live, capacity) {
+        (Some(l), Some(c)) if c > 0.0 => Json::from(l / c),
+        _ => Json::Null,
+    };
     let store = Json::obj(vec![
-        ("live", Json::from(live)),
-        ("capacity", Json::from(capacity)),
-        ("pressure", Json::from(if capacity > 0.0 { live / capacity } else { 0.0 })),
+        ("live", json_num_or_null(live)),
+        ("capacity", json_num_or_null(capacity)),
+        ("pressure", pressure),
     ]);
 
     // per-node rows come from the heartbeat gauges the coordinator sets:
@@ -195,8 +214,7 @@ fn status_json() -> Json {
             if let Some(node) = rest.strip_suffix("\"}") {
                 let ticks = value(&format!(
                     "adaselection_node_ticks_total{{node=\"{node}\"}}"
-                ))
-                .unwrap_or(0.0);
+                ));
                 // membership flag from the coordinator's barrier gauges;
                 // absent (single-process runs) serializes as null
                 let alive = value(&format!("adaselection_node_alive{{node=\"{node}\"}}"))
@@ -206,7 +224,7 @@ fn status_json() -> Json {
                     node.to_string(),
                     Json::obj(vec![
                         ("heartbeat_age_seconds", Json::from((uptime - v).max(0.0))),
-                        ("ticks", Json::from(ticks)),
+                        ("ticks", json_num_or_null(ticks)),
                         ("alive", alive),
                     ]),
                 );
@@ -260,7 +278,7 @@ fn status_json() -> Json {
             ("nodes", Json::from(n)),
             (
                 "standbys",
-                Json::from(value("adaselection_cluster_standbys").unwrap_or(0.0)),
+                json_num_or_null(value("adaselection_cluster_standbys")),
             ),
             (
                 "arrival_rate",
@@ -278,10 +296,11 @@ fn status_json() -> Json {
         ("cluster", cluster),
         ("arms", Json::Obj(arms)),
         ("nodes", Json::Obj(nodes)),
+        ("alerts", super::health::alerts_json()),
         ("series", Json::from(snap.len())),
         (
             "trace_dropped_lines",
-            Json::from(value("adaselection_trace_dropped_lines_total").unwrap_or(0.0)),
+            json_num_or_null(value("adaselection_trace_dropped_lines_total")),
         ),
     ])
 }
@@ -322,6 +341,9 @@ mod tests {
     #[test]
     fn serves_metrics_status_and_404() {
         registry().counter("adaselection_status_test_total").add(3);
+        // register (at zero) so the snapshot always carries the series,
+        // whatever other tests ran first in this process
+        registry().counter("adaselection_trace_dropped_lines_total");
         registry().gauge("adaselection_store_live").set(10.0);
         registry().gauge("adaselection_store_capacity").set(40.0);
         registry()
@@ -366,6 +388,21 @@ mod tests {
             0.625
         );
         assert!(j.at(&["trace_dropped_lines"]).unwrap().as_f64().unwrap() >= 0.0);
+        // tentpole: the health alerts block rides along on /status
+        assert!(j.at(&["alerts", "firing"]).unwrap().as_f64().unwrap() >= 0.0);
+        j.at(&["alerts", "active"]).unwrap().as_arr().unwrap();
+
+        // tentpole: /profile serves the per-kernel quantile digests
+        crate::obs::prof::record("status_probe", Duration::from_micros(50));
+        let (code, body) = http_get(addr, "/profile").unwrap();
+        assert_eq!(code, 200);
+        let p = Json::parse(&body).unwrap();
+        assert!(
+            p.at(&["kernels", "status_probe", "count"]).unwrap().as_f64().unwrap() >= 1.0
+        );
+        assert!(
+            p.at(&["kernels", "status_probe", "p50_seconds"]).unwrap().as_f64().unwrap() > 0.0
+        );
 
         let (code, _) = http_get(addr, "/bogus").unwrap();
         assert_eq!(code, 404);

@@ -7,12 +7,12 @@
 //! training. Telemetry must stay off the digest path: the journal only
 //! ever receives copies of already-computed state.
 //!
-//! ## Schema v2
+//! ## Schema v3
 //!
 //! One JSON object per line. Common fields: `v` (the schema version the
-//! line was written under), `kind`. Validation accepts v1 and v2 lines;
+//! line was written under), `kind`. Validation accepts v1–v3 lines;
 //! v1 lines simply predate the `round` field (it defaults to 0) and the
-//! `span` kind.
+//! `span` kind; v1/v2 lines predate the `alert` kind.
 //!
 //! * `kind = "tick"` — one per processed tick per node:
 //!   `tick`, `node`, `round` (the coordinator's barrier round this tick
@@ -31,6 +31,11 @@
 //!   `merge`), `round`, `tick` (the sync point), optional `node` (set
 //!   on per-node spans like `ready_lag`), `start` (seconds since the
 //!   coordinator's run clock started), `duration` (seconds).
+//! * `kind = "alert"` (v3 only) — health-rule transitions from
+//!   `obs::health`: `rule` (e.g. `straggler_ready_lag`), `state`
+//!   (`"firing"` or `"resolved"`), `round`, `tick`, optional `node`
+//!   (set on per-node rules), `value` (the observed reading that
+//!   crossed), `threshold` (the rule's limit at evaluation time).
 //!
 //! Tick events are tick-contiguous per node: node `n` emits ticks
 //! `t, t+1, t+2, ...` without gaps (backfill replays after churn are
@@ -50,7 +55,7 @@ use crate::util::json::Json;
 use crate::util::timer::PhaseTimer;
 
 /// Journal schema version emitted in every line.
-pub const SCHEMA_VERSION: u64 = 2;
+pub const SCHEMA_VERSION: u64 = 3;
 /// Oldest schema version [`validate_line`] still accepts.
 pub const MIN_SCHEMA_VERSION: u64 = 1;
 
@@ -149,16 +154,7 @@ impl TraceHandle {
 
     /// Emit a coordinator-side gossip/merge event.
     pub fn emit_wire_event(&self, kind: &str, round: u64, tick: u64, bytes: u64) {
-        self.emit(
-            Json::obj(vec![
-                ("v", Json::from(SCHEMA_VERSION as usize)),
-                ("kind", Json::from(kind)),
-                ("round", Json::from(round as usize)),
-                ("tick", Json::from(tick as usize)),
-                ("bytes", Json::from(bytes as usize)),
-            ])
-            .to_string(),
-        );
+        self.emit(wire_event_line(kind, round, tick, bytes));
     }
 
     /// Emit a coordinator-side timing span (v2): `name` scopes what was
@@ -175,20 +171,92 @@ impl TraceHandle {
         start: f64,
         duration: f64,
     ) {
-        let mut pairs = vec![
-            ("v", Json::from(SCHEMA_VERSION as usize)),
-            ("kind", Json::from("span")),
-            ("name", Json::from(name)),
-            ("round", Json::from(round as usize)),
-            ("tick", Json::from(tick as usize)),
-        ];
-        if let Some(n) = node {
-            pairs.push(("node", Json::from(n)));
-        }
-        pairs.push(("start", Json::from(start)));
-        pairs.push(("duration", Json::from(duration)));
-        self.emit(Json::obj(pairs).to_string());
+        self.emit(span_line(name, round, tick, node, start, duration));
     }
+
+    /// Emit a health-rule transition (v3): `rule` names the built-in
+    /// rule, `state` is `"firing"` or `"resolved"`, `value` is the
+    /// reading that crossed and `threshold` the rule's limit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn emit_alert(
+        &self,
+        rule: &str,
+        state: &str,
+        round: u64,
+        tick: u64,
+        node: Option<usize>,
+        value: f64,
+        threshold: f64,
+    ) {
+        self.emit(alert_line(rule, state, round, tick, node, value, threshold));
+    }
+}
+
+/// Serialize one gossip/merge wire event line (shared by the live
+/// journal and the flight recorder, which must agree byte-for-byte).
+pub fn wire_event_line(kind: &str, round: u64, tick: u64, bytes: u64) -> String {
+    Json::obj(vec![
+        ("v", Json::from(SCHEMA_VERSION as usize)),
+        ("kind", Json::from(kind)),
+        ("round", Json::from(round as usize)),
+        ("tick", Json::from(tick as usize)),
+        ("bytes", Json::from(bytes as usize)),
+    ])
+    .to_string()
+}
+
+/// Serialize one coordinator timing-span line.
+pub fn span_line(
+    name: &str,
+    round: u64,
+    tick: u64,
+    node: Option<usize>,
+    start: f64,
+    duration: f64,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::from(SCHEMA_VERSION as usize)),
+        ("kind", Json::from("span")),
+        ("name", Json::from(name)),
+        ("round", Json::from(round as usize)),
+        ("tick", Json::from(tick as usize)),
+    ];
+    if let Some(n) = node {
+        pairs.push(("node", Json::from(n)));
+    }
+    pairs.push(("start", Json::from(start)));
+    pairs.push(("duration", Json::from(duration)));
+    Json::obj(pairs).to_string()
+}
+
+/// Serialize one schema-v3 `kind:"alert"` line (shared by the live
+/// journal and the flight recorder, which must agree byte-for-byte).
+pub fn alert_line(
+    rule: &str,
+    state: &str,
+    round: u64,
+    tick: u64,
+    node: Option<usize>,
+    value: f64,
+    threshold: f64,
+) -> String {
+    fn num(v: f64) -> Json {
+        if v.is_finite() { Json::from(v) } else { Json::Null }
+    }
+    let mut pairs = vec![
+        ("v", Json::from(SCHEMA_VERSION as usize)),
+        ("kind", Json::from("alert")),
+        ("rule", Json::from(rule)),
+        ("state", Json::from(state)),
+        ("round", Json::from(round as usize)),
+        ("tick", Json::from(tick as usize)),
+    ];
+    if let Some(n) = node {
+        pairs.push(("node", Json::from(n)));
+    }
+    pairs.push(("value", num(value)));
+    pairs.push(("threshold", num(threshold)));
+    Json::obj(pairs).to_string()
 }
 
 /// Everything a `kind:"tick"` line carries, assembled by the caller
@@ -220,7 +288,7 @@ pub struct TickEvent<'a> {
 }
 
 impl TickEvent<'_> {
-    /// Serialize as one schema-v2 JSONL line.
+    /// Serialize as one current-schema JSONL line.
     pub fn to_line(&self) -> String {
         // NaN/Inf have no JSON spelling (rolling acc is NaN on regression
         // streams); journal them as null so every line stays parseable
@@ -306,12 +374,14 @@ pub struct ParsedEvent {
     pub node: Option<usize>,
     /// Present on `span` events.
     pub name: Option<String>,
+    /// Present on `alert` events: `(rule, state)`.
+    pub alert: Option<(String, String)>,
 }
 
-/// Validate one journal line against schema v1 *or* v2 (the v1→v2
-/// compatibility rule: v1 lines carry no `round` — it defaults to 0 —
-/// and cannot carry `span` events; anything past [`SCHEMA_VERSION`] is
-/// rejected).
+/// Validate one journal line against schema v1, v2, *or* v3 (the
+/// compatibility rules: v1 lines carry no `round` — it defaults to 0 —
+/// and cannot carry `span` events; `alert` events require v3; anything
+/// past [`SCHEMA_VERSION`] is rejected).
 pub fn validate_line(line: &str) -> anyhow::Result<ParsedEvent> {
     let j = Json::parse(line).map_err(|e| anyhow::anyhow!("trace line is not JSON: {e:?}"))?;
     let v = j.at(&["v"])?.as_usize()? as u64;
@@ -322,6 +392,7 @@ pub fn validate_line(line: &str) -> anyhow::Result<ParsedEvent> {
     let kind = j.at(&["kind"])?.as_str()?.to_string();
     let tick = j.at(&["tick"])?.as_usize()? as u64;
     let round = if v >= 2 { j.at(&["round"])?.as_usize()? as u64 } else { 0 };
+    let mut alert = None;
     let (node, name) = match kind.as_str() {
         "tick" => {
             for field in
@@ -352,9 +423,26 @@ pub fn validate_line(line: &str) -> anyhow::Result<ParsedEvent> {
             };
             (node, Some(name))
         }
+        "alert" => {
+            anyhow::ensure!(v >= 3, "alert events require schema v3");
+            let rule = j.at(&["rule"])?.as_str()?.to_string();
+            let state = j.at(&["state"])?.as_str()?.to_string();
+            anyhow::ensure!(
+                state == "firing" || state == "resolved",
+                "alert state '{state}' is neither 'firing' nor 'resolved'"
+            );
+            j.at(&["value"])?; // present; may be null for non-finite readings
+            j.at(&["threshold"])?;
+            let node = match j.get("node") {
+                Some(n) => Some(n.as_usize()?),
+                None => None,
+            };
+            alert = Some((rule, state));
+            (node, None)
+        }
         other => anyhow::bail!("unknown trace kind '{other}'"),
     };
-    Ok(ParsedEvent { kind, tick, round, node, name })
+    Ok(ParsedEvent { kind, tick, round, node, name, alert })
 }
 
 #[cfg(test)]
@@ -454,13 +542,47 @@ mod tests {
     }
 
     #[test]
+    fn alert_events_validate() {
+        let firing = alert_line("straggler_ready_lag", "firing", 4, 64, Some(2), 1.5, 0.4);
+        let ev = validate_line(&firing).unwrap();
+        assert_eq!(ev.kind, "alert");
+        assert_eq!(ev.round, 4);
+        assert_eq!(ev.tick, 64);
+        assert_eq!(ev.node, Some(2));
+        assert_eq!(
+            ev.alert,
+            Some(("straggler_ready_lag".to_string(), "firing".to_string()))
+        );
+        // fleet-wide alerts carry no node; non-finite readings become null
+        let resolved = alert_line("rolling_loss_nonfinite", "resolved", 5, 80, None, f64::NAN, 0.0);
+        let ev = validate_line(&resolved).unwrap();
+        assert_eq!(ev.node, None);
+        assert_eq!(ev.alert.unwrap().1, "resolved");
+    }
+
+    #[test]
     fn bad_lines_are_rejected() {
         assert!(validate_line("not json").is_err());
         // v2 tick line missing every required field
         assert!(validate_line("{\"v\":2,\"kind\":\"tick\",\"tick\":0}").is_err());
         assert!(validate_line("{\"v\":1,\"kind\":\"bogus\",\"tick\":0}").is_err());
         // future schema versions are rejected outright
-        assert!(validate_line("{\"v\":3,\"kind\":\"gossip\",\"tick\":0,\"bytes\":0}").is_err());
+        assert!(validate_line(
+            "{\"v\":4,\"kind\":\"gossip\",\"round\":0,\"tick\":0,\"bytes\":0}"
+        )
+        .is_err());
+        // alerts did not exist before v3
+        assert!(validate_line(
+            "{\"v\":2,\"kind\":\"alert\",\"rule\":\"straggler_ready_lag\",\
+             \"state\":\"firing\",\"round\":1,\"tick\":8,\"value\":1.0,\"threshold\":0.5}"
+        )
+        .is_err());
+        // an alert state outside firing/resolved is rejected
+        assert!(validate_line(
+            "{\"v\":3,\"kind\":\"alert\",\"rule\":\"x\",\"state\":\"flapping\",\
+             \"round\":1,\"tick\":8,\"value\":1.0,\"threshold\":0.5}"
+        )
+        .is_err());
         // spans did not exist in v1
         assert!(validate_line(
             "{\"v\":1,\"kind\":\"span\",\"name\":\"barrier\",\"tick\":0,\

@@ -207,15 +207,17 @@ impl Backend for NativeBackend {
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
         let fam = self.family(&state.family)?;
         let b = batch.len();
-        Ok(match &fam.model {
-            NativeModel::Mlp(m) => {
-                let (yf, yi) = y_pair(batch);
-                m.forward_scores(&state.params, x_f32(batch)?, yf, yi, b)
-            }
-            NativeModel::Lm(m) => {
-                let (x, y) = xy_i32(batch)?;
-                m.forward_scores(&state.params, x, y, b)
-            }
+        crate::obs::prof::time("forward_scores", || {
+            Ok(match &fam.model {
+                NativeModel::Mlp(m) => {
+                    let (yf, yi) = y_pair(batch);
+                    m.forward_scores(&state.params, x_f32(batch)?, yf, yi, b)
+                }
+                NativeModel::Lm(m) => {
+                    let (x, y) = xy_i32(batch)?;
+                    m.forward_scores(&state.params, x, y, b)
+                }
+            })
         })
     }
 
@@ -229,7 +231,11 @@ impl Backend for NativeBackend {
         cl_on: bool,
     ) -> anyhow::Result<Option<FusedForward>> {
         let (loss, gnorm) = self.forward_scores(state, batch)?;
-        let (scores, alphas) = score_full(&loss, &gnorm, w_full, t, cl_power, cl_on);
+        // only the scoring half is the fused-scorer kernel — the forward
+        // half was already timed under "forward_scores" just above
+        let (scores, alphas) = crate::obs::prof::time("fused_scorer", || {
+            score_full(&loss, &gnorm, w_full, t, cl_power, cl_on)
+        });
         Ok(Some(FusedForward {
             loss,
             gnorm,
@@ -247,23 +253,25 @@ impl Backend for NativeBackend {
         let fam = self.family(&state.family)?;
         let k = sub.len();
         anyhow::ensure!(k > 0, "train_step on an empty sub-batch");
-        Ok(match &fam.model {
-            NativeModel::Mlp(m) => {
-                let (yf, yi) = y_pair(sub);
-                m.train_step(
-                    &mut state.params,
-                    &mut state.mom,
-                    x_f32(sub)?,
-                    yf,
-                    yi,
-                    k,
-                    lr,
-                )
-            }
-            NativeModel::Lm(m) => {
-                let (x, y) = xy_i32(sub)?;
-                m.train_step(&mut state.params, &mut state.mom, x, y, k, lr)
-            }
+        crate::obs::prof::time("sgd_step", || {
+            Ok(match &fam.model {
+                NativeModel::Mlp(m) => {
+                    let (yf, yi) = y_pair(sub);
+                    m.train_step(
+                        &mut state.params,
+                        &mut state.mom,
+                        x_f32(sub)?,
+                        yf,
+                        yi,
+                        k,
+                        lr,
+                    )
+                }
+                NativeModel::Lm(m) => {
+                    let (x, y) = xy_i32(sub)?;
+                    m.train_step(&mut state.params, &mut state.mom, x, y, k, lr)
+                }
+            })
         })
     }
 
@@ -271,15 +279,17 @@ impl Backend for NativeBackend {
         let fam = self.family(&state.family)?;
         let b = batch.len();
         let mask = batch.mask();
-        Ok(match &fam.model {
-            NativeModel::Mlp(m) => {
-                let (yf, yi) = y_pair(batch);
-                m.eval(&state.params, x_f32(batch)?, yf, yi, &mask, b)
-            }
-            NativeModel::Lm(m) => {
-                let (x, y) = xy_i32(batch)?;
-                m.eval(&state.params, x, y, &mask, b)
-            }
+        crate::obs::prof::time("eval", || {
+            Ok(match &fam.model {
+                NativeModel::Mlp(m) => {
+                    let (yf, yi) = y_pair(batch);
+                    m.eval(&state.params, x_f32(batch)?, yf, yi, &mask, b)
+                }
+                NativeModel::Lm(m) => {
+                    let (x, y) = xy_i32(batch)?;
+                    m.eval(&state.params, x, y, &mask, b)
+                }
+            })
         })
     }
 
@@ -292,7 +302,9 @@ impl Backend for NativeBackend {
         cl_power: f32,
         cl_on: bool,
     ) -> anyhow::Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        Ok(score_full(loss, gnorm, w_full, t, cl_power, cl_on))
+        Ok(crate::obs::prof::time("score_full", || {
+            score_full(loss, gnorm, w_full, t, cl_power, cl_on)
+        }))
     }
 
     fn param_count(&self, family: &str) -> anyhow::Result<usize> {

@@ -97,6 +97,24 @@ pub fn write_json(bench_name: &str, results: &[BenchResult]) -> std::io::Result<
     Ok(())
 }
 
+/// This process's per-kernel continuous-profiling digests as benchmark
+/// rows (`kernel/<name>`, median = streaming p50). Bench targets append
+/// these after their workloads so a `bench-diff` regression can name the
+/// backend kernel that moved, not just the end-to-end number.
+pub fn kernel_results() -> Vec<BenchResult> {
+    crate::obs::prof::kernel_stats()
+        .into_iter()
+        .filter(|s| s.count > 0)
+        .map(|s| BenchResult {
+            name: format!("kernel/{}", s.kernel),
+            iters: s.count as usize,
+            median_ns: s.p50_seconds * 1e9,
+            p95_ns: s.p95_seconds * 1e9,
+            mean_ns: s.total_seconds / s.count as f64 * 1e9,
+        })
+        .collect()
+}
+
 /// Outcome of comparing one run's bench JSONs against a baseline.
 #[derive(Clone, Debug, Default)]
 pub struct BenchDiff {

@@ -153,9 +153,11 @@ fn sigkilled_worker_becomes_kill_churn_with_full_coverage() {
 
 #[test]
 fn traced_process_run_is_digest_neutral_and_analyzable() {
-    // v2 round-scoped tracing must not perturb training, and the journals
-    // it writes (coordinator + one per worker process) must analyze into
-    // a byte-stable report with spans for every barrier round
+    // round-scoped tracing, fleet health rules, the flight ring and the
+    // continuous kernel profiler must not perturb training (the
+    // zero-interference contract), and the journals the run writes
+    // (coordinator + one per worker process) must analyze into a
+    // byte-stable report with spans for every barrier round
     let ticks = 100;
     let plain = proc::run_with_exe(&base_cfg(4, ticks), worker_exe()).unwrap();
 
@@ -164,6 +166,7 @@ fn traced_process_run_is_digest_neutral_and_analyzable() {
     let trace = dir.join("trace.jsonl");
     let mut cfg = base_cfg(4, ticks);
     cfg.stream.trace = Some(trace.clone());
+    cfg.stream.health = "warn".into();
     let traced = proc::run_with_exe(&cfg, worker_exe()).unwrap();
 
     assert_eq!(plain.digest, traced.digest, "tracing changed the cluster digest");
@@ -220,8 +223,223 @@ fn traced_process_run_is_digest_neutral_and_analyzable() {
     assert!(gossip > 0, "no gossip bytes attributed");
     assert!(merge > 0, "no merge bytes attributed");
 
+    // the continuous profiler rides the worker tick lines: the merged
+    // report rebuilds per-kernel quantiles from the `kernel:` phases
+    let kernels = report.at(&["kernels"]).unwrap().as_obj().unwrap();
+    assert!(
+        kernels.contains_key("sgd_step"),
+        "no sgd_step kernel quantiles in the report: {:?}",
+        kernels.keys().collect::<Vec<_>>()
+    );
+    for (k, row) in kernels {
+        let p50 = row.at(&["p50_seconds"]).unwrap().as_f64().unwrap();
+        let p99 = row.at(&["p99_seconds"]).unwrap().as_f64().unwrap();
+        let n = row.at(&["ticks"]).unwrap().as_usize().unwrap();
+        assert!(n > 0, "{k}: quantiles over zero ticks");
+        assert!(p50 <= p99, "{k}: p50 {p50} > p99 {p99}");
+    }
+    // the health alert timeline is part of the report (a healthy local
+    // run normally keeps it empty, but scheduler noise may fire a
+    // transient straggler — presence, not emptiness, is the contract)
+    report.at(&["alerts", "events"]).unwrap().as_arr().unwrap();
+
     for p in &paths {
         std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn chaos_kill_dumps_a_validating_flight_journal() {
+    // the crash flight recorder: a SIGKILLed worker cannot dump anything
+    // itself, so the coordinator's always-on flight ring must land on
+    // disk when the crash is converted to churn — and the dump's last
+    // rounds must pin the victim's final completed BarrierReady. The
+    // ring and its dump path are process-global, so the coordinator runs
+    // as its own CLI process (parallel tests in this binary would race
+    // on them otherwise).
+    use adaselection::obs::trace::validate_line;
+
+    let dir = std::env::temp_dir().join(format!("ada_proc_flightdump_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.jsonl");
+
+    // barriers every 4 ticks; chaos at 20 kills the victim inside the
+    // (20, 24] segment, so its last completed barrier is tick 20 and the
+    // crash is detected collecting the tick-24 barrier
+    let out = std::process::Command::new(worker_exe())
+        .args([
+            "cluster",
+            "--workers",
+            "processes",
+            "--nodes",
+            "3",
+            "--max-ticks",
+            "40",
+            "--gossip-every",
+            "8",
+            "--merge-every",
+            "4",
+            "--window",
+            "20",
+            "--eval-every",
+            "1",
+            "--chaos-kill-at",
+            "20",
+            "--chaos-kill-node",
+            "1",
+            "--trace",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+
+    let flight = dir.join("trace.jsonl.flight.jsonl");
+    assert!(flight.exists(), "no flight dump at {}", flight.display());
+    let text = std::fs::read_to_string(&flight).unwrap();
+    assert!(!text.is_empty(), "empty flight dump");
+
+    // every ring line is a schema-valid journal event, and the victim's
+    // last ready_lag span is its final completed barrier — tick 20 —
+    // while the dump itself reaches the crash-detection barrier at 24
+    let mut victim_last = 0u64;
+    let mut survivor_last = 0u64;
+    let mut max_tick = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        let ev = validate_line(line)
+            .unwrap_or_else(|e| panic!("bad flight line {i}: {e}\n{line}"));
+        max_tick = max_tick.max(ev.tick);
+        if ev.name.as_deref() == Some("ready_lag") {
+            match ev.node {
+                Some(1) => victim_last = victim_last.max(ev.tick),
+                Some(_) => survivor_last = survivor_last.max(ev.tick),
+                None => panic!("ready_lag span without a node: {line}"),
+            }
+        }
+    }
+    assert_eq!(
+        victim_last, 20,
+        "victim's last ready_lag must be its final completed barrier"
+    );
+    assert_eq!(survivor_last, 24, "survivors must reach the crash barrier in the dump");
+    assert_eq!(max_tick, 24, "dump must stop at the crash-conversion round");
+
+    std::fs::remove_file(&flight).ok();
+    std::fs::remove_file(&trace).ok();
+    for i in 0..3 {
+        std::fs::remove_file(dir.join(format!("trace.jsonl.node{i}"))).ok();
+    }
+}
+
+#[test]
+fn straggler_alert_fires_before_shed_and_resolves() {
+    // the health-rule e2e: a synthetic straggler (worker 1 sleeps 900 ms
+    // at every barrier segment) must make exactly `straggler_ready_lag`
+    // fire, the watermark shed must then evict that same worker, and the
+    // alert must resolve once the victim's alive gauge drops. Runs as a
+    // CLI subprocess: the health engine journals through process-global
+    // obs state shared with other tests in this binary.
+    use adaselection::obs::trace::validate_line;
+
+    let dir = std::env::temp_dir().join(format!("ada_proc_straggler_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.jsonl");
+
+    let out = std::process::Command::new(worker_exe())
+        .args([
+            "cluster",
+            "--workers",
+            "processes",
+            "--nodes",
+            "3",
+            "--max-ticks",
+            "40",
+            "--gossip-every",
+            "8",
+            "--merge-every",
+            "4",
+            "--window",
+            "20",
+            "--eval-every",
+            "1",
+            "--chaos-straggler-ms",
+            "900",
+            "--chaos-straggler-node",
+            "1",
+            "--elastic-shed-below",
+            "1000000000000",
+            "--elastic-min-nodes",
+            "2",
+            "--health",
+            "warn",
+            "--trace",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    // warn mode never fails the run, even though the alert fired
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut alerts: Vec<(String, u64)> = Vec::new(); // (state, tick), in journal order
+    let mut victim_last_lag = 0u64;
+    let mut fleet_last_lag = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        let ev = validate_line(line)
+            .unwrap_or_else(|e| panic!("bad journal line {i}: {e}\n{line}"));
+        if let Some((rule, state)) = &ev.alert {
+            // the injected straggler is the only unhealthy signal in
+            // this run: no other rule may fire
+            assert_eq!(rule, "straggler_ready_lag", "unexpected alert: {line}");
+            assert_eq!(ev.node, Some(1), "alert blamed the wrong node: {line}");
+            alerts.push((state.clone(), ev.tick));
+        }
+        if ev.name.as_deref() == Some("ready_lag") {
+            match ev.node {
+                Some(1) => victim_last_lag = victim_last_lag.max(ev.tick),
+                _ => fleet_last_lag = fleet_last_lag.max(ev.tick),
+            }
+        }
+    }
+
+    let firing_at = alerts
+        .iter()
+        .find(|(s, _)| s == "firing")
+        .unwrap_or_else(|| panic!("no firing straggler alert in the journal: {alerts:?}"))
+        .1;
+    // the shed happened mid-run: the victim's ready_lag spans stop while
+    // the survivors' keep going to the final barrier
+    assert!(
+        victim_last_lag > 0 && victim_last_lag < 40,
+        "no shed observed (victim's last barrier: {victim_last_lag})"
+    );
+    assert_eq!(fleet_last_lag, 40, "survivors stalled");
+    // the alert preceded the shed (health evaluates before the elastic
+    // step at every barrier, so at latest they share the shed barrier)
+    assert!(
+        firing_at <= victim_last_lag,
+        "alert fired at tick {firing_at}, after the shed at {victim_last_lag}"
+    );
+    // and it resolved once the victim left the alive set
+    let resolved_at = alerts
+        .iter()
+        .skip_while(|(s, _)| s != "firing")
+        .find(|(s, _)| s == "resolved")
+        .unwrap_or_else(|| panic!("straggler alert never resolved after the shed: {alerts:?}"))
+        .1;
+    assert!(
+        resolved_at > victim_last_lag,
+        "alert resolved at tick {resolved_at}, before the shed at {victim_last_lag}"
+    );
+
+    std::fs::remove_file(&trace).ok();
+    std::fs::remove_file(dir.join("trace.jsonl.flight.jsonl")).ok();
+    for i in 0..3 {
+        std::fs::remove_file(dir.join(format!("trace.jsonl.node{i}"))).ok();
     }
 }
 
